@@ -1,0 +1,89 @@
+//! Multi-tenant serving scenario (§2.1): several applications share one
+//! model; each has a long system prompt (tool definitions, CoT examples,
+//! document metadata). Regenerates Table-2-style prompt statistics from
+//! the synthetic corpus, then serves a Poisson workload through the engine
+//! and reports prefix-cache effectiveness per tenant.
+//!
+//! Run: `cargo run --release --example multi_tenant_serving`
+
+use chunk_attention::coordinator::engine::testing::SyntheticRunner;
+use chunk_attention::coordinator::Engine;
+use chunk_attention::util::bench::print_table;
+use chunk_attention::util::rng::Pcg64;
+use chunk_attention::workload::{Corpus, Request, Tokenizer, Trace, TraceConfig};
+
+fn main() {
+    println!("training tokenizer + synthesizing tenant prompts...");
+    let tok = Tokenizer::default_english();
+    let corpus = Corpus::synthesize(&tok, 4, 900, 2024);
+
+    // Table 2 analogue.
+    let rows: Vec<(Vec<String>, String)> = corpus
+        .tenants
+        .iter()
+        .map(|t| {
+            (
+                vec![
+                    format!("tenant-{}", t.id),
+                    t.kind.label().to_string(),
+                    t.system_tokens.len().to_string(),
+                    format!("{:.1}", t.system_prompt.len() as f64 / t.system_tokens.len() as f64),
+                ],
+                String::new(),
+            )
+        })
+        .collect();
+    print_table(
+        "Table 2 analogue — synthetic shared system prompts (paper: 879-4257 tokens)",
+        &["tenant", "kind", "#shared tokens", "chars/token"],
+        &rows,
+    );
+
+    // Poisson workload over the tenants (Zipf-skewed popularity).
+    let mut rng = Pcg64::seeded(5);
+    let trace = Trace::poisson(
+        &TraceConfig {
+            rps: 100.0,
+            n_requests: 24,
+            n_tenants: corpus.tenants.len(),
+            tenant_skew: 0.9,
+            query_tokens: 24,
+            completion_tokens: 8,
+            seed: 5,
+        },
+        |tenant, trace_rng| {
+            let prompt = corpus.make_request_tokens(&tok, tenant, 24, trace_rng);
+            let shared = corpus.tenants[tenant].system_tokens.len();
+            (prompt, shared)
+        },
+    );
+    let _ = &mut rng;
+
+    println!("\nserving {} requests across {} tenants...", trace.requests.len(), corpus.tenants.len());
+    let mut engine = Engine::new(SyntheticRunner { heads_total: 4, head_dim: 32, vocab: 32000 }, 32, 8);
+    for r in &trace.requests {
+        engine.submit(Request { ..r.clone() });
+    }
+    engine.run_to_completion().expect("serve");
+
+    let stats = engine.stats();
+    let total_prefill = stats.prefill_tokens_computed + stats.prefill_tokens_reused;
+    println!("\nprefix-cache effectiveness:");
+    println!("  prompt tokens total:    {total_prefill}");
+    println!(
+        "  recomputed (prefill):   {} ({:.0}%)",
+        stats.prefill_tokens_computed,
+        100.0 * stats.prefill_tokens_computed as f64 / total_prefill as f64
+    );
+    println!(
+        "  reused from PAKV:       {} ({:.0}%)",
+        stats.prefill_tokens_reused,
+        100.0 * stats.prefill_tokens_reused as f64 / total_prefill as f64
+    );
+    println!("  decode steps:           {}", stats.decode_steps);
+    println!("  peak batch:             {}", engine.scheduler().peak_batch());
+    let (rebuilds, hits) = engine.tree().context_stats();
+    println!("  context rebuilds/hits:  {rebuilds}/{hits} (lazy context copy, §3.3)");
+    engine.tree().check_invariants().expect("tree invariants");
+    println!("\ndone — tree invariants hold, cache drained.");
+}

@@ -1,0 +1,72 @@
+//! Quickstart: the PAKV + TPP public API in ~60 lines.
+//!
+//! Builds a prefix tree, inserts three requests sharing a system prompt,
+//! runs the two-phase-partition decode attention, and prints the sharing
+//! statistics. Run: `cargo run --release --example quickstart`
+
+use chunk_attention::attention::{tpp_attention, Queries, TppScratch};
+use chunk_attention::kvcache::{KvShape, PrefixTree, SeqId};
+use chunk_attention::util::rng::Pcg64;
+use chunk_attention::util::threadpool::ThreadPool;
+
+fn main() {
+    // 8 heads, 64-dim, 16-token chunks (paper: 32 heads, 128-dim, c=64).
+    let shape = KvShape::new(8, 64, 16);
+    let mut tree = PrefixTree::new(shape);
+
+    // A 48-token shared system prompt + per-request questions.
+    let system_prompt: Vec<u32> = (1000..1048).collect();
+    let mut fill = |pos: usize, token: u32, k: &mut [f32], v: &mut [f32]| {
+        // Stand-in for the model's KV projection (see examples/e2e_llm_serving
+        // for the real PJRT-compiled model).
+        let mut rng = Pcg64::new(token as u64, pos as u64);
+        rng.fill_uniform_f32(k, -1.0, 1.0);
+        rng.fill_uniform_f32(v, -1.0, 1.0);
+    };
+    for (i, question) in [[1u32, 2, 3], [4, 5, 6], [7, 8, 9]].iter().enumerate() {
+        let mut prompt = system_prompt.clone();
+        prompt.extend(question);
+        let outcome = tree.insert_sequence(SeqId(i as u64), &prompt, &mut fill);
+        println!(
+            "request {i}: {} prompt tokens, {} reused from the prefix cache",
+            outcome.total_tokens, outcome.matched_tokens
+        );
+    }
+
+    let stats = tree.sharing_stats();
+    println!(
+        "\nKV cache: {} logical tokens stored as {} physical ({}% deduplicated)",
+        stats.logical_tokens,
+        stats.physical_tokens,
+        (stats.sharing_ratio() * 100.0).round()
+    );
+
+    // One decode step: batched queries in tree order, TPP attention.
+    let ctx = tree.context();
+    let b = ctx.seq_order.len();
+    let shared = ctx.shared().count();
+    let private = ctx.private().count();
+    println!("tree context: {shared} shared chunks (chunk-first phase), {private} private (sequence-first)");
+
+    let mut rng = Pcg64::seeded(7);
+    let mut q = vec![0.0f32; shape.heads * b * shape.head_dim];
+    rng.fill_uniform_f32(&mut q, -1.0, 1.0);
+    let queries = Queries::new(&q, shape.heads, b, shape.head_dim);
+
+    let pool = ThreadPool::default_for_host();
+    let mut scratch = TppScratch::new(&shape, b);
+    let mut out = vec![0.0f32; q.len()];
+    tpp_attention(&tree, &ctx, &queries, &pool, &mut scratch, &mut out);
+    println!("decode step done: output [heads={}, batch={b}, d={}]", shape.heads, shape.head_dim);
+    println!("o[0][..4] = {:?}", &out[..4]);
+
+    // Completed sequences give their private chunks back to the pool.
+    for i in 0..3 {
+        tree.remove_sequence(SeqId(i));
+    }
+    println!(
+        "after completion: {} chunks in use, {} retained in the pool free list",
+        tree.pool().in_use(),
+        tree.pool().allocated()
+    );
+}

@@ -1,0 +1,173 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) → HLO text artifacts for the Rust
+runtime.
+
+HLO *text* is the interchange format (not serialized protos): jax ≥ 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Weights are passed as runtime parameters, not folded as constants — folding
+~1.8M f32 constants into HLO text makes multi-MB artifacts and slow parses.
+`aot.py` therefore also writes `mini_weights.bin` (raw little-endian f32,
+concatenated in flattened-pytree order) plus `manifest.json` describing the
+parameter order, shapes, and artifact inventory; the Rust runtime
+cross-checks all of it at load time.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import chunk_attn
+
+# Artifact grid: decode variants ship several batch capacities so the
+# coordinator can pick the smallest one that fits the live batch.
+DECODE_BATCHES = [1, 2, 4, 8]
+MAX_CHUNKS = 48
+CHUNK_SIZE = 16
+PREFILL_TOKENS = 128  # max prompt-suffix length per prefill call
+PREFILL_PREFIX = 128  # max cached-prefix length
+KERNEL_TEST_SHAPE = dict(b=4, h=4, c=16, d=64, m=8)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def weight_specs(weights):
+    """Flattened (path, leaf) list in the order jax flattens the pytree —
+    the order the Rust runtime must pass parameter literals in."""
+    leaves, _ = jax.tree_util.tree_flatten_with_path(weights)
+    out = []
+    for path, leaf in leaves:
+        name = "/".join(str(p) for p in path)
+        out.append((name, leaf))
+    return out
+
+
+def lower_decode(cfg, weights_spec, batch):
+    fn = functools.partial(model.decode_step, cfg)
+    tokens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    positions = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    kc = jax.ShapeDtypeStruct((MAX_CHUNKS, cfg.heads_total, CHUNK_SIZE, cfg.head_dim), jnp.float32)
+    meta = jax.ShapeDtypeStruct((MAX_CHUNKS,), jnp.int32)
+    return jax.jit(fn).lower(weights_spec, tokens, positions, kc, kc, meta, meta, meta)
+
+
+def lower_prefill(cfg, weights_spec):
+    fn = functools.partial(model.prefill, cfg)
+    tokens = jax.ShapeDtypeStruct((PREFILL_TOKENS,), jnp.int32)
+    slen = jax.ShapeDtypeStruct((), jnp.int32)
+    pk = jax.ShapeDtypeStruct((cfg.heads_total, PREFILL_PREFIX, cfg.head_dim), jnp.float32)
+    plen = jax.ShapeDtypeStruct((), jnp.int32)
+    return jax.jit(fn).lower(weights_spec, tokens, slen, pk, pk, plen)
+
+
+def lower_kernel_test():
+    """Standalone L1 kernel artifact for the runtime integration test."""
+    s = KERNEL_TEST_SHAPE
+    q = jax.ShapeDtypeStruct((s["b"], s["h"], s["d"]), jnp.float32)
+    kc = jax.ShapeDtypeStruct((s["m"], s["h"], s["c"], s["d"]), jnp.float32)
+    meta = jax.ShapeDtypeStruct((s["m"],), jnp.int32)
+    fn = lambda q, k, v, st, en, ln: (chunk_attn.tpp_attention(q, k, v, st, en, ln),)
+    return jax.jit(fn).lower(q, kc, kc, meta, meta, meta)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--list", action="store_true", help="print artifact inventory and exit")
+    args = ap.parse_args()
+
+    cfg = model.MINI
+    weights = model.init_weights(cfg, args.seed)
+    specs = weight_specs(weights)
+    weights_spec = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), weights
+    )
+
+    artifacts = []
+    for b in DECODE_BATCHES:
+        artifacts.append(
+            dict(
+                file=f"mini_decode_b{b}.hlo.txt",
+                kind="decode",
+                batch=b,
+                max_chunks=MAX_CHUNKS,
+                chunk_size=CHUNK_SIZE,
+            )
+        )
+    artifacts.append(
+        dict(
+            file="mini_prefill.hlo.txt",
+            kind="prefill",
+            max_suffix=PREFILL_TOKENS,
+            max_prefix=PREFILL_PREFIX,
+        )
+    )
+    artifacts.append(dict(file="tpp_kernel_test.hlo.txt", kind="kernel_test", **KERNEL_TEST_SHAPE))
+
+    if args.list:
+        for a in artifacts:
+            print(json.dumps(a))
+        return
+
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for b in DECODE_BATCHES:
+        text = to_hlo_text(lower_decode(cfg, weights_spec, b))
+        path = os.path.join(args.out_dir, f"mini_decode_b{b}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    text = to_hlo_text(lower_prefill(cfg, weights_spec))
+    with open(os.path.join(args.out_dir, "mini_prefill.hlo.txt"), "w") as f:
+        f.write(text)
+    print(f"wrote mini_prefill.hlo.txt ({len(text)} chars)")
+
+    text = to_hlo_text(lower_kernel_test())
+    with open(os.path.join(args.out_dir, "tpp_kernel_test.hlo.txt"), "w") as f:
+        f.write(text)
+    print(f"wrote tpp_kernel_test.hlo.txt ({len(text)} chars)")
+
+    # Weights blob + manifest.
+    blob = b"".join(np.asarray(leaf, dtype=np.float32).tobytes() for _, leaf in specs)
+    with open(os.path.join(args.out_dir, "mini_weights.bin"), "wb") as f:
+        f.write(blob)
+    manifest = dict(
+        model=dict(
+            name="mini",
+            n_layers=cfg.n_layers,
+            d_model=cfg.d_model,
+            heads=cfg.heads,
+            head_dim=cfg.head_dim,
+            ffn_dim=cfg.ffn_dim,
+            vocab=cfg.vocab,
+            heads_total=cfg.heads_total,
+        ),
+        seed=args.seed,
+        weights_file="mini_weights.bin",
+        weights=[dict(name=n, shape=list(l.shape)) for n, l in specs],
+        artifacts=artifacts,
+    )
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(specs)} weight tensors, {len(blob)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+"""Layer-1: the two-phase-partition decode attention kernel in Pallas.
+
+The paper's CUDA kernel partitions thread blocks over (head, chunk) and
+batches the query rows of all sequences covered by a chunk (Eqn. 1), merging
+partials with online softmax (Eqn. 2). On TPU the same insight maps to
+(DESIGN.md §Hardware-Adaptation):
+
+  - the *grid* dimension iterates chunks — the analogue of the chunk
+    partition over streaming multiprocessors;
+  - one chunk's K/V block (`[h, c, d]`) is staged into VMEM per grid step —
+    VMEM plays the role of the CUDA shared memory tile;
+  - the batched query×chunk product `[b, d] × [d, c]` is an MXU matmul —
+    the tensor-core GEMM the paper gets by turning the query vector into a
+    matrix;
+  - the online-softmax accumulators `(o, m, n)` live in the revisited
+    output blocks across grid steps (the sequential-grid accumulation
+    pattern), which is the fused `attn_reduce` of §3.3.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO for both pytest and the AOT
+artifacts. Real-TPU performance is estimated from the BlockSpec footprint
+in DESIGN.md, not measured.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _tpp_kernel(starts_ref, ends_ref, lens_ref, q_ref, k_ref, v_ref, o_ref, m_ref, n_ref):
+    """One grid step: fold chunk `i` into the (o, m, n) accumulators."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        n_ref[...] = jnp.zeros_like(n_ref)
+
+    q = q_ref[...]  # [b, h, d]
+    k = k_ref[0]  # [h, c, d] — this grid step's chunk
+    v = v_ref[0]
+    b, h, d = q.shape
+    c = k.shape[1]
+
+    start = starts_ref[i]
+    end = ends_ref[i]
+    length = lens_ref[i]
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    # partial_attn (Eqn. 1): batched over the covered query rows. The row
+    # interval is expressed as a mask so shapes stay static; the MXU matmul
+    # below still runs over all b rows (b is small; the win is reading the
+    # chunk's K/V once).
+    w = jnp.einsum("bhd,hcd->bhc", q, k) * scale  # [b, h, c]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (b, 1, 1), 0)
+    row_ok = (rows >= start) & (rows < end)
+    tok_ok = jax.lax.broadcasted_iota(jnp.int32, (1, 1, c), 2) < length
+    visible = row_ok & tok_ok
+    w = jnp.where(visible, w, NEG_INF)
+
+    m_c = jnp.max(w, axis=-1)  # [b, h]
+    e = jnp.exp(w - m_c[..., None]) * visible.astype(q.dtype)
+    n_c = jnp.sum(e, axis=-1)  # [b, h]
+    o_c = jnp.einsum("bhc,hcd->bhd", e, v)  # [b, h, d]
+
+    # attn_reduce (Eqn. 2), fused: merge (o_c, m_c, n_c) into the
+    # accumulators for the covered rows only.
+    m_old = m_ref[...]
+    n_old = n_ref[...]
+    o_old = o_ref[...]
+    active = jnp.squeeze(row_ok, axis=-1)  # [b, 1] broadcast over h
+    has_tokens = active & (m_c > NEG_INF / 2)
+
+    m_new = jnp.where(has_tokens, jnp.maximum(m_old, m_c), m_old)
+    x = jnp.where(has_tokens, jnp.exp(m_c - m_new), 0.0)
+    safe_old = jnp.where(m_old == -jnp.inf, 0.0, jnp.exp(jnp.minimum(m_old - m_new, 0.0)))
+    y = jnp.where(has_tokens, safe_old, 1.0)
+
+    o_ref[...] = o_old * y[..., None] + o_c * x[..., None]
+    n_ref[...] = n_old * y + n_c * x
+    m_ref[...] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=())
+def tpp_attention_partials(q, k_chunks, v_chunks, starts, ends, lens):
+    """TPP attention over a tree context; returns unnormalised (o, m, n).
+
+    Shapes: q [b,h,d]; k_chunks/v_chunks [m,h,c,d]; starts/ends/lens [m]
+    int32. See `ref.py` for the visibility rule. The chunk metadata is
+    passed as full (untiled) inputs — the interpret-mode analogue of scalar
+    prefetch.
+    """
+    b, h, d = q.shape
+    m_chunks, hk, c, dk = k_chunks.shape
+    assert (h, d) == (hk, dk)
+
+    full = pl.pallas_call(
+        _tpp_kernel,
+        grid=(m_chunks,),
+        in_specs=[
+            pl.BlockSpec((m_chunks,), lambda i: (0,)),
+            pl.BlockSpec((m_chunks,), lambda i: (0,)),
+            pl.BlockSpec((m_chunks,), lambda i: (0,)),
+            pl.BlockSpec((b, h, d), lambda i: (0, 0, 0)),
+            pl.BlockSpec((1, h, c, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, h, c, d), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, h, d), lambda i: (0, 0, 0)),
+            pl.BlockSpec((b, h), lambda i: (0, 0)),
+            pl.BlockSpec((b, h), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h), q.dtype),
+            jax.ShapeDtypeStruct((b, h), q.dtype),
+        ],
+        interpret=True,
+    )
+    return full(starts.astype(jnp.int32), ends.astype(jnp.int32), lens.astype(jnp.int32), q, k_chunks, v_chunks)
+
+
+def tpp_attention(q, k_chunks, v_chunks, starts, ends, lens):
+    """Normalised TPP attention output [b, h, d] (zeros for empty rows)."""
+    o, _m, n = tpp_attention_partials(q, k_chunks, v_chunks, starts, ends, lens)
+    safe = jnp.maximum(n, 1e-30)[..., None]
+    return jnp.where(n[..., None] > 0, o / safe, 0.0)
+
+
+def merge_fresh_row(q, k_new, v_new, o, m, n):
+    """Fold the current token's own K/V row into the partials (Eqn. 2).
+
+    During decode the token being processed is not yet in the tree; its
+    K/V row is produced by the same forward pass. Shapes: q/k_new/v_new
+    [b, h, d]; (o, m, n) as returned by `tpp_attention_partials`.
+    Returns the updated (o, m, n).
+    """
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    s = jnp.sum(q * k_new, axis=-1) * scale  # [b, h]
+    m_new = jnp.maximum(m, s)
+    x = jnp.exp(s - m_new)
+    y = jnp.where(jnp.isinf(m), 0.0, jnp.exp(jnp.where(jnp.isinf(m), 0.0, m - m_new)))
+    o = o * y[..., None] + v_new * x[..., None]
+    n = n * y + x
+    return o, m_new, n
+
+
+def finalize(o, n):
+    """o / n with empty-row protection."""
+    safe = jnp.maximum(n, 1e-30)[..., None]
+    return jnp.where(n[..., None] > 0, o / safe, 0.0)

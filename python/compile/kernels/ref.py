@@ -1,0 +1,84 @@
+"""Pure-jnp oracle for the TPP decode attention kernel.
+
+Given the "tree context" representation the Rust coordinator ships to the
+device — stacked KV chunks plus per-chunk (start, end, len) metadata — this
+computes dense masked softmax attention in one shot. It is the correctness
+reference the Pallas kernel (and transitively the whole serving stack) is
+tested against.
+
+Layouts (all fixed-shape, padded):
+    q:        [b, h, d]        one query row per sequence (decode step)
+    k_chunks: [m, h, c, d]     stacked chunk keys
+    v_chunks: [m, h, c, d]     stacked chunk values
+    starts:   [m] int32        first covered sequence row (inclusive)
+    ends:     [m] int32        last covered sequence row (exclusive);
+                               padding chunks have end <= start
+    lens:     [m] int32        valid tokens in the chunk (<= c)
+
+A sequence row r attends token t of chunk i iff
+    starts[i] <= r < ends[i]  and  t < lens[i].
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_attention(q, k_chunks, v_chunks, starts, ends, lens):
+    """Dense reference: softmax(q·Kᵀ/√d)·V over the visible chunk tokens.
+
+    Returns [b, h, d]. Rows that see no tokens return zeros.
+    """
+    b, h, d = q.shape
+    m, hk, c, dk = k_chunks.shape
+    assert (h, d) == (hk, dk), f"shape mismatch {q.shape} vs {k_chunks.shape}"
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    # scores[b, h, m, c]
+    scores = jnp.einsum("bhd,mhcd->bhmc", q, k_chunks) * scale
+
+    rows = jnp.arange(b, dtype=jnp.int32)[:, None, None, None]  # [b,1,1,1]
+    chunk_rows = (rows >= starts[None, None, :, None]) & (rows < ends[None, None, :, None])
+    token_ok = jnp.arange(c, dtype=jnp.int32)[None, None, None, :] < lens[None, None, :, None]
+    visible = chunk_rows & token_ok  # [b,1,m,c]
+
+    scores = jnp.where(visible, scores, NEG_INF)
+    flat = scores.reshape(b, h, m * c)
+    mx = jnp.max(flat, axis=-1, keepdims=True)
+    # Rows with no visible tokens: keep numerics finite.
+    mx = jnp.maximum(mx, NEG_INF / 2)
+    e = jnp.exp(flat - mx)
+    e = e * visible.reshape(b, 1, m * c)  # zero out masked exactly
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    p = jnp.where(denom > 0, e / jnp.maximum(denom, 1e-30), 0.0)
+    out = jnp.einsum("bhmc,mhcd->bhd", p.reshape(b, h, m, c), v_chunks)
+    return out
+
+
+def ref_attention_partials(q, k_chunks, v_chunks, starts, ends, lens):
+    """Unnormalised online-softmax state (o, m, n) — the form the Pallas
+    kernel returns so the model can merge the current token's fresh K/V row
+    (Eqn. 2) before normalising.
+
+    Returns (o [b,h,d], m [b,h], n [b,h]) with o = Σ e·V (not divided by n).
+    Rows with no visible tokens have m = -inf, n = 0, o = 0.
+    """
+    b, h, d = q.shape
+    m_chunks, _, c, _ = k_chunks.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    scores = jnp.einsum("bhd,mhcd->bhmc", q, k_chunks) * scale
+    rows = jnp.arange(b, dtype=jnp.int32)[:, None, None, None]
+    chunk_rows = (rows >= starts[None, None, :, None]) & (rows < ends[None, None, :, None])
+    token_ok = jnp.arange(c, dtype=jnp.int32)[None, None, None, :] < lens[None, None, :, None]
+    visible = chunk_rows & token_ok
+    scores = jnp.where(visible, scores, NEG_INF)
+    flat = scores.reshape(b, h, m_chunks * c)
+    any_visible = jnp.any(visible, axis=(2, 3))  # [b, 1] — broadcast over h
+    mx = jnp.max(flat, axis=-1)  # [b, h]
+    e = jnp.exp(flat - mx[..., None]) * visible.reshape(b, 1, m_chunks * c)
+    n = jnp.sum(e, axis=-1)
+    o = jnp.einsum("bhmc,mhcd->bhd", e.reshape(b, h, m_chunks, c), v_chunks)
+    mx = jnp.where(any_visible, mx, -jnp.inf)
+    n = jnp.where(any_visible, n, 0.0)
+    o = jnp.where(any_visible[..., None], o, 0.0)
+    return o, mx, n

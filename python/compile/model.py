@@ -1,0 +1,204 @@
+"""Layer-2: mini Llama-style decoder in JAX, calling the L1 Pallas kernel.
+
+Build-time only — `aot.py` lowers `prefill` and `decode_step` to HLO text;
+the Rust runtime executes them through PJRT. The configuration must match
+`rust/src/model/mod.rs::ModelConfig::mini` (the artifact manifest carries it
+for a cross-check).
+
+KV layout convention shared with the Rust prefix tree: layers are stacked
+along the head axis, so a chunk stores `H = n_layers * heads` "heads" and
+layer `l` owns heads `[l*heads, (l+1)*heads)`.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import chunk_attn
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    n_layers: int = 2
+    d_model: int = 256
+    heads: int = 4
+    head_dim: int = 64
+    ffn_dim: int = 512
+    vocab: int = 2048
+
+    @property
+    def heads_total(self) -> int:
+        return self.n_layers * self.heads
+
+
+MINI = Config()
+
+
+def init_weights(cfg: Config, seed: int = 0):
+    """PRNG-initialised weights (the 'small real model' stand-in; see
+    DESIGN.md §2 — no public checkpoint fits this substrate)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 2 + cfg.n_layers)
+    scale = 0.02
+
+    def dense(k, shape):
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(jnp.float32)
+
+    layers = []
+    for li in range(cfg.n_layers):
+        lk = jax.random.split(ks[2 + li], 8)
+        layers.append(
+            dict(
+                ln1=jnp.ones((cfg.d_model,), jnp.float32),
+                wq=dense(lk[0], (cfg.d_model, cfg.heads * cfg.head_dim)),
+                wk=dense(lk[1], (cfg.d_model, cfg.heads * cfg.head_dim)),
+                wv=dense(lk[2], (cfg.d_model, cfg.heads * cfg.head_dim)),
+                wo=dense(lk[3], (cfg.heads * cfg.head_dim, cfg.d_model)),
+                ln2=jnp.ones((cfg.d_model,), jnp.float32),
+                w_gate=dense(lk[4], (cfg.d_model, cfg.ffn_dim)),
+                w_up=dense(lk[5], (cfg.d_model, cfg.ffn_dim)),
+                w_down=dense(lk[6], (cfg.ffn_dim, cfg.d_model)),
+            )
+        )
+    return dict(
+        embed=dense(ks[0], (cfg.vocab, cfg.d_model)),
+        ln_f=jnp.ones((cfg.d_model,), jnp.float32),
+        layers=layers,
+    )
+
+
+def rmsnorm(x, g, eps=1e-5):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def rope(x, positions):
+    """Rotary embedding. x: [..., seq, heads, d]; positions: [..., seq]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [..., seq, half]
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(layer, x):
+    return (jax.nn.silu(x @ layer["w_gate"]) * (x @ layer["w_up"])) @ layer["w_down"]
+
+
+# --------------------------------------------------------------------------
+# Decode step: one token per sequence, TPP attention over the tree context.
+# --------------------------------------------------------------------------
+
+
+def decode_step(cfg: Config, weights, tokens, positions, k_chunks, v_chunks, starts, ends, lens):
+    """One batched decode step.
+
+    tokens:    [b] int32 — last generated token per sequence
+    positions: [b] int32 — its position (context length before this token)
+    k_chunks:  [m, H, c, d] — tree context chunks (H = layers*heads)
+    starts/ends/lens: [m] int32 — covered row intervals / fill levels
+
+    Returns (logits [b, vocab], new_k [b, H, d], new_v [b, H, d]) where the
+    new rows are the K/V of the *input* tokens, for the coordinator to
+    append to the tree.
+    """
+    h, d = cfg.heads, cfg.head_dim
+    x = weights["embed"][tokens]  # [b, dm]
+    new_k, new_v = [], []
+    for li, layer in enumerate(weights["layers"]):
+        xin = rmsnorm(x, layer["ln1"])
+        b = xin.shape[0]
+        q = (xin @ layer["wq"]).reshape(b, h, d)
+        k = (xin @ layer["wk"]).reshape(b, h, d)
+        v = (xin @ layer["wv"]).reshape(b, h, d)
+        # RoPE expects a seq axis: treat each row as a length-1 sequence.
+        q = rope(q[:, None], positions[:, None])[:, 0]
+        k = rope(k[:, None], positions[:, None])[:, 0]
+
+        # L1 kernel over this layer's slice of the chunk heads.
+        kc = k_chunks[:, li * h : (li + 1) * h]
+        vc = v_chunks[:, li * h : (li + 1) * h]
+        o, m_acc, n_acc = chunk_attn.tpp_attention_partials(q, kc, vc, starts, ends, lens)
+        # The current token attends to itself (its K/V is not in the tree).
+        o, m_acc, n_acc = chunk_attn.merge_fresh_row(q, k, v, o, m_acc, n_acc)
+        attn = chunk_attn.finalize(o, n_acc).reshape(b, h * d)
+
+        x = x + attn @ layer["wo"]
+        x = x + swiglu(layer, rmsnorm(x, layer["ln2"]))
+        new_k.append(k)
+        new_v.append(v)
+
+    logits = rmsnorm(x, weights["ln_f"]) @ weights["embed"].T
+    new_k = jnp.concatenate(new_k, axis=1)  # [b, H, d]
+    new_v = jnp.concatenate(new_v, axis=1)
+    return logits, new_k, new_v
+
+
+# --------------------------------------------------------------------------
+# Prefill: dense causal attention over (cached prefix ++ suffix), §3.2.
+# --------------------------------------------------------------------------
+
+
+def prefill(cfg: Config, weights, tokens, suffix_len, prefix_k, prefix_v, prefix_len):
+    """Prefill the unmatched prompt suffix.
+
+    tokens:    [P] int32 — suffix tokens, zero-padded to the artifact size
+    suffix_len: ()  int32 — valid tokens in `tokens`
+    prefix_k/v: [H, N, d]  — dense KV of the matched prefix (padded)
+    prefix_len: () int32   — valid prefix rows
+
+    Positions are `prefix_len + arange(P)`. Returns
+    (logits_last [vocab], new_k [P, H, d], new_v [P, H, d]).
+    """
+    h, d = cfg.heads, cfg.head_dim
+    P = tokens.shape[0]
+    N = prefix_k.shape[1]
+    positions = prefix_len + jnp.arange(P, dtype=jnp.int32)
+    x = weights["embed"][tokens]  # [P, dm]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    suffix_ok = jnp.arange(P, dtype=jnp.int32) < suffix_len  # [P]
+    prefix_ok = jnp.arange(N, dtype=jnp.int32) < prefix_len  # [N]
+    causal = jnp.arange(P)[:, None] >= jnp.arange(P)[None, :]  # [P, P]
+
+    new_k, new_v = [], []
+    for li, layer in enumerate(weights["layers"]):
+        xin = rmsnorm(x, layer["ln1"])
+        q = rope((xin @ layer["wq"]).reshape(P, h, d)[None], positions[None])[0]
+        k = rope((xin @ layer["wk"]).reshape(P, h, d)[None], positions[None])[0]
+        v = (xin @ layer["wv"]).reshape(P, h, d)
+
+        pk = jnp.transpose(prefix_k[li * h : (li + 1) * h], (1, 0, 2))  # [N, h, d]
+        pv = jnp.transpose(prefix_v[li * h : (li + 1) * h], (1, 0, 2))
+
+        # Scores against prefix rows and causal suffix rows.
+        w_pre = jnp.einsum("phd,nhd->hpn", q, pk) * scale  # [h, P, N]
+        w_suf = jnp.einsum("phd,nhd->hpn", q, k) * scale  # [h, P, P]
+        w_pre = jnp.where(prefix_ok[None, None, :], w_pre, chunk_attn.NEG_INF)
+        suf_mask = causal & suffix_ok[None, :]
+        w_suf = jnp.where(suf_mask[None], w_suf, chunk_attn.NEG_INF)
+
+        w = jnp.concatenate([w_pre, w_suf], axis=-1)  # [h, P, N+P]
+        w = jax.nn.softmax(w, axis=-1)
+        vv = jnp.concatenate([pv, v], axis=0)  # [N+P, h, d]
+        attn = jnp.einsum("hpn,nhd->phd", w, vv).reshape(P, h * d)
+
+        x = x + attn @ layer["wo"]
+        x = x + swiglu(layer, rmsnorm(x, layer["ln2"]))
+        new_k.append(k)
+        new_v.append(v)
+
+    logits = rmsnorm(x, weights["ln_f"]) @ weights["embed"].T  # [P, vocab]
+    last = jnp.clip(suffix_len - 1, 0, P - 1)
+    new_k = jnp.concatenate(new_k, axis=1)  # [P, H, d]
+    new_v = jnp.concatenate(new_v, axis=1)
+    return logits[last], new_k, new_v
+
+
+# Jitted entry points used by tests (aot.py lowers the raw functions).
+decode_step_jit = functools.partial(jax.jit, static_argnums=(0,))(decode_step)
+prefill_jit = functools.partial(jax.jit, static_argnums=(0,))(prefill)

@@ -1,0 +1,160 @@
+"""L1 correctness: the Pallas TPP kernel against the pure-jnp oracle.
+
+Hypothesis sweeps shapes and randomly structured tree contexts (including
+degenerate intervals, empty rows, padding chunks, and partial fills).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import chunk_attn, ref
+
+
+def make_context(rng, b, m, c):
+    """Random (starts, ends, lens): arbitrary intervals, some empty."""
+    starts = rng.integers(0, b, size=m).astype(np.int32)
+    widths = rng.integers(0, b + 1, size=m).astype(np.int32)
+    ends = np.minimum(starts + widths, b).astype(np.int32)
+    lens = rng.integers(0, c + 1, size=m).astype(np.int32)
+    return jnp.asarray(starts), jnp.asarray(ends), jnp.asarray(lens)
+
+
+def rand(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 6),
+    h=st.integers(1, 4),
+    c=st.sampled_from([2, 4, 8]),
+    d=st.sampled_from([4, 8, 16]),
+    m=st.integers(1, 7),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tpp_matches_ref_random_contexts(b, h, c, d, m, seed):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, (b, h, d))
+    k = rand(rng, (m, h, c, d))
+    v = rand(rng, (m, h, c, d))
+    starts, ends, lens = make_context(rng, b, m, c)
+    expect = ref.ref_attention(q, k, v, starts, ends, lens)
+    got = chunk_attn.tpp_attention(q, k, v, starts, ends, lens)
+    np.testing.assert_allclose(got, expect, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_partials_match_ref_partials(seed):
+    rng = np.random.default_rng(seed)
+    b, h, c, d, m = 4, 2, 4, 8, 5
+    q = rand(rng, (b, h, d))
+    k = rand(rng, (m, h, c, d))
+    v = rand(rng, (m, h, c, d))
+    starts, ends, lens = make_context(rng, b, m, c)
+    eo, em, en = ref.ref_attention_partials(q, k, v, starts, ends, lens)
+    go, gm, gn = chunk_attn.tpp_attention_partials(q, k, v, starts, ends, lens)
+    # Finalised outputs must agree even where the (m, n) decomposition is
+    # only defined up to rescaling; and m/n themselves agree here because
+    # both use the running-max convention.
+    np.testing.assert_allclose(chunk_attn.finalize(go, gn), chunk_attn.finalize(eo, en), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(gn, en, rtol=2e-4, atol=2e-5)
+
+
+def test_empty_rows_produce_zeros():
+    b, h, c, d, m = 3, 2, 4, 8, 2
+    rng = np.random.default_rng(0)
+    q = rand(rng, (b, h, d))
+    k = rand(rng, (m, h, c, d))
+    v = rand(rng, (m, h, c, d))
+    # Row 2 is covered by no chunk.
+    starts = jnp.asarray([0, 0], jnp.int32)
+    ends = jnp.asarray([2, 1], jnp.int32)
+    lens = jnp.asarray([4, 2], jnp.int32)
+    out = chunk_attn.tpp_attention(q, k, v, starts, ends, lens)
+    np.testing.assert_allclose(out[2], np.zeros((h, d)), atol=0)
+    assert not np.any(np.isnan(np.asarray(out)))
+
+
+def test_all_padding_chunks():
+    b, h, c, d, m = 2, 1, 4, 4, 3
+    rng = np.random.default_rng(1)
+    q = rand(rng, (b, h, d))
+    k = rand(rng, (m, h, c, d))
+    v = rand(rng, (m, h, c, d))
+    zeros = jnp.zeros((m,), jnp.int32)
+    out = chunk_attn.tpp_attention(q, k, v, zeros, zeros, zeros)
+    np.testing.assert_allclose(out, np.zeros((b, h, d)), atol=0)
+
+
+def test_chunk_order_invariance():
+    """Online-softmax merging must be order-independent (§3.2)."""
+    rng = np.random.default_rng(7)
+    b, h, c, d, m = 4, 2, 4, 8, 6
+    q = rand(rng, (b, h, d))
+    k = rand(rng, (m, h, c, d))
+    v = rand(rng, (m, h, c, d))
+    starts, ends, lens = make_context(rng, b, m, c)
+    out = chunk_attn.tpp_attention(q, k, v, starts, ends, lens)
+    perm = rng.permutation(m)
+    out_p = chunk_attn.tpp_attention(q, k[perm], v[perm], starts[perm], ends[perm], lens[perm])
+    np.testing.assert_allclose(out, out_p, rtol=2e-5, atol=2e-5)
+
+
+def test_merge_fresh_row_equals_inclusion():
+    """Attending chunks + fresh row == attending an extended context."""
+    rng = np.random.default_rng(9)
+    b, h, c, d = 3, 2, 4, 8
+    q = rand(rng, (b, h, d))
+    k = rand(rng, (2, h, c, d))
+    v = rand(rng, (2, h, c, d))
+    starts = jnp.asarray([0, 1], jnp.int32)
+    ends = jnp.asarray([3, 3], jnp.int32)
+    lens = jnp.asarray([4, 3], jnp.int32)
+    k_new = rand(rng, (b, h, d))
+    v_new = rand(rng, (b, h, d))
+
+    o, m, n = chunk_attn.tpp_attention_partials(q, k, v, starts, ends, lens)
+    o, m, n = chunk_attn.merge_fresh_row(q, k_new, v_new, o, m, n)
+    got = chunk_attn.finalize(o, n)
+
+    # Reference: give each row its own extra chunk holding just its row.
+    k_ext = jnp.zeros((2 + b, h, c, d), jnp.float32)
+    v_ext = jnp.zeros_like(k_ext)
+    k_ext = k_ext.at[:2].set(k).at[2:, :, 0].set(k_new.transpose(0, 1, 2))
+    v_ext = v_ext.at[:2].set(v).at[2:, :, 0].set(v_new.transpose(0, 1, 2))
+    starts_ext = jnp.concatenate([starts, jnp.arange(b, dtype=jnp.int32)])
+    ends_ext = jnp.concatenate([ends, jnp.arange(1, b + 1, dtype=jnp.int32)])
+    lens_ext = jnp.concatenate([lens, jnp.ones((b,), jnp.int32)])
+    expect = ref.ref_attention(q, k_ext, v_ext, starts_ext, ends_ext, lens_ext)
+    np.testing.assert_allclose(got, expect, rtol=2e-5, atol=2e-5)
+
+
+def test_extreme_logits_stay_finite():
+    b, h, c, d, m = 2, 1, 2, 4, 2
+    q = jnp.full((b, h, d), 50.0, jnp.float32)
+    k = jnp.full((m, h, c, d), 50.0, jnp.float32)
+    v = jnp.asarray(np.arange(m * h * c * d).reshape(m, h, c, d), jnp.float32)
+    starts = jnp.asarray([0, 0], jnp.int32)
+    ends = jnp.asarray([2, 2], jnp.int32)
+    lens = jnp.asarray([2, 2], jnp.int32)
+    out = np.asarray(chunk_attn.tpp_attention(q, k, v, starts, ends, lens))
+    assert np.all(np.isfinite(out))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_paper_shape_smoke(dtype):
+    """One paper-sized call: c=64, d=128, h=4 (subset), b=8."""
+    rng = np.random.default_rng(3)
+    b, h, c, d, m = 8, 4, 64, 128, 6
+    q = rand(rng, (b, h, d), 0.1).astype(dtype)
+    k = rand(rng, (m, h, c, d), 0.1).astype(dtype)
+    v = rand(rng, (m, h, c, d), 0.1).astype(dtype)
+    starts = jnp.asarray([0, 0, 0, 2, 4, 6], jnp.int32)
+    ends = jnp.asarray([8, 4, 2, 4, 6, 8], jnp.int32)
+    lens = jnp.asarray([64, 64, 32, 64, 64, 17], jnp.int32)
+    expect = ref.ref_attention(q, k, v, starts, ends, lens)
+    got = chunk_attn.tpp_attention(q, k, v, starts, ends, lens)
+    np.testing.assert_allclose(got, expect, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,167 @@
+"""L2 correctness: the mini model's decode path over chunked KV must agree
+with dense computation, and prefill→decode must chain consistently."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import chunk_attn
+
+CFG = model.Config(n_layers=2, d_model=64, heads=2, head_dim=16, ffn_dim=96, vocab=101)
+
+
+def chunks_from_rows(k_rows, v_rows, b_rows, c, m_pad):
+    """Pack per-position KV rows [n, H, d] of ONE sequence into chunk
+    tensors covering row interval [0, b_rows)."""
+    n, H, d = k_rows.shape
+    m = -(-n // c)
+    kc = np.zeros((m_pad, H, c, d), np.float32)
+    vc = np.zeros((m_pad, H, c, d), np.float32)
+    lens = np.zeros((m_pad,), np.int32)
+    starts = np.zeros((m_pad,), np.int32)
+    ends = np.zeros((m_pad,), np.int32)
+    for i in range(m):
+        take = min(c, n - i * c)
+        kc[i, :, :take] = np.transpose(k_rows[i * c : i * c + take], (1, 0, 2))
+        vc[i, :, :take] = np.transpose(v_rows[i * c : i * c + take], (1, 0, 2))
+        lens[i] = take
+        starts[i] = 0
+        ends[i] = b_rows
+    return (jnp.asarray(kc), jnp.asarray(vc), jnp.asarray(starts), jnp.asarray(ends), jnp.asarray(lens))
+
+
+def test_prefill_then_decode_matches_longer_prefill():
+    """Prefill [t0..t4] then decode t5 over its chunked KV must produce the
+    same logits as prefilling [t0..t5] directly."""
+    w = model.init_weights(CFG, seed=1)
+    P, N = 16, 8
+    tokens = np.array([5, 9, 12, 33, 47, 61], np.int32)
+
+    def run_prefill(toks):
+        padded = np.zeros((P,), np.int32)
+        padded[: len(toks)] = toks
+        pk = jnp.zeros((CFG.heads_total, N, CFG.head_dim), jnp.float32)
+        return model.prefill_jit(
+            CFG, w, jnp.asarray(padded), jnp.int32(len(toks)), pk, pk, jnp.int32(0)
+        )
+
+    logits_full, _, _ = run_prefill(tokens)
+
+    logits_5, k5, v5 = run_prefill(tokens[:5])
+    # Decode token t5 at position 5 with the prefilled KV as chunks.
+    c, m_pad = 4, 6
+    kc, vc, starts, ends, lens = chunks_from_rows(
+        np.asarray(k5)[:5], np.asarray(v5)[:5], b_rows=1, c=c, m_pad=m_pad
+    )
+    logits_dec, _, _ = model.decode_step_jit(
+        CFG,
+        w,
+        jnp.asarray([tokens[5]], jnp.int32),
+        jnp.asarray([5], jnp.int32),
+        kc,
+        vc,
+        starts,
+        ends,
+        lens,
+    )
+    np.testing.assert_allclose(np.asarray(logits_dec[0]), np.asarray(logits_full), rtol=2e-4, atol=2e-4)
+    assert int(jnp.argmax(logits_dec[0])) == int(jnp.argmax(logits_full))
+
+
+def test_decode_batch_rows_are_independent():
+    """Each row's output depends only on its own chunks and token."""
+    w = model.init_weights(CFG, seed=2)
+    rng = np.random.default_rng(0)
+    H, d, c, m = CFG.heads_total, CFG.head_dim, 4, 4
+    kc = jnp.asarray(rng.normal(size=(m, H, c, d)) * 0.1, jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(m, H, c, d)) * 0.1, jnp.float32)
+    lens = jnp.asarray([4, 4, 3, 2], jnp.int32)
+    # Batch of 2: row 0 owns chunks 0,1; row 1 owns chunks 2,3.
+    starts = jnp.asarray([0, 0, 1, 1], jnp.int32)
+    ends = jnp.asarray([1, 1, 2, 2], jnp.int32)
+    toks = jnp.asarray([7, 21], jnp.int32)
+    pos = jnp.asarray([8, 7], jnp.int32)
+    logits, _, _ = model.decode_step_jit(CFG, w, toks, pos, kc, vc, starts, ends, lens)
+
+    # Row 0 solo with only its chunks visible.
+    starts0 = jnp.asarray([0, 0, 9, 9], jnp.int32)
+    ends0 = jnp.asarray([1, 1, 9, 9], jnp.int32)
+    logits0, _, _ = model.decode_step_jit(
+        CFG, w, toks[:1], pos[:1], kc, vc, starts0, ends0, lens
+    )
+    np.testing.assert_allclose(np.asarray(logits[0]), np.asarray(logits0[0]), rtol=2e-4, atol=2e-4)
+
+
+def test_decode_returns_appendable_kv():
+    """The returned fresh K/V rows, appended as a new chunk, must make the
+    next decode step equal a two-token dense decode."""
+    w = model.init_weights(CFG, seed=3)
+    P, N = 8, 4
+    prompt = np.array([3, 11, 19], np.int32)
+    padded = np.zeros((P,), np.int32)
+    padded[: len(prompt)] = prompt
+    pk = jnp.zeros((CFG.heads_total, N, CFG.head_dim), jnp.float32)
+    logits_p, kP, vP = model.prefill_jit(
+        CFG, w, jnp.asarray(padded), jnp.int32(len(prompt)), pk, pk, jnp.int32(0)
+    )
+    t3 = int(jnp.argmax(logits_p))
+
+    c, m_pad = 4, 4
+    kc, vc, starts, ends, lens = chunks_from_rows(
+        np.asarray(kP)[:3], np.asarray(vP)[:3], 1, c, m_pad
+    )
+    logits_d, k_new, v_new = model.decode_step_jit(
+        CFG, w, jnp.asarray([t3], jnp.int32), jnp.asarray([3], jnp.int32), kc, vc, starts, ends, lens
+    )
+    t4 = int(jnp.argmax(logits_d[0]))
+
+    # Compare with prefilling [prompt, t3] in one go.
+    ext = np.zeros((P,), np.int32)
+    ext[:4] = list(prompt) + [t3]
+    logits_full, _, _ = model.prefill_jit(
+        CFG, w, jnp.asarray(ext), jnp.int32(4), pk, pk, jnp.int32(0)
+    )
+    assert int(jnp.argmax(logits_full)) == t4
+    np.testing.assert_allclose(np.asarray(logits_d[0]), np.asarray(logits_full), rtol=3e-4, atol=3e-4)
+    assert np.asarray(k_new).shape == (1, CFG.heads_total, CFG.head_dim)
+    assert np.asarray(v_new).shape == (1, CFG.heads_total, CFG.head_dim)
+
+
+def test_prefill_uses_cached_prefix():
+    """Prefilling a suffix on top of a cached prefix must equal prefilling
+    the full sequence — the §3.2 prefix-lookup path."""
+    w = model.init_weights(CFG, seed=4)
+    P, N = 8, 8
+    full = np.array([2, 4, 6, 8, 10, 12], np.int32)
+    split = 4
+
+    padded = np.zeros((P,), np.int32)
+    padded[: len(full)] = full
+    pk0 = jnp.zeros((CFG.heads_total, N, CFG.head_dim), jnp.float32)
+    logits_full, k_full, v_full = model.prefill_jit(
+        CFG, w, jnp.asarray(padded), jnp.int32(len(full)), pk0, pk0, jnp.int32(0)
+    )
+
+    # Cached prefix KV: rows [0, split) transposed to [H, N, d] padding.
+    pk = np.zeros((CFG.heads_total, N, CFG.head_dim), np.float32)
+    pv = np.zeros_like(pk)
+    pk[:, :split] = np.transpose(np.asarray(k_full)[:split], (1, 0, 2))
+    pv[:, :split] = np.transpose(np.asarray(v_full)[:split], (1, 0, 2))
+    suffix = np.zeros((P,), np.int32)
+    suffix[: len(full) - split] = full[split:]
+    logits_suf, k_suf, _ = model.prefill_jit(
+        CFG,
+        w,
+        jnp.asarray(suffix),
+        jnp.int32(len(full) - split),
+        jnp.asarray(pk),
+        jnp.asarray(pv),
+        jnp.int32(split),
+    )
+    np.testing.assert_allclose(np.asarray(logits_suf), np.asarray(logits_full), rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(
+        np.asarray(k_suf)[: len(full) - split],
+        np.asarray(k_full)[split : len(full)],
+        rtol=3e-4,
+        atol=3e-4,
+    )

@@ -1,0 +1,107 @@
+//! Ablations on the design choices DESIGN.md calls out:
+//!
+//! 1. TPP kernel variants — fused (CPU §3.3) vs Algorithms-1+2 buffered vs
+//!    sequence-first-only (PAKV without the TPP batching).
+//! 2. Chunk size c — the alignment-waste vs batching-granularity tradeoff.
+//! 3. Lazy context copy (§3.3) — cached tree context vs rebuild-per-step.
+
+use chunk_attention::coordinator::{KernelBench, MicroConfig, TppVariant};
+use chunk_attention::kvcache::{KvShape, PrefixTree, SeqId};
+use chunk_attention::perf_model::AttentionImpl;
+use chunk_attention::util::bench::{print_table, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::new("ablations");
+    let mode = suite.mode();
+    let (heads, batch, ns) = mode.pick((4, 16, 1024), (32, 32, 2048));
+
+    // --- 1. Kernel variants ---------------------------------------------
+    let mut table = Vec::new();
+    for (variant, label) in [
+        (TppVariant::Fused, "fused (production)"),
+        (TppVariant::Buffered, "buffered (Alg. 1+2)"),
+        (TppVariant::SeqFirstOnly, "seq-first only (no TPP)"),
+    ] {
+        let mut cfg = MicroConfig::paper(batch, ns, ns);
+        cfg.heads = heads;
+        cfg.max_new_tokens = 4;
+        let mut kb = KernelBench::new(cfg, AttentionImpl::ChunkAttn);
+        suite.measure(&format!("variant/{label}"), &[("variant", label.to_string())], Some("tok/s"), || {
+            kb.decode_step_variant(variant)
+        });
+        let us = suite.rows().last().unwrap().stats.mean();
+        table.push((vec![label.to_string(), format!("{us:.0}")], String::new()));
+    }
+    print_table("Ablation 1 — TPP variants (µs/step, full sharing)", &["variant", "latency"], &table);
+
+    // --- 2. Chunk size sweep ---------------------------------------------
+    let mut table = Vec::new();
+    for c in [16usize, 32, 64, 128, 256] {
+        let mut cfg = MicroConfig::paper(batch, ns, ns);
+        cfg.heads = heads;
+        cfg.chunk_size = c;
+        cfg.max_new_tokens = 4;
+        let mut kb = KernelBench::new(cfg, AttentionImpl::ChunkAttn);
+        suite.measure(&format!("chunk_size/{c}"), &[("c", c.to_string())], Some("tok/s"), || {
+            kb.decode_step()
+        });
+        let us = suite.rows().last().unwrap().stats.mean();
+        let kv = kb.kv_bytes_fp16();
+        table.push((
+            vec![c.to_string(), format!("{us:.0}"), format!("{:.1}MiB", kv as f64 / (1 << 20) as f64)],
+            String::new(),
+        ));
+    }
+    print_table(
+        "Ablation 2 — chunk size c (latency vs KV footprint; paper uses c=64)",
+        &["c", "latency(us)", "kv bytes"],
+        &table,
+    );
+
+    // --- 3. Lazy context copy --------------------------------------------
+    let mut table = Vec::new();
+    for lazy in [true, false] {
+        let shape = KvShape::new(heads, 128, 64);
+        let mut tree = PrefixTree::new(shape);
+        tree.lazy_context = lazy;
+        let sys: Vec<u32> = (0..ns as u32).collect();
+        let mut fill = |_p: usize, t: u32, k: &mut [f32], v: &mut [f32]| {
+            k.fill(t as f32 * 1e-3);
+            v.fill(t as f32 * -1e-3);
+        };
+        for i in 0..batch as u64 {
+            let mut p = sys.clone();
+            p.extend([900_000 + i as u32]);
+            tree.insert_sequence(SeqId(i), &p, &mut fill);
+        }
+        let row = vec![0.1f32; heads * 128];
+        let mut step = 0u32;
+        suite.measure(
+            &format!("lazy_context/{lazy}"),
+            &[("lazy", lazy.to_string())],
+            Some("ctx/s"),
+            || {
+                // One decode iteration's tree work: context + appends.
+                let ctx = tree.context();
+                std::hint::black_box(ctx.entries.len());
+                for i in 0..batch as u64 {
+                    tree.append_token(SeqId(i), 1_000_000 + step, &row, &row);
+                }
+                step += 1;
+                batch as u64
+            },
+        );
+        let us = suite.rows().last().unwrap().stats.mean();
+        let (rebuilds, hits) = tree.context_stats();
+        table.push((
+            vec![lazy.to_string(), format!("{us:.1}"), rebuilds.to_string(), hits.to_string()],
+            String::new(),
+        ));
+    }
+    print_table(
+        "Ablation 3 — lazy context copy (tree work per decode iteration)",
+        &["lazy", "latency(us)", "rebuilds", "cache hits"],
+        &table,
+    );
+    suite.finish();
+}

@@ -1,0 +1,55 @@
+//! Figure 4: decode token rate vs batch size (n_c = 64). Prefix-agnostic
+//! kernels plateau once memory-bound; ChunkAttention keeps scaling because
+//! the shared-chunk traffic is batch-invariant.
+
+use chunk_attention::coordinator::{KernelBench, MicroConfig};
+use chunk_attention::perf_model::AttentionImpl;
+use chunk_attention::util::bench::{print_table, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::new("fig4_batch_sweep");
+    let mode = suite.mode();
+    let (heads, ns) = mode.pick((4, 1024), (32, 2048));
+    let batches: Vec<usize> = mode.pick(vec![1, 4, 8, 16, 32], vec![1, 4, 16, 32, 64, 96]);
+    let nc = 64usize;
+    let impls = [
+        AttentionImpl::Naive,
+        AttentionImpl::PagedAttn,
+        AttentionImpl::PagedAttnShared,
+        AttentionImpl::ChunkAttn,
+    ];
+
+    let mut table = Vec::new();
+    for &b in &batches {
+        let mut row = vec![b.to_string()];
+        for &imp in &impls {
+            let mut cfg = MicroConfig::paper(b, ns, ns);
+            cfg.heads = heads;
+            cfg.max_new_tokens = nc + 8;
+            let mut kb = KernelBench::new(cfg, imp);
+            // Advance to mid-decode (n_c/2) so divergence is realistic.
+            for _ in 0..nc / 2 {
+                kb.append_round();
+            }
+            suite.measure(
+                &format!("{}@b{b}", imp.label()),
+                &[("impl", imp.label().to_string()), ("b", b.to_string())],
+                Some("tok/s"),
+                || kb.decode_step(),
+            );
+            let us = suite.rows().last().unwrap().stats.mean();
+            let rate = b as f64 / (us / 1e6);
+            row.push(if rate >= 10_000.0 { format!("{:.0}K", rate / 1e3) } else { format!("{rate:.0}") });
+        }
+        table.push((row, String::new()));
+    }
+    print_table(
+        &format!(
+            "Figure 4 — decode token rate vs batch size, n_s={ns}, n_c={nc}, h={heads} \
+             (paper @A100: baselines peak at b=16; ChunkAttn grows 155K -> 224K tok/s to b=96)"
+        ),
+        &["b", "Naive", "PagedAttn", "PagedAttn*", "ChunkAttn"],
+        &table,
+    );
+    suite.finish();
+}

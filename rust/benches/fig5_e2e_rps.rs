@@ -1,0 +1,86 @@
+//! Figure 5: normalized end-to-end latency (ms/token) vs request arrival
+//! rate (RPS) for ChunkLlama / vLLM / TGI with shared prompts of
+//! n_s ∈ {0, 1024, 2048}, Poisson arrivals, max batch 32, n_c = 512.
+//!
+//! Virtual-time simulation at Llama2-7B scale: real scheduler + real cache
+//! managers, kernel time priced by the calibrated A100 roofline
+//! (DESIGN.md §2).
+
+use chunk_attention::coordinator::{simulate, SimConfig, SystemKind};
+use chunk_attention::model::ModelConfig;
+use chunk_attention::perf_model::HardwareModel;
+use chunk_attention::util::bench::{print_table, BenchSuite};
+use chunk_attention::workload::{Trace, TraceConfig};
+
+fn main() {
+    let mut suite = BenchSuite::new("fig5_e2e_rps");
+    let mode = suite.mode();
+    let n_requests = mode.pick(60, 250);
+    let completion = mode.pick(128, 512);
+    let model = ModelConfig::llama2_7b();
+    let hw = HardwareModel::a100_80g();
+    let rps_grid = [0.25, 0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 4.0];
+    let shared_grid = [0usize, 1024, 2048];
+    let systems = [SystemKind::ChunkLlama, SystemKind::Vllm, SystemKind::Tgi];
+
+    let mut table = Vec::new();
+    for &rps in &rps_grid {
+        let mut row = vec![format!("{rps:.2}")];
+        for &ns in &shared_grid {
+            let trace = Trace::poisson_synthetic(
+                &TraceConfig {
+                    rps,
+                    n_requests,
+                    n_tenants: 1, // one shared system prompt (paper setup)
+                    tenant_skew: 0.0,
+                    query_tokens: 128,
+                    completion_tokens: completion,
+                    seed: 1234,
+                },
+                ns,
+            );
+            for &sys in &systems {
+                // n_s = 0 is modelled by making every request its own tenant.
+                let trace = if ns == 0 {
+                    let mut t = trace.clone();
+                    for (i, r) in t.requests.iter_mut().enumerate() {
+                        r.tenant = i;
+                        r.shared_tokens = 0;
+                    }
+                    t
+                } else {
+                    trace.clone()
+                };
+                let r = simulate(&SimConfig::new(sys), &model, &hw, &trace);
+                suite.record(
+                    &format!("{}(ns={ns})@rps{rps}", sys.label()),
+                    &[
+                        ("system", sys.label().to_string()),
+                        ("ns", ns.to_string()),
+                        ("rps", format!("{rps}")),
+                    ],
+                    r.normalized_latency_ms_per_tok * 1e3, // µs for the suite
+                    Some(("ms/tok", r.normalized_latency_ms_per_tok)),
+                );
+                row.push(format!("{:.1}", r.normalized_latency_ms_per_tok));
+            }
+        }
+        table.push((row, String::new()));
+    }
+
+    let headers: Vec<String> = std::iter::once("RPS".to_string())
+        .chain(shared_grid.iter().flat_map(|ns| {
+            systems.iter().map(move |s| format!("{}({ns})", s.label()))
+        }))
+        .collect();
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    print_table(
+        &format!(
+            "Figure 5 — normalized latency (ms/tok) vs RPS, n_c={completion}, max_batch=32 \
+             (paper @A100: ChunkLlama sustains 2.9 RPS at ns=1024 vs vLLM 1.8, <40ms/tok)"
+        ),
+        &header_refs,
+        &table,
+    );
+    suite.finish();
+}

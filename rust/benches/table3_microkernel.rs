@@ -1,0 +1,66 @@
+//! Table 3: decode self-attention latency across the six kernel
+//! implementations for the (n_p, n_s) grid, measured on this host's memory
+//! hierarchy (see DESIGN.md §2 for why CPU cache locality reproduces the
+//! A100 shape).
+//!
+//! Quick mode (default): h=4, b=16 — minutes. Full mode
+//! (`CHUNK_ATTN_BENCH_MODE=full`): the paper's h=32, b=32, c=64, d=128.
+
+use chunk_attention::coordinator::{KernelBench, MicroConfig};
+use chunk_attention::perf_model::AttentionImpl;
+use chunk_attention::util::bench::{print_table, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::new("table3_microkernel");
+    let mode = suite.mode();
+    let (heads, batch) = mode.pick((4, 16), (32, 32));
+    let grid: Vec<(usize, usize)> = vec![
+        (1024, 0),
+        (1024, 512),
+        (1024, 768),
+        (1024, 1024),
+        (2048, 0),
+        (2048, 1024),
+        (2048, 1536),
+        (2048, 2048),
+        (4096, 0),
+        (4096, 2048),
+        (4096, 3072),
+        (4096, 4096),
+    ];
+
+    let mut table: Vec<(Vec<String>, String)> = Vec::new();
+    for &(np, ns) in &grid {
+        let mut row = vec![np.to_string(), ns.to_string()];
+        let mut chunk_lat = 0.0f64;
+        let mut naive_lat = 0.0f64;
+        for imp in AttentionImpl::ALL {
+            let mut cfg = MicroConfig::paper(batch, np, ns);
+            cfg.heads = heads;
+            cfg.max_new_tokens = 4;
+            let mut kb = KernelBench::new(cfg, imp);
+            let id = format!("np{np}/ns{ns}/{}", imp.label());
+            suite.measure(&id, &[("np", np.to_string()), ("ns", ns.to_string()), ("impl", imp.label().to_string())], Some("tok/s"), || kb.decode_step());
+            let us = suite.rows().last().unwrap().stats.mean();
+            if imp == AttentionImpl::ChunkAttn {
+                chunk_lat = us;
+            }
+            if imp == AttentionImpl::Naive {
+                naive_lat = us;
+            }
+            row.push(format!("{us:.0}"));
+        }
+        row.push(format!("{:.2}x", naive_lat / chunk_lat));
+        table.push((row, String::new()));
+    }
+
+    print_table(
+        &format!(
+            "Table 3 — decode attention latency (µs), b={batch}, h={heads}, d=128, c=64 \
+             (paper @A100: Naive/ChunkAttn = 6.6x at np=ns=4096, ~1.0x at ns=0)"
+        ),
+        &["np", "ns", "Naive", "xformers", "FlashAttn", "PagedAttn", "PagedAttn*", "ChunkAttn", "Naive/Chunk"],
+        &table,
+    );
+    suite.finish();
+}

@@ -1,0 +1,416 @@
+//! The ChunkAttention two-phase-partition (TPP) decode kernel (§3.2) over
+//! the prefix-tree KV cache.
+//!
+//! Three variants are provided:
+//!
+//! - [`tpp_attention`] — the production CPU kernel: chunk-first batching of
+//!   query rows over shared chunks with the `attn_reduce` merge fused right
+//!   after each `partial_attn` (§3.3: on CPU serialising the reduction is
+//!   cheap, so no partial buffers are materialised), then the
+//!   sequence-first pass over private tail chunks. Work is partitioned over
+//!   heads on the thread pool — the CPU analogue of the paper's
+//!   thread-block partition.
+//! - [`tpp_attention_buffered`] — Algorithms 1 and 2 verbatim: the
+//!   chunk-first phase writes `(O, m, n)^{(C)}` partials to memory, the
+//!   sequence-first phase restores and merges them. Used by the ablation
+//!   bench and as a cross-check of the fused variant.
+//! - [`tpp_attention_seq_only`] — sequence-first only (no cross-sequence
+//!   batching): every chunk is processed once per covered sequence. This is
+//!   what a prefix-aware cache *without* TPP costs, isolating the kernel
+//!   contribution from the memory-sharing contribution.
+
+use super::online::{attend_block, OnlineState};
+use super::Queries;
+use crate::kvcache::{PrefixTree, TreeContext};
+use crate::util::threadpool::ThreadPool;
+
+/// Reusable scratch for the TPP kernels: no allocation on the decode path.
+pub struct TppScratch {
+    /// Running max per (head, row): `[heads * batch]`.
+    m: Vec<f32>,
+    /// Normaliser per (head, row).
+    n: Vec<f32>,
+    /// Per-head weight scratch: `[heads * chunk_size]`.
+    w: Vec<f32>,
+    heads: usize,
+    batch: usize,
+    chunk_size: usize,
+}
+
+impl TppScratch {
+    pub fn new(shape: &crate::kvcache::KvShape, max_batch: usize) -> Self {
+        TppScratch {
+            m: vec![0.0; shape.heads * max_batch],
+            n: vec![0.0; shape.heads * max_batch],
+            w: vec![0.0; shape.heads * shape.chunk_size],
+            heads: shape.heads,
+            batch: max_batch,
+            chunk_size: shape.chunk_size,
+        }
+    }
+
+    fn ensure(&mut self, heads: usize, batch: usize, chunk_size: usize) {
+        if heads * batch > self.m.len() {
+            self.m.resize(heads * batch, 0.0);
+            self.n.resize(heads * batch, 0.0);
+        }
+        if heads * chunk_size > self.w.len() {
+            self.w.resize(heads * chunk_size, 0.0);
+        }
+        self.heads = heads;
+        self.batch = batch;
+        self.chunk_size = chunk_size;
+    }
+}
+
+/// The production TPP kernel. Output `[heads, batch, head_dim]`, rows in
+/// `ctx.seq_order`.
+pub fn tpp_attention(
+    tree: &PrefixTree,
+    ctx: &TreeContext,
+    q: &Queries,
+    pool: &ThreadPool,
+    scratch: &mut TppScratch,
+    out: &mut [f32],
+) {
+    let shape = tree.shape();
+    let b = ctx.seq_order.len();
+    assert_eq!(q.heads, shape.heads);
+    assert_eq!(q.head_dim, shape.head_dim);
+    assert_eq!(q.batch, b);
+    assert_eq!(out.len(), shape.heads * b * shape.head_dim);
+    scratch.ensure(shape.heads, b, shape.chunk_size);
+    let d = shape.head_dim;
+    let scale = q.scale();
+
+    // Per-head slices are disjoint; hand raw base addresses to the workers.
+    let out_addr = out.as_mut_ptr() as usize;
+    let m_addr = scratch.m.as_mut_ptr() as usize;
+    let n_addr = scratch.n.as_mut_ptr() as usize;
+    let w_addr = scratch.w.as_mut_ptr() as usize;
+    let c = shape.chunk_size;
+
+    pool.parallel_for(shape.heads, |h| {
+        // Safety: each head index owns a disjoint slice of out/m/n/w, and
+        // parallel_for joins before `out`/`scratch` are touched again.
+        let o_head = unsafe {
+            std::slice::from_raw_parts_mut((out_addr as *mut f32).add(h * b * d), b * d)
+        };
+        let m_head =
+            unsafe { std::slice::from_raw_parts_mut((m_addr as *mut f32).add(h * b), b) };
+        let n_head =
+            unsafe { std::slice::from_raw_parts_mut((n_addr as *mut f32).add(h * b), b) };
+        let w = unsafe { std::slice::from_raw_parts_mut((w_addr as *mut f32).add(h * c), c) };
+        let q_head = q.head(h);
+
+        let mut state = OnlineState { m: m_head, n: n_head, o: o_head, head_dim: d };
+        state.reset();
+
+        // Phase 1 — chunk first: shared chunks, query rows batched so each
+        // K/V chunk is streamed once for all covered sequences (Eqn. 1).
+        for e in ctx.shared() {
+            let chunk = tree.chunk(e.chunk);
+            let rows = e.end - e.start;
+            attend_block(
+                &q_head[e.start * d..e.end * d],
+                rows,
+                d,
+                chunk.k_head(&shape, h),
+                chunk.v_head(&shape, h),
+                chunk.len(),
+                scale,
+                &mut OnlineState {
+                    m: &mut state.m[e.start..e.end],
+                    n: &mut state.n[e.start..e.end],
+                    o: &mut state.o[e.start * d..e.end * d],
+                    head_dim: d,
+                },
+                w,
+            );
+        }
+
+        // Phase 2 — sequence first: private chunks, one row each (Eqn. 2's
+        // reduce is fused into attend_block).
+        for e in ctx.private() {
+            let chunk = tree.chunk(e.chunk);
+            let r = e.start;
+            attend_block(
+                &q_head[r * d..(r + 1) * d],
+                1,
+                d,
+                chunk.k_head(&shape, h),
+                chunk.v_head(&shape, h),
+                chunk.len(),
+                scale,
+                &mut OnlineState {
+                    m: &mut state.m[r..r + 1],
+                    n: &mut state.n[r..r + 1],
+                    o: &mut state.o[r * d..(r + 1) * d],
+                    head_dim: d,
+                },
+                w,
+            );
+        }
+
+        state.finish();
+    });
+}
+
+/// Algorithm 1 + Algorithm 2 verbatim: chunk-first saves `(O, m, n)^{(C)}`
+/// partials to memory; sequence-first restores and merges them, then
+/// processes private chunks. Numerically identical to [`tpp_attention`].
+pub fn tpp_attention_buffered(
+    tree: &PrefixTree,
+    ctx: &TreeContext,
+    q: &Queries,
+    out: &mut [f32],
+) {
+    let shape = tree.shape();
+    let b = ctx.seq_order.len();
+    assert_eq!(q.batch, b);
+    let d = shape.head_dim;
+    let scale = q.scale();
+    let shared: Vec<_> = ctx.shared().collect();
+
+    // Partial buffers: for each shared chunk, (O, m, n) for its row span.
+    let spans: Vec<usize> = shared.iter().map(|e| e.end - e.start).collect();
+    let offsets: Vec<usize> = spans
+        .iter()
+        .scan(0, |acc, &s| {
+            let off = *acc;
+            *acc += s;
+            Some(off)
+        })
+        .collect();
+    let total_rows: usize = spans.iter().sum();
+
+    let mut w = vec![0.0f32; shape.chunk_size];
+    for h in 0..shape.heads {
+        let q_head = q.head(h);
+        let mut part_o = vec![0.0f32; total_rows * d];
+        let mut part_m = vec![f32::NEG_INFINITY; total_rows];
+        let mut part_n = vec![0.0f32; total_rows];
+
+        // ATTNCHUNKFIRST (Algorithm 1): independent partials per chunk.
+        for (ci, e) in shared.iter().enumerate() {
+            let chunk = tree.chunk(e.chunk);
+            let rows = e.end - e.start;
+            let off = offsets[ci];
+            attend_block(
+                &q_head[e.start * d..e.end * d],
+                rows,
+                d,
+                chunk.k_head(&shape, h),
+                chunk.v_head(&shape, h),
+                chunk.len(),
+                scale,
+                &mut OnlineState {
+                    m: &mut part_m[off..off + rows],
+                    n: &mut part_n[off..off + rows],
+                    o: &mut part_o[off * d..(off + rows) * d],
+                    head_dim: d,
+                },
+                w.as_mut_slice(),
+            );
+        }
+
+        // ATTNSEQFIRST (Algorithm 2): per row, merge saved partials then
+        // process the row's private chunks.
+        for r in 0..b {
+            let (mut m, mut n) = (f32::NEG_INFINITY, 0.0f32);
+            let o_base = (h * b + r) * d;
+            out[o_base..o_base + d].fill(0.0);
+            // attn_reduce over saved partials covering row r.
+            for (ci, e) in shared.iter().enumerate() {
+                if r < e.start || r >= e.end {
+                    continue;
+                }
+                let off = offsets[ci] + (r - e.start);
+                let m_c = part_m[off];
+                let n_c = part_n[off];
+                let m_new = m.max(m_c);
+                let x = (m_c - m_new).exp();
+                let y = if m == f32::NEG_INFINITY { 0.0 } else { (m - m_new).exp() };
+                for i in 0..d {
+                    out[o_base + i] = out[o_base + i] * y + part_o[off * d + i] * x;
+                }
+                n = n * y + n_c * x;
+                m = m_new;
+            }
+            // Private chunks of row r.
+            for e in ctx.private() {
+                if e.start != r {
+                    continue;
+                }
+                let chunk = tree.chunk(e.chunk);
+                let (o_lo, o_hi) = (o_base, o_base + d);
+                attend_block(
+                    &q_head[r * d..(r + 1) * d],
+                    1,
+                    d,
+                    chunk.k_head(&shape, h),
+                    chunk.v_head(&shape, h),
+                    chunk.len(),
+                    scale,
+                    &mut OnlineState {
+                        m: std::slice::from_mut(&mut m),
+                        n: std::slice::from_mut(&mut n),
+                        o: &mut out[o_lo..o_hi],
+                        head_dim: d,
+                    },
+                    w.as_mut_slice(),
+                );
+            }
+            if n > 0.0 {
+                let inv = 1.0 / n;
+                for x in &mut out[o_base..o_base + d] {
+                    *x *= inv;
+                }
+            }
+        }
+    }
+}
+
+/// Sequence-first only: prefix-aware storage but NO chunk-first batching —
+/// each shared chunk is re-streamed once per covered sequence. Isolates the
+/// TPP kernel's contribution from PAKV's memory savings (ablation).
+pub fn tpp_attention_seq_only(
+    tree: &PrefixTree,
+    ctx: &TreeContext,
+    q: &Queries,
+    scratch: &mut TppScratch,
+    out: &mut [f32],
+) {
+    let shape = tree.shape();
+    let b = ctx.seq_order.len();
+    assert_eq!(q.batch, b);
+    scratch.ensure(shape.heads, b, shape.chunk_size);
+    let d = shape.head_dim;
+    let scale = q.scale();
+    let w = &mut scratch.w[..shape.chunk_size];
+    for h in 0..shape.heads {
+        let q_head = q.head(h);
+        let o_head = &mut out[h * b * d..(h + 1) * b * d];
+        let m_head = &mut scratch.m[h * b..(h + 1) * b];
+        let n_head = &mut scratch.n[h * b..(h + 1) * b];
+        let mut state = OnlineState { m: m_head, n: n_head, o: o_head, head_dim: d };
+        state.reset();
+        for e in &ctx.entries {
+            let chunk = tree.chunk(e.chunk);
+            // One row at a time — no batching, so shared chunks are
+            // re-read (end - start) times.
+            for r in e.start..e.end {
+                attend_block(
+                    &q_head[r * d..(r + 1) * d],
+                    1,
+                    d,
+                    chunk.k_head(&shape, h),
+                    chunk.v_head(&shape, h),
+                    chunk.len(),
+                    scale,
+                    &mut OnlineState {
+                        m: &mut state.m[r..r + 1],
+                        n: &mut state.n[r..r + 1],
+                        o: &mut state.o[r * d..(r + 1) * d],
+                        head_dim: d,
+                    },
+                    w,
+                );
+            }
+        }
+        state.finish();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::oracle_attention;
+    use crate::kvcache::{KvShape, PrefixTree, SeqId};
+    use crate::util::rng::Pcg64;
+
+    fn build_tree(shape: KvShape, seed: u64) -> PrefixTree {
+        let mut tree = PrefixTree::new(shape);
+        let sys: Vec<u32> = (0..10).collect();
+        for i in 0..6u64 {
+            let mut p = sys.clone();
+            p.extend((0..3).map(|j| 100 + i as u32 * 10 + j));
+            tree.insert_sequence(SeqId(i), &p, &mut |pos, token, k, v| {
+                let mut r = Pcg64::new(seed ^ token as u64, pos as u64);
+                r.fill_uniform_f32(k, -1.0, 1.0);
+                r.fill_uniform_f32(v, -1.0, 1.0);
+            });
+        }
+        tree
+    }
+
+    fn queries(shape: &KvShape, b: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seeded(seed);
+        let mut q = vec![0.0; shape.heads * b * shape.head_dim];
+        rng.fill_uniform_f32(&mut q, -1.0, 1.0);
+        q
+    }
+
+    #[test]
+    fn all_variants_agree_with_oracle() {
+        let shape = KvShape::new(2, 8, 4);
+        let mut tree = build_tree(shape, 5);
+        let ctx = tree.context();
+        let b = ctx.seq_order.len();
+        let qdata = queries(&shape, b, 17);
+        let q = Queries::new(&qdata, shape.heads, b, shape.head_dim);
+        let expect = oracle_attention(&tree, &ctx, &q);
+
+        let pool = ThreadPool::new(1);
+        let mut scratch = TppScratch::new(&shape, b);
+
+        let mut fused = vec![0.0; expect.len()];
+        tpp_attention(&tree, &ctx, &q, &pool, &mut scratch, &mut fused);
+
+        let mut buffered = vec![0.0; expect.len()];
+        tpp_attention_buffered(&tree, &ctx, &q, &mut buffered);
+
+        let mut seq_only = vec![0.0; expect.len()];
+        tpp_attention_seq_only(&tree, &ctx, &q, &mut scratch, &mut seq_only);
+
+        for i in 0..expect.len() {
+            assert!((fused[i] - expect[i]).abs() < 2e-4, "fused idx {i}");
+            assert!((buffered[i] - expect[i]).abs() < 2e-4, "buffered idx {i}");
+            assert!((seq_only[i] - expect[i]).abs() < 2e-4, "seq_only idx {i}");
+            // Buffered and fused follow different summation orders but must
+            // agree tightly.
+            assert!((buffered[i] - fused[i]).abs() < 1e-4, "variants idx {i}");
+        }
+    }
+
+    #[test]
+    fn multithreaded_matches_single_thread() {
+        let shape = KvShape::new(4, 8, 4);
+        let mut tree = build_tree(shape, 9);
+        let ctx = tree.context();
+        let b = ctx.seq_order.len();
+        let qdata = queries(&shape, b, 31);
+        let q = Queries::new(&qdata, shape.heads, b, shape.head_dim);
+
+        let mut one = vec![0.0; shape.heads * b * shape.head_dim];
+        let mut four = vec![0.0; one.len()];
+        let mut scratch = TppScratch::new(&shape, b);
+        tpp_attention(&tree, &ctx, &q, &ThreadPool::new(1), &mut scratch, &mut one);
+        tpp_attention(&tree, &ctx, &q, &ThreadPool::new(4), &mut scratch, &mut four);
+        assert_eq!(one, four, "head partition must be deterministic");
+    }
+
+    #[test]
+    fn scratch_grows_on_demand() {
+        let shape = KvShape::new(2, 4, 4);
+        let mut scratch = TppScratch::new(&shape, 1); // deliberately small
+        let mut tree = build_tree(shape, 2);
+        let ctx = tree.context();
+        let b = ctx.seq_order.len();
+        let qdata = queries(&shape, b, 3);
+        let q = Queries::new(&qdata, shape.heads, b, shape.head_dim);
+        let mut out = vec![0.0; shape.heads * b * shape.head_dim];
+        tpp_attention(&tree, &ctx, &q, &ThreadPool::new(1), &mut scratch, &mut out);
+        assert!(out.iter().any(|&x| x != 0.0));
+    }
+}

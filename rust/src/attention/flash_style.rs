@@ -1,0 +1,95 @@
+//! FlashAttention-style decode attention over the monolithic cache
+//! (Dao et al., 2022): tiled KV with online softmax, but organised the way
+//! the training-oriented kernel is — fixed square tiles with per-tile
+//! partial `(O, m, n)` spilled to scratch and a separate reduction pass.
+//!
+//! For decode (query length 1) this structure buys nothing and costs extra
+//! memory traffic for the partials — which is exactly why the paper's
+//! Table 3 shows FlashAttention trailing for inference. We keep the
+//! two-pass structure faithfully rather than quietly optimising it away.
+
+use super::online::{attend_block, OnlineState};
+use super::{out_row, Queries};
+use crate::kvcache::{MonolithicKvCache, SeqId};
+
+/// Output layout `[heads, batch, head_dim]`, rows in `order`.
+/// `tile` is the KV tile length (FlashAttention uses 64/128-row tiles).
+pub fn flash_style_attention(
+    cache: &MonolithicKvCache,
+    order: &[SeqId],
+    q: &Queries,
+    tile: usize,
+    out: &mut [f32],
+) {
+    assert!(tile > 0);
+    let shape = cache.shape();
+    assert_eq!(q.heads, shape.heads);
+    assert_eq!(q.head_dim, shape.head_dim);
+    assert_eq!(q.batch, order.len());
+    let d = shape.head_dim;
+    let scale = q.scale();
+    let max_len = order
+        .iter()
+        .map(|&s| cache.get(s).expect("sequence in cache").len)
+        .max()
+        .unwrap_or(0);
+    let max_tiles = max_len.div_ceil(tile).max(1);
+    // Per-tile partial results, spilled like the kernel spills to HBM.
+    let mut part_o = vec![0.0f32; max_tiles * d];
+    let mut part_m = vec![0.0f32; max_tiles];
+    let mut part_n = vec![0.0f32; max_tiles];
+    let mut w = vec![0.0f32; tile];
+    for h in 0..q.heads {
+        for (row, &seq) in order.iter().enumerate() {
+            let s = cache.get(seq).expect("sequence in cache");
+            let n = s.len;
+            let k = s.k_head(&shape, h);
+            let v = s.v_head(&shape, h);
+            let q_row = q.row(h, row);
+            let ntiles = n.div_ceil(tile);
+            // Pass 1: independent partials per tile.
+            for ti in 0..ntiles {
+                let start = ti * tile;
+                let len = tile.min(n - start);
+                let (mut m1, mut n1) = ([0.0f32; 1], [0.0f32; 1]);
+                let o_tile = &mut part_o[ti * d..(ti + 1) * d];
+                let mut state = OnlineState { m: &mut m1, n: &mut n1, o: o_tile, head_dim: d };
+                state.reset();
+                attend_block(
+                    q_row,
+                    1,
+                    d,
+                    &k[start * d..(start + len) * d],
+                    &v[start * d..(start + len) * d],
+                    len,
+                    scale,
+                    &mut state,
+                    &mut w,
+                );
+                // Keep unnormalised (o, m, n) — normalisation happens in the
+                // reduction, as in the real kernel.
+                part_m[ti] = m1[0];
+                part_n[ti] = n1[0];
+            }
+            // Pass 2: attn_reduce over the spilled partials (Eqn. 2).
+            let o = out_row(out, q.heads, q.batch, d, h, row);
+            o.fill(0.0);
+            let mut m = f32::NEG_INFINITY;
+            let mut norm = 0.0f32;
+            for ti in 0..ntiles {
+                let m_new = m.max(part_m[ti]);
+                let x = (part_m[ti] - m_new).exp();
+                let y = if m == f32::NEG_INFINITY { 0.0 } else { (m - m_new).exp() };
+                for (oi, pi) in o.iter_mut().zip(&part_o[ti * d..(ti + 1) * d]) {
+                    *oi = *oi * y + pi * x;
+                }
+                norm = norm * y + part_n[ti] * x;
+                m = m_new;
+            }
+            let inv = 1.0 / norm;
+            for x in o.iter_mut() {
+                *x *= inv;
+            }
+        }
+    }
+}

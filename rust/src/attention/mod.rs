@@ -1,0 +1,253 @@
+//! Decode-time self-attention kernels.
+//!
+//! Six implementations matching the paper's Table 3 columns, all computing
+//! `softmax(Q Kᵀ / √d) V` for one decode step (one query token per
+//! sequence):
+//!
+//! | module | Table 3 column | KV layout |
+//! |---|---|---|
+//! | [`naive`] | Naive | monolithic dense |
+//! | [`xformers_style`] | xformers | monolithic dense |
+//! | [`flash_style`] | FlashAttn | monolithic dense |
+//! | [`paged`] (private pages) | PagedAttn | paged |
+//! | [`paged`] (aliased pages) | PagedAttn\* | paged, shared physical pages |
+//! | [`chunk_tpp`] | ChunkAttn | prefix tree (PAKV) + TPP kernel |
+//!
+//! ## Layout
+//!
+//! Queries and outputs are `[heads, batch, head_dim]` (head-major) so each
+//! head's query block is a contiguous `b×d` matrix — the slice
+//! `Q_{i:j,:}` of Eqn. (1) is then contiguous for any sequence interval
+//! `[i, j)`, which is exactly the property the prefix tree guarantees.
+//!
+//! Row order follows the tree context's `seq_order`; callers using the
+//! monolithic/paged caches pass an explicit sequence order.
+
+pub mod chunk_tpp;
+pub mod flash_style;
+pub mod naive;
+pub mod online;
+pub mod oracle;
+pub mod paged;
+pub mod xformers_style;
+
+pub use chunk_tpp::{
+    tpp_attention, tpp_attention_buffered, tpp_attention_seq_only, TppScratch,
+};
+pub use flash_style::flash_style_attention;
+pub use naive::naive_attention;
+pub use oracle::oracle_attention;
+pub use paged::paged_attention;
+pub use xformers_style::xformers_style_attention;
+
+/// Query (and output) tensor view: `[heads, batch, head_dim]`.
+#[derive(Debug, Clone, Copy)]
+pub struct Queries<'a> {
+    pub data: &'a [f32],
+    pub heads: usize,
+    pub batch: usize,
+    pub head_dim: usize,
+}
+
+impl<'a> Queries<'a> {
+    pub fn new(data: &'a [f32], heads: usize, batch: usize, head_dim: usize) -> Self {
+        assert_eq!(data.len(), heads * batch * head_dim, "query tensor shape mismatch");
+        Queries { data, heads, batch, head_dim }
+    }
+
+    /// Contiguous `[batch, head_dim]` block for one head.
+    #[inline]
+    pub fn head(&self, h: usize) -> &'a [f32] {
+        let stride = self.batch * self.head_dim;
+        &self.data[h * stride..(h + 1) * stride]
+    }
+
+    /// One query row.
+    #[inline]
+    pub fn row(&self, h: usize, b: usize) -> &'a [f32] {
+        let base = (h * self.batch + b) * self.head_dim;
+        &self.data[base..base + self.head_dim]
+    }
+
+    pub fn scale(&self) -> f32 {
+        1.0 / (self.head_dim as f32).sqrt()
+    }
+}
+
+/// Mutable `[heads, batch, head_dim]` output view helpers.
+#[inline]
+pub fn out_row(out: &mut [f32], heads: usize, batch: usize, head_dim: usize, h: usize, b: usize) -> &mut [f32] {
+    debug_assert_eq!(out.len(), heads * batch * head_dim);
+    let base = (h * batch + b) * head_dim;
+    &mut out[base..base + head_dim]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::{KvShape, MonolithicKvCache, PagedKvCache, PrefixTree, SeqId};
+    use crate::util::rng::Pcg64;
+    use crate::util::threadpool::ThreadPool;
+
+    /// Build the same logical KV state in all three cache layouts plus
+    /// random queries, then check every kernel against the f64 oracle.
+    struct Fixture {
+        shape: KvShape,
+        tree: PrefixTree,
+        mono: MonolithicKvCache,
+        pag: PagedKvCache,
+        pag_shared: PagedKvCache,
+        seqs: Vec<SeqId>,
+        q: Vec<f32>,
+    }
+
+    fn kv_fill(rng_seed: u64) -> impl FnMut(usize, u32, &mut [f32], &mut [f32]) {
+        move |pos, token, k: &mut [f32], v: &mut [f32]| {
+            // Deterministic per (pos, token): all caches store identical KV.
+            let mut r = Pcg64::new(rng_seed ^ (token as u64), pos as u64);
+            r.fill_uniform_f32(k, -1.0, 1.0);
+            r.fill_uniform_f32(v, -1.0, 1.0);
+        }
+    }
+
+    fn build_fixture(
+        shape: KvShape,
+        prompts: &[Vec<u32>],
+        shared_hint: &[usize],
+        seed: u64,
+    ) -> Fixture {
+        let mut tree = PrefixTree::new(shape);
+        let mut mono = MonolithicKvCache::new(shape);
+        let mut pag = PagedKvCache::new(shape, shape.chunk_size);
+        let mut pag_shared = PagedKvCache::new(shape, shape.chunk_size);
+        let mut seqs = Vec::new();
+        for (i, prompt) in prompts.iter().enumerate() {
+            let seq = SeqId(i as u64);
+            seqs.push(seq);
+            tree.insert_sequence(seq, prompt, &mut kv_fill(seed));
+            mono.insert_sequence(seq, prompt, prompt.len() + 8, &mut kv_fill(seed));
+            pag.insert_sequence(seq, prompt, &mut kv_fill(seed));
+            if i > 0 && shared_hint[i] > 0 {
+                pag_shared.insert_sequence_shared(
+                    seq,
+                    SeqId(0),
+                    prompt,
+                    shared_hint[i],
+                    &mut kv_fill(seed),
+                );
+            } else {
+                pag_shared.insert_sequence(seq, prompt, &mut kv_fill(seed));
+            }
+        }
+        // Queries in tree context order.
+        let ctx = tree.context();
+        let b = ctx.seq_order.len();
+        let mut rng = Pcg64::new(seed.wrapping_add(99), 0);
+        let mut q = vec![0.0f32; shape.heads * b * shape.head_dim];
+        rng.fill_uniform_f32(&mut q, -1.0, 1.0);
+        Fixture { shape, tree, mono, pag, pag_shared, seqs, q }
+    }
+
+    fn check_all_kernels(mut fx: Fixture, tol: f32) {
+        let shape = fx.shape;
+        let ctx = fx.tree.context();
+        let b = ctx.seq_order.len();
+        let q = Queries::new(&fx.q, shape.heads, b, shape.head_dim);
+
+        // Oracle in tree order.
+        let expect = oracle_attention(&fx.tree, &ctx, &q);
+
+        // TPP on the tree.
+        let pool = ThreadPool::new(1);
+        let mut scratch = TppScratch::new(&shape, b);
+        let mut got = vec![0.0f32; expect.len()];
+        tpp_attention(&fx.tree, &ctx, &q, &pool, &mut scratch, &mut got);
+        assert_close(&got, &expect, tol, "chunk_tpp");
+
+        // Dense baselines use the same row order.
+        let order: Vec<SeqId> = ctx.seq_order.clone();
+        let mut got = vec![0.0f32; expect.len()];
+        naive_attention(&fx.mono, &order, &q, &mut got);
+        assert_close(&got, &expect, tol, "naive");
+
+        let mut got = vec![0.0f32; expect.len()];
+        xformers_style_attention(&fx.mono, &order, &q, 32, &mut got);
+        assert_close(&got, &expect, tol, "xformers");
+
+        let mut got = vec![0.0f32; expect.len()];
+        flash_style_attention(&fx.mono, &order, &q, 16, &mut got);
+        assert_close(&got, &expect, tol, "flash");
+
+        let mut got = vec![0.0f32; expect.len()];
+        paged_attention(&fx.pag, &order, &q, &mut got);
+        assert_close(&got, &expect, tol, "paged");
+
+        let mut got = vec![0.0f32; expect.len()];
+        paged_attention(&fx.pag_shared, &order, &q, &mut got);
+        assert_close(&got, &expect, tol, "paged_shared");
+
+        let _ = &fx.seqs;
+    }
+
+    fn assert_close(got: &[f32], expect: &[f32], tol: f32, what: &str) {
+        assert_eq!(got.len(), expect.len());
+        for (i, (g, e)) in got.iter().zip(expect).enumerate() {
+            assert!(
+                (g - e).abs() <= tol * (1.0 + e.abs()),
+                "{what}: idx {i}: got {g}, expect {e}"
+            );
+        }
+    }
+
+    #[test]
+    fn all_kernels_match_oracle_shared_prefixes() {
+        let shape = KvShape::new(3, 8, 4);
+        let sys: Vec<u32> = (100..100 + 9).collect(); // 9-token shared prefix
+        let prompts: Vec<Vec<u32>> = (0..5)
+            .map(|i| {
+                let mut p = sys.clone();
+                p.extend((0..4).map(|j| 1000 + i * 10 + j));
+                p
+            })
+            .collect();
+        let shared = vec![0, 9, 9, 9, 9];
+        check_all_kernels(build_fixture(shape, &prompts, &shared, 7), 2e-4);
+    }
+
+    #[test]
+    fn all_kernels_match_oracle_no_sharing() {
+        let shape = KvShape::new(2, 16, 8);
+        let prompts: Vec<Vec<u32>> =
+            (0..4).map(|i| (0..13).map(|j| (i * 1000 + j) as u32).collect()).collect();
+        let shared = vec![0; 4];
+        check_all_kernels(build_fixture(shape, &prompts, &shared, 21), 2e-4);
+    }
+
+    #[test]
+    fn all_kernels_match_oracle_single_sequence() {
+        let shape = KvShape::new(1, 4, 4);
+        let prompts = vec![(0u32..7).collect::<Vec<_>>()];
+        check_all_kernels(build_fixture(shape, &prompts, &[0], 3), 2e-4);
+    }
+
+    #[test]
+    fn all_kernels_match_oracle_nested_prefixes() {
+        // s0 is a prefix of s1 which shares with s2 at a shallower depth.
+        let shape = KvShape::new(2, 8, 4);
+        let prompts: Vec<Vec<u32>> = vec![
+            (0..8).collect(),
+            (0..16).collect(),
+            (0..6).chain(50..58).collect(),
+        ];
+        check_all_kernels(build_fixture(shape, &prompts, &[0, 8, 4], 11), 2e-4);
+    }
+
+    #[test]
+    fn queries_layout_helpers() {
+        let data: Vec<f32> = (0..2 * 3 * 4).map(|x| x as f32).collect();
+        let q = Queries::new(&data, 2, 3, 4);
+        assert_eq!(q.head(1).len(), 12);
+        assert_eq!(q.row(1, 2), &[20.0, 21.0, 22.0, 23.0]);
+        assert!((q.scale() - 0.5).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,56 @@
+//! Naive decode attention over the monolithic cache — the paper's "Naive
+//! PyTorch" baseline: per sequence, per head, a full `softmax(qKᵀ/√d)V`
+//! with a materialised weight vector, streaming each sequence's entire
+//! (private) K and V from memory.
+
+use super::online::{axpy, dot};
+use super::{out_row, Queries};
+use crate::kvcache::{MonolithicKvCache, SeqId};
+
+/// Output layout `[heads, batch, head_dim]`, rows in `order`.
+pub fn naive_attention(cache: &MonolithicKvCache, order: &[SeqId], q: &Queries, out: &mut [f32]) {
+    let shape = cache.shape();
+    assert_eq!(q.heads, shape.heads);
+    assert_eq!(q.head_dim, shape.head_dim);
+    assert_eq!(q.batch, order.len());
+    assert_eq!(out.len(), q.heads * q.batch * q.head_dim);
+    let d = shape.head_dim;
+    let scale = q.scale();
+    let max_len = order
+        .iter()
+        .map(|&s| cache.get(s).expect("sequence in cache").len)
+        .max()
+        .unwrap_or(0);
+    let mut w = vec![0.0f32; max_len];
+    for h in 0..q.heads {
+        for (row, &seq) in order.iter().enumerate() {
+            let s = cache.get(seq).expect("sequence in cache");
+            let n = s.len;
+            let k = s.k_head(&shape, h);
+            let v = s.v_head(&shape, h);
+            let q_row = q.row(h, row);
+            // Materialised weights (the "naive" part: no online softmax).
+            let mut m = f32::NEG_INFINITY;
+            for t in 0..n {
+                let x = dot(q_row, &k[t * d..(t + 1) * d]) * scale;
+                w[t] = x;
+                m = m.max(x);
+            }
+            let mut norm = 0.0f32;
+            for t in 0..n {
+                let e = (w[t] - m).exp();
+                w[t] = e;
+                norm += e;
+            }
+            let o = out_row(out, q.heads, q.batch, d, h, row);
+            o.fill(0.0);
+            for t in 0..n {
+                axpy(w[t], &v[t * d..(t + 1) * d], o);
+            }
+            let inv = 1.0 / norm;
+            for x in o.iter_mut() {
+                *x *= inv;
+            }
+        }
+    }
+}

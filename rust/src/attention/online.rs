@@ -1,0 +1,492 @@
+//! Online-softmax primitives shared by every kernel: the paper's
+//! `partial_attn` (Eqn. 1) and `attn_reduce` (Eqn. 2), in the fused form
+//! used on CPU (§3.3: on CPU the reduction is cheap enough to run right
+//! after each partial, so no temporary `(O, m, n)^{(C)}` buffers are kept).
+//!
+//! State per (sequence, head) row: running max `m`, normaliser `n`, and the
+//! *unnormalised* output accumulator `o` (divide by `n` once at the end).
+
+/// Accumulator state for a set of rows: `m[r]`, `n[r]`, `o[r * d ..]`.
+pub struct OnlineState<'a> {
+    pub m: &'a mut [f32],
+    pub n: &'a mut [f32],
+    pub o: &'a mut [f32],
+    pub head_dim: usize,
+}
+
+impl<'a> OnlineState<'a> {
+    pub fn reset(&mut self) {
+        self.m.fill(f32::NEG_INFINITY);
+        self.n.fill(0.0);
+        self.o.fill(0.0);
+    }
+
+    /// Finalise: `o /= n` row-wise. Rows that saw no keys stay zero.
+    pub fn finish(&mut self) {
+        for (r, &n) in self.n.iter().enumerate() {
+            if n > 0.0 {
+                let inv = 1.0 / n;
+                for x in &mut self.o[r * self.head_dim..(r + 1) * self.head_dim] {
+                    *x *= inv;
+                }
+            }
+        }
+    }
+}
+
+/// Fused `partial_attn` + `attn_reduce` for a block of keys against a block
+/// of query rows (Eqns. 1 and 2 merged).
+///
+/// * `q`       — `[rows, d]` query rows (contiguous).
+/// * `k`, `v`  — `[len, d]` key/value rows of one chunk/page/tile.
+/// * `scale`   — `1/√d`.
+/// * `state`   — per-row accumulators; updated in place.
+/// * `w`       — scratch of at least `len` floats.
+///
+/// Numerics: the merged update is associative, so processing chunks in any
+/// order yields the same result as the two-phase schedule.
+#[inline]
+pub fn attend_block(
+    q: &[f32],
+    rows: usize,
+    d: usize,
+    k: &[f32],
+    v: &[f32],
+    len: usize,
+    scale: f32,
+    state: &mut OnlineState<'_>,
+    w: &mut [f32],
+) {
+    debug_assert!(q.len() >= rows * d);
+    debug_assert!(k.len() >= len * d && v.len() >= len * d);
+    debug_assert!(w.len() >= len);
+    debug_assert_eq!(state.head_dim, d);
+    // Register-blocked fast path: 4 query rows share each streamed K/V row
+    // (§Perf: cuts L1 K/V traffic 4× in the chunk-first phase — the CPU
+    // analogue of the paper's query-matrix tensor-core batching).
+    let mut r0 = 0;
+    while rows - r0 >= 4 {
+        attend_block_rows4(&q[r0 * d..], d, k, v, len, scale, state, r0, w);
+        r0 += 4;
+    }
+    for r in r0..rows {
+        let q_row = &q[r * d..(r + 1) * d];
+        // W^{(C)} = Q_{r,:} · K^{(C)T}, scaled.
+        let mut m_c = f32::NEG_INFINITY;
+        for t in 0..len {
+            let s = dot(q_row, &k[t * d..(t + 1) * d]) * scale;
+            w[t] = s;
+            if s > m_c {
+                m_c = s;
+            }
+        }
+        // E^{(C)} and n^{(C)}.
+        let mut n_c = 0.0f32;
+        for t in 0..len {
+            let e = fast_exp(w[t] - m_c);
+            w[t] = e;
+            n_c += e;
+        }
+        // attn_reduce (Eqn. 2): rescale accumulator and partial, then add.
+        let m_old = state.m[r];
+        let m_new = m_old.max(m_c);
+        let x = (m_c - m_new).exp(); // scales the new partial
+        let y = if m_old == f32::NEG_INFINITY { 0.0 } else { (m_old - m_new).exp() };
+        let o_row = &mut state.o[r * d..(r + 1) * d];
+        if y != 1.0 {
+            for o in o_row.iter_mut() {
+                *o *= y;
+            }
+        }
+        // O += x * E^{(C)} V^{(C)}.
+        for t in 0..len {
+            let e = w[t] * x;
+            if e != 0.0 {
+                axpy(e, &v[t * d..(t + 1) * d], o_row);
+            }
+        }
+        state.n[r] = state.n[r] * y + n_c * x;
+        state.m[r] = m_new;
+    }
+}
+
+/// Max chunk length the 4-row blocked path supports on its stack buffer.
+const BLOCK4_MAX_LEN: usize = 512;
+
+/// Process 4 query rows (`base_row..base_row+4` of the state) against one
+/// K/V block, streaming each K/V row once for all 4 queries.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn attend_block_rows4(
+    q: &[f32], // 4 rows, [4, d]
+    d: usize,
+    k: &[f32],
+    v: &[f32],
+    len: usize,
+    scale: f32,
+    state: &mut OnlineState<'_>,
+    base_row: usize,
+    w_fallback: &mut [f32],
+) {
+    if len > BLOCK4_MAX_LEN {
+        // Rare (chunk sizes are small); fall back to the scalar path.
+        for r in 0..4 {
+            attend_block(
+                &q[r * d..(r + 1) * d],
+                1,
+                d,
+                k,
+                v,
+                len,
+                scale,
+                &mut OnlineState {
+                    m: &mut state.m[base_row + r..base_row + r + 1],
+                    n: &mut state.n[base_row + r..base_row + r + 1],
+                    o: &mut state.o[(base_row + r) * d..(base_row + r + 1) * d],
+                    head_dim: d,
+                },
+                w_fallback,
+            );
+        }
+        return;
+    }
+    let mut w = [0.0f32; 4 * BLOCK4_MAX_LEN];
+    let (q0, q1, q2, q3) =
+        (&q[0..d], &q[d..2 * d], &q[2 * d..3 * d], &q[3 * d..4 * d]);
+    let mut m_c = [f32::NEG_INFINITY; 4];
+    for t in 0..len {
+        let k_t = &k[t * d..(t + 1) * d];
+        // One pass over k_t feeds all four dot products.
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for i in 0..d {
+            let kv = k_t[i];
+            s0 += q0[i] * kv;
+            s1 += q1[i] * kv;
+            s2 += q2[i] * kv;
+            s3 += q3[i] * kv;
+        }
+        let s = [s0 * scale, s1 * scale, s2 * scale, s3 * scale];
+        for r in 0..4 {
+            w[r * BLOCK4_MAX_LEN + t] = s[r];
+            if s[r] > m_c[r] {
+                m_c[r] = s[r];
+            }
+        }
+    }
+    // Per-row exp + normaliser.
+    let mut n_c = [0.0f32; 4];
+    for r in 0..4 {
+        let wr = &mut w[r * BLOCK4_MAX_LEN..r * BLOCK4_MAX_LEN + len];
+        let mut acc = 0.0f32;
+        for x in wr.iter_mut() {
+            *x = fast_exp(*x - m_c[r]);
+            acc += *x;
+        }
+        n_c[r] = acc;
+    }
+    // attn_reduce rescale of the accumulators, then one V pass for 4 rows.
+    let mut x_scale = [0.0f32; 4];
+    for r in 0..4 {
+        let row = base_row + r;
+        let m_old = state.m[row];
+        let m_new = m_old.max(m_c[r]);
+        let x = (m_c[r] - m_new).exp();
+        let y = if m_old == f32::NEG_INFINITY { 0.0 } else { (m_old - m_new).exp() };
+        if y != 1.0 {
+            for o in &mut state.o[row * d..(row + 1) * d] {
+                *o *= y;
+            }
+        }
+        state.n[row] = state.n[row] * y + n_c[r] * x;
+        state.m[row] = m_new;
+        x_scale[r] = x;
+    }
+    let o_base = base_row * d;
+    let o4 = &mut state.o[o_base..o_base + 4 * d];
+    for t in 0..len {
+        let v_t = &v[t * d..(t + 1) * d];
+        let e = [
+            w[t] * x_scale[0],
+            w[BLOCK4_MAX_LEN + t] * x_scale[1],
+            w[2 * BLOCK4_MAX_LEN + t] * x_scale[2],
+            w[3 * BLOCK4_MAX_LEN + t] * x_scale[3],
+        ];
+        for i in 0..d {
+            let vv = v_t[i];
+            o4[i] += e[0] * vv;
+            o4[d + i] += e[1] * vv;
+            o4[2 * d + i] += e[2] * vv;
+            o4[3 * d + i] += e[3] * vv;
+        }
+    }
+}
+
+/// Merge a fresh single key/value row (the token being decoded) into the
+/// accumulator — used by the L2 model path where the current token's K/V is
+/// produced in the same step and is not yet in the cache.
+#[inline]
+pub fn attend_fresh_row(
+    q_row: &[f32],
+    k_row: &[f32],
+    v_row: &[f32],
+    scale: f32,
+    m: &mut f32,
+    n: &mut f32,
+    o_row: &mut [f32],
+) {
+    let d = q_row.len();
+    let s = dot(q_row, k_row) * scale;
+    let m_new = m.max(s);
+    let x = (s - m_new).exp();
+    let y = if *m == f32::NEG_INFINITY { 0.0 } else { (*m - m_new).exp() };
+    if y != 1.0 {
+        for v in o_row.iter_mut() {
+            *v *= y;
+        }
+    }
+    axpy(x, &v_row[..d], o_row);
+    *n = *n * y + x;
+    *m = m_new;
+}
+
+/// Fast exp: 2^k · poly(r) decomposition (Cephes-style), ~2e-7 relative
+/// error over the softmax-relevant range. `exp()` dominated kernel profiles
+/// (§Perf iteration 3): one libm call per (row, token) — this inlines and
+/// vectorises instead.
+#[inline]
+pub fn fast_exp(x: f32) -> f32 {
+    const LOG2E: f32 = std::f32::consts::LOG2_E;
+    const LN2_HI: f32 = 0.693_359_4;
+    const LN2_LO: f32 = -2.121_944_4e-4;
+    // Softmax arguments are ≤ 0 after max-subtraction; anything below -87
+    // underflows to 0 in f32 anyway.
+    if x < -87.0 {
+        return 0.0;
+    }
+    if x > 88.0 {
+        return f32::INFINITY;
+    }
+    let k = (x * LOG2E).round();
+    let r = x - k * LN2_HI - k * LN2_LO;
+    // 5th-order minimax polynomial for e^r on [-ln2/2, ln2/2].
+    let p = 1.0
+        + r * (1.0
+            + r * (0.5
+                + r * (0.166_666_55 + r * (0.041_665_795 + r * (0.008_333_452 + r * 0.001_388_89)))));
+    // Scale by 2^k via exponent bits.
+    let bits = ((k as i32 + 127) as u32) << 23;
+    p * f32::from_bits(bits)
+}
+
+/// Dense dot product, 4-way unrolled so LLVM vectorises it.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y += alpha * x`, unrolled.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn softmax_attn_ref(q: &[f32], k: &[f32], v: &[f32], len: usize, d: usize) -> Vec<f32> {
+        // f64 dense reference for one row.
+        let scale = 1.0 / (d as f64).sqrt();
+        let w: Vec<f64> = (0..len)
+            .map(|t| {
+                (0..d).map(|i| q[i] as f64 * k[t * d + i] as f64).sum::<f64>() * scale
+            })
+            .collect();
+        let m = w.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let e: Vec<f64> = w.iter().map(|x| (x - m).exp()).collect();
+        let n: f64 = e.iter().sum();
+        (0..d)
+            .map(|i| (0..len).map(|t| e[t] * v[t * d + i] as f64).sum::<f64>() / n)
+            .map(|x| x as f32)
+            .collect()
+    }
+
+    fn rand_vec(seed: u64, n: usize) -> Vec<f32> {
+        let mut rng = crate::util::rng::Pcg64::seeded(seed);
+        let mut v = vec![0.0; n];
+        rng.fill_uniform_f32(&mut v, -2.0, 2.0);
+        v
+    }
+
+    #[test]
+    fn single_block_equals_dense_softmax() {
+        let (d, len) = (8, 16);
+        let q = rand_vec(1, d);
+        let k = rand_vec(2, len * d);
+        let v = rand_vec(3, len * d);
+        let scale = 1.0 / (d as f32).sqrt();
+        let (mut m, mut n, mut o) = (vec![0.0f32; 1], vec![0.0f32; 1], vec![0.0f32; d]);
+        let mut state = OnlineState { m: &mut m, n: &mut n, o: &mut o, head_dim: d };
+        state.reset();
+        let mut w = vec![0.0f32; len];
+        attend_block(&q, 1, d, &k, &v, len, scale, &mut state, &mut w);
+        state.finish();
+        let expect = softmax_attn_ref(&q, &k, &v, len, d);
+        for (g, e) in o.iter().zip(&expect) {
+            assert!((g - e).abs() < 1e-5, "{g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn split_blocks_match_single_block() {
+        // Associativity: processing [0..6) then [6..16) == one pass.
+        let (d, len) = (4, 16);
+        let q = rand_vec(4, d);
+        let k = rand_vec(5, len * d);
+        let v = rand_vec(6, len * d);
+        let scale = 1.0 / (d as f32).sqrt();
+        let run = |splits: &[usize]| {
+            let (mut m, mut n, mut o) = (vec![0.0f32; 1], vec![0.0f32; 1], vec![0.0f32; d]);
+            let mut state = OnlineState { m: &mut m, n: &mut n, o: &mut o, head_dim: d };
+            state.reset();
+            let mut w = vec![0.0f32; len];
+            let mut start = 0;
+            for &end in splits {
+                attend_block(
+                    &q,
+                    1,
+                    d,
+                    &k[start * d..end * d],
+                    &v[start * d..end * d],
+                    end - start,
+                    scale,
+                    &mut state,
+                    &mut w,
+                );
+                start = end;
+            }
+            state.finish();
+            o
+        };
+        let whole = run(&[16]);
+        let pieces = run(&[6, 16]);
+        let many = run(&[1, 2, 5, 9, 16]);
+        for i in 0..d {
+            assert!((whole[i] - pieces[i]).abs() < 1e-5);
+            assert!((whole[i] - many[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn block_order_is_irrelevant() {
+        let (d, len) = (4, 8);
+        let q = rand_vec(7, d);
+        let k = rand_vec(8, len * d);
+        let v = rand_vec(9, len * d);
+        let scale = 1.0 / (d as f32).sqrt();
+        let run = |order: &[(usize, usize)]| {
+            let (mut m, mut n, mut o) = (vec![0.0f32; 1], vec![0.0f32; 1], vec![0.0f32; d]);
+            let mut state = OnlineState { m: &mut m, n: &mut n, o: &mut o, head_dim: d };
+            state.reset();
+            let mut w = vec![0.0f32; len];
+            for &(s, e) in order {
+                attend_block(&q, 1, d, &k[s * d..e * d], &v[s * d..e * d], e - s, scale, &mut state, &mut w);
+            }
+            state.finish();
+            o
+        };
+        let fwd = run(&[(0, 4), (4, 8)]);
+        let rev = run(&[(4, 8), (0, 4)]);
+        for i in 0..d {
+            assert!((fwd[i] - rev[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn multi_row_block_matches_per_row() {
+        let (d, len, rows) = (8, 8, 3);
+        let q = rand_vec(10, rows * d);
+        let k = rand_vec(11, len * d);
+        let v = rand_vec(12, len * d);
+        let scale = 1.0 / (d as f32).sqrt();
+        let (mut m, mut n, mut o) = (vec![0.0f32; rows], vec![0.0f32; rows], vec![0.0f32; rows * d]);
+        let mut state = OnlineState { m: &mut m, n: &mut n, o: &mut o, head_dim: d };
+        state.reset();
+        let mut w = vec![0.0f32; len];
+        attend_block(&q, rows, d, &k, &v, len, scale, &mut state, &mut w);
+        state.finish();
+        for r in 0..rows {
+            let expect = softmax_attn_ref(&q[r * d..(r + 1) * d], &k, &v, len, d);
+            for i in 0..d {
+                assert!((o[r * d + i] - expect[i]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn fresh_row_merge_equals_inclusion() {
+        // Attending chunk + fresh row == attending (chunk ∪ row) at once.
+        let (d, len) = (4, 5);
+        let q = rand_vec(13, d);
+        let k = rand_vec(14, (len + 1) * d);
+        let v = rand_vec(15, (len + 1) * d);
+        let scale = 1.0 / (d as f32).sqrt();
+
+        let expect = softmax_attn_ref(&q, &k, &v, len + 1, d);
+
+        let (mut m, mut n, mut o) = (vec![0.0f32; 1], vec![0.0f32; 1], vec![0.0f32; d]);
+        let mut state = OnlineState { m: &mut m, n: &mut n, o: &mut o, head_dim: d };
+        state.reset();
+        let mut w = vec![0.0f32; len];
+        attend_block(&q, 1, d, &k[..len * d], &v[..len * d], len, scale, &mut state, &mut w);
+        attend_fresh_row(
+            &q,
+            &k[len * d..],
+            &v[len * d..],
+            scale,
+            &mut state.m[0],
+            &mut state.n[0],
+            &mut state.o[..d],
+        );
+        state.finish();
+        for i in 0..d {
+            assert!((o[i] - expect[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn extreme_logits_stay_finite() {
+        let d = 4;
+        let q = vec![100.0f32; d];
+        let k = vec![100.0f32; 2 * d];
+        let v = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let scale = 1.0;
+        let (mut m, mut n, mut o) = (vec![0.0f32; 1], vec![0.0f32; 1], vec![0.0f32; d]);
+        let mut state = OnlineState { m: &mut m, n: &mut n, o: &mut o, head_dim: d };
+        state.reset();
+        let mut w = vec![0.0f32; 2];
+        attend_block(&q, 1, d, &k, &v, 2, scale, &mut state, &mut w);
+        state.finish();
+        assert!(o.iter().all(|x| x.is_finite()));
+        // Equal logits → average of the two value rows.
+        assert!((o[0] - 3.0).abs() < 1e-4);
+    }
+}

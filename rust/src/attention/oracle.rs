@@ -1,0 +1,73 @@
+//! f64 dense reference attention over the prefix tree — the correctness
+//! oracle every production kernel is tested against.
+
+use super::Queries;
+use crate::kvcache::{PrefixTree, TreeContext};
+
+/// Dense softmax attention computed in f64 from gathered per-sequence KV.
+/// Output layout `[heads, batch, head_dim]`, rows in `ctx.seq_order`.
+pub fn oracle_attention(tree: &PrefixTree, ctx: &TreeContext, q: &Queries) -> Vec<f32> {
+    let shape = tree.shape();
+    assert_eq!(q.heads, shape.heads);
+    assert_eq!(q.head_dim, shape.head_dim);
+    assert_eq!(q.batch, ctx.seq_order.len());
+    let d = shape.head_dim;
+    let scale = 1.0 / (d as f64).sqrt();
+    let mut out = vec![0.0f32; q.heads * q.batch * d];
+    for (row, &seq) in ctx.seq_order.iter().enumerate() {
+        let (k, v, tokens) = tree.gather_dense(seq).expect("sequence in context");
+        let n = tokens.len();
+        for h in 0..q.heads {
+            let q_row = q.row(h, row);
+            let k_head = &k[h * n * d..(h + 1) * n * d];
+            let v_head = &v[h * n * d..(h + 1) * n * d];
+            let mut w: Vec<f64> = (0..n)
+                .map(|t| {
+                    (0..d)
+                        .map(|i| q_row[i] as f64 * k_head[t * d + i] as f64)
+                        .sum::<f64>()
+                        * scale
+                })
+                .collect();
+            let m = w.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let mut norm = 0.0;
+            for x in w.iter_mut() {
+                *x = (*x - m).exp();
+                norm += *x;
+            }
+            let base = (h * q.batch + row) * d;
+            for i in 0..d {
+                let acc: f64 = (0..n).map(|t| w[t] * v_head[t * d + i] as f64).sum();
+                out[base + i] = (acc / norm) as f32;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::{KvShape, PrefixTree, SeqId};
+
+    #[test]
+    fn oracle_uniform_values_returns_value_mean() {
+        // With identical K rows, softmax weights are uniform and the output
+        // is the mean of V rows.
+        let shape = KvShape::new(1, 4, 4);
+        let mut tree = PrefixTree::new(shape);
+        let mut pos_counter = 0usize;
+        tree.insert_sequence(SeqId(0), &[1, 2, 3], &mut |_, _, k: &mut [f32], v: &mut [f32]| {
+            k.fill(1.0);
+            v.fill(pos_counter as f32);
+            pos_counter += 1;
+        });
+        let ctx = tree.context();
+        let qdata = vec![1.0f32; 4];
+        let q = Queries::new(&qdata, 1, 1, 4);
+        let out = oracle_attention(&tree, &ctx, &q);
+        for x in &out {
+            assert!((x - 1.0).abs() < 1e-6, "mean of 0,1,2 is 1, got {x}");
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! PagedAttention-style decode kernel (Kwon et al., 2023): per sequence,
+//! per head, walk the page table and attend page by page with online
+//! softmax. Used for both Table 3 baselines:
+//!
+//! - **PagedAttn**: sequences inserted with private pages — the same bytes
+//!   are stored (and streamed) once per sequence.
+//! - **PagedAttn\***: page tables alias shared physical pages (built via
+//!   [`PagedKvCache::insert_sequence_shared`]) — the kernel is unchanged but
+//!   repeated reads of the same physical page hit the hardware cache, which
+//!   is precisely the effect the paper isolates with this baseline.
+
+use super::online::{attend_block, OnlineState};
+use super::{out_row, Queries};
+use crate::kvcache::{PagedKvCache, SeqId};
+
+/// Output layout `[heads, batch, head_dim]`, rows in `order`.
+pub fn paged_attention(cache: &PagedKvCache, order: &[SeqId], q: &Queries, out: &mut [f32]) {
+    let shape = cache.shape();
+    assert_eq!(q.heads, shape.heads);
+    assert_eq!(q.head_dim, shape.head_dim);
+    assert_eq!(q.batch, order.len());
+    let d = shape.head_dim;
+    let page = cache.page_size();
+    let scale = q.scale();
+    let mut w = vec![0.0f32; page];
+    let (mut m1, mut n1) = ([0.0f32; 1], [0.0f32; 1]);
+    for h in 0..q.heads {
+        for (row, &seq) in order.iter().enumerate() {
+            let n = cache.seq_len(seq).expect("sequence in cache");
+            let table = cache.page_table(seq).expect("sequence in cache");
+            let o = out_row(out, q.heads, q.batch, d, h, row);
+            let mut state = OnlineState { m: &mut m1, n: &mut n1, o, head_dim: d };
+            state.reset();
+            for (pi, &pid) in table.iter().enumerate() {
+                let start = pi * page;
+                let len = page.min(n - start);
+                let k = cache.page_k_head(pid, h);
+                let v = cache.page_v_head(pid, h);
+                attend_block(q.row(h, row), 1, d, k, v, len, scale, &mut state, &mut w);
+            }
+            state.finish();
+        }
+    }
+}

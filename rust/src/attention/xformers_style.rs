@@ -1,0 +1,56 @@
+//! Memory-efficient attention over the monolithic cache, in the style of
+//! xformers' `memory_efficient_attention` (Lefaudeux et al., 2022): the key
+//! sequence is processed in blocks with online softmax so no full weight
+//! vector is materialised. Still per-sequence and prefix-agnostic.
+
+use super::online::{attend_block, OnlineState};
+use super::{out_row, Queries};
+use crate::kvcache::{MonolithicKvCache, SeqId};
+
+/// Output layout `[heads, batch, head_dim]`, rows in `order`.
+/// `block` is the KV tile length (xformers uses 32/64 key blocks).
+pub fn xformers_style_attention(
+    cache: &MonolithicKvCache,
+    order: &[SeqId],
+    q: &Queries,
+    block: usize,
+    out: &mut [f32],
+) {
+    assert!(block > 0);
+    let shape = cache.shape();
+    assert_eq!(q.heads, shape.heads);
+    assert_eq!(q.head_dim, shape.head_dim);
+    assert_eq!(q.batch, order.len());
+    let d = shape.head_dim;
+    let scale = q.scale();
+    let mut w = vec![0.0f32; block];
+    let (mut m1, mut n1) = ([0.0f32; 1], [0.0f32; 1]);
+    for h in 0..q.heads {
+        for (row, &seq) in order.iter().enumerate() {
+            let s = cache.get(seq).expect("sequence in cache");
+            let n = s.len;
+            let k = s.k_head(&shape, h);
+            let v = s.v_head(&shape, h);
+            let o = out_row(out, q.heads, q.batch, d, h, row);
+            let mut state = OnlineState { m: &mut m1, n: &mut n1, o, head_dim: d };
+            state.reset();
+            let mut t = 0;
+            while t < n {
+                let len = block.min(n - t);
+                attend_block(
+                    q.row(h, row),
+                    1,
+                    d,
+                    &k[t * d..(t + len) * d],
+                    &v[t * d..(t + len) * d],
+                    len,
+                    scale,
+                    &mut state,
+                    &mut w,
+                );
+                t += len;
+            }
+            state.finish();
+        }
+    }
+}

@@ -1,0 +1,565 @@
+//! The real serving engine ("ChunkLlama" §4.2): continuous batching over a
+//! prefix-tree KV cache, with the transformer forward pass delegated to a
+//! [`ModelRunner`] — either the PJRT-compiled JAX model (L2/L1 artifacts,
+//! see `runtime::PjrtModel`) or an in-process synthetic runner for tests.
+//!
+//! Per iteration the engine:
+//! 1. admits queued requests (continuous batching), running a *prefix
+//!    lookup* so only the unmatched prompt suffix is prefilled (§3.2);
+//! 2. runs one batched decode step through the runner (which performs the
+//!    TPP attention over the tree's chunks);
+//! 3. appends each sequence's fresh K/V rows to the tree and retires
+//!    completed sequences (their private chunks return to the pool).
+
+use super::scheduler::{FinishedSeq, Scheduler};
+use crate::kvcache::{KvShape, PrefixRetainer, PrefixTree, SeqId, TreeContext, PIN_ID_BASE};
+use crate::metrics::{MetricsRecorder, RequestRecord};
+use crate::workload::Request;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Result of prefilling a prompt suffix.
+pub struct PrefillOutput {
+    /// K rows for each suffix position: `[suffix_len][heads_total * head_dim]`.
+    pub k_rows: Vec<Vec<f32>>,
+    pub v_rows: Vec<Vec<f32>>,
+    /// First generated token (greedy from the last-position logits).
+    pub next_token: u32,
+}
+
+/// Result of one batched decode step, rows in `ctx.seq_order`.
+pub struct DecodeOutput {
+    /// Next token per sequence.
+    pub next_tokens: Vec<u32>,
+    /// K/V rows of the *input* token per sequence (to append to the tree).
+    pub k_rows: Vec<Vec<f32>>,
+    pub v_rows: Vec<Vec<f32>>,
+}
+
+/// The model forward pass, abstracted so the engine is runner-agnostic.
+pub trait ModelRunner {
+    /// Total KV heads stored per token: `n_layers * heads` (layers are
+    /// stacked along the head axis of the tree's chunks).
+    fn heads_total(&self) -> usize;
+    fn head_dim(&self) -> usize;
+
+    /// Prefill `suffix_tokens` (prompt positions `pos_offset..`), given the
+    /// dense KV of the matched prefix (`[heads_total, prefix_len, head_dim]`).
+    fn prefill(
+        &mut self,
+        suffix_tokens: &[u32],
+        pos_offset: usize,
+        prefix_k: &[f32],
+        prefix_v: &[f32],
+        prefix_len: usize,
+    ) -> anyhow::Result<PrefillOutput>;
+
+    /// One decode step: `last_tokens[i]`/`positions[i]` belong to
+    /// `ctx.seq_order[i]`; attention context comes from the tree chunks.
+    fn decode(
+        &mut self,
+        tree: &PrefixTree,
+        ctx: &TreeContext,
+        last_tokens: &[u32],
+        positions: &[usize],
+    ) -> anyhow::Result<DecodeOutput>;
+}
+
+#[derive(Debug, Clone)]
+struct SeqState {
+    last_token: u32,
+    /// Tokens already in the tree for this sequence (== next position).
+    position: usize,
+    completion: Vec<u32>,
+}
+
+/// Engine statistics (cumulative).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineStats {
+    pub prefill_tokens_computed: u64,
+    pub prefill_tokens_reused: u64,
+    pub decode_steps: u64,
+    pub decoded_tokens: u64,
+    pub prefill_time_s: f64,
+    pub decode_time_s: f64,
+}
+
+/// The continuous-batching serving engine over PAKV.
+pub struct Engine<R: ModelRunner> {
+    tree: PrefixTree,
+    runner: R,
+    sched: Scheduler,
+    states: BTreeMap<u64, SeqState>,
+    stats: EngineStats,
+    started: Instant,
+    /// Optional LRU retention of hot tenants' shared prefixes (see
+    /// `kvcache::retain`): prefixes stay warm across idle periods.
+    retainer: Option<PrefixRetainer>,
+    metrics: MetricsRecorder,
+    /// (admitted_at, first_token_at, reused_tokens) per live request.
+    timing: BTreeMap<u64, (f64, f64, usize)>,
+}
+
+impl<R: ModelRunner> Engine<R> {
+    pub fn new(runner: R, chunk_size: usize, max_batch: usize) -> Self {
+        let shape = KvShape::new(runner.heads_total(), runner.head_dim(), chunk_size);
+        Engine {
+            tree: PrefixTree::new(shape),
+            runner,
+            sched: Scheduler::new(max_batch),
+            states: BTreeMap::new(),
+            stats: EngineStats::default(),
+            started: Instant::now(),
+            retainer: None,
+            metrics: MetricsRecorder::new(),
+            timing: BTreeMap::new(),
+        }
+    }
+
+    /// Aggregated serving metrics (exposition format via
+    /// `metrics::render_exposition`).
+    pub fn metrics(&self) -> &MetricsRecorder {
+        &self.metrics
+    }
+
+    /// Keep hot shared prefixes resident across idle periods, bounded by a
+    /// chunk budget with LRU eviction.
+    pub fn enable_prefix_retention(&mut self, budget_chunks: usize) {
+        self.retainer = Some(PrefixRetainer::new(budget_chunks));
+    }
+
+    pub fn submit(&mut self, request: Request) {
+        assert!(request.id < PIN_ID_BASE, "request ids must stay below the pin range");
+        self.sched.submit(request);
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.sched.is_idle()
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats
+    }
+
+    pub fn tree(&self) -> &PrefixTree {
+        &self.tree
+    }
+
+    pub fn scheduler(&self) -> &Scheduler {
+        &self.sched
+    }
+
+    fn now(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Run one engine iteration (admission + prefills + one decode step).
+    /// Returns sequences that finished this iteration.
+    pub fn step(&mut self) -> anyhow::Result<Vec<FinishedSeq>> {
+        let mut finished_early = Vec::new();
+        // Admission + prefill with prefix lookup.
+        let admitted = self.sched.admit(self.now());
+        for seq in admitted {
+            let req = &seq.request;
+            let t0 = Instant::now();
+            let matched = self.tree.match_prefix(&req.prompt);
+            // Never match the entire prompt: the model still needs at least
+            // the last position's logits to start decoding.
+            let matched = matched.min(req.prompt.len() - 1);
+            let (pk, pv) = self.gather_matched_prefix(&req.prompt, matched);
+            let out = self.runner.prefill(&req.prompt[matched..], matched, &pk, &pv, matched)?;
+            anyhow::ensure!(
+                out.k_rows.len() == req.prompt.len() - matched,
+                "prefill returned {} rows for {} suffix tokens",
+                out.k_rows.len(),
+                req.prompt.len() - matched
+            );
+            let mut idx = 0usize;
+            self.tree.insert_sequence(SeqId(req.id), &req.prompt, &mut |pos, _tok, k, v| {
+                // Called only for unmatched positions, in order.
+                debug_assert!(pos >= matched);
+                k.copy_from_slice(&out.k_rows[idx]);
+                v.copy_from_slice(&out.v_rows[idx]);
+                idx = pos - matched + 1;
+            });
+            self.states.insert(
+                req.id,
+                SeqState {
+                    last_token: out.next_token,
+                    position: req.prompt.len(),
+                    completion: vec![out.next_token],
+                },
+            );
+            if let Some(retainer) = &mut self.retainer {
+                let shared = req.shared_tokens.min(req.prompt.len());
+                retainer.touch(&req.prompt);
+                if shared > 0 {
+                    let prefix = req.prompt[..shared].to_vec();
+                    retainer.pin(&mut self.tree, &prefix);
+                }
+            }
+            self.stats.prefill_tokens_computed += (req.prompt.len() - matched) as u64;
+            self.stats.prefill_tokens_reused += matched as u64;
+            self.stats.prefill_time_s += t0.elapsed().as_secs_f64();
+            self.timing.insert(req.id, (seq.admitted_at, self.now(), matched));
+            // The prefill step emitted the first completion token.
+            let id = req.id;
+            self.sched.credit_tokens(id, 1);
+        }
+        // Requests whose budget is a single token finish at prefill.
+        for f in self.sched.retire_finished(self.now()) {
+            self.tree.remove_sequence(SeqId(f.request.id));
+            self.record_finished(&f);
+            finished_early.push(f);
+        }
+
+        if self.sched.batch_size() == 0 {
+            return Ok(finished_early);
+        }
+
+        // One batched decode step. Pin sequences (prefix retention) are
+        // phantom rows: they get dummy queries and their outputs are
+        // discarded — they exist only to keep shared chunks referenced.
+        let t0 = Instant::now();
+        let ctx = self.tree.context();
+        let (mut last_tokens, mut positions) = (Vec::new(), Vec::new());
+        for sid in &ctx.seq_order {
+            match self.states.get(&sid.0) {
+                Some(st) => {
+                    last_tokens.push(st.last_token);
+                    positions.push(st.position);
+                }
+                None => {
+                    debug_assert!(sid.0 >= PIN_ID_BASE, "unknown non-pin sequence {sid:?}");
+                    last_tokens.push(0);
+                    positions.push(0);
+                }
+            }
+        }
+        let out = self.runner.decode(&self.tree, &ctx, &last_tokens, &positions)?;
+        for (i, sid) in ctx.seq_order.iter().enumerate() {
+            let Some(st) = self.states.get_mut(&sid.0) else { continue };
+            self.tree.append_token(*sid, last_tokens[i], &out.k_rows[i], &out.v_rows[i]);
+            st.position += 1;
+            st.last_token = out.next_tokens[i];
+            st.completion.push(out.next_tokens[i]);
+        }
+        self.stats.decode_steps += 1;
+        self.stats.decoded_tokens += self.sched.batch_size() as u64;
+        self.stats.decode_time_s += t0.elapsed().as_secs_f64();
+        self.metrics.record_decode_step(
+            t0.elapsed().as_secs_f64() * 1e6,
+            self.sched.batch_size(),
+        );
+
+        // Retire completed sequences.
+        let finished = self.sched.step_decode(self.now());
+        for f in &finished {
+            self.tree.remove_sequence(SeqId(f.request.id));
+            self.record_finished(f);
+        }
+        if let Some(retainer) = &mut self.retainer {
+            retainer.enforce_budget(&mut self.tree);
+        }
+        finished_early.extend(finished);
+        Ok(finished_early)
+    }
+
+    fn record_finished(&mut self, f: &FinishedSeq) {
+        let (admitted, first_token, reused) =
+            self.timing.remove(&f.request.id).unwrap_or((f.admitted_at, f.admitted_at, 0));
+        self.metrics.record_request(RequestRecord {
+            arrival_s: f.request.arrival_s,
+            admitted_s: admitted,
+            first_token_s: first_token,
+            finished_s: f.finished_at,
+            prompt_tokens: f.request.prompt.len(),
+            completion_tokens: f.request.max_new_tokens,
+            reused_prompt_tokens: reused,
+        });
+    }
+
+    /// Completion tokens generated so far for a (possibly finished) request.
+    pub fn completion_of(&self, id: u64) -> Option<&[u32]> {
+        self.states.get(&id).map(|s| s.completion.as_slice())
+    }
+
+    /// Run until all submitted requests finish; returns them.
+    pub fn run_to_completion(&mut self) -> anyhow::Result<Vec<FinishedSeq>> {
+        let mut all = Vec::new();
+        while !self.sched.is_idle() {
+            all.extend(self.step()?);
+        }
+        Ok(all)
+    }
+
+    /// Dense `[heads_total, matched, head_dim]` K/V of an existing prefix.
+    fn gather_matched_prefix(&self, tokens: &[u32], matched: usize) -> (Vec<f32>, Vec<f32>) {
+        let shape = self.tree.shape();
+        let d = shape.head_dim;
+        let mut k = vec![0.0f32; shape.heads * matched * d];
+        let mut v = vec![0.0f32; shape.heads * matched * d];
+        if matched == 0 {
+            return (k, v);
+        }
+        // Walk matching chunks from the roots, copying rows.
+        let probe = &tokens[..matched];
+        let mut pos = 0usize;
+        while pos < matched {
+            let (usable, ck, cv) =
+                self.tree.find_chunk_at(probe, pos).expect("matched prefix must be present");
+            let take = usable.min(matched - pos);
+            for h in 0..shape.heads {
+                for p in 0..take {
+                    let src = (h * shape.chunk_size + p) * d;
+                    let dst = (h * matched + pos + p) * d;
+                    k[dst..dst + d].copy_from_slice(&ck[src..src + d]);
+                    v[dst..dst + d].copy_from_slice(&cv[src..src + d]);
+                }
+            }
+            pos += take;
+        }
+        (k, v)
+    }
+}
+
+pub mod testing {
+    use super::*;
+
+    /// Deterministic in-process model: KV rows and next tokens are hashes
+    /// of (token, position). Exercises the engine's tree/scheduler logic
+    /// without artifacts; the PJRT runner is tested in `rust/tests/`.
+    pub struct SyntheticRunner {
+        pub heads_total: usize,
+        pub head_dim: usize,
+        pub vocab: u32,
+    }
+
+    impl SyntheticRunner {
+        pub fn kv_row(&self, token: u32, pos: usize, which: u8) -> Vec<f32> {
+            let n = self.heads_total * self.head_dim;
+            let mut s = (token as u64) << 20 | (pos as u64) << 2 | which as u64;
+            (0..n)
+                .map(|_| {
+                    s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    ((s >> 40) as f32 / (1u32 << 24) as f32) - 0.5
+                })
+                .collect()
+        }
+
+        fn next_token(&self, last: u32, pos: usize) -> u32 {
+            (last.wrapping_mul(2654435761).wrapping_add(pos as u32)) % self.vocab
+        }
+    }
+
+    impl ModelRunner for SyntheticRunner {
+        fn heads_total(&self) -> usize {
+            self.heads_total
+        }
+        fn head_dim(&self) -> usize {
+            self.head_dim
+        }
+
+        fn prefill(
+            &mut self,
+            suffix_tokens: &[u32],
+            pos_offset: usize,
+            _pk: &[f32],
+            _pv: &[f32],
+            _prefix_len: usize,
+        ) -> anyhow::Result<PrefillOutput> {
+            let k_rows = suffix_tokens
+                .iter()
+                .enumerate()
+                .map(|(i, &t)| self.kv_row(t, pos_offset + i, 0))
+                .collect();
+            let v_rows = suffix_tokens
+                .iter()
+                .enumerate()
+                .map(|(i, &t)| self.kv_row(t, pos_offset + i, 1))
+                .collect();
+            let last = *suffix_tokens.last().unwrap();
+            Ok(PrefillOutput {
+                k_rows,
+                v_rows,
+                next_token: self.next_token(last, pos_offset + suffix_tokens.len()),
+            })
+        }
+
+        fn decode(
+            &mut self,
+            _tree: &PrefixTree,
+            ctx: &TreeContext,
+            last_tokens: &[u32],
+            positions: &[usize],
+        ) -> anyhow::Result<DecodeOutput> {
+            let b = ctx.seq_order.len();
+            let mut out = DecodeOutput {
+                next_tokens: Vec::with_capacity(b),
+                k_rows: Vec::with_capacity(b),
+                v_rows: Vec::with_capacity(b),
+            };
+            for i in 0..b {
+                out.k_rows.push(self.kv_row(last_tokens[i], positions[i], 0));
+                out.v_rows.push(self.kv_row(last_tokens[i], positions[i], 1));
+                out.next_tokens.push(self.next_token(last_tokens[i], positions[i] + 1));
+            }
+            Ok(out)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testing::SyntheticRunner;
+    use super::*;
+
+    fn request(id: u64, prompt: Vec<u32>, completion: usize) -> Request {
+        Request {
+            id,
+            arrival_s: 0.0,
+            tenant: 0,
+            prompt,
+            shared_tokens: 0,
+            max_new_tokens: completion,
+        }
+    }
+
+    fn engine() -> Engine<SyntheticRunner> {
+        Engine::new(SyntheticRunner { heads_total: 4, head_dim: 8, vocab: 101 }, 4, 4)
+    }
+
+    #[test]
+    fn single_request_completes() {
+        let mut e = engine();
+        e.submit(request(0, (0..10).collect(), 5));
+        let done = e.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(e.completion_of(0).unwrap().len(), 5);
+        assert_eq!(e.tree().num_sequences(), 0, "tree cleaned up");
+        assert_eq!(e.tree().pool().in_use(), 0);
+    }
+
+    #[test]
+    fn prefix_lookup_skips_recompute() {
+        let mut e = engine();
+        let sys: Vec<u32> = (0..16).collect();
+        let mut p1 = sys.clone();
+        p1.extend([100, 101]);
+        let mut p2 = sys.clone();
+        p2.extend([200, 201]);
+        e.submit(request(0, p1, 3));
+        e.submit(request(1, p2, 3));
+        e.run_to_completion().unwrap();
+        let stats = e.stats();
+        assert_eq!(stats.prefill_tokens_reused, 16, "second request reuses the system prompt");
+        assert_eq!(stats.prefill_tokens_computed, 18 + 2);
+    }
+
+    #[test]
+    fn identical_prompts_reuse_all_but_last() {
+        let mut e = engine();
+        let p: Vec<u32> = (0..12).collect();
+        e.submit(request(0, p.clone(), 2));
+        e.submit(request(1, p, 2));
+        e.run_to_completion().unwrap();
+        // Second prefill recomputes only the final position (needed for
+        // logits).
+        assert_eq!(e.stats().prefill_tokens_reused, 11);
+    }
+
+    #[test]
+    fn deterministic_completions_independent_of_batching() {
+        // The same request must decode the same tokens whether it runs
+        // alone or batched with others (synthetic runner is per-sequence
+        // deterministic).
+        let mut solo = engine();
+        solo.submit(request(0, vec![5, 6, 7, 8], 6));
+        solo.run_to_completion().unwrap();
+        let expect = solo.completion_of(0).unwrap().to_vec();
+
+        let mut batched = engine();
+        batched.submit(request(0, vec![5, 6, 7, 8], 6));
+        batched.submit(request(1, vec![5, 6, 9, 9], 6));
+        batched.submit(request(2, vec![1, 2, 3, 4, 5], 6));
+        batched.run_to_completion().unwrap();
+        assert_eq!(batched.completion_of(0).unwrap(), expect.as_slice());
+    }
+
+    #[test]
+    fn continuous_batching_admits_when_slot_frees() {
+        let mut e = Engine::new(SyntheticRunner { heads_total: 2, head_dim: 4, vocab: 11 }, 4, 2);
+        e.submit(request(0, vec![1, 2, 3], 2));
+        e.submit(request(1, vec![1, 2, 4], 8));
+        e.submit(request(2, vec![9, 9, 9], 2));
+        let done = e.run_to_completion().unwrap();
+        assert_eq!(done.len(), 3);
+        assert_eq!(e.scheduler().peak_batch(), 2);
+    }
+
+    #[test]
+    fn prefix_retention_survives_idle_periods() {
+        let mut e = engine();
+        e.enable_prefix_retention(1000);
+        let sys: Vec<u32> = (0..16).collect();
+        let mut p1 = sys.clone();
+        p1.extend([100, 101]);
+        e.submit(Request { shared_tokens: 16, ..request(0, p1, 2) });
+        e.run_to_completion().unwrap();
+        // All sequences gone, but the pinned system prompt stayed warm.
+        assert!(e.tree().pool().in_use() > 0, "prefix retained");
+        let mut p2 = sys.clone();
+        p2.extend([200, 201]);
+        e.submit(Request { shared_tokens: 16, ..request(1, p2, 2) });
+        e.run_to_completion().unwrap();
+        assert_eq!(
+            e.stats().prefill_tokens_reused,
+            16,
+            "second request hits the retained prefix across the idle gap"
+        );
+    }
+
+    #[test]
+    fn retention_budget_bounds_memory() {
+        let mut e = engine();
+        e.enable_prefix_retention(4); // 4 chunks of 4 tokens
+        for tenant in 0..5u64 {
+            let sys: Vec<u32> = (0..16).map(|i| tenant as u32 * 1000 + i).collect();
+            e.submit(Request { shared_tokens: 16, ..request(tenant, sys, 1) });
+            e.run_to_completion().unwrap();
+        }
+        assert!(e.tree().pool().in_use() <= 5, "LRU eviction keeps the pool bounded");
+        e.tree().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn metrics_recorder_tracks_requests_and_steps() {
+        let mut e = engine();
+        let sys: Vec<u32> = (0..12).collect();
+        let mut p2 = sys.clone();
+        p2.push(99);
+        e.submit(request(0, sys, 3));
+        e.submit(request(1, p2, 3));
+        e.run_to_completion().unwrap();
+        let m = e.metrics();
+        assert_eq!(m.requests().len(), 2);
+        assert!(m.decode_tokens >= 4);
+        assert!(m.prefix_hit_rate() > 0.3, "second prompt reused the first's prefix");
+        let text = crate::metrics::render_exposition(m, "t");
+        assert!(text.contains("t_requests_total 2"));
+    }
+
+    #[test]
+    fn tree_grows_and_shrinks_with_load() {
+        let mut e = engine();
+        for i in 0..6 {
+            let mut p: Vec<u32> = (0..20).collect(); // shared system prompt
+            p.push(100 + i as u32);
+            e.submit(request(i, p, 4));
+        }
+        e.run_to_completion().unwrap();
+        assert_eq!(e.tree().pool().in_use(), 0);
+        assert!(e.tree().pool().allocated() > 0, "pool retains capacity");
+        e.tree().check_invariants().err().map(|e| panic!("{e}"));
+    }
+}

@@ -1,0 +1,387 @@
+//! Microkernel benchmark harness — builds the paper's §4.1 workload
+//! ("sequences processed in batch mode ... each prefilled with n_p prompt
+//! tokens, the leading n_s shared") against any of the six kernels, and
+//! measures real decode steps on this host's memory hierarchy.
+//!
+//! Used by `benches/table3_microkernel.rs`, `fig3_completion_sweep.rs`,
+//! `fig4_batch_sweep.rs` and the ablation bench.
+
+use crate::attention::{
+    flash_style_attention, naive_attention, paged_attention, tpp_attention,
+    tpp_attention_buffered, tpp_attention_seq_only, xformers_style_attention, Queries, TppScratch,
+};
+use crate::kvcache::{KvShape, MonolithicKvCache, PagedKvCache, PrefixTree, SeqId};
+use crate::perf_model::AttentionImpl;
+use crate::util::rng::Pcg64;
+use crate::util::threadpool::ThreadPool;
+
+/// §4.1 workload parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct MicroConfig {
+    pub batch: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub chunk_size: usize,
+    /// Prompt tokens per sequence (n_p).
+    pub prompt_tokens: usize,
+    /// Leading tokens shared across the batch (n_s ≤ n_p).
+    pub shared_tokens: usize,
+    /// Decode headroom reserved in the monolithic layout.
+    pub max_new_tokens: usize,
+    pub seed: u64,
+}
+
+impl MicroConfig {
+    /// The paper's kernel defaults: h=32, d=128, c=64 (§4.1), scaled down
+    /// in quick mode by the benches.
+    pub fn paper(batch: usize, prompt: usize, shared: usize) -> Self {
+        MicroConfig {
+            batch,
+            heads: 32,
+            head_dim: 128,
+            chunk_size: 64,
+            prompt_tokens: prompt,
+            shared_tokens: shared,
+            max_new_tokens: 2048,
+            seed: 42,
+        }
+    }
+
+    pub fn shape(&self) -> KvShape {
+        KvShape::new(self.heads, self.head_dim, self.chunk_size)
+    }
+
+    /// Prompt tokens of sequence `i`: `shared` leading tokens common to the
+    /// batch, the remainder unique per sequence.
+    pub fn prompt_of(&self, i: usize) -> Vec<u32> {
+        assert!(self.shared_tokens <= self.prompt_tokens);
+        let mut p: Vec<u32> = (0..self.shared_tokens as u32).collect();
+        p.extend(
+            (0..(self.prompt_tokens - self.shared_tokens) as u32)
+                .map(|j| 1_000_000 + i as u32 * 100_000 + j),
+        );
+        p
+    }
+}
+
+/// Cheap deterministic KV fill (identical across cache layouts).
+fn kv_fill(seed: u64) -> impl FnMut(usize, u32, &mut [f32], &mut [f32]) {
+    move |pos, token, k: &mut [f32], v: &mut [f32]| {
+        // One LCG stream per (pos, token); ~2 ops per element.
+        let mut s = seed ^ (pos as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ (token as u64) << 1;
+        let mut next = || {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((s >> 40) as f32 / (1u32 << 24) as f32) - 0.5
+        };
+        for x in k.iter_mut() {
+            *x = next();
+        }
+        for x in v.iter_mut() {
+            *x = next();
+        }
+    }
+}
+
+enum CacheState {
+    Tree(Box<PrefixTree>),
+    Mono(Box<MonolithicKvCache>),
+    Paged(Box<PagedKvCache>),
+}
+
+/// One kernel + its cache, ready to run decode steps.
+pub struct KernelBench {
+    pub kind: AttentionImpl,
+    cfg: MicroConfig,
+    cache: CacheState,
+    order: Vec<SeqId>,
+    q: Vec<f32>,
+    out: Vec<f32>,
+    scratch: TppScratch,
+    pool: ThreadPool,
+    rng: Pcg64,
+    decoded: usize,
+    kv_row_scratch: (Vec<f32>, Vec<f32>),
+}
+
+impl KernelBench {
+    /// Build the cache for `kind` and prefill the §4.1 workload.
+    pub fn new(cfg: MicroConfig, kind: AttentionImpl) -> Self {
+        let shape = cfg.shape();
+        let mut fill = kv_fill(cfg.seed);
+        let mut order = Vec::with_capacity(cfg.batch);
+        let cache = match kind {
+            AttentionImpl::ChunkAttn => {
+                let mut tree = PrefixTree::new(shape);
+                for i in 0..cfg.batch {
+                    tree.insert_sequence(SeqId(i as u64), &cfg.prompt_of(i), &mut fill);
+                }
+                let ctx = tree.context();
+                order = ctx.seq_order.clone();
+                CacheState::Tree(Box::new(tree))
+            }
+            AttentionImpl::Naive | AttentionImpl::Xformers | AttentionImpl::FlashAttn => {
+                let mut mono = MonolithicKvCache::new(shape);
+                for i in 0..cfg.batch {
+                    let cap = cfg.prompt_tokens + cfg.max_new_tokens;
+                    mono.insert_sequence(SeqId(i as u64), &cfg.prompt_of(i), cap, &mut fill);
+                    order.push(SeqId(i as u64));
+                }
+                CacheState::Mono(Box::new(mono))
+            }
+            AttentionImpl::PagedAttn | AttentionImpl::PagedAttnShared => {
+                let mut paged = PagedKvCache::new(shape, cfg.chunk_size);
+                for i in 0..cfg.batch {
+                    let sid = SeqId(i as u64);
+                    let prompt = cfg.prompt_of(i);
+                    if kind == AttentionImpl::PagedAttnShared && i > 0 && cfg.shared_tokens > 0 {
+                        paged.insert_sequence_shared(
+                            sid,
+                            SeqId(0),
+                            &prompt,
+                            cfg.shared_tokens,
+                            &mut fill,
+                        );
+                    } else {
+                        paged.insert_sequence(sid, &prompt, &mut fill);
+                    }
+                    order.push(sid);
+                }
+                CacheState::Paged(Box::new(paged))
+            }
+        };
+        let mut rng = Pcg64::new(cfg.seed, 1);
+        let mut q = vec![0.0f32; cfg.heads * cfg.batch * cfg.head_dim];
+        rng.fill_uniform_f32(&mut q, -1.0, 1.0);
+        let out = vec![0.0f32; q.len()];
+        let scratch = TppScratch::new(&shape, cfg.batch);
+        let hd = cfg.heads * cfg.head_dim;
+        KernelBench {
+            kind,
+            cfg,
+            cache,
+            order,
+            q,
+            out,
+            scratch,
+            pool: ThreadPool::default_for_host(),
+            rng,
+            decoded: 0,
+            kv_row_scratch: (vec![0.0; hd], vec![0.0; hd]),
+        }
+    }
+
+    /// Run one decode-step attention over the current cache state.
+    /// Returns the number of query tokens processed (= batch).
+    pub fn decode_step(&mut self) -> u64 {
+        let cfg = &self.cfg;
+        let q = Queries::new(&self.q, cfg.heads, cfg.batch, cfg.head_dim);
+        match (&mut self.cache, self.kind) {
+            (CacheState::Tree(tree), AttentionImpl::ChunkAttn) => {
+                let ctx = tree.context();
+                tpp_attention(tree, &ctx, &q, &self.pool, &mut self.scratch, &mut self.out);
+            }
+            (CacheState::Mono(mono), AttentionImpl::Naive) => {
+                naive_attention(mono, &self.order, &q, &mut self.out);
+            }
+            (CacheState::Mono(mono), AttentionImpl::Xformers) => {
+                xformers_style_attention(mono, &self.order, &q, 32, &mut self.out);
+            }
+            (CacheState::Mono(mono), AttentionImpl::FlashAttn) => {
+                flash_style_attention(mono, &self.order, &q, 16, &mut self.out);
+            }
+            (CacheState::Paged(paged), _) => {
+                paged_attention(paged, &self.order, &q, &mut self.out);
+            }
+            _ => unreachable!("cache/kind mismatch"),
+        }
+        cfg.batch as u64
+    }
+
+    /// Ablation variants over the tree cache (panics on other caches).
+    pub fn decode_step_variant(&mut self, variant: TppVariant) -> u64 {
+        let cfg = &self.cfg;
+        let q = Queries::new(&self.q, cfg.heads, cfg.batch, cfg.head_dim);
+        let CacheState::Tree(tree) = &mut self.cache else {
+            panic!("variant requires ChunkAttn cache")
+        };
+        let ctx = tree.context();
+        match variant {
+            TppVariant::Fused => {
+                tpp_attention(tree, &ctx, &q, &self.pool, &mut self.scratch, &mut self.out)
+            }
+            TppVariant::Buffered => tpp_attention_buffered(tree, &ctx, &q, &mut self.out),
+            TppVariant::SeqFirstOnly => {
+                tpp_attention_seq_only(tree, &ctx, &q, &mut self.scratch, &mut self.out)
+            }
+        }
+        cfg.batch as u64
+    }
+
+    /// Append one decoded token to every sequence (sequences diverge, as in
+    /// Fig. 3's n_c sweep), and refresh the query values.
+    pub fn append_round(&mut self) {
+        let base = 2_000_000u32 + self.decoded as u32;
+        let hd = self.cfg.heads * self.cfg.head_dim;
+        let (ref mut k_row, ref mut v_row) = self.kv_row_scratch;
+        let mut fill = kv_fill(self.cfg.seed ^ 0xDEC0DE);
+        for i in 0..self.cfg.batch {
+            let sid = SeqId(i as u64);
+            let token = base + i as u32 * 10_000; // unique per sequence
+            fill(self.cfg.prompt_tokens + self.decoded, token, k_row, v_row);
+            match &mut self.cache {
+                CacheState::Tree(tree) => tree.append_token(sid, token, k_row, v_row),
+                CacheState::Mono(mono) => mono.append_token(sid, k_row, v_row),
+                CacheState::Paged(paged) => paged.append_token(sid, k_row, v_row),
+            }
+        }
+        self.decoded += 1;
+        // New decode step, new query content.
+        self.rng.fill_uniform_f32(&mut self.q, -1.0, 1.0);
+        debug_assert_eq!(hd, k_row.len());
+        // ChunkAttn: sequence order can change when the tree restructures.
+        if let CacheState::Tree(tree) = &mut self.cache {
+            self.order = tree.context().seq_order.clone();
+        }
+    }
+
+    /// Tokens decoded since prefill.
+    pub fn decoded(&self) -> usize {
+        self.decoded
+    }
+
+    /// In-use KV bytes (FP16 accounting) — memory side of Table 3 configs.
+    pub fn kv_bytes_fp16(&self) -> u64 {
+        match &self.cache {
+            CacheState::Tree(t) => t.pool().in_use_bytes_fp16(),
+            CacheState::Mono(m) => m.in_use_bytes_fp16(),
+            CacheState::Paged(p) => p.in_use_bytes_fp16(),
+        }
+    }
+
+    pub fn output(&self) -> &[f32] {
+        &self.out
+    }
+
+    pub fn config(&self) -> &MicroConfig {
+        &self.cfg
+    }
+}
+
+/// TPP kernel variants for the ablation bench.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TppVariant {
+    /// Production fused kernel (§3.3 CPU form).
+    Fused,
+    /// Algorithms 1+2 verbatim with partial buffers.
+    Buffered,
+    /// No chunk-first batching (PAKV without TPP).
+    SeqFirstOnly,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> MicroConfig {
+        MicroConfig {
+            batch: 6,
+            heads: 2,
+            head_dim: 16,
+            chunk_size: 8,
+            prompt_tokens: 40,
+            shared_tokens: 24,
+            max_new_tokens: 16,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn all_kernels_produce_identical_outputs() {
+        // Same logical KV in every layout → same attention output. The
+        // ChunkAttn row order may differ (DFS order), so compare via maps.
+        let mut results: Vec<(AttentionImpl, Vec<SeqId>, Vec<f32>)> = Vec::new();
+        for kind in AttentionImpl::ALL {
+            let mut kb = KernelBench::new(cfg(), kind);
+            kb.decode_step();
+            results.push((kind, kb.order.clone(), kb.output().to_vec()));
+        }
+        let c = cfg();
+        let (_, ref_order, ref_out) = &results[0];
+        for (kind, order, out) in &results[1..] {
+            for (row, sid) in order.iter().enumerate() {
+                let ref_row = ref_order.iter().position(|s| s == sid).unwrap();
+                for h in 0..c.heads {
+                    for i in 0..c.head_dim {
+                        let a = out[(h * c.batch + row) * c.head_dim + i];
+                        let b = ref_out[(h * c.batch + ref_row) * c.head_dim + i];
+                        assert!(
+                            (a - b).abs() < 3e-4,
+                            "{kind:?} row {row} h {h} i {i}: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn outputs_stay_identical_as_decode_proceeds() {
+        let mut tpp = KernelBench::new(cfg(), AttentionImpl::ChunkAttn);
+        let mut naive = KernelBench::new(cfg(), AttentionImpl::Naive);
+        for _ in 0..12 {
+            tpp.append_round();
+            naive.append_round();
+        }
+        // Use identical queries.
+        naive.q.copy_from_slice(&tpp.q);
+        tpp.decode_step();
+        naive.decode_step();
+        let c = cfg();
+        for (row, sid) in tpp.order.iter().enumerate() {
+            let nrow = naive.order.iter().position(|s| s == sid).unwrap();
+            for h in 0..c.heads {
+                for i in 0..c.head_dim {
+                    let a = tpp.output()[(h * c.batch + row) * c.head_dim + i];
+                    let b = naive.output()[(h * c.batch + nrow) * c.head_dim + i];
+                    assert!((a - b).abs() < 3e-4, "row {row} h {h} i {i}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tpp_variants_agree() {
+        let mut kb = KernelBench::new(cfg(), AttentionImpl::ChunkAttn);
+        kb.decode_step_variant(TppVariant::Fused);
+        let fused = kb.output().to_vec();
+        kb.decode_step_variant(TppVariant::Buffered);
+        let buffered = kb.output().to_vec();
+        kb.decode_step_variant(TppVariant::SeqFirstOnly);
+        let seq_only = kb.output().to_vec();
+        for i in 0..fused.len() {
+            assert!((fused[i] - buffered[i]).abs() < 1e-4);
+            assert!((fused[i] - seq_only[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn kv_bytes_reflect_sharing() {
+        let tree = KernelBench::new(cfg(), AttentionImpl::ChunkAttn);
+        let mono = KernelBench::new(cfg(), AttentionImpl::Naive);
+        let paged = KernelBench::new(cfg(), AttentionImpl::PagedAttn);
+        let paged_shared = KernelBench::new(cfg(), AttentionImpl::PagedAttnShared);
+        assert!(tree.kv_bytes_fp16() < paged.kv_bytes_fp16());
+        assert!(paged_shared.kv_bytes_fp16() < paged.kv_bytes_fp16());
+        assert!(paged.kv_bytes_fp16() < mono.kv_bytes_fp16(), "mono counts headroom");
+    }
+
+    #[test]
+    fn shared_zero_builds_disjoint_tree() {
+        let mut c = cfg();
+        c.shared_tokens = 0;
+        let mut kb = KernelBench::new(c, AttentionImpl::ChunkAttn);
+        assert_eq!(kb.decode_step(), c.batch as u64);
+        let CacheState::Tree(tree) = &mut kb.cache else { panic!() };
+        assert!((tree.sharing_stats().sharing_ratio() - 0.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,13 @@
+//! Layer-3 coordination: continuous-batching scheduler (§2.2), the real
+//! serving engine over PAKV+TPP, the microkernel bench harness (§4.1), and
+//! the virtual-time end-to-end simulator (§4.2).
+
+pub mod engine;
+pub mod microbench;
+pub mod scheduler;
+pub mod sim;
+
+pub use engine::{DecodeOutput, Engine, EngineStats, ModelRunner, PrefillOutput};
+pub use microbench::{KernelBench, MicroConfig, TppVariant};
+pub use scheduler::{ActiveSeq, FinishedSeq, Scheduler};
+pub use sim::{simulate, SimConfig, SimResult, SystemKind};

@@ -1,0 +1,229 @@
+//! Iteration-based (continuous) batching scheduler (§2.2).
+//!
+//! FCFS admission with a max-batch cap: new sequences join at iteration
+//! boundaries, completed sequences leave immediately, so the decode batch
+//! is re-formed every iteration — the Orca/vLLM discipline the paper
+//! assumes ("ChunkAttention ... assumes that iteration-based batching is
+//! enabled to form batches for its kernel to run efficiently").
+
+use std::collections::VecDeque;
+
+use crate::workload::Request;
+
+/// A sequence currently being decoded.
+#[derive(Debug, Clone)]
+pub struct ActiveSeq {
+    pub request: Request,
+    /// Tokens generated so far.
+    pub generated: usize,
+    /// Virtual or wall time the request was admitted (prefill start).
+    pub admitted_at: f64,
+}
+
+impl ActiveSeq {
+    pub fn done(&self) -> bool {
+        self.generated >= self.request.max_new_tokens
+    }
+
+    /// Current context length (prompt + generated).
+    pub fn context_len(&self) -> usize {
+        self.request.prompt.len() + self.generated
+    }
+}
+
+/// A request that finished decoding, with its timing.
+#[derive(Debug, Clone)]
+pub struct FinishedSeq {
+    pub request: Request,
+    pub admitted_at: f64,
+    pub finished_at: f64,
+    /// End-to-end latency including queueing (finish - arrival).
+    pub e2e_latency_s: f64,
+}
+
+impl FinishedSeq {
+    /// The paper's normalized latency: end-to-end latency divided by
+    /// completion tokens (ms/token).
+    pub fn normalized_latency_ms_per_tok(&self) -> f64 {
+        self.e2e_latency_s * 1e3 / self.request.max_new_tokens.max(1) as f64
+    }
+}
+
+/// FCFS continuous-batching scheduler.
+pub struct Scheduler {
+    queue: VecDeque<Request>,
+    active: Vec<ActiveSeq>,
+    finished: Vec<FinishedSeq>,
+    max_batch: usize,
+    peak_batch: usize,
+}
+
+impl Scheduler {
+    pub fn new(max_batch: usize) -> Self {
+        assert!(max_batch > 0);
+        Scheduler {
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            finished: Vec::new(),
+            max_batch,
+            peak_batch: 0,
+        }
+    }
+
+    /// Enqueue a request that has arrived.
+    pub fn submit(&mut self, request: Request) {
+        self.queue.push_back(request);
+    }
+
+    /// Admit queued requests into free batch slots at time `now`; returns
+    /// the newly admitted sequences (the engine must prefill them).
+    pub fn admit(&mut self, now: f64) -> Vec<ActiveSeq> {
+        let mut admitted = Vec::new();
+        while self.active.len() + admitted.len() < self.max_batch {
+            let Some(req) = self.queue.pop_front() else { break };
+            admitted.push(ActiveSeq { request: req, generated: 0, admitted_at: now });
+        }
+        self.active.extend(admitted.iter().cloned());
+        self.peak_batch = self.peak_batch.max(self.active.len());
+        admitted
+    }
+
+    /// Credit `n` already-generated tokens to a sequence (the prefill step
+    /// emits the first completion token before any decode iteration).
+    pub fn credit_tokens(&mut self, id: u64, n: usize) {
+        if let Some(s) = self.active.iter_mut().find(|s| s.request.id == id) {
+            s.generated += n;
+        }
+    }
+
+    /// Record one decoded token for every active sequence; retire the ones
+    /// that reached their completion budget. Returns retired sequences.
+    pub fn step_decode(&mut self, now: f64) -> Vec<FinishedSeq> {
+        for s in &mut self.active {
+            s.generated += 1;
+        }
+        self.retire_finished(now)
+    }
+
+    /// Retire sequences whose budget is already met (used after prefill
+    /// crediting and by `step_decode`).
+    pub fn retire_finished(&mut self, now: f64) -> Vec<FinishedSeq> {
+        let mut retired = Vec::new();
+        self.active.retain(|s| {
+            if s.done() {
+                retired.push(FinishedSeq {
+                    e2e_latency_s: now - s.request.arrival_s,
+                    admitted_at: s.admitted_at,
+                    finished_at: now,
+                    request: s.request.clone(),
+                });
+                false
+            } else {
+                true
+            }
+        });
+        self.finished.extend(retired.iter().cloned());
+        retired
+    }
+
+    pub fn active(&self) -> &[ActiveSeq] {
+        &self.active
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn peak_batch(&self) -> usize {
+        self.peak_batch
+    }
+
+    pub fn finished(&self) -> &[FinishedSeq] {
+        &self.finished
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.active.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival: f64, prompt_len: usize, completion: usize) -> Request {
+        Request {
+            id,
+            arrival_s: arrival,
+            tenant: 0,
+            prompt: (0..prompt_len as u32).collect(),
+            shared_tokens: 0,
+            max_new_tokens: completion,
+        }
+    }
+
+    #[test]
+    fn admits_up_to_max_batch() {
+        let mut s = Scheduler::new(2);
+        for i in 0..5 {
+            s.submit(req(i, 0.0, 8, 4));
+        }
+        let admitted = s.admit(0.0);
+        assert_eq!(admitted.len(), 2);
+        assert_eq!(s.batch_size(), 2);
+        assert_eq!(s.queued(), 3);
+    }
+
+    #[test]
+    fn continuous_batching_joins_mid_flight() {
+        let mut s = Scheduler::new(2);
+        s.submit(req(0, 0.0, 8, 1));
+        s.submit(req(1, 0.0, 8, 3));
+        s.submit(req(2, 0.0, 8, 2));
+        s.admit(0.0);
+        // Iteration 1: request 0 finishes, slot opens.
+        let retired = s.step_decode(0.1);
+        assert_eq!(retired.len(), 1);
+        assert_eq!(retired[0].request.id, 0);
+        let admitted = s.admit(0.1);
+        assert_eq!(admitted.len(), 1);
+        assert_eq!(admitted[0].request.id, 2);
+        assert_eq!(s.batch_size(), 2);
+    }
+
+    #[test]
+    fn normalized_latency_counts_queueing() {
+        let mut s = Scheduler::new(1);
+        s.submit(req(0, 0.0, 4, 2));
+        s.submit(req(1, 0.0, 4, 2)); // queued behind
+        s.admit(0.0);
+        s.step_decode(1.0);
+        let done = s.step_decode(2.0);
+        assert_eq!(done.len(), 1);
+        assert!((done[0].e2e_latency_s - 2.0).abs() < 1e-9);
+        assert!((done[0].normalized_latency_ms_per_tok() - 1000.0).abs() < 1e-6);
+        s.admit(2.0);
+        s.step_decode(3.0);
+        let done = s.step_decode(4.0);
+        // Request 1 waited 2s in queue: e2e = 4s over 2 tokens.
+        assert!((done[0].normalized_latency_ms_per_tok() - 2000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn peak_batch_tracked() {
+        let mut s = Scheduler::new(8);
+        for i in 0..5 {
+            s.submit(req(i, 0.0, 4, 1));
+        }
+        s.admit(0.0);
+        assert_eq!(s.peak_batch(), 5);
+        s.step_decode(0.1);
+        assert_eq!(s.batch_size(), 0);
+        assert_eq!(s.peak_batch(), 5);
+        assert!(s.is_idle());
+    }
+}

@@ -1,0 +1,361 @@
+//! Chunked KV storage and the pool-based chunk allocator (§3.1).
+//!
+//! A [`Chunk`] holds `c` context tokens plus their key/value tensor slices
+//! laid out `[heads, c, head_dim]` so that a per-head slice is contiguous —
+//! the chunk-first kernel streams one head's `K^(C)` as a dense `c×d` block.
+//!
+//! The [`ChunkPool`] is the paper's pool allocator (Hill 1992): a free list
+//! backed by never-released memory. Freed chunks go back to the free list;
+//! fresh chunks come from the free list when possible and from the global
+//! allocator otherwise. Accounting distinguishes *allocated* (high-water)
+//! from *in-use* bytes so benches can report peak KV cache like Table 4.
+
+/// Static shape of every chunk in a pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvShape {
+    /// Number of attention heads `h`.
+    pub heads: usize,
+    /// Per-head dimension `d`.
+    pub head_dim: usize,
+    /// Tokens per chunk `c`.
+    pub chunk_size: usize,
+}
+
+impl KvShape {
+    pub fn new(heads: usize, head_dim: usize, chunk_size: usize) -> Self {
+        assert!(heads > 0 && head_dim > 0 && chunk_size > 0);
+        KvShape { heads, head_dim, chunk_size }
+    }
+
+    /// f32 elements in one of K or V for a full chunk.
+    pub fn elems_per_tensor(&self) -> usize {
+        self.heads * self.chunk_size * self.head_dim
+    }
+
+    /// Bytes of K+V storage per chunk as allocated here (f32).
+    pub fn bytes_per_chunk_f32(&self) -> usize {
+        2 * self.elems_per_tensor() * 4
+    }
+
+    /// Bytes of K+V per chunk *as the paper counts them* (FP16), for
+    /// paper-comparable GB numbers.
+    pub fn bytes_per_chunk_fp16(&self) -> usize {
+        2 * self.elems_per_tensor() * 2
+    }
+
+    /// Offset of `(head, pos)` row inside a chunk tensor.
+    #[inline]
+    pub fn row_offset(&self, head: usize, pos: usize) -> usize {
+        (head * self.chunk_size + pos) * self.head_dim
+    }
+}
+
+/// Handle to a chunk inside its pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ChunkId(pub u32);
+
+/// One KV chunk: token ids for prefix matching plus K/V tensor slices.
+#[derive(Debug)]
+pub struct Chunk {
+    /// Context tokens stored here (`len <= chunk_size`); drives tree lookups.
+    tokens: Vec<u32>,
+    /// Key slice, `[heads, chunk_size, head_dim]`.
+    k: Box<[f32]>,
+    /// Value slice, `[heads, chunk_size, head_dim]`.
+    v: Box<[f32]>,
+}
+
+impl Chunk {
+    fn new(shape: &KvShape) -> Self {
+        Chunk {
+            tokens: Vec::with_capacity(shape.chunk_size),
+            k: vec![0.0; shape.elems_per_tensor()].into_boxed_slice(),
+            v: vec![0.0; shape.elems_per_tensor()].into_boxed_slice(),
+        }
+    }
+
+    fn reset(&mut self) {
+        self.tokens.clear();
+        // K/V rows are overwritten before use; zeroing is not required for
+        // correctness but keeps stale data out of debugging dumps.
+    }
+
+    /// Number of tokens currently stored.
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    pub fn tokens(&self) -> &[u32] {
+        &self.tokens
+    }
+
+    pub fn k(&self) -> &[f32] {
+        &self.k
+    }
+
+    pub fn v(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// K rows for one head: contiguous `[chunk_size, head_dim]` slice.
+    #[inline]
+    pub fn k_head(&self, shape: &KvShape, head: usize) -> &[f32] {
+        let base = head * shape.chunk_size * shape.head_dim;
+        &self.k[base..base + shape.chunk_size * shape.head_dim]
+    }
+
+    /// V rows for one head.
+    #[inline]
+    pub fn v_head(&self, shape: &KvShape, head: usize) -> &[f32] {
+        let base = head * shape.chunk_size * shape.head_dim;
+        &self.v[base..base + shape.chunk_size * shape.head_dim]
+    }
+
+    /// Append one token and its per-head K/V rows.
+    /// `k_rows`/`v_rows` are `[heads, head_dim]`.
+    pub fn append(&mut self, shape: &KvShape, token: u32, k_rows: &[f32], v_rows: &[f32]) {
+        assert!(self.tokens.len() < shape.chunk_size, "append to full chunk");
+        assert_eq!(k_rows.len(), shape.heads * shape.head_dim);
+        assert_eq!(v_rows.len(), shape.heads * shape.head_dim);
+        let pos = self.tokens.len();
+        for h in 0..shape.heads {
+            let dst = shape.row_offset(h, pos);
+            let src = h * shape.head_dim;
+            self.k[dst..dst + shape.head_dim].copy_from_slice(&k_rows[src..src + shape.head_dim]);
+            self.v[dst..dst + shape.head_dim].copy_from_slice(&v_rows[src..src + shape.head_dim]);
+        }
+        self.tokens.push(token);
+    }
+
+    /// Copy the suffix rows `[from..len)` of `src` into `self` (which must be
+    /// empty) — used when a chunk is split at a divergence point.
+    pub fn take_suffix_from(&mut self, shape: &KvShape, src: &mut Chunk, from: usize) {
+        assert!(self.is_empty());
+        assert!(from <= src.len());
+        let n = src.len() - from;
+        for h in 0..shape.heads {
+            for p in 0..n {
+                let s = shape.row_offset(h, from + p);
+                let d = shape.row_offset(h, p);
+                self.k[d..d + shape.head_dim].copy_from_slice(&src.k[s..s + shape.head_dim]);
+                self.v[d..d + shape.head_dim].copy_from_slice(&src.v[s..s + shape.head_dim]);
+            }
+        }
+        self.tokens.extend_from_slice(&src.tokens[from..]);
+        src.tokens.truncate(from);
+    }
+}
+
+/// Pool-based chunk allocator with a free list (§3.1).
+pub struct ChunkPool {
+    shape: KvShape,
+    slots: Vec<Chunk>,
+    free: Vec<ChunkId>,
+    in_use: usize,
+    peak_in_use: usize,
+}
+
+impl ChunkPool {
+    pub fn new(shape: KvShape) -> Self {
+        ChunkPool { shape, slots: Vec::new(), free: Vec::new(), in_use: 0, peak_in_use: 0 }
+    }
+
+    pub fn shape(&self) -> KvShape {
+        self.shape
+    }
+
+    /// Acquire a chunk: reuse a freed slot if available, otherwise allocate
+    /// fresh memory. Memory is never returned to the OS (paper §3.1).
+    pub fn acquire(&mut self) -> ChunkId {
+        let id = match self.free.pop() {
+            Some(id) => {
+                self.slots[id.0 as usize].reset();
+                id
+            }
+            None => {
+                let id = ChunkId(self.slots.len() as u32);
+                self.slots.push(Chunk::new(&self.shape));
+                id
+            }
+        };
+        self.in_use += 1;
+        self.peak_in_use = self.peak_in_use.max(self.in_use);
+        id
+    }
+
+    /// Return a chunk to the free list.
+    pub fn release(&mut self, id: ChunkId) {
+        debug_assert!(!self.free.contains(&id), "double free of {id:?}");
+        self.free.push(id);
+        self.in_use -= 1;
+    }
+
+    pub fn get(&self, id: ChunkId) -> &Chunk {
+        &self.slots[id.0 as usize]
+    }
+
+    pub fn get_mut(&mut self, id: ChunkId) -> &mut Chunk {
+        &mut self.slots[id.0 as usize]
+    }
+
+    /// Two chunks mutably at once (for splits). Panics if `a == b`.
+    pub fn get2_mut(&mut self, a: ChunkId, b: ChunkId) -> (&mut Chunk, &mut Chunk) {
+        assert_ne!(a, b);
+        let (ai, bi) = (a.0 as usize, b.0 as usize);
+        if ai < bi {
+            let (lo, hi) = self.slots.split_at_mut(bi);
+            (&mut lo[ai], &mut hi[0])
+        } else {
+            let (lo, hi) = self.slots.split_at_mut(ai);
+            (&mut hi[0], &mut lo[bi])
+        }
+    }
+
+    /// Chunks currently handed out.
+    pub fn in_use(&self) -> usize {
+        self.in_use
+    }
+
+    /// High-water mark of simultaneously used chunks.
+    pub fn peak_in_use(&self) -> usize {
+        self.peak_in_use
+    }
+
+    /// Chunks ever allocated (slots), i.e. resident memory.
+    pub fn allocated(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Resident KV bytes as allocated (f32).
+    pub fn resident_bytes_f32(&self) -> u64 {
+        (self.allocated() * self.shape.bytes_per_chunk_f32()) as u64
+    }
+
+    /// In-use KV bytes counted at FP16 like the paper's Table 4.
+    pub fn in_use_bytes_fp16(&self) -> u64 {
+        (self.in_use * self.shape.bytes_per_chunk_fp16()) as u64
+    }
+
+    /// Peak in-use KV bytes counted at FP16.
+    pub fn peak_bytes_fp16(&self) -> u64 {
+        (self.peak_in_use * self.shape.bytes_per_chunk_fp16()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> KvShape {
+        KvShape::new(2, 4, 8)
+    }
+
+    fn rows(shape: &KvShape, base: f32) -> (Vec<f32>, Vec<f32>) {
+        let n = shape.heads * shape.head_dim;
+        let k: Vec<f32> = (0..n).map(|i| base + i as f32).collect();
+        let v: Vec<f32> = (0..n).map(|i| base - i as f32).collect();
+        (k, v)
+    }
+
+    #[test]
+    fn append_places_rows_per_head() {
+        let s = shape();
+        let mut pool = ChunkPool::new(s);
+        let id = pool.acquire();
+        let (k, v) = rows(&s, 10.0);
+        pool.get_mut(id).append(&s, 42, &k, &v);
+        let c = pool.get(id);
+        assert_eq!(c.tokens(), &[42]);
+        // Head 1, pos 0 row must equal k[4..8].
+        assert_eq!(&c.k_head(&s, 1)[0..4], &k[4..8]);
+        assert_eq!(&c.v_head(&s, 1)[0..4], &v[4..8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "append to full chunk")]
+    fn append_past_capacity_panics() {
+        let s = shape();
+        let mut pool = ChunkPool::new(s);
+        let id = pool.acquire();
+        let (k, v) = rows(&s, 0.0);
+        for t in 0..=s.chunk_size as u32 {
+            pool.get_mut(id).append(&s, t, &k, &v);
+        }
+    }
+
+    #[test]
+    fn pool_reuses_freed_chunks() {
+        let mut pool = ChunkPool::new(shape());
+        let a = pool.acquire();
+        let b = pool.acquire();
+        assert_eq!(pool.allocated(), 2);
+        pool.release(a);
+        let c = pool.acquire();
+        assert_eq!(c, a, "free list must be reused");
+        assert_eq!(pool.allocated(), 2, "no fresh allocation");
+        assert_eq!(pool.in_use(), 2);
+        let _ = b;
+    }
+
+    #[test]
+    fn pool_never_shrinks() {
+        let mut pool = ChunkPool::new(shape());
+        let ids: Vec<_> = (0..10).map(|_| pool.acquire()).collect();
+        for id in ids {
+            pool.release(id);
+        }
+        assert_eq!(pool.allocated(), 10);
+        assert_eq!(pool.in_use(), 0);
+        assert_eq!(pool.peak_in_use(), 10);
+    }
+
+    #[test]
+    fn reacquired_chunk_is_reset() {
+        let s = shape();
+        let mut pool = ChunkPool::new(s);
+        let id = pool.acquire();
+        let (k, v) = rows(&s, 1.0);
+        pool.get_mut(id).append(&s, 7, &k, &v);
+        pool.release(id);
+        let id2 = pool.acquire();
+        assert_eq!(id2, id);
+        assert!(pool.get(id2).is_empty());
+    }
+
+    #[test]
+    fn split_moves_suffix() {
+        let s = shape();
+        let mut pool = ChunkPool::new(s);
+        let a = pool.acquire();
+        for t in 0..6u32 {
+            let (k, v) = rows(&s, t as f32);
+            pool.get_mut(a).append(&s, t, &k, &v);
+        }
+        let b = pool.acquire();
+        let (ca, cb) = pool.get2_mut(a, b);
+        cb.take_suffix_from(&s, ca, 4);
+        assert_eq!(pool.get(a).tokens(), &[0, 1, 2, 3]);
+        assert_eq!(pool.get(b).tokens(), &[4, 5]);
+        // Row for token 4 (head 0) must now be at pos 0 of b.
+        let (k4, _) = rows(&s, 4.0);
+        assert_eq!(&pool.get(b).k_head(&s, 0)[0..4], &k4[0..4]);
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let s = shape(); // 2 heads * 8 tokens * 4 dim = 64 elems per tensor
+        assert_eq!(s.elems_per_tensor(), 64);
+        assert_eq!(s.bytes_per_chunk_f32(), 512);
+        assert_eq!(s.bytes_per_chunk_fp16(), 256);
+        let mut pool = ChunkPool::new(s);
+        let a = pool.acquire();
+        assert_eq!(pool.in_use_bytes_fp16(), 256);
+        pool.release(a);
+        assert_eq!(pool.in_use_bytes_fp16(), 0);
+        assert_eq!(pool.peak_bytes_fp16(), 256);
+    }
+}

@@ -1,0 +1,15 @@
+//! KV-cache managers: the paper's prefix-aware chunked tree (PAKV, §3.1)
+//! plus the two baseline layouts it is evaluated against (monolithic dense
+//! tensors and vLLM-style paging).
+
+pub mod chunk;
+pub mod monolithic;
+pub mod paged;
+pub mod retain;
+pub mod tree;
+
+pub use chunk::{Chunk, ChunkId, ChunkPool, KvShape};
+pub use monolithic::MonolithicKvCache;
+pub use paged::{PagedKvCache, PageId};
+pub use retain::{PrefixRetainer, PIN_ID_BASE};
+pub use tree::{CtxEntry, InsertOutcome, PrefixTree, SeqId, SharingStats, TreeContext};

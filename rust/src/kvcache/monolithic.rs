@@ -1,0 +1,207 @@
+//! Monolithic dense KV cache — the layout the Naive / xformers / FlashAttn
+//! baselines in Table 3 operate on.
+//!
+//! Every sequence owns a contiguous `[heads, capacity, head_dim]` K and V
+//! buffer. There is no sharing: two sequences with identical prompts store
+//! two physical copies, exactly like stock `past_key_values` serving.
+
+use std::collections::BTreeMap;
+
+use super::chunk::KvShape;
+use super::tree::SeqId;
+
+/// One sequence's dense K/V buffers.
+#[derive(Debug)]
+pub struct DenseSeq {
+    /// `[heads, capacity, head_dim]`.
+    pub k: Box<[f32]>,
+    pub v: Box<[f32]>,
+    pub len: usize,
+    pub capacity: usize,
+}
+
+impl DenseSeq {
+    #[inline]
+    pub fn k_head(&self, shape: &KvShape, head: usize) -> &[f32] {
+        let stride = self.capacity * shape.head_dim;
+        &self.k[head * stride..head * stride + self.len * shape.head_dim]
+    }
+
+    #[inline]
+    pub fn v_head(&self, shape: &KvShape, head: usize) -> &[f32] {
+        let stride = self.capacity * shape.head_dim;
+        &self.v[head * stride..head * stride + self.len * shape.head_dim]
+    }
+}
+
+/// Dense per-sequence KV cache manager.
+pub struct MonolithicKvCache {
+    shape: KvShape,
+    seqs: BTreeMap<SeqId, DenseSeq>,
+    peak_tokens: usize,
+}
+
+impl MonolithicKvCache {
+    pub fn new(shape: KvShape) -> Self {
+        MonolithicKvCache { shape, seqs: BTreeMap::new(), peak_tokens: 0 }
+    }
+
+    pub fn shape(&self) -> KvShape {
+        self.shape
+    }
+
+    /// Admit a sequence with room for `capacity` tokens; fill the first
+    /// `tokens.len()` positions via `fill(pos, token, k_row, v_row)`.
+    pub fn insert_sequence(
+        &mut self,
+        seq: SeqId,
+        tokens: &[u32],
+        capacity: usize,
+        fill: &mut dyn FnMut(usize, u32, &mut [f32], &mut [f32]),
+    ) {
+        assert!(!self.seqs.contains_key(&seq));
+        assert!(tokens.len() <= capacity);
+        let hd = self.shape.heads * self.shape.head_dim;
+        let mut k = vec![0.0f32; self.shape.heads * capacity * self.shape.head_dim];
+        let mut v = vec![0.0f32; self.shape.heads * capacity * self.shape.head_dim];
+        let mut k_row = vec![0.0f32; hd];
+        let mut v_row = vec![0.0f32; hd];
+        for (pos, &t) in tokens.iter().enumerate() {
+            fill(pos, t, &mut k_row, &mut v_row);
+            scatter_row(&self.shape, &mut k, &mut v, capacity, pos, &k_row, &v_row);
+        }
+        self.seqs.insert(
+            seq,
+            DenseSeq { k: k.into_boxed_slice(), v: v.into_boxed_slice(), len: tokens.len(), capacity },
+        );
+        self.update_peak();
+    }
+
+    pub fn append_token(&mut self, seq: SeqId, k_rows: &[f32], v_rows: &[f32]) {
+        let shape = self.shape;
+        let s = self.seqs.get_mut(&seq).expect("unknown sequence");
+        assert!(s.len < s.capacity, "sequence over capacity");
+        let pos = s.len;
+        let cap = s.capacity;
+        scatter_row(&shape, &mut s.k, &mut s.v, cap, pos, k_rows, v_rows);
+        s.len += 1;
+        self.update_peak();
+    }
+
+    pub fn remove_sequence(&mut self, seq: SeqId) {
+        self.seqs.remove(&seq).expect("unknown sequence");
+    }
+
+    pub fn get(&self, seq: SeqId) -> Option<&DenseSeq> {
+        self.seqs.get(&seq)
+    }
+
+    pub fn num_sequences(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn seq_ids(&self) -> impl Iterator<Item = SeqId> + '_ {
+        self.seqs.keys().copied()
+    }
+
+    fn update_peak(&mut self) {
+        // Monolithic allocates capacity up front; count capacity like real
+        // dense serving does (this is vLLM's motivating waste).
+        let total: usize = self.seqs.values().map(|s| s.capacity).sum();
+        self.peak_tokens = self.peak_tokens.max(total);
+    }
+
+    /// Peak KV bytes at FP16 accounting (paper-comparable).
+    pub fn peak_bytes_fp16(&self) -> u64 {
+        (self.peak_tokens * self.shape.heads * self.shape.head_dim * 2 * 2) as u64
+    }
+
+    pub fn in_use_bytes_fp16(&self) -> u64 {
+        let total: usize = self.seqs.values().map(|s| s.capacity).sum();
+        (total * self.shape.heads * self.shape.head_dim * 2 * 2) as u64
+    }
+}
+
+#[inline]
+fn scatter_row(
+    shape: &KvShape,
+    k: &mut [f32],
+    v: &mut [f32],
+    capacity: usize,
+    pos: usize,
+    k_rows: &[f32],
+    v_rows: &[f32],
+) {
+    for h in 0..shape.heads {
+        let dst = (h * capacity + pos) * shape.head_dim;
+        let src = h * shape.head_dim;
+        k[dst..dst + shape.head_dim].copy_from_slice(&k_rows[src..src + shape.head_dim]);
+        v[dst..dst + shape.head_dim].copy_from_slice(&v_rows[src..src + shape.head_dim]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(pos: usize, token: u32, k: &mut [f32], v: &mut [f32]) {
+        k.fill(pos as f32 + token as f32 * 0.5);
+        v.fill(-(pos as f32));
+    }
+
+    #[test]
+    fn insert_and_read_back() {
+        let shape = KvShape::new(2, 4, 8);
+        let mut cache = MonolithicKvCache::new(shape);
+        cache.insert_sequence(SeqId(1), &[10, 20, 30], 8, &mut fill);
+        let s = cache.get(SeqId(1)).unwrap();
+        assert_eq!(s.len, 3);
+        let k0 = s.k_head(&shape, 0);
+        assert_eq!(k0.len(), 3 * 4);
+        assert_eq!(k0[0], 0.0 + 10.0 * 0.5);
+        assert_eq!(k0[4], 1.0 + 20.0 * 0.5);
+    }
+
+    #[test]
+    fn append_extends() {
+        let shape = KvShape::new(1, 2, 8);
+        let mut cache = MonolithicKvCache::new(shape);
+        cache.insert_sequence(SeqId(1), &[1], 4, &mut fill);
+        cache.append_token(SeqId(1), &[9.0, 9.0], &[8.0, 8.0]);
+        let s = cache.get(SeqId(1)).unwrap();
+        assert_eq!(s.len, 2);
+        assert_eq!(s.k_head(&shape, 0)[2..4], [9.0, 9.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "over capacity")]
+    fn capacity_is_enforced() {
+        let shape = KvShape::new(1, 2, 8);
+        let mut cache = MonolithicKvCache::new(shape);
+        cache.insert_sequence(SeqId(1), &[1], 1, &mut fill);
+        cache.append_token(SeqId(1), &[0.0, 0.0], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn no_sharing_between_identical_prompts() {
+        let shape = KvShape::new(1, 2, 8);
+        let mut cache = MonolithicKvCache::new(shape);
+        cache.insert_sequence(SeqId(1), &[1, 2, 3], 4, &mut fill);
+        cache.insert_sequence(SeqId(2), &[1, 2, 3], 4, &mut fill);
+        // 2 sequences * 4 capacity * 1 head * 2 dim * 2 tensors * 2 bytes
+        assert_eq!(cache.in_use_bytes_fp16(), 2 * 4 * 2 * 2 * 2);
+    }
+
+    #[test]
+    fn peak_survives_removal() {
+        let shape = KvShape::new(1, 2, 8);
+        let mut cache = MonolithicKvCache::new(shape);
+        cache.insert_sequence(SeqId(1), &[1], 16, &mut fill);
+        cache.insert_sequence(SeqId(2), &[1], 16, &mut fill);
+        let peak = cache.peak_bytes_fp16();
+        cache.remove_sequence(SeqId(1));
+        cache.remove_sequence(SeqId(2));
+        assert_eq!(cache.peak_bytes_fp16(), peak);
+        assert_eq!(cache.in_use_bytes_fp16(), 0);
+    }
+}

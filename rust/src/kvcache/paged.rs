@@ -1,0 +1,387 @@
+//! Paged KV cache — a faithful small reimplementation of vLLM's
+//! PagedAttention memory manager (Kwon et al., 2023), used as the strongest
+//! baseline in Table 3 / Table 4.
+//!
+//! K/V live in fixed-size *pages* held in a global pool; each sequence owns
+//! a *page table* mapping its logical token blocks to physical pages. Two
+//! modes reproduce the paper's two baselines:
+//!
+//! - `PagedKvCache` (plain): every sequence gets private pages, even for a
+//!   shared prompt — the released-vLLM behaviour ("PagedAttn" rows).
+//! - `share_prefix_with`: maps the full pages of another sequence's prefix
+//!   into a new sequence's page table with refcounting — the manually
+//!   aliased page table the paper calls PagedAttn\*.
+
+use std::collections::BTreeMap;
+
+use super::chunk::KvShape;
+use super::tree::SeqId;
+
+/// Physical page handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PageId(pub u32);
+
+#[derive(Debug)]
+struct Page {
+    /// `[heads, page_size, head_dim]`.
+    k: Box<[f32]>,
+    v: Box<[f32]>,
+    refcount: u32,
+}
+
+#[derive(Debug, Clone)]
+struct SeqEntry {
+    table: Vec<PageId>,
+    len: usize,
+}
+
+/// Paged KV cache with refcounted physical pages.
+pub struct PagedKvCache {
+    shape: KvShape,
+    /// Tokens per page (vLLM block_size; the paper's chunk size c plays the
+    /// same role, we default both to the same value in benches).
+    page_size: usize,
+    pages: Vec<Page>,
+    free: Vec<PageId>,
+    seqs: BTreeMap<SeqId, SeqEntry>,
+    in_use_pages: usize,
+    peak_pages: usize,
+}
+
+impl PagedKvCache {
+    pub fn new(shape: KvShape, page_size: usize) -> Self {
+        assert!(page_size > 0);
+        PagedKvCache {
+            shape,
+            page_size,
+            pages: Vec::new(),
+            free: Vec::new(),
+            seqs: BTreeMap::new(),
+            in_use_pages: 0,
+            peak_pages: 0,
+        }
+    }
+
+    pub fn shape(&self) -> KvShape {
+        self.shape
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    fn page_elems(&self) -> usize {
+        self.shape.heads * self.page_size * self.shape.head_dim
+    }
+
+    fn alloc_page(&mut self) -> PageId {
+        let id = match self.free.pop() {
+            Some(id) => id,
+            None => {
+                let id = PageId(self.pages.len() as u32);
+                let n = self.page_elems();
+                self.pages.push(Page {
+                    k: vec![0.0; n].into_boxed_slice(),
+                    v: vec![0.0; n].into_boxed_slice(),
+                    refcount: 0,
+                });
+                id
+            }
+        };
+        self.pages[id.0 as usize].refcount = 1;
+        self.in_use_pages += 1;
+        self.peak_pages = self.peak_pages.max(self.in_use_pages);
+        id
+    }
+
+    fn ref_page(&mut self, id: PageId) {
+        self.pages[id.0 as usize].refcount += 1;
+    }
+
+    fn unref_page(&mut self, id: PageId) {
+        let page = &mut self.pages[id.0 as usize];
+        page.refcount -= 1;
+        if page.refcount == 0 {
+            self.free.push(id);
+            self.in_use_pages -= 1;
+        }
+    }
+
+    /// Admit a sequence with private pages for all `tokens`.
+    pub fn insert_sequence(
+        &mut self,
+        seq: SeqId,
+        tokens: &[u32],
+        fill: &mut dyn FnMut(usize, u32, &mut [f32], &mut [f32]),
+    ) {
+        assert!(!self.seqs.contains_key(&seq));
+        let mut entry = SeqEntry { table: Vec::new(), len: 0 };
+        let hd = self.shape.heads * self.shape.head_dim;
+        let mut k_row = vec![0.0f32; hd];
+        let mut v_row = vec![0.0f32; hd];
+        for (pos, &t) in tokens.iter().enumerate() {
+            if entry.len % self.page_size == 0 {
+                let pid = self.alloc_page();
+                entry.table.push(pid);
+            }
+            fill(pos, t, &mut k_row, &mut v_row);
+            self.write_row(&entry, pos, &k_row, &v_row);
+            entry.len += 1;
+        }
+        self.seqs.insert(seq, entry);
+    }
+
+    /// Admit a sequence whose first `shared_tokens` tokens alias the pages of
+    /// `donor` (PagedAttn\* simulation). `shared_tokens` is rounded *down* to
+    /// a page boundary — partial pages cannot be aliased safely. Returns the
+    /// number of tokens actually aliased; the caller fills the rest.
+    pub fn insert_sequence_shared(
+        &mut self,
+        seq: SeqId,
+        donor: SeqId,
+        tokens: &[u32],
+        shared_tokens: usize,
+        fill: &mut dyn FnMut(usize, u32, &mut [f32], &mut [f32]),
+    ) -> usize {
+        assert!(!self.seqs.contains_key(&seq));
+        let donor_entry = self.seqs.get(&donor).expect("unknown donor").clone();
+        let shared_tokens = shared_tokens.min(tokens.len()).min(donor_entry.len);
+        let shared_pages = shared_tokens / self.page_size;
+        let aliased_tokens = shared_pages * self.page_size;
+        let mut entry = SeqEntry { table: Vec::new(), len: aliased_tokens };
+        for &pid in &donor_entry.table[..shared_pages] {
+            self.ref_page(pid);
+            entry.table.push(pid);
+        }
+        let hd = self.shape.heads * self.shape.head_dim;
+        let mut k_row = vec![0.0f32; hd];
+        let mut v_row = vec![0.0f32; hd];
+        for pos in aliased_tokens..tokens.len() {
+            if entry.len % self.page_size == 0 {
+                let pid = self.alloc_page();
+                entry.table.push(pid);
+            }
+            fill(pos, tokens[pos], &mut k_row, &mut v_row);
+            self.write_row(&entry, pos, &k_row, &v_row);
+            entry.len += 1;
+        }
+        self.seqs.insert(seq, entry);
+        aliased_tokens
+    }
+
+    /// Decode-append one token. If the tail page is shared (refcount > 1),
+    /// copy-on-write duplicates it first.
+    pub fn append_token(&mut self, seq: SeqId, k_rows: &[f32], v_rows: &[f32]) {
+        let mut entry = self.seqs.get(&seq).expect("unknown sequence").clone();
+        if entry.len % self.page_size == 0 {
+            let pid = self.alloc_page();
+            entry.table.push(pid);
+        } else {
+            let tail = *entry.table.last().unwrap();
+            if self.pages[tail.0 as usize].refcount > 1 {
+                // Copy-on-write: private copy of the partially filled page.
+                let new = self.alloc_page();
+                let (kcopy, vcopy) = {
+                    let p = &self.pages[tail.0 as usize];
+                    (p.k.clone(), p.v.clone())
+                };
+                self.pages[new.0 as usize].k = kcopy;
+                self.pages[new.0 as usize].v = vcopy;
+                self.unref_page(tail);
+                *entry.table.last_mut().unwrap() = new;
+            }
+        }
+        let pos = entry.len;
+        self.write_row(&entry, pos, k_rows, v_rows);
+        entry.len += 1;
+        self.seqs.insert(seq, entry);
+    }
+
+    pub fn remove_sequence(&mut self, seq: SeqId) {
+        let entry = self.seqs.remove(&seq).expect("unknown sequence");
+        for pid in entry.table {
+            self.unref_page(pid);
+        }
+    }
+
+    fn write_row(&mut self, entry: &SeqEntry, pos: usize, k_rows: &[f32], v_rows: &[f32]) {
+        let page = entry.table[pos / self.page_size];
+        let slot = pos % self.page_size;
+        let p = &mut self.pages[page.0 as usize];
+        for h in 0..self.shape.heads {
+            let dst = (h * self.page_size + slot) * self.shape.head_dim;
+            let src = h * self.shape.head_dim;
+            p.k[dst..dst + self.shape.head_dim].copy_from_slice(&k_rows[src..src + self.shape.head_dim]);
+            p.v[dst..dst + self.shape.head_dim].copy_from_slice(&v_rows[src..src + self.shape.head_dim]);
+        }
+    }
+
+    pub fn seq_len(&self, seq: SeqId) -> Option<usize> {
+        self.seqs.get(&seq).map(|e| e.len)
+    }
+
+    pub fn page_table(&self, seq: SeqId) -> Option<&[PageId]> {
+        self.seqs.get(&seq).map(|e| e.table.as_slice())
+    }
+
+    /// K rows of one (page, head): contiguous `[page_size, head_dim]`.
+    #[inline]
+    pub fn page_k_head(&self, page: PageId, head: usize) -> &[f32] {
+        let stride = self.page_size * self.shape.head_dim;
+        &self.pages[page.0 as usize].k[head * stride..(head + 1) * stride]
+    }
+
+    #[inline]
+    pub fn page_v_head(&self, page: PageId, head: usize) -> &[f32] {
+        let stride = self.page_size * self.shape.head_dim;
+        &self.pages[page.0 as usize].v[head * stride..(head + 1) * stride]
+    }
+
+    pub fn num_sequences(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn in_use_pages(&self) -> usize {
+        self.in_use_pages
+    }
+
+    pub fn in_use_bytes_fp16(&self) -> u64 {
+        (self.in_use_pages * self.page_elems() * 2 * 2) as u64
+    }
+
+    pub fn peak_bytes_fp16(&self) -> u64 {
+        (self.peak_pages * self.page_elems() * 2 * 2) as u64
+    }
+
+    /// Integrity: refcounts match table references; lens match table sizes.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut counted: BTreeMap<u32, u32> = BTreeMap::new();
+        for (seq, e) in &self.seqs {
+            let want_pages = e.len.div_ceil(self.page_size);
+            if e.table.len() != want_pages {
+                return Err(format!("{seq:?}: table {} pages, len {} wants {want_pages}", e.table.len(), e.len));
+            }
+            for pid in &e.table {
+                *counted.entry(pid.0).or_default() += 1;
+            }
+        }
+        for (i, p) in self.pages.iter().enumerate() {
+            let expect = counted.get(&(i as u32)).copied().unwrap_or(0);
+            if p.refcount != expect {
+                return Err(format!("page {i}: refcount {} != references {expect}", p.refcount));
+            }
+        }
+        let live = self.pages.iter().filter(|p| p.refcount > 0).count();
+        if live != self.in_use_pages {
+            return Err(format!("in_use_pages {} != live {live}", self.in_use_pages));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(pos: usize, token: u32, k: &mut [f32], v: &mut [f32]) {
+        k.fill(pos as f32 + token as f32 * 0.01);
+        v.fill(pos as f32 * -1.0);
+    }
+
+    fn shape() -> KvShape {
+        KvShape::new(2, 4, 4)
+    }
+
+    #[test]
+    fn private_pages_for_plain_insert() {
+        let mut cache = PagedKvCache::new(shape(), 4);
+        cache.insert_sequence(SeqId(1), &[1, 2, 3, 4, 5], &mut fill);
+        cache.insert_sequence(SeqId(2), &[1, 2, 3, 4, 5], &mut fill);
+        assert_eq!(cache.in_use_pages(), 4, "identical prompts still get private pages");
+        cache.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_insert_aliases_full_pages() {
+        let mut cache = PagedKvCache::new(shape(), 4);
+        cache.insert_sequence(SeqId(1), &[1, 2, 3, 4, 5, 6], &mut fill);
+        let aliased =
+            cache.insert_sequence_shared(SeqId(2), SeqId(1), &[1, 2, 3, 4, 9, 9], 4, &mut fill);
+        assert_eq!(aliased, 4);
+        // Seq1: 2 pages. Seq2: aliases page 0, private page for [9,9].
+        assert_eq!(cache.in_use_pages(), 3);
+        assert_eq!(cache.page_table(SeqId(1)).unwrap()[0], cache.page_table(SeqId(2)).unwrap()[0]);
+        cache.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_insert_rounds_down_to_page_boundary() {
+        let mut cache = PagedKvCache::new(shape(), 4);
+        cache.insert_sequence(SeqId(1), &[1, 2, 3, 4, 5, 6, 7], &mut fill);
+        let aliased =
+            cache.insert_sequence_shared(SeqId(2), SeqId(1), &[1, 2, 3, 4, 5, 6, 7], 6, &mut fill);
+        assert_eq!(aliased, 4, "6 shared tokens -> 1 full page of 4");
+        cache.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn append_cow_on_shared_tail() {
+        let mut cache = PagedKvCache::new(shape(), 4);
+        cache.insert_sequence(SeqId(1), &[1, 2], &mut fill);
+        // Alias the partial page deliberately via full-page share of 0 tokens
+        // then manual alias is impossible through the API; instead share a
+        // full-page prefix and diverge inside the NEXT page.
+        cache.insert_sequence(SeqId(3), &[1, 2, 3, 4, 5], &mut fill);
+        let aliased = cache.insert_sequence_shared(SeqId(4), SeqId(3), &[1, 2, 3, 4, 5], 5, &mut fill);
+        assert_eq!(aliased, 4);
+        // Seq4's tail page (token 5) is private already; append must not COW.
+        let pages_before = cache.in_use_pages();
+        cache.append_token(SeqId(4), &[9.0; 8], &[9.0; 8]);
+        assert_eq!(cache.in_use_pages(), pages_before);
+        cache.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn remove_frees_unreferenced_pages_only() {
+        let mut cache = PagedKvCache::new(shape(), 4);
+        cache.insert_sequence(SeqId(1), &[1, 2, 3, 4, 5, 6, 7, 8], &mut fill);
+        cache.insert_sequence_shared(SeqId(2), SeqId(1), &[1, 2, 3, 4, 9, 9], 4, &mut fill);
+        cache.remove_sequence(SeqId(1));
+        // Page 0 still referenced by seq 2; seq1's second page freed.
+        assert_eq!(cache.in_use_pages(), 2);
+        cache.remove_sequence(SeqId(2));
+        assert_eq!(cache.in_use_pages(), 0);
+        cache.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn page_reuse_from_free_list() {
+        let mut cache = PagedKvCache::new(shape(), 4);
+        cache.insert_sequence(SeqId(1), &[1, 2, 3, 4], &mut fill);
+        cache.remove_sequence(SeqId(1));
+        cache.insert_sequence(SeqId(2), &[5, 6], &mut fill);
+        assert_eq!(cache.pages.len(), 1, "freed page must be reused");
+        cache.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn peak_accounting() {
+        let mut cache = PagedKvCache::new(shape(), 4);
+        cache.insert_sequence(SeqId(1), &[1, 2, 3, 4, 5, 6, 7, 8], &mut fill);
+        let peak = cache.peak_bytes_fp16();
+        assert_eq!(peak, (2 * 2 * 4 * 4 * 2 * 2) as u64);
+        cache.remove_sequence(SeqId(1));
+        assert_eq!(cache.peak_bytes_fp16(), peak);
+    }
+
+    #[test]
+    fn rows_survive_page_indirection() {
+        let s = shape();
+        let mut cache = PagedKvCache::new(s, 4);
+        cache.insert_sequence(SeqId(1), &[10, 20, 30, 40, 50], &mut fill);
+        // Token at pos 4 lives in page 1 slot 0.
+        let table = cache.page_table(SeqId(1)).unwrap().to_vec();
+        let k = cache.page_k_head(table[1], 1);
+        assert_eq!(k[0], 4.0 + 50.0 * 0.01);
+    }
+}

@@ -1,0 +1,238 @@
+//! Prefix retention with LRU eviction — the multi-tenant extension the
+//! paper's §5 points at ("discover redundancy ... at runtime
+//! automatically") taken one step further: keep *hot tenants'* system
+//! prompt KV resident even when no live request references it, so the next
+//! request of that tenant skips prefill entirely; evict the least recently
+//! used retained prefix when the chunk budget is exceeded.
+//!
+//! Implemented without modifying the tree: a retained prefix is pinned by a
+//! *pin sequence* (ids from a reserved high range) inserted over an
+//! already-cached prefix. Evicting = removing the pin sequence; the tree's
+//! normal refcounting then frees exactly the chunks nothing else uses.
+
+use std::collections::BTreeMap;
+
+use super::tree::{PrefixTree, SeqId};
+
+/// Pin sequence ids live at the top of the id space; real request ids must
+/// stay below this.
+pub const PIN_ID_BASE: u64 = u64::MAX - (1 << 20);
+
+#[derive(Debug, Clone)]
+struct Pin {
+    seq: SeqId,
+    tokens: usize,
+    last_used: u64,
+}
+
+/// LRU-retained prefixes over a [`PrefixTree`], bounded by a chunk budget.
+pub struct PrefixRetainer {
+    /// key: the pinned prefix tokens (exact match).
+    pins: BTreeMap<Vec<u32>, Pin>,
+    next_pin_id: u64,
+    clock: u64,
+    /// Max chunks the whole tree may keep in use before pins are evicted.
+    budget_chunks: usize,
+}
+
+impl PrefixRetainer {
+    pub fn new(budget_chunks: usize) -> Self {
+        PrefixRetainer { pins: BTreeMap::new(), next_pin_id: PIN_ID_BASE, clock: 0, budget_chunks }
+    }
+
+    pub fn pinned_count(&self) -> usize {
+        self.pins.len()
+    }
+
+    /// Pin `prefix` so its KV survives its sequences. The prefix must be
+    /// fully cached already (call right after inserting a request that
+    /// carries it). Touches LRU state if already pinned. Returns whether a
+    /// new pin was created.
+    pub fn pin(&mut self, tree: &mut PrefixTree, prefix: &[u32]) -> bool {
+        self.clock += 1;
+        if prefix.is_empty() {
+            return false;
+        }
+        if let Some(pin) = self.pins.get_mut(prefix) {
+            pin.last_used = self.clock;
+            return false;
+        }
+        // Only pin prefixes whose KV is fully present; the pin's fill
+        // callback must never run.
+        if tree.match_prefix(prefix) < prefix.len() {
+            return false;
+        }
+        let seq = SeqId(self.next_pin_id);
+        self.next_pin_id += 1;
+        tree.insert_sequence(seq, prefix, &mut |_, _, _, _| {
+            unreachable!("pin over fully cached prefix never computes KV")
+        });
+        self.pins.insert(
+            prefix.to_vec(),
+            Pin { seq, tokens: prefix.len(), last_used: self.clock },
+        );
+        self.enforce_budget(tree);
+        true
+    }
+
+    /// Record a cache hit on a pinned prefix (any request whose prompt
+    /// starts with it), refreshing its LRU position.
+    pub fn touch(&mut self, prompt: &[u32]) {
+        self.clock += 1;
+        let clock = self.clock;
+        for (prefix, pin) in self.pins.iter_mut() {
+            if prompt.len() >= prefix.len() && &prompt[..prefix.len()] == prefix.as_slice() {
+                pin.last_used = clock;
+            }
+        }
+    }
+
+    /// Evict least-recently-used pins until the tree fits the budget.
+    /// Returns how many pins were evicted.
+    pub fn enforce_budget(&mut self, tree: &mut PrefixTree) -> usize {
+        let mut evicted = 0;
+        while tree.pool().in_use() > self.budget_chunks && !self.pins.is_empty() {
+            let lru_key = self
+                .pins
+                .iter()
+                .min_by_key(|(_, p)| p.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty");
+            let pin = self.pins.remove(&lru_key).unwrap();
+            tree.remove_sequence(pin.seq);
+            evicted += 1;
+        }
+        evicted
+    }
+
+    /// Drop every pin (shutdown / tests).
+    pub fn unpin_all(&mut self, tree: &mut PrefixTree) {
+        for (_, pin) in std::mem::take(&mut self.pins) {
+            tree.remove_sequence(pin.seq);
+        }
+    }
+
+    /// Total tokens currently kept alive by pins.
+    pub fn pinned_tokens(&self) -> usize {
+        self.pins.values().map(|p| p.tokens).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::KvShape;
+
+    fn fill(_p: usize, t: u32, k: &mut [f32], v: &mut [f32]) {
+        k.fill(t as f32);
+        v.fill(-(t as f32));
+    }
+
+    fn tree() -> PrefixTree {
+        PrefixTree::new(KvShape::new(1, 2, 4))
+    }
+
+    #[test]
+    fn retained_prefix_survives_sequence_departure() {
+        let mut t = tree();
+        let mut r = PrefixRetainer::new(1000);
+        let sys: Vec<u32> = (0..8).collect();
+        let mut prompt = sys.clone();
+        prompt.extend([100, 101]);
+        t.insert_sequence(SeqId(1), &prompt, &mut fill);
+        assert!(r.pin(&mut t, &sys));
+        t.remove_sequence(SeqId(1));
+        // The system prompt chunks are still resident...
+        assert_eq!(t.match_prefix(&prompt), 8);
+        assert_eq!(t.pool().in_use(), 2);
+        // ...so a new request reuses them without recompute.
+        let out = t.insert_sequence(SeqId(2), &prompt, &mut fill);
+        assert_eq!(out.matched_tokens, 8);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pin_requires_fully_cached_prefix() {
+        let mut t = tree();
+        let mut r = PrefixRetainer::new(1000);
+        assert!(!r.pin(&mut t, &[1, 2, 3]), "nothing cached yet");
+        t.insert_sequence(SeqId(1), &[1, 2], &mut fill);
+        assert!(!r.pin(&mut t, &[1, 2, 3]), "only a shorter prefix is cached");
+        assert!(r.pin(&mut t, &[1, 2]));
+    }
+
+    #[test]
+    fn lru_eviction_under_budget() {
+        let mut t = tree();
+        let mut r = PrefixRetainer::new(4); // 4 chunks of 4 tokens
+        // Three tenants, 8 tokens (2 chunks) each.
+        for tenant in 0..3u32 {
+            let sys: Vec<u32> = (0..8).map(|i| tenant * 100 + i).collect();
+            t.insert_sequence(SeqId(tenant as u64), &sys, &mut fill);
+            r.pin(&mut t, &sys);
+            t.remove_sequence(SeqId(tenant as u64));
+        }
+        // Budget 4 chunks = 2 tenants; tenant 0 (LRU) must be gone.
+        assert_eq!(r.pinned_count(), 2);
+        assert!(t.pool().in_use() <= 4);
+        assert_eq!(t.match_prefix(&(0..8).collect::<Vec<_>>()), 0, "tenant 0 evicted");
+        assert_eq!(t.match_prefix(&(200..208).collect::<Vec<_>>()), 8, "tenant 2 retained");
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn touch_refreshes_lru_order() {
+        let mut t = tree();
+        let mut r = PrefixRetainer::new(4);
+        let sys_a: Vec<u32> = (0..8).collect();
+        let sys_b: Vec<u32> = (100..108).collect();
+        t.insert_sequence(SeqId(1), &sys_a, &mut fill);
+        r.pin(&mut t, &sys_a);
+        t.remove_sequence(SeqId(1));
+        t.insert_sequence(SeqId(2), &sys_b, &mut fill);
+        r.pin(&mut t, &sys_b);
+        t.remove_sequence(SeqId(2));
+        // A is older, but a request touches it — B becomes LRU.
+        let mut prompt_a = sys_a.clone();
+        prompt_a.push(999);
+        r.touch(&prompt_a);
+        // Third tenant forces one eviction.
+        let sys_c: Vec<u32> = (200..208).collect();
+        t.insert_sequence(SeqId(3), &sys_c, &mut fill);
+        r.pin(&mut t, &sys_c);
+        t.remove_sequence(SeqId(3));
+        assert_eq!(t.match_prefix(&sys_a), 8, "A retained (recently touched)");
+        assert_eq!(t.match_prefix(&sys_b), 0, "B evicted");
+    }
+
+    #[test]
+    fn unpin_all_releases_everything() {
+        let mut t = tree();
+        let mut r = PrefixRetainer::new(100);
+        let sys: Vec<u32> = (0..12).collect();
+        t.insert_sequence(SeqId(1), &sys, &mut fill);
+        r.pin(&mut t, &sys);
+        t.remove_sequence(SeqId(1));
+        assert!(t.pool().in_use() > 0);
+        r.unpin_all(&mut t);
+        assert_eq!(t.pool().in_use(), 0);
+        assert_eq!(r.pinned_tokens(), 0);
+    }
+
+    #[test]
+    fn live_sequences_are_never_evicted() {
+        let mut t = tree();
+        let mut r = PrefixRetainer::new(1); // absurdly small budget
+        let sys: Vec<u32> = (0..8).collect();
+        let mut prompt = sys.clone();
+        prompt.extend([55, 56]);
+        t.insert_sequence(SeqId(1), &prompt, &mut fill);
+        r.pin(&mut t, &sys);
+        // Budget enforcement may drop the pin, but the live sequence keeps
+        // its chunks.
+        r.enforce_budget(&mut t);
+        let (_, _, tokens) = t.gather_dense(SeqId(1)).unwrap();
+        assert_eq!(tokens, prompt);
+        t.check_invariants().unwrap();
+    }
+}

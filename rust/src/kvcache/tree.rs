@@ -1,0 +1,862 @@
+//! The prefix tree over KV chunks — the paper's PAKV contribution (§3.1).
+//!
+//! Each node owns one [`Chunk`]; each root-to-leaf path spells a sequence's
+//! token prefix. Sequences whose prompts share a prefix share the nodes (and
+//! therefore the physical K/V memory) of that prefix. The tree supports the
+//! three runtime events of §3.1 — sequence join, sequence leave, and
+//! decode-append — plus mid-chunk *splitting* so that prompts diverging in
+//! the middle of a chunk still share the common part.
+//!
+//! The kernel-facing view is a [`TreeContext`] (§3.3 "context"): a
+//! topologically ordered list of `(chunk, start_seq, end_seq)` entries where
+//! the covered sequences of every chunk form a contiguous interval of the
+//! DFS sequence order — the key property that lets the chunk-first kernel
+//! slice the query tensor. Context generation is *lazy*: it is cached and
+//! only rebuilt when the tree structure changes (chunk filled, join, leave),
+//! mirroring the paper's lazy context copy.
+
+use std::collections::BTreeMap;
+
+use super::chunk::{Chunk, ChunkId, ChunkPool, KvShape};
+
+/// Sequence identifier assigned by the caller (request id).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SeqId(pub u64);
+
+/// Handle to a tree node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct NodeId(u32);
+
+#[derive(Debug)]
+struct Node {
+    chunk: ChunkId,
+    parent: Option<NodeId>,
+    children: Vec<NodeId>,
+    /// Number of live sequences whose path passes through this node.
+    nseqs: usize,
+    /// Number of live sequences terminating exactly here.
+    nterm: usize,
+}
+
+#[derive(Debug)]
+enum Slot {
+    Used(Node),
+    Free,
+}
+
+#[derive(Debug, Clone)]
+struct SeqInfo {
+    leaf: NodeId,
+    /// Total logical tokens of the sequence.
+    len: usize,
+}
+
+/// Kernel-facing context entry: one chunk and the contiguous interval
+/// `[start, end)` of sequence rows it covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CtxEntry {
+    pub node: NodeId,
+    pub chunk: ChunkId,
+    pub start: usize,
+    pub end: usize,
+}
+
+impl CtxEntry {
+    /// Shared chunks (covering >1 sequence) go to the chunk-first phase.
+    pub fn is_shared(&self) -> bool {
+        self.end - self.start > 1
+    }
+}
+
+/// Cached, topologically ordered tree context (§3.3).
+#[derive(Debug, Clone, Default)]
+pub struct TreeContext {
+    /// DFS order of live sequences; row `r` of the query matrix belongs to
+    /// `seq_order[r]`.
+    pub seq_order: Vec<SeqId>,
+    /// All chunks in parent-before-child order with covered intervals.
+    pub entries: Vec<CtxEntry>,
+}
+
+impl TreeContext {
+    /// Entries shared by more than one sequence (chunk-first phase input).
+    pub fn shared(&self) -> impl Iterator<Item = &CtxEntry> {
+        self.entries.iter().filter(|e| e.is_shared())
+    }
+
+    /// Entries private to exactly one sequence (sequence-first phase input).
+    pub fn private(&self) -> impl Iterator<Item = &CtxEntry> {
+        self.entries.iter().filter(|e| !e.is_shared())
+    }
+
+    /// Row index of a sequence in the query matrix.
+    pub fn row_of(&self, seq: SeqId) -> Option<usize> {
+        self.seq_order.iter().position(|&s| s == seq)
+    }
+}
+
+/// Outcome of inserting a sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InsertOutcome {
+    /// Tokens whose K/V were found in the tree (no recomputation needed).
+    pub matched_tokens: usize,
+    /// Total tokens inserted (== prompt length).
+    pub total_tokens: usize,
+}
+
+/// Callback that produces the K/V rows for one token position.
+/// Arguments: `(position_in_sequence, token, k_out, v_out)` where the output
+/// slices are `[heads * head_dim]`.
+pub type KvFill<'a> = &'a mut dyn FnMut(usize, u32, &mut [f32], &mut [f32]);
+
+/// Prefix tree KV cache (a forest: one root per distinct first chunk).
+pub struct PrefixTree {
+    pool: ChunkPool,
+    slots: Vec<Slot>,
+    free_slots: Vec<NodeId>,
+    roots: Vec<NodeId>,
+    seqs: BTreeMap<SeqId, SeqInfo>,
+    /// Bumped on every structural change; invalidates the cached context.
+    epoch: u64,
+    ctx_cache: Option<(u64, TreeContext)>,
+    /// Lazy-context statistics for the ablation bench.
+    ctx_rebuilds: u64,
+    ctx_hits: u64,
+    /// When false, the context is rebuilt on every call (ablation baseline).
+    pub lazy_context: bool,
+}
+
+impl PrefixTree {
+    pub fn new(shape: KvShape) -> Self {
+        PrefixTree {
+            pool: ChunkPool::new(shape),
+            slots: Vec::new(),
+            free_slots: Vec::new(),
+            roots: Vec::new(),
+            seqs: BTreeMap::new(),
+            epoch: 0,
+            ctx_cache: None,
+            ctx_rebuilds: 0,
+            ctx_hits: 0,
+            lazy_context: true,
+        }
+    }
+
+    pub fn shape(&self) -> KvShape {
+        self.pool.shape()
+    }
+
+    pub fn pool(&self) -> &ChunkPool {
+        &self.pool
+    }
+
+    pub fn chunk(&self, id: ChunkId) -> &Chunk {
+        self.pool.get(id)
+    }
+
+    pub fn num_sequences(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn sequence_len(&self, seq: SeqId) -> Option<usize> {
+        self.seqs.get(&seq).map(|s| s.len)
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn context_stats(&self) -> (u64, u64) {
+        (self.ctx_rebuilds, self.ctx_hits)
+    }
+
+    fn node(&self, id: NodeId) -> &Node {
+        match &self.slots[id.0 as usize] {
+            Slot::Used(n) => n,
+            Slot::Free => panic!("dangling node {id:?}"),
+        }
+    }
+
+    fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        match &mut self.slots[id.0 as usize] {
+            Slot::Used(n) => n,
+            Slot::Free => panic!("dangling node {id:?}"),
+        }
+    }
+
+    fn new_node(&mut self, parent: Option<NodeId>) -> NodeId {
+        let chunk = self.pool.acquire();
+        let node = Node { chunk, parent, children: Vec::new(), nseqs: 0, nterm: 0 };
+        match self.free_slots.pop() {
+            Some(id) => {
+                self.slots[id.0 as usize] = Slot::Used(node);
+                id
+            }
+            None => {
+                let id = NodeId(self.slots.len() as u32);
+                self.slots.push(Slot::Used(node));
+                id
+            }
+        }
+    }
+
+    fn free_node(&mut self, id: NodeId) {
+        let chunk = self.node(id).chunk;
+        self.pool.release(chunk);
+        self.slots[id.0 as usize] = Slot::Free;
+        self.free_slots.push(id);
+    }
+
+    fn bump_epoch(&mut self) {
+        self.epoch += 1;
+    }
+
+    /// How many leading tokens of `tokens` are already cached (read-only).
+    /// The engine uses this to know which suffix needs prefill compute.
+    pub fn match_prefix(&self, tokens: &[u32]) -> usize {
+        let mut matched = 0;
+        let mut cursor: Option<&[NodeId]> = Some(&self.roots);
+        while matched < tokens.len() {
+            let candidates = match cursor {
+                Some(c) => c,
+                None => break,
+            };
+            let mut advanced = false;
+            for &child in candidates {
+                let chunk = self.pool.get(self.node(child).chunk);
+                let m = common_prefix(chunk.tokens(), &tokens[matched..]);
+                if m > 0 {
+                    matched += m;
+                    if m == chunk.len() {
+                        cursor = Some(&self.node(child).children);
+                    } else {
+                        cursor = None; // diverged mid-chunk; stop
+                    }
+                    advanced = true;
+                    break;
+                }
+            }
+            if !advanced {
+                break;
+            }
+        }
+        matched
+    }
+
+    /// Insert a new sequence with the given prompt tokens. K/V rows for the
+    /// unmatched suffix are produced by `fill` (position, token, k, v).
+    ///
+    /// Matched prefix chunks are shared: their K/V are *not* recomputed
+    /// (§3.2 prefilling: "perform a prefix lookup to avoid repeated
+    /// computation of KV projection ... for matched prompt prefixes").
+    pub fn insert_sequence(&mut self, seq: SeqId, tokens: &[u32], fill: KvFill) -> InsertOutcome {
+        assert!(!self.seqs.contains_key(&seq), "sequence {seq:?} already present");
+        assert!(!tokens.is_empty(), "empty prompt");
+        let shape = self.pool.shape();
+        let mut pos = 0usize;
+
+        // Phase 1: walk matching whole or partial chunks.
+        let mut parent: Option<NodeId> = None;
+        let mut matched_tokens = 0usize;
+        loop {
+            let candidates: Vec<NodeId> = match parent {
+                None => self.roots.clone(),
+                Some(p) => self.node(p).children.clone(),
+            };
+            let mut next: Option<(NodeId, usize)> = None;
+            for child in candidates {
+                let chunk = self.pool.get(self.node(child).chunk);
+                let m = common_prefix(chunk.tokens(), &tokens[pos..]);
+                if m > 0 {
+                    next = Some((child, m));
+                    break;
+                }
+            }
+            let Some((child, m)) = next else { break };
+            let chunk_len = self.pool.get(self.node(child).chunk).len();
+            if m < chunk_len {
+                // Diverged (or exhausted) mid-chunk: split `child` at `m` so
+                // the common part stays shared.
+                self.split_node(child, m);
+            }
+            self.node_mut(child).nseqs += 1;
+            pos += m;
+            matched_tokens += m;
+            parent = Some(child);
+            if pos == tokens.len() {
+                break;
+            }
+            // If we diverged mid-chunk the split already happened and no
+            // child can match; the loop exits naturally on the next probe.
+        }
+
+        // Phase 2: append the unmatched suffix into fresh chunks.
+        // A shared, partially-filled chunk is never extended in place — that
+        // would mutate another sequence's prefix — so the suffix always goes
+        // into new nodes ("some memory is unused due to alignment", §3.1).
+        let mut k_row = vec![0.0f32; shape.heads * shape.head_dim];
+        let mut v_row = vec![0.0f32; shape.heads * shape.head_dim];
+        let mut leaf = parent;
+        while pos < tokens.len() {
+            let node = self.new_node(leaf);
+            match leaf {
+                None => self.roots.push(node),
+                Some(p) => self.node_mut(p).children.push(node),
+            }
+            self.node_mut(node).nseqs += 1;
+            let take = (tokens.len() - pos).min(shape.chunk_size);
+            for i in 0..take {
+                let t = tokens[pos + i];
+                fill(pos + i, t, &mut k_row, &mut v_row);
+                let chunk_id = self.node(node).chunk;
+                self.pool.get_mut(chunk_id).append(&shape, t, &k_row, &v_row);
+            }
+            pos += take;
+            leaf = Some(node);
+        }
+
+        let leaf = leaf.expect("non-empty prompt yields a leaf");
+        self.node_mut(leaf).nterm += 1;
+        self.seqs.insert(seq, SeqInfo { leaf, len: tokens.len() });
+        self.bump_epoch();
+        InsertOutcome { matched_tokens, total_tokens: tokens.len() }
+    }
+
+    /// Split `node`'s chunk at offset `at` (> 0): the first `at` tokens stay
+    /// in `node`; the remainder moves into a new child that inherits the old
+    /// children and terminating sequences.
+    fn split_node(&mut self, node: NodeId, at: usize) {
+        let shape = self.pool.shape();
+        let chunk_len = self.pool.get(self.node(node).chunk).len();
+        assert!(at > 0 && at < chunk_len, "split at {at} of {chunk_len}");
+        let tail = self.new_node(Some(node));
+        // Move the K/V suffix rows into the tail chunk.
+        let (node_chunk, tail_chunk) = (self.node(node).chunk, self.node(tail).chunk);
+        let (src, dst) = self.pool.get2_mut(node_chunk, tail_chunk);
+        dst.take_suffix_from(&shape, src, at);
+        // Rewire children: old children hang off the tail now.
+        let old_children = std::mem::take(&mut self.node_mut(node).children);
+        for &c in &old_children {
+            self.node_mut(c).parent = Some(tail);
+        }
+        let (nseqs, nterm) = {
+            let n = self.node(node);
+            (n.nseqs, n.nterm)
+        };
+        {
+            let t = self.node_mut(tail);
+            t.children = old_children;
+            t.nseqs = nseqs;
+            t.nterm = nterm;
+        }
+        self.node_mut(node).children = vec![tail];
+        self.node_mut(node).nterm = 0;
+        // Sequences that terminated at `node` now terminate at `tail`.
+        for info in self.seqs.values_mut() {
+            if info.leaf == node {
+                info.leaf = tail;
+            }
+        }
+    }
+
+    /// Remove a completed sequence, releasing chunks that no live sequence
+    /// references (they return to the pool's free list).
+    pub fn remove_sequence(&mut self, seq: SeqId) {
+        let info = self.seqs.remove(&seq).unwrap_or_else(|| panic!("unknown {seq:?}"));
+        self.node_mut(info.leaf).nterm -= 1;
+        let mut cur = Some(info.leaf);
+        while let Some(id) = cur {
+            let parent = self.node(id).parent;
+            let n = self.node_mut(id);
+            n.nseqs -= 1;
+            if n.nseqs == 0 {
+                debug_assert!(n.children.is_empty(), "orphaned children under dead node");
+                match parent {
+                    Some(p) => {
+                        let siblings = &mut self.node_mut(p).children;
+                        siblings.retain(|&c| c != id);
+                    }
+                    None => self.roots.retain(|&r| r != id),
+                }
+                self.free_node(id);
+            }
+            cur = parent;
+        }
+        self.bump_epoch();
+    }
+
+    /// Decode-append one token for a sequence. Only triggers a structural
+    /// change (and context rebuild) when the leaf chunk is full or shared.
+    pub fn append_token(&mut self, seq: SeqId, token: u32, k_rows: &[f32], v_rows: &[f32]) {
+        let shape = self.pool.shape();
+        let info = self.seqs.get(&seq).unwrap_or_else(|| panic!("unknown {seq:?}")).clone();
+        let leaf = info.leaf;
+        let leaf_private = self.node(leaf).nseqs == 1;
+        let leaf_full = self.pool.get(self.node(leaf).chunk).len() >= shape.chunk_size;
+        if leaf_private && !leaf_full {
+            // Fast path: extend the private tail chunk in place. The tree
+            // structure is unchanged, so the cached context stays valid.
+            let chunk_id = self.node(leaf).chunk;
+            self.pool.get_mut(chunk_id).append(&shape, token, k_rows, v_rows);
+        } else {
+            // Grow a fresh private chunk under the current leaf.
+            let node = self.new_node(Some(leaf));
+            self.node_mut(leaf).children.push(node);
+            self.node_mut(leaf).nterm -= 1;
+            self.node_mut(node).nseqs = 1;
+            self.node_mut(node).nterm = 1;
+            let chunk_id = self.node(node).chunk;
+            self.pool.get_mut(chunk_id).append(&shape, token, k_rows, v_rows);
+            self.seqs.get_mut(&seq).unwrap().leaf = node;
+            self.bump_epoch();
+        }
+        self.seqs.get_mut(&seq).unwrap().len += 1;
+    }
+
+    /// The kernel context (§3.3), cached across decode iterations and
+    /// rebuilt only when the structure changed (lazy context copy).
+    pub fn context(&mut self) -> TreeContext {
+        if self.lazy_context {
+            if let Some((epoch, ctx)) = &self.ctx_cache {
+                if *epoch == self.epoch {
+                    self.ctx_hits += 1;
+                    return ctx.clone();
+                }
+            }
+        }
+        let ctx = self.build_context();
+        self.ctx_rebuilds += 1;
+        self.ctx_cache = Some((self.epoch, ctx.clone()));
+        ctx
+    }
+
+    fn build_context(&self) -> TreeContext {
+        let mut ctx = TreeContext::default();
+        // Iterative DFS assigning contiguous sequence intervals.
+        // Leaf-to-seq mapping: collect sequences terminating at each node.
+        let mut term: BTreeMap<u32, Vec<SeqId>> = BTreeMap::new();
+        for (&seq, info) in &self.seqs {
+            term.entry(info.leaf.0).or_default().push(seq);
+        }
+        fn dfs(
+            tree: &PrefixTree,
+            node: NodeId,
+            term: &BTreeMap<u32, Vec<SeqId>>,
+            ctx: &mut TreeContext,
+        ) {
+            let start = ctx.seq_order.len();
+            // Sequences ending exactly here come first in the interval.
+            if let Some(seqs) = term.get(&node.0) {
+                ctx.seq_order.extend_from_slice(seqs);
+            }
+            let entry_idx = ctx.entries.len();
+            ctx.entries.push(CtxEntry { node, chunk: tree.node(node).chunk, start, end: 0 });
+            for &child in &tree.node(node).children {
+                dfs(tree, child, term, ctx);
+            }
+            ctx.entries[entry_idx].end = ctx.seq_order.len();
+        }
+        for &root in &self.roots {
+            dfs(self, root, &term, &mut ctx);
+        }
+        ctx
+    }
+
+    /// Gather a sequence's full K/V into dense `[heads, len, head_dim]`
+    /// buffers (used by prefill, baselines, and tests).
+    pub fn gather_dense(&self, seq: SeqId) -> Option<(Vec<f32>, Vec<f32>, Vec<u32>)> {
+        let info = self.seqs.get(&seq)?;
+        let shape = self.pool.shape();
+        // Collect path root..leaf.
+        let mut path = Vec::new();
+        let mut cur = Some(info.leaf);
+        while let Some(id) = cur {
+            path.push(id);
+            cur = self.node(id).parent;
+        }
+        path.reverse();
+        let n = info.len;
+        let mut k = vec![0.0f32; shape.heads * n * shape.head_dim];
+        let mut v = vec![0.0f32; shape.heads * n * shape.head_dim];
+        let mut tokens = Vec::with_capacity(n);
+        let mut pos = 0usize;
+        for id in path {
+            let chunk = self.pool.get(self.node(id).chunk);
+            for h in 0..shape.heads {
+                for p in 0..chunk.len() {
+                    let src = shape.row_offset(h, p);
+                    let dst = (h * n + pos + p) * shape.head_dim;
+                    k[dst..dst + shape.head_dim]
+                        .copy_from_slice(&chunk.k()[src..src + shape.head_dim]);
+                    v[dst..dst + shape.head_dim]
+                        .copy_from_slice(&chunk.v()[src..src + shape.head_dim]);
+                }
+            }
+            tokens.extend_from_slice(chunk.tokens());
+            pos += chunk.len();
+        }
+        debug_assert_eq!(pos, n);
+        Some((k, v, tokens))
+    }
+
+    /// Locate the chunk whose tokens begin at offset `pos` along the path
+    /// matching `tokens`. Returns `(usable_len, k, v)` where `usable_len`
+    /// is how many of the chunk's tokens match from `pos` on, and the K/V
+    /// slices are the full `[heads, chunk_size, head_dim]` chunk tensors.
+    /// Used by prefill to gather a matched prefix without owning a SeqId.
+    pub fn find_chunk_at(&self, tokens: &[u32], pos: usize) -> Option<(usize, &[f32], &[f32])> {
+        let mut offset = 0usize;
+        let mut candidates: &[NodeId] = &self.roots;
+        loop {
+            let mut found = None;
+            for &c in candidates {
+                let chunk = self.pool.get(self.node(c).chunk);
+                let m = common_prefix(chunk.tokens(), &tokens[offset..]);
+                if m > 0 {
+                    found = Some((c, m));
+                    break;
+                }
+            }
+            let (node_id, m) = found?;
+            let chunk = self.pool.get(self.node(node_id).chunk);
+            if offset == pos {
+                return Some((m, chunk.k(), chunk.v()));
+            }
+            if m < chunk.len() {
+                return None; // diverged before reaching pos
+            }
+            offset += m;
+            if offset > pos {
+                return None; // pos falls inside this chunk, not at its start
+            }
+            candidates = &self.node(node_id).children;
+        }
+    }
+
+    /// Logical tokens currently represented (sum over sequences) vs physical
+    /// tokens stored (sum over chunks) — the sharing ratio of §3.1.
+    pub fn sharing_stats(&self) -> SharingStats {
+        let logical: usize = self.seqs.values().map(|s| s.len).sum();
+        let mut physical = 0usize;
+        let mut chunks = 0usize;
+        for slot in &self.slots {
+            if let Slot::Used(n) = slot {
+                physical += self.pool.get(n.chunk).len();
+                chunks += 1;
+            }
+        }
+        SharingStats { logical_tokens: logical, physical_tokens: physical, chunks }
+    }
+
+    /// Integrity check used by tests and property tests: verifies refcounts,
+    /// parent/child symmetry, interval contiguity and token round-trips.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        // nseqs consistency: recompute by walking every sequence's path.
+        let mut counted: BTreeMap<u32, usize> = BTreeMap::new();
+        for info in self.seqs.values() {
+            let mut cur = Some(info.leaf);
+            while let Some(id) = cur {
+                *counted.entry(id.0).or_default() += 1;
+                cur = self.node(id).parent;
+            }
+        }
+        let mut used_nodes = 0;
+        for (i, slot) in self.slots.iter().enumerate() {
+            if let Slot::Used(n) = slot {
+                used_nodes += 1;
+                let expect = counted.get(&(i as u32)).copied().unwrap_or(0);
+                if n.nseqs != expect {
+                    return Err(format!("node {i}: nseqs {} != walked {expect}", n.nseqs));
+                }
+                if n.nseqs == 0 {
+                    return Err(format!("node {i}: zero-ref node not freed"));
+                }
+                for &c in &n.children {
+                    if self.node(c).parent != Some(NodeId(i as u32)) {
+                        return Err(format!("node {i}: child {c:?} parent mismatch"));
+                    }
+                }
+                let chunk_len = self.pool.get(n.chunk).len();
+                if chunk_len == 0 {
+                    return Err(format!("node {i}: empty chunk"));
+                }
+            }
+        }
+        if used_nodes != self.pool.in_use() {
+            return Err(format!("{used_nodes} nodes vs {} chunks in use", self.pool.in_use()));
+        }
+        // Context invariants.
+        let ctx = self.build_context();
+        if ctx.seq_order.len() != self.seqs.len() {
+            return Err("context misses sequences".into());
+        }
+        for e in &ctx.entries {
+            if e.start >= e.end {
+                return Err(format!("empty interval {e:?}"));
+            }
+            let node = self.node(e.node);
+            if e.end - e.start != node.nseqs {
+                return Err(format!("interval width {} != nseqs {}", e.end - e.start, node.nseqs));
+            }
+            if let Some(p) = node.parent {
+                let pe = ctx.entries.iter().find(|x| x.node == p).unwrap();
+                if pe.start > e.start || pe.end < e.end {
+                    return Err(format!("child interval {e:?} escapes parent {pe:?}"));
+                }
+            }
+        }
+        // Token round-trip per sequence.
+        for (&seq, info) in &self.seqs {
+            let (_, _, tokens) = self.gather_dense(seq).unwrap();
+            if tokens.len() != info.len {
+                return Err(format!("{seq:?}: dense len {} != {}", tokens.len(), info.len));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Sharing statistics (§3.1): capacity gain is `logical/physical`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SharingStats {
+    pub logical_tokens: usize,
+    pub physical_tokens: usize,
+    pub chunks: usize,
+}
+
+impl SharingStats {
+    /// Fraction of logical tokens that are deduplicated away.
+    pub fn sharing_ratio(&self) -> f64 {
+        if self.logical_tokens == 0 {
+            0.0
+        } else {
+            1.0 - self.physical_tokens as f64 / self.logical_tokens as f64
+        }
+    }
+}
+
+fn common_prefix(a: &[u32], b: &[u32]) -> usize {
+    a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> KvShape {
+        KvShape::new(2, 4, 4) // tiny chunks: splits and growth exercise easily
+    }
+
+    /// Deterministic fake KV: row value encodes (pos, token) so shared rows
+    /// are verifiable.
+    fn fill_fn(pos: usize, token: u32, k: &mut [f32], v: &mut [f32]) {
+        for (i, x) in k.iter_mut().enumerate() {
+            *x = pos as f32 * 1000.0 + token as f32 + i as f32 * 0.001;
+        }
+        for (i, x) in v.iter_mut().enumerate() {
+            *x = -(pos as f32 * 1000.0 + token as f32) - i as f32 * 0.001;
+        }
+    }
+
+    fn insert(tree: &mut PrefixTree, seq: u64, tokens: &[u32]) -> InsertOutcome {
+        tree.insert_sequence(SeqId(seq), tokens, &mut fill_fn)
+    }
+
+    #[test]
+    fn first_sequence_matches_nothing() {
+        let mut tree = PrefixTree::new(shape());
+        let out = insert(&mut tree, 1, &[1, 2, 3, 4, 5, 6]);
+        assert_eq!(out.matched_tokens, 0);
+        assert_eq!(out.total_tokens, 6);
+        assert_eq!(tree.pool().in_use(), 2); // 4 + 2 tokens
+        tree.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn identical_prompts_share_all_chunks() {
+        let mut tree = PrefixTree::new(shape());
+        insert(&mut tree, 1, &[1, 2, 3, 4, 5, 6, 7, 8]);
+        let out = insert(&mut tree, 2, &[1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(out.matched_tokens, 8);
+        assert_eq!(tree.pool().in_use(), 2, "no new chunks for identical prompt");
+        let stats = tree.sharing_stats();
+        assert_eq!(stats.logical_tokens, 16);
+        assert_eq!(stats.physical_tokens, 8);
+        assert!((stats.sharing_ratio() - 0.5).abs() < 1e-12);
+        tree.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn divergence_at_chunk_boundary() {
+        let mut tree = PrefixTree::new(shape());
+        insert(&mut tree, 1, &[1, 2, 3, 4, 10, 11]);
+        let out = insert(&mut tree, 2, &[1, 2, 3, 4, 20, 21]);
+        assert_eq!(out.matched_tokens, 4);
+        // Shared root chunk + two private tails.
+        assert_eq!(tree.pool().in_use(), 3);
+        tree.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn divergence_mid_chunk_splits() {
+        let mut tree = PrefixTree::new(shape());
+        insert(&mut tree, 1, &[1, 2, 3, 4]);
+        let out = insert(&mut tree, 2, &[1, 2, 9, 9]);
+        assert_eq!(out.matched_tokens, 2);
+        // Split: [1,2] shared, [3,4] private to s1, [9,9] private to s2.
+        assert_eq!(tree.pool().in_use(), 3);
+        tree.check_invariants().unwrap();
+        // K/V rows must have moved with the split.
+        let (_, _, t1) = tree.gather_dense(SeqId(1)).unwrap();
+        assert_eq!(t1, vec![1, 2, 3, 4]);
+        let (_, _, t2) = tree.gather_dense(SeqId(2)).unwrap();
+        assert_eq!(t2, vec![1, 2, 9, 9]);
+    }
+
+    #[test]
+    fn prefix_of_existing_sequence() {
+        let mut tree = PrefixTree::new(shape());
+        insert(&mut tree, 1, &[1, 2, 3, 4, 5, 6]);
+        let out = insert(&mut tree, 2, &[1, 2, 3]);
+        assert_eq!(out.matched_tokens, 3);
+        tree.check_invariants().unwrap();
+        let ctx = tree.context();
+        assert_eq!(ctx.seq_order.len(), 2);
+    }
+
+    #[test]
+    fn match_prefix_agrees_with_insert() {
+        let mut tree = PrefixTree::new(shape());
+        insert(&mut tree, 1, &[1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        for tokens in [&[1u32, 2, 3, 4, 5][..], &[1, 2][..], &[9, 9][..], &[1, 2, 3, 4, 5, 6, 7, 8, 9, 10][..]] {
+            let expect = tree.match_prefix(tokens);
+            let mut probe = PrefixTree::new(shape());
+            insert(&mut probe, 1, &[1, 2, 3, 4, 5, 6, 7, 8, 9]);
+            let got = insert(&mut probe, 2, tokens).matched_tokens;
+            assert_eq!(expect, got, "tokens {tokens:?}");
+        }
+    }
+
+    #[test]
+    fn remove_frees_private_chunks_only() {
+        let mut tree = PrefixTree::new(shape());
+        insert(&mut tree, 1, &[1, 2, 3, 4, 10, 11]);
+        insert(&mut tree, 2, &[1, 2, 3, 4, 20, 21]);
+        assert_eq!(tree.pool().in_use(), 3);
+        tree.remove_sequence(SeqId(2));
+        assert_eq!(tree.pool().in_use(), 2, "shared chunk stays, private tail freed");
+        tree.check_invariants().unwrap();
+        tree.remove_sequence(SeqId(1));
+        assert_eq!(tree.pool().in_use(), 0);
+        assert_eq!(tree.num_sequences(), 0);
+    }
+
+    #[test]
+    fn append_fast_path_keeps_context_valid() {
+        let mut tree = PrefixTree::new(shape());
+        insert(&mut tree, 1, &[1, 2]); // private chunk with room
+        let _ = tree.context();
+        let epoch = tree.epoch();
+        let k = vec![1.0; 8];
+        let v = vec![2.0; 8];
+        tree.append_token(SeqId(1), 3, &k, &v);
+        assert_eq!(tree.epoch(), epoch, "in-place append must not invalidate");
+        let _ = tree.context();
+        let (rebuilds, hits) = tree.context_stats();
+        assert_eq!(rebuilds, 1);
+        assert_eq!(hits, 1);
+        assert_eq!(tree.sequence_len(SeqId(1)), Some(3));
+        tree.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn append_to_shared_leaf_forks() {
+        let mut tree = PrefixTree::new(shape());
+        insert(&mut tree, 1, &[1, 2, 3]);
+        insert(&mut tree, 2, &[1, 2, 3]); // both end on the same (partial) chunk
+        let k = vec![1.0; 8];
+        let v = vec![2.0; 8];
+        tree.append_token(SeqId(1), 100, &k, &v);
+        tree.append_token(SeqId(2), 200, &k, &v);
+        tree.check_invariants().unwrap();
+        let (_, _, t1) = tree.gather_dense(SeqId(1)).unwrap();
+        let (_, _, t2) = tree.gather_dense(SeqId(2)).unwrap();
+        assert_eq!(t1, vec![1, 2, 3, 100]);
+        assert_eq!(t2, vec![1, 2, 3, 200]);
+        // Shared [1,2,3] chunk + two private tails.
+        assert_eq!(tree.pool().in_use(), 3);
+    }
+
+    #[test]
+    fn append_grows_chunk_when_full() {
+        let mut tree = PrefixTree::new(shape());
+        insert(&mut tree, 1, &[1, 2, 3, 4]); // exactly one full chunk
+        let k = vec![0.5; 8];
+        let v = vec![0.25; 8];
+        for t in 5..=9 {
+            tree.append_token(SeqId(1), t, &k, &v);
+        }
+        assert_eq!(tree.sequence_len(SeqId(1)), Some(9));
+        assert_eq!(tree.pool().in_use(), 3); // 4 + 4 + 1
+        tree.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn context_intervals_are_contiguous_dfs() {
+        let mut tree = PrefixTree::new(shape());
+        insert(&mut tree, 1, &[1, 2, 3, 4, 10, 11, 12, 13]);
+        insert(&mut tree, 2, &[1, 2, 3, 4, 20, 21, 22, 23]);
+        insert(&mut tree, 3, &[1, 2, 3, 4, 10, 11, 12, 13, 30, 31]);
+        insert(&mut tree, 4, &[7, 7, 7, 7]);
+        let ctx = tree.context();
+        assert_eq!(ctx.seq_order.len(), 4);
+        // Root chunk [1,2,3,4] covers exactly the three sharing sequences.
+        let root_entry = ctx.entries.iter().find(|e| e.end - e.start == 3).expect("shared root");
+        assert!(root_entry.is_shared());
+        // Sequence 4 is alone in its own tree.
+        let solo = ctx.entries.iter().filter(|e| !e.is_shared()).count();
+        assert!(solo >= 2);
+        tree.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_kv_is_physically_identical() {
+        let mut tree = PrefixTree::new(shape());
+        insert(&mut tree, 1, &[5, 6, 7, 8, 1, 1]);
+        insert(&mut tree, 2, &[5, 6, 7, 8, 2, 2]);
+        let (k1, _, _) = tree.gather_dense(SeqId(1)).unwrap();
+        let (k2, _, _) = tree.gather_dense(SeqId(2)).unwrap();
+        let s = shape();
+        // First 4 tokens of head 0 identical.
+        assert_eq!(&k1[0..4 * s.head_dim], &k2[0..4 * s.head_dim]);
+    }
+
+    #[test]
+    fn forest_multiple_roots() {
+        let mut tree = PrefixTree::new(shape());
+        insert(&mut tree, 1, &[1, 1, 1, 1]);
+        insert(&mut tree, 2, &[2, 2, 2, 2]);
+        insert(&mut tree, 3, &[3, 3, 3, 3]);
+        let ctx = tree.context();
+        assert_eq!(ctx.entries.len(), 3);
+        assert!(ctx.entries.iter().all(|e| !e.is_shared()));
+        tree.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn memory_waste_bound_holds() {
+        // §3.1: alignment loss per sequence is bounded by (c-1)/n.
+        let s = KvShape::new(1, 2, 16);
+        let mut tree = PrefixTree::new(s);
+        for seq in 0..8u64 {
+            let n = 16 * 3 + (seq as usize * 3 + 1) % 16;
+            let tokens: Vec<u32> = (0..n as u32).map(|t| t + seq as u32 * 1000).collect();
+            tree.insert_sequence(SeqId(seq), &tokens, &mut fill_fn);
+            let stats = tree.sharing_stats();
+            let allocated = stats.chunks * 16;
+            let waste = allocated - stats.physical_tokens;
+            assert!(waste <= 8 * (16 - 1), "waste {waste} over bound");
+        }
+        tree.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,31 @@
+//! # ChunkAttention
+//!
+//! Reproduction of *ChunkAttention: Efficient Self-Attention with
+//! Prefix-Aware KV Cache and Two-Phase Partition* (Ye et al., ACL 2024) as a
+//! three-layer Rust + JAX + Pallas serving library:
+//!
+//! - **Layer 3 (this crate)** — the serving coordinator: prefix-aware KV
+//!   cache ([`kvcache::PrefixTree`]), the two-phase-partition decode kernel
+//!   and its baselines ([`attention`]), a continuous-batching engine
+//!   ([`coordinator`]), workload generation ([`workload`]), and an A100
+//!   roofline model ([`perf_model`]) for the paper's analytical tables.
+//! - **Layer 2** — `python/compile/model.py`: a mini Llama-style decoder in
+//!   JAX, AOT-lowered to HLO text artifacts at build time.
+//! - **Layer 1** — `python/compile/kernels/chunk_attn.py`: the TPP kernel in
+//!   Pallas (interpret mode), lowered inside the L2 module.
+//!
+//! The [`runtime`] module loads the AOT artifacts through PJRT and serves
+//! them from the decode path — Python never runs at request time.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod attention;
+pub mod coordinator;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod perf_model;
+pub mod runtime;
+pub mod util;
+pub mod workload;

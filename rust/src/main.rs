@@ -1,0 +1,221 @@
+//! `chunk-serve` — the serving-system CLI.
+//!
+//! Subcommands:
+//!   serve      run the real PJRT-backed engine on a synthetic workload
+//!   simulate   virtual-time e2e simulation at Llama2-7B scale (§4.2)
+//!   kernel     one microkernel measurement (§4.1)
+//!   corpus     print Table-2-style tenant prompt statistics
+
+use chunk_attention::coordinator::{simulate, KernelBench, MicroConfig, SimConfig, SystemKind};
+use chunk_attention::model::ModelConfig;
+use chunk_attention::perf_model::{AttentionImpl, HardwareModel};
+use chunk_attention::runtime::PjrtModel;
+use chunk_attention::util::cli::{Args, Cli};
+use chunk_attention::util::config::Config;
+use chunk_attention::util::stats::{fmt_bytes, fmt_us};
+use chunk_attention::workload::{Corpus, Tokenizer, Trace, TraceConfig};
+
+fn parse_or_exit(cli: &Cli, argv: &[String]) -> Args {
+    match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    chunk_attention::util::logger::init();
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let sub = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
+    match sub.as_str() {
+        "serve" => serve(&argv),
+        "simulate" => simulate_cmd(&argv),
+        "kernel" => kernel(&argv),
+        "corpus" => corpus(&argv),
+        _ => {
+            eprintln!(
+                "chunk-serve — ChunkAttention serving CLI\n\nSUBCOMMANDS:\n  serve      \
+                 serve a synthetic workload through the PJRT mini model\n  simulate   \
+                 virtual-time Llama2-7B e2e simulation\n  kernel     microkernel decode \
+                 measurement\n  corpus     tenant system-prompt statistics\n"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn serve(argv: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("chunk-serve serve", "serve via the AOT-compiled model")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("requests", "12", "number of requests")
+        .opt("tenants", "2", "tenants (distinct system prompts)")
+        .opt("system-tokens", "40", "system prompt tokens per tenant")
+        .opt("completion", "12", "completion tokens per request")
+        .opt("max-batch", "8", "max decode batch")
+        .opt("config", "", "optional TOML config overriding the flags");
+    let args = parse_or_exit(&cli, argv);
+
+    let mut requests = args.get_usize("requests");
+    let mut max_batch = args.get_usize("max-batch");
+    let mut completion = args.get_usize("completion");
+    if !args.get("config").is_empty() {
+        let cfg = Config::load(std::path::Path::new(args.get("config")))
+            .map_err(|e| anyhow::anyhow!(e))?;
+        requests = cfg.usize("serve.requests", requests);
+        max_batch = cfg.usize("serve.max_batch", max_batch);
+        completion = cfg.usize("serve.completion", completion);
+    }
+
+    let model = PjrtModel::load(std::path::Path::new(args.get("artifacts")))?;
+    let chunk_size = model.chunk_size();
+    let max_batch = max_batch.min(model.max_batch());
+    let mut engine = chunk_attention::coordinator::Engine::new(model, chunk_size, max_batch);
+
+    let tenants = args.get_usize("tenants");
+    let sys_tokens = args.get_usize("system-tokens") as u32;
+    let trace = Trace::poisson(
+        &TraceConfig {
+            rps: 50.0,
+            n_requests: requests,
+            n_tenants: tenants,
+            tenant_skew: 0.0,
+            query_tokens: 8,
+            completion_tokens: completion,
+            seed: 11,
+        },
+        |tenant, rng| {
+            let mut p: Vec<u32> = (0..sys_tokens).map(|i| 100 + tenant as u32 * 700 + i).collect();
+            p.extend((0..8).map(|_| rng.below(2000) as u32));
+            let n = p.len();
+            (p, n - 8)
+        },
+    );
+    for r in &trace.requests {
+        engine.submit(r.clone());
+    }
+    let finished = engine.run_to_completion()?;
+    let stats = engine.stats();
+    println!(
+        "served {} requests; decode {:.1} tok/s; prefill reuse {:.0}%",
+        finished.len(),
+        stats.decoded_tokens as f64 / stats.decode_time_s.max(1e-9),
+        100.0 * stats.prefill_tokens_reused as f64
+            / (stats.prefill_tokens_computed + stats.prefill_tokens_reused).max(1) as f64
+    );
+    Ok(())
+}
+
+fn simulate_cmd(argv: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("chunk-serve simulate", "virtual-time 7B-scale e2e simulation")
+        .opt("system", "chunkllama", "chunkllama | vllm | tgi")
+        .opt("rps", "1.0", "mean requests per second")
+        .opt("requests", "100", "requests to simulate")
+        .opt("shared", "1024", "shared prompt tokens (n_s)")
+        .opt("query", "128", "per-request query tokens")
+        .opt("completion", "512", "completion tokens (n_c)")
+        .opt("max-batch", "32", "max decode batch")
+        .opt("seed", "1234", "trace seed");
+    let args = parse_or_exit(&cli, argv);
+    let system = match args.get("system") {
+        "vllm" => SystemKind::Vllm,
+        "tgi" => SystemKind::Tgi,
+        _ => SystemKind::ChunkLlama,
+    };
+    let trace = Trace::poisson_synthetic(
+        &TraceConfig {
+            rps: args.get_f64("rps"),
+            n_requests: args.get_usize("requests"),
+            n_tenants: 1,
+            tenant_skew: 0.0,
+            query_tokens: args.get_usize("query"),
+            completion_tokens: args.get_usize("completion"),
+            seed: args.get_u64("seed"),
+        },
+        args.get_usize("shared"),
+    );
+    let cfg = SimConfig { max_batch: args.get_usize("max-batch"), ..SimConfig::new(system) };
+    let r = simulate(&cfg, &ModelConfig::llama2_7b(), &HardwareModel::a100_80g(), &trace);
+    println!("system:            {}", r.system.label());
+    println!(
+        "normalized latency {:.2} ms/tok (p99 {:.2})",
+        r.normalized_latency_ms_per_tok, r.p99_normalized_latency
+    );
+    println!("decode throughput  {:.0} tok/s", r.decode_tps);
+    println!("peak KV cache      {}", fmt_bytes(r.peak_kv_bytes));
+    println!("peak batch         {}", r.peak_batch);
+    println!(
+        "sim duration       {:.1}s (attn {:.1}s, other {:.1}s)",
+        r.sim_duration_s, r.attn_time_s, r.other_time_s
+    );
+    Ok(())
+}
+
+fn kernel(argv: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("chunk-serve kernel", "one microkernel decode measurement")
+        .opt("impl", "chunk", "naive|xformers|flash|paged|paged-shared|chunk")
+        .opt("batch", "16", "batch size")
+        .opt("heads", "8", "attention heads")
+        .opt("np", "1024", "prompt tokens")
+        .opt("ns", "1024", "shared prefix tokens")
+        .opt("steps", "5", "decode steps to time");
+    let args = parse_or_exit(&cli, argv);
+    let imp = match args.get("impl") {
+        "naive" => AttentionImpl::Naive,
+        "xformers" => AttentionImpl::Xformers,
+        "flash" => AttentionImpl::FlashAttn,
+        "paged" => AttentionImpl::PagedAttn,
+        "paged-shared" => AttentionImpl::PagedAttnShared,
+        _ => AttentionImpl::ChunkAttn,
+    };
+    let mut cfg =
+        MicroConfig::paper(args.get_usize("batch"), args.get_usize("np"), args.get_usize("ns"));
+    cfg.heads = args.get_usize("heads");
+    cfg.max_new_tokens = args.get_usize("steps") + 1;
+    let mut kb = KernelBench::new(cfg, imp);
+    let steps = args.get_usize("steps");
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
+        kb.decode_step();
+        kb.append_round();
+    }
+    let us = t0.elapsed().as_secs_f64() * 1e6 / steps as f64;
+    println!(
+        "{}: {} per decode step (b={}, h={}, np={}, ns={}); kv={}",
+        imp.label(),
+        fmt_us(us),
+        cfg.batch,
+        cfg.heads,
+        cfg.prompt_tokens,
+        cfg.shared_tokens,
+        fmt_bytes(kb.kv_bytes_fp16())
+    );
+    Ok(())
+}
+
+fn corpus(argv: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("chunk-serve corpus", "tenant prompt statistics (Table 2)")
+        .opt("tenants", "4", "number of tenants")
+        .opt("target-tokens", "1200", "target system prompt tokens")
+        .opt("seed", "2024", "seed");
+    let args = parse_or_exit(&cli, argv);
+    let tok = Tokenizer::default_english();
+    let corpus = Corpus::synthesize(
+        &tok,
+        args.get_usize("tenants"),
+        args.get_usize("target-tokens"),
+        args.get_u64("seed"),
+    );
+    for t in &corpus.tenants {
+        println!(
+            "tenant {} ({:>12}): {} shared tokens",
+            t.id,
+            t.kind.label(),
+            t.system_tokens.len()
+        );
+    }
+    let s = corpus.stats();
+    println!("avg {} max {} min {}", s.avg_tokens, s.max_tokens, s.min_tokens);
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Prometheus-style text exposition of the serving metrics, so a scraper
+//! (or a human with `curl`) can watch a live coordinator.
+
+use super::recorder::MetricsRecorder;
+
+/// Render the exposition document (text format 0.0.4 subset).
+pub fn render_exposition(m: &MetricsRecorder, prefix: &str) -> String {
+    let mut out = String::new();
+    let mut gauge = |name: &str, help: &str, value: f64| {
+        out.push_str(&format!(
+            "# HELP {prefix}_{name} {help}\n# TYPE {prefix}_{name} gauge\n{prefix}_{name} {value}\n"
+        ));
+    };
+    gauge("requests_total", "requests completed", m.requests().len() as f64);
+    gauge("decode_tokens_total", "completion tokens decoded", m.decode_tokens as f64);
+    gauge(
+        "normalized_latency_ms_mean",
+        "mean normalized latency (ms per completion token)",
+        m.normalized_latency.mean(),
+    );
+    gauge(
+        "normalized_latency_ms_p99",
+        "p99 normalized latency (ms per completion token)",
+        m.normalized_latency.percentile(99.0),
+    );
+    gauge("ttft_ms_mean", "mean time to first token (ms)", m.ttft.mean());
+    gauge("queue_delay_ms_mean", "mean admission queueing delay (ms)", m.queue_delay.mean());
+    gauge("prefix_hit_rate", "fraction of prompt tokens reused from PAKV", m.prefix_hit_rate());
+    gauge(
+        "decode_step_us_p50",
+        "median decode step latency (us)",
+        m.step_latency_us.quantile(0.5),
+    );
+    gauge(
+        "decode_step_us_p99",
+        "p99 decode step latency (us)",
+        m.step_latency_us.quantile(0.99),
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::recorder::RequestRecord;
+
+    #[test]
+    fn exposition_contains_all_series() {
+        let mut m = MetricsRecorder::new();
+        m.record_request(RequestRecord {
+            arrival_s: 0.0,
+            admitted_s: 0.1,
+            first_token_s: 0.2,
+            finished_s: 1.0,
+            prompt_tokens: 64,
+            completion_tokens: 16,
+            reused_prompt_tokens: 32,
+        });
+        m.record_decode_step(120.0, 2);
+        let text = render_exposition(&m, "chunk_attn");
+        for series in [
+            "chunk_attn_requests_total 1",
+            "chunk_attn_decode_tokens_total 2",
+            "chunk_attn_prefix_hit_rate 0.5",
+            "chunk_attn_normalized_latency_ms_mean",
+            "chunk_attn_decode_step_us_p50",
+        ] {
+            assert!(text.contains(series), "missing {series} in:\n{text}");
+        }
+        // Every series has HELP and TYPE lines.
+        assert_eq!(text.matches("# HELP").count(), text.matches("# TYPE").count());
+    }
+}

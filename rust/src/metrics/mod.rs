@@ -1,0 +1,9 @@
+//! Serving metrics: per-request latency recording, sliding-window
+//! throughput, and a text exposition format (Prometheus-style) so the
+//! coordinator can be scraped in a real deployment.
+
+pub mod exporter;
+pub mod recorder;
+
+pub use exporter::render_exposition;
+pub use recorder::{MetricsRecorder, RequestRecord, ThroughputWindow};

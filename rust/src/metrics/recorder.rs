@@ -1,0 +1,194 @@
+//! Request-level metrics recording for the serving engine.
+
+use crate::util::stats::{LogHistogram, Summary};
+use std::collections::VecDeque;
+
+/// Lifecycle timestamps of one request (seconds on a common clock).
+#[derive(Debug, Clone, Copy)]
+pub struct RequestRecord {
+    pub arrival_s: f64,
+    pub admitted_s: f64,
+    pub first_token_s: f64,
+    pub finished_s: f64,
+    pub prompt_tokens: usize,
+    pub completion_tokens: usize,
+    pub reused_prompt_tokens: usize,
+}
+
+impl RequestRecord {
+    /// Queueing delay before admission.
+    pub fn queue_delay_s(&self) -> f64 {
+        self.admitted_s - self.arrival_s
+    }
+
+    /// Time to first token (TTFT) including queueing.
+    pub fn ttft_s(&self) -> f64 {
+        self.first_token_s - self.arrival_s
+    }
+
+    /// End-to-end latency.
+    pub fn e2e_s(&self) -> f64 {
+        self.finished_s - self.arrival_s
+    }
+
+    /// The paper's normalized latency (ms per completion token).
+    pub fn normalized_ms_per_tok(&self) -> f64 {
+        self.e2e_s() * 1e3 / self.completion_tokens.max(1) as f64
+    }
+}
+
+/// Sliding-window token throughput (tokens per second over the last `w` s).
+#[derive(Debug)]
+pub struct ThroughputWindow {
+    window_s: f64,
+    events: VecDeque<(f64, u64)>, // (time, tokens)
+    total_in_window: u64,
+}
+
+impl ThroughputWindow {
+    pub fn new(window_s: f64) -> Self {
+        assert!(window_s > 0.0);
+        ThroughputWindow { window_s, events: VecDeque::new(), total_in_window: 0 }
+    }
+
+    pub fn record(&mut self, now_s: f64, tokens: u64) {
+        self.events.push_back((now_s, tokens));
+        self.total_in_window += tokens;
+        self.evict(now_s);
+    }
+
+    fn evict(&mut self, now_s: f64) {
+        while let Some(&(t, n)) = self.events.front() {
+            if now_s - t > self.window_s {
+                self.events.pop_front();
+                self.total_in_window -= n;
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Tokens/s over the window ending at `now_s`.
+    pub fn rate(&mut self, now_s: f64) -> f64 {
+        self.evict(now_s);
+        self.total_in_window as f64 / self.window_s
+    }
+}
+
+/// Aggregates every request record plus decode-step statistics.
+#[derive(Debug)]
+pub struct MetricsRecorder {
+    records: Vec<RequestRecord>,
+    pub normalized_latency: Summary,
+    pub ttft: Summary,
+    pub queue_delay: Summary,
+    pub step_latency_us: LogHistogram,
+    pub decode_tokens: u64,
+    pub prefill_computed: u64,
+    pub prefill_reused: u64,
+}
+
+impl Default for MetricsRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsRecorder {
+    pub fn new() -> Self {
+        MetricsRecorder {
+            records: Vec::new(),
+            normalized_latency: Summary::new(),
+            ttft: Summary::new(),
+            queue_delay: Summary::new(),
+            step_latency_us: LogHistogram::latency_us(),
+            decode_tokens: 0,
+            prefill_computed: 0,
+            prefill_reused: 0,
+        }
+    }
+
+    pub fn record_request(&mut self, r: RequestRecord) {
+        self.normalized_latency.add(r.normalized_ms_per_tok());
+        self.ttft.add(r.ttft_s() * 1e3);
+        self.queue_delay.add(r.queue_delay_s() * 1e3);
+        self.prefill_computed += (r.prompt_tokens - r.reused_prompt_tokens) as u64;
+        self.prefill_reused += r.reused_prompt_tokens as u64;
+        self.records.push(r);
+    }
+
+    pub fn record_decode_step(&mut self, latency_us: f64, batch: usize) {
+        self.step_latency_us.record(latency_us);
+        self.decode_tokens += batch as u64;
+    }
+
+    pub fn requests(&self) -> &[RequestRecord] {
+        &self.records
+    }
+
+    /// Fraction of prompt tokens served from the prefix cache.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefill_computed + self.prefill_reused;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefill_reused as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(arrival: f64, finish: f64, completion: usize, reused: usize) -> RequestRecord {
+        RequestRecord {
+            arrival_s: arrival,
+            admitted_s: arrival + 0.1,
+            first_token_s: arrival + 0.3,
+            finished_s: finish,
+            prompt_tokens: 100,
+            completion_tokens: completion,
+            reused_prompt_tokens: reused,
+        }
+    }
+
+    #[test]
+    fn request_derived_metrics() {
+        let r = rec(1.0, 3.0, 20, 50);
+        assert!((r.queue_delay_s() - 0.1).abs() < 1e-12);
+        assert!((r.ttft_s() - 0.3).abs() < 1e-12);
+        assert!((r.e2e_s() - 2.0).abs() < 1e-12);
+        assert!((r.normalized_ms_per_tok() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recorder_aggregates() {
+        let mut m = MetricsRecorder::new();
+        m.record_request(rec(0.0, 1.0, 10, 60));
+        m.record_request(rec(0.0, 2.0, 10, 0));
+        m.record_decode_step(500.0, 4);
+        assert_eq!(m.requests().len(), 2);
+        assert_eq!(m.decode_tokens, 4);
+        assert!((m.prefix_hit_rate() - 60.0 / 200.0).abs() < 1e-12);
+        assert!((m.normalized_latency.mean() - 150.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_window_slides() {
+        let mut w = ThroughputWindow::new(10.0);
+        w.record(0.0, 100);
+        w.record(5.0, 100);
+        assert!((w.rate(5.0) - 20.0).abs() < 1e-12);
+        // First event falls out of the window.
+        assert!((w.rate(11.0) - 10.0).abs() < 1e-12);
+        assert!((w.rate(100.0) - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_completion_is_safe() {
+        let mut r = rec(0.0, 1.0, 0, 0);
+        r.completion_tokens = 0;
+        assert!(r.normalized_ms_per_tok().is_finite());
+    }
+}

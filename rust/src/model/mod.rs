@@ -1,0 +1,241 @@
+//! Transformer model configurations and per-module cost accounting.
+//!
+//! [`ModelConfig`] describes a Llama-style decoder. Two presets matter:
+//! [`ModelConfig::llama2_7b`] — the paper's evaluation model, used by the
+//! analytical Table 1 / end-to-end simulations — and [`ModelConfig::mini`],
+//! the small model actually compiled to HLO and served through PJRT by the
+//! e2e example (`python/compile/model.py` must agree with it; the artifact
+//! manifest cross-checks).
+//!
+//! FLOPs/MOPs formulas follow the paper's Table 1 conventions:
+//! one fused multiply-add = 2 FLOPs, FP16 = 2 bytes per element, decode
+//! processes exactly one token per sequence.
+
+pub mod reference;
+
+pub use reference::ReferenceModel;
+
+/// Llama-style decoder configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    /// SwiGLU inner dimension (Llama uses ~8/3 · d_model rounded).
+    pub ffn_dim: usize,
+    pub vocab: usize,
+}
+
+/// FLOPs and memory operations (bytes) for one kernel invocation.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ModuleCost {
+    pub flops: f64,
+    pub mops: f64,
+}
+
+impl ModuleCost {
+    pub fn arithmetic_intensity(&self) -> f64 {
+        if self.mops == 0.0 {
+            0.0
+        } else {
+            self.flops / self.mops
+        }
+    }
+
+    pub fn add(&self, other: &ModuleCost) -> ModuleCost {
+        ModuleCost { flops: self.flops + other.flops, mops: self.mops + other.mops }
+    }
+
+    pub fn scale(&self, k: f64) -> ModuleCost {
+        ModuleCost { flops: self.flops * k, mops: self.mops * k }
+    }
+}
+
+/// FP16 bytes per element, the paper's accounting unit.
+pub const DTYPE_BYTES: f64 = 2.0;
+
+impl ModelConfig {
+    /// The paper's evaluation model (Llama2 7B: 32×4096, 32 heads, d=128,
+    /// SwiGLU 11008, vocab 32000).
+    pub fn llama2_7b() -> Self {
+        ModelConfig {
+            name: "llama2-7b",
+            n_layers: 32,
+            d_model: 4096,
+            heads: 32,
+            head_dim: 128,
+            ffn_dim: 11008,
+            vocab: 32000,
+        }
+    }
+
+    /// The small model compiled to HLO for the real PJRT decode path.
+    /// Must match `python/compile/model.py::MINI`.
+    pub fn mini() -> Self {
+        ModelConfig {
+            name: "mini",
+            n_layers: 2,
+            d_model: 256,
+            heads: 4,
+            head_dim: 64,
+            ffn_dim: 512,
+            vocab: 2048,
+        }
+    }
+
+    /// Total parameter count (tied embedding).
+    pub fn param_count(&self) -> u64 {
+        let attn = 4 * self.d_model * self.d_model; // Wq, Wk, Wv, Wo
+        let mlp = 3 * self.d_model * self.ffn_dim; // SwiGLU: gate, up, down
+        let norms = 2 * self.d_model;
+        let per_layer = attn + mlp + norms;
+        (self.vocab * self.d_model + self.n_layers * per_layer + self.d_model) as u64
+    }
+
+    /// KV-cache bytes per token (all layers, FP16) — the quantity behind the
+    /// paper's "4.5 MB per token for GPT-3 175B" intro estimate.
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        (2 * self.n_layers * self.heads * self.head_dim) as f64 * DTYPE_BYTES
+    }
+
+    // ---- Table 1 per-layer decode costs (batch b, context n per seq) ----
+
+    /// QKV projection for one decode step of a batch: `X · W_{q,k,v}`.
+    /// (The paper's Table 1 column covers exactly the three projections.)
+    pub fn qkv_projection_cost(&self, batch: usize) -> ModuleCost {
+        let d = self.d_model as f64;
+        let b = batch as f64;
+        let flops = 2.0 * b * d * (3.0 * d);
+        // Weights dominate; activations are b×d in and 3·b×d out.
+        let mops = (3.0 * d * d + b * d + 3.0 * b * d) * DTYPE_BYTES;
+        ModuleCost { flops, mops }
+    }
+
+    /// Self-attention for one decode step: per sequence `q·Kᵀ` and `P·V`
+    /// over `n` context tokens, KV cache streamed from memory.
+    pub fn self_attention_cost(&self, batch: usize, context: usize) -> ModuleCost {
+        let (h, d) = (self.heads as f64, self.head_dim as f64);
+        let (b, n) = (batch as f64, context as f64);
+        let flops = b * h * (2.0 * n * d + 2.0 * n * d);
+        let kv_bytes = b * 2.0 * n * h * d * DTYPE_BYTES;
+        let qo_bytes = 2.0 * b * h * d * DTYPE_BYTES;
+        // Materialised attention weights written then read (naive kernel).
+        let w_bytes = 2.0 * b * h * n * DTYPE_BYTES;
+        ModuleCost { flops, mops: kv_bytes + qo_bytes + w_bytes }
+    }
+
+    /// SwiGLU MLP for one decode step.
+    pub fn mlp_cost(&self, batch: usize) -> ModuleCost {
+        let (d, f) = (self.d_model as f64, self.ffn_dim as f64);
+        let b = batch as f64;
+        let flops = 2.0 * b * (3.0 * d * f);
+        let mops = (3.0 * d * f + b * (2.0 * d + 2.0 * f)) * DTYPE_BYTES;
+        ModuleCost { flops, mops }
+    }
+
+    /// Output projection (attention `Wo`), not in Table 1 but needed for
+    /// end-to-end latency.
+    pub fn out_projection_cost(&self, batch: usize) -> ModuleCost {
+        let d = self.d_model as f64;
+        let b = batch as f64;
+        ModuleCost { flops: 2.0 * b * d * d, mops: (d * d + 2.0 * b * d) * DTYPE_BYTES }
+    }
+
+    /// Final LM head (vocab projection), once per decode step.
+    pub fn lm_head_cost(&self, batch: usize) -> ModuleCost {
+        let (d, v) = (self.d_model as f64, self.vocab as f64);
+        let b = batch as f64;
+        ModuleCost { flops: 2.0 * b * d * v, mops: (d * v + b * (d + v)) * DTYPE_BYTES }
+    }
+
+    /// Full prefill cost for a prompt of `n` tokens (one sequence), all
+    /// layers: projections + causal attention + MLP. Quadratic attention.
+    pub fn prefill_cost(&self, n: usize) -> ModuleCost {
+        let nf = n as f64;
+        let (h, d, dm, f) = (
+            self.heads as f64,
+            self.head_dim as f64,
+            self.d_model as f64,
+            self.ffn_dim as f64,
+        );
+        // Per layer: QKV+O projections over n tokens, attention n(n+1)/2
+        // score rows, MLP over n tokens.
+        let proj_flops = 2.0 * nf * dm * (4.0 * dm) + 2.0 * nf * (3.0 * dm * f);
+        let attn_flops = h * (4.0 * d) * (nf * (nf + 1.0) / 2.0);
+        let flops = self.n_layers as f64 * (proj_flops + attn_flops);
+        // Weights once per layer + activations; attention reads its own
+        // fresh KV (stays in cache for tiles) — count once.
+        let weights = 4.0 * dm * dm + 3.0 * dm * f;
+        let act = nf * dm * 6.0 + 2.0 * nf * h * d;
+        let mops = self.n_layers as f64 * (weights + act) * DTYPE_BYTES;
+        ModuleCost { flops, mops }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama7b_matches_paper_table1_flops() {
+        // Paper Table 1 (b=1, n=2048): QKV 100.66e6, attn 33.57e6,
+        // MLP 270.53e6 FLOPs.
+        let m = ModelConfig::llama2_7b();
+        let qkv = m.qkv_projection_cost(1);
+        assert!((qkv.flops / 1e6 - 100.66).abs() < 0.5, "qkv {}", qkv.flops / 1e6);
+        let attn = m.self_attention_cost(1, 2048);
+        assert!((attn.flops / 1e6 - 33.57).abs() < 0.5, "attn {}", attn.flops / 1e6);
+        let mlp = m.mlp_cost(1);
+        assert!((mlp.flops / 1e6 - 270.53).abs() < 0.5, "mlp {}", mlp.flops / 1e6);
+    }
+
+    #[test]
+    fn llama7b_matches_paper_table1_mops() {
+        // Paper Table 1 (b=1): QKV 100.70e6, attn 33.85e6, MLP 270.62e6.
+        let m = ModelConfig::llama2_7b();
+        assert!((m.qkv_projection_cost(1).mops / 1e6 - 100.70).abs() < 0.5);
+        assert!((m.self_attention_cost(1, 2048).mops / 1e6 - 33.85).abs() < 0.5);
+        assert!((m.mlp_cost(1).mops / 1e6 - 270.62).abs() < 0.5);
+    }
+
+    #[test]
+    fn llama7b_batch_scaling_matches_paper() {
+        // b=32: QKV FLOPs 3221.23e6 but MOPs only 101.71e6 (AI 31.67);
+        // attention MOPs scale linearly: 1083.18e6 (AI stays 0.99).
+        let m = ModelConfig::llama2_7b();
+        let qkv = m.qkv_projection_cost(32);
+        assert!((qkv.flops / 1e6 - 3221.23).abs() < 2.0);
+        assert!((qkv.mops / 1e6 - 101.71).abs() < 1.0);
+        assert!((qkv.arithmetic_intensity() - 31.67).abs() < 0.5);
+        let attn = m.self_attention_cost(32, 2048);
+        assert!((attn.flops / 1e6 - 1074.27).abs() < 2.0);
+        assert!((attn.mops / 1e6 - 1083.18).abs() < 2.0);
+        assert!(attn.arithmetic_intensity() < 1.05);
+    }
+
+    #[test]
+    fn param_counts_are_plausible() {
+        let m = ModelConfig::llama2_7b();
+        let p = m.param_count() as f64 / 1e9;
+        assert!((6.0..7.5).contains(&p), "llama2-7b params {p}B");
+        let mini = ModelConfig::mini();
+        assert!(mini.param_count() < 5_000_000, "mini stays tiny: {}", mini.param_count());
+    }
+
+    #[test]
+    fn kv_bytes_per_token() {
+        let m = ModelConfig::llama2_7b();
+        // 2 * 32 layers * 32 heads * 128 dim * 2 bytes = 512 KiB/token.
+        assert_eq!(m.kv_bytes_per_token(), 524288.0);
+    }
+
+    #[test]
+    fn prefill_cost_grows_superlinearly() {
+        let m = ModelConfig::llama2_7b();
+        let c1 = m.prefill_cost(1024);
+        let c2 = m.prefill_cost(2048);
+        assert!(c2.flops > 2.0 * c1.flops, "attention makes prefill superlinear");
+    }
+}

@@ -1,0 +1,229 @@
+//! Pure-Rust forward pass of the mini model — loads the same
+//! `mini_weights.bin` the artifacts were compiled from and recomputes
+//! prefill logits/KV independently of XLA. Used by the integration tests
+//! to pin the PJRT path: JAX-lowered HLO, the Pallas kernel, and this
+//! implementation must all agree on the numbers.
+
+use crate::runtime::manifest::Manifest;
+
+/// One decoder layer's weights (all `[in, out]` row-major as numpy dumps).
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub ln1: Vec<f32>,
+    pub wq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub wo: Vec<f32>,
+    pub ln2: Vec<f32>,
+    pub w_gate: Vec<f32>,
+    pub w_up: Vec<f32>,
+    pub w_down: Vec<f32>,
+}
+
+/// The reference model: config + weights.
+pub struct ReferenceModel {
+    pub cfg: super::ModelConfig,
+    pub embed: Vec<f32>, // [vocab, d_model]
+    pub ln_f: Vec<f32>,
+    pub layers: Vec<LayerWeights>,
+}
+
+impl ReferenceModel {
+    /// Load from an artifact manifest (weights in flattened-pytree order,
+    /// matched by the path names `aot.py` records).
+    pub fn load(manifest: &Manifest) -> anyhow::Result<Self> {
+        let raw = manifest.load_weights()?;
+        let find = |needle: &str| -> anyhow::Result<Vec<f32>> {
+            manifest
+                .weights
+                .iter()
+                .position(|w| w.name.contains(needle))
+                .map(|i| raw[i].clone())
+                .ok_or_else(|| anyhow::anyhow!("weight {needle:?} not in manifest"))
+        };
+        let cfg = manifest.model;
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for li in 0..cfg.n_layers {
+            let lw = |key: &str| find(&format!("[{li}]/['{key}']"));
+            layers.push(LayerWeights {
+                ln1: lw("ln1")?,
+                wq: lw("wq")?,
+                wk: lw("wk")?,
+                wv: lw("wv")?,
+                wo: lw("wo")?,
+                ln2: lw("ln2")?,
+                w_gate: lw("w_gate")?,
+                w_up: lw("w_up")?,
+                w_down: lw("w_down")?,
+            });
+        }
+        Ok(ReferenceModel { cfg, embed: find("embed")?, ln_f: find("ln_f")?, layers })
+    }
+
+    /// Full causal prefill of `tokens` starting at position 0 with no
+    /// cached prefix. Returns (last-position logits, K rows `[n][H*d]`,
+    /// V rows) — the quantities the PJRT prefill reports.
+    pub fn prefill(&self, tokens: &[u32]) -> (Vec<f32>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let cfg = &self.cfg;
+        let (n, dm, h, d) = (tokens.len(), cfg.d_model, cfg.heads, cfg.head_dim);
+        let mut x = vec![0.0f32; n * dm];
+        for (p, &t) in tokens.iter().enumerate() {
+            x[p * dm..(p + 1) * dm]
+                .copy_from_slice(&self.embed[t as usize * dm..(t as usize + 1) * dm]);
+        }
+        let mut k_rows = vec![Vec::new(); n];
+        let mut v_rows = vec![Vec::new(); n];
+        let scale = 1.0 / (d as f32).sqrt();
+        for layer in &self.layers {
+            let xin = rmsnorm_rows(&x, n, dm, &layer.ln1);
+            let mut q = matmul(&xin, n, dm, &layer.wq, h * d);
+            let mut k = matmul(&xin, n, dm, &layer.wk, h * d);
+            let v = matmul(&xin, n, dm, &layer.wv, h * d);
+            for p in 0..n {
+                rope_row(&mut q[p * h * d..(p + 1) * h * d], h, d, p);
+                rope_row(&mut k[p * h * d..(p + 1) * h * d], h, d, p);
+            }
+            for p in 0..n {
+                k_rows[p].extend_from_slice(&k[p * h * d..(p + 1) * h * d]);
+                v_rows[p].extend_from_slice(&v[p * h * d..(p + 1) * h * d]);
+            }
+            // Causal dense attention.
+            let mut attn = vec![0.0f32; n * h * d];
+            for p in 0..n {
+                for hh in 0..h {
+                    let q_row = &q[p * h * d + hh * d..p * h * d + (hh + 1) * d];
+                    let mut w: Vec<f32> = (0..=p)
+                        .map(|t| {
+                            let k_row = &k[t * h * d + hh * d..t * h * d + (hh + 1) * d];
+                            q_row.iter().zip(k_row).map(|(a, b)| a * b).sum::<f32>() * scale
+                        })
+                        .collect();
+                    let m = w.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let mut norm = 0.0;
+                    for x in w.iter_mut() {
+                        *x = (*x - m).exp();
+                        norm += *x;
+                    }
+                    for t in 0..=p {
+                        let e = w[t] / norm;
+                        let v_row = &v[t * h * d + hh * d..t * h * d + (hh + 1) * d];
+                        for i in 0..d {
+                            attn[p * h * d + hh * d + i] += e * v_row[i];
+                        }
+                    }
+                }
+            }
+            let proj = matmul(&attn, n, h * d, &layer.wo, dm);
+            for i in 0..n * dm {
+                x[i] += proj[i];
+            }
+            // SwiGLU MLP.
+            let xin2 = rmsnorm_rows(&x, n, dm, &layer.ln2);
+            let gate = matmul(&xin2, n, dm, &layer.w_gate, self.cfg.ffn_dim);
+            let up = matmul(&xin2, n, dm, &layer.w_up, self.cfg.ffn_dim);
+            let act: Vec<f32> =
+                gate.iter().zip(&up).map(|(g, u)| (g / (1.0 + (-g).exp())) * u).collect();
+            let down = matmul(&act, n, self.cfg.ffn_dim, &layer.w_down, dm);
+            for i in 0..n * dm {
+                x[i] += down[i];
+            }
+        }
+        let xf = rmsnorm_rows(&x, n, dm, &self.ln_f);
+        // Tied LM head: logits = x · embedᵀ, last position only.
+        let last = &xf[(n - 1) * dm..n * dm];
+        let logits: Vec<f32> = (0..self.cfg.vocab)
+            .map(|t| last.iter().zip(&self.embed[t * dm..(t + 1) * dm]).map(|(a, b)| a * b).sum())
+            .collect();
+        (logits, k_rows, v_rows)
+    }
+}
+
+fn rmsnorm_rows(x: &[f32], n: usize, d: usize, g: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * d];
+    for p in 0..n {
+        let row = &x[p * d..(p + 1) * d];
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let r = 1.0 / (ms + 1e-5).sqrt();
+        for i in 0..d {
+            out[p * d + i] = row[i] * r * g[i];
+        }
+    }
+    out
+}
+
+fn matmul(x: &[f32], n: usize, d_in: usize, w: &[f32], d_out: usize) -> Vec<f32> {
+    debug_assert_eq!(w.len(), d_in * d_out);
+    let mut out = vec![0.0f32; n * d_out];
+    for p in 0..n {
+        for i in 0..d_in {
+            let xv = x[p * d_in + i];
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[i * d_out..(i + 1) * d_out];
+            let orow = &mut out[p * d_out..(p + 1) * d_out];
+            for j in 0..d_out {
+                orow[j] += xv * wrow[j];
+            }
+        }
+    }
+    out
+}
+
+/// Rotary embedding matching `model.py::rope` (half-split layout).
+fn rope_row(row: &mut [f32], h: usize, d: usize, pos: usize) {
+    let half = d / 2;
+    for hh in 0..h {
+        let base = hh * d;
+        for i in 0..half {
+            let freq = 1.0 / 10000f32.powf(i as f32 / half as f32);
+            let angle = pos as f32 * freq;
+            let (sin, cos) = angle.sin_cos();
+            let x1 = row[base + i];
+            let x2 = row[base + half + i];
+            row[base + i] = x1 * cos - x2 * sin;
+            row[base + half + i] = x1 * sin + x2 * cos;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmsnorm_unit_gain() {
+        let x = vec![3.0f32, 4.0];
+        let out = rmsnorm_rows(&x, 1, 2, &[1.0, 1.0]);
+        // rms = sqrt((9+16)/2) = sqrt(12.5)
+        let r = 12.5f32.sqrt();
+        assert!((out[0] - 3.0 / r).abs() < 1e-5);
+        assert!((out[1] - 4.0 / r).abs() < 1e-5);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let x = vec![1.0, 2.0, 3.0, 4.0]; // 2x2
+        let eye = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&x, 2, 2, &eye, 2), x);
+    }
+
+    #[test]
+    fn rope_position_zero_is_identity() {
+        let mut row = vec![0.5f32, -0.25, 0.125, 1.0];
+        let orig = row.clone();
+        rope_row(&mut row, 1, 4, 0);
+        for (a, b) in row.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut row: Vec<f32> = (0..8).map(|i| i as f32 * 0.3 - 1.0).collect();
+        let norm0: f32 = row.iter().map(|x| x * x).sum();
+        rope_row(&mut row, 2, 4, 17);
+        let norm1: f32 = row.iter().map(|x| x * x).sum();
+        assert!((norm0 - norm1).abs() < 1e-4);
+    }
+}

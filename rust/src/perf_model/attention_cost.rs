@@ -1,0 +1,231 @@
+//! Per-implementation attention cost models — what each Table 3 kernel
+//! costs on the analytical A100, given how much of the KV cache is shared.
+//!
+//! The models encode the paper's §3/§4 reasoning:
+//!
+//! - **Naive / xformers / FlashAttn / PagedAttn** are prefix-agnostic: each
+//!   of the `b` sequences streams its full `n`-token KV from HBM.
+//!   FlashAttention additionally spills/reloads per-tile partials (its
+//!   decode-time handicap, visible as the slow column of Table 3).
+//! - **PagedAttn\***: the kernel still issues `b × n` reads, but the shared
+//!   `n_s` tokens hit the same physical pages, so re-reads are served from
+//!   L2 (`HardwareModel::cache_bw`).
+//! - **ChunkAttn (TPP)**: the chunk-first phase reads shared chunks from
+//!   HBM *once* and batches the `b` query rows over them (higher AI, MXU
+//!   friendly); only private tails are per-sequence.
+
+use super::roofline::HardwareModel;
+use crate::model::{ModelConfig, DTYPE_BYTES};
+
+/// Which Table 3 column to price.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AttentionImpl {
+    Naive,
+    Xformers,
+    FlashAttn,
+    PagedAttn,
+    PagedAttnShared,
+    ChunkAttn,
+}
+
+impl AttentionImpl {
+    pub const ALL: [AttentionImpl; 6] = [
+        AttentionImpl::Naive,
+        AttentionImpl::Xformers,
+        AttentionImpl::FlashAttn,
+        AttentionImpl::PagedAttn,
+        AttentionImpl::PagedAttnShared,
+        AttentionImpl::ChunkAttn,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            AttentionImpl::Naive => "Naive",
+            AttentionImpl::Xformers => "xformers",
+            AttentionImpl::FlashAttn => "FlashAttn",
+            AttentionImpl::PagedAttn => "PagedAttn",
+            AttentionImpl::PagedAttnShared => "PagedAttn*",
+            AttentionImpl::ChunkAttn => "ChunkAttn",
+        }
+    }
+
+    /// Whether the implementation benefits from prefix sharing at all.
+    pub fn prefix_aware(&self) -> bool {
+        matches!(self, AttentionImpl::PagedAttnShared | AttentionImpl::ChunkAttn)
+    }
+}
+
+/// Sharing state of the batch at one decode step.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheSharingState {
+    /// Sequences in the decode batch.
+    pub batch: usize,
+    /// Context tokens per sequence (prompt + generated so far).
+    pub context: usize,
+    /// Leading tokens shared across the whole batch.
+    pub shared: usize,
+}
+
+/// Query rows the TPP chunk-first kernel processes per streaming pass over
+/// a shared KV tile (register/SMEM tile height). Calibrated so the model's
+/// ChunkAttn column lands on Table 3 within ~10% (e.g. 56µs at
+/// n_p=n_s=1024, b=32 — the paper reports 56.00µs).
+const TPP_QUERY_TILE: f64 = 4.0;
+
+/// Decode-step self-attention latency (seconds) for one layer.
+///
+/// The sharing-dependent kernels follow a two-level memory model: unique
+/// bytes stream from HBM once; re-reads of physically shared KV hit L2. A
+/// kernel that batches `G` query rows per KV pass re-reads shared KV
+/// `b/G - 1` times (PagedAttn\*: G = 1; ChunkAttn: G = [`TPP_QUERY_TILE`]).
+pub fn attention_step_cost(
+    hw: &HardwareModel,
+    model: &ModelConfig,
+    imp: AttentionImpl,
+    state: &CacheSharingState,
+) -> f64 {
+    let b = state.batch as f64;
+    let n = state.context as f64;
+    let ns = (state.shared.min(state.context)) as f64;
+    let (h, d) = (model.heads as f64, model.head_dim as f64);
+    let row_bytes = 2.0 * h * d * DTYPE_BYTES; // K+V for one token
+    let flops = b * h * 4.0 * n * d;
+    let qo_bytes = 2.0 * b * h * d * DTYPE_BYTES;
+
+    match imp {
+        AttentionImpl::Naive | AttentionImpl::Xformers | AttentionImpl::PagedAttn => {
+            // Full per-sequence KV streamed from HBM; the three kernels
+            // differ only in constant factors on the A100 (Table 3 shows
+            // them within ~25% of each other). Structural overheads:
+            let overhead = match imp {
+                AttentionImpl::Xformers => 1.15, // extra rescale traffic
+                AttentionImpl::PagedAttn => 1.02, // page-table indirection
+                _ => 1.0,
+            };
+            let hbm = b * n * row_bytes * overhead + qo_bytes;
+            hw.latency_split_s(flops, hbm, 0.0)
+        }
+        AttentionImpl::FlashAttn => {
+            // Training-oriented kernel: for q_len = 1 the tile is mostly
+            // empty query rows, wasting ~4.4× effective K/V bandwidth, plus
+            // per-tile partial (O, m, n) spill/reload. This reproduces the
+            // paper's 4.3–4.6× FlashAttn/Naive decode gap.
+            let tile = 128.0;
+            let tiles = (n / tile).ceil().max(1.0);
+            let spill = b * h * tiles * (d + 2.0) * DTYPE_BYTES * 2.0; // write+read
+            let waste = 4.4;
+            let hbm = b * n * row_bytes * waste + spill + qo_bytes;
+            hw.latency_split_s(flops, hbm, 0.0)
+        }
+        AttentionImpl::PagedAttnShared => {
+            // Shared pages: streamed from HBM once, re-read from L2 by each
+            // of the remaining b-1 sequences (one query row per pass).
+            let hbm = (ns + b * (n - ns)) * row_bytes + qo_bytes;
+            let cache = (b - 1.0).max(0.0) * ns * row_bytes;
+            hw.latency_split_s(flops, hbm, cache)
+        }
+        AttentionImpl::ChunkAttn => {
+            // TPP chunk-first: query rows are batched TPP_QUERY_TILE at a
+            // time over each shared chunk, cutting L2 re-reads by that
+            // factor; private tails stream per sequence as usual. Partial
+            // (O, m, n) merge traffic is negligible but included.
+            let hbm = (ns + b * (n - ns)) * row_bytes + qo_bytes;
+            let passes = (b / TPP_QUERY_TILE).ceil();
+            let cache = (passes - 1.0).max(0.0) * ns * row_bytes;
+            let merge = b * h * (d + 2.0) * DTYPE_BYTES * 2.0;
+            hw.latency_split_s(flops, hbm + merge, cache)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(batch: usize, context: usize, shared: usize) -> CacheSharingState {
+        CacheSharingState { batch, context, shared }
+    }
+
+    fn us(
+        hw: &HardwareModel,
+        m: &ModelConfig,
+        imp: AttentionImpl,
+        s: &CacheSharingState,
+    ) -> f64 {
+        attention_step_cost(hw, m, imp, s) * 1e6
+    }
+
+    #[test]
+    fn table3_shape_full_sharing() {
+        // n_p = n_s = 4096, b = 32: ChunkAttn ≈ 206µs, PagedAttn* ≈ 664µs,
+        // Naive ≈ 1370µs in the paper. Require the ordering and rough
+        // factors (3–8× Naive/Chunk, 2–4× Paged*/Chunk).
+        let hw = HardwareModel::a100_80g();
+        let m = ModelConfig::llama2_7b();
+        let s = state(32, 4096, 4096);
+        let naive = us(&hw, &m, AttentionImpl::Naive, &s);
+        let paged = us(&hw, &m, AttentionImpl::PagedAttn, &s);
+        let paged_star = us(&hw, &m, AttentionImpl::PagedAttnShared, &s);
+        let chunk = us(&hw, &m, AttentionImpl::ChunkAttn, &s);
+        let flash = us(&hw, &m, AttentionImpl::FlashAttn, &s);
+        assert!(chunk < paged_star && paged_star < paged && paged <= flash);
+        let speedup = naive / chunk;
+        assert!((3.0..10.0).contains(&speedup), "naive/chunk {speedup}");
+        let vs_star = paged_star / chunk;
+        assert!((1.5..5.0).contains(&vs_star), "paged*/chunk {vs_star}");
+    }
+
+    #[test]
+    fn no_sharing_no_regression() {
+        // n_s = 0: ChunkAttn within a few percent of PagedAttn (Table 3
+        // rows with n_s=0).
+        let hw = HardwareModel::a100_80g();
+        let m = ModelConfig::llama2_7b();
+        let s = state(32, 2048, 0);
+        let chunk = us(&hw, &m, AttentionImpl::ChunkAttn, &s);
+        let paged = us(&hw, &m, AttentionImpl::PagedAttn, &s);
+        assert!((chunk / paged - 1.0).abs() < 0.1, "chunk {chunk} vs paged {paged}");
+    }
+
+    #[test]
+    fn latency_decreases_with_sharing_only_for_aware_kernels() {
+        let hw = HardwareModel::a100_80g();
+        let m = ModelConfig::llama2_7b();
+        for imp in AttentionImpl::ALL {
+            let t0 = us(&hw, &m, imp, &state(32, 2048, 0));
+            let t1 = us(&hw, &m, imp, &state(32, 2048, 2048));
+            if imp.prefix_aware() {
+                assert!(t1 < t0 * 0.7, "{imp:?} should speed up: {t0} -> {t1}");
+            } else {
+                assert!((t1 / t0 - 1.0).abs() < 0.02, "{imp:?} is prefix-agnostic");
+            }
+        }
+    }
+
+    #[test]
+    fn flash_is_slowest_for_decode() {
+        let hw = HardwareModel::a100_80g();
+        let m = ModelConfig::llama2_7b();
+        let s = state(32, 2048, 0);
+        let flash = us(&hw, &m, AttentionImpl::FlashAttn, &s);
+        let naive = us(&hw, &m, AttentionImpl::Naive, &s);
+        // Paper: 3175µs vs 686µs (~4.6×).
+        let ratio = flash / naive;
+        assert!((2.0..7.0).contains(&ratio), "flash/naive {ratio}");
+    }
+
+    #[test]
+    fn speedup_decays_with_completion_tokens() {
+        // Fig 3: as n_c grows past the shared prefix, speedup shrinks.
+        let hw = HardwareModel::a100_80g();
+        let m = ModelConfig::llama2_7b();
+        let speedup_at = |nc: usize| {
+            let s = state(32, 2048 + nc, 2048);
+            us(&hw, &m, AttentionImpl::PagedAttn, &s) / us(&hw, &m, AttentionImpl::ChunkAttn, &s)
+        };
+        let early = speedup_at(64);
+        let late = speedup_at(2048);
+        assert!(early > late, "speedup decays: {early} -> {late}");
+        assert!(late > 1.2, "still a win at n_c=2048");
+    }
+}

@@ -1,0 +1,14 @@
+//! Analytical performance model: an A100 roofline (Williams et al., 2009)
+//! plus per-kernel attention cost models for every Table 3 implementation.
+//!
+//! Two consumers:
+//! - `benches/table1_roofline.rs` regenerates the paper's Table 1.
+//! - the virtual-time end-to-end simulator (Fig. 5 / Table 4) prices each
+//!   decode/prefill step of a Llama2-7B-scale server without needing the
+//!   authors' A100 testbed (DESIGN.md §2 substitution table).
+
+pub mod attention_cost;
+pub mod roofline;
+
+pub use attention_cost::{attention_step_cost, AttentionImpl, CacheSharingState};
+pub use roofline::{HardwareModel, RooflineReport};

@@ -1,0 +1,157 @@
+//! Roofline hardware model (Williams et al., 2009).
+//!
+//! `latency = max(flops / achieved_flops, mops / achieved_bandwidth) +
+//! kernel_overhead`. Achieved rates are peak × an efficiency fraction; the
+//! A100 preset is calibrated so Table 1's measured latencies are
+//! approximated within ~20% (the paper's latency column is itself a
+//! measurement, not a roofline bound).
+
+use crate::model::ModuleCost;
+
+/// A device for the analytical model.
+#[derive(Debug, Clone, Copy)]
+pub struct HardwareModel {
+    pub name: &'static str,
+    /// Peak memory bandwidth, bytes/s.
+    pub peak_bw: f64,
+    /// Peak FP16 tensor throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// Fraction of peak bandwidth real kernels achieve.
+    pub bw_efficiency: f64,
+    /// Fraction of peak FLOPs real kernels achieve.
+    pub flops_efficiency: f64,
+    /// Fixed per-kernel launch/dispatch overhead, seconds.
+    pub kernel_overhead_s: f64,
+    /// On-chip cache bandwidth (L2 on A100), bytes/s — used by the
+    /// attention cost model for re-reads of physically shared memory.
+    pub cache_bw: f64,
+}
+
+impl HardwareModel {
+    /// NVIDIA A100-SXM 80GB: 2039 GB/s HBM2e, 312 TFLOPS FP16 tensor core,
+    /// ~4.8 TB/s L2. Efficiencies calibrated against the paper's Table 1.
+    pub fn a100_80g() -> Self {
+        HardwareModel {
+            name: "a100-80g",
+            peak_bw: 2.039e12,
+            peak_flops: 312e12,
+            bw_efficiency: 0.75,
+            flops_efficiency: 0.60,
+            kernel_overhead_s: 12e-6,
+            cache_bw: 4.8e12,
+        }
+    }
+
+    pub fn achieved_bw(&self) -> f64 {
+        self.peak_bw * self.bw_efficiency
+    }
+
+    pub fn achieved_flops(&self) -> f64 {
+        self.peak_flops * self.flops_efficiency
+    }
+
+    /// Roofline latency in seconds for one kernel.
+    pub fn latency_s(&self, cost: &ModuleCost) -> f64 {
+        let t_mem = cost.mops / self.achieved_bw();
+        let t_compute = cost.flops / self.achieved_flops();
+        t_mem.max(t_compute) + self.kernel_overhead_s
+    }
+
+    pub fn latency_us(&self, cost: &ModuleCost) -> f64 {
+        self.latency_s(cost) * 1e6
+    }
+
+    /// Latency for a kernel whose memory traffic is split between HBM
+    /// (`hbm_bytes`) and on-chip cache re-reads (`cache_bytes`) — the
+    /// PagedAttn\*/ChunkAttn situation where shared KV is re-read from L2.
+    pub fn latency_split_s(&self, flops: f64, hbm_bytes: f64, cache_bytes: f64) -> f64 {
+        let t_mem = hbm_bytes / self.achieved_bw() + cache_bytes / (self.cache_bw * self.bw_efficiency);
+        let t_compute = flops / self.achieved_flops();
+        t_mem.max(t_compute) + self.kernel_overhead_s
+    }
+
+    /// The AI at which the device flips from memory- to compute-bound.
+    pub fn ridge_point(&self) -> f64 {
+        self.achieved_flops() / self.achieved_bw()
+    }
+
+    /// A report row in the paper's Table 1 format.
+    pub fn report(&self, cost: &ModuleCost) -> RooflineReport {
+        RooflineReport {
+            flops: cost.flops,
+            mops: cost.mops,
+            arithmetic_intensity: cost.arithmetic_intensity(),
+            latency_us: self.latency_us(cost),
+            bound: if cost.mops / self.achieved_bw() >= cost.flops / self.achieved_flops() {
+                Bound::Memory
+            } else {
+                Bound::Compute
+            },
+        }
+    }
+}
+
+/// Whether a kernel sits under the memory or compute roof.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    Memory,
+    Compute,
+}
+
+/// One Table 1 row.
+#[derive(Debug, Clone, Copy)]
+pub struct RooflineReport {
+    pub flops: f64,
+    pub mops: f64,
+    pub arithmetic_intensity: f64,
+    pub latency_us: f64,
+    pub bound: Bound,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    #[test]
+    fn table1_latency_shape() {
+        // Reproduce Table 1's orderings: at b=32, self-attention is the
+        // slowest module despite the fewest FLOPs; QKV latency barely moves
+        // from b=1 to b=32 while attention scales ~linearly.
+        let hw = HardwareModel::a100_80g();
+        let m = ModelConfig::llama2_7b();
+
+        let attn_1 = hw.latency_us(&m.self_attention_cost(1, 2048));
+        let attn_32 = hw.latency_us(&m.self_attention_cost(32, 2048));
+        let qkv_1 = hw.latency_us(&m.qkv_projection_cost(1));
+        let qkv_32 = hw.latency_us(&m.qkv_projection_cost(32));
+        let mlp_32 = hw.latency_us(&m.mlp_cost(32));
+
+        assert!(attn_32 > qkv_32, "attention dominates at b=32");
+        assert!(attn_32 > mlp_32, "attention dominates MLP at b=32");
+        assert!(attn_32 / attn_1 > 20.0, "attention scales with batch");
+        assert!(qkv_32 / qkv_1 < 1.3, "projections are weight-bound");
+        // Within a factor ~1.5 of the measured paper values.
+        assert!((400.0..1100.0).contains(&attn_32), "paper: 687µs, got {attn_32}");
+        assert!((50.0..140.0).contains(&qkv_1), "paper: 88µs, got {qkv_1}");
+    }
+
+    #[test]
+    fn arithmetic_intensity_decides_bound() {
+        let hw = HardwareModel::a100_80g();
+        let m = ModelConfig::llama2_7b();
+        assert_eq!(hw.report(&m.self_attention_cost(32, 2048)).bound, Bound::Memory);
+        // b=64 QKV has AI ~63, still below the A100 ridge (~122 achieved).
+        let ridge = hw.ridge_point();
+        assert!(ridge > 60.0 && ridge < 200.0, "ridge {ridge}");
+    }
+
+    #[test]
+    fn split_latency_is_cheaper_than_hbm_only() {
+        let hw = HardwareModel::a100_80g();
+        let flops = 1e9;
+        let all_hbm = hw.latency_split_s(flops, 1e9, 0.0);
+        let half_cached = hw.latency_split_s(flops, 0.5e9, 0.5e9);
+        assert!(half_cached < all_hbm);
+    }
+}

@@ -1,0 +1,227 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the Rust runtime: model config, weight-parameter order/shapes, and
+//! the artifact inventory. Everything is cross-checked at load time so a
+//! stale artifact directory fails loudly instead of mis-executing.
+
+use std::path::{Path, PathBuf};
+
+use crate::model::ModelConfig;
+use crate::util::json::Json;
+
+/// Kind of compiled computation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Decode,
+    Prefill,
+    KernelTest,
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub kind: ArtifactKind,
+    /// decode: batch capacity.
+    pub batch: usize,
+    /// decode: chunk-slot capacity.
+    pub max_chunks: usize,
+    /// decode: tokens per chunk.
+    pub chunk_size: usize,
+    /// prefill: max suffix / prefix lengths.
+    pub max_suffix: usize,
+    pub max_prefix: usize,
+}
+
+/// One weight tensor in flattened-pytree order.
+#[derive(Debug, Clone)]
+pub struct WeightSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl WeightSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelConfig,
+    pub heads_total: usize,
+    pub weights_file: String,
+    pub weights: Vec<WeightSpec>,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+fn get_usize(j: &Json, key: &str) -> anyhow::Result<usize> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .map(|x| x as usize)
+        .ok_or_else(|| anyhow::anyhow!("manifest missing numeric field {key:?}"))
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("{}: {e}; run `make artifacts` first", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+
+        let m = j.get("model").ok_or_else(|| anyhow::anyhow!("manifest missing model"))?;
+        let model = ModelConfig {
+            name: "mini",
+            n_layers: get_usize(m, "n_layers")?,
+            d_model: get_usize(m, "d_model")?,
+            heads: get_usize(m, "heads")?,
+            head_dim: get_usize(m, "head_dim")?,
+            ffn_dim: get_usize(m, "ffn_dim")?,
+            vocab: get_usize(m, "vocab")?,
+        };
+        let heads_total = get_usize(m, "heads_total")?;
+        anyhow::ensure!(
+            heads_total == model.n_layers * model.heads,
+            "manifest heads_total inconsistent"
+        );
+        // The compiled model must match the Rust-side preset the serving
+        // examples assume.
+        let expect = ModelConfig::mini();
+        anyhow::ensure!(
+            model == expect,
+            "artifact model {model:?} != ModelConfig::mini() {expect:?}; re-run make artifacts"
+        );
+
+        let weights = j
+            .get("weights")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing weights"))?
+            .iter()
+            .map(|w| {
+                let name = w.get("name").and_then(Json::as_str).unwrap_or("?").to_string();
+                let shape = w
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(Json::as_f64).map(|x| x as usize).collect())
+                    .unwrap_or_default();
+                WeightSpec { name, shape }
+            })
+            .collect();
+
+        let mut artifacts = Vec::new();
+        for a in j.get("artifacts").and_then(Json::as_arr).unwrap_or(&[]) {
+            let kind = match a.get("kind").and_then(Json::as_str) {
+                Some("decode") => ArtifactKind::Decode,
+                Some("prefill") => ArtifactKind::Prefill,
+                Some("kernel_test") => ArtifactKind::KernelTest,
+                other => anyhow::bail!("unknown artifact kind {other:?}"),
+            };
+            artifacts.push(ArtifactEntry {
+                file: a.get("file").and_then(Json::as_str).unwrap_or("?").to_string(),
+                kind,
+                batch: get_usize(a, "batch").unwrap_or(0),
+                max_chunks: get_usize(a, "max_chunks").unwrap_or(0),
+                chunk_size: get_usize(a, "chunk_size").unwrap_or(0),
+                max_suffix: get_usize(a, "max_suffix").unwrap_or(0),
+                max_prefix: get_usize(a, "max_prefix").unwrap_or(0),
+            });
+        }
+
+        let manifest = Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            heads_total,
+            weights_file: j
+                .get("weights_file")
+                .and_then(Json::as_str)
+                .unwrap_or("mini_weights.bin")
+                .to_string(),
+            weights,
+            artifacts,
+        };
+        Ok(manifest)
+    }
+
+    /// Load the raw f32 weights blob and split it per the manifest specs.
+    pub fn load_weights(&self) -> anyhow::Result<Vec<Vec<f32>>> {
+        let path = self.dir.join(&self.weights_file);
+        let bytes = std::fs::read(&path)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let total: usize = self.weights.iter().map(WeightSpec::elems).sum();
+        anyhow::ensure!(
+            bytes.len() == total * 4,
+            "weights blob {} bytes, manifest wants {}",
+            bytes.len(),
+            total * 4
+        );
+        let mut out = Vec::with_capacity(self.weights.len());
+        let mut off = 0usize;
+        for spec in &self.weights {
+            let n = spec.elems();
+            let mut buf = vec![0.0f32; n];
+            for (i, x) in buf.iter_mut().enumerate() {
+                let b = &bytes[(off + i) * 4..(off + i) * 4 + 4];
+                *x = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+            }
+            off += n;
+            out.push(buf);
+        }
+        Ok(out)
+    }
+
+    /// The decode artifact with the smallest capacity ≥ `batch`.
+    pub fn decode_artifact(&self, batch: usize) -> Option<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Decode && a.batch >= batch)
+            .min_by_key(|a| a.batch)
+    }
+
+    pub fn prefill_artifact(&self) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| a.kind == ArtifactKind::Prefill)
+    }
+
+    pub fn kernel_test_artifact(&self) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| a.kind == ArtifactKind::KernelTest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests need `make artifacts` to have run; they are skipped (not
+    /// failed) otherwise so `cargo test` works on a fresh checkout.
+    fn manifest() -> Option<Manifest> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn manifest_loads_and_crosschecks() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert_eq!(m.model, ModelConfig::mini());
+        assert!(m.decode_artifact(3).is_some());
+        assert!(m.decode_artifact(4).unwrap().batch == 4);
+        assert!(m.prefill_artifact().is_some());
+        assert_eq!(m.weights.len(), 20);
+    }
+
+    #[test]
+    fn weights_blob_splits() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let w = m.load_weights().unwrap();
+        assert_eq!(w.len(), m.weights.len());
+        // Embedding is vocab × d_model.
+        let embed_idx = m.weights.iter().position(|s| s.name.contains("embed")).unwrap();
+        assert_eq!(w[embed_idx].len(), m.model.vocab * m.model.d_model);
+        assert!(w[embed_idx].iter().any(|&x| x != 0.0));
+    }
+}

@@ -1,0 +1,10 @@
+//! Runtime: load the AOT HLO-text artifacts through PJRT and serve the
+//! compiled executables from the decode path. Python never runs here.
+
+pub mod manifest;
+pub mod pjrt;
+pub mod pjrt_model;
+
+pub use manifest::{ArtifactKind, Manifest};
+pub use pjrt::PjrtRuntime;
+pub use pjrt_model::PjrtModel;

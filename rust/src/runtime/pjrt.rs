@@ -1,0 +1,95 @@
+//! Thin wrapper over the `xla` crate's PJRT client: load HLO-text
+//! artifacts, compile once, execute many times with typed literal helpers.
+
+use std::path::Path;
+
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// A PJRT client plus artifact loading. One per process.
+pub struct PjrtRuntime {
+    client: PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// CPU PJRT client (the only backend in this environment; the same
+    /// code path takes `PjRtClient::gpu`/`tpu` upstream).
+    pub fn cpu() -> anyhow::Result<Self> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+        log::info!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(PjrtRuntime { client })
+    }
+
+    /// Load an HLO **text** artifact and compile it.
+    ///
+    /// Text, not serialized proto: jax ≥ 0.5 emits 64-bit instruction ids
+    /// which this XLA rejects; the text parser reassigns ids.
+    pub fn load_hlo_text(&self, path: &Path) -> anyhow::Result<PjRtLoadedExecutable> {
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow::anyhow!("non-utf8 path {}", path.display()))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow::anyhow!("{}: parse failed: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("{}: compile failed: {e:?}", path.display()))?;
+        log::info!("compiled {}", path.display());
+        Ok(exe)
+    }
+
+    /// Execute and unpack the single-replica tuple output into literals.
+    pub fn execute(
+        &self,
+        exe: &PjRtLoadedExecutable,
+        args: &[&Literal],
+    ) -> anyhow::Result<Vec<Literal>> {
+        let out = exe.execute::<&Literal>(args).map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True.
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e:?}"))
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn f32_literal(data: &[f32], dims: &[i64]) -> anyhow::Result<Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "literal shape {dims:?} != {} elems", data.len());
+    Literal::vec1(data).reshape(dims).map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+/// Build an i32 literal of the given shape.
+pub fn i32_literal(data: &[i32], dims: &[i64]) -> anyhow::Result<Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "literal shape {dims:?} != {} elems", data.len());
+    Literal::vec1(data).reshape(dims).map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+/// Scalar i32 literal.
+pub fn i32_scalar(x: i32) -> Literal {
+    Literal::scalar(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_helpers_shape_check() {
+        let l = f32_literal(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        assert!(f32_literal(&[1.0], &[2, 2]).is_err());
+        let i = i32_literal(&[7, 8], &[2]).unwrap();
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![7, 8]);
+    }
+}

@@ -1,0 +1,265 @@
+//! [`PjrtModel`]: the [`ModelRunner`] that serves the AOT-compiled mini
+//! model through PJRT — the production wiring of the three-layer stack.
+//! The engine owns the prefix tree; this runner packs the tree context into
+//! the fixed-shape chunk tensors the HLO expects (§3.3's "context copy"),
+//! executes `mini_decode_b*.hlo.txt` / `mini_prefill.hlo.txt`, and returns
+//! fresh K/V rows for the coordinator to append.
+
+use std::path::Path;
+
+use xla::{Literal, PjRtLoadedExecutable};
+
+use super::manifest::Manifest;
+use super::pjrt::{f32_literal, i32_literal, i32_scalar, PjrtRuntime};
+use crate::coordinator::engine::{DecodeOutput, ModelRunner, PrefillOutput};
+use crate::kvcache::{PrefixTree, TreeContext};
+
+/// PJRT-backed model runner.
+pub struct PjrtModel {
+    runtime: PjrtRuntime,
+    manifest: Manifest,
+    weights: Vec<Literal>,
+    /// (batch capacity, executable) sorted ascending.
+    decode_exes: Vec<(usize, PjRtLoadedExecutable)>,
+    prefill_exe: PjRtLoadedExecutable,
+    max_chunks: usize,
+    chunk_size: usize,
+    max_suffix: usize,
+    max_prefix: usize,
+    /// Reused staging buffers for the chunk tensors (no per-step alloc).
+    stage_k: Vec<f32>,
+    stage_v: Vec<f32>,
+}
+
+impl PjrtModel {
+    /// Load everything from an artifact directory (`make artifacts`).
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let runtime = PjrtRuntime::cpu()?;
+        let manifest = Manifest::load(dir)?;
+        let raw = manifest.load_weights()?;
+        let mut weights = Vec::with_capacity(raw.len());
+        for (spec, data) in manifest.weights.iter().zip(&raw) {
+            let dims: Vec<i64> = spec.shape.iter().map(|&x| x as i64).collect();
+            weights.push(f32_literal(data, &dims)?);
+        }
+        let mut decode_exes = Vec::new();
+        let mut max_chunks = 0;
+        let mut chunk_size = 0;
+        for a in &manifest.artifacts {
+            if a.kind == super::manifest::ArtifactKind::Decode {
+                let exe = runtime.load_hlo_text(&dir.join(&a.file))?;
+                decode_exes.push((a.batch, exe));
+                max_chunks = a.max_chunks;
+                chunk_size = a.chunk_size;
+            }
+        }
+        decode_exes.sort_by_key(|(b, _)| *b);
+        anyhow::ensure!(!decode_exes.is_empty(), "no decode artifacts in manifest");
+        let pf = manifest
+            .prefill_artifact()
+            .ok_or_else(|| anyhow::anyhow!("no prefill artifact"))?
+            .clone();
+        let prefill_exe = runtime.load_hlo_text(&dir.join(&pf.file))?;
+        let h_total = manifest.heads_total;
+        let d = manifest.model.head_dim;
+        let stage = max_chunks * h_total * chunk_size * d;
+        Ok(PjrtModel {
+            runtime,
+            manifest,
+            weights,
+            decode_exes,
+            prefill_exe,
+            max_chunks,
+            chunk_size,
+            max_suffix: pf.max_suffix,
+            max_prefix: pf.max_prefix,
+            stage_k: vec![0.0; stage],
+            stage_v: vec![0.0; stage],
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// The chunk size the engine must be configured with.
+    pub fn chunk_size(&self) -> usize {
+        self.chunk_size
+    }
+
+    /// Largest decode batch the artifacts support.
+    pub fn max_batch(&self) -> usize {
+        self.decode_exes.last().map(|(b, _)| *b).unwrap_or(0)
+    }
+
+    fn weight_refs(&self) -> Vec<&Literal> {
+        self.weights.iter().collect()
+    }
+
+    fn argmax(logits: &[f32]) -> u32 {
+        let mut best = 0usize;
+        for (i, &x) in logits.iter().enumerate() {
+            if x > logits[best] {
+                best = i;
+            }
+        }
+        best as u32
+    }
+
+    /// Pack the tree context into the fixed chunk tensors. Returns the
+    /// metadata arrays (padded to `max_chunks`).
+    fn pack_context(
+        &mut self,
+        tree: &PrefixTree,
+        ctx: &TreeContext,
+    ) -> anyhow::Result<(Vec<i32>, Vec<i32>, Vec<i32>)> {
+        let shape = tree.shape();
+        anyhow::ensure!(
+            shape.chunk_size == self.chunk_size && shape.heads == self.manifest.heads_total,
+            "tree shape {shape:?} incompatible with artifacts (c={}, H={})",
+            self.chunk_size,
+            self.manifest.heads_total
+        );
+        anyhow::ensure!(
+            ctx.entries.len() <= self.max_chunks,
+            "live context has {} chunks; artifacts support {} — lower max_batch or prompt \
+             lengths, or re-export with a larger MAX_CHUNKS",
+            ctx.entries.len(),
+            self.max_chunks
+        );
+        let per_chunk = shape.heads * shape.chunk_size * shape.head_dim;
+        self.stage_k.fill(0.0); // padding chunks must be deterministic
+        self.stage_v.fill(0.0);
+        let (mut starts, mut ends, mut lens) =
+            (vec![0i32; self.max_chunks], vec![0i32; self.max_chunks], vec![0i32; self.max_chunks]);
+        for (i, e) in ctx.entries.iter().enumerate() {
+            let chunk = tree.chunk(e.chunk);
+            self.stage_k[i * per_chunk..(i + 1) * per_chunk].copy_from_slice(chunk.k());
+            self.stage_v[i * per_chunk..(i + 1) * per_chunk].copy_from_slice(chunk.v());
+            starts[i] = e.start as i32;
+            ends[i] = e.end as i32;
+            lens[i] = chunk.len() as i32;
+        }
+        Ok((starts, ends, lens))
+    }
+}
+
+impl ModelRunner for PjrtModel {
+    fn heads_total(&self) -> usize {
+        self.manifest.heads_total
+    }
+
+    fn head_dim(&self) -> usize {
+        self.manifest.model.head_dim
+    }
+
+    fn prefill(
+        &mut self,
+        suffix_tokens: &[u32],
+        pos_offset: usize,
+        prefix_k: &[f32],
+        prefix_v: &[f32],
+        prefix_len: usize,
+    ) -> anyhow::Result<PrefillOutput> {
+        let (p, n) = (self.max_suffix, self.max_prefix);
+        let (h_total, d) = (self.manifest.heads_total, self.manifest.model.head_dim);
+        anyhow::ensure!(
+            suffix_tokens.len() <= p,
+            "prompt suffix {} exceeds artifact capacity {p}",
+            suffix_tokens.len()
+        );
+        anyhow::ensure!(prefix_len <= n, "prefix {prefix_len} exceeds artifact capacity {n}");
+
+        let mut tokens = vec![0i32; p];
+        for (i, &t) in suffix_tokens.iter().enumerate() {
+            tokens[i] = t as i32;
+        }
+        // Pad the dense prefix KV ([H, prefix_len, d] → [H, n, d]).
+        let mut pk = vec![0.0f32; h_total * n * d];
+        let mut pv = vec![0.0f32; h_total * n * d];
+        for h in 0..h_total {
+            let src = h * prefix_len * d;
+            let dst = h * n * d;
+            pk[dst..dst + prefix_len * d].copy_from_slice(&prefix_k[src..src + prefix_len * d]);
+            pv[dst..dst + prefix_len * d].copy_from_slice(&prefix_v[src..src + prefix_len * d]);
+        }
+
+        let tokens_l = i32_literal(&tokens, &[p as i64])?;
+        let slen_l = i32_scalar(suffix_tokens.len() as i32);
+        let pk_l = f32_literal(&pk, &[h_total as i64, n as i64, d as i64])?;
+        let pv_l = f32_literal(&pv, &[h_total as i64, n as i64, d as i64])?;
+        let plen_l = i32_scalar(prefix_len as i32);
+        anyhow::ensure!(pos_offset == prefix_len, "positions start at the cached prefix length");
+
+        let mut args = self.weight_refs();
+        args.extend([&tokens_l, &slen_l, &pk_l, &pv_l, &plen_l]);
+        let out = self.runtime.execute(&self.prefill_exe, &args)?;
+        anyhow::ensure!(out.len() == 3, "prefill returns (logits, k, v), got {}", out.len());
+        let logits = out[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let k_flat = out[1].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let v_flat = out[2].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        // k_flat is [P, H, d]; keep only the valid suffix rows.
+        let row = h_total * d;
+        let k_rows: Vec<Vec<f32>> =
+            (0..suffix_tokens.len()).map(|i| k_flat[i * row..(i + 1) * row].to_vec()).collect();
+        let v_rows: Vec<Vec<f32>> =
+            (0..suffix_tokens.len()).map(|i| v_flat[i * row..(i + 1) * row].to_vec()).collect();
+        Ok(PrefillOutput { k_rows, v_rows, next_token: Self::argmax(&logits) })
+    }
+
+    fn decode(
+        &mut self,
+        tree: &PrefixTree,
+        ctx: &TreeContext,
+        last_tokens: &[u32],
+        positions: &[usize],
+    ) -> anyhow::Result<DecodeOutput> {
+        let b = ctx.seq_order.len();
+        let cap = self
+            .decode_exes
+            .iter()
+            .map(|(c, _)| *c)
+            .find(|&c| c >= b)
+            .ok_or_else(|| anyhow::anyhow!("batch {b} exceeds artifact capacity"))?;
+        let (h_total, d) = (self.manifest.heads_total, self.manifest.model.head_dim);
+        let (starts, ends, lens) = self.pack_context(tree, ctx)?;
+
+        let mut tokens = vec![0i32; cap];
+        let mut pos = vec![0i32; cap];
+        for i in 0..b {
+            tokens[i] = last_tokens[i] as i32;
+            pos[i] = positions[i] as i32;
+        }
+        let m = self.max_chunks as i64;
+        let tokens_l = i32_literal(&tokens, &[cap as i64])?;
+        let pos_l = i32_literal(&pos, &[cap as i64])?;
+        let kc_l = f32_literal(&self.stage_k, &[m, h_total as i64, self.chunk_size as i64, d as i64])?;
+        let vc_l = f32_literal(&self.stage_v, &[m, h_total as i64, self.chunk_size as i64, d as i64])?;
+        let st_l = i32_literal(&starts, &[m])?;
+        let en_l = i32_literal(&ends, &[m])?;
+        let ln_l = i32_literal(&lens, &[m])?;
+
+        let exe = &self.decode_exes.iter().find(|(c, _)| *c == cap).unwrap().1;
+        let mut args = self.weight_refs();
+        args.extend([&tokens_l, &pos_l, &kc_l, &vc_l, &st_l, &en_l, &ln_l]);
+        let out = self.runtime.execute(exe, &args)?;
+        anyhow::ensure!(out.len() == 3, "decode returns (logits, k, v), got {}", out.len());
+        let logits = out[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let k_flat = out[1].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let v_flat = out[2].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+
+        let vocab = self.manifest.model.vocab;
+        let row = h_total * d;
+        let mut result = DecodeOutput {
+            next_tokens: Vec::with_capacity(b),
+            k_rows: Vec::with_capacity(b),
+            v_rows: Vec::with_capacity(b),
+        };
+        for i in 0..b {
+            result.next_tokens.push(Self::argmax(&logits[i * vocab..(i + 1) * vocab]));
+            result.k_rows.push(k_flat[i * row..(i + 1) * row].to_vec());
+            result.v_rows.push(v_flat[i * row..(i + 1) * row].to_vec());
+        }
+        Ok(result)
+    }
+}

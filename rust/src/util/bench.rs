@@ -1,0 +1,255 @@
+//! Criterion-style micro-benchmark harness (criterion itself is not in the
+//! offline crate set). Each `cargo bench` target is a `harness = false`
+//! binary that builds a [`BenchSuite`], registers measurements, and calls
+//! [`BenchSuite::finish`] to print a table and write JSON results.
+//!
+//! Measurement protocol: warmup iterations, then timed iterations until both
+//! a minimum sample count and a minimum measurement time are reached. Wall
+//! clock only — this host has one core, so cycle counters add nothing.
+
+use super::json::Json;
+use super::stats::{fmt_us, Summary};
+use std::time::Instant;
+
+/// Global bench mode, from the `CHUNK_ATTN_BENCH_MODE` env var:
+/// `quick` (default; smaller shapes, fewer samples) or `full` (paper-scale).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Quick,
+    Full,
+}
+
+impl Mode {
+    pub fn from_env() -> Mode {
+        match std::env::var("CHUNK_ATTN_BENCH_MODE").as_deref() {
+            Ok("full") | Ok("FULL") => Mode::Full,
+            _ => Mode::Quick,
+        }
+    }
+
+    pub fn is_full(self) -> bool {
+        self == Mode::Full
+    }
+
+    /// Pick `q` in quick mode, `f` in full mode.
+    pub fn pick<T>(self, q: T, f: T) -> T {
+        match self {
+            Mode::Quick => q,
+            Mode::Full => f,
+        }
+    }
+}
+
+/// Measurement settings.
+#[derive(Debug, Clone, Copy)]
+pub struct Settings {
+    pub warmup_iters: usize,
+    pub min_samples: usize,
+    pub max_samples: usize,
+    pub min_time_s: f64,
+}
+
+impl Settings {
+    pub fn for_mode(mode: Mode) -> Settings {
+        match mode {
+            Mode::Quick => Settings { warmup_iters: 1, min_samples: 3, max_samples: 10, min_time_s: 0.05 },
+            Mode::Full => Settings { warmup_iters: 2, min_samples: 5, max_samples: 30, min_time_s: 0.25 },
+        }
+    }
+}
+
+/// One recorded result row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub id: String,
+    pub params: Vec<(String, String)>,
+    pub stats: Summary,
+    /// Optional derived metric, e.g. tokens/s, reported alongside latency.
+    pub throughput: Option<(String, f64)>,
+}
+
+/// A suite accumulates rows and renders them at the end.
+pub struct BenchSuite {
+    name: String,
+    mode: Mode,
+    settings: Settings,
+    rows: Vec<Row>,
+    started: Instant,
+}
+
+impl BenchSuite {
+    pub fn new(name: &str) -> Self {
+        let mode = Mode::from_env();
+        let settings = Settings::for_mode(mode);
+        println!("== bench suite {name} (mode: {mode:?}) ==");
+        BenchSuite { name: name.to_string(), mode, settings, rows: Vec::new(), started: Instant::now() }
+    }
+
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    pub fn settings(&self) -> Settings {
+        self.settings
+    }
+
+    /// Time `f` under the suite's protocol and record a row.
+    /// `f` performs ONE unit of work per call and returns the number of
+    /// "items" processed (tokens, requests, ...) for throughput reporting.
+    pub fn measure<F>(&mut self, id: &str, params: &[(&str, String)], item_unit: Option<&str>, mut f: F)
+    where
+        F: FnMut() -> u64,
+    {
+        for _ in 0..self.settings.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut stats = Summary::new();
+        let mut items_total = 0u64;
+        let suite_start = Instant::now();
+        while stats.count() < self.settings.min_samples
+            || (suite_start.elapsed().as_secs_f64() < self.settings.min_time_s
+                && stats.count() < self.settings.max_samples)
+        {
+            let t0 = Instant::now();
+            let items = std::hint::black_box(f());
+            let dt = t0.elapsed().as_secs_f64() * 1e6; // µs
+            stats.add(dt);
+            items_total += items;
+        }
+        let throughput = item_unit.map(|unit| {
+            let per_iter = items_total as f64 / stats.count() as f64;
+            (unit.to_string(), per_iter / (stats.mean() / 1e6))
+        });
+        let row = Row {
+            id: id.to_string(),
+            params: params.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+            stats,
+            throughput,
+        };
+        let tp = row
+            .throughput
+            .as_ref()
+            .map(|(u, v)| format!("  {:>10.0} {u}", v))
+            .unwrap_or_default();
+        println!(
+            "  {:<44} {:>12} ±{:>9} (n={}){tp}",
+            row.id,
+            fmt_us(row.stats.mean()),
+            fmt_us(row.stats.std()),
+            row.stats.count()
+        );
+        self.rows.push(row);
+    }
+
+    /// Record an externally produced measurement (virtual-time simulations).
+    pub fn record(&mut self, id: &str, params: &[(&str, String)], value_us: f64, throughput: Option<(&str, f64)>) {
+        let mut stats = Summary::new();
+        stats.add(value_us);
+        let tp = throughput.map(|(u, v)| format!("  {v:>10.2} {u}")).unwrap_or_default();
+        println!("  {:<44} {:>12}{tp}", id, fmt_us(value_us));
+        self.rows.push(Row {
+            id: id.to_string(),
+            params: params.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+            stats,
+            throughput: throughput.map(|(u, v)| (u.to_string(), v)),
+        });
+    }
+
+    pub fn rows(&self) -> &[Row] {
+        &self.rows
+    }
+
+    /// Print the closing summary and write `target/bench-results/<name>.json`.
+    pub fn finish(self) {
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let mut arr = Vec::new();
+        for row in &self.rows {
+            let mut j = Json::obj();
+            j.set("id", row.id.as_str());
+            let mut params = Json::obj();
+            for (k, v) in &row.params {
+                params.set(k, v.as_str());
+            }
+            j.set("params", params);
+            j.set("mean_us", row.stats.mean());
+            j.set("std_us", row.stats.std());
+            j.set("min_us", row.stats.min());
+            j.set("max_us", row.stats.max());
+            j.set("samples", row.stats.count());
+            if let Some((unit, v)) = &row.throughput {
+                j.set("throughput", *v);
+                j.set("throughput_unit", unit.as_str());
+            }
+            arr.push(j);
+        }
+        let mut doc = Json::obj();
+        doc.set("suite", self.name.as_str());
+        doc.set("mode", format!("{:?}", self.mode));
+        doc.set("rows", Json::Arr(arr));
+        let dir = std::path::Path::new("target/bench-results");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{}.json", self.name));
+        if let Err(e) = std::fs::write(&path, doc.pretty()) {
+            eprintln!("warn: could not write {}: {e}", path.display());
+        } else {
+            println!("-- results written to {}", path.display());
+        }
+        println!("== suite {} done in {:.1}s ==\n", self.name, elapsed);
+    }
+}
+
+/// Render rows as a fixed-width table with one line per row, columns taken
+/// from `params` keys in order. Used to print paper-table-shaped output.
+pub fn print_table(title: &str, columns: &[&str], rows: &[(Vec<String>, String)]) {
+    println!("\n### {title}");
+    let mut widths: Vec<usize> = columns.iter().map(|c| c.len()).collect();
+    for (cells, _) in rows {
+        for (i, c) in cells.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+    }
+    let header: Vec<String> =
+        columns.iter().enumerate().map(|(i, c)| format!("{:>w$}", c, w = widths[i])).collect();
+    println!("| {} |", header.join(" | "));
+    println!("|{}|", widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|"));
+    for (cells, _) in rows {
+        let line: Vec<String> =
+            cells.iter().enumerate().map(|(i, c)| format!("{:>w$}", c, w = widths[i])).collect();
+        println!("| {} |", line.join(" | "));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_pick() {
+        assert_eq!(Mode::Quick.pick(1, 2), 1);
+        assert_eq!(Mode::Full.pick(1, 2), 2);
+    }
+
+    #[test]
+    fn measure_records_samples_and_throughput() {
+        let mut suite = BenchSuite::new("unit-test-suite");
+        suite.measure("noop", &[("k", "v".to_string())], Some("items/s"), || {
+            std::hint::black_box(1 + 1);
+            10
+        });
+        assert_eq!(suite.rows().len(), 1);
+        let row = &suite.rows()[0];
+        assert!(row.stats.count() >= 3);
+        let (unit, tput) = row.throughput.as_ref().unwrap();
+        assert_eq!(unit, "items/s");
+        assert!(*tput > 0.0);
+    }
+
+    #[test]
+    fn record_external_value() {
+        let mut suite = BenchSuite::new("unit-test-suite-2");
+        suite.record("sim", &[], 1234.0, Some(("tok/s", 1000.0)));
+        assert_eq!(suite.rows()[0].stats.mean(), 1234.0);
+    }
+}

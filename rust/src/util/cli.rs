@@ -1,0 +1,259 @@
+//! Tiny declarative CLI argument parser (the offline crate set has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments, and
+//! subcommands; renders `--help` from the declared options.
+
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative CLI definition for one (sub)command.
+#[derive(Debug, Clone)]
+pub struct Cli {
+    program: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(String, String)>, // (name, help)
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli { program: program.to_string(), about: about.to_string(), opts: Vec::new(), positionals: Vec::new() }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a required `--name <value>` (no default).
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec { name: name.to_string(), help: help.to_string(), default: None, is_flag: false });
+        self
+    }
+
+    /// Declare a boolean `--name` flag (defaults to false).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec { name: name.to_string(), help: help.to_string(), default: None, is_flag: true });
+        self
+    }
+
+    /// Declare a positional argument (for help rendering only).
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.program, self.about, self.program);
+        for (name, _) in &self.positionals {
+            s.push_str(&format!(" <{name}>"));
+        }
+        s.push_str(" [OPTIONS]\n");
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (name, help) in &self.positionals {
+                s.push_str(&format!("  <{name}>  {help}\n"));
+            }
+        }
+        s.push_str("\nOPTIONS:\n");
+        for o in &self.opts {
+            let lhs = if o.is_flag { format!("--{}", o.name) } else { format!("--{} <v>", o.name) };
+            let dflt = match &o.default {
+                Some(d) if !o.is_flag => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            s.push_str(&format!("  {lhs:<24} {}{dflt}\n", o.help));
+        }
+        s.push_str("  --help                   print this help\n");
+        s
+    }
+
+    /// Parse a raw argv slice (without the program name).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        // Seed defaults.
+        for o in &self.opts {
+            if o.is_flag {
+                args.flags.insert(o.name.clone(), false);
+            } else if let Some(d) = &o.default {
+                args.values.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.help_text()))?;
+                if spec.is_flag {
+                    match inline_val.as_deref() {
+                        None | Some("true") => {
+                            args.flags.insert(key, true);
+                        }
+                        Some("false") => {
+                            args.flags.insert(key, false);
+                        }
+                        Some(v) => return Err(format!("flag --{key} takes no value, got {v}")),
+                    }
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i).cloned().ok_or_else(|| format!("--{key} needs a value"))?
+                        }
+                    };
+                    args.values.insert(key, val);
+                }
+            } else {
+                args.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        // Check required options.
+        for o in &self.opts {
+            if !o.is_flag && o.default.is_none() && !args.values.contains_key(&o.name) {
+                return Err(format!("missing required --{}\n\n{}", o.name, self.help_text()));
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args()`; on `--help`/error, print and exit.
+    pub fn parse_or_exit(&self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&argv) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(if msg.starts_with(&self.program) { 0 } else { 2 });
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {:?}", self.get(name)))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {:?}", self.get(name)))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {:?}", self.get(name)))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        *self.flags.get(name).unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// Comma-separated list of integers, e.g. `--sizes 1,2,4`.
+    pub fn get_usize_list(&self, name: &str) -> Vec<usize> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad integer {s:?}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("batch", "32", "batch size")
+            .opt("mode", "quick", "mode")
+            .flag("verbose", "verbose output")
+            .req("seed", "rng seed")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cli().parse(&argv(&["--seed", "1"])).unwrap();
+        assert_eq!(a.get_usize("batch"), 32);
+        assert_eq!(a.get("mode"), "quick");
+        assert!(!a.get_flag("verbose"));
+        let a = cli().parse(&argv(&["--seed=2", "--batch=64", "--verbose"])).unwrap();
+        assert_eq!(a.get_usize("batch"), 64);
+        assert_eq!(a.get_u64("seed"), 2);
+        assert!(a.get_flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cli().parse(&argv(&["--batch", "8"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cli().parse(&argv(&["--seed", "1", "--nope", "2"])).is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = cli().parse(&argv(&["pos1", "--seed", "3", "pos2"])).unwrap();
+        assert_eq!(a.positionals(), &["pos1".to_string(), "pos2".to_string()]);
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let err = cli().parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("--batch"));
+        assert!(err.contains("--seed"));
+    }
+
+    #[test]
+    fn int_list() {
+        let c = Cli::new("t", "t").opt("sizes", "1,2,4", "");
+        let a = c.parse(&argv(&["--sizes", "8, 16,32"])).unwrap();
+        assert_eq!(a.get_usize_list("sizes"), vec![8, 16, 32]);
+    }
+}

@@ -1,0 +1,274 @@
+//! TOML-subset configuration parser for serving configs.
+//!
+//! Supports the subset real deployments of this system need:
+//! `[section]` / `[section.sub]` headers, `key = value` with string, integer,
+//! float, boolean and homogeneous-array values, `#` comments. No multiline
+//! strings, no inline tables, no datetimes.
+
+use std::collections::BTreeMap;
+
+/// A parsed config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat view of a TOML-subset document: `section.key -> Value`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(body) = line.strip_prefix('[') {
+                let name = body
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let full_key = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            let value = parse_value(value.trim()).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            entries.insert(full_key, value);
+        }
+        Ok(Config { entries })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn int(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.int(key, default as i64) as usize
+    }
+
+    pub fn float(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    /// Apply `key=value` override strings (CLI `--set engine.chunk_size=32`).
+    pub fn apply_overrides(&mut self, overrides: &[String]) -> Result<(), String> {
+        for ov in overrides {
+            let (k, v) = ov.split_once('=').ok_or_else(|| format!("bad override {ov:?}, want key=value"))?;
+            let val = parse_value(v.trim())?;
+            self.entries.insert(k.trim().to_string(), val);
+        }
+        Ok(())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_top_level(body) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(body.replace("\\\"", "\"").replace("\\n", "\n").replace("\\\\", "\\")));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {s:?} (bare strings must be quoted)"))
+}
+
+/// Split on commas that are not nested inside brackets or strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, ch) in s.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# serving config
+name = "chunk-attn"        # inline comment
+max_batch = 32
+
+[engine]
+chunk_size = 64
+backend = "chunk_tpp"
+gpu_fraction = 0.9
+lazy_context = true
+sizes = [1, 2, 4]
+
+[engine.limits]
+max_tokens = 8_192
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(DOC).unwrap();
+        assert_eq!(c.str("name", ""), "chunk-attn");
+        assert_eq!(c.int("max_batch", 0), 32);
+        assert_eq!(c.usize("engine.chunk_size", 0), 64);
+        assert_eq!(c.str("engine.backend", ""), "chunk_tpp");
+        assert!((c.float("engine.gpu_fraction", 0.0) - 0.9).abs() < 1e-12);
+        assert!(c.bool("engine.lazy_context", false));
+        assert_eq!(c.int("engine.limits.max_tokens", 0), 8192);
+    }
+
+    #[test]
+    fn arrays() {
+        let c = Config::parse("xs = [1, 2, 3]\nys = [\"a\", \"b,c\"]").unwrap();
+        match c.get("xs").unwrap() {
+            Value::Arr(v) => assert_eq!(v.len(), 3),
+            _ => panic!(),
+        }
+        match c.get("ys").unwrap() {
+            Value::Arr(v) => assert_eq!(v[1], Value::Str("b,c".into())),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.int("nope", 7), 7);
+        assert_eq!(c.str("nope", "x"), "x");
+    }
+
+    #[test]
+    fn errors_are_reported_with_line() {
+        let err = Config::parse("a = ").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        assert!(Config::parse("[open\n").is_err());
+        assert!(Config::parse("bare = word").is_err());
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = Config::parse("[e]\nx = 1").unwrap();
+        c.apply_overrides(&["e.x=5".into(), "e.y=\"z\"".into()]).unwrap();
+        assert_eq!(c.int("e.x", 0), 5);
+        assert_eq!(c.str("e.y", ""), "z");
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let c = Config::parse("s = \"a#b\"").unwrap();
+        assert_eq!(c.str("s", ""), "a#b");
+    }
+}

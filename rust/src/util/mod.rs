@@ -1,0 +1,20 @@
+//! In-house substrates: everything a serving framework normally pulls from
+//! crates.io, rebuilt on the offline crate set (see DESIGN.md §2).
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod logger;
+pub mod pbt;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+pub use bench::{BenchSuite, Mode};
+pub use cli::{Args, Cli};
+pub use config::Config;
+pub use json::Json;
+pub use rng::Pcg64;
+pub use stats::Summary;
+pub use threadpool::ThreadPool;

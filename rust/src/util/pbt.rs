@@ -1,0 +1,149 @@
+//! Mini property-based testing harness (the offline crate set has no
+//! `proptest`), used by the kv-cache and coordinator invariant tests.
+//!
+//! Provides seeded random case generation, failure reporting with the seed
+//! needed to replay, and greedy input shrinking for `Vec`-shaped inputs.
+
+use super::rng::Pcg64;
+
+/// Number of random cases per property (override with `CHUNK_ATTN_PBT_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("CHUNK_ATTN_PBT_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(64)
+}
+
+/// Run `prop` on `cases` random inputs produced by `gen`. On failure, panic
+/// with the case index and seed so the failure replays deterministically.
+pub fn check<T, G, P>(name: &str, seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut rng = Pcg64::new(seed, case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed at case {case} (seed={seed}, stream={case}):\n  {msg}\n  input: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`], but for `Vec<T>` inputs: on failure, greedily shrink the
+/// failing vector (halving windows, then element removal) and report the
+/// smallest failing input found.
+pub fn check_shrink<T, G, P>(name: &str, seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Pcg64) -> Vec<T>,
+    P: FnMut(&[T]) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut rng = Pcg64::new(seed, case as u64);
+        let input = gen(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            let (smallest, msg) = shrink(input, first_msg, &mut prop);
+            panic!(
+                "property {name:?} failed at case {case} (seed={seed}, stream={case});\n  \
+                 shrunk to {} elements:\n  {msg}\n  input: {smallest:#?}",
+                smallest.len()
+            );
+        }
+    }
+}
+
+fn shrink<T, P>(mut failing: Vec<T>, mut msg: String, prop: &mut P) -> (Vec<T>, String)
+where
+    T: Clone,
+    P: FnMut(&[T]) -> Result<(), String>,
+{
+    // Phase 1: try dropping halves/quarters/... of the input.
+    let mut window = failing.len() / 2;
+    while window >= 1 {
+        let mut start = 0;
+        while start + window <= failing.len() {
+            let mut candidate = failing.clone();
+            candidate.drain(start..start + window);
+            match prop(&candidate) {
+                Err(m) => {
+                    failing = candidate;
+                    msg = m;
+                    // Restart this window size on the smaller input.
+                    start = 0;
+                }
+                Ok(()) => start += window,
+            }
+        }
+        window /= 2;
+    }
+    (failing, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check("sum-commutes", 1, 32, |rng| (rng.below(100), rng.below(100)), |&(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 7, 8, |rng| rng.below(10), |_| Err("always-fails".into()));
+    }
+
+    #[test]
+    fn shrinking_finds_minimal_counterexample() {
+        // Property: no element equals 13. Gen vectors guaranteed to contain 13.
+        let result = std::panic::catch_unwind(|| {
+            check_shrink(
+                "no-thirteen",
+                3,
+                1,
+                |rng| {
+                    let mut v: Vec<u64> = (0..50).map(|_| rng.below(12)).collect();
+                    let pos = rng.range(0, v.len() - 1);
+                    v[pos] = 13;
+                    v
+                },
+                |xs| {
+                    if xs.contains(&13) {
+                        Err("contains 13".into())
+                    } else {
+                        Ok(())
+                    }
+                },
+            )
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("shrunk to 1 elements"), "{msg}");
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let collect = |seed: u64| {
+            let mut seen = Vec::new();
+            check("collect", seed, 4, |rng| rng.below(1000), |&x| {
+                // Property never fails; abuse closure to record inputs.
+                let _ = x;
+                Ok(())
+            });
+            for case in 0..4 {
+                let mut rng = Pcg64::new(seed, case);
+                seen.push(rng.below(1000));
+            }
+            seen
+        };
+        assert_eq!(collect(99), collect(99));
+    }
+}

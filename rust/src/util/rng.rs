@@ -1,0 +1,284 @@
+//! Deterministic pseudo-random number generation and the distributions the
+//! workload generator needs (uniform, exponential, Poisson, Zipf, normal).
+//!
+//! The offline crate set does not include `rand`, so this module implements
+//! PCG-XSH-RR 64/32 (O'Neill, 2014) from scratch. Everything is seeded and
+//! reproducible: every experiment in EXPERIMENTS.md records its seed.
+
+/// PCG-XSH-RR 64/32: 64-bit state/LCG, 32-bit output with xorshift+rotate.
+///
+/// Small, fast, and statistically solid for simulation workloads. Not
+/// cryptographic — nothing here needs to be.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg64 {
+    /// Create a generator from a seed and a stream id. Different streams with
+    /// the same seed are independent.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg64 { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience constructor with stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Next raw 32-bit output.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next raw 64-bit output (two 32-bit draws).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform() as f32
+    }
+
+    /// Unbiased uniform integer in `[0, bound)` (Lemire's rejection method).
+    pub fn below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "below(0) is meaningless");
+        // Rejection sampling on the top bits to avoid modulo bias.
+        let threshold = bound.wrapping_neg() % bound;
+        loop {
+            let r = self.next_u64();
+            if r >= threshold {
+                return r % bound;
+            }
+        }
+    }
+
+    /// Uniform integer in the inclusive range `[lo, hi]`.
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform usize in `[lo, hi]`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        self.range_u64(lo as u64, hi as u64) as usize
+    }
+
+    /// Bernoulli draw with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Exponentially distributed value with rate `lambda` (mean `1/lambda`).
+    /// Inter-arrival times of a Poisson process.
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        assert!(lambda > 0.0);
+        // Inverse CDF; `1 - uniform()` avoids ln(0).
+        -(1.0 - self.uniform()).ln() / lambda
+    }
+
+    /// Poisson-distributed count with mean `lambda`.
+    ///
+    /// Knuth's product method for small lambda, normal approximation with
+    /// continuity correction above 30 (adequate for workload synthesis).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        assert!(lambda >= 0.0);
+        if lambda == 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            let limit = (-lambda).exp();
+            let mut prod = self.uniform();
+            let mut n = 0u64;
+            while prod > limit {
+                n += 1;
+                prod *= self.uniform();
+            }
+            n
+        } else {
+            let x = self.normal(lambda, lambda.sqrt());
+            if x < 0.0 {
+                0
+            } else {
+                (x + 0.5) as u64
+            }
+        }
+    }
+
+    /// Normally distributed value (Box–Muller).
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        let u1 = 1.0 - self.uniform(); // (0, 1]
+        let u2 = self.uniform();
+        let mag = (-2.0 * u1.ln()).sqrt();
+        mean + std * mag * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Zipf-distributed rank in `[0, n)` with exponent `s` via inverse-CDF on
+    /// a precomputed table-free approximation (rejection-inversion would be
+    /// overkill; n is small for tenant selection).
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        assert!(n > 0);
+        // Normalising constant.
+        let mut h = 0.0;
+        for k in 1..=n {
+            h += 1.0 / (k as f64).powf(s);
+        }
+        let mut u = self.uniform() * h;
+        for k in 1..=n {
+            u -= 1.0 / (k as f64).powf(s);
+            if u <= 0.0 {
+                return k - 1;
+            }
+        }
+        n - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.range(0, i);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniformly random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.range(0, xs.len() - 1)]
+    }
+
+    /// Fill a slice with uniform f32 values in `[lo, hi)` (weight/tensor init).
+    pub fn fill_uniform_f32(&mut self, out: &mut [f32], lo: f32, hi: f32) {
+        for v in out.iter_mut() {
+            *v = self.uniform_f32(lo, hi);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg64::new(42, 7);
+        let mut b = Pcg64::new(42, 7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(42, 1);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4, "streams should be effectively independent");
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..10_000 {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_close_to_half() {
+        let mut rng = Pcg64::seeded(2);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.uniform()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_hits_all_values() {
+        let mut rng = Pcg64::seeded(3);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            seen[rng.below(7) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Pcg64::seeded(4);
+        let lambda = 2.5;
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| rng.exponential(lambda)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0 / lambda).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn poisson_mean_small_lambda() {
+        let mut rng = Pcg64::seeded(5);
+        let lambda = 3.0;
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.poisson(lambda) as f64).sum::<f64>() / n as f64;
+        assert!((mean - lambda).abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn poisson_mean_large_lambda() {
+        let mut rng = Pcg64::seeded(6);
+        let lambda = 120.0;
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| rng.poisson(lambda) as f64).sum::<f64>() / n as f64;
+        assert!((mean - lambda).abs() < lambda * 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seeded(7);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal(10.0, 3.0)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 10.0).abs() < 0.05, "mean {mean}");
+        assert!((var - 9.0).abs() < 0.2, "var {var}");
+    }
+
+    #[test]
+    fn zipf_rank_zero_most_frequent() {
+        let mut rng = Pcg64::seeded(8);
+        let mut counts = [0usize; 5];
+        for _ in 0..20_000 {
+            counts[rng.zipf(5, 1.1)] += 1;
+        }
+        assert!(counts[0] > counts[1]);
+        assert!(counts[1] > counts[3]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seeded(9);
+        let mut xs: Vec<u32> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,258 @@
+//! Summary statistics and latency histograms for benchmark reporting.
+//!
+//! `criterion` is not in the offline crate set, so the bench harness
+//! (`util::bench`) and the serving metrics build on these primitives.
+
+/// Streaming summary of a set of f64 samples (Welford's online algorithm for
+/// mean/variance, plus min/max and a retained sample buffer for percentiles).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { samples: Vec::new(), mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x);
+        let n = self.samples.len() as f64;
+        let delta = x - self.mean;
+        self.mean += delta / n;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.samples.len() < 2 {
+            0.0
+        } else {
+            self.m2 / (self.samples.len() - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    /// Percentile by linear interpolation between closest ranks.
+    /// `p` in `[0, 100]`.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            sorted[lo]
+        } else {
+            let frac = rank - lo as f64;
+            sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+/// Fixed-bucket log-scale latency histogram (microsecond domain).
+///
+/// Buckets are powers of `growth` starting at `first_bucket`; everything
+/// above the last bucket lands in the overflow bucket. This is the shape of
+/// histogram serving systems export to dashboards.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl LogHistogram {
+    /// `first_bucket`: upper bound of the first bucket; `growth`: geometric
+    /// growth factor; `n`: number of finite buckets.
+    pub fn new(first_bucket: f64, growth: f64, n: usize) -> Self {
+        assert!(first_bucket > 0.0 && growth > 1.0 && n > 0);
+        let mut bounds = Vec::with_capacity(n);
+        let mut b = first_bucket;
+        for _ in 0..n {
+            bounds.push(b);
+            b *= growth;
+        }
+        LogHistogram { counts: vec![0; n + 1], bounds, total: 0 }
+    }
+
+    /// Default latency histogram: 1µs .. ~17s in 32 buckets (×1.7 growth).
+    pub fn latency_us() -> Self {
+        Self::new(1.0, 1.7, 32)
+    }
+
+    pub fn record(&mut self, x: f64) {
+        let idx = match self.bounds.iter().position(|&b| x <= b) {
+            Some(i) => i,
+            None => self.bounds.len(),
+        };
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of the bucket
+    /// containing the q-th sample).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return if i < self.bounds.len() { self.bounds[i] } else { f64::INFINITY };
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+/// Format a duration in microseconds with an adaptive unit.
+pub fn fmt_us(us: f64) -> String {
+    if us < 1_000.0 {
+        format!("{us:.2}µs")
+    } else if us < 1_000_000.0 {
+        format!("{:.2}ms", us / 1_000.0)
+    } else {
+        format!("{:.2}s", us / 1_000_000.0)
+    }
+}
+
+/// Format a byte count with an adaptive binary unit.
+pub fn fmt_bytes(b: u64) -> String {
+    const KIB: f64 = 1024.0;
+    let b = b as f64;
+    if b < KIB {
+        format!("{b:.0}B")
+    } else if b < KIB * KIB {
+        format!("{:.1}KiB", b / KIB)
+    } else if b < KIB * KIB * KIB {
+        format!("{:.1}MiB", b / KIB / KIB)
+    } else {
+        format!("{:.2}GiB", b / KIB / KIB / KIB)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic_moments() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.add(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.138089935299395).abs() < 1e-9);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+        assert_eq!(s.count(), 8);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let mut s = Summary::new();
+        for x in 1..=100 {
+            s.add(x as f64);
+        }
+        assert!((s.percentile(50.0) - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.percentile(99.0) - 99.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_empty_is_safe() {
+        let s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.percentile(99.0), 0.0);
+        assert_eq!(s.std(), 0.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let mut h = LogHistogram::latency_us();
+        for i in 1..=10_000u64 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.total(), 10_000);
+        let q50 = h.quantile(0.5);
+        let q99 = h.quantile(0.99);
+        assert!(q50 <= q99);
+        assert!(q50 >= 1_000.0 && q50 <= 20_000.0, "q50 {q50}");
+    }
+
+    #[test]
+    fn histogram_overflow_bucket() {
+        let mut h = LogHistogram::new(1.0, 2.0, 4); // buckets up to 8
+        h.record(1e9);
+        assert_eq!(h.quantile(1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_us(12.5), "12.50µs");
+        assert_eq!(fmt_us(12_500.0), "12.50ms");
+        assert_eq!(fmt_us(2_500_000.0), "2.50s");
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(1536), "1.5KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024 * 1024), "3.00GiB");
+    }
+}

@@ -1,0 +1,208 @@
+//! Work-stealing-free persistent thread pool with a `parallel_for` primitive.
+//!
+//! The kernel layer partitions work over (head, chunk) pairs exactly as the
+//! paper partitions CUDA thread blocks; on CPU those partitions map to pool
+//! workers. The pool is persistent (workers park between calls) so the decode
+//! hot loop pays no thread-spawn cost per iteration.
+//!
+//! On a single-core host the pool degrades gracefully: `ThreadPool::new(1)`
+//! runs everything inline on the caller thread with zero synchronisation.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size persistent worker pool.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool with `size` workers. `size == 1` means "inline": no
+    /// workers are spawned and all work runs on the caller.
+    pub fn new(size: usize) -> Self {
+        assert!(size >= 1);
+        if size == 1 {
+            return ThreadPool { tx: None, workers: Vec::new(), size };
+        }
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("chunk-attn-worker-{i}"))
+                    .spawn(move || worker_loop(rx))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, size }
+    }
+
+    /// Pool sized from `CHUNK_ATTN_THREADS` env or the number of cpus.
+    pub fn default_for_host() -> Self {
+        let n = std::env::var("CHUNK_ATTN_THREADS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        Self::new(n.max(1))
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Run `f(i)` for every `i` in `0..n`, distributing indices over workers
+    /// in contiguous blocks. Blocks until all iterations complete.
+    ///
+    /// `f` must be `Sync` because multiple workers call it concurrently.
+    pub fn parallel_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        if self.tx.is_none() || n == 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let latch = Arc::new(Latch::new(self.size.min(n)));
+        let next = Arc::new(AtomicUsize::new(0));
+        // Safety: `parallel_for` blocks on the latch until every submitted
+        // closure has finished, so borrowing `f` across the 'static job
+        // boundary never outlives this frame.
+        let f_ptr = &f as *const F as usize;
+        let tx = self.tx.as_ref().unwrap();
+        let grain = (n / (self.size * 4)).max(1);
+        for _ in 0..self.size.min(n) {
+            let latch = Arc::clone(&latch);
+            let next = Arc::clone(&next);
+            let job: Job = Box::new(move || {
+                let f = unsafe { &*(f_ptr as *const F) };
+                loop {
+                    let start = next.fetch_add(grain, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    for i in start..(start + grain).min(n) {
+                        f(i);
+                    }
+                }
+                latch.count_down();
+            });
+            tx.send(job).expect("pool alive");
+        }
+        latch.wait();
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel; workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>) {
+    loop {
+        let job = {
+            let guard = rx.lock().expect("pool lock");
+            guard.recv()
+        };
+        match job {
+            Ok(job) => job(),
+            Err(_) => break, // channel closed: pool dropped
+        }
+    }
+}
+
+/// Count-down latch: `wait` blocks until `count_down` has been called N times.
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Latch { remaining: Mutex::new(n), cv: Condvar::new() }
+    }
+
+    fn count_down(&self) {
+        let mut rem = self.remaining.lock().unwrap();
+        *rem -= 1;
+        if *rem == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut rem = self.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = self.cv.wait(rem).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn inline_pool_runs_everything() {
+        let pool = ThreadPool::new(1);
+        let sum = AtomicU64::new(0);
+        pool.parallel_for(100, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn multi_worker_covers_all_indices() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for(1000, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn pool_is_reusable() {
+        let pool = ThreadPool::new(3);
+        for round in 0..10 {
+            let sum = AtomicU64::new(0);
+            pool.parallel_for(round * 13 + 1, |i| {
+                sum.fetch_add(i as u64 + 1, Ordering::Relaxed);
+            });
+            let n = (round * 13 + 1) as u64;
+            assert_eq!(sum.load(Ordering::Relaxed), n * (n + 1) / 2);
+        }
+    }
+
+    #[test]
+    fn zero_iterations_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.parallel_for(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        pool.parallel_for(10, |_| {});
+        drop(pool); // must not hang
+    }
+}

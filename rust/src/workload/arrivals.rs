@@ -1,0 +1,187 @@
+//! Request types and arrival processes for the end-to-end evaluation.
+//!
+//! §4.2: "Requests arrive at the server randomly following the Poisson
+//! arrival process parameterised by λ (average requests per second)". The
+//! generator draws i.i.d. exponential inter-arrival gaps and assigns each
+//! request a tenant (uniform or Zipf-skewed) and a completion budget.
+
+use crate::util::rng::Pcg64;
+
+/// One inference request as the router sees it.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time in seconds from trace start.
+    pub arrival_s: f64,
+    /// Tenant whose system prompt prefixes the prompt.
+    pub tenant: usize,
+    /// Full prompt tokens (system prompt ++ user query).
+    pub prompt: Vec<u32>,
+    /// Tokens of the prompt shared with the tenant's other requests.
+    pub shared_tokens: usize,
+    /// Completion tokens to decode.
+    pub max_new_tokens: usize,
+}
+
+/// Arrival trace configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceConfig {
+    /// Mean requests per second (the λ of §4.2).
+    pub rps: f64,
+    /// Number of requests to generate.
+    pub n_requests: usize,
+    /// Tenants to draw from.
+    pub n_tenants: usize,
+    /// Zipf exponent for tenant popularity; 0 = uniform.
+    pub tenant_skew: f64,
+    /// User-query tokens appended after the system prompt.
+    pub query_tokens: usize,
+    /// Completion tokens per request.
+    pub completion_tokens: usize,
+    pub seed: u64,
+}
+
+/// A generated arrival trace (sorted by arrival time by construction).
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    /// Generate a Poisson trace. `make_prompt(tenant, rng) -> (tokens,
+    /// shared)` supplies the actual prompt (usually `Corpus`-backed).
+    pub fn poisson(
+        cfg: &TraceConfig,
+        mut make_prompt: impl FnMut(usize, &mut Pcg64) -> (Vec<u32>, usize),
+    ) -> Trace {
+        assert!(cfg.rps > 0.0 && cfg.n_tenants > 0);
+        let mut rng = Pcg64::new(cfg.seed, 0);
+        let mut t = 0.0f64;
+        let mut requests = Vec::with_capacity(cfg.n_requests);
+        for id in 0..cfg.n_requests {
+            t += rng.exponential(cfg.rps);
+            let tenant = if cfg.tenant_skew > 0.0 {
+                rng.zipf(cfg.n_tenants, cfg.tenant_skew)
+            } else {
+                rng.range(0, cfg.n_tenants - 1)
+            };
+            let (prompt, shared_tokens) = make_prompt(tenant, &mut rng);
+            requests.push(Request {
+                id: id as u64,
+                arrival_s: t,
+                tenant,
+                prompt,
+                shared_tokens,
+                max_new_tokens: cfg.completion_tokens,
+            });
+        }
+        Trace { requests }
+    }
+
+    /// Synthetic prompts without a tokenizer: `shared` tokens common to the
+    /// tenant plus unique filler — used by simulator benches where only
+    /// token *identities* matter, not text.
+    pub fn poisson_synthetic(cfg: &TraceConfig, system_tokens: usize) -> Trace {
+        Self::poisson(cfg, |tenant, rng| {
+            let mut prompt: Vec<u32> =
+                (0..system_tokens as u32).map(|i| tenant as u32 * 1_000_000 + i).collect();
+            // Unique query suffix: high bits keyed by a per-request nonce.
+            let nonce = rng.next_u64() as u32 & 0x3FFFFF;
+            prompt.extend((0..cfg.query_tokens as u32).map(|i| 0x8000_0000 | (nonce << 8) | i & 0xFF));
+            (prompt, system_tokens)
+        })
+    }
+
+    pub fn duration_s(&self) -> f64 {
+        self.requests.last().map(|r| r.arrival_s).unwrap_or(0.0)
+    }
+
+    /// Empirical requests-per-second of the trace.
+    pub fn empirical_rps(&self) -> f64 {
+        if self.requests.len() < 2 {
+            return 0.0;
+        }
+        self.requests.len() as f64 / self.duration_s()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(rps: f64, n: usize) -> TraceConfig {
+        TraceConfig {
+            rps,
+            n_requests: n,
+            n_tenants: 4,
+            tenant_skew: 0.0,
+            query_tokens: 16,
+            completion_tokens: 64,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn arrivals_are_sorted_and_rate_matches() {
+        let trace = Trace::poisson_synthetic(&cfg(2.0, 4000), 100);
+        let mut prev = 0.0;
+        for r in &trace.requests {
+            assert!(r.arrival_s >= prev);
+            prev = r.arrival_s;
+        }
+        let rps = trace.empirical_rps();
+        assert!((rps - 2.0).abs() < 0.15, "empirical rps {rps}");
+    }
+
+    #[test]
+    fn interarrival_is_exponential_enough() {
+        // CV (std/mean) of exponential gaps is 1.
+        let trace = Trace::poisson_synthetic(&cfg(5.0, 5000), 10);
+        let gaps: Vec<f64> = trace
+            .requests
+            .windows(2)
+            .map(|w| w[1].arrival_s - w[0].arrival_s)
+            .collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean).powi(2)).sum::<f64>() / gaps.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!((cv - 1.0).abs() < 0.08, "cv {cv}");
+    }
+
+    #[test]
+    fn same_tenant_shares_prefix_different_tenants_dont() {
+        let trace = Trace::poisson_synthetic(&cfg(1.0, 64), 50);
+        let by_tenant: Vec<&Request> =
+            trace.requests.iter().filter(|r| r.tenant == trace.requests[0].tenant).collect();
+        if by_tenant.len() >= 2 {
+            assert_eq!(&by_tenant[0].prompt[..50], &by_tenant[1].prompt[..50]);
+        }
+        let other = trace.requests.iter().find(|r| r.tenant != trace.requests[0].tenant);
+        if let Some(o) = other {
+            assert_ne!(&o.prompt[..50], &trace.requests[0].prompt[..50]);
+        }
+    }
+
+    #[test]
+    fn zipf_skews_tenant_popularity() {
+        let mut c = cfg(1.0, 3000);
+        c.tenant_skew = 1.2;
+        let trace = Trace::poisson_synthetic(&c, 10);
+        let mut counts = [0usize; 4];
+        for r in &trace.requests {
+            counts[r.tenant] += 1;
+        }
+        assert!(counts[0] > counts[3] * 2, "{counts:?}");
+    }
+
+    #[test]
+    fn deterministic_trace() {
+        let a = Trace::poisson_synthetic(&cfg(1.0, 100), 20);
+        let b = Trace::poisson_synthetic(&cfg(1.0, 100), 20);
+        assert_eq!(a.requests.len(), b.requests.len());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.prompt, y.prompt);
+        }
+    }
+}

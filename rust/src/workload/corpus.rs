@@ -1,0 +1,271 @@
+//! Synthetic multi-tenant system-prompt corpus.
+//!
+//! §2.1 of the paper motivates PAKV with four real systems whose shared
+//! system prompts run 879–4257 tokens (Table 2). Those prompts are not
+//! redistributable, so this module synthesises structurally equivalent
+//! ones: tool/API definitions with parameter lists, chain-of-thought
+//! few-shot examples, and document metadata, stitched until a target token
+//! length is reached. Every tenant gets a distinct prompt; every request of
+//! a tenant shares that tenant's prompt verbatim — the property PAKV
+//! exploits.
+
+use super::tokenizer::Tokenizer;
+use crate::util::rng::Pcg64;
+
+/// What the tenant's prompt is made of (mirrors Table 2's "Usage" column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PromptKind {
+    /// Tool/function definitions + invocation examples (Chameleon, ToolQA).
+    ToolDefinitions,
+    /// Chain-of-thought worked examples (CREATOR).
+    CotExamples,
+    /// Document metadata for QA (PDFTriage).
+    DocumentMetadata,
+}
+
+impl PromptKind {
+    pub const ALL: [PromptKind; 3] =
+        [PromptKind::ToolDefinitions, PromptKind::CotExamples, PromptKind::DocumentMetadata];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PromptKind::ToolDefinitions => "tools",
+            PromptKind::CotExamples => "cot-examples",
+            PromptKind::DocumentMetadata => "doc-metadata",
+        }
+    }
+}
+
+/// One tenant (application) with a fixed shared system prompt.
+#[derive(Debug, Clone)]
+pub struct Tenant {
+    pub id: usize,
+    pub kind: PromptKind,
+    pub system_prompt: String,
+    pub system_tokens: Vec<u32>,
+}
+
+/// A corpus of tenants sharing one tokenizer.
+pub struct Corpus {
+    pub tenants: Vec<Tenant>,
+}
+
+impl Corpus {
+    /// Synthesize `n_tenants` tenants whose system prompts tokenize to
+    /// approximately `target_tokens` each (within one building block).
+    pub fn synthesize(tok: &Tokenizer, n_tenants: usize, target_tokens: usize, seed: u64) -> Self {
+        let mut tenants = Vec::with_capacity(n_tenants);
+        for id in 0..n_tenants {
+            let mut rng = Pcg64::new(seed, id as u64);
+            let kind = PromptKind::ALL[id % PromptKind::ALL.len()];
+            let mut prompt = header(kind, id);
+            let mut tokens = tok.encode(&prompt).len();
+            let mut block_idx = 0;
+            while tokens < target_tokens {
+                let block = building_block(kind, id, block_idx, &mut rng);
+                tokens += tok.encode(&block).len();
+                prompt.push_str(&block);
+                block_idx += 1;
+            }
+            let system_tokens = tok.encode(&prompt);
+            tenants.push(Tenant { id, kind, system_prompt: prompt, system_tokens });
+        }
+        Corpus { tenants }
+    }
+
+    /// Generate one user query for a tenant: the task-specific suffix that
+    /// differs per request. Returns full prompt tokens (system ++ query).
+    pub fn make_request_tokens(
+        &self,
+        tok: &Tokenizer,
+        tenant: usize,
+        query_tokens: usize,
+        rng: &mut Pcg64,
+    ) -> Vec<u32> {
+        let t = &self.tenants[tenant % self.tenants.len()];
+        let mut tokens = t.system_tokens.clone();
+        let query = user_query(rng);
+        let mut q = tok.encode(&query);
+        // Pad/trim to the requested query length with filler clauses.
+        while q.len() < query_tokens {
+            q.extend(tok.encode(&user_query(rng)));
+        }
+        q.truncate(query_tokens);
+        tokens.extend(q);
+        tokens
+    }
+
+    /// Table-2-style statistics: per-tenant token counts.
+    pub fn stats(&self) -> CorpusStats {
+        let counts: Vec<usize> = self.tenants.iter().map(|t| t.system_tokens.len()).collect();
+        let sum: usize = counts.iter().sum();
+        CorpusStats {
+            tenants: counts.len(),
+            avg_tokens: if counts.is_empty() { 0 } else { sum / counts.len() },
+            max_tokens: counts.iter().copied().max().unwrap_or(0),
+            min_tokens: counts.iter().copied().min().unwrap_or(0),
+        }
+    }
+}
+
+/// Aggregate prompt-length statistics (the paper's Table 2 columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CorpusStats {
+    pub tenants: usize,
+    pub avg_tokens: usize,
+    pub max_tokens: usize,
+    pub min_tokens: usize,
+}
+
+fn header(kind: PromptKind, id: usize) -> String {
+    match kind {
+        PromptKind::ToolDefinitions => format!(
+            "Instructions: Given the following list of API specifications and the user query, \
+             you will choose the most appropriate API for application {id} to invoke and parse \
+             the corresponding parameters from the user query. If none of the API descriptions \
+             match the user query intent, return not_found(). Your response must strictly \
+             follow the syntax of: api_chosen(param1=PARSED_PARAM1, ...).\n\n"
+        ),
+        PromptKind::CotExamples => format!(
+            "You solve math and reasoning problems for workspace {id}. Think step by step. \
+             For each problem, write the reasoning chain, then the final answer on its own \
+             line. Follow the format of the worked examples below exactly.\n\n"
+        ),
+        PromptKind::DocumentMetadata => format!(
+            "You answer questions about document collection {id}. Use only the metadata and \
+             extracted sections below; if the answer is not present, say so. Cite the page \
+             number for every claim.\n\n"
+        ),
+    }
+}
+
+/// One reproducible content block of roughly 60–120 tokens.
+fn building_block(kind: PromptKind, tenant: usize, idx: usize, rng: &mut Pcg64) -> String {
+    match kind {
+        PromptKind::ToolDefinitions => {
+            let verbs = ["search", "lookup", "list", "create", "update", "translate", "rank"];
+            let nouns = ["hotels", "flights", "catalog", "documents", "restaurants", "images", "events"];
+            let verb = verbs[rng.range(0, verbs.len() - 1)];
+            let noun = nouns[rng.range(0, nouns.len() - 1)];
+            format!(
+                "- {verb}_{noun}_{tenant}_{idx}(count, offset, query, region, safe_mode): \
+                 The {verb} API lets the assistant {verb} {noun} matching a keyword string. \
+                 Parameters:\n  - count: [optional] Number of results to return. The default \
+                 is 10 and the maximum value is 50.\n  - offset: [optional] Zero-based offset \
+                 indicating the number of results to skip before returning results.\n  - \
+                 query: [required] The user's query term. The term may not be empty.\n  - \
+                 region: [optional] Two-letter market code used to rank results.\n  - \
+                 safe_mode: [optional] One of off, moderate, strict. The default is moderate.\n"
+            )
+        }
+        PromptKind::CotExamples => {
+            let a = rng.range(12, 97);
+            let b = rng.range(3, 41);
+            format!(
+                "Example {idx}: A vendor sells {a} crates and each crate holds {b} units. \
+                 After selling a third of the units, how many remain?\nReasoning: total units \
+                 are {a} times {b} which is {}. A third of that is {}. Remaining is total \
+                 minus a third, which is {}.\nAnswer: {}\n\n",
+                a * b,
+                a * b / 3,
+                a * b - a * b / 3,
+                a * b - a * b / 3
+            )
+        }
+        PromptKind::DocumentMetadata => {
+            let pages = rng.range(4, 60);
+            format!(
+                "Section {idx}: title \"Quarterly operations review part {idx} for tenant \
+                 {tenant}\", pages {pages}, author record id {}, keywords: logistics, \
+                 forecast, inventory, compliance. Abstract: the section summarises shipment \
+                 volumes, staffing levels and exception reports for the period, with tables \
+                 on page {} and appendices describing methodology.\n\n",
+                rng.range(1000, 9999),
+                pages / 2 + 1,
+            )
+        }
+    }
+}
+
+fn user_query(rng: &mut Pcg64) -> String {
+    let subjects = [
+        "the latest shipment report",
+        "a flight from Seattle to Austin next Friday",
+        "vegan restaurants open on Saturday",
+        "the total units across all crates",
+        "the author of section twelve",
+        "hotels near the convention center under 200 dollars",
+        "the compliance exceptions in the appendix",
+    ];
+    let asks = [
+        "Can you find {}?",
+        "What is {}?",
+        "Please summarise {} briefly.",
+        "I need {} right away.",
+        "Look up {} and give one suggestion.",
+    ];
+    let s = subjects[rng.range(0, subjects.len() - 1)];
+    let a = asks[rng.range(0, asks.len() - 1)];
+    format!(" {} ", a.replace("{}", s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::OnceLock;
+
+    fn tok() -> &'static Tokenizer {
+        static TOK: OnceLock<Tokenizer> = OnceLock::new();
+        TOK.get_or_init(Tokenizer::default_english)
+    }
+
+    #[test]
+    fn prompts_hit_target_length() {
+        let corpus = Corpus::synthesize(tok(), 4, 800, 42);
+        for t in &corpus.tenants {
+            let n = t.system_tokens.len();
+            assert!((800..1100).contains(&n), "tenant {} has {n} tokens", t.id);
+        }
+    }
+
+    #[test]
+    fn tenants_have_distinct_prompts() {
+        let corpus = Corpus::synthesize(tok(), 6, 300, 42);
+        for i in 0..corpus.tenants.len() {
+            for j in i + 1..corpus.tenants.len() {
+                assert_ne!(
+                    corpus.tenants[i].system_tokens, corpus.tenants[j].system_tokens,
+                    "tenants {i} and {j} collide"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn requests_share_tenant_prefix_exactly() {
+        let corpus = Corpus::synthesize(tok(), 2, 400, 7);
+        let mut rng = Pcg64::seeded(1);
+        let a = corpus.make_request_tokens(tok(), 0, 30, &mut rng);
+        let b = corpus.make_request_tokens(tok(), 0, 30, &mut rng);
+        let sys = corpus.tenants[0].system_tokens.len();
+        assert_eq!(&a[..sys], &b[..sys], "system prompt tokens identical");
+        assert_ne!(&a[sys..], &b[sys..], "queries differ");
+        assert_eq!(a.len(), sys + 30);
+    }
+
+    #[test]
+    fn stats_summarise() {
+        let corpus = Corpus::synthesize(tok(), 3, 500, 9);
+        let s = corpus.stats();
+        assert_eq!(s.tenants, 3);
+        assert!(s.min_tokens <= s.avg_tokens && s.avg_tokens <= s.max_tokens);
+        assert!(s.avg_tokens >= 500);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = Corpus::synthesize(tok(), 2, 300, 5);
+        let b = Corpus::synthesize(tok(), 2, 300, 5);
+        assert_eq!(a.tenants[1].system_tokens, b.tenants[1].system_tokens);
+    }
+}

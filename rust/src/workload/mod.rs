@@ -1,0 +1,10 @@
+//! Workload synthesis: tokenizer, multi-tenant system-prompt corpus
+//! (§2.1 / Table 2), and Poisson arrival traces (§4.2).
+
+pub mod arrivals;
+pub mod corpus;
+pub mod tokenizer;
+
+pub use arrivals::{Request, Trace, TraceConfig};
+pub use corpus::{Corpus, CorpusStats, PromptKind, Tenant};
+pub use tokenizer::Tokenizer;

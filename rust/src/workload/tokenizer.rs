@@ -1,0 +1,200 @@
+//! Deterministic byte-pair-style tokenizer.
+//!
+//! The paper tokenizes system prompts with OpenAI's tiktoken (Table 2). No
+//! tokenizer library exists in the offline crate set, so this module
+//! implements a small greedy-BPE tokenizer: a fixed vocabulary of byte
+//! tokens plus merges learned once from a seed corpus at construction. It
+//! is deterministic, reversible on its training alphabet, and produces
+//! ~3.5–4.5 characters/token on English-like text — close enough to
+//! tiktoken's ratio that Table-2-style token statistics are meaningful.
+
+use std::collections::HashMap;
+
+/// Greedy longest-match subword tokenizer.
+pub struct Tokenizer {
+    /// Piece string -> token id. Ids 0..256 are single bytes.
+    vocab: HashMap<Vec<u8>, u32>,
+    /// Token id -> piece bytes (decode table).
+    pieces: Vec<Vec<u8>>,
+    /// Longest piece length, bounds the greedy scan.
+    max_piece: usize,
+}
+
+impl Tokenizer {
+    /// Build from a training corpus: byte vocabulary + the `extra` most
+    /// frequent pairs merged iteratively (tiny BPE).
+    pub fn train(corpus: &str, extra: usize) -> Self {
+        let mut pieces: Vec<Vec<u8>> = (0u8..=255).map(|b| vec![b]).collect();
+        // Work on the corpus as a sequence of piece indices.
+        let mut seq: Vec<u32> = corpus.bytes().map(|b| b as u32).collect();
+        for _ in 0..extra {
+            // Count adjacent pairs.
+            let mut counts: HashMap<(u32, u32), u32> = HashMap::new();
+            for w in seq.windows(2) {
+                *counts.entry((w[0], w[1])).or_default() += 1;
+            }
+            let Some((&pair, &cnt)) = counts.iter().max_by_key(|(p, c)| (**c, std::cmp::Reverse(**p)))
+            else {
+                break;
+            };
+            if cnt < 2 {
+                break;
+            }
+            let mut merged = pieces[pair.0 as usize].clone();
+            merged.extend_from_slice(&pieces[pair.1 as usize]);
+            let new_id = pieces.len() as u32;
+            pieces.push(merged);
+            // Apply the merge over the sequence.
+            let mut out = Vec::with_capacity(seq.len());
+            let mut i = 0;
+            while i < seq.len() {
+                if i + 1 < seq.len() && (seq[i], seq[i + 1]) == pair {
+                    out.push(new_id);
+                    i += 2;
+                } else {
+                    out.push(seq[i]);
+                    i += 1;
+                }
+            }
+            seq = out;
+        }
+        let max_piece = pieces.iter().map(|p| p.len()).max().unwrap_or(1);
+        let vocab = pieces.iter().enumerate().map(|(i, p)| (p.clone(), i as u32)).collect();
+        Tokenizer { vocab, pieces, max_piece }
+    }
+
+    /// A tokenizer trained on a built-in English/code-flavoured seed corpus
+    /// with 15k merges — the default for workload synthesis.
+    pub fn default_english() -> Self {
+        Self::train(SEED_CORPUS, 1500)
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.pieces.len()
+    }
+
+    /// Greedy longest-match encoding.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let bytes = text.as_bytes();
+        let mut out = Vec::with_capacity(bytes.len() / 3);
+        let mut i = 0;
+        while i < bytes.len() {
+            let mut len = self.max_piece.min(bytes.len() - i);
+            loop {
+                if let Some(&id) = self.vocab.get(&bytes[i..i + len]) {
+                    out.push(id);
+                    i += len;
+                    break;
+                }
+                len -= 1;
+                debug_assert!(len > 0, "byte fallback always matches");
+            }
+        }
+        out
+    }
+
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &t in tokens {
+            bytes.extend_from_slice(&self.pieces[t as usize]);
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Mean characters per token over a text (compression diagnostics).
+    pub fn chars_per_token(&self, text: &str) -> f64 {
+        let n = self.encode(text).len();
+        if n == 0 {
+            0.0
+        } else {
+            text.len() as f64 / n as f64
+        }
+    }
+}
+
+/// Seed corpus for merge training: English prose + API/JSON-ish text, the
+/// register system prompts are written in.
+const SEED_CORPUS: &str = r#"
+You are a helpful assistant. Given the following list of API specifications
+and the user query, you will choose the most appropriate API to invoke and
+try to parse the corresponding parameters from the user query. If none of
+the API descriptions match the user query intent, you will return not_found.
+Your response must strictly follow the syntax of the function call format.
+Parameters: count: optional. The number of search results to return in the
+response. The default is ten and the maximum value is fifty. offset: the
+zero-based offset that indicates the number of results to skip before
+returning results. query: required. The user search query term. The term may
+not be empty. safe_search: optional. A filter used to filter results for
+adult content. language: optional. The language to use for user interface
+strings. You may specify the language using either a two-letter or
+four-letter code. Following are examples of choosing the API that matches
+the user query and parsing parameters. The instructions below describe the
+task. Think step by step and explain your reasoning before giving the final
+answer. Use the tools when the question requires up to date information or
+precise calculation. The document metadata includes the title, the author,
+the number of pages and the table of contents. Answer the question using
+only the provided context. If the answer is not contained in the context,
+say you do not know. Here are a few examples demonstrating the expected
+input and output format for the task described above. The assistant should
+respond with a single function call and no additional commentary. datetime:
+user_query: What is the weather in San Francisco this weekend? api_call:
+search(query="weather San Francisco weekend", count=5, language="en")
+"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::OnceLock;
+
+    fn tok() -> &'static Tokenizer {
+        static TOK: OnceLock<Tokenizer> = OnceLock::new();
+        TOK.get_or_init(|| Tokenizer::train(SEED_CORPUS, 300))
+    }
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = tok();
+        let text = "The user search query term may not be empty.";
+        assert_eq!(t.decode(&t.encode(text)), text);
+    }
+
+    #[test]
+    fn roundtrip_unseen_bytes() {
+        let t = tok();
+        let text = "ünïcode & emoji 🎉 bytes";
+        assert_eq!(t.decode(&t.encode(text)), text);
+    }
+
+    #[test]
+    fn compresses_english() {
+        let t = tok();
+        let cpt = t.chars_per_token("the parameters of the search query results");
+        assert!(cpt > 1.8, "learned merges compress: {cpt} chars/token");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = Tokenizer::train(SEED_CORPUS, 200);
+        let b = Tokenizer::train(SEED_CORPUS, 200);
+        let text = "deterministic tokenization of this sentence";
+        assert_eq!(a.encode(text), b.encode(text));
+    }
+
+    #[test]
+    fn shared_prefix_tokenizes_to_shared_prefix() {
+        // Critical property for PAKV: same text prefix -> same token prefix.
+        let t = tok();
+        let sys = "You are a helpful assistant. Use the tools.";
+        let a = t.encode(&format!("{sys} Question one?"));
+        let b = t.encode(&format!("{sys} A different question."));
+        let common = a.iter().zip(&b).take_while(|(x, y)| x == y).count();
+        let sys_tokens = t.encode(sys).len();
+        assert!(common + 2 >= sys_tokens, "common {common} vs sys {sys_tokens}");
+    }
+
+    #[test]
+    fn empty_text() {
+        assert!(tok().encode("").is_empty());
+        assert_eq!(tok().decode(&[]), "");
+    }
+}

@@ -1,0 +1,195 @@
+//! Integration: the full three-layer stack. Rust engine (L3) serves
+//! requests whose forward passes run in the AOT-compiled JAX model (L2)
+//! containing the Pallas TPP kernel (L1), all through PJRT.
+//!
+//! Requires `make artifacts`; tests self-skip when the directory is absent
+//! so a fresh checkout still passes `cargo test`.
+
+use std::path::PathBuf;
+
+use chunk_attention::coordinator::Engine;
+use chunk_attention::runtime::PjrtModel;
+use chunk_attention::workload::Request;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn request(id: u64, prompt: Vec<u32>, completion: usize) -> Request {
+    Request { id, arrival_s: 0.0, tenant: 0, prompt, shared_tokens: 0, max_new_tokens: completion }
+}
+
+#[test]
+fn pjrt_kernel_artifact_matches_ref_numerics() {
+    // The standalone L1 kernel artifact: execute with known inputs and
+    // check against an in-process Rust oracle computation.
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    use chunk_attention::runtime::{Manifest, PjrtRuntime};
+    let manifest = Manifest::load(&dir).unwrap();
+    let a = manifest.kernel_test_artifact().expect("kernel_test artifact").clone();
+    // Shapes from aot.py KERNEL_TEST_SHAPE.
+    let (b, h, c, d, m) = (4usize, 4usize, 16usize, 64usize, 8usize);
+
+    let runtime = PjrtRuntime::cpu().unwrap();
+    let exe = runtime.load_hlo_text(&dir.join(&a.file)).unwrap();
+
+    let mut rng = chunk_attention::util::Pcg64::seeded(5);
+    let mut q = vec![0.0f32; b * h * d];
+    let mut k = vec![0.0f32; m * h * c * d];
+    let mut v = vec![0.0f32; m * h * c * d];
+    rng.fill_uniform_f32(&mut q, -1.0, 1.0);
+    rng.fill_uniform_f32(&mut k, -1.0, 1.0);
+    rng.fill_uniform_f32(&mut v, -1.0, 1.0);
+    let starts = vec![0i32, 0, 2, 0, 1, 3, 0, 0];
+    let ends = vec![4i32, 2, 4, 1, 3, 4, 0, 0];
+    let lens = vec![16i32, 16, 8, 16, 5, 16, 0, 0];
+
+    let ql = chunk_attention::runtime::pjrt::f32_literal(&q, &[b as i64, h as i64, d as i64]).unwrap();
+    let kl = chunk_attention::runtime::pjrt::f32_literal(&k, &[m as i64, h as i64, c as i64, d as i64]).unwrap();
+    let vl = chunk_attention::runtime::pjrt::f32_literal(&v, &[m as i64, h as i64, c as i64, d as i64]).unwrap();
+    let sl = chunk_attention::runtime::pjrt::i32_literal(&starts, &[m as i64]).unwrap();
+    let el = chunk_attention::runtime::pjrt::i32_literal(&ends, &[m as i64]).unwrap();
+    let ll = chunk_attention::runtime::pjrt::i32_literal(&lens, &[m as i64]).unwrap();
+    let out = runtime.execute(&exe, &[&ql, &kl, &vl, &sl, &el, &ll]).unwrap();
+    let got = out[0].to_vec::<f32>().unwrap();
+    assert_eq!(got.len(), b * h * d);
+
+    // Oracle: per (row, head) dense softmax over visible chunk tokens.
+    let scale = 1.0 / (d as f64).sqrt();
+    for r in 0..b {
+        for hh in 0..h {
+            let qrow = &q[(r * h + hh) * d..(r * h + hh + 1) * d];
+            let mut logits = Vec::new();
+            let mut values: Vec<&[f32]> = Vec::new();
+            for ci in 0..m {
+                if (starts[ci] as usize) <= r && r < ends[ci] as usize {
+                    for t in 0..lens[ci] as usize {
+                        let base = ((ci * h + hh) * c + t) * d;
+                        let krow = &k[base..base + d];
+                        let s: f64 =
+                            qrow.iter().zip(krow).map(|(a, b)| *a as f64 * *b as f64).sum();
+                        logits.push(s * scale);
+                        values.push(&v[base..base + d]);
+                    }
+                }
+            }
+            let base_out = (r * h + hh) * d;
+            if logits.is_empty() {
+                for i in 0..d {
+                    assert_eq!(got[base_out + i], 0.0);
+                }
+                continue;
+            }
+            let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let e: Vec<f64> = logits.iter().map(|x| (x - mx).exp()).collect();
+            let n: f64 = e.iter().sum();
+            for i in 0..d {
+                let expect: f64 =
+                    e.iter().zip(&values).map(|(w, vr)| w * vr[i] as f64).sum::<f64>() / n;
+                let gotv = got[base_out + i] as f64;
+                assert!(
+                    (gotv - expect).abs() < 1e-4,
+                    "row {r} head {hh} dim {i}: {gotv} vs {expect}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_prefill_matches_pure_rust_reference_model() {
+    // Three implementations of the same model must agree: the JAX-lowered
+    // HLO through PJRT, the Pallas kernel inside it, and a from-scratch
+    // Rust forward pass over the identical weights.bin.
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    use chunk_attention::model::ReferenceModel;
+    let mut pjrt = PjrtModel::load(&dir).unwrap();
+    let reference = ReferenceModel::load(pjrt.manifest()).unwrap();
+
+    let tokens: Vec<u32> = vec![5, 99, 1023, 7, 444, 12, 900, 31];
+    let (logits, k_rows, v_rows) = reference.prefill(&tokens);
+
+    use chunk_attention::coordinator::ModelRunner;
+    let out = pjrt.prefill(&tokens, 0, &[], &[], 0).unwrap();
+
+    // Greedy next token must agree.
+    let ref_argmax =
+        (0..logits.len()).max_by(|&a, &b| logits[a].partial_cmp(&logits[b]).unwrap()).unwrap();
+    assert_eq!(out.next_token, ref_argmax as u32, "argmax disagreement");
+
+    // K/V rows for every position must agree numerically.
+    assert_eq!(out.k_rows.len(), tokens.len());
+    for p in 0..tokens.len() {
+        for (a, b) in out.k_rows[p].iter().zip(&k_rows[p]) {
+            assert!((a - b).abs() < 5e-4, "k row {p}: {a} vs {b}");
+        }
+        for (a, b) in out.v_rows[p].iter().zip(&v_rows[p]) {
+            assert!((a - b).abs() < 5e-4, "v row {p}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn engine_serves_batched_requests_through_pjrt() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let model = PjrtModel::load(&dir).expect("load artifacts");
+    let chunk_size = model.chunk_size();
+    let max_batch = model.max_batch().min(4);
+    let mut engine = Engine::new(model, chunk_size, max_batch);
+
+    // Three requests sharing a 24-token system prompt + one disjoint.
+    let sys: Vec<u32> = (100..124).collect();
+    for i in 0..3u64 {
+        let mut p = sys.clone();
+        p.extend([200 + i as u32 * 7, 300 + i as u32]);
+        engine.submit(request(i, p, 6));
+    }
+    engine.submit(request(3, (500..516).collect(), 6));
+
+    let finished = engine.run_to_completion().expect("serve");
+    assert_eq!(finished.len(), 4);
+    for i in 0..4u64 {
+        let completion = engine.completion_of(i).unwrap();
+        assert_eq!(completion.len(), 6);
+        assert!(completion.iter().all(|&t| (t as usize) < 2048), "tokens in vocab");
+    }
+    // Prefix reuse happened: requests 1 and 2 reused the system prompt.
+    let stats = engine.stats();
+    assert!(stats.prefill_tokens_reused >= 2 * sys.len() as u64);
+    assert_eq!(engine.tree().pool().in_use(), 0, "cache drained");
+}
+
+#[test]
+fn pjrt_decode_is_deterministic_and_batch_invariant() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    // Completion of a prompt must not depend on what else is in the batch
+    // (greedy decoding, per-sequence attention isolation).
+    let run = |extra: bool| {
+        let model = PjrtModel::load(&dir).unwrap();
+        let chunk_size = model.chunk_size();
+        let mut engine = Engine::new(model, chunk_size, 4);
+        engine.submit(request(0, (40..56).collect(), 5));
+        if extra {
+            engine.submit(request(1, (60..70).collect(), 5));
+            engine.submit(request(2, (40..50).collect(), 5));
+        }
+        engine.run_to_completion().unwrap();
+        engine.completion_of(0).unwrap().to_vec()
+    };
+    let solo = run(false);
+    let batched = run(true);
+    assert_eq!(solo, batched, "batching must not change greedy output");
+}

@@ -1,0 +1,178 @@
+//! Property-based tests (via the in-house `util::pbt` harness) on the
+//! paper's §3.1 invariants: prefix-tree refcounts/intervals, pool
+//! accounting, paging refcounts, sharing-ratio bounds, and kernel
+//! equivalence under random workloads.
+
+use chunk_attention::attention::{oracle_attention, tpp_attention, Queries, TppScratch};
+use chunk_attention::kvcache::{KvShape, PagedKvCache, PrefixTree, SeqId};
+use chunk_attention::util::pbt;
+use chunk_attention::util::rng::Pcg64;
+use chunk_attention::util::threadpool::ThreadPool;
+
+/// A random prompt workload: tenants with shared prefixes + per-request
+/// suffixes, interleaved with removals and decode appends.
+#[derive(Debug, Clone)]
+enum Op {
+    Insert { seq: u64, tenant: u8, suffix: Vec<u32>, prefix_len: usize },
+    Remove { idx: usize },
+    Append { idx: usize, token: u32 },
+}
+
+fn gen_ops(rng: &mut Pcg64) -> Vec<Op> {
+    let n = rng.range(1, 40);
+    let mut ops = Vec::with_capacity(n);
+    let mut next_seq = 0u64;
+    for _ in 0..n {
+        match rng.below(10) {
+            0..=5 => {
+                let tenant = rng.below(3) as u8;
+                let prefix_len = rng.range(0, 20);
+                let suffix: Vec<u32> =
+                    (0..rng.range(1, 12)).map(|_| 10_000 + rng.below(50) as u32).collect();
+                ops.push(Op::Insert { seq: next_seq, tenant, suffix, prefix_len });
+                next_seq += 1;
+            }
+            6..=7 => ops.push(Op::Remove { idx: rng.range(0, 64) }),
+            _ => ops.push(Op::Append { idx: rng.range(0, 64), token: rng.below(1000) as u32 }),
+        }
+    }
+    ops
+}
+
+fn fill(_pos: usize, token: u32, k: &mut [f32], v: &mut [f32]) {
+    k.fill(token as f32 * 0.001);
+    v.fill(token as f32 * -0.001);
+}
+
+fn apply_ops(ops: &[Op], shape: KvShape) -> Result<PrefixTree, String> {
+    let mut tree = PrefixTree::new(shape);
+    let mut live: Vec<u64> = Vec::new();
+    let row = shape.heads * shape.head_dim;
+    for op in ops {
+        match op {
+            Op::Insert { seq, tenant, suffix, prefix_len } => {
+                let mut prompt: Vec<u32> =
+                    (0..*prefix_len as u32).map(|i| *tenant as u32 * 1000 + i).collect();
+                prompt.extend(suffix);
+                if prompt.is_empty() {
+                    continue;
+                }
+                tree.insert_sequence(SeqId(*seq), &prompt, &mut fill);
+                live.push(*seq);
+            }
+            Op::Remove { idx } => {
+                if !live.is_empty() {
+                    let seq = live.remove(idx % live.len());
+                    tree.remove_sequence(SeqId(seq));
+                }
+            }
+            Op::Append { idx, token } => {
+                if !live.is_empty() {
+                    let seq = live[idx % live.len()];
+                    let k = vec![*token as f32; row];
+                    let v = vec![-(*token as f32); row];
+                    tree.append_token(SeqId(seq), *token, &k, &v);
+                }
+            }
+        }
+        tree.check_invariants()?;
+    }
+    Ok(tree)
+}
+
+#[test]
+fn prefix_tree_invariants_hold_under_random_workloads() {
+    let shape = KvShape::new(2, 4, 4);
+    pbt::check_shrink("tree-invariants", 0xC0FFEE, pbt::default_cases(), gen_ops, |ops| {
+        apply_ops(ops, shape).map(|_| ())
+    });
+}
+
+#[test]
+fn sharing_never_exceeds_logical_tokens() {
+    let shape = KvShape::new(1, 2, 8);
+    pbt::check("sharing-bounds", 7, pbt::default_cases(), gen_ops, |ops| {
+        let tree = apply_ops(ops, shape)?;
+        let s = tree.sharing_stats();
+        if s.physical_tokens > s.logical_tokens {
+            return Err(format!("physical {} > logical {}", s.physical_tokens, s.logical_tokens));
+        }
+        // §3.1 memory-loss bound, generalised for mid-chunk splits: every
+        // partial chunk is either a path tail (≤ 1 per sequence) or a
+        // branch point (≤ live_seqs - 1 across the forest), so
+        // waste ≤ (c-1) · 2·live_seqs.
+        let allocated = s.chunks * 8;
+        let bound = s.physical_tokens + 7 * (2 * tree.num_sequences() + 1);
+        if allocated > bound {
+            return Err(format!("allocated {allocated} over waste bound {bound}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tpp_matches_oracle_on_random_trees() {
+    let shape = KvShape::new(2, 8, 4);
+    let pool = ThreadPool::new(1);
+    pbt::check("tpp-vs-oracle", 0xA11CE, 24, gen_ops, |ops| {
+        let mut tree = apply_ops(ops, shape)?;
+        let ctx = tree.context();
+        let b = ctx.seq_order.len();
+        if b == 0 {
+            return Ok(());
+        }
+        let mut rng = Pcg64::seeded(1);
+        let mut q = vec![0.0f32; shape.heads * b * shape.head_dim];
+        rng.fill_uniform_f32(&mut q, -1.0, 1.0);
+        let queries = Queries::new(&q, shape.heads, b, shape.head_dim);
+        let expect = oracle_attention(&tree, &ctx, &queries);
+        let mut got = vec![0.0f32; expect.len()];
+        let mut scratch = TppScratch::new(&shape, b);
+        tpp_attention(&tree, &ctx, &queries, &pool, &mut scratch, &mut got);
+        for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
+            if (g - e).abs() > 3e-4 * (1.0 + e.abs()) {
+                return Err(format!("idx {i}: {g} vs {e}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn paged_cache_refcounts_hold_under_random_sharing() {
+    pbt::check(
+        "paged-invariants",
+        99,
+        pbt::default_cases(),
+        |rng| {
+            // (n requests, share flags, lengths)
+            let n = rng.range(1, 20);
+            (0..n)
+                .map(|_| (rng.chance(0.5), rng.range(1, 40), rng.range(0, 3) as u64))
+                .collect::<Vec<_>>()
+        },
+        |reqs| {
+            let shape = KvShape::new(1, 2, 4);
+            let mut cache = PagedKvCache::new(shape, 4);
+            let mut donors: Vec<SeqId> = Vec::new();
+            for (i, (share, len, remove_after)) in reqs.iter().enumerate() {
+                let sid = SeqId(i as u64);
+                let prompt: Vec<u32> = (0..*len as u32).collect();
+                if *share && !donors.is_empty() {
+                    let donor = donors[i % donors.len()];
+                    cache.insert_sequence_shared(sid, donor, &prompt, *len / 2, &mut fill);
+                } else {
+                    cache.insert_sequence(sid, &prompt, &mut fill);
+                }
+                donors.push(sid);
+                cache.append_token(sid, &[0.5, 0.5], &[0.1, 0.1]);
+                if *remove_after == 0 && donors.len() > 1 {
+                    let victim = donors.remove(0);
+                    cache.remove_sequence(victim);
+                }
+                cache.check_invariants()?;
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,107 @@
+//! Soak and failure-injection tests: long-running engine churn with
+//! invariants checked continuously, and corrupted-artifact handling.
+
+use chunk_attention::coordinator::engine::testing::SyntheticRunner;
+use chunk_attention::coordinator::Engine;
+use chunk_attention::runtime::Manifest;
+use chunk_attention::util::rng::Pcg64;
+use chunk_attention::workload::Request;
+
+#[test]
+fn engine_soak_random_churn_keeps_invariants() {
+    // 300 requests with random tenants/lengths trickling through a small
+    // batch, with retention enabled — the worst structural churn the tree
+    // sees in production. Invariants checked every few iterations.
+    let mut engine =
+        Engine::new(SyntheticRunner { heads_total: 2, head_dim: 8, vocab: 257 }, 4, 6);
+    engine.enable_prefix_retention(64);
+    let mut rng = Pcg64::seeded(2024);
+    let mut submitted = 0u64;
+    let mut finished = 0usize;
+    let mut iters = 0usize;
+    while finished < 300 {
+        // Trickle 0-2 new requests per iteration.
+        for _ in 0..rng.below(3) {
+            if submitted < 300 {
+                let tenant = rng.below(5) as u32;
+                let sys_len = 4 + (tenant as usize) * 3;
+                let mut prompt: Vec<u32> =
+                    (0..sys_len as u32).map(|i| tenant * 1000 + i).collect();
+                prompt.extend((0..rng.range(1, 6)).map(|_| 50_000 + rng.below(100) as u32));
+                engine.submit(Request {
+                    id: submitted,
+                    arrival_s: 0.0,
+                    tenant: tenant as usize,
+                    shared_tokens: sys_len,
+                    prompt,
+                    max_new_tokens: rng.range(1, 9),
+                });
+                submitted += 1;
+            }
+        }
+        finished += engine.step().unwrap().len();
+        iters += 1;
+        if iters % 7 == 0 {
+            engine.tree().check_invariants().unwrap_or_else(|e| panic!("iter {iters}: {e}"));
+        }
+        assert!(iters < 10_000, "soak did not converge");
+    }
+    engine.tree().check_invariants().unwrap();
+    // Only retained pins remain; bounded by the retention budget.
+    assert!(engine.tree().pool().in_use() <= 64);
+    let stats = engine.stats();
+    assert!(stats.prefill_tokens_reused > 0, "sharing must have occurred");
+    assert_eq!(engine.metrics().requests().len(), 300);
+}
+
+#[test]
+fn manifest_missing_directory_fails_cleanly() {
+    let err = Manifest::load(std::path::Path::new("/nonexistent/artifacts")).unwrap_err();
+    assert!(err.to_string().contains("make artifacts"), "{err}");
+}
+
+#[test]
+fn manifest_rejects_corrupt_json() {
+    let dir = std::env::temp_dir().join(format!("chunk-attn-test-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(err.to_string().contains("parse"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn manifest_rejects_truncated_weights() {
+    // Build a minimal-but-valid manifest whose weights blob is too short.
+    let dir = std::env::temp_dir().join(format!("chunk-attn-test-w-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = r#"{
+      "model": {"name": "mini", "n_layers": 2, "d_model": 256, "heads": 4,
+                 "head_dim": 64, "ffn_dim": 512, "vocab": 2048, "heads_total": 8},
+      "weights_file": "w.bin",
+      "weights": [{"name": "['embed']", "shape": [4, 4]}],
+      "artifacts": []
+    }"#;
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    std::fs::write(dir.join("w.bin"), [0u8; 8]).unwrap(); // wants 64 bytes
+    let m = Manifest::load(&dir).unwrap();
+    let err = m.load_weights().unwrap_err();
+    assert!(err.to_string().contains("bytes"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn manifest_rejects_wrong_model_config() {
+    let dir = std::env::temp_dir().join(format!("chunk-attn-test-m-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // d_model mismatching ModelConfig::mini() must be rejected loudly.
+    let manifest = r#"{
+      "model": {"name": "mini", "n_layers": 2, "d_model": 512, "heads": 4,
+                 "head_dim": 64, "ffn_dim": 512, "vocab": 2048, "heads_total": 8},
+      "weights_file": "w.bin", "weights": [], "artifacts": []
+    }"#;
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(err.to_string().contains("re-run make artifacts"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
