@@ -4,7 +4,7 @@
 //! runs the two-phase-partition decode attention, and prints the sharing
 //! statistics. Run: `cargo run --release --example quickstart`
 
-use chunk_attention::attention::{tpp_attention, Queries, TppScratch};
+use chunk_attention::attention::{tpp_attention_2d, Queries, Tpp2dScratch};
 use chunk_attention::kvcache::{KvShape, PrefixTree, SeqId};
 use chunk_attention::util::rng::Pcg64;
 use chunk_attention::util::threadpool::ThreadPool;
@@ -54,9 +54,9 @@ fn main() {
     let queries = Queries::new(&q, shape.heads, b, shape.head_dim);
 
     let pool = ThreadPool::default_for_host();
-    let mut scratch = TppScratch::new(&shape, b);
+    let mut scratch = Tpp2dScratch::new();
     let mut out = vec![0.0f32; q.len()];
-    tpp_attention(&tree, &ctx, &queries, &pool, &mut scratch, &mut out);
+    tpp_attention_2d(&tree, &ctx, &queries, &pool, &mut scratch, &mut out);
     println!("decode step done: output [heads={}, batch={b}, d={}]", shape.heads, shape.head_dim);
     println!("o[0][..4] = {:?}", &out[..4]);
 

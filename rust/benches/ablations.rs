@@ -1,6 +1,7 @@
 //! Ablations on the design choices DESIGN.md calls out:
 //!
-//! 1. TPP kernel variants — fused (CPU §3.3) vs Algorithms-1+2 buffered vs
+//! 1. TPP kernel variants — the production 2D (head × chunk-run) schedule
+//!    vs the head-partitioned fused kernel vs Algorithms-1+2 buffered vs
 //!    sequence-first-only (PAKV without the TPP batching).
 //! 2. Chunk size c — the alignment-waste vs batching-granularity tradeoff.
 //! 3. Lazy context copy (§3.3) — cached tree context vs rebuild-per-step.
@@ -18,7 +19,8 @@ fn main() {
     // --- 1. Kernel variants ---------------------------------------------
     let mut table = Vec::new();
     for (variant, label) in [
-        (TppVariant::Fused, "fused (production)"),
+        (TppVariant::Parallel2d, "2d schedule (production)"),
+        (TppVariant::Fused, "fused head-partition"),
         (TppVariant::Buffered, "buffered (Alg. 1+2)"),
         (TppVariant::SeqFirstOnly, "seq-first only (no TPP)"),
     ] {

@@ -6,9 +6,15 @@
 //! Quick mode (default): h=4, b=16 — minutes. Full mode
 //! (`CHUNK_ATTN_BENCH_MODE=full`): the paper's h=32, b=32, c=64, d=128.
 
+use chunk_attention::attention::{
+    tpp_attention, tpp_attention_2d, Queries, Tpp2dScratch, TppScratch,
+};
 use chunk_attention::coordinator::{KernelBench, MicroConfig};
+use chunk_attention::kvcache::{PrefixTree, SeqId};
 use chunk_attention::perf_model::AttentionImpl;
 use chunk_attention::util::bench::{print_table, BenchSuite};
+use chunk_attention::util::rng::Pcg64;
+use chunk_attention::util::threadpool::ThreadPool;
 
 fn main() {
     let mut suite = BenchSuite::new("table3_microkernel");
@@ -62,5 +68,79 @@ fn main() {
         &["np", "ns", "Naive", "xformers", "FlashAttn", "PagedAttn", "PagedAttn*", "ChunkAttn", "Naive/Chunk"],
         &table,
     );
+
+    two_d_vs_head_only(&mut suite);
     suite.finish();
+}
+
+/// The 2D (head × chunk-run) schedule vs the head-only 1D partition at the
+/// acceptance shape: heads=8, workers=8, batch=32, 1024-token fully shared
+/// prefix. With heads == workers the 1D kernel keeps the pool busy only
+/// during its single fan-out dimension; the 2D schedule exposes head×run +
+/// head×row tasks and rides the 8-row micro-kernel.
+fn two_d_vs_head_only(suite: &mut BenchSuite) {
+    let (heads, batch, np, ns, workers) = (8usize, 32usize, 1024usize, 1024usize, 8usize);
+    let mut cfg = MicroConfig::paper(batch, np, ns);
+    cfg.heads = heads;
+    let shape = cfg.shape();
+    let mut tree = PrefixTree::new(shape);
+    let mut fill = |pos: usize, token: u32, k: &mut [f32], v: &mut [f32]| {
+        let mut r = Pcg64::new(pos as u64 ^ 0xF111, token as u64);
+        r.fill_uniform_f32(k, -1.0, 1.0);
+        r.fill_uniform_f32(v, -1.0, 1.0);
+    };
+    for i in 0..batch {
+        tree.insert_sequence(SeqId(i as u64), &cfg.prompt_of(i), &mut fill);
+    }
+    let ctx = tree.context();
+    let b = ctx.seq_order.len();
+    let mut rng = Pcg64::seeded(4242);
+    let mut q = vec![0.0f32; heads * b * shape.head_dim];
+    rng.fill_uniform_f32(&mut q, -1.0, 1.0);
+    let queries = Queries::new(&q, heads, b, shape.head_dim);
+    let pool = ThreadPool::new(workers);
+    let mut out = vec![0.0f32; q.len()];
+
+    let mut scratch1d = TppScratch::new(&shape, b);
+    suite.measure(
+        "2d_vs_head/head_only",
+        &[("schedule", "head_only".to_string()), ("workers", workers.to_string())],
+        Some("tok/s"),
+        || {
+            tpp_attention(&tree, &ctx, &queries, &pool, &mut scratch1d, &mut out);
+            b as u64
+        },
+    );
+    let head_only_us = suite.rows().last().unwrap().stats.mean();
+
+    let mut scratch2d = Tpp2dScratch::new();
+    suite.measure(
+        "2d_vs_head/parallel_2d",
+        &[("schedule", "parallel_2d".to_string()), ("workers", workers.to_string())],
+        Some("tok/s"),
+        || {
+            tpp_attention_2d(&tree, &ctx, &queries, &pool, &mut scratch2d, &mut out);
+            b as u64
+        },
+    );
+    let two_d_us = suite.rows().last().unwrap().stats.mean();
+
+    print_table(
+        &format!(
+            "2D schedule vs head-only partition (h={heads}, workers={workers}, b={batch}, \
+             {ns}-token shared prefix; acceptance target ≥ 1.50x)"
+        ),
+        &["schedule", "latency(us)", "speedup"],
+        &[
+            (vec!["head_only".into(), format!("{head_only_us:.0}"), "1.00x".into()], String::new()),
+            (
+                vec![
+                    "parallel_2d".into(),
+                    format!("{two_d_us:.0}"),
+                    format!("{:.2}x", head_only_us / two_d_us),
+                ],
+                String::new(),
+            ),
+        ],
+    );
 }

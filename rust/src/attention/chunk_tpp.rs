@@ -1,27 +1,48 @@
 //! The ChunkAttention two-phase-partition (TPP) decode kernel (§3.2) over
 //! the prefix-tree KV cache.
 //!
-//! Three variants are provided:
+//! ## The 2D (head × chunk) schedule
 //!
-//! - [`tpp_attention`] — the production CPU kernel: chunk-first batching of
-//!   query rows over shared chunks with the `attn_reduce` merge fused right
-//!   after each `partial_attn` (§3.3: on CPU serialising the reduction is
-//!   cheap, so no partial buffers are materialised), then the
-//!   sequence-first pass over private tail chunks. Work is partitioned over
-//!   heads on the thread pool — the CPU analogue of the paper's
-//!   thread-block partition.
-//! - [`tpp_attention_buffered`] — Algorithms 1 and 2 verbatim: the
-//!   chunk-first phase writes `(O, m, n)^{(C)}` partials to memory, the
-//!   sequence-first phase restores and merges them. Used by the ablation
-//!   bench and as a cross-check of the fused variant.
+//! The paper assigns *(head, chunk)* pairs to CUDA thread blocks; the
+//! production CPU kernel [`tpp_attention_2d`] is the same partition mapped
+//! onto the worker pool:
+//!
+//! 1. **Chunk-first phase (Algorithm 1), parallel over (head × chunk-run)**
+//!    — the shared entries of the [`TreeContext`] are split into *runs* of
+//!    [`RUN_CHUNKS`] consecutive chunks. Each (head, run) task streams its
+//!    chunks' K/V once for every covered query row and writes independent
+//!    `(O, m, n)^{(C)}` partials into a per-task slice of the scratch
+//!    buffers ([`Tpp2dScratch`]).
+//! 2. **Sequence-first phase (Algorithm 2), parallel over (head ×
+//!    sequence)** — each (head, row) task `attn_reduce`-merges the run
+//!    partials covering its row *in run-index order*, attends the row's
+//!    private tail chunks, and normalises.
+//!
+//! Run boundaries depend only on the context — never on the pool size — and
+//! every merge walks the runs in a fixed order, so the output is
+//! **bit-identical for every thread count**. With `heads × runs` and
+//! `heads × batch` tasks the pool stays busy even when `heads < workers`
+//! (small models, GQA-style configs), where the older head-only partition
+//! left most workers idle.
+//!
+//! ## Ablation variants
+//!
+//! - [`tpp_attention`] — head-partitioned fused kernel (previous
+//!   production): chunk-first batching with the `attn_reduce` merge fused
+//!   right after each `partial_attn`, one task per head. Kept as the
+//!   1D-partition baseline.
+//! - [`tpp_attention_buffered`] — Algorithms 1 and 2 verbatim,
+//!   single-threaded: the chunk-first phase writes `(O, m, n)^{(C)}`
+//!   partials to memory, the sequence-first phase restores and merges them.
+//!   Cross-checks both parallel variants.
 //! - [`tpp_attention_seq_only`] — sequence-first only (no cross-sequence
 //!   batching): every chunk is processed once per covered sequence. This is
 //!   what a prefix-aware cache *without* TPP costs, isolating the kernel
 //!   contribution from the memory-sharing contribution.
 
-use super::online::{attend_block, OnlineState};
+use super::online::{attend_block, attn_reduce, OnlineState};
 use super::Queries;
-use crate::kvcache::{PrefixTree, TreeContext};
+use crate::kvcache::{CtxEntry, PrefixTree, TreeContext};
 use crate::util::threadpool::ThreadPool;
 
 /// Reusable scratch for the TPP kernels: no allocation on the decode path.
@@ -63,8 +84,9 @@ impl TppScratch {
     }
 }
 
-/// The production TPP kernel. Output `[heads, batch, head_dim]`, rows in
-/// `ctx.seq_order`.
+/// Head-partitioned (1D) fused TPP kernel — the previous production kernel,
+/// kept as the ablation baseline for [`tpp_attention_2d`]. Output
+/// `[heads, batch, head_dim]`, rows in `ctx.seq_order`.
 pub fn tpp_attention(
     tree: &PrefixTree,
     ctx: &TreeContext,
@@ -156,6 +178,267 @@ pub fn tpp_attention(
     });
 }
 
+/// Shared chunks per chunk-first task. A pure function of the context (not
+/// of the pool size): partial sums — and therefore results — stay
+/// bit-identical across thread counts. Four 64-token chunks ≈ 256 shared
+/// tokens per task, enough work to amortise dispatch.
+pub const RUN_CHUNKS: usize = 4;
+
+/// One chunk-first run: a contiguous slice of the shared entries plus the
+/// union of the row intervals it covers and its offset into the per-head
+/// partial buffers.
+#[derive(Debug, Clone, Copy)]
+struct Run {
+    e_lo: usize,
+    e_hi: usize,
+    row_lo: usize,
+    row_hi: usize,
+    offset: usize,
+}
+
+/// Reusable scratch for [`tpp_attention_2d`]: the run schedule, a CSR index
+/// of private entries by row, and the `(O, m, n)^{(C)}` partial buffers.
+/// No allocation on the decode path once warmed up.
+#[derive(Default)]
+pub struct Tpp2dScratch {
+    shared: Vec<CtxEntry>,
+    private: Vec<CtxEntry>,
+    /// CSR offsets into `private` by query row: entries of row `r` are
+    /// `private[private_row_ptr[r]..private_row_ptr[r + 1]]`.
+    private_row_ptr: Vec<usize>,
+    runs: Vec<Run>,
+    /// Partial rows across all runs (the per-head buffer stride).
+    rows_total: usize,
+    /// Partial maxima `[heads * rows_total]`.
+    part_m: Vec<f32>,
+    /// Partial normalisers `[heads * rows_total]`.
+    part_n: Vec<f32>,
+    /// Unnormalised partial outputs `[heads * rows_total * head_dim]`.
+    part_o: Vec<f32>,
+}
+
+impl Tpp2dScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build the deterministic run schedule for `ctx` and size the partial
+    /// buffers for `heads` × `head_dim`.
+    fn prepare(&mut self, ctx: &TreeContext, heads: usize, d: usize) {
+        self.shared.clear();
+        self.private.clear();
+        for e in &ctx.entries {
+            if e.is_shared() {
+                self.shared.push(*e);
+            } else {
+                self.private.push(*e);
+            }
+        }
+        // CSR of private entries by row (stable sort keeps context order
+        // within a row, so the merge order is schedule-independent).
+        let b = ctx.seq_order.len();
+        self.private.sort_by_key(|e| e.start);
+        self.private_row_ptr.clear();
+        self.private_row_ptr.resize(b + 1, 0);
+        for e in &self.private {
+            self.private_row_ptr[e.start + 1] += 1;
+        }
+        for r in 0..b {
+            self.private_row_ptr[r + 1] += self.private_row_ptr[r];
+        }
+        // Runs of RUN_CHUNKS consecutive shared entries.
+        self.runs.clear();
+        let mut offset = 0;
+        let mut i = 0;
+        while i < self.shared.len() {
+            let j = (i + RUN_CHUNKS).min(self.shared.len());
+            let slice = &self.shared[i..j];
+            let row_lo = slice.iter().map(|e| e.start).min().unwrap();
+            let row_hi = slice.iter().map(|e| e.end).max().unwrap();
+            self.runs.push(Run { e_lo: i, e_hi: j, row_lo, row_hi, offset });
+            offset += row_hi - row_lo;
+            i = j;
+        }
+        self.rows_total = offset;
+        let need = heads * offset;
+        if self.part_m.len() < need {
+            self.part_m.resize(need, 0.0);
+            self.part_n.resize(need, 0.0);
+        }
+        if self.part_o.len() < need * d {
+            self.part_o.resize(need * d, 0.0);
+        }
+    }
+}
+
+thread_local! {
+    /// Per-worker weight scratch for the 2D schedule. Tasks are transient
+    /// (heads × runs of them per call), so per-task buffers would churn;
+    /// one buffer per pool worker is allocation-free after warmup.
+    static WBUF: std::cell::RefCell<Vec<f32>> = std::cell::RefCell::new(Vec::new());
+}
+
+fn with_wbuf<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    WBUF.with(|cell| {
+        let mut w = cell.borrow_mut();
+        if w.len() < len {
+            w.resize(len, 0.0);
+        }
+        f(&mut w[..])
+    })
+}
+
+/// The production TPP kernel: the paper's 2D *(head × chunk)* partition
+/// mapped onto the worker pool (see the module docs). Output
+/// `[heads, batch, head_dim]`, rows in `ctx.seq_order`; bit-identical for
+/// every pool size.
+pub fn tpp_attention_2d(
+    tree: &PrefixTree,
+    ctx: &TreeContext,
+    q: &Queries,
+    pool: &ThreadPool,
+    scratch: &mut Tpp2dScratch,
+    out: &mut [f32],
+) {
+    let shape = tree.shape();
+    let b = ctx.seq_order.len();
+    assert_eq!(q.heads, shape.heads);
+    assert_eq!(q.head_dim, shape.head_dim);
+    assert_eq!(q.batch, b);
+    assert_eq!(out.len(), shape.heads * b * shape.head_dim);
+    if b == 0 {
+        return;
+    }
+    let heads = shape.heads;
+    let d = shape.head_dim;
+    let c = shape.chunk_size;
+    let scale = q.scale();
+
+    scratch.prepare(ctx, heads, d);
+    let rows_total = scratch.rows_total;
+    let nruns = scratch.runs.len();
+    // Split the scratch borrow: the schedule is read-only inside the tasks
+    // while the partial buffers are handed out as disjoint raw slices.
+    let Tpp2dScratch { shared, private, private_row_ptr, runs, part_m, part_n, part_o, .. } =
+        scratch;
+    let shared: &[CtxEntry] = shared;
+    let private: &[CtxEntry] = private;
+    let private_row_ptr: &[usize] = private_row_ptr;
+    let runs: &[Run] = runs;
+    let m_addr = part_m.as_mut_ptr() as usize;
+    let n_addr = part_n.as_mut_ptr() as usize;
+    let o_addr = part_o.as_mut_ptr() as usize;
+    let out_addr = out.as_mut_ptr() as usize;
+
+    // Phase 1 — chunk first (Algorithm 1), one task per (head, run): stream
+    // each shared chunk's K/V once for all covered rows, writing
+    // (O, m, n)^{(C)} partials into the task's disjoint buffer slice.
+    if nruns > 0 {
+        pool.parallel_for(heads * nruns, |t| {
+            let h = t / nruns;
+            let run = &runs[t % nruns];
+            let span = run.row_hi - run.row_lo;
+            let base = h * rows_total + run.offset;
+            // Safety: each (head, run) task owns the disjoint
+            // [base, base + span) slice of the partial buffers, and
+            // parallel_for joins before the scratch is touched again.
+            let m_p =
+                unsafe { std::slice::from_raw_parts_mut((m_addr as *mut f32).add(base), span) };
+            let n_p =
+                unsafe { std::slice::from_raw_parts_mut((n_addr as *mut f32).add(base), span) };
+            let o_p = unsafe {
+                std::slice::from_raw_parts_mut((o_addr as *mut f32).add(base * d), span * d)
+            };
+            m_p.fill(f32::NEG_INFINITY);
+            n_p.fill(0.0);
+            o_p.fill(0.0);
+            let q_head = q.head(h);
+            with_wbuf(c, |w| {
+                for e in &shared[run.e_lo..run.e_hi] {
+                    let chunk = tree.chunk(e.chunk);
+                    let rel = e.start - run.row_lo;
+                    let rows = e.end - e.start;
+                    attend_block(
+                        &q_head[e.start * d..e.end * d],
+                        rows,
+                        d,
+                        chunk.k_head(&shape, h),
+                        chunk.v_head(&shape, h),
+                        chunk.len(),
+                        scale,
+                        &mut OnlineState {
+                            m: &mut m_p[rel..rel + rows],
+                            n: &mut n_p[rel..rel + rows],
+                            o: &mut o_p[rel * d..(rel + rows) * d],
+                            head_dim: d,
+                        },
+                        w,
+                    );
+                }
+            });
+        });
+    }
+
+    // Phase 2 — sequence first (Algorithm 2), one task per (head, row):
+    // merge the run partials covering the row in run-index order (fixed, so
+    // results are schedule-independent), then attend the row's private
+    // chunks and normalise.
+    pool.parallel_for(heads * b, |t| {
+        let h = t / b;
+        let r = t % b;
+        // Safety: each (head, row) task owns one disjoint output row;
+        // phase 1 has fully joined, so the partial buffers are read-only.
+        let o_row = unsafe {
+            std::slice::from_raw_parts_mut((out_addr as *mut f32).add((h * b + r) * d), d)
+        };
+        o_row.fill(0.0);
+        let mut m = f32::NEG_INFINITY;
+        let mut n = 0.0f32;
+        for run in runs {
+            if r < run.row_lo || r >= run.row_hi {
+                continue;
+            }
+            let idx = h * rows_total + run.offset + (r - run.row_lo);
+            let m_c = unsafe { *(m_addr as *const f32).add(idx) };
+            if m_c == f32::NEG_INFINITY {
+                continue; // row inside the run's span but not covered
+            }
+            let n_c = unsafe { *(n_addr as *const f32).add(idx) };
+            let o_c =
+                unsafe { std::slice::from_raw_parts((o_addr as *const f32).add(idx * d), d) };
+            attn_reduce(&mut m, &mut n, o_row, m_c, n_c, o_c);
+        }
+        let q_head = q.head(h);
+        with_wbuf(c, |w| {
+            for e in &private[private_row_ptr[r]..private_row_ptr[r + 1]] {
+                let chunk = tree.chunk(e.chunk);
+                attend_block(
+                    &q_head[r * d..(r + 1) * d],
+                    1,
+                    d,
+                    chunk.k_head(&shape, h),
+                    chunk.v_head(&shape, h),
+                    chunk.len(),
+                    scale,
+                    &mut OnlineState {
+                        m: std::slice::from_mut(&mut m),
+                        n: std::slice::from_mut(&mut n),
+                        o: &mut o_row[..],
+                        head_dim: d,
+                    },
+                    w,
+                );
+            }
+        });
+        if n > 0.0 {
+            let inv = 1.0 / n;
+            for x in o_row.iter_mut() {
+                *x *= inv;
+            }
+        }
+    });
+}
+
 /// Algorithm 1 + Algorithm 2 verbatim: chunk-first saves `(O, m, n)^{(C)}`
 /// partials to memory; sequence-first restores and merges them, then
 /// processes private chunks. Numerically identical to [`tpp_attention`].
@@ -226,16 +509,14 @@ pub fn tpp_attention_buffered(
                     continue;
                 }
                 let off = offsets[ci] + (r - e.start);
-                let m_c = part_m[off];
-                let n_c = part_n[off];
-                let m_new = m.max(m_c);
-                let x = (m_c - m_new).exp();
-                let y = if m == f32::NEG_INFINITY { 0.0 } else { (m - m_new).exp() };
-                for i in 0..d {
-                    out[o_base + i] = out[o_base + i] * y + part_o[off * d + i] * x;
-                }
-                n = n * y + n_c * x;
-                m = m_new;
+                attn_reduce(
+                    &mut m,
+                    &mut n,
+                    &mut out[o_base..o_base + d],
+                    part_m[off],
+                    part_n[off],
+                    &part_o[off * d..(off + 1) * d],
+                );
             }
             // Private chunks of row r.
             for e in ctx.private() {
@@ -373,13 +654,100 @@ mod tests {
         let mut seq_only = vec![0.0; expect.len()];
         tpp_attention_seq_only(&tree, &ctx, &q, &mut scratch, &mut seq_only);
 
+        let mut scratch2d = Tpp2dScratch::new();
+        let mut two_d = vec![0.0; expect.len()];
+        tpp_attention_2d(&tree, &ctx, &q, &pool, &mut scratch2d, &mut two_d);
+
         for i in 0..expect.len() {
             assert!((fused[i] - expect[i]).abs() < 2e-4, "fused idx {i}");
             assert!((buffered[i] - expect[i]).abs() < 2e-4, "buffered idx {i}");
             assert!((seq_only[i] - expect[i]).abs() < 2e-4, "seq_only idx {i}");
+            assert!((two_d[i] - expect[i]).abs() < 2e-4, "2d idx {i}");
             // Buffered and fused follow different summation orders but must
             // agree tightly.
             assert!((buffered[i] - fused[i]).abs() < 1e-4, "variants idx {i}");
+        }
+    }
+
+    #[test]
+    fn two_d_schedule_is_bit_identical_across_thread_counts() {
+        let shape = KvShape::new(4, 8, 4);
+        let mut tree = build_tree(shape, 13);
+        let ctx = tree.context();
+        let b = ctx.seq_order.len();
+        let qdata = queries(&shape, b, 23);
+        let q = Queries::new(&qdata, shape.heads, b, shape.head_dim);
+        let mut reference: Option<Vec<f32>> = None;
+        for workers in [1usize, 2, 3, 8] {
+            let pool = ThreadPool::new(workers);
+            let mut scratch = Tpp2dScratch::new();
+            let mut out = vec![0.0; shape.heads * b * shape.head_dim];
+            tpp_attention_2d(&tree, &ctx, &q, &pool, &mut scratch, &mut out);
+            match &reference {
+                None => reference = Some(out),
+                Some(r) => assert_eq!(r, &out, "workers={workers} diverged"),
+            }
+        }
+    }
+
+    #[test]
+    fn two_d_handles_deep_trees_spanning_many_runs() {
+        // A long shared prefix (many chunks → several runs per head) with
+        // nested divergence exercises run-boundary bookkeeping.
+        let shape = KvShape::new(2, 8, 4);
+        let mut tree = PrefixTree::new(shape);
+        let sys: Vec<u32> = (0..40).collect(); // 10 chunks of 4 → 3 runs
+        for i in 0..5u64 {
+            let mut p = sys.clone();
+            p.extend((0..(i as usize % 3 + 1)).map(|j| 500 + i as u32 * 10 + j as u32));
+            tree.insert_sequence(SeqId(i), &p, &mut |pos, token, k, v| {
+                let mut r = Pcg64::new(31 ^ token as u64, pos as u64);
+                r.fill_uniform_f32(k, -1.0, 1.0);
+                r.fill_uniform_f32(v, -1.0, 1.0);
+            });
+        }
+        let ctx = tree.context();
+        let b = ctx.seq_order.len();
+        let qdata = queries(&shape, b, 41);
+        let q = Queries::new(&qdata, shape.heads, b, shape.head_dim);
+        let expect = oracle_attention(&tree, &ctx, &q);
+        let pool = ThreadPool::new(4);
+        let mut scratch = Tpp2dScratch::new();
+        let mut out = vec![0.0; expect.len()];
+        tpp_attention_2d(&tree, &ctx, &q, &pool, &mut scratch, &mut out);
+        for i in 0..expect.len() {
+            assert!(
+                (out[i] - expect[i]).abs() < 2e-4 * (1.0 + expect[i].abs()),
+                "idx {i}: {} vs {}",
+                out[i],
+                expect[i]
+            );
+        }
+    }
+
+    #[test]
+    fn two_d_scratch_is_reusable_across_contexts() {
+        // Reuse one scratch across growing trees (decode loop pattern).
+        let shape = KvShape::new(2, 8, 4);
+        let mut tree = build_tree(shape, 7);
+        let pool = ThreadPool::new(2);
+        let mut scratch = Tpp2dScratch::new();
+        for round in 0..3u64 {
+            let ctx = tree.context();
+            let b = ctx.seq_order.len();
+            let qdata = queries(&shape, b, 50 + round);
+            let q = Queries::new(&qdata, shape.heads, b, shape.head_dim);
+            let expect = oracle_attention(&tree, &ctx, &q);
+            let mut out = vec![0.0; expect.len()];
+            tpp_attention_2d(&tree, &ctx, &q, &pool, &mut scratch, &mut out);
+            for i in 0..expect.len() {
+                assert!((out[i] - expect[i]).abs() < 2e-4 * (1.0 + expect[i].abs()));
+            }
+            // Grow every sequence by one decoded token.
+            let row = vec![0.1f32; shape.heads * shape.head_dim];
+            for s in ctx.seq_order {
+                tree.append_token(s, 900 + round as u32, &row, &row);
+            }
         }
     }
 

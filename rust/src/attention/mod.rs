@@ -13,6 +13,11 @@
 //! | [`paged`] (aliased pages) | PagedAttn\* | paged, shared physical pages |
 //! | [`chunk_tpp`] | ChunkAttn | prefix tree (PAKV) + TPP kernel |
 //!
+//! The ChunkAttn row is served by the 2D-scheduled
+//! [`chunk_tpp::tpp_attention_2d`] in production; the head-partitioned
+//! [`chunk_tpp::tpp_attention`] and the other TPP variants remain as
+//! ablation baselines (see [`chunk_tpp`] module docs).
+//!
 //! ## Layout
 //!
 //! Queries and outputs are `[heads, batch, head_dim]` (head-major) so each
@@ -32,7 +37,8 @@ pub mod paged;
 pub mod xformers_style;
 
 pub use chunk_tpp::{
-    tpp_attention, tpp_attention_buffered, tpp_attention_seq_only, TppScratch,
+    tpp_attention, tpp_attention_2d, tpp_attention_buffered, tpp_attention_seq_only, Tpp2dScratch,
+    TppScratch,
 };
 pub use flash_style::flash_style_attention;
 pub use naive::naive_attention;
@@ -157,12 +163,18 @@ mod tests {
         // Oracle in tree order.
         let expect = oracle_attention(&fx.tree, &ctx, &q);
 
-        // TPP on the tree.
+        // TPP on the tree: production 2D schedule plus the head-partitioned
+        // ablation baseline.
         let pool = ThreadPool::new(1);
         let mut scratch = TppScratch::new(&shape, b);
         let mut got = vec![0.0f32; expect.len()];
         tpp_attention(&fx.tree, &ctx, &q, &pool, &mut scratch, &mut got);
         assert_close(&got, &expect, tol, "chunk_tpp");
+
+        let mut scratch2d = Tpp2dScratch::new();
+        let mut got = vec![0.0f32; expect.len()];
+        tpp_attention_2d(&fx.tree, &ctx, &q, &pool, &mut scratch2d, &mut got);
+        assert_close(&got, &expect, tol, "chunk_tpp_2d");
 
         // Dense baselines use the same row order.
         let order: Vec<SeqId> = ctx.seq_order.clone();

@@ -98,6 +98,12 @@ pub struct Engine<R: ModelRunner> {
     metrics: MetricsRecorder,
     /// (admitted_at, first_token_at, reused_tokens) per live request.
     timing: BTreeMap<u64, (f64, f64, usize)>,
+    /// Incrementally invalidated decode context: valid while the tree's
+    /// generation counter still equals `ctx_generation`. Lets steady-state
+    /// decode steps (in-place tail appends only) skip `PrefixTree::context`
+    /// entirely — no rebuild, no clone.
+    ctx_cache: Option<TreeContext>,
+    ctx_generation: u64,
 }
 
 impl<R: ModelRunner> Engine<R> {
@@ -113,6 +119,8 @@ impl<R: ModelRunner> Engine<R> {
             retainer: None,
             metrics: MetricsRecorder::new(),
             timing: BTreeMap::new(),
+            ctx_cache: None,
+            ctx_generation: 0,
         }
     }
 
@@ -221,7 +229,21 @@ impl<R: ModelRunner> Engine<R> {
         // phantom rows: they get dummy queries and their outputs are
         // discarded — they exist only to keep shared chunks referenced.
         let t0 = Instant::now();
-        let ctx = self.tree.context();
+        // Incremental context caching: topology only changes on admission,
+        // retirement, or chunk-boundary crossings, so on every other step
+        // the cached context is reused without touching the tree.
+        let generation = self.tree.generation();
+        if self.ctx_cache.is_none() || self.ctx_generation != generation {
+            // `context_fresh` bypasses the tree's own lazy cache: this is
+            // the only context cache on the serving path, so the context is
+            // not retained twice.
+            self.ctx_cache = Some(self.tree.context_fresh());
+            self.ctx_generation = generation;
+            self.metrics.context_rebuilds += 1;
+        } else {
+            self.metrics.context_cache_hits += 1;
+        }
+        let ctx = self.ctx_cache.as_ref().expect("context populated above");
         let (mut last_tokens, mut positions) = (Vec::new(), Vec::new());
         for sid in &ctx.seq_order {
             match self.states.get(&sid.0) {
@@ -236,7 +258,7 @@ impl<R: ModelRunner> Engine<R> {
                 }
             }
         }
-        let out = self.runner.decode(&self.tree, &ctx, &last_tokens, &positions)?;
+        let out = self.runner.decode(&self.tree, ctx, &last_tokens, &positions)?;
         for (i, sid) in ctx.seq_order.iter().enumerate() {
             let Some(st) = self.states.get_mut(&sid.0) else { continue };
             self.tree.append_token(*sid, last_tokens[i], &out.k_rows[i], &out.v_rows[i]);

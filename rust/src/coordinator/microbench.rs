@@ -7,8 +7,9 @@
 //! `fig4_batch_sweep.rs` and the ablation bench.
 
 use crate::attention::{
-    flash_style_attention, naive_attention, paged_attention, tpp_attention,
-    tpp_attention_buffered, tpp_attention_seq_only, xformers_style_attention, Queries, TppScratch,
+    flash_style_attention, naive_attention, paged_attention, tpp_attention, tpp_attention_2d,
+    tpp_attention_buffered, tpp_attention_seq_only, xformers_style_attention, Queries,
+    Tpp2dScratch, TppScratch,
 };
 use crate::kvcache::{KvShape, MonolithicKvCache, PagedKvCache, PrefixTree, SeqId};
 use crate::perf_model::AttentionImpl;
@@ -88,15 +89,33 @@ enum CacheState {
     Paged(Box<PagedKvCache>),
 }
 
+/// Ablation switches for the ChunkAttn path: which TPP kernel variant
+/// serves decode steps, and whether the tree context is cached lazily.
+/// [`AblationConfig::default`] is the production configuration (2D
+/// schedule + lazy context); the ablation bench flips one switch at a time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AblationConfig {
+    pub kernel: TppVariant,
+    pub lazy_context: bool,
+}
+
+impl Default for AblationConfig {
+    fn default() -> Self {
+        AblationConfig { kernel: TppVariant::Parallel2d, lazy_context: true }
+    }
+}
+
 /// One kernel + its cache, ready to run decode steps.
 pub struct KernelBench {
     pub kind: AttentionImpl,
     cfg: MicroConfig,
+    ablation: AblationConfig,
     cache: CacheState,
     order: Vec<SeqId>,
     q: Vec<f32>,
     out: Vec<f32>,
     scratch: TppScratch,
+    scratch2d: Tpp2dScratch,
     pool: ThreadPool,
     rng: Pcg64,
     decoded: usize,
@@ -104,14 +123,20 @@ pub struct KernelBench {
 }
 
 impl KernelBench {
-    /// Build the cache for `kind` and prefill the §4.1 workload.
+    /// Build the cache for `kind` with the production ablation defaults.
     pub fn new(cfg: MicroConfig, kind: AttentionImpl) -> Self {
+        Self::with_ablation(cfg, kind, AblationConfig::default())
+    }
+
+    /// Build the cache for `kind` and prefill the §4.1 workload.
+    pub fn with_ablation(cfg: MicroConfig, kind: AttentionImpl, ablation: AblationConfig) -> Self {
         let shape = cfg.shape();
         let mut fill = kv_fill(cfg.seed);
         let mut order = Vec::with_capacity(cfg.batch);
         let cache = match kind {
             AttentionImpl::ChunkAttn => {
                 let mut tree = PrefixTree::new(shape);
+                tree.lazy_context = ablation.lazy_context;
                 for i in 0..cfg.batch {
                     tree.insert_sequence(SeqId(i as u64), &cfg.prompt_of(i), &mut fill);
                 }
@@ -158,11 +183,13 @@ impl KernelBench {
         KernelBench {
             kind,
             cfg,
+            ablation,
             cache,
             order,
             q,
             out,
             scratch,
+            scratch2d: Tpp2dScratch::new(),
             pool: ThreadPool::default_for_host(),
             rng,
             decoded: 0,
@@ -173,13 +200,12 @@ impl KernelBench {
     /// Run one decode-step attention over the current cache state.
     /// Returns the number of query tokens processed (= batch).
     pub fn decode_step(&mut self) -> u64 {
+        if self.kind == AttentionImpl::ChunkAttn {
+            return self.decode_step_variant(self.ablation.kernel);
+        }
         let cfg = &self.cfg;
         let q = Queries::new(&self.q, cfg.heads, cfg.batch, cfg.head_dim);
         match (&mut self.cache, self.kind) {
-            (CacheState::Tree(tree), AttentionImpl::ChunkAttn) => {
-                let ctx = tree.context();
-                tpp_attention(tree, &ctx, &q, &self.pool, &mut self.scratch, &mut self.out);
-            }
             (CacheState::Mono(mono), AttentionImpl::Naive) => {
                 naive_attention(mono, &self.order, &q, &mut self.out);
             }
@@ -197,7 +223,7 @@ impl KernelBench {
         cfg.batch as u64
     }
 
-    /// Ablation variants over the tree cache (panics on other caches).
+    /// TPP kernel variants over the tree cache (panics on other caches).
     pub fn decode_step_variant(&mut self, variant: TppVariant) -> u64 {
         let cfg = &self.cfg;
         let q = Queries::new(&self.q, cfg.heads, cfg.batch, cfg.head_dim);
@@ -206,6 +232,9 @@ impl KernelBench {
         };
         let ctx = tree.context();
         match variant {
+            TppVariant::Parallel2d => {
+                tpp_attention_2d(tree, &ctx, &q, &self.pool, &mut self.scratch2d, &mut self.out)
+            }
             TppVariant::Fused => {
                 tpp_attention(tree, &ctx, &q, &self.pool, &mut self.scratch, &mut self.out)
             }
@@ -270,9 +299,11 @@ impl KernelBench {
 /// TPP kernel variants for the ablation bench.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TppVariant {
-    /// Production fused kernel (§3.3 CPU form).
+    /// Production 2D (head × chunk-run) parallel schedule.
+    Parallel2d,
+    /// Head-partitioned fused kernel (§3.3 CPU form) — the 1D baseline.
     Fused,
-    /// Algorithms 1+2 verbatim with partial buffers.
+    /// Algorithms 1+2 verbatim with partial buffers, single-threaded.
     Buffered,
     /// No chunk-first batching (PAKV without TPP).
     SeqFirstOnly,
@@ -352,6 +383,8 @@ mod tests {
     #[test]
     fn tpp_variants_agree() {
         let mut kb = KernelBench::new(cfg(), AttentionImpl::ChunkAttn);
+        kb.decode_step_variant(TppVariant::Parallel2d);
+        let two_d = kb.output().to_vec();
         kb.decode_step_variant(TppVariant::Fused);
         let fused = kb.output().to_vec();
         kb.decode_step_variant(TppVariant::Buffered);
@@ -359,9 +392,23 @@ mod tests {
         kb.decode_step_variant(TppVariant::SeqFirstOnly);
         let seq_only = kb.output().to_vec();
         for i in 0..fused.len() {
+            assert!((fused[i] - two_d[i]).abs() < 1e-4);
             assert!((fused[i] - buffered[i]).abs() < 1e-4);
             assert!((fused[i] - seq_only[i]).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn production_default_is_the_2d_schedule() {
+        let ab = AblationConfig::default();
+        assert_eq!(ab.kernel, TppVariant::Parallel2d);
+        assert!(ab.lazy_context);
+        // decode_step routes ChunkAttn through the configured variant.
+        let mut kb = KernelBench::new(cfg(), AttentionImpl::ChunkAttn);
+        kb.decode_step();
+        let default_out = kb.output().to_vec();
+        kb.decode_step_variant(TppVariant::Parallel2d);
+        assert_eq!(kb.output(), default_out.as_slice());
     }
 
     #[test]

@@ -8,6 +8,6 @@ pub mod scheduler;
 pub mod sim;
 
 pub use engine::{DecodeOutput, Engine, EngineStats, ModelRunner, PrefillOutput};
-pub use microbench::{KernelBench, MicroConfig, TppVariant};
+pub use microbench::{AblationConfig, KernelBench, MicroConfig, TppVariant};
 pub use scheduler::{ActiveSeq, FinishedSeq, Scheduler};
 pub use sim::{simulate, SimConfig, SimResult, SystemKind};

@@ -166,6 +166,16 @@ impl PrefixTree {
         self.epoch
     }
 
+    /// Topology generation counter: bumped on every structural change
+    /// (join, leave, chunk fill/fork, split) and *not* on in-place tail
+    /// appends. A caller holding a [`TreeContext`] built at generation `g`
+    /// may keep using it — without calling [`PrefixTree::context`] at all —
+    /// for as long as `generation()` still returns `g`; the engine uses
+    /// this to skip the per-step context fetch on the decode hot loop.
+    pub fn generation(&self) -> u64 {
+        self.epoch
+    }
+
     pub fn context_stats(&self) -> (u64, u64) {
         (self.ctx_rebuilds, self.ctx_hits)
     }
@@ -411,6 +421,14 @@ impl PrefixTree {
             self.bump_epoch();
         }
         self.seqs.get_mut(&seq).unwrap().len += 1;
+    }
+
+    /// Build a context without touching the lazy cache or its statistics.
+    /// For callers that maintain their own [`PrefixTree::generation`]-keyed
+    /// cache (the serving engine): avoids retaining a second copy of every
+    /// context inside the tree.
+    pub fn context_fresh(&self) -> TreeContext {
+        self.build_context()
     }
 
     /// The kernel context (§3.3), cached across decode iterations and

@@ -4,11 +4,26 @@
 //! Prefix-Aware KV Cache and Two-Phase Partition* (Ye et al., ACL 2024) as a
 //! three-layer Rust + JAX + Pallas serving library:
 //!
-//! - **Layer 3 (this crate)** — the serving coordinator: prefix-aware KV
-//!   cache ([`kvcache::PrefixTree`]), the two-phase-partition decode kernel
-//!   and its baselines ([`attention`]), a continuous-batching engine
-//!   ([`coordinator`]), workload generation ([`workload`]), and an A100
-//!   roofline model ([`perf_model`]) for the paper's analytical tables.
+//! - **Layer 3 (this crate)** — the serving coordinator:
+//!   - prefix-aware KV cache ([`kvcache::PrefixTree`]) with a cached,
+//!     generation-counted kernel context: the tree bumps
+//!     [`kvcache::PrefixTree::generation`] only on structural changes, so
+//!     the engine reuses one [`kvcache::TreeContext`] across every decode
+//!     step between chunk-boundary crossings (observable via the
+//!     `context_rebuilds` / `context_cache_hits` metrics);
+//!   - the two-phase-partition decode kernel and its baselines
+//!     ([`attention`]): production is the 2D *(head × chunk-run)*
+//!     schedule [`attention::tpp_attention_2d`] — chunk-first partials
+//!     fan out over `heads × runs` pool tasks, sequence-first merges fan
+//!     out over `heads × batch`, deterministically merged so results are
+//!     bit-identical for every thread count — on top of an 8-row,
+//!     d-monomorphized register-blocked micro-kernel
+//!     ([`attention::online`]);
+//!   - a continuous-batching engine ([`coordinator`]) with the ablation
+//!     switchboard ([`coordinator::AblationConfig`]) keeping the 1D and
+//!     single-threaded kernel variants runnable as baselines;
+//!   - workload generation ([`workload`]) and an A100 roofline model
+//!     ([`perf_model`]) for the paper's analytical tables.
 //! - **Layer 2** — `python/compile/model.py`: a mini Llama-style decoder in
 //!   JAX, AOT-lowered to HLO text artifacts at build time.
 //! - **Layer 1** — `python/compile/kernels/chunk_attn.py`: the TPP kernel in

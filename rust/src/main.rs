@@ -9,8 +9,10 @@
 use chunk_attention::coordinator::{simulate, KernelBench, MicroConfig, SimConfig, SystemKind};
 use chunk_attention::model::ModelConfig;
 use chunk_attention::perf_model::{AttentionImpl, HardwareModel};
+#[cfg(feature = "pjrt")]
 use chunk_attention::runtime::PjrtModel;
 use chunk_attention::util::cli::{Args, Cli};
+#[cfg(feature = "pjrt")]
 use chunk_attention::util::config::Config;
 use chunk_attention::util::stats::{fmt_bytes, fmt_us};
 use chunk_attention::workload::{Corpus, Tokenizer, Trace, TraceConfig};
@@ -46,6 +48,15 @@ fn main() -> anyhow::Result<()> {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn serve(_argv: &[String]) -> anyhow::Result<()> {
+    anyhow::bail!(
+        "the `serve` subcommand runs the PJRT-compiled model; rebuild with \
+         `--features pjrt` (and the real xla crate) to enable it"
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn serve(argv: &[String]) -> anyhow::Result<()> {
     let cli = Cli::new("chunk-serve serve", "serve via the AOT-compiled model")
         .opt("artifacts", "artifacts", "artifact directory")

@@ -36,6 +36,21 @@ pub fn render_exposition(m: &MetricsRecorder, prefix: &str) -> String {
         "p99 decode step latency (us)",
         m.step_latency_us.quantile(0.99),
     );
+    gauge(
+        "context_rebuilds_total",
+        "decode steps that refetched the tree context (topology changed)",
+        m.context_rebuilds as f64,
+    );
+    gauge(
+        "context_cache_hits_total",
+        "decode steps served from the cached tree context",
+        m.context_cache_hits as f64,
+    );
+    gauge(
+        "context_cache_hit_rate",
+        "fraction of decode steps with an unchanged cached context",
+        m.context_hit_rate(),
+    );
     out
 }
 
@@ -57,6 +72,8 @@ mod tests {
             reused_prompt_tokens: 32,
         });
         m.record_decode_step(120.0, 2);
+        m.context_rebuilds = 3;
+        m.context_cache_hits = 9;
         let text = render_exposition(&m, "chunk_attn");
         for series in [
             "chunk_attn_requests_total 1",
@@ -64,6 +81,9 @@ mod tests {
             "chunk_attn_prefix_hit_rate 0.5",
             "chunk_attn_normalized_latency_ms_mean",
             "chunk_attn_decode_step_us_p50",
+            "chunk_attn_context_rebuilds_total 3",
+            "chunk_attn_context_cache_hits_total 9",
+            "chunk_attn_context_cache_hit_rate 0.75",
         ] {
             assert!(text.contains(series), "missing {series} in:\n{text}");
         }

@@ -86,6 +86,12 @@ pub struct MetricsRecorder {
     pub decode_tokens: u64,
     pub prefill_computed: u64,
     pub prefill_reused: u64,
+    /// Decode steps that had to (re)fetch the tree context because the
+    /// topology generation moved (admission, retirement, chunk boundary).
+    pub context_rebuilds: u64,
+    /// Decode steps that reused the engine's cached context untouched —
+    /// the win of incremental TreeContext caching, observable in e2e runs.
+    pub context_cache_hits: u64,
 }
 
 impl Default for MetricsRecorder {
@@ -105,6 +111,18 @@ impl MetricsRecorder {
             decode_tokens: 0,
             prefill_computed: 0,
             prefill_reused: 0,
+            context_rebuilds: 0,
+            context_cache_hits: 0,
+        }
+    }
+
+    /// Fraction of decode steps served from the cached tree context.
+    pub fn context_hit_rate(&self) -> f64 {
+        let total = self.context_rebuilds + self.context_cache_hits;
+        if total == 0 {
+            0.0
+        } else {
+            self.context_cache_hits as f64 / total as f64
         }
     }
 

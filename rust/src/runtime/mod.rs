@@ -1,10 +1,18 @@
 //! Runtime: load the AOT HLO-text artifacts through PJRT and serve the
 //! compiled executables from the decode path. Python never runs here.
+//!
+//! The manifest (artifact inventory + model config) is always available;
+//! the PJRT client and model runner need the `xla` crate and are gated
+//! behind the `pjrt` cargo feature so the default build stays offline.
 
 pub mod manifest;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
+#[cfg(feature = "pjrt")]
 pub mod pjrt_model;
 
 pub use manifest::{ArtifactKind, Manifest};
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtRuntime;
+#[cfg(feature = "pjrt")]
 pub use pjrt_model::PjrtModel;

@@ -30,6 +30,39 @@ where
     }
 }
 
+/// Run `prop` on `cases` random inputs × every element of a parameter
+/// `grid` (thread counts, batch sizes, ...). Each grid point sees the SAME
+/// random inputs — stream `case` depends only on the case index — so a
+/// failure report names both the case seed and the grid point, and
+/// cross-grid properties (e.g. "bit-identical for every thread count") can
+/// be phrased per input by closing over state keyed on the case index.
+pub fn check_grid<T, P1, G, P>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    grid: &[P1],
+    mut gen: G,
+    mut prop: P,
+) where
+    T: std::fmt::Debug,
+    P1: std::fmt::Debug + Copy,
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(usize, &T, P1) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut rng = Pcg64::new(seed, case as u64);
+        let input = gen(&mut rng);
+        for &point in grid {
+            if let Err(msg) = prop(case, &input, point) {
+                panic!(
+                    "property {name:?} failed at case {case} (seed={seed}, stream={case}), \
+                     grid point {point:?}:\n  {msg}\n  input: {input:#?}"
+                );
+            }
+        }
+    }
+}
+
 /// Like [`check`], but for `Vec<T>` inputs: on failure, greedily shrink the
 /// failing vector (halving windows, then element removal) and report the
 /// smallest failing input found.
@@ -127,6 +160,39 @@ mod tests {
         let err = result.unwrap_err();
         let msg = err.downcast_ref::<String>().unwrap();
         assert!(msg.contains("shrunk to 1 elements"), "{msg}");
+    }
+
+    #[test]
+    fn grid_visits_every_point_with_identical_inputs() {
+        use std::collections::BTreeMap;
+        let mut seen: BTreeMap<usize, (u64, Vec<usize>)> = BTreeMap::new();
+        check_grid(
+            "grid-coverage",
+            5,
+            4,
+            &[1usize, 2, 8],
+            |rng| rng.below(1000),
+            |case, &input, point| {
+                let entry = seen.entry(case).or_insert_with(|| (input, Vec::new()));
+                if entry.0 != input {
+                    return Err(format!("input changed across grid: {} vs {input}", entry.0));
+                }
+                entry.1.push(point);
+                Ok(())
+            },
+        );
+        assert_eq!(seen.len(), 4);
+        for (_, (_, points)) in seen {
+            assert_eq!(points, vec![1, 2, 8]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "grid point")]
+    fn grid_failure_names_the_point() {
+        check_grid("grid-fails", 1, 2, &[3usize], |rng| rng.below(10), |_, _, _| {
+            Err("nope".into())
+        });
     }
 
     #[test]

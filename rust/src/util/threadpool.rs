@@ -8,7 +8,8 @@
 //! On a single-core host the pool degrades gracefully: `ThreadPool::new(1)`
 //! runs everything inline on the caller thread with zero synchronisation.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -63,6 +64,11 @@ impl ThreadPool {
     /// in contiguous blocks. Blocks until all iterations complete.
     ///
     /// `f` must be `Sync` because multiple workers call it concurrently.
+    ///
+    /// Panic safety: a panic inside `f` is caught on the worker, the latch
+    /// still counts down (no deadlocked caller, no dead worker thread), the
+    /// remaining indices are abandoned, and the first panic payload is
+    /// re-raised on the submitting thread once every task has stopped.
     pub fn parallel_for<F>(&self, n: usize, f: F)
     where
         F: Fn(usize) + Sync,
@@ -78,6 +84,9 @@ impl ThreadPool {
         }
         let latch = Arc::new(Latch::new(self.size.min(n)));
         let next = Arc::new(AtomicUsize::new(0));
+        let poisoned = Arc::new(AtomicBool::new(false));
+        let panic_payload: Arc<Mutex<Option<Box<dyn std::any::Any + Send>>>> =
+            Arc::new(Mutex::new(None));
         // Safety: `parallel_for` blocks on the latch until every submitted
         // closure has finished, so borrowing `f` across the 'static job
         // boundary never outlives this frame.
@@ -87,15 +96,29 @@ impl ThreadPool {
         for _ in 0..self.size.min(n) {
             let latch = Arc::clone(&latch);
             let next = Arc::clone(&next);
+            let poisoned = Arc::clone(&poisoned);
+            let panic_payload = Arc::clone(&panic_payload);
             let job: Job = Box::new(move || {
                 let f = unsafe { &*(f_ptr as *const F) };
-                loop {
+                while !poisoned.load(Ordering::Relaxed) {
                     let start = next.fetch_add(grain, Ordering::Relaxed);
                     if start >= n {
                         break;
                     }
-                    for i in start..(start + grain).min(n) {
-                        f(i);
+                    let end = (start + grain).min(n);
+                    // Catch so the worker thread survives and the latch
+                    // always fires; re-raised on the caller below.
+                    if let Err(p) = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                        for i in start..end {
+                            f(i);
+                        }
+                    })) {
+                        let mut slot = panic_payload.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(p);
+                        }
+                        poisoned.store(true, Ordering::Relaxed);
+                        break;
                     }
                 }
                 latch.count_down();
@@ -103,6 +126,9 @@ impl ThreadPool {
             tx.send(job).expect("pool alive");
         }
         latch.wait();
+        if let Some(p) = panic_payload.lock().unwrap().take() {
+            std::panic::resume_unwind(p);
+        }
     }
 }
 
@@ -204,5 +230,53 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.parallel_for(10, |_| {});
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller() {
+        // Before the fix this deadlocked: the panicking worker skipped
+        // `latch.count_down()` and `wait` blocked forever.
+        let pool = ThreadPool::new(4);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.parallel_for(100, |i| {
+                if i == 37 {
+                    panic!("task 37 exploded");
+                }
+            });
+        }));
+        let payload = result.expect_err("panic must reach the caller");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert!(msg.contains("exploded"), "unexpected payload {msg:?}");
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_parallel_for() {
+        let pool = ThreadPool::new(3);
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.parallel_for(30, |i| {
+                if i % 7 == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        // Workers caught the panic instead of dying; the pool still works.
+        let sum = AtomicU64::new(0);
+        pool.parallel_for(100, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn inline_pool_panic_propagates() {
+        let pool = ThreadPool::new(1);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.parallel_for(4, |i| {
+                if i == 2 {
+                    panic!("inline");
+                }
+            });
+        }));
+        assert!(result.is_err());
     }
 }

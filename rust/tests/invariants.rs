@@ -3,7 +3,9 @@
 //! accounting, paging refcounts, sharing-ratio bounds, and kernel
 //! equivalence under random workloads.
 
-use chunk_attention::attention::{oracle_attention, tpp_attention, Queries, TppScratch};
+use chunk_attention::attention::{
+    oracle_attention, tpp_attention, tpp_attention_2d, Queries, Tpp2dScratch, TppScratch,
+};
 use chunk_attention::kvcache::{KvShape, PagedKvCache, PrefixTree, SeqId};
 use chunk_attention::util::pbt;
 use chunk_attention::util::rng::Pcg64;
@@ -132,6 +134,55 @@ fn tpp_matches_oracle_on_random_trees() {
         for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
             if (g - e).abs() > 3e-4 * (1.0 + e.abs()) {
                 return Err(format!("idx {i}: {g} vs {e}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn two_d_kernel_matches_oracle_and_is_thread_count_invariant() {
+    // Random trees (random live batch sizes fall out of the random
+    // insert/remove/append mix) × thread counts {1, 2, 8}: the production
+    // 2D-scheduled kernel must match the f64 oracle within 2e-4 AND be
+    // bit-identical for every thread count — its run schedule and merge
+    // order depend only on the context, never on the pool size.
+    let shape = KvShape::new(3, 8, 4);
+    let grid = [1usize, 2, 8];
+    let pools: Vec<(usize, ThreadPool)> =
+        grid.iter().map(|&n| (n, ThreadPool::new(n))).collect();
+    let mut baseline: std::collections::BTreeMap<usize, Vec<f32>> = Default::default();
+    pbt::check_grid("tpp2d-vs-oracle-grid", 0x2D5EED, 16, &grid, gen_ops, |case, ops, workers| {
+        let mut tree = apply_ops(ops, shape)?;
+        let ctx = tree.context();
+        let b = ctx.seq_order.len();
+        if b == 0 {
+            return Ok(());
+        }
+        // Queries depend only on the case index, so every grid point sees
+        // the same problem.
+        let mut rng = Pcg64::new(0xD00D, case as u64);
+        let mut q = vec![0.0f32; shape.heads * b * shape.head_dim];
+        rng.fill_uniform_f32(&mut q, -1.0, 1.0);
+        let queries = Queries::new(&q, shape.heads, b, shape.head_dim);
+        let expect = oracle_attention(&tree, &ctx, &queries);
+        let pool = &pools.iter().find(|(n, _)| *n == workers).unwrap().1;
+        let mut scratch = Tpp2dScratch::new();
+        let mut got = vec![0.0f32; expect.len()];
+        tpp_attention_2d(&tree, &ctx, &queries, pool, &mut scratch, &mut got);
+        for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
+            if (g - e).abs() > 2e-4 * (1.0 + e.abs()) {
+                return Err(format!("workers {workers} idx {i}: {g} vs {e}"));
+            }
+        }
+        match baseline.entry(case) {
+            std::collections::btree_map::Entry::Vacant(slot) => {
+                slot.insert(got);
+            }
+            std::collections::btree_map::Entry::Occupied(first) => {
+                if first.get() != &got {
+                    return Err(format!("workers {workers}: output not bit-identical"));
+                }
             }
         }
         Ok(())

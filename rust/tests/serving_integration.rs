@@ -72,6 +72,72 @@ fn engine_sharing_stats_track_live_sequences() {
 }
 
 #[test]
+fn decode_steps_reuse_cached_context_until_topology_changes() {
+    // chunk_size 16 and a 4-token prompt: after admission the sequence's
+    // private tail chunk has room for every decoded token, so no decode
+    // step changes the tree topology and the engine must serve every step
+    // after the first from its cached context — without calling
+    // `PrefixTree::context()` at all.
+    let mut engine =
+        Engine::new(SyntheticRunner { heads_total: 2, head_dim: 4, vocab: 97 }, 16, 4);
+    engine.submit(chunk_attention::workload::Request {
+        id: 0,
+        arrival_s: 0.0,
+        tenant: 0,
+        shared_tokens: 0,
+        prompt: vec![1, 2, 3, 4],
+        max_new_tokens: 8,
+    });
+    let finished = engine.run_to_completion().unwrap();
+    assert_eq!(finished.len(), 1);
+    let m = engine.metrics();
+    // 7 decode steps total (prefill emits the first of 8 tokens): one
+    // rebuild on the admission step, cache hits on all six others.
+    assert_eq!(m.context_rebuilds, 1, "only the admission step rebuilds");
+    assert_eq!(m.context_cache_hits, 6, "all topology-stable steps hit");
+    // The tree's lazy-cache path was never touched: the engine keeps the
+    // only context cache (via `context_fresh`), so cache-hit steps never
+    // reach `PrefixTree::context()` at all.
+    let (tree_rebuilds, tree_hits) = engine.tree().context_stats();
+    assert_eq!((tree_rebuilds, tree_hits), (0, 0));
+    // The counters are exported for e2e observability.
+    let text = chunk_attention::metrics::render_exposition(m, "e2e");
+    assert!(text.contains("e2e_context_rebuilds_total 1"), "{text}");
+    assert!(text.contains("e2e_context_cache_hits_total 6"), "{text}");
+}
+
+#[test]
+fn context_rebuilds_track_chunk_boundary_crossings() {
+    // Tiny chunks (4 tokens) force periodic chunk-boundary crossings, so
+    // some decode steps rebuild — but between boundaries the cache must
+    // still serve hits, and rebuilds stay well below total steps.
+    let mut engine =
+        Engine::new(SyntheticRunner { heads_total: 2, head_dim: 4, vocab: 97 }, 4, 4);
+    for i in 0..3u64 {
+        engine.submit(chunk_attention::workload::Request {
+            id: i,
+            arrival_s: 0.0,
+            tenant: 0,
+            shared_tokens: 0,
+            prompt: vec![7, 8, 9, 10 + i as u32],
+            max_new_tokens: 16,
+        });
+    }
+    engine.run_to_completion().unwrap();
+    let m = engine.metrics();
+    let steps = engine.stats().decode_steps;
+    assert_eq!(m.context_rebuilds + m.context_cache_hits, steps);
+    assert!(m.context_cache_hits > 0, "steady-state steps must hit");
+    assert!(
+        m.context_rebuilds < steps,
+        "rebuilds {} must not cover all {} steps",
+        m.context_rebuilds,
+        steps
+    );
+    assert!(m.context_hit_rate() > 0.5, "hit rate {}", m.context_hit_rate());
+}
+
+#[test]
 fn simulator_and_engine_agree_on_scheduling_shape() {
     // The virtual-time simulator and the real engine share the Scheduler;
     // with the same trace they must admit the same peak batch.

@@ -1,0 +1,214 @@
+//! Offline shim of the `log` facade: the [`Log`] trait, level types, the
+//! global logger registry, and the five level macros. API-compatible with
+//! the subset `chunk_attention::util::logger` and the PJRT runtime use; the
+//! container building this repo has no crates.io access.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Verbosity of a single record, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+/// Global maximum level: like [`Level`] plus `Off`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+impl PartialEq<Level> for LevelFilter {
+    fn eq(&self, other: &Level) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<Level> for LevelFilter {
+    fn partial_cmp(&self, other: &Level) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+/// Metadata of a record: level and target (module path by default).
+#[derive(Debug, Clone, Copy)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log record: metadata plus pre-formatted arguments.
+#[derive(Clone, Copy)]
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// A logging backend.
+pub trait Log: Sync + Send {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+static LOGGER: OnceLock<&'static dyn Log> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+
+/// Returned by [`set_logger`] if a logger is already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+/// Install the global logger; fails if one is already set.
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+/// Set the global maximum level.
+pub fn set_max_level(level: LevelFilter) {
+    MAX_LEVEL.store(level as usize, Ordering::Relaxed);
+}
+
+/// The global maximum level.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        5 => LevelFilter::Trace,
+        _ => LevelFilter::Off,
+    }
+}
+
+/// Macro plumbing: dispatch one record to the installed logger.
+#[doc(hidden)]
+pub fn __private_log(level: Level, target: &str, args: fmt::Arguments) {
+    if level <= max_level() {
+        if let Some(logger) = LOGGER.get() {
+            let record = Record { metadata: Metadata { level, target }, args };
+            if logger.enabled(&record.metadata) {
+                logger.log(&record);
+            }
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)+) => {
+        $crate::__private_log($lvl, ::std::module_path!(), ::std::format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Error, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Warn, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Info, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Debug, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Trace, $($arg)+) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    static HITS: AtomicUsize = AtomicUsize::new(0);
+
+    struct Counter;
+
+    impl Log for Counter {
+        fn enabled(&self, metadata: &Metadata) -> bool {
+            metadata.level() <= max_level()
+        }
+        fn log(&self, record: &Record) {
+            let _ = format!("{}", record.args());
+            HITS.fetch_add(1, Ordering::Relaxed);
+        }
+        fn flush(&self) {}
+    }
+
+    #[test]
+    fn levels_compare_against_filters() {
+        assert!(Level::Error <= LevelFilter::Info);
+        assert!(Level::Debug > LevelFilter::Info);
+        assert!(LevelFilter::Trace >= Level::Trace);
+    }
+
+    #[test]
+    fn macros_route_through_global_logger() {
+        static COUNTER: Counter = Counter;
+        let _ = set_logger(&COUNTER);
+        set_max_level(LevelFilter::Info);
+        info!("hello {}", 42);
+        debug!("filtered out");
+        assert!(HITS.load(Ordering::Relaxed) >= 1);
+    }
+}

@@ -1,0 +1,205 @@
+//! Stub of the `xla-rs` API surface that `chunk_attention`'s PJRT runtime
+//! compiles against (only with `--features pjrt`). Every operation that
+//! would need the real XLA/PJRT runtime returns [`Error::Unavailable`];
+//! literal construction and host-side reshapes work, so shape plumbing is
+//! still exercised. Swap this path dependency for the real `xla` crate to
+//! execute the AOT artifacts.
+
+use std::fmt;
+
+/// Stub error: either "this build has no XLA runtime" or a host-side
+/// literal-shape problem.
+#[derive(Debug, Clone)]
+pub enum Error {
+    Unavailable(&'static str),
+    Shape(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => {
+                write!(f, "{what}: xla stub (build with the real xla crate to run PJRT)")
+            }
+            Error::Shape(msg) => write!(f, "shape error: {msg}"),
+        }
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types literals can hold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    I32,
+}
+
+/// Marker for native element types.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn to_f32(self) -> f32;
+    fn from_f32(x: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn to_f32(self) -> f32 {
+        self
+    }
+    fn from_f32(x: f32) -> Self {
+        x
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::I32;
+    fn to_f32(self) -> f32 {
+        self as f32
+    }
+    fn from_f32(x: f32) -> Self {
+        x as i32
+    }
+}
+
+/// Host literal: flat f32 payload plus shape and element type.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl Literal {
+    /// Rank-1 literal from a flat slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            data: data.iter().map(|&x| x.to_f32()).collect(),
+            dims: vec![data.len() as i64],
+            ty: T::TY,
+        }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(x: T) -> Literal {
+        Literal { data: vec![x.to_f32()], dims: Vec::new(), ty: T::TY }
+    }
+
+    /// Reshape without moving data; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error::Shape(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec(), ty: self.ty })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::TY != self.ty {
+            return Err(Error::Shape(format!("element type mismatch: literal is {:?}", self.ty)));
+        }
+        Ok(self.data.iter().map(|&x| T::from_f32(x)).collect())
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable("to_tuple"))
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation handle (opaque in the stub).
+#[derive(Debug, Clone)]
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+/// Device-side buffer handle.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.shape(), &[2, 2]);
+        assert!(l.reshape(&[3]).is_err());
+        let i = Literal::vec1(&[7i32, 8]);
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![7, 8]);
+        assert!(i.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn runtime_entry_points_are_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+    }
+}
