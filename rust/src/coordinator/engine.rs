@@ -11,7 +11,7 @@
 //! 3. appends each sequence's fresh K/V rows to the tree and retires
 //!    completed sequences (their private chunks return to the pool).
 
-use super::scheduler::{FinishedSeq, Scheduler};
+use super::scheduler::{FinishedSeq, Removed, Scheduler};
 use crate::kvcache::{KvShape, PrefixRetainer, PrefixTree, SeqId, TreeContext, PIN_ID_BASE};
 use crate::metrics::{MetricsRecorder, RequestRecord};
 use crate::workload::Request;
@@ -141,6 +141,62 @@ impl<R: ModelRunner> Engine<R> {
         self.sched.submit(request);
     }
 
+    /// Cap the admission queue (see [`Scheduler::set_queue_limit`]);
+    /// `try_submit` rejects beyond it.
+    pub fn set_queue_limit(&mut self, limit: Option<usize>) {
+        self.sched.set_queue_limit(limit);
+    }
+
+    /// Bound per-request history retention (scheduler `finished` entries
+    /// and metrics records) so a long-running server's memory does not
+    /// grow with total request count. Lifetime counters are unaffected.
+    pub fn set_history_limit(&mut self, limit: usize) {
+        self.sched.set_finished_history_limit(Some(limit));
+        self.metrics.set_record_limit(Some(limit));
+    }
+
+    /// Submit with admission control: returns `false` (and counts the
+    /// rejection) when the queue is full. The gateway maps this to 429.
+    pub fn try_submit(&mut self, request: Request) -> bool {
+        assert!(request.id < PIN_ID_BASE, "request ids must stay below the pin range");
+        self.sched.try_submit(request)
+    }
+
+    /// Cancel a request mid-flight: removes it from the queue or the
+    /// decode batch, frees its private chunks back to the tree pool, and
+    /// drops its per-sequence state. Safe between [`Engine::step`] calls;
+    /// returns `false` if the id is unknown (already finished/cancelled).
+    pub fn cancel(&mut self, id: u64) -> bool {
+        match self.sched.remove(id) {
+            None => false,
+            Some(Removed::Queued(_)) => {
+                self.metrics.cancelled += 1;
+                true
+            }
+            Some(Removed::Active(_)) => {
+                // Active sequences always hold a tree path (inserted at
+                // prefill); removing it releases every chunk no other live
+                // sequence references and invalidates cached contexts via
+                // the generation bump.
+                if self.tree.sequence_len(SeqId(id)).is_some() {
+                    self.tree.remove_sequence(SeqId(id));
+                }
+                self.states.remove(&id);
+                self.timing.remove(&id);
+                self.metrics.cancelled += 1;
+                true
+            }
+        }
+    }
+
+    /// Drop the retained completion state of a finished (or cancelled)
+    /// request, returning the tokens generated so far. Long-running
+    /// drivers (the HTTP gateway) call this after delivering the final
+    /// token so `states` does not grow with total request count.
+    pub fn release(&mut self, id: u64) -> Option<Vec<u32>> {
+        self.states.remove(&id).map(|s| s.completion)
+    }
+
     pub fn is_idle(&self) -> bool {
         self.sched.is_idle()
     }
@@ -161,11 +217,34 @@ impl<R: ModelRunner> Engine<R> {
         self.started.elapsed().as_secs_f64()
     }
 
+    /// Seconds since the engine started — the clock request timing uses.
+    /// External drivers stamp `Request::arrival_s` with this so queueing
+    /// delay and TTFT metrics are measured on one consistent clock.
+    pub fn clock(&self) -> f64 {
+        self.now()
+    }
+
     /// Run one engine iteration (admission + prefills + one decode step).
     /// Returns sequences that finished this iteration.
+    ///
+    /// External drivers (the HTTP gateway's stepper thread) pump this in
+    /// their own loop, interleaving [`Engine::try_submit`] /
+    /// [`Engine::cancel`] between iterations; `run_to_completion` below is
+    /// the offline-trace driver over the same primitive.
     pub fn step(&mut self) -> anyhow::Result<Vec<FinishedSeq>> {
+        let mut finished_early = self.admit_and_prefill()?;
+        if self.sched.batch_size() == 0 {
+            return Ok(finished_early);
+        }
+        finished_early.extend(self.decode_once()?);
+        Ok(finished_early)
+    }
+
+    /// Admission phase: pull queued requests into free batch slots and
+    /// prefill each one's unmatched prompt suffix (prefix lookup, §3.2).
+    /// Returns requests whose one-token budget finished at prefill.
+    fn admit_and_prefill(&mut self) -> anyhow::Result<Vec<FinishedSeq>> {
         let mut finished_early = Vec::new();
-        // Admission + prefill with prefix lookup.
         let admitted = self.sched.admit(self.now());
         for seq in admitted {
             let req = &seq.request;
@@ -220,11 +299,12 @@ impl<R: ModelRunner> Engine<R> {
             self.record_finished(&f);
             finished_early.push(f);
         }
+        Ok(finished_early)
+    }
 
-        if self.sched.batch_size() == 0 {
-            return Ok(finished_early);
-        }
-
+    /// Decode phase: one batched decode step over every active sequence,
+    /// appending fresh K/V rows and retiring completed sequences.
+    fn decode_once(&mut self) -> anyhow::Result<Vec<FinishedSeq>> {
         // One batched decode step. Pin sequences (prefix retention) are
         // phantom rows: they get dummy queries and their outputs are
         // discarded — they exist only to keep shared chunks referenced.
@@ -283,8 +363,7 @@ impl<R: ModelRunner> Engine<R> {
         if let Some(retainer) = &mut self.retainer {
             retainer.enforce_budget(&mut self.tree);
         }
-        finished_early.extend(finished);
-        Ok(finished_early)
+        Ok(finished)
     }
 
     fn record_finished(&mut self, f: &FinishedSeq) {
@@ -552,6 +631,66 @@ mod tests {
         }
         assert!(e.tree().pool().in_use() <= 5, "LRU eviction keeps the pool bounded");
         e.tree().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cancel_mid_decode_releases_private_chunks() {
+        let mut e = engine();
+        let sys: Vec<u32> = (0..16).collect();
+        let mut p1 = sys.clone();
+        p1.push(100);
+        let mut p2 = sys.clone();
+        p2.push(200);
+        e.submit(request(0, p1, 64));
+        e.submit(request(1, p2, 64));
+        e.step().unwrap(); // both admitted and decoding
+        let before = e.tree().pool().in_use();
+        assert!(e.cancel(0), "active sequence cancels");
+        assert!(!e.cancel(0), "double cancel is a no-op");
+        assert!(e.tree().pool().in_use() < before, "private chunks released");
+        e.tree().check_invariants().unwrap();
+        // The surviving sequence still decodes to completion.
+        let done = e.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].request.id, 1);
+        assert_eq!(e.metrics().cancelled, 1);
+        assert_eq!(e.tree().pool().in_use(), 0, "everything returned to the pool");
+    }
+
+    #[test]
+    fn cancel_queued_request_never_prefills() {
+        let mut e = Engine::new(SyntheticRunner { heads_total: 2, head_dim: 4, vocab: 11 }, 4, 1);
+        e.submit(request(0, vec![1, 2, 3], 8));
+        e.submit(request(1, vec![4, 5, 6], 8));
+        e.step().unwrap(); // 0 active (batch=1), 1 still queued
+        assert!(e.cancel(1));
+        let done = e.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(e.stats().prefill_tokens_computed, 3, "request 1 never prefilled");
+        assert_eq!(e.metrics().cancelled, 1);
+    }
+
+    #[test]
+    fn try_submit_respects_queue_limit() {
+        let mut e = Engine::new(SyntheticRunner { heads_total: 2, head_dim: 4, vocab: 11 }, 4, 1);
+        e.set_queue_limit(Some(2));
+        assert!(e.try_submit(request(0, vec![1, 2], 2)));
+        assert!(e.try_submit(request(1, vec![1, 3], 2)));
+        assert!(!e.try_submit(request(2, vec![1, 4], 2)), "queue at capacity");
+        assert_eq!(e.scheduler().admission_rejections(), 1);
+        let done = e.run_to_completion().unwrap();
+        assert_eq!(done.len(), 2, "accepted requests still complete");
+    }
+
+    #[test]
+    fn release_drops_completion_state() {
+        let mut e = engine();
+        e.submit(request(0, (0..8).collect(), 3));
+        e.run_to_completion().unwrap();
+        let tokens = e.release(0).expect("finished request retains completion until released");
+        assert_eq!(tokens.len(), 3);
+        assert!(e.release(0).is_none());
+        assert!(e.completion_of(0).is_none());
     }
 
     #[test]

@@ -49,6 +49,15 @@ impl FinishedSeq {
     }
 }
 
+/// Where a removed (cancelled) sequence was found.
+#[derive(Debug, Clone)]
+pub enum Removed {
+    /// Still waiting in the admission queue; never prefilled.
+    Queued(Request),
+    /// Mid-flight: was decoding when removed.
+    Active(ActiveSeq),
+}
+
 /// FCFS continuous-batching scheduler.
 pub struct Scheduler {
     queue: VecDeque<Request>,
@@ -56,6 +65,14 @@ pub struct Scheduler {
     finished: Vec<FinishedSeq>,
     max_batch: usize,
     peak_batch: usize,
+    /// Admission-queue capacity; `None` = unbounded (offline traces).
+    queue_limit: Option<usize>,
+    /// Cap on the retained `finished` history; `None` = keep everything
+    /// (offline traces and tests). The long-running gateway sets a bound so
+    /// completed requests (with their cloned prompts) don't accumulate.
+    finished_history_limit: Option<usize>,
+    finished_total: u64,
+    admission_rejections: u64,
 }
 
 impl Scheduler {
@@ -67,12 +84,67 @@ impl Scheduler {
             finished: Vec::new(),
             max_batch,
             peak_batch: 0,
+            queue_limit: None,
+            finished_history_limit: None,
+            finished_total: 0,
+            admission_rejections: 0,
         }
+    }
+
+    /// Cap the admission queue; `try_submit` rejects beyond it.
+    pub fn set_queue_limit(&mut self, limit: Option<usize>) {
+        self.queue_limit = limit;
+    }
+
+    /// Bound the retained `finished` history (oldest entries are dropped).
+    /// `finished_total` keeps the lifetime count either way.
+    pub fn set_finished_history_limit(&mut self, limit: Option<usize>) {
+        self.finished_history_limit = limit;
+    }
+
+    /// Lifetime count of retired sequences, independent of the history cap.
+    pub fn finished_total(&self) -> u64 {
+        self.finished_total
     }
 
     /// Enqueue a request that has arrived.
     pub fn submit(&mut self, request: Request) {
         self.queue.push_back(request);
+    }
+
+    /// Enqueue with admission control: rejects (and counts the rejection)
+    /// when the queue is at its configured capacity. The serving gateway
+    /// maps a rejection to HTTP 429 backpressure.
+    pub fn try_submit(&mut self, request: Request) -> bool {
+        if let Some(limit) = self.queue_limit {
+            if self.queue.len() >= limit {
+                self.admission_rejections += 1;
+                return false;
+            }
+        }
+        self.queue.push_back(request);
+        true
+    }
+
+    /// Remove a sequence mid-flight (client cancellation), wherever it is.
+    /// The removal never touches `finished` or `peak_batch`: a cancelled
+    /// sequence is neither completed nor does it shrink the high-water
+    /// mark. Returns `None` if the id is unknown (already finished).
+    /// Cancellation accounting lives in one place — the engine's
+    /// `MetricsRecorder::cancelled` — not here.
+    pub fn remove(&mut self, id: u64) -> Option<Removed> {
+        if let Some(pos) = self.queue.iter().position(|r| r.id == id) {
+            return self.queue.remove(pos).map(Removed::Queued);
+        }
+        if let Some(pos) = self.active.iter().position(|s| s.request.id == id) {
+            return Some(Removed::Active(self.active.remove(pos)));
+        }
+        None
+    }
+
+    /// Requests rejected by admission control (`try_submit`) so far.
+    pub fn admission_rejections(&self) -> u64 {
+        self.admission_rejections
     }
 
     /// Admit queued requests into free batch slots at time `now`; returns
@@ -122,7 +194,15 @@ impl Scheduler {
                 true
             }
         });
+        self.finished_total += retired.len() as u64;
         self.finished.extend(retired.iter().cloned());
+        if let Some(limit) = self.finished_history_limit {
+            // Amortized O(1): let the history reach 2x before trimming.
+            if self.finished.len() >= 2 * limit.max(1) {
+                let excess = self.finished.len() - limit.max(1);
+                self.finished.drain(..excess);
+            }
+        }
         retired
     }
 
@@ -211,6 +291,69 @@ mod tests {
         let done = s.step_decode(4.0);
         // Request 1 waited 2s in queue: e2e = 4s over 2 tokens.
         assert!((done[0].normalized_latency_ms_per_tok() - 2000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn finished_history_is_bounded_when_capped() {
+        let mut s = Scheduler::new(4);
+        s.set_finished_history_limit(Some(2));
+        for i in 0..6 {
+            s.submit(req(i, 0.0, 4, 1));
+        }
+        while !s.is_idle() {
+            s.admit(0.0);
+            s.step_decode(0.1);
+        }
+        assert_eq!(s.finished_total(), 6, "lifetime count survives the cap");
+        assert_eq!(s.finished().len(), 2, "history bounded");
+        assert_eq!(s.finished()[1].request.id, 5, "newest entries retained");
+    }
+
+    #[test]
+    fn queue_limit_rejects_and_counts() {
+        let mut s = Scheduler::new(1);
+        s.set_queue_limit(Some(2));
+        assert!(s.try_submit(req(0, 0.0, 4, 8)));
+        assert!(s.try_submit(req(1, 0.0, 4, 8)));
+        assert!(!s.try_submit(req(2, 0.0, 4, 8)), "third submit exceeds the cap");
+        assert_eq!(s.admission_rejections(), 1);
+        assert_eq!(s.queued(), 2);
+        // Admission drains the queue; capacity frees up again.
+        s.admit(0.0);
+        assert!(s.try_submit(req(3, 0.0, 4, 8)));
+        assert_eq!(s.admission_rejections(), 1);
+    }
+
+    #[test]
+    fn remove_queued_and_active_without_finishing_them() {
+        let mut s = Scheduler::new(2);
+        for i in 0..4 {
+            s.submit(req(i, 0.0, 4, 8));
+        }
+        s.admit(0.0); // 0,1 active; 2,3 queued
+        assert_eq!(s.peak_batch(), 2);
+        match s.remove(2) {
+            Some(Removed::Queued(r)) => assert_eq!(r.id, 2),
+            other => panic!("expected queued removal, got {other:?}"),
+        }
+        match s.remove(0) {
+            Some(Removed::Active(a)) => assert_eq!(a.request.id, 0),
+            other => panic!("expected active removal, got {other:?}"),
+        }
+        assert!(s.remove(0).is_none(), "double-cancel is a no-op");
+        assert_eq!(s.batch_size(), 1);
+        // The freed slot admits the remaining queued request.
+        let admitted = s.admit(0.1);
+        assert_eq!(admitted.len(), 1);
+        assert_eq!(admitted[0].request.id, 3);
+        // Run everything to completion: cancelled ids never reach finished.
+        for _ in 0..8 {
+            s.step_decode(0.2);
+        }
+        let done: Vec<u64> = s.finished().iter().map(|f| f.request.id).collect();
+        assert_eq!(done, vec![1, 3]);
+        assert_eq!(s.peak_batch(), 2, "cancellation must not corrupt the high-water mark");
+        assert!(s.is_idle());
     }
 
     #[test]

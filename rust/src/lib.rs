@@ -22,6 +22,11 @@
 //!   - a continuous-batching engine ([`coordinator`]) with the ablation
 //!     switchboard ([`coordinator::AblationConfig`]) keeping the 1D and
 //!     single-threaded kernel variants runnable as baselines;
+//!   - an online serving gateway ([`server`]): a dependency-free HTTP/1.1
+//!     frontend with SSE token streaming, bounded admission (429
+//!     backpressure), client-disconnect cancellation, graceful drain, and
+//!     a closed-loop load generator (`chunk-serve bench-http` /
+//!     `gateway`);
 //!   - workload generation ([`workload`]) and an A100 roofline model
 //!     ([`perf_model`]) for the paper's analytical tables.
 //! - **Layer 2** — `python/compile/model.py`: a mini Llama-style decoder in
@@ -42,5 +47,6 @@ pub mod metrics;
 pub mod model;
 pub mod perf_model;
 pub mod runtime;
+pub mod server;
 pub mod util;
 pub mod workload;

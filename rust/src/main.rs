@@ -1,21 +1,31 @@
 //! `chunk-serve` — the serving-system CLI.
 //!
 //! Subcommands:
-//!   serve      run the real PJRT-backed engine on a synthetic workload
+//!   serve      run the engine over an offline synthetic trace (PJRT model
+//!              or, with --synthetic, the in-process runner on any build)
+//!   gateway    online HTTP/1.1 serving gateway: POST /v1/generate with SSE
+//!              token streaming, GET /healthz, GET /metrics; bounded
+//!              admission queue (429 backpressure) + disconnect cancellation
+//!   bench-http closed-loop multi-tenant load generator over real sockets
+//!              (spawns an in-process gateway unless --addr is given)
 //!   simulate   virtual-time e2e simulation at Llama2-7B scale (§4.2)
 //!   kernel     one microkernel measurement (§4.1)
 //!   corpus     print Table-2-style tenant prompt statistics
 
-use chunk_attention::coordinator::{simulate, KernelBench, MicroConfig, SimConfig, SystemKind};
+use chunk_attention::coordinator::engine::testing::SyntheticRunner;
+use chunk_attention::coordinator::{
+    simulate, Engine, KernelBench, MicroConfig, ModelRunner, SimConfig, SystemKind,
+};
 use chunk_attention::model::ModelConfig;
 use chunk_attention::perf_model::{AttentionImpl, HardwareModel};
 #[cfg(feature = "pjrt")]
 use chunk_attention::runtime::PjrtModel;
+use chunk_attention::server::{run_bench, BenchConfig, Gateway, GatewayConfig};
 use chunk_attention::util::cli::{Args, Cli};
-#[cfg(feature = "pjrt")]
 use chunk_attention::util::config::Config;
 use chunk_attention::util::stats::{fmt_bytes, fmt_us};
 use chunk_attention::workload::{Corpus, Tokenizer, Trace, TraceConfig};
+use std::time::Duration;
 
 fn parse_or_exit(cli: &Cli, argv: &[String]) -> Args {
     match cli.parse(argv) {
@@ -33,59 +43,35 @@ fn main() -> anyhow::Result<()> {
     let sub = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
     match sub.as_str() {
         "serve" => serve(&argv),
+        "gateway" => gateway_cmd(&argv),
+        "bench-http" => bench_http(&argv),
         "simulate" => simulate_cmd(&argv),
         "kernel" => kernel(&argv),
         "corpus" => corpus(&argv),
         _ => {
             eprintln!(
                 "chunk-serve — ChunkAttention serving CLI\n\nSUBCOMMANDS:\n  serve      \
-                 serve a synthetic workload through the PJRT mini model\n  simulate   \
-                 virtual-time Llama2-7B e2e simulation\n  kernel     microkernel decode \
-                 measurement\n  corpus     tenant system-prompt statistics\n"
+                 offline trace through the engine (--synthetic for the in-process runner)\n  \
+                 gateway    streaming HTTP frontend (SSE /v1/generate, /healthz, /metrics)\n  \
+                 bench-http closed-loop HTTP load generator (--addr, or spawns a gateway)\n  \
+                 simulate   virtual-time Llama2-7B e2e simulation\n  kernel     microkernel \
+                 decode measurement\n  corpus     tenant system-prompt statistics\n\nRun a \
+                 subcommand with --help for its options.\n"
             );
             Ok(())
         }
     }
 }
 
-#[cfg(not(feature = "pjrt"))]
-fn serve(_argv: &[String]) -> anyhow::Result<()> {
-    anyhow::bail!(
-        "the `serve` subcommand runs the PJRT-compiled model; rebuild with \
-         `--features pjrt` (and the real xla crate) to enable it"
-    )
-}
-
-#[cfg(feature = "pjrt")]
-fn serve(argv: &[String]) -> anyhow::Result<()> {
-    let cli = Cli::new("chunk-serve serve", "serve via the AOT-compiled model")
-        .opt("artifacts", "artifacts", "artifact directory")
-        .opt("requests", "12", "number of requests")
-        .opt("tenants", "2", "tenants (distinct system prompts)")
-        .opt("system-tokens", "40", "system prompt tokens per tenant")
-        .opt("completion", "12", "completion tokens per request")
-        .opt("max-batch", "8", "max decode batch")
-        .opt("config", "", "optional TOML config overriding the flags");
-    let args = parse_or_exit(&cli, argv);
-
-    let mut requests = args.get_usize("requests");
-    let mut max_batch = args.get_usize("max-batch");
-    let mut completion = args.get_usize("completion");
-    if !args.get("config").is_empty() {
-        let cfg = Config::load(std::path::Path::new(args.get("config")))
-            .map_err(|e| anyhow::anyhow!(e))?;
-        requests = cfg.usize("serve.requests", requests);
-        max_batch = cfg.usize("serve.max_batch", max_batch);
-        completion = cfg.usize("serve.completion", completion);
-    }
-
-    let model = PjrtModel::load(std::path::Path::new(args.get("artifacts")))?;
-    let chunk_size = model.chunk_size();
-    let max_batch = max_batch.min(model.max_batch());
-    let mut engine = chunk_attention::coordinator::Engine::new(model, chunk_size, max_batch);
-
-    let tenants = args.get_usize("tenants");
-    let sys_tokens = args.get_usize("system-tokens") as u32;
+/// Drive an engine (any runner) through a Poisson offline trace and print
+/// the paper-style throughput/reuse summary.
+fn run_offline_trace<R: ModelRunner>(
+    mut engine: Engine<R>,
+    requests: usize,
+    tenants: usize,
+    sys_tokens: u32,
+    completion: usize,
+) -> anyhow::Result<()> {
     let trace = Trace::poisson(
         &TraceConfig {
             rps: 50.0,
@@ -115,6 +101,183 @@ fn serve(argv: &[String]) -> anyhow::Result<()> {
         100.0 * stats.prefill_tokens_reused as f64
             / (stats.prefill_tokens_computed + stats.prefill_tokens_reused).max(1) as f64
     );
+    Ok(())
+}
+
+fn serve(argv: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("chunk-serve serve", "run the engine over an offline synthetic trace")
+        .opt("artifacts", "artifacts", "PJRT artifact directory (unused with --synthetic)")
+        .opt("requests", "12", "number of requests")
+        .opt("tenants", "2", "tenants (distinct system prompts)")
+        .opt("system-tokens", "40", "system prompt tokens per tenant")
+        .opt("completion", "12", "completion tokens per request")
+        .opt("max-batch", "8", "max decode batch")
+        .opt("heads-total", "16", "synthetic runner: total KV heads (n_layers * heads)")
+        .opt("head-dim", "32", "synthetic runner: head dimension")
+        .opt("chunk", "16", "synthetic runner: KV chunk size (tokens)")
+        .opt("config", "", "optional TOML config overriding the flags")
+        .flag("synthetic", "use the in-process synthetic runner (works on a default build)");
+    let args = parse_or_exit(&cli, argv);
+
+    let mut requests = args.get_usize("requests");
+    let mut max_batch = args.get_usize("max-batch");
+    let mut completion = args.get_usize("completion");
+    if !args.get("config").is_empty() {
+        let cfg = Config::load(std::path::Path::new(args.get("config")))
+            .map_err(|e| anyhow::anyhow!(e))?;
+        requests = cfg.usize("serve.requests", requests);
+        max_batch = cfg.usize("serve.max_batch", max_batch);
+        completion = cfg.usize("serve.completion", completion);
+    }
+    let tenants = args.get_usize("tenants");
+    let sys_tokens = args.get_usize("system-tokens") as u32;
+
+    if args.get_flag("synthetic") {
+        let runner = SyntheticRunner {
+            heads_total: args.get_usize("heads-total"),
+            head_dim: args.get_usize("head-dim"),
+            vocab: 32000,
+        };
+        let engine = Engine::new(runner, args.get_usize("chunk"), max_batch);
+        return run_offline_trace(engine, requests, tenants, sys_tokens, completion);
+    }
+    serve_pjrt(args.get("artifacts"), requests, max_batch, completion, tenants, sys_tokens)
+}
+
+#[cfg(feature = "pjrt")]
+fn serve_pjrt(
+    artifacts: &str,
+    requests: usize,
+    max_batch: usize,
+    completion: usize,
+    tenants: usize,
+    sys_tokens: u32,
+) -> anyhow::Result<()> {
+    let model = PjrtModel::load(std::path::Path::new(artifacts))?;
+    let chunk_size = model.chunk_size();
+    let max_batch = max_batch.min(model.max_batch());
+    let engine = Engine::new(model, chunk_size, max_batch);
+    run_offline_trace(engine, requests, tenants, sys_tokens, completion)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn serve_pjrt(
+    _artifacts: &str,
+    _requests: usize,
+    _max_batch: usize,
+    _completion: usize,
+    _tenants: usize,
+    _sys_tokens: u32,
+) -> anyhow::Result<()> {
+    anyhow::bail!(
+        "the PJRT-compiled model is not in this build; rerun with --synthetic for the \
+         in-process runner, or rebuild with `--features pjrt` (and the real xla crate)"
+    )
+}
+
+fn gateway_cmd(argv: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new(
+        "chunk-serve gateway",
+        "online HTTP serving gateway over the prefix-tree engine (SSE streaming)",
+    )
+    .opt("listen", "127.0.0.1:8080", "bind address (port 0 picks an ephemeral port)")
+    .opt("max-batch", "16", "max decode batch")
+    .opt("queue-cap", "64", "admission queue capacity; submissions beyond it get 429")
+    .opt("chunk", "64", "KV chunk size (tokens)")
+    .opt("heads-total", "16", "synthetic runner: total KV heads")
+    .opt("head-dim", "32", "synthetic runner: head dimension")
+    .opt("max-new-tokens-cap", "4096", "hard cap on a request's completion budget")
+    .opt("decode-interval-us", "0", "pacing between decode steps in microseconds")
+    .opt("retain-chunks", "0", "prefix retention budget in chunks (0 = off)")
+    .flag("synthetic", "use the in-process synthetic runner (the only gateway runner today)");
+    let args = parse_or_exit(&cli, argv);
+
+    // The gateway always runs the synthetic runner for now; the flag is
+    // accepted for symmetry with `serve` and future PJRT support.
+    let _ = args.get_flag("synthetic");
+    let runner = SyntheticRunner {
+        heads_total: args.get_usize("heads-total"),
+        head_dim: args.get_usize("head-dim"),
+        vocab: 32000,
+    };
+    let engine = Engine::new(runner, args.get_usize("chunk"), args.get_usize("max-batch"));
+    let cfg = GatewayConfig {
+        addr: args.get("listen").to_string(),
+        queue_cap: args.get_usize("queue-cap"),
+        max_new_tokens_cap: args.get_usize("max-new-tokens-cap"),
+        decode_interval: Duration::from_micros(args.get_u64("decode-interval-us")),
+        retain_chunks: args.get_usize("retain-chunks"),
+        ..GatewayConfig::default()
+    };
+    let gw = Gateway::start(engine, cfg)?;
+    println!("gateway listening on http://{}", gw.addr());
+    println!(
+        "  POST /v1/generate  JSON {{\"tokens\": [..] | \"text\": \"..\", \"max_new_tokens\": N, \
+         \"shared_tokens\": N, \"tenant\": N}} -> text/event-stream"
+    );
+    println!("  GET  /healthz      liveness probe");
+    println!("  GET  /metrics      Prometheus text exposition");
+    println!("Ctrl-C to stop.");
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn bench_http(argv: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new(
+        "chunk-serve bench-http",
+        "closed-loop multi-tenant load generator against a serving gateway",
+    )
+    .opt("addr", "", "gateway address; empty = spawn an in-process synthetic gateway")
+    .opt("clients", "8", "concurrent closed-loop clients")
+    .opt("requests", "64", "total requests")
+    .opt("tenants", "4", "tenants (distinct shared system prompts)")
+    .opt("system-tokens", "1024", "system prompt tokens per tenant")
+    .opt("query-tokens", "32", "user query tokens per request")
+    .opt("completion", "64", "completion tokens per request")
+    .opt("seed", "7", "workload seed")
+    .opt("max-batch", "16", "spawned gateway: max decode batch")
+    .opt("queue-cap", "64", "spawned gateway: admission queue capacity")
+    .opt("chunk", "64", "spawned gateway: KV chunk size")
+    .opt("decode-interval-us", "200", "spawned gateway: decode pacing (us)");
+    let args = parse_or_exit(&cli, argv);
+
+    let mut spawned = None;
+    let addr = if args.get("addr").is_empty() {
+        let runner = SyntheticRunner { heads_total: 16, head_dim: 32, vocab: 32000 };
+        let engine = Engine::new(runner, args.get_usize("chunk"), args.get_usize("max-batch"));
+        let gw = Gateway::start(
+            engine,
+            GatewayConfig {
+                addr: "127.0.0.1:0".to_string(),
+                queue_cap: args.get_usize("queue-cap"),
+                decode_interval: Duration::from_micros(args.get_u64("decode-interval-us")),
+                ..GatewayConfig::default()
+            },
+        )?;
+        let addr = gw.addr().to_string();
+        println!("spawned in-process gateway on {addr}");
+        spawned = Some(gw);
+        addr
+    } else {
+        args.get("addr").to_string()
+    };
+    let report = run_bench(&BenchConfig {
+        addr,
+        clients: args.get_usize("clients"),
+        requests: args.get_usize("requests"),
+        tenants: args.get_usize("tenants"),
+        system_tokens: args.get_usize("system-tokens"),
+        query_tokens: args.get_usize("query-tokens"),
+        max_new_tokens: args.get_usize("completion"),
+        seed: args.get_u64("seed"),
+        timeout: Duration::from_secs(120),
+    })?;
+    println!("{}", report.render());
+    if let Some(gw) = spawned {
+        gw.shutdown()?;
+    }
+    anyhow::ensure!(report.completed > 0, "no request completed — is the gateway reachable?");
     Ok(())
 }
 

@@ -3,15 +3,22 @@
 
 use super::recorder::MetricsRecorder;
 
+/// Append one gauge (HELP + TYPE + sample) to an exposition document.
+/// Public so other exporters (the HTTP gateway's `/metrics` endpoint) can
+/// extend [`render_exposition`]'s output with their own series.
+pub fn push_gauge(out: &mut String, prefix: &str, name: &str, help: &str, value: f64) {
+    out.push_str(&format!(
+        "# HELP {prefix}_{name} {help}\n# TYPE {prefix}_{name} gauge\n{prefix}_{name} {value}\n"
+    ));
+}
+
 /// Render the exposition document (text format 0.0.4 subset).
 pub fn render_exposition(m: &MetricsRecorder, prefix: &str) -> String {
     let mut out = String::new();
     let mut gauge = |name: &str, help: &str, value: f64| {
-        out.push_str(&format!(
-            "# HELP {prefix}_{name} {help}\n# TYPE {prefix}_{name} gauge\n{prefix}_{name} {value}\n"
-        ));
+        push_gauge(&mut out, prefix, name, help, value);
     };
-    gauge("requests_total", "requests completed", m.requests().len() as f64);
+    gauge("requests_total", "requests completed", m.requests_total as f64);
     gauge("decode_tokens_total", "completion tokens decoded", m.decode_tokens as f64);
     gauge(
         "normalized_latency_ms_mean",
@@ -50,6 +57,21 @@ pub fn render_exposition(m: &MetricsRecorder, prefix: &str) -> String {
         "context_cache_hit_rate",
         "fraction of decode steps with an unchanged cached context",
         m.context_hit_rate(),
+    );
+    gauge(
+        "prefill_computed_tokens_total",
+        "prompt tokens whose KV was computed at prefill",
+        m.prefill_computed as f64,
+    );
+    gauge(
+        "prefill_reused_tokens_total",
+        "prompt tokens served from the prefix tree without recomputation",
+        m.prefill_reused as f64,
+    );
+    gauge(
+        "requests_cancelled_total",
+        "requests cancelled mid-flight (disconnect or abort)",
+        m.cancelled as f64,
     );
     out
 }

@@ -79,6 +79,11 @@ impl ThroughputWindow {
 #[derive(Debug)]
 pub struct MetricsRecorder {
     records: Vec<RequestRecord>,
+    /// Cap on retained `records`; `None` keeps all (offline runs, tests).
+    /// The gateway bounds this so serving memory is O(window), not
+    /// O(total requests); `requests_total` stays a lifetime counter.
+    record_limit: Option<usize>,
+    pub requests_total: u64,
     pub normalized_latency: Summary,
     pub ttft: Summary,
     pub queue_delay: Summary,
@@ -92,6 +97,9 @@ pub struct MetricsRecorder {
     /// Decode steps that reused the engine's cached context untouched —
     /// the win of incremental TreeContext caching, observable in e2e runs.
     pub context_cache_hits: u64,
+    /// Requests cancelled mid-flight (client disconnect / explicit abort);
+    /// their private chunks were returned to the tree pool.
+    pub cancelled: u64,
 }
 
 impl Default for MetricsRecorder {
@@ -104,6 +112,8 @@ impl MetricsRecorder {
     pub fn new() -> Self {
         MetricsRecorder {
             records: Vec::new(),
+            record_limit: None,
+            requests_total: 0,
             normalized_latency: Summary::new(),
             ttft: Summary::new(),
             queue_delay: Summary::new(),
@@ -113,6 +123,7 @@ impl MetricsRecorder {
             prefill_reused: 0,
             context_rebuilds: 0,
             context_cache_hits: 0,
+            cancelled: 0,
         }
     }
 
@@ -126,13 +137,32 @@ impl MetricsRecorder {
         }
     }
 
+    /// Bound retained per-request state: the record list and the latency
+    /// summaries' percentile buffers (their streaming moments stay exact).
+    /// Counters (`requests_total`, prefill/decode tokens) are lifetime
+    /// either way.
+    pub fn set_record_limit(&mut self, limit: Option<usize>) {
+        self.record_limit = limit;
+        self.normalized_latency.set_sample_limit(limit);
+        self.ttft.set_sample_limit(limit);
+        self.queue_delay.set_sample_limit(limit);
+    }
+
     pub fn record_request(&mut self, r: RequestRecord) {
+        self.requests_total += 1;
         self.normalized_latency.add(r.normalized_ms_per_tok());
         self.ttft.add(r.ttft_s() * 1e3);
         self.queue_delay.add(r.queue_delay_s() * 1e3);
         self.prefill_computed += (r.prompt_tokens - r.reused_prompt_tokens) as u64;
         self.prefill_reused += r.reused_prompt_tokens as u64;
         self.records.push(r);
+        if let Some(limit) = self.record_limit {
+            // Amortized O(1): let the buffer reach 2x before trimming.
+            if self.records.len() >= 2 * limit.max(1) {
+                let excess = self.records.len() - limit.max(1);
+                self.records.drain(..excess);
+            }
+        }
     }
 
     pub fn record_decode_step(&mut self, latency_us: f64, batch: usize) {
@@ -190,6 +220,21 @@ mod tests {
         assert_eq!(m.decode_tokens, 4);
         assert!((m.prefix_hit_rate() - 60.0 / 200.0).abs() < 1e-12);
         assert!((m.normalized_latency.mean() - 150.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn record_limit_bounds_retention_not_counters() {
+        let mut m = MetricsRecorder::new();
+        m.set_record_limit(Some(3));
+        for i in 0..100 {
+            m.record_request(rec(i as f64, i as f64 + 1.0, 10, 5));
+        }
+        assert!(m.requests().len() <= 6, "window bounded at 2x the limit");
+        assert_eq!(m.requests_total, 100, "lifetime counter unaffected");
+        assert_eq!(m.prefill_reused, 500, "cumulative token counters unaffected");
+        assert!(m.requests()[0].arrival_s >= 90.0, "oldest dropped first");
+        assert_eq!(m.normalized_latency.count(), 100, "summary moments stay lifetime");
+        assert!(m.normalized_latency.samples().len() <= 6, "percentile buffer bounded");
     }
 
     #[test]

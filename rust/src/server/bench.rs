@@ -1,0 +1,217 @@
+//! Closed-loop HTTP load generator (`chunk-serve bench-http`).
+//!
+//! Replays a multi-tenant workload from [`Corpus`] against a running
+//! gateway over real sockets: `clients` worker threads each hold one
+//! request in flight (closed loop), drawing the next request from a shared
+//! counter until `requests` have been issued. Reports client-observed
+//! throughput, TTFT, and normalized latency, plus the server-side prefix
+//! hit rate scraped from `/metrics` — the paper's §4.2 serving metrics
+//! measured end to end over the wire.
+
+use super::client::{self, StreamEvent};
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use crate::util::stats::Summary;
+use crate::workload::{Corpus, Tokenizer};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Gateway address, e.g. `127.0.0.1:8080`.
+    pub addr: String,
+    /// Concurrent closed-loop workers.
+    pub clients: usize,
+    /// Total requests to issue.
+    pub requests: usize,
+    /// Tenants (distinct shared system prompts).
+    pub tenants: usize,
+    /// Target system-prompt tokens per tenant.
+    pub system_tokens: usize,
+    /// Per-request user-query tokens appended after the system prompt.
+    pub query_tokens: usize,
+    /// Completion budget per request.
+    pub max_new_tokens: usize,
+    pub seed: u64,
+    /// Per-connection socket timeout.
+    pub timeout: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            addr: "127.0.0.1:8080".to_string(),
+            clients: 8,
+            requests: 64,
+            tenants: 4,
+            system_tokens: 1024,
+            query_tokens: 32,
+            max_new_tokens: 64,
+            seed: 7,
+            timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// Aggregated client-side results of one bench run.
+#[derive(Debug)]
+pub struct BenchReport {
+    pub completed: usize,
+    /// Requests answered 429 by admission control (not retried).
+    pub rejected: usize,
+    pub errors: usize,
+    pub wall_s: f64,
+    pub completion_tokens: u64,
+    /// Client-observed time to first token (ms).
+    pub ttft_ms: Summary,
+    /// Client-observed end-to-end latency per completion token (ms/tok).
+    pub normalized_latency_ms: Summary,
+    /// Server-side fraction of prompt tokens served from the prefix tree,
+    /// scraped from `/metrics` after the run (NaN if unavailable).
+    pub prefix_hit_rate: f64,
+}
+
+impl BenchReport {
+    /// Completion tokens per wall-clock second across all clients.
+    pub fn decode_tps(&self) -> f64 {
+        self.completion_tokens as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// Human-readable multi-line summary for the CLI.
+    pub fn render(&self) -> String {
+        format!(
+            "requests           {} completed, {} rejected (429), {} errors\n\
+             wall time          {:.2}s ({:.1} completion tok/s)\n\
+             ttft               mean {:.1} ms, p99 {:.1} ms\n\
+             normalized latency mean {:.2} ms/tok, p99 {:.2} ms/tok\n\
+             prefix hit rate    {:.1}% (server-side, from /metrics)",
+            self.completed,
+            self.rejected,
+            self.errors,
+            self.wall_s,
+            self.decode_tps(),
+            self.ttft_ms.mean(),
+            self.ttft_ms.percentile(99.0),
+            self.normalized_latency_ms.mean(),
+            self.normalized_latency_ms.percentile(99.0),
+            100.0 * self.prefix_hit_rate,
+        )
+    }
+}
+
+/// Run the closed-loop bench against a live gateway.
+pub fn run_bench(cfg: &BenchConfig) -> anyhow::Result<BenchReport> {
+    anyhow::ensure!(cfg.clients > 0 && cfg.requests > 0, "need at least one client and request");
+    let tokenizer = Arc::new(Tokenizer::default_english());
+    let corpus =
+        Arc::new(Corpus::synthesize(&tokenizer, cfg.tenants.max(1), cfg.system_tokens, cfg.seed));
+    let next = Arc::new(AtomicUsize::new(0));
+    let completed = Arc::new(AtomicUsize::new(0));
+    let rejected = Arc::new(AtomicUsize::new(0));
+    let errors = Arc::new(AtomicUsize::new(0));
+    let tokens_total = Arc::new(AtomicU64::new(0));
+    let ttft = Arc::new(Mutex::new(Summary::new()));
+    let norm = Arc::new(Mutex::new(Summary::new()));
+
+    let t0 = Instant::now();
+    let mut workers = Vec::with_capacity(cfg.clients);
+    for worker in 0..cfg.clients {
+        let cfg = cfg.clone();
+        let tokenizer = tokenizer.clone();
+        let corpus = corpus.clone();
+        let next = next.clone();
+        let completed = completed.clone();
+        let rejected = rejected.clone();
+        let errors = errors.clone();
+        let tokens_total = tokens_total.clone();
+        let ttft = ttft.clone();
+        let norm = norm.clone();
+        workers.push(std::thread::spawn(move || {
+            let mut rng = Pcg64::new(cfg.seed, worker as u64 + 1);
+            loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= cfg.requests {
+                    break;
+                }
+                let tenant = i % cfg.tenants.max(1);
+                let prompt =
+                    corpus.make_request_tokens(&tokenizer, tenant, cfg.query_tokens, &mut rng);
+                let shared = corpus.tenants[tenant].system_tokens.len().min(prompt.len());
+                let mut body = Json::obj();
+                body.set(
+                    "tokens",
+                    Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect()),
+                );
+                body.set("shared_tokens", shared)
+                    .set("tenant", tenant)
+                    .set("max_new_tokens", cfg.max_new_tokens);
+                let sent = Instant::now();
+                let mut stream = match client::generate(&cfg.addr, &body, cfg.timeout) {
+                    Ok(s) => s,
+                    Err(_) => {
+                        errors.fetch_add(1, Ordering::SeqCst);
+                        continue;
+                    }
+                };
+                if stream.status() == 429 {
+                    rejected.fetch_add(1, Ordering::SeqCst);
+                    continue;
+                }
+                if stream.status() != 200 {
+                    errors.fetch_add(1, Ordering::SeqCst);
+                    continue;
+                }
+                let mut first_token_s: Option<f64> = None;
+                let mut got = 0u64;
+                let mut done = false;
+                loop {
+                    match stream.next_event() {
+                        Ok(Some(StreamEvent::Token { .. })) => {
+                            if first_token_s.is_none() {
+                                first_token_s = Some(sent.elapsed().as_secs_f64());
+                            }
+                            got += 1;
+                        }
+                        Ok(Some(StreamEvent::Done { .. })) => {
+                            done = true;
+                            break;
+                        }
+                        Ok(None) | Err(_) => break,
+                    }
+                }
+                if done && got > 0 {
+                    completed.fetch_add(1, Ordering::SeqCst);
+                    tokens_total.fetch_add(got, Ordering::SeqCst);
+                    let e2e = sent.elapsed().as_secs_f64();
+                    ttft.lock().unwrap().add(first_token_s.unwrap_or(e2e) * 1e3);
+                    norm.lock().unwrap().add(e2e * 1e3 / got as f64);
+                } else {
+                    errors.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+        }));
+    }
+    for w in workers {
+        w.join().map_err(|_| anyhow::anyhow!("bench worker panicked"))?;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let prefix_hit_rate = client::get(&cfg.addr, "/metrics", cfg.timeout)
+        .ok()
+        .and_then(|resp| client::gauge_value(&resp.body, "prefix_hit_rate"))
+        .unwrap_or(f64::NAN);
+
+    let ttft_ms = ttft.lock().unwrap().clone();
+    let normalized_latency_ms = norm.lock().unwrap().clone();
+    Ok(BenchReport {
+        completed: completed.load(Ordering::SeqCst),
+        rejected: rejected.load(Ordering::SeqCst),
+        errors: errors.load(Ordering::SeqCst),
+        wall_s,
+        completion_tokens: tokens_total.load(Ordering::SeqCst),
+        ttft_ms,
+        normalized_latency_ms,
+        prefix_hit_rate,
+    })
+}

@@ -1,0 +1,167 @@
+//! Minimal blocking HTTP client for the gateway's endpoints.
+//!
+//! Used by the `bench-http` load generator and the socket-level
+//! integration tests, so the gateway's wire format is exercised from both
+//! ends without any external HTTP dependency.
+
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// A complete (non-streaming) HTTP response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub body: String,
+}
+
+fn connect(addr: &str, timeout: Duration) -> anyhow::Result<TcpStream> {
+    let sock = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("address {addr:?} resolved to nothing"))?;
+    let stream = TcpStream::connect_timeout(&sock, timeout)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let _ = stream.set_nodelay(true);
+    Ok(stream)
+}
+
+fn read_head<R: BufRead>(reader: &mut R) -> anyhow::Result<u16> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        anyhow::bail!("server closed the connection before responding");
+    }
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .ok_or_else(|| anyhow::anyhow!("malformed status line {line:?}"))?
+        .parse()?;
+    // Consume headers up to the blank line; `Connection: close` framing
+    // means the body simply runs to EOF.
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            anyhow::bail!("EOF inside response headers");
+        }
+        if h.trim_end().is_empty() {
+            return Ok(status);
+        }
+    }
+}
+
+/// Blocking GET returning the whole body (used for `/healthz`, `/metrics`).
+pub fn get(addr: &str, path: &str, timeout: Duration) -> anyhow::Result<Response> {
+    let mut stream = connect(addr, timeout)?;
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let status = read_head(&mut reader)?;
+    let mut body = String::new();
+    reader.read_to_string(&mut body)?;
+    Ok(Response { status, body })
+}
+
+/// Extract a gauge's value from a Prometheus exposition document by series
+/// name suffix (prefix-agnostic).
+pub fn gauge_value(exposition: &str, name: &str) -> Option<f64> {
+    let suffix = format!("_{name}");
+    for line in exposition.lines() {
+        if line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let (Some(series), Some(value)) = (parts.next(), parts.next()) else { continue };
+        if series.ends_with(&suffix) {
+            return value.parse().ok();
+        }
+    }
+    None
+}
+
+/// One event of a `/v1/generate` SSE stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamEvent {
+    Token { index: usize, token: u32 },
+    Done { completion_tokens: usize },
+}
+
+/// An open `/v1/generate` call: status plus, on 200, the live SSE stream.
+pub struct GenerateStream {
+    status: u16,
+    reader: Option<BufReader<TcpStream>>,
+    /// Response body for non-200 statuses (429 backpressure, 400, ...).
+    pub error_body: String,
+}
+
+impl GenerateStream {
+    pub fn status(&self) -> u16 {
+        self.status
+    }
+
+    /// Next SSE event; `None` once the server closes the stream (or for
+    /// non-200 responses).
+    pub fn next_event(&mut self) -> anyhow::Result<Option<StreamEvent>> {
+        let Some(reader) = self.reader.as_mut() else {
+            return Ok(None);
+        };
+        loop {
+            let mut line = String::new();
+            if reader.read_line(&mut line)? == 0 {
+                return Ok(None);
+            }
+            let trimmed = line.trim_end();
+            let Some(data) = trimmed.strip_prefix("data: ") else { continue };
+            let j = Json::parse(data).map_err(|e| anyhow::anyhow!("bad SSE payload: {e}"))?;
+            if j.get("done").and_then(|d| d.as_bool()).unwrap_or(false) {
+                let n =
+                    j.get("completion_tokens").and_then(|v| v.as_f64()).unwrap_or(0.0) as usize;
+                return Ok(Some(StreamEvent::Done { completion_tokens: n }));
+            }
+            let index = j.get("index").and_then(|v| v.as_f64()).unwrap_or(0.0) as usize;
+            let token = j.get("token").and_then(|v| v.as_f64()).unwrap_or(0.0) as u32;
+            return Ok(Some(StreamEvent::Token { index, token }));
+        }
+    }
+
+    /// Drop the connection without reading the remaining tokens —
+    /// exercises server-side disconnect cancellation.
+    pub fn abandon(self) {}
+}
+
+/// POST `/v1/generate`; returns once the response head arrived. For a 200
+/// the stream is live: pull tokens with [`GenerateStream::next_event`].
+pub fn generate(addr: &str, body: &Json, timeout: Duration) -> anyhow::Result<GenerateStream> {
+    let mut stream = connect(addr, timeout)?;
+    let payload = body.to_string();
+    write!(
+        stream,
+        "POST /v1/generate HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        payload.len()
+    )?;
+    stream.write_all(payload.as_bytes())?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let status = read_head(&mut reader)?;
+    if status != 200 {
+        let mut error_body = String::new();
+        let _ = reader.read_to_string(&mut error_body);
+        return Ok(GenerateStream { status, reader: None, error_body });
+    }
+    Ok(GenerateStream { status, reader: Some(reader), error_body: String::new() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gauge_value_parses_exposition() {
+        let doc = "# HELP g_x help\n# TYPE g_x gauge\ng_x 3.5\ng_queue_depth 7\n";
+        assert_eq!(gauge_value(doc, "x"), Some(3.5));
+        assert_eq!(gauge_value(doc, "queue_depth"), Some(7.0));
+        assert_eq!(gauge_value(doc, "missing"), None);
+    }
+}

@@ -1,0 +1,596 @@
+//! The serving gateway: an HTTP/1.1 + SSE frontend over the continuous-
+//! batching [`Engine`].
+//!
+//! Threading model (see DESIGN.md for the full note):
+//!
+//! - one **accept thread** owns the `TcpListener` and spawns a short-lived
+//!   **handler thread** per connection (`Connection: close` discipline);
+//! - one **stepper thread** owns the `Engine` exclusively and pumps
+//!   [`Engine::step`] in a loop — the engine is never shared or locked;
+//! - handler threads talk to the stepper over an mpsc **command channel**
+//!   (`Submit` / `Cancel` / `Scrape`), and each submitted request carries
+//!   its own **event channel** on which the stepper streams per-token
+//!   events back.
+//!
+//! Backpressure is admission control in the scheduler: a `Submit` beyond
+//! the queue cap is answered with a `Rejected` event, which the handler
+//! maps to HTTP 429. A client disconnect surfaces as a failed SSE write in
+//! the handler, which sends `Cancel`; the stepper then removes the
+//! sequence mid-decode, returning its private chunks to the tree pool.
+//! Graceful shutdown stops the accept loop, rejects new submissions, and
+//! drains active sequences before the stepper exits.
+
+use super::http;
+use crate::coordinator::{Engine, ModelRunner};
+use crate::metrics::{push_gauge, render_exposition};
+use crate::util::json::Json;
+use crate::workload::{Request, Tokenizer};
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Duration;
+
+/// Gateway tuning knobs. The engine itself (runner, chunk size, max batch)
+/// is constructed by the caller and handed to [`Gateway::start`].
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// Bind address; port 0 picks an ephemeral port (tests).
+    pub addr: String,
+    /// Admission-queue capacity; submissions beyond it get HTTP 429.
+    pub queue_cap: usize,
+    /// Hard cap on a request's `max_new_tokens`.
+    pub max_new_tokens_cap: usize,
+    /// Sleep between decode iterations. Zero = step at full speed; tests
+    /// and demos use a small pacing interval to emulate model latency so
+    /// streaming/cancellation are observable.
+    pub decode_interval: Duration,
+    /// Prefix for every `/metrics` series.
+    pub metrics_prefix: String,
+    /// Prefix-retention chunk budget; 0 disables retention.
+    pub retain_chunks: usize,
+    /// Per-connection socket read/write timeout.
+    pub io_timeout: Duration,
+    /// Retained per-request history window (scheduler finished entries +
+    /// metrics records); keeps a long-running server's memory O(window)
+    /// instead of O(total requests served).
+    pub history_limit: usize,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            addr: "127.0.0.1:0".to_string(),
+            queue_cap: 64,
+            max_new_tokens_cap: 4096,
+            decode_interval: Duration::ZERO,
+            metrics_prefix: "chunk_gateway".to_string(),
+            retain_chunks: 0,
+            io_timeout: Duration::from_secs(30),
+            history_limit: 4096,
+        }
+    }
+}
+
+/// Per-token events the stepper streams back to a request's handler.
+#[derive(Debug, Clone)]
+pub enum TokenEvent {
+    /// Admission control refused the request. `draining` distinguishes a
+    /// shutting-down gateway (HTTP 503) from a full queue (HTTP 429).
+    Rejected { queued: usize, draining: bool },
+    /// One freshly decoded completion token.
+    Token { index: usize, token: u32 },
+    /// The sequence finished; the stream is complete.
+    Done { completion_tokens: usize },
+}
+
+/// Commands handler threads send to the stepper thread.
+enum EngineCmd {
+    Submit { request: Request, events: mpsc::Sender<TokenEvent> },
+    Cancel { id: u64 },
+    Scrape { reply: mpsc::Sender<String> },
+    Drain,
+}
+
+/// A running gateway; dropping it does NOT stop the threads — call
+/// [`Gateway::shutdown`] for a clean exit.
+pub struct Gateway {
+    addr: SocketAddr,
+    cmd_tx: mpsc::Sender<EngineCmd>,
+    stop: Arc<AtomicBool>,
+    accept_thread: thread::JoinHandle<()>,
+    stepper_thread: thread::JoinHandle<()>,
+}
+
+impl Gateway {
+    /// Bind, then move `engine` onto the stepper thread and start serving.
+    pub fn start<R: ModelRunner + Send + 'static>(
+        mut engine: Engine<R>,
+        cfg: GatewayConfig,
+    ) -> anyhow::Result<Gateway> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        engine.set_queue_limit(Some(cfg.queue_cap));
+        engine.set_history_limit(cfg.history_limit);
+        if cfg.retain_chunks > 0 {
+            engine.enable_prefix_retention(cfg.retain_chunks);
+        }
+        let (cmd_tx, cmd_rx) = mpsc::channel::<EngineCmd>();
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let stepper_cfg = cfg.clone();
+        let stepper_thread = thread::Builder::new()
+            .name("gateway-stepper".to_string())
+            .spawn(move || stepper_loop(engine, cmd_rx, stepper_cfg))?;
+
+        // Built up front so the first connection doesn't pay BPE training.
+        let tokenizer = Arc::new(Tokenizer::default_english());
+        let accept_tx = cmd_tx.clone();
+        let accept_stop = stop.clone();
+        let accept_cfg = cfg.clone();
+        let accept_thread = thread::Builder::new()
+            .name("gateway-accept".to_string())
+            .spawn(move || accept_loop(listener, accept_tx, accept_stop, accept_cfg, tokenizer))?;
+
+        log::info!("gateway listening on {addr}");
+        Ok(Gateway { addr, cmd_tx, stop, accept_thread, stepper_thread })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Graceful shutdown: stop accepting connections, reject further
+    /// submissions, drain active sequences, and join both service threads.
+    pub fn shutdown(self) -> anyhow::Result<()> {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.cmd_tx.send(EngineCmd::Drain);
+        drop(self.cmd_tx);
+        self.accept_thread
+            .join()
+            .map_err(|_| anyhow::anyhow!("gateway accept thread panicked"))?;
+        self.stepper_thread
+            .join()
+            .map_err(|_| anyhow::anyhow!("gateway stepper thread panicked"))?;
+        Ok(())
+    }
+}
+
+/// Stream bookkeeping the stepper keeps per live request.
+struct StreamState {
+    events: mpsc::Sender<TokenEvent>,
+    /// Completion tokens already pushed to the event channel.
+    sent: usize,
+}
+
+fn stepper_loop<R: ModelRunner>(
+    mut engine: Engine<R>,
+    cmd_rx: mpsc::Receiver<EngineCmd>,
+    cfg: GatewayConfig,
+) {
+    let mut streams: BTreeMap<u64, StreamState> = BTreeMap::new();
+    let mut draining = false;
+    loop {
+        // Pull every pending command; commands are cheap, steps are not.
+        let mut disconnected = false;
+        loop {
+            match cmd_rx.try_recv() {
+                Ok(cmd) => handle_cmd(cmd, &mut engine, &mut streams, &mut draining, &cfg),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        if engine.is_idle() {
+            if draining || disconnected {
+                break;
+            }
+            // Park until work arrives, with a bounded wait so a Drain that
+            // raced past the try_recv loop is still noticed promptly.
+            match cmd_rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(cmd) => handle_cmd(cmd, &mut engine, &mut streams, &mut draining, &cfg),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+            continue;
+        }
+        let finished = match engine.step() {
+            Ok(f) => f,
+            Err(e) => {
+                log::error!("engine step failed, stopping stepper: {e}");
+                break;
+            }
+        };
+        // Stream freshly decoded tokens. A send error means the handler is
+        // gone without managing to send Cancel (it died); reap eagerly so
+        // the sequence stops burning decode slots.
+        let mut dead: Vec<u64> = Vec::new();
+        for (&id, st) in streams.iter_mut() {
+            let Some(completion) = engine.completion_of(id) else { continue };
+            let total = completion.len();
+            while st.sent < total {
+                let token = completion[st.sent];
+                if st.events.send(TokenEvent::Token { index: st.sent, token }).is_err() {
+                    dead.push(id);
+                    break;
+                }
+                st.sent += 1;
+            }
+        }
+        for id in dead {
+            streams.remove(&id);
+            engine.cancel(id);
+            engine.release(id);
+        }
+        for f in finished {
+            let id = f.request.id;
+            let n = engine.completion_of(id).map(|c| c.len()).unwrap_or(0);
+            if let Some(st) = streams.remove(&id) {
+                let _ = st.events.send(TokenEvent::Done { completion_tokens: n });
+            }
+            engine.release(id);
+        }
+        if cfg.decode_interval > Duration::ZERO {
+            thread::sleep(cfg.decode_interval);
+        }
+    }
+    // Exiting drops every event sender; blocked handlers observe the
+    // disconnect and fail their streams instead of hanging.
+}
+
+fn handle_cmd<R: ModelRunner>(
+    cmd: EngineCmd,
+    engine: &mut Engine<R>,
+    streams: &mut BTreeMap<u64, StreamState>,
+    draining: &mut bool,
+    cfg: &GatewayConfig,
+) {
+    match cmd {
+        EngineCmd::Submit { mut request, events } => {
+            if *draining {
+                let queued = engine.scheduler().queued();
+                let _ = events.send(TokenEvent::Rejected { queued, draining: true });
+                return;
+            }
+            request.arrival_s = engine.clock();
+            let id = request.id;
+            if engine.try_submit(request) {
+                streams.insert(id, StreamState { events, sent: 0 });
+            } else {
+                let queued = engine.scheduler().queued();
+                let _ = events.send(TokenEvent::Rejected { queued, draining: false });
+            }
+        }
+        EngineCmd::Cancel { id } => {
+            streams.remove(&id);
+            engine.cancel(id);
+            engine.release(id);
+        }
+        EngineCmd::Scrape { reply } => {
+            let _ = reply.send(render_metrics(engine, streams.len(), &cfg.metrics_prefix));
+        }
+        EngineCmd::Drain => *draining = true,
+    }
+}
+
+/// The `/metrics` document: the engine's request/step series plus gateway
+/// liveness gauges (queue depth, admission rejections, chunk occupancy).
+fn render_metrics<R: ModelRunner>(engine: &Engine<R>, live_streams: usize, prefix: &str) -> String {
+    let mut out = render_exposition(engine.metrics(), prefix);
+    let sched = engine.scheduler();
+    push_gauge(&mut out, prefix, "queue_depth", "requests waiting for admission", sched.queued() as f64);
+    push_gauge(
+        &mut out,
+        prefix,
+        "active_sequences",
+        "sequences in the decode batch",
+        sched.batch_size() as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "admission_rejections_total",
+        "requests rejected by admission control (HTTP 429)",
+        sched.admission_rejections() as f64,
+    );
+    push_gauge(&mut out, prefix, "live_streams", "connected SSE token streams", live_streams as f64);
+    push_gauge(
+        &mut out,
+        prefix,
+        "chunks_in_use",
+        "KV chunks currently referenced by live sequences or pins",
+        engine.tree().pool().in_use() as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "chunks_allocated",
+        "KV chunks ever allocated by the pool",
+        engine.tree().pool().allocated() as f64,
+    );
+    out
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    cmd_tx: mpsc::Sender<EngineCmd>,
+    stop: Arc<AtomicBool>,
+    cfg: GatewayConfig,
+    tokenizer: Arc<Tokenizer>,
+) {
+    // Request ids are gateway-assigned, monotonically increasing, and well
+    // below the retainer's pin range.
+    let next_id = Arc::new(AtomicU64::new(0));
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        let tx = cmd_tx.clone();
+        let ids = next_id.clone();
+        let tok = tokenizer.clone();
+        let conn_cfg = cfg.clone();
+        let spawned = thread::Builder::new().name("gateway-conn".to_string()).spawn(move || {
+            if let Err(e) = handle_connection(stream, tx, ids, tok, &conn_cfg) {
+                log::debug!("connection handler: {e}");
+            }
+        });
+        if let Err(e) = spawned {
+            log::warn!("failed to spawn connection handler: {e}");
+        }
+    }
+}
+
+fn err_json(msg: &str) -> Json {
+    let mut j = Json::obj();
+    j.set("error", msg);
+    j
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    cmd_tx: mpsc::Sender<EngineCmd>,
+    ids: Arc<AtomicU64>,
+    tokenizer: Arc<Tokenizer>,
+    cfg: &GatewayConfig,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(cfg.io_timeout))?;
+    stream.set_write_timeout(Some(cfg.io_timeout))?;
+    let _ = stream.set_nodelay(true);
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let Some(req) = http::read_request(&mut reader)? else {
+        return Ok(());
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let mut j = Json::obj();
+            j.set("status", "ok");
+            http::write_json(&mut writer, 200, &j)
+        }
+        ("GET", "/metrics") => {
+            let (reply_tx, reply_rx) = mpsc::channel();
+            if cmd_tx.send(EngineCmd::Scrape { reply: reply_tx }).is_err() {
+                return http::write_json(&mut writer, 503, &err_json("gateway is shutting down"));
+            }
+            match reply_rx.recv_timeout(Duration::from_secs(10)) {
+                Ok(text) => {
+                    http::write_response(&mut writer, 200, "text/plain; version=0.0.4", text.as_bytes())
+                }
+                Err(_) => http::write_json(&mut writer, 503, &err_json("metrics unavailable")),
+            }
+        }
+        ("POST", "/v1/generate") => handle_generate(&req, writer, cmd_tx, ids, &tokenizer, cfg),
+        ("GET" | "POST", _) => http::write_json(&mut writer, 404, &err_json("not found")),
+        _ => http::write_json(&mut writer, 405, &err_json("method not allowed")),
+    }
+}
+
+/// Parsed `/v1/generate` body.
+struct GenerateParams {
+    tokens: Vec<u32>,
+    tenant: usize,
+    shared_tokens: usize,
+    max_new_tokens: usize,
+}
+
+fn parse_generate(
+    req: &http::HttpRequest,
+    tokenizer: &Tokenizer,
+    cfg: &GatewayConfig,
+) -> Result<GenerateParams, String> {
+    let body = req.body_utf8()?;
+    let j = Json::parse(body).map_err(|e| format!("invalid JSON body: {e}"))?;
+    let mut tokens: Vec<u32> = Vec::new();
+    if let Some(arr) = j.get("tokens").and_then(|t| t.as_arr()) {
+        tokens.reserve(arr.len());
+        for x in arr {
+            let f = x.as_f64().ok_or_else(|| "\"tokens\" must be an array of numbers".to_string())?;
+            if !(0.0..=u32::MAX as f64).contains(&f) {
+                return Err(format!("token id {f} out of range"));
+            }
+            tokens.push(f as u32);
+        }
+    } else if let Some(text) = j.get("text").and_then(|t| t.as_str()) {
+        tokens = tokenizer.encode(text);
+    }
+    if tokens.is_empty() {
+        return Err("request needs a non-empty \"tokens\" array or a \"text\" string".to_string());
+    }
+    let num = |key: &str, default: usize| {
+        j.get(key).and_then(|v| v.as_f64()).map(|f| f.max(0.0) as usize).unwrap_or(default)
+    };
+    Ok(GenerateParams {
+        shared_tokens: num("shared_tokens", 0).min(tokens.len()),
+        tenant: num("tenant", 0),
+        // `.max(1)` on the cap guards a `--max-new-tokens-cap 0` misconfig:
+        // clamp(1, 0) would panic the handler thread.
+        max_new_tokens: num("max_new_tokens", 16).clamp(1, cfg.max_new_tokens_cap.max(1)),
+        tokens,
+    })
+}
+
+/// Non-blocking liveness probe for a connection we are only writing to:
+/// after the request is consumed a well-behaved client sends nothing, so a
+/// successful 0-byte peek (orderly FIN) or a hard error means it is gone;
+/// `WouldBlock` means it is still there.
+fn client_gone(stream: &TcpStream) -> bool {
+    let mut probe = [0u8; 1];
+    if stream.set_nonblocking(true).is_err() {
+        return true;
+    }
+    let gone = match stream.peek(&mut probe) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    };
+    let _ = stream.set_nonblocking(false);
+    gone
+}
+
+fn handle_generate(
+    req: &http::HttpRequest,
+    mut writer: TcpStream,
+    cmd_tx: mpsc::Sender<EngineCmd>,
+    ids: Arc<AtomicU64>,
+    tokenizer: &Tokenizer,
+    cfg: &GatewayConfig,
+) -> std::io::Result<()> {
+    let params = match parse_generate(req, tokenizer, cfg) {
+        Ok(p) => p,
+        Err(msg) => return http::write_json(&mut writer, 400, &err_json(&msg)),
+    };
+    let id = ids.fetch_add(1, Ordering::SeqCst);
+    let request = Request {
+        id,
+        arrival_s: 0.0, // stamped with the engine clock at submit
+        tenant: params.tenant,
+        prompt: params.tokens,
+        shared_tokens: params.shared_tokens,
+        max_new_tokens: params.max_new_tokens,
+    };
+    let (ev_tx, ev_rx) = mpsc::channel();
+    if cmd_tx.send(EngineCmd::Submit { request, events: ev_tx }).is_err() {
+        return http::write_json(&mut writer, 503, &err_json("gateway is shutting down"));
+    }
+    // The first event decides the HTTP status: Rejected -> 429/503 before
+    // any SSE bytes; anything else starts the stream. A queued request may
+    // legitimately wait here until a batch slot frees up, so poll the
+    // socket for liveness while waiting — a client that gave up while
+    // queued must not hold its queue slot (or later burn prefill work).
+    let first = loop {
+        match ev_rx.recv_timeout(Duration::from_millis(250)) {
+            Ok(ev) => break ev,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                return http::write_json(&mut writer, 500, &err_json("engine unavailable"));
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if client_gone(&writer) {
+                    let _ = cmd_tx.send(EngineCmd::Cancel { id });
+                    return Ok(());
+                }
+            }
+        }
+    };
+    if let TokenEvent::Rejected { queued, draining } = first {
+        if draining {
+            return http::write_json(&mut writer, 503, &err_json("gateway is shutting down"));
+        }
+        let mut j = err_json("admission queue full");
+        j.set("queued", queued);
+        return http::write_json(&mut writer, 429, &j);
+    }
+    http::start_sse(&mut writer)?;
+    let mut pending = Some(first);
+    loop {
+        let event = match pending.take() {
+            Some(ev) => ev,
+            None => match ev_rx.recv() {
+                Ok(ev) => ev,
+                Err(_) => break, // stepper went away mid-stream
+            },
+        };
+        match event {
+            TokenEvent::Token { index, token } => {
+                let mut j = Json::obj();
+                j.set("index", index).set("token", token as u64);
+                if http::write_sse_event(&mut writer, &j.to_string()).is_err() {
+                    // Client disconnected: cancel so the sequence's private
+                    // chunks return to the tree pool mid-decode.
+                    let _ = cmd_tx.send(EngineCmd::Cancel { id });
+                    return Ok(());
+                }
+            }
+            TokenEvent::Done { completion_tokens } => {
+                let mut j = Json::obj();
+                j.set("done", true).set("completion_tokens", completion_tokens).set("id", id);
+                let _ = http::write_sse_event(&mut writer, &j.to_string());
+                break;
+            }
+            TokenEvent::Rejected { .. } => break, // unreachable after admission
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::testing::SyntheticRunner;
+    use crate::server::client;
+
+    fn small_engine() -> Engine<SyntheticRunner> {
+        Engine::new(SyntheticRunner { heads_total: 2, head_dim: 4, vocab: 101 }, 8, 4)
+    }
+
+    #[test]
+    fn healthz_and_shutdown() {
+        let gw = Gateway::start(small_engine(), GatewayConfig::default()).unwrap();
+        let addr = gw.addr().to_string();
+        let resp = client::get(&addr, "/healthz", Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.status, 200);
+        assert!(resp.body.contains("ok"), "{}", resp.body);
+        let resp = client::get(&addr, "/nope", Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.status, 404);
+        gw.shutdown().unwrap();
+    }
+
+    #[test]
+    fn bad_body_is_a_400_not_a_hang() {
+        let gw = Gateway::start(small_engine(), GatewayConfig::default()).unwrap();
+        let addr = gw.addr().to_string();
+        let mut s = client::generate(&addr, &Json::obj(), Duration::from_secs(5)).unwrap();
+        assert_eq!(s.status(), 400);
+        assert!(s.next_event().unwrap().is_none());
+        gw.shutdown().unwrap();
+    }
+
+    #[test]
+    fn text_prompts_are_tokenized_server_side() {
+        let gw = Gateway::start(small_engine(), GatewayConfig::default()).unwrap();
+        let addr = gw.addr().to_string();
+        let mut body = Json::obj();
+        body.set("text", "hello world, generate something").set("max_new_tokens", 3u64);
+        let mut s = client::generate(&addr, &body, Duration::from_secs(10)).unwrap();
+        assert_eq!(s.status(), 200);
+        let mut tokens = 0;
+        while let Some(ev) = s.next_event().unwrap() {
+            match ev {
+                client::StreamEvent::Token { .. } => tokens += 1,
+                client::StreamEvent::Done { completion_tokens } => {
+                    assert_eq!(completion_tokens, 3);
+                    break;
+                }
+            }
+        }
+        assert_eq!(tokens, 3);
+        gw.shutdown().unwrap();
+    }
+}

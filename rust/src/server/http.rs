@@ -1,0 +1,230 @@
+//! Minimal HTTP/1.1 framing over `std::net` streams.
+//!
+//! The offline crate set has no `hyper`/`axum`, and the gateway needs only
+//! a narrow slice of the protocol: parse one request per connection
+//! (`Connection: close` discipline), write fixed-length responses, and
+//! stream Server-Sent Events for token delivery. Both the server and the
+//! in-crate client/load-generator use these helpers, so the wire format is
+//! exercised from both ends in tests.
+
+use std::io::{BufRead, Read, Write};
+
+/// Parsed request head + body.
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    /// Header names lower-cased; values trimmed.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_utf8(&self) -> Result<&str, String> {
+        std::str::from_utf8(&self.body).map_err(|e| format!("body is not UTF-8: {e}"))
+    }
+}
+
+/// Upper bounds keeping a hostile or confused peer from ballooning memory.
+const MAX_HEADER_BYTES: usize = 64 * 1024;
+const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
+
+/// Read one request from a buffered stream. Returns `Ok(None)` on a clean
+/// EOF before any bytes (peer connected and left), `Err` on malformed or
+/// oversized input.
+pub fn read_request<R: BufRead>(reader: &mut R) -> std::io::Result<Option<HttpRequest>> {
+    let bad = |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
+    // All head reads go through a hard `Take` limit: a peer streaming
+    // bytes without a newline hits the cap (read_line then sees EOF)
+    // instead of growing the line buffer without bound.
+    let mut head = reader.by_ref().take(MAX_HEADER_BYTES as u64);
+    let mut line = String::new();
+    if head.read_line(&mut line)? == 0 {
+        return Ok(None);
+    }
+    if !line.ends_with('\n') {
+        return Err(bad("request line exceeds the header limit".into()));
+    }
+    let mut parts = line.split_whitespace();
+    let (method, path) = match (parts.next(), parts.next()) {
+        (Some(m), Some(p)) => (m.to_string(), p.to_string()),
+        _ => return Err(bad(format!("malformed request line {line:?}"))),
+    };
+    let mut headers = Vec::new();
+    loop {
+        let mut h = String::new();
+        if head.read_line(&mut h)? == 0 {
+            return Err(bad("header section truncated or too large".into()));
+        }
+        let trimmed = h.trim_end();
+        if trimmed.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = trimmed.split_once(':') {
+            headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+    }
+    let content_length = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .and_then(|(_, v)| v.parse::<usize>().ok())
+        .unwrap_or(0);
+    if content_length > MAX_BODY_BYTES {
+        return Err(bad(format!("body of {content_length} bytes exceeds the limit")));
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(Some(HttpRequest { method, path, headers, body }))
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete fixed-length response and flush it.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status,
+        reason(status),
+        content_type,
+        body.len()
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Write a JSON response (the gateway's non-streaming replies).
+pub fn write_json<W: Write>(
+    w: &mut W,
+    status: u16,
+    json: &crate::util::json::Json,
+) -> std::io::Result<()> {
+    write_response(w, status, "application/json", json.to_string().as_bytes())
+}
+
+/// Start a Server-Sent-Events response: headers only, no Content-Length —
+/// the `Connection: close` frame delimits the stream.
+pub fn start_sse<W: Write>(w: &mut W) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\n\
+         Connection: close\r\n\r\n"
+    )?;
+    w.flush()
+}
+
+/// Write one SSE event (`data: <payload>\n\n`) and flush so the client
+/// observes each token as it is decoded, not at request completion.
+pub fn write_sse_event<W: Write>(w: &mut W, data: &str) -> std::io::Result<()> {
+    write!(w, "data: {data}\n\n")?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 11\r\n\r\nhello world";
+        let mut r = BufReader::new(&raw[..]);
+        let req = read_request(&mut r).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.body_utf8().unwrap(), "hello world");
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let raw = b"GET /metrics HTTP/1.1\r\nAccept: */*\r\n\r\n";
+        let mut r = BufReader::new(&raw[..]);
+        let req = read_request(&mut r).unwrap().unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/metrics");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn clean_eof_yields_none() {
+        let raw: &[u8] = b"";
+        let mut r = BufReader::new(raw);
+        assert!(read_request(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_body_errors() {
+        let raw = b"POST /x HTTP/1.1\r\nContent-Length: 50\r\n\r\nshort";
+        let mut r = BufReader::new(&raw[..]);
+        assert!(read_request(&mut r).is_err());
+    }
+
+    #[test]
+    fn newline_free_flood_is_cut_at_the_header_limit() {
+        // A peer streaming bytes with no '\n' must hit the Take cap, not
+        // grow the line buffer indefinitely.
+        let raw = vec![b'G'; MAX_HEADER_BYTES + 1024];
+        let mut r = BufReader::new(&raw[..]);
+        assert!(read_request(&mut r).is_err());
+    }
+
+    #[test]
+    fn oversized_header_section_is_rejected() {
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        while raw.len() <= MAX_HEADER_BYTES {
+            raw.extend_from_slice(b"X-Filler: aaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaa\r\n");
+        }
+        raw.extend_from_slice(b"\r\n");
+        let mut r = BufReader::new(&raw[..]);
+        assert!(read_request(&mut r).is_err());
+    }
+
+    #[test]
+    fn oversized_body_is_rejected_up_front() {
+        let raw = b"POST /x HTTP/1.1\r\nContent-Length: 99999999999\r\n\r\n";
+        let mut r = BufReader::new(&raw[..]);
+        assert!(read_request(&mut r).is_err());
+    }
+
+    #[test]
+    fn response_roundtrips_through_parser_shape() {
+        let mut buf = Vec::new();
+        write_response(&mut buf, 429, "application/json", b"{\"error\":\"full\"}").unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("Content-Length: 16\r\n"));
+        assert!(text.ends_with("{\"error\":\"full\"}"));
+    }
+
+    #[test]
+    fn sse_event_frames() {
+        let mut buf = Vec::new();
+        start_sse(&mut buf).unwrap();
+        write_sse_event(&mut buf, "{\"token\":7}").unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("Content-Type: text/event-stream"));
+        assert!(text.ends_with("data: {\"token\":7}\n\n"));
+    }
+}

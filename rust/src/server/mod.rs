@@ -1,0 +1,26 @@
+//! Online serving frontend: a dependency-free (std::net) HTTP/1.1 gateway
+//! over the continuous-batching engine, plus the client and load-generator
+//! sides of the same wire protocol.
+//!
+//! The paper frames ChunkAttention as a *multi-tenant online serving*
+//! optimisation (§2.2, §4.2): concurrent requests sharing system-prompt
+//! prefixes arrive over the network and stream completions back. This
+//! module supplies that missing layer:
+//!
+//! - [`gateway`] — `POST /v1/generate` with SSE token streaming,
+//!   `GET /healthz`, `GET /metrics` (Prometheus text format); bounded
+//!   admission (429 backpressure), disconnect cancellation, graceful
+//!   drain. Threading model documented in DESIGN.md.
+//! - [`http`] — minimal HTTP/1.1 framing shared by server and client.
+//! - [`client`] — blocking client + SSE reader for tests and tooling.
+//! - [`bench`] — closed-loop multi-tenant load generator
+//!   (`chunk-serve bench-http`).
+
+pub mod bench;
+pub mod client;
+pub mod gateway;
+pub mod http;
+
+pub use bench::{run_bench, BenchConfig, BenchReport};
+pub use client::{gauge_value, GenerateStream, StreamEvent};
+pub use gateway::{Gateway, GatewayConfig, TokenEvent};

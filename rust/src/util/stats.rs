@@ -5,36 +5,73 @@
 
 /// Streaming summary of a set of f64 samples (Welford's online algorithm for
 /// mean/variance, plus min/max and a retained sample buffer for percentiles).
-#[derive(Debug, Clone, Default)]
+///
+/// By default every sample is retained (exact percentiles over the whole
+/// run). Long-running servers call [`Summary::set_sample_limit`] so the
+/// buffer stays bounded: count/mean/variance/min/max remain exact lifetime
+/// statistics (they are streaming), while percentiles are computed over a
+/// window of the most recent `limit..2*limit` samples.
+#[derive(Debug, Clone)]
 pub struct Summary {
     samples: Vec<f64>,
+    /// Lifetime sample count (samples may be windowed away).
+    n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+    sample_limit: Option<usize>,
+}
+
+impl Default for Summary {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Summary {
     pub fn new() -> Self {
-        Summary { samples: Vec::new(), mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+        Summary {
+            samples: Vec::new(),
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            sample_limit: None,
+        }
+    }
+
+    /// Bound the retained percentile buffer. Amortized O(1): the buffer is
+    /// allowed to reach `2*limit` before the oldest half is dropped.
+    pub fn set_sample_limit(&mut self, limit: Option<usize>) {
+        self.sample_limit = limit;
     }
 
     pub fn add(&mut self, x: f64) {
         self.samples.push(x);
-        let n = self.samples.len() as f64;
+        if let Some(limit) = self.sample_limit {
+            let limit = limit.max(1);
+            if self.samples.len() >= 2 * limit {
+                let excess = self.samples.len() - limit;
+                self.samples.drain(..excess);
+            }
+        }
+        self.n += 1;
         let delta = x - self.mean;
-        self.mean += delta / n;
+        self.mean += delta / self.n as f64;
         self.m2 += delta * (x - self.mean);
         self.min = self.min.min(x);
         self.max = self.max.max(x);
     }
 
+    /// Lifetime number of samples added (not the retained window size).
     pub fn count(&self) -> usize {
-        self.samples.len()
+        self.n as usize
     }
 
     pub fn mean(&self) -> f64 {
-        if self.samples.is_empty() {
+        if self.n == 0 {
             0.0
         } else {
             self.mean
@@ -42,10 +79,10 @@ impl Summary {
     }
 
     pub fn variance(&self) -> f64 {
-        if self.samples.len() < 2 {
+        if self.n < 2 {
             0.0
         } else {
-            self.m2 / (self.samples.len() - 1) as f64
+            self.m2 / (self.n - 1) as f64
         }
     }
 
@@ -54,7 +91,7 @@ impl Summary {
     }
 
     pub fn min(&self) -> f64 {
-        if self.samples.is_empty() {
+        if self.n == 0 {
             0.0
         } else {
             self.min
@@ -62,13 +99,14 @@ impl Summary {
     }
 
     pub fn max(&self) -> f64 {
-        if self.samples.is_empty() {
+        if self.n == 0 {
             0.0
         } else {
             self.max
         }
     }
 
+    /// Sum over the retained sample window (== lifetime sum when uncapped).
     pub fn sum(&self) -> f64 {
         self.samples.iter().sum()
     }
@@ -96,6 +134,7 @@ impl Summary {
         self.percentile(50.0)
     }
 
+    /// Retained samples (the recent window when a sample limit is set).
     pub fn samples(&self) -> &[f64] {
         &self.samples
     }
@@ -192,6 +231,22 @@ pub fn fmt_bytes(b: u64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn sample_limit_windows_percentiles_but_not_moments() {
+        let mut s = Summary::new();
+        s.set_sample_limit(Some(10));
+        for x in 0..100 {
+            s.add(x as f64);
+        }
+        assert_eq!(s.count(), 100, "lifetime count");
+        assert!((s.mean() - 49.5).abs() < 1e-9, "streaming mean is exact");
+        assert!((s.min() - 0.0).abs() < 1e-12 && (s.max() - 99.0).abs() < 1e-12);
+        assert!(s.samples().len() <= 20, "buffer bounded at 2x the limit");
+        // Percentiles reflect the recent window only.
+        assert!(s.percentile(0.0) >= 80.0, "old samples windowed out");
+        assert!(s.percentile(100.0) >= 99.0 - 1e-9);
+    }
 
     #[test]
     fn summary_basic_moments() {
