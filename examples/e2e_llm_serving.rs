@@ -96,8 +96,9 @@ fn main() -> anyhow::Result<()> {
             / (stats.prefill_tokens_computed + stats.prefill_tokens_reused) as f64
     );
     println!(
-        "peak KV cache:            {} (FP16 accounting), peak batch {}",
-        fmt_bytes(engine.tree().pool().peak_bytes_fp16()),
+        "peak KV cache:            {} ({} storage), peak batch {}",
+        fmt_bytes(engine.tree().pool().peak_bytes()),
+        engine.tree().shape().dtype.label(),
         engine.scheduler().peak_batch()
     );
     // Show one completion to prove real tokens flowed through the model.

@@ -76,11 +76,11 @@ fn main() {
             paged_shared.insert_sequence_shared(sid, SeqId(0), p, instructions.len(), &mut fill);
         }
     }
-    println!("\n=== same workload, three layouts (FP16 accounting) ===");
-    println!("  monolithic (Naive/xformers/Flash): {}", fmt_bytes(mono.in_use_bytes_fp16()));
-    println!("  paged, private pages (PagedAttn):  {}", fmt_bytes(paged.in_use_bytes_fp16()));
-    println!("  paged, aliased prefix (PagedAttn*): {}", fmt_bytes(paged_shared.in_use_bytes_fp16()));
-    println!("  prefix tree (ChunkAttention):      {}", fmt_bytes(tree.pool().in_use_bytes_fp16()));
+    println!("\n=== same workload, three layouts ({} storage) ===", shape.dtype.label());
+    println!("  monolithic (Naive/xformers/Flash): {}", fmt_bytes(mono.in_use_bytes()));
+    println!("  paged, private pages (PagedAttn):  {}", fmt_bytes(paged.in_use_bytes()));
+    println!("  paged, aliased prefix (PagedAttn*): {}", fmt_bytes(paged_shared.in_use_bytes()));
+    println!("  prefix tree (ChunkAttention):      {}", fmt_bytes(tree.pool().in_use_bytes()));
 
     // Capacity gain estimate 1/(1-r) from §3.1.
     let r = s.sharing_ratio();

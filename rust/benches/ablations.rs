@@ -5,9 +5,12 @@
 //!    sequence-first-only (PAKV without the TPP batching).
 //! 2. Chunk size c — the alignment-waste vs batching-granularity tradeoff.
 //! 3. Lazy context copy (§3.3) — cached tree context vs rebuild-per-step.
+//! 4. KV storage dtype — f32 vs f16 vs bf16 chunk slabs: resident bytes
+//!    halve at half precision and the bandwidth-bound chunk-first phase
+//!    streams half the K/V bytes per step.
 
 use chunk_attention::coordinator::{KernelBench, MicroConfig, TppVariant};
-use chunk_attention::kvcache::{KvShape, PrefixTree, SeqId};
+use chunk_attention::kvcache::{KvDtype, KvShape, PrefixTree, SeqId};
 use chunk_attention::perf_model::AttentionImpl;
 use chunk_attention::util::bench::{print_table, BenchSuite};
 
@@ -48,14 +51,14 @@ fn main() {
             kb.decode_step()
         });
         let us = suite.rows().last().unwrap().stats.mean();
-        let kv = kb.kv_bytes_fp16();
+        let kv = kb.kv_bytes();
         table.push((
             vec![c.to_string(), format!("{us:.0}"), format!("{:.1}MiB", kv as f64 / (1 << 20) as f64)],
             String::new(),
         ));
     }
     print_table(
-        "Ablation 2 — chunk size c (latency vs KV footprint; paper uses c=64)",
+        "Ablation 2 — chunk size c (latency vs KV footprint at f32; paper uses c=64)",
         &["c", "latency(us)", "kv bytes"],
         &table,
     );
@@ -103,6 +106,38 @@ fn main() {
     print_table(
         "Ablation 3 — lazy context copy (tree work per decode iteration)",
         &["lazy", "latency(us)", "rebuilds", "cache hits"],
+        &table,
+    );
+
+    // --- 4. KV storage dtype ---------------------------------------------
+    let mut table = Vec::new();
+    for dtype in KvDtype::ALL {
+        let mut cfg = MicroConfig::paper(batch, ns, ns);
+        cfg.heads = heads;
+        cfg.max_new_tokens = 4;
+        cfg.dtype = dtype;
+        let mut kb = KernelBench::new(cfg, AttentionImpl::ChunkAttn);
+        suite.measure(
+            &format!("kv_dtype/{}", dtype.label()),
+            &[("dtype", dtype.label().to_string())],
+            Some("tok/s"),
+            || kb.decode_step(),
+        );
+        let us = suite.rows().last().unwrap().stats.mean();
+        let kv = kb.kv_bytes();
+        table.push((
+            vec![
+                dtype.label().to_string(),
+                format!("{us:.0}"),
+                format!("{:.1}MiB", kv as f64 / (1 << 20) as f64),
+            ],
+            String::new(),
+        ));
+    }
+    print_table(
+        "Ablation 4 — KV storage dtype (full sharing; half precision halves \
+         resident bytes and chunk-first K/V traffic)",
+        &["dtype", "latency(us)", "kv bytes"],
         &table,
     );
     suite.finish();

@@ -10,7 +10,7 @@ use chunk_attention::attention::{
     tpp_attention, tpp_attention_2d, Queries, Tpp2dScratch, TppScratch,
 };
 use chunk_attention::coordinator::{KernelBench, MicroConfig};
-use chunk_attention::kvcache::{PrefixTree, SeqId};
+use chunk_attention::kvcache::{KvDtype, PrefixTree, SeqId};
 use chunk_attention::perf_model::AttentionImpl;
 use chunk_attention::util::bench::{print_table, BenchSuite};
 use chunk_attention::util::rng::Pcg64;
@@ -70,7 +70,54 @@ fn main() {
     );
 
     two_d_vs_head_only(&mut suite);
+    dtype_sweep(&mut suite);
     suite.finish();
+}
+
+/// KV storage dtype at the acceptance shape (h=8, d=128, c=64, b=32,
+/// 1024-token fully shared prefix): the chunk-first phase is
+/// bandwidth-bound on the streamed `c×d` K/V blocks, so f16 storage halves
+/// the bytes per step — acceptance requires f16 no slower than f32 here —
+/// and always halves the resident KV bytes.
+fn dtype_sweep(suite: &mut BenchSuite) {
+    let (heads, batch, np, ns) = (8usize, 32usize, 1024usize, 1024usize);
+    let mut table = Vec::new();
+    let mut f32_us = 0.0f64;
+    for dtype in KvDtype::ALL {
+        let mut cfg = MicroConfig::paper(batch, np, ns);
+        cfg.heads = heads;
+        cfg.max_new_tokens = 4;
+        cfg.dtype = dtype;
+        let mut kb = KernelBench::new(cfg, AttentionImpl::ChunkAttn);
+        suite.measure(
+            &format!("dtype/{}", dtype.label()),
+            &[("dtype", dtype.label().to_string()), ("np", np.to_string()), ("ns", ns.to_string())],
+            Some("tok/s"),
+            || kb.decode_step(),
+        );
+        let us = suite.rows().last().unwrap().stats.mean();
+        if dtype == KvDtype::F32 {
+            f32_us = us;
+        }
+        let kv = kb.kv_bytes();
+        table.push((
+            vec![
+                dtype.label().to_string(),
+                format!("{us:.0}"),
+                format!("{:.2}x", f32_us / us),
+                format!("{:.1}MiB", kv as f64 / (1 << 20) as f64),
+            ],
+            String::new(),
+        ));
+    }
+    print_table(
+        &format!(
+            "KV storage dtype — ChunkAttn decode step (h={heads}, d=128, c=64, b={batch}, \
+             {ns}-token shared prefix; acceptance: f16 no slower than f32)"
+        ),
+        &["dtype", "latency(us)", "vs f32", "kv bytes"],
+        &table,
+    );
 }
 
 /// The 2D (head × chunk-run) schedule vs the head-only 1D partition at the

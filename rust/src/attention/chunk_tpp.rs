@@ -25,6 +25,15 @@
 //! (small models, GQA-style configs), where the older head-only partition
 //! left most workers idle.
 //!
+//! ## Storage dtypes
+//!
+//! Every public kernel dispatches once per call on the tree's
+//! [`KvDtype`] to a body monomorphized over the storage element
+//! ([`crate::kvcache::KvElem`]): K/V rows widen to f32 registers inside the
+//! 8-row micro-kernel, accumulation stays f32, and the partial buffers are
+//! always f32. Half-precision storage halves the streamed chunk bytes —
+//! the dominant traffic of the bandwidth-bound chunk-first phase.
+//!
 //! ## Ablation variants
 //!
 //! - [`tpp_attention`] — head-partitioned fused kernel (previous
@@ -42,7 +51,7 @@
 
 use super::online::{attend_block, attn_reduce, OnlineState};
 use super::Queries;
-use crate::kvcache::{CtxEntry, PrefixTree, TreeContext};
+use crate::kvcache::{Bf16, CtxEntry, KvDtype, KvElem, PrefixTree, TreeContext, F16};
 use crate::util::threadpool::ThreadPool;
 
 /// Reusable scratch for the TPP kernels: no allocation on the decode path.
@@ -95,6 +104,21 @@ pub fn tpp_attention(
     scratch: &mut TppScratch,
     out: &mut [f32],
 ) {
+    match tree.shape().dtype {
+        KvDtype::F32 => tpp_attention_impl::<f32>(tree, ctx, q, pool, scratch, out),
+        KvDtype::F16 => tpp_attention_impl::<F16>(tree, ctx, q, pool, scratch, out),
+        KvDtype::Bf16 => tpp_attention_impl::<Bf16>(tree, ctx, q, pool, scratch, out),
+    }
+}
+
+fn tpp_attention_impl<E: KvElem>(
+    tree: &PrefixTree,
+    ctx: &TreeContext,
+    q: &Queries,
+    pool: &ThreadPool,
+    scratch: &mut TppScratch,
+    out: &mut [f32],
+) {
     let shape = tree.shape();
     let b = ctx.seq_order.len();
     assert_eq!(q.heads, shape.heads);
@@ -137,8 +161,8 @@ pub fn tpp_attention(
                 &q_head[e.start * d..e.end * d],
                 rows,
                 d,
-                chunk.k_head(&shape, h),
-                chunk.v_head(&shape, h),
+                chunk.k_head::<E>(&shape, h),
+                chunk.v_head::<E>(&shape, h),
                 chunk.len(),
                 scale,
                 &mut OnlineState {
@@ -160,8 +184,8 @@ pub fn tpp_attention(
                 &q_head[r * d..(r + 1) * d],
                 1,
                 d,
-                chunk.k_head(&shape, h),
-                chunk.v_head(&shape, h),
+                chunk.k_head::<E>(&shape, h),
+                chunk.v_head::<E>(&shape, h),
                 chunk.len(),
                 scale,
                 &mut OnlineState {
@@ -300,6 +324,21 @@ pub fn tpp_attention_2d(
     scratch: &mut Tpp2dScratch,
     out: &mut [f32],
 ) {
+    match tree.shape().dtype {
+        KvDtype::F32 => tpp_attention_2d_impl::<f32>(tree, ctx, q, pool, scratch, out),
+        KvDtype::F16 => tpp_attention_2d_impl::<F16>(tree, ctx, q, pool, scratch, out),
+        KvDtype::Bf16 => tpp_attention_2d_impl::<Bf16>(tree, ctx, q, pool, scratch, out),
+    }
+}
+
+fn tpp_attention_2d_impl<E: KvElem>(
+    tree: &PrefixTree,
+    ctx: &TreeContext,
+    q: &Queries,
+    pool: &ThreadPool,
+    scratch: &mut Tpp2dScratch,
+    out: &mut [f32],
+) {
     let shape = tree.shape();
     let b = ctx.seq_order.len();
     assert_eq!(q.heads, shape.heads);
@@ -362,8 +401,8 @@ pub fn tpp_attention_2d(
                         &q_head[e.start * d..e.end * d],
                         rows,
                         d,
-                        chunk.k_head(&shape, h),
-                        chunk.v_head(&shape, h),
+                        chunk.k_head::<E>(&shape, h),
+                        chunk.v_head::<E>(&shape, h),
                         chunk.len(),
                         scale,
                         &mut OnlineState {
@@ -416,8 +455,8 @@ pub fn tpp_attention_2d(
                     &q_head[r * d..(r + 1) * d],
                     1,
                     d,
-                    chunk.k_head(&shape, h),
-                    chunk.v_head(&shape, h),
+                    chunk.k_head::<E>(&shape, h),
+                    chunk.v_head::<E>(&shape, h),
                     chunk.len(),
                     scale,
                     &mut OnlineState {
@@ -443,6 +482,19 @@ pub fn tpp_attention_2d(
 /// partials to memory; sequence-first restores and merges them, then
 /// processes private chunks. Numerically identical to [`tpp_attention`].
 pub fn tpp_attention_buffered(
+    tree: &PrefixTree,
+    ctx: &TreeContext,
+    q: &Queries,
+    out: &mut [f32],
+) {
+    match tree.shape().dtype {
+        KvDtype::F32 => tpp_attention_buffered_impl::<f32>(tree, ctx, q, out),
+        KvDtype::F16 => tpp_attention_buffered_impl::<F16>(tree, ctx, q, out),
+        KvDtype::Bf16 => tpp_attention_buffered_impl::<Bf16>(tree, ctx, q, out),
+    }
+}
+
+fn tpp_attention_buffered_impl<E: KvElem>(
     tree: &PrefixTree,
     ctx: &TreeContext,
     q: &Queries,
@@ -483,8 +535,8 @@ pub fn tpp_attention_buffered(
                 &q_head[e.start * d..e.end * d],
                 rows,
                 d,
-                chunk.k_head(&shape, h),
-                chunk.v_head(&shape, h),
+                chunk.k_head::<E>(&shape, h),
+                chunk.v_head::<E>(&shape, h),
                 chunk.len(),
                 scale,
                 &mut OnlineState {
@@ -529,8 +581,8 @@ pub fn tpp_attention_buffered(
                     &q_head[r * d..(r + 1) * d],
                     1,
                     d,
-                    chunk.k_head(&shape, h),
-                    chunk.v_head(&shape, h),
+                    chunk.k_head::<E>(&shape, h),
+                    chunk.v_head::<E>(&shape, h),
                     chunk.len(),
                     scale,
                     &mut OnlineState {
@@ -562,6 +614,20 @@ pub fn tpp_attention_seq_only(
     scratch: &mut TppScratch,
     out: &mut [f32],
 ) {
+    match tree.shape().dtype {
+        KvDtype::F32 => tpp_attention_seq_only_impl::<f32>(tree, ctx, q, scratch, out),
+        KvDtype::F16 => tpp_attention_seq_only_impl::<F16>(tree, ctx, q, scratch, out),
+        KvDtype::Bf16 => tpp_attention_seq_only_impl::<Bf16>(tree, ctx, q, scratch, out),
+    }
+}
+
+fn tpp_attention_seq_only_impl<E: KvElem>(
+    tree: &PrefixTree,
+    ctx: &TreeContext,
+    q: &Queries,
+    scratch: &mut TppScratch,
+    out: &mut [f32],
+) {
     let shape = tree.shape();
     let b = ctx.seq_order.len();
     assert_eq!(q.batch, b);
@@ -585,8 +651,8 @@ pub fn tpp_attention_seq_only(
                     &q_head[r * d..(r + 1) * d],
                     1,
                     d,
-                    chunk.k_head(&shape, h),
-                    chunk.v_head(&shape, h),
+                    chunk.k_head::<E>(&shape, h),
+                    chunk.v_head::<E>(&shape, h),
                     chunk.len(),
                     scale,
                     &mut OnlineState {
@@ -666,6 +732,34 @@ mod tests {
             // Buffered and fused follow different summation orders but must
             // agree tightly.
             assert!((buffered[i] - fused[i]).abs() < 1e-4, "variants idx {i}");
+        }
+    }
+
+    #[test]
+    fn all_variants_agree_with_oracle_at_half_precision() {
+        // The oracle gathers the *stored* (already quantised) rows and
+        // widens them, so the kernel-vs-oracle tolerance is set by f32
+        // accumulation, not by the storage dtype.
+        for dtype in [KvDtype::F16, KvDtype::Bf16] {
+            let shape = KvShape::new(2, 8, 4).with_dtype(dtype);
+            let mut tree = build_tree(shape, 5);
+            let ctx = tree.context();
+            let b = ctx.seq_order.len();
+            let qdata = queries(&shape, b, 17);
+            let q = Queries::new(&qdata, shape.heads, b, shape.head_dim);
+            let expect = oracle_attention(&tree, &ctx, &q);
+
+            let pool = ThreadPool::new(2);
+            let mut scratch = TppScratch::new(&shape, b);
+            let mut fused = vec![0.0; expect.len()];
+            tpp_attention(&tree, &ctx, &q, &pool, &mut scratch, &mut fused);
+            let mut scratch2d = Tpp2dScratch::new();
+            let mut two_d = vec![0.0; expect.len()];
+            tpp_attention_2d(&tree, &ctx, &q, &pool, &mut scratch2d, &mut two_d);
+            for i in 0..expect.len() {
+                assert!((fused[i] - expect[i]).abs() < 2e-4, "{dtype:?} fused idx {i}");
+                assert!((two_d[i] - expect[i]).abs() < 2e-4, "{dtype:?} 2d idx {i}");
+            }
         }
     }
 

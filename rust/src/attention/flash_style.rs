@@ -7,14 +7,29 @@
 //! memory traffic for the partials — which is exactly why the paper's
 //! Table 3 shows FlashAttention trailing for inference. We keep the
 //! two-pass structure faithfully rather than quietly optimising it away.
+//! K/V may be stored at any [`crate::kvcache::KvDtype`]; partials are f32.
 
 use super::online::{attend_block, OnlineState};
 use super::{out_row, Queries};
-use crate::kvcache::{MonolithicKvCache, SeqId};
+use crate::kvcache::{Bf16, KvDtype, KvElem, MonolithicKvCache, SeqId, F16};
 
 /// Output layout `[heads, batch, head_dim]`, rows in `order`.
 /// `tile` is the KV tile length (FlashAttention uses 64/128-row tiles).
 pub fn flash_style_attention(
+    cache: &MonolithicKvCache,
+    order: &[SeqId],
+    q: &Queries,
+    tile: usize,
+    out: &mut [f32],
+) {
+    match cache.shape().dtype {
+        KvDtype::F32 => flash_impl::<f32>(cache, order, q, tile, out),
+        KvDtype::F16 => flash_impl::<F16>(cache, order, q, tile, out),
+        KvDtype::Bf16 => flash_impl::<Bf16>(cache, order, q, tile, out),
+    }
+}
+
+fn flash_impl<E: KvElem>(
     cache: &MonolithicKvCache,
     order: &[SeqId],
     q: &Queries,
@@ -43,8 +58,8 @@ pub fn flash_style_attention(
         for (row, &seq) in order.iter().enumerate() {
             let s = cache.get(seq).expect("sequence in cache");
             let n = s.len;
-            let k = s.k_head(&shape, h);
-            let v = s.v_head(&shape, h);
+            let k = s.k_head::<E>(&shape, h);
+            let v = s.v_head::<E>(&shape, h);
             let q_row = q.row(h, row);
             let ntiles = n.div_ceil(tile);
             // Pass 1: independent partials per tile.

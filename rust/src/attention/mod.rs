@@ -243,6 +243,28 @@ mod tests {
     }
 
     #[test]
+    fn all_kernels_match_oracle_half_precision_storage() {
+        // Same fixture at f16 and bf16 storage: every layout quantises
+        // identically (same fill values through the same write seam), and
+        // the oracle reads the stored rows back widened — so the tolerance
+        // stays accumulation-bound even at half precision.
+        use crate::kvcache::KvDtype;
+        let sys: Vec<u32> = (100..100 + 9).collect();
+        let prompts: Vec<Vec<u32>> = (0..5)
+            .map(|i| {
+                let mut p = sys.clone();
+                p.extend((0..4).map(|j| 1000 + i * 10 + j));
+                p
+            })
+            .collect();
+        let shared = vec![0, 9, 9, 9, 9];
+        for dtype in [KvDtype::F16, KvDtype::Bf16] {
+            let shape = KvShape::new(3, 8, 4).with_dtype(dtype);
+            check_all_kernels(build_fixture(shape, &prompts, &shared, 7), 3e-4);
+        }
+    }
+
+    #[test]
     fn all_kernels_match_oracle_nested_prefixes() {
         // s0 is a prefix of s1 which shares with s2 at a shallower depth.
         let shape = KvShape::new(2, 8, 4);

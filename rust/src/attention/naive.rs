@@ -1,14 +1,28 @@
 //! Naive decode attention over the monolithic cache — the paper's "Naive
 //! PyTorch" baseline: per sequence, per head, a full `softmax(qKᵀ/√d)V`
 //! with a materialised weight vector, streaming each sequence's entire
-//! (private) K and V from memory.
+//! (private) K and V from memory. Dispatches on the cache dtype like every
+//! other kernel so the Table 3 comparison stays fair at half precision.
 
-use super::online::{axpy, dot};
+use super::online::{axpy_kv, dot_kv};
 use super::{out_row, Queries};
-use crate::kvcache::{MonolithicKvCache, SeqId};
+use crate::kvcache::{Bf16, KvDtype, KvElem, MonolithicKvCache, SeqId, F16};
 
 /// Output layout `[heads, batch, head_dim]`, rows in `order`.
 pub fn naive_attention(cache: &MonolithicKvCache, order: &[SeqId], q: &Queries, out: &mut [f32]) {
+    match cache.shape().dtype {
+        KvDtype::F32 => naive_attention_impl::<f32>(cache, order, q, out),
+        KvDtype::F16 => naive_attention_impl::<F16>(cache, order, q, out),
+        KvDtype::Bf16 => naive_attention_impl::<Bf16>(cache, order, q, out),
+    }
+}
+
+fn naive_attention_impl<E: KvElem>(
+    cache: &MonolithicKvCache,
+    order: &[SeqId],
+    q: &Queries,
+    out: &mut [f32],
+) {
     let shape = cache.shape();
     assert_eq!(q.heads, shape.heads);
     assert_eq!(q.head_dim, shape.head_dim);
@@ -26,13 +40,13 @@ pub fn naive_attention(cache: &MonolithicKvCache, order: &[SeqId], q: &Queries, 
         for (row, &seq) in order.iter().enumerate() {
             let s = cache.get(seq).expect("sequence in cache");
             let n = s.len;
-            let k = s.k_head(&shape, h);
-            let v = s.v_head(&shape, h);
+            let k = s.k_head::<E>(&shape, h);
+            let v = s.v_head::<E>(&shape, h);
             let q_row = q.row(h, row);
             // Materialised weights (the "naive" part: no online softmax).
             let mut m = f32::NEG_INFINITY;
             for t in 0..n {
-                let x = dot(q_row, &k[t * d..(t + 1) * d]) * scale;
+                let x = dot_kv(q_row, &k[t * d..(t + 1) * d]) * scale;
                 w[t] = x;
                 m = m.max(x);
             }
@@ -45,7 +59,7 @@ pub fn naive_attention(cache: &MonolithicKvCache, order: &[SeqId], q: &Queries, 
             let o = out_row(out, q.heads, q.batch, d, h, row);
             o.fill(0.0);
             for t in 0..n {
-                axpy(w[t], &v[t * d..(t + 1) * d], o);
+                axpy_kv(w[t], &v[t * d..(t + 1) * d], o);
             }
             let inv = 1.0 / norm;
             for x in o.iter_mut() {

@@ -5,6 +5,19 @@
 //!
 //! State per (sequence, head) row: running max `m`, normaliser `n`, and the
 //! *unnormalised* output accumulator `o` (divide by `n` once at the end).
+//!
+//! ## Storage dtypes
+//!
+//! K/V rows are generic over [`KvElem`] — the cache may store `f32`, `f16`
+//! or `bf16`. Loads widen each streamed element to an f32 register inside
+//! the register-blocked bodies (`to_f32` is the identity for `f32`, a
+//! bit-shift for `bf16` and a table-free bit decode for `f16`), while the
+//! query rows, weights, softmax statistics and output accumulators stay
+//! f32. Half-precision storage therefore halves the streamed K/V bytes —
+//! the dominant traffic in the chunk-first phase — without changing
+//! accumulation precision.
+
+use crate::kvcache::KvElem;
 
 /// Accumulator state for a set of rows: `m[r]`, `n[r]`, `o[r * d ..]`.
 pub struct OnlineState<'a> {
@@ -14,7 +27,7 @@ pub struct OnlineState<'a> {
     pub head_dim: usize,
 }
 
-impl<'a> OnlineState<'a> {
+impl OnlineState<'_> {
     pub fn reset(&mut self) {
         self.m.fill(f32::NEG_INFINITY);
         self.n.fill(0.0);
@@ -37,21 +50,23 @@ impl<'a> OnlineState<'a> {
 /// Fused `partial_attn` + `attn_reduce` for a block of keys against a block
 /// of query rows (Eqns. 1 and 2 merged).
 ///
-/// * `q`       — `[rows, d]` query rows (contiguous).
-/// * `k`, `v`  — `[len, d]` key/value rows of one chunk/page/tile.
+/// * `q`       — `[rows, d]` f32 query rows (contiguous).
+/// * `k`, `v`  — `[len, d]` key/value rows of one chunk/page/tile, at any
+///   storage dtype (widened to f32 at load).
 /// * `scale`   — `1/√d`.
 /// * `state`   — per-row accumulators; updated in place.
 /// * `w`       — scratch of at least `len` floats.
 ///
 /// Numerics: the merged update is associative, so processing chunks in any
 /// order yields the same result as the two-phase schedule.
+#[allow(clippy::too_many_arguments)]
 #[inline]
-pub fn attend_block(
+pub fn attend_block<E: KvElem>(
     q: &[f32],
     rows: usize,
     d: usize,
-    k: &[f32],
-    v: &[f32],
+    k: &[E],
+    v: &[E],
     len: usize,
     scale: f32,
     state: &mut OnlineState<'_>,
@@ -65,7 +80,7 @@ pub fn attend_block(
     // K/V row (§Perf: cuts K/V cache traffic 8× in the chunk-first phase —
     // the CPU analogue of the paper's query-matrix tensor-core batching).
     // Inner loops are monomorphized for d = 64 and d = 128, the shapes the
-    // paper's models use.
+    // paper's models use, and per storage dtype.
     let mut r0 = 0;
     while rows - r0 >= 8 {
         attend_block_rows8(&q[r0 * d..], d, k, v, len, scale, state, r0, w);
@@ -80,7 +95,7 @@ pub fn attend_block(
         // W^{(C)} = Q_{r,:} · K^{(C)T}, scaled.
         let mut m_c = f32::NEG_INFINITY;
         for t in 0..len {
-            let s = dot(q_row, &k[t * d..(t + 1) * d]) * scale;
+            let s = dot_kv(q_row, &k[t * d..(t + 1) * d]) * scale;
             w[t] = s;
             if s > m_c {
                 m_c = s;
@@ -108,7 +123,7 @@ pub fn attend_block(
         for t in 0..len {
             let e = w[t] * x;
             if e != 0.0 {
-                axpy(e, &v[t * d..(t + 1) * d], o_row);
+                axpy_kv(e, &v[t * d..(t + 1) * d], o_row);
             }
         }
         state.n[r] = state.n[r] * y + n_c * x;
@@ -123,14 +138,15 @@ const BLOCK_MAX_LEN: usize = 512;
 /// Process 8 query rows (`base_row..base_row+8` of the state) against one
 /// K/V block, streaming each K/V row once for all 8 queries. Dispatches to
 /// a monomorphized body for the paper's head dims (64, 128) so the inner
-/// dot/axpy loops are fully unrolled and vectorized.
+/// dot/axpy loops are fully unrolled and vectorized; each body widens the
+/// streamed storage elements to f32 registers.
 #[allow(clippy::too_many_arguments)]
 #[inline]
-fn attend_block_rows8(
+fn attend_block_rows8<E: KvElem>(
     q: &[f32], // 8 rows, [8, d]
     d: usize,
-    k: &[f32],
-    v: &[f32],
+    k: &[E],
+    v: &[E],
     len: usize,
     scale: f32,
     state: &mut OnlineState<'_>,
@@ -160,22 +176,23 @@ fn attend_block_rows8(
         return;
     }
     match d {
-        64 => attend_block_rows8_body::<64>(q, d, k, v, len, scale, state, base_row),
-        128 => attend_block_rows8_body::<128>(q, d, k, v, len, scale, state, base_row),
-        _ => attend_block_rows8_body::<0>(q, d, k, v, len, scale, state, base_row),
+        64 => attend_block_rows8_body::<64, E>(q, d, k, v, len, scale, state, base_row),
+        128 => attend_block_rows8_body::<128, E>(q, d, k, v, len, scale, state, base_row),
+        _ => attend_block_rows8_body::<0, E>(q, d, k, v, len, scale, state, base_row),
     }
 }
 
 /// 8-row body. `DS` is the compile-time head dim (0 = dynamic); the
 /// `if DS != 0` branches fold away per instantiation, so the d=64/d=128
-/// versions run with constant trip counts everywhere.
+/// versions run with constant trip counts everywhere. `E` is the storage
+/// dtype; elements widen to f32 on load.
 #[allow(clippy::too_many_arguments)]
 #[inline(always)]
-fn attend_block_rows8_body<const DS: usize>(
+fn attend_block_rows8_body<const DS: usize, E: KvElem>(
     q: &[f32],
     d: usize,
-    k: &[f32],
-    v: &[f32],
+    k: &[E],
+    v: &[E],
     len: usize,
     scale: f32,
     state: &mut OnlineState<'_>,
@@ -189,7 +206,7 @@ fn attend_block_rows8_body<const DS: usize>(
     for t in 0..len {
         let k_t = &k[t * d..(t + 1) * d];
         for r in 0..8 {
-            let s = dot_d::<DS>(q_rows[r], k_t) * scale;
+            let s = dot_d::<DS, E>(q_rows[r], k_t) * scale;
             w[r * BLOCK_MAX_LEN + t] = s;
             if s > m_c[r] {
                 m_c[r] = s;
@@ -227,7 +244,7 @@ fn attend_block_rows8_body<const DS: usize>(
             e[r] = w[r * BLOCK_MAX_LEN + t] * x_scale[r];
         }
         for i in 0..d {
-            let vv = v_t[i];
+            let vv = v_t[i].to_f32();
             o8[i] += e[0] * vv;
             o8[d + i] += e[1] * vv;
             o8[2 * d + i] += e[2] * vv;
@@ -241,12 +258,13 @@ fn attend_block_rows8_body<const DS: usize>(
 }
 
 /// Dot product with a compile-time length (`DS == 0` falls back to the
-/// dynamic [`dot`]). The fixed-size version slices both operands to `DS`
-/// so LLVM drops every bounds check and fully vectorizes.
+/// dynamic [`dot_kv`]). The fixed-size version slices both operands to `DS`
+/// so LLVM drops every bounds check and fully vectorizes — including the
+/// widening load of half-precision K elements.
 #[inline(always)]
-fn dot_d<const DS: usize>(a: &[f32], b: &[f32]) -> f32 {
+fn dot_d<const DS: usize, E: KvElem>(a: &[f32], b: &[E]) -> f32 {
     if DS == 0 {
-        return dot(a, b);
+        return dot_kv(a, b);
     }
     let a = &a[..DS];
     let b = &b[..DS];
@@ -254,7 +272,7 @@ fn dot_d<const DS: usize>(a: &[f32], b: &[f32]) -> f32 {
     let mut i = 0;
     while i + 8 <= DS {
         for l in 0..8 {
-            lanes[l] += a[i + l] * b[i + l];
+            lanes[l] += a[i + l] * b[i + l].to_f32();
         }
         i += 8;
     }
@@ -263,7 +281,7 @@ fn dot_d<const DS: usize>(a: &[f32], b: &[f32]) -> f32 {
         s += l;
     }
     while i < DS {
-        s += a[i] * b[i];
+        s += a[i] * b[i].to_f32();
         i += 1;
     }
     s
@@ -273,11 +291,11 @@ fn dot_d<const DS: usize>(a: &[f32], b: &[f32]) -> f32 {
 /// K/V block, streaming each K/V row once for all 4 queries.
 #[allow(clippy::too_many_arguments)]
 #[inline]
-fn attend_block_rows4(
+fn attend_block_rows4<E: KvElem>(
     q: &[f32], // 4 rows, [4, d]
     d: usize,
-    k: &[f32],
-    v: &[f32],
+    k: &[E],
+    v: &[E],
     len: usize,
     scale: f32,
     state: &mut OnlineState<'_>,
@@ -307,15 +325,14 @@ fn attend_block_rows4(
         return;
     }
     let mut w = [0.0f32; 4 * BLOCK_MAX_LEN];
-    let (q0, q1, q2, q3) =
-        (&q[0..d], &q[d..2 * d], &q[2 * d..3 * d], &q[3 * d..4 * d]);
+    let (q0, q1, q2, q3) = (&q[0..d], &q[d..2 * d], &q[2 * d..3 * d], &q[3 * d..4 * d]);
     let mut m_c = [f32::NEG_INFINITY; 4];
     for t in 0..len {
         let k_t = &k[t * d..(t + 1) * d];
         // One pass over k_t feeds all four dot products.
         let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
         for i in 0..d {
-            let kv = k_t[i];
+            let kv = k_t[i].to_f32();
             s0 += q0[i] * kv;
             s1 += q1[i] * kv;
             s2 += q2[i] * kv;
@@ -362,7 +379,7 @@ fn attend_block_rows4(
             w[3 * BLOCK_MAX_LEN + t] * x_scale[3],
         ];
         for i in 0..d {
-            let vv = v_t[i];
+            let vv = v_t[i].to_f32();
             o4[i] += e[0] * vv;
             o4[d + i] += e[1] * vv;
             o4[2 * d + i] += e[2] * vv;
@@ -375,7 +392,7 @@ fn attend_block_rows4(
 /// `(m_c, n_c, o_c)` into the running accumulator `(m, n, o)`. `o` and
 /// `o_c` are *unnormalised* (divide by `n` once at the end). Shared by the
 /// buffered and 2D-scheduled kernels so the reduce numerics live in one
-/// place.
+/// place. Partials are always f32 regardless of the storage dtype.
 #[inline]
 pub fn attn_reduce(m: &mut f32, n: &mut f32, o: &mut [f32], m_c: f32, n_c: f32, o_c: &[f32]) {
     debug_assert_eq!(o.len(), o_c.len());
@@ -391,7 +408,7 @@ pub fn attn_reduce(m: &mut f32, n: &mut f32, o: &mut [f32], m_c: f32, n_c: f32, 
 
 /// Merge a fresh single key/value row (the token being decoded) into the
 /// accumulator — used by the L2 model path where the current token's K/V is
-/// produced in the same step and is not yet in the cache.
+/// produced in the same step (as f32) and is not yet in the cache.
 #[inline]
 pub fn attend_fresh_row(
     q_row: &[f32],
@@ -476,39 +493,54 @@ pub fn fast_exp_block(w: &mut [f32], shift: f32) -> f32 {
     acc
 }
 
-/// Dense dot product, 4-way unrolled so LLVM vectorises it.
+/// Dense dot product against a stored K row at any dtype, 4-way unrolled
+/// so LLVM vectorises it (the widening load folds into the lane ops).
 #[inline]
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+pub fn dot_kv<E: KvElem>(a: &[f32], b: &[E]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let n = a.len();
     let chunks = n / 4;
     let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
     for i in 0..chunks {
         let j = i * 4;
-        s0 += a[j] * b[j];
-        s1 += a[j + 1] * b[j + 1];
-        s2 += a[j + 2] * b[j + 2];
-        s3 += a[j + 3] * b[j + 3];
+        s0 += a[j] * b[j].to_f32();
+        s1 += a[j + 1] * b[j + 1].to_f32();
+        s2 += a[j + 2] * b[j + 2].to_f32();
+        s3 += a[j + 3] * b[j + 3].to_f32();
     }
     let mut s = s0 + s1 + s2 + s3;
     for i in chunks * 4..n {
-        s += a[i] * b[i];
+        s += a[i] * b[i].to_f32();
     }
     s
 }
 
-/// `y += alpha * x`, unrolled.
+/// Dense f32 dot product (specialisation of [`dot_kv`] kept for callers
+/// with freshly produced f32 rows).
 #[inline]
-pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    dot_kv(a, b)
+}
+
+/// `y += alpha * x` with `x` stored at any dtype, unrolled.
+#[inline]
+pub fn axpy_kv<E: KvElem>(alpha: f32, x: &[E], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
     for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
+        *yi += alpha * xi.to_f32();
     }
+}
+
+/// `y += alpha * x` for f32 rows.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    axpy_kv(alpha, x, y)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvcache::{Bf16, F16};
 
     fn softmax_attn_ref(q: &[f32], k: &[f32], v: &[f32], len: usize, d: usize) -> Vec<f32> {
         // f64 dense reference for one row.
@@ -699,6 +731,61 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    /// The half-precision kernels must equal the f32 kernel run on the
+    /// widened values: quantisation happens at the load seam only, every
+    /// downstream operation is the same f32 arithmetic.
+    #[test]
+    fn half_precision_blocks_equal_f32_on_widened_values() {
+        for &d in &[24usize, 64, 128] {
+            let (len, rows) = (40, 21);
+            let q = rand_vec(400 + d as u64, rows * d);
+            let k = rand_vec(500 + d as u64, len * d);
+            let v = rand_vec(600 + d as u64, len * d);
+            let scale = 1.0 / (d as f32).sqrt();
+
+            let k16: Vec<F16> = k.iter().map(|&x| F16::from_f32(x)).collect();
+            let v16: Vec<F16> = v.iter().map(|&x| F16::from_f32(x)).collect();
+            let kb: Vec<Bf16> = k.iter().map(|&x| Bf16::from_f32(x)).collect();
+            let vb: Vec<Bf16> = v.iter().map(|&x| Bf16::from_f32(x)).collect();
+
+            let run_f32 = |kw: Vec<f32>, vw: Vec<f32>| {
+                let (mut m, mut n, mut o) =
+                    (vec![0.0f32; rows], vec![0.0f32; rows], vec![0.0f32; rows * d]);
+                let mut state = OnlineState { m: &mut m, n: &mut n, o: &mut o, head_dim: d };
+                state.reset();
+                let mut w = vec![0.0f32; len];
+                attend_block(&q, rows, d, &kw, &vw, len, scale, &mut state, &mut w);
+                state.finish();
+                o
+            };
+
+            // f16 path vs f32 on the widened f16 values: bit-identical.
+            let widened_k: Vec<f32> = k16.iter().map(|x| x.to_f32()).collect();
+            let widened_v: Vec<f32> = v16.iter().map(|x| x.to_f32()).collect();
+            let expect16 = run_f32(widened_k, widened_v);
+            let (mut m, mut n, mut o) =
+                (vec![0.0f32; rows], vec![0.0f32; rows], vec![0.0f32; rows * d]);
+            let mut state = OnlineState { m: &mut m, n: &mut n, o: &mut o, head_dim: d };
+            state.reset();
+            let mut w = vec![0.0f32; len];
+            attend_block(&q, rows, d, &k16, &v16, len, scale, &mut state, &mut w);
+            state.finish();
+            assert_eq!(o, expect16, "f16 kernel d={d} must match widened-f32 kernel exactly");
+
+            // Same for bf16.
+            let widened_k: Vec<f32> = kb.iter().map(|x| x.to_f32()).collect();
+            let widened_v: Vec<f32> = vb.iter().map(|x| x.to_f32()).collect();
+            let expect_b = run_f32(widened_k, widened_v);
+            let (mut m, mut n, mut o) =
+                (vec![0.0f32; rows], vec![0.0f32; rows], vec![0.0f32; rows * d]);
+            let mut state = OnlineState { m: &mut m, n: &mut n, o: &mut o, head_dim: d };
+            state.reset();
+            attend_block(&q, rows, d, &kb, &vb, len, scale, &mut state, &mut w);
+            state.finish();
+            assert_eq!(o, expect_b, "bf16 kernel d={d} must match widened-f32 kernel exactly");
         }
     }
 

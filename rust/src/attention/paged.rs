@@ -8,13 +8,29 @@
 //!   [`PagedKvCache::insert_sequence_shared`]) — the kernel is unchanged but
 //!   repeated reads of the same physical page hit the hardware cache, which
 //!   is precisely the effect the paper isolates with this baseline.
+//!
+//! Pages may be stored at any [`crate::kvcache::KvDtype`]; the kernel
+//! dispatches once per call and widens rows to f32 at load.
 
 use super::online::{attend_block, OnlineState};
 use super::{out_row, Queries};
-use crate::kvcache::{PagedKvCache, SeqId};
+use crate::kvcache::{Bf16, KvDtype, KvElem, PagedKvCache, SeqId, F16};
 
 /// Output layout `[heads, batch, head_dim]`, rows in `order`.
 pub fn paged_attention(cache: &PagedKvCache, order: &[SeqId], q: &Queries, out: &mut [f32]) {
+    match cache.shape().dtype {
+        KvDtype::F32 => paged_attention_impl::<f32>(cache, order, q, out),
+        KvDtype::F16 => paged_attention_impl::<F16>(cache, order, q, out),
+        KvDtype::Bf16 => paged_attention_impl::<Bf16>(cache, order, q, out),
+    }
+}
+
+fn paged_attention_impl<E: KvElem>(
+    cache: &PagedKvCache,
+    order: &[SeqId],
+    q: &Queries,
+    out: &mut [f32],
+) {
     let shape = cache.shape();
     assert_eq!(q.heads, shape.heads);
     assert_eq!(q.head_dim, shape.head_dim);
@@ -34,8 +50,8 @@ pub fn paged_attention(cache: &PagedKvCache, order: &[SeqId], q: &Queries, out: 
             for (pi, &pid) in table.iter().enumerate() {
                 let start = pi * page;
                 let len = page.min(n - start);
-                let k = cache.page_k_head(pid, h);
-                let v = cache.page_v_head(pid, h);
+                let k = cache.page_k_head::<E>(pid, h);
+                let v = cache.page_v_head::<E>(pid, h);
                 attend_block(q.row(h, row), 1, d, k, v, len, scale, &mut state, &mut w);
             }
             state.finish();

@@ -1,15 +1,30 @@
 //! Memory-efficient attention over the monolithic cache, in the style of
 //! xformers' `memory_efficient_attention` (Lefaudeux et al., 2022): the key
 //! sequence is processed in blocks with online softmax so no full weight
-//! vector is materialised. Still per-sequence and prefix-agnostic.
+//! vector is materialised. Still per-sequence and prefix-agnostic; K/V may
+//! be stored at any [`crate::kvcache::KvDtype`].
 
 use super::online::{attend_block, OnlineState};
 use super::{out_row, Queries};
-use crate::kvcache::{MonolithicKvCache, SeqId};
+use crate::kvcache::{Bf16, KvDtype, KvElem, MonolithicKvCache, SeqId, F16};
 
 /// Output layout `[heads, batch, head_dim]`, rows in `order`.
 /// `block` is the KV tile length (xformers uses 32/64 key blocks).
 pub fn xformers_style_attention(
+    cache: &MonolithicKvCache,
+    order: &[SeqId],
+    q: &Queries,
+    block: usize,
+    out: &mut [f32],
+) {
+    match cache.shape().dtype {
+        KvDtype::F32 => xformers_impl::<f32>(cache, order, q, block, out),
+        KvDtype::F16 => xformers_impl::<F16>(cache, order, q, block, out),
+        KvDtype::Bf16 => xformers_impl::<Bf16>(cache, order, q, block, out),
+    }
+}
+
+fn xformers_impl<E: KvElem>(
     cache: &MonolithicKvCache,
     order: &[SeqId],
     q: &Queries,
@@ -29,8 +44,8 @@ pub fn xformers_style_attention(
         for (row, &seq) in order.iter().enumerate() {
             let s = cache.get(seq).expect("sequence in cache");
             let n = s.len;
-            let k = s.k_head(&shape, h);
-            let v = s.v_head(&shape, h);
+            let k = s.k_head::<E>(&shape, h);
+            let v = s.v_head::<E>(&shape, h);
             let o = out_row(out, q.heads, q.batch, d, h, row);
             let mut state = OnlineState { m: &mut m1, n: &mut n1, o, head_dim: d };
             state.reset();

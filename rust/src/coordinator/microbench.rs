@@ -11,7 +11,7 @@ use crate::attention::{
     tpp_attention_buffered, tpp_attention_seq_only, xformers_style_attention, Queries,
     Tpp2dScratch, TppScratch,
 };
-use crate::kvcache::{KvShape, MonolithicKvCache, PagedKvCache, PrefixTree, SeqId};
+use crate::kvcache::{KvDtype, KvShape, MonolithicKvCache, PagedKvCache, PrefixTree, SeqId};
 use crate::perf_model::AttentionImpl;
 use crate::util::rng::Pcg64;
 use crate::util::threadpool::ThreadPool;
@@ -30,11 +30,13 @@ pub struct MicroConfig {
     /// Decode headroom reserved in the monolithic layout.
     pub max_new_tokens: usize,
     pub seed: u64,
+    /// KV storage format for every cache layout under test.
+    pub dtype: KvDtype,
 }
 
 impl MicroConfig {
-    /// The paper's kernel defaults: h=32, d=128, c=64 (§4.1), scaled down
-    /// in quick mode by the benches.
+    /// The paper's kernel defaults: h=32, d=128, c=64 (§4.1) at f32
+    /// storage, scaled down in quick mode by the benches.
     pub fn paper(batch: usize, prompt: usize, shared: usize) -> Self {
         MicroConfig {
             batch,
@@ -45,11 +47,12 @@ impl MicroConfig {
             shared_tokens: shared,
             max_new_tokens: 2048,
             seed: 42,
+            dtype: KvDtype::F32,
         }
     }
 
     pub fn shape(&self) -> KvShape {
-        KvShape::new(self.heads, self.head_dim, self.chunk_size)
+        KvShape::new(self.heads, self.head_dim, self.chunk_size).with_dtype(self.dtype)
     }
 
     /// Prompt tokens of sequence `i`: `shared` leading tokens common to the
@@ -278,12 +281,13 @@ impl KernelBench {
         self.decoded
     }
 
-    /// In-use KV bytes (FP16 accounting) — memory side of Table 3 configs.
-    pub fn kv_bytes_fp16(&self) -> u64 {
+    /// In-use KV bytes as actually allocated at the configured dtype —
+    /// memory side of Table 3 configs (label with [`MicroConfig::dtype`]).
+    pub fn kv_bytes(&self) -> u64 {
         match &self.cache {
-            CacheState::Tree(t) => t.pool().in_use_bytes_fp16(),
-            CacheState::Mono(m) => m.in_use_bytes_fp16(),
-            CacheState::Paged(p) => p.in_use_bytes_fp16(),
+            CacheState::Tree(t) => t.pool().in_use_bytes(),
+            CacheState::Mono(m) => m.in_use_bytes(),
+            CacheState::Paged(p) => p.in_use_bytes(),
         }
     }
 
@@ -323,6 +327,7 @@ mod tests {
             shared_tokens: 24,
             max_new_tokens: 16,
             seed: 7,
+            dtype: KvDtype::F32,
         }
     }
 
@@ -417,9 +422,25 @@ mod tests {
         let mono = KernelBench::new(cfg(), AttentionImpl::Naive);
         let paged = KernelBench::new(cfg(), AttentionImpl::PagedAttn);
         let paged_shared = KernelBench::new(cfg(), AttentionImpl::PagedAttnShared);
-        assert!(tree.kv_bytes_fp16() < paged.kv_bytes_fp16());
-        assert!(paged_shared.kv_bytes_fp16() < paged.kv_bytes_fp16());
-        assert!(paged.kv_bytes_fp16() < mono.kv_bytes_fp16(), "mono counts headroom");
+        assert!(tree.kv_bytes() < paged.kv_bytes());
+        assert!(paged_shared.kv_bytes() < paged.kv_bytes());
+        assert!(paged.kv_bytes() < mono.kv_bytes(), "mono counts headroom");
+    }
+
+    #[test]
+    fn half_precision_storage_halves_bytes_and_preserves_outputs() {
+        let mut f32_kb = KernelBench::new(cfg(), AttentionImpl::ChunkAttn);
+        let mut cfg16 = cfg();
+        cfg16.dtype = KvDtype::F16;
+        let mut f16_kb = KernelBench::new(cfg16, AttentionImpl::ChunkAttn);
+        assert_eq!(f16_kb.kv_bytes() * 2, f32_kb.kv_bytes());
+        f32_kb.decode_step();
+        f16_kb.decode_step();
+        // Same prompts, same queries: outputs differ only by the storage
+        // rounding of K/V (~2^-11 relative for f16).
+        for (a, b) in f16_kb.output().iter().zip(f32_kb.output()) {
+            assert!((a - b).abs() < 1e-2 * (1.0 + b.abs()), "{a} vs {b}");
+        }
     }
 
     #[test]

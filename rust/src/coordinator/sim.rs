@@ -12,7 +12,7 @@
 use std::collections::BTreeMap;
 
 use super::scheduler::{FinishedSeq, Scheduler};
-use crate::kvcache::{KvShape, MonolithicKvCache, PagedKvCache, PrefixTree, SeqId};
+use crate::kvcache::{KvDtype, KvShape, MonolithicKvCache, PagedKvCache, PrefixTree, SeqId};
 use crate::model::ModelConfig;
 use crate::perf_model::{attention_step_cost, AttentionImpl, CacheSharingState, HardwareModel};
 use crate::workload::Trace;
@@ -95,13 +95,15 @@ enum KvAccounting {
 
 impl KvAccounting {
     fn peak_tokens_bytes(&self, model: &ModelConfig) -> u64 {
-        // Structures are at shape heads=1, head_dim=1 (2 tensors × 2 bytes
-        // per token): scale to the real model's per-token KV bytes.
+        // Structures run at shape heads=1, head_dim=1 and FP16 storage —
+        // the paper's Table-4 accounting convention — so one token costs
+        // 2 tensors × 2 bytes; scale to the real model's per-token KV
+        // bytes (also priced at FP16 in `ModelConfig::kv_bytes_per_token`).
         let unit = 4.0f64;
         let bytes = match self {
-            KvAccounting::Tree(t) => t.pool().peak_bytes_fp16() as f64,
-            KvAccounting::Paged(p, _) => p.peak_bytes_fp16() as f64,
-            KvAccounting::Mono(m) => m.peak_bytes_fp16() as f64,
+            KvAccounting::Tree(t) => t.pool().peak_bytes() as f64,
+            KvAccounting::Paged(p, _) => p.peak_bytes() as f64,
+            KvAccounting::Mono(m) => m.peak_bytes() as f64,
         };
         (bytes / unit * model.kv_bytes_per_token()) as u64
     }
@@ -114,7 +116,8 @@ pub fn simulate(
     hw: &HardwareModel,
     trace: &Trace,
 ) -> SimResult {
-    let shape = KvShape::new(1, 1, cfg.chunk_size);
+    // Token-accounting shape at FP16: Table 4 prices KV in fp16 bytes.
+    let shape = KvShape::new(1, 1, cfg.chunk_size).with_dtype(KvDtype::F16);
     let mut kv = match cfg.system {
         SystemKind::ChunkLlama => KvAccounting::Tree(PrefixTree::new(shape)),
         SystemKind::Vllm => {

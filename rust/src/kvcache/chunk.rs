@@ -3,12 +3,21 @@
 //! A [`Chunk`] holds `c` context tokens plus their key/value tensor slices
 //! laid out `[heads, c, head_dim]` so that a per-head slice is contiguous —
 //! the chunk-first kernel streams one head's `K^(C)` as a dense `c×d` block.
+//! K/V live in dtype-erased [`KvSlab`]s ([`KvShape::dtype`] selects `f32`,
+//! `f16` or `bf16` storage); the kernels take typed row views
+//! ([`Chunk::k_head`]) monomorphized per dtype, while managers and tests
+//! use the widening f32 adapters.
 //!
 //! The [`ChunkPool`] is the paper's pool allocator (Hill 1992): a free list
 //! backed by never-released memory. Freed chunks go back to the free list;
 //! fresh chunks come from the free list when possible and from the global
 //! allocator otherwise. Accounting distinguishes *allocated* (high-water)
-//! from *in-use* bytes so benches can report peak KV cache like Table 4.
+//! from *in-use* bytes so benches can report peak KV cache like Table 4 —
+//! and reports the bytes actually allocated at the active dtype (storing at
+//! `f16` halves every number relative to `f32`, there is no separate
+//! "paper accounting" anymore).
+
+use super::dtype::{KvDtype, KvElem, KvSlab};
 
 /// Static shape of every chunk in a pool.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -19,28 +28,31 @@ pub struct KvShape {
     pub head_dim: usize,
     /// Tokens per chunk `c`.
     pub chunk_size: usize,
+    /// Storage format of every K/V element.
+    pub dtype: KvDtype,
 }
 
 impl KvShape {
+    /// Shape with the default `f32` storage (see [`KvShape::with_dtype`]).
     pub fn new(heads: usize, head_dim: usize, chunk_size: usize) -> Self {
         assert!(heads > 0 && head_dim > 0 && chunk_size > 0);
-        KvShape { heads, head_dim, chunk_size }
+        KvShape { heads, head_dim, chunk_size, dtype: KvDtype::F32 }
     }
 
-    /// f32 elements in one of K or V for a full chunk.
+    /// Same shape, stored at `dtype`.
+    pub fn with_dtype(mut self, dtype: KvDtype) -> Self {
+        self.dtype = dtype;
+        self
+    }
+
+    /// Elements in one of K or V for a full chunk.
     pub fn elems_per_tensor(&self) -> usize {
         self.heads * self.chunk_size * self.head_dim
     }
 
-    /// Bytes of K+V storage per chunk as allocated here (f32).
-    pub fn bytes_per_chunk_f32(&self) -> usize {
-        2 * self.elems_per_tensor() * 4
-    }
-
-    /// Bytes of K+V per chunk *as the paper counts them* (FP16), for
-    /// paper-comparable GB numbers.
-    pub fn bytes_per_chunk_fp16(&self) -> usize {
-        2 * self.elems_per_tensor() * 2
+    /// Bytes of K+V storage per chunk as actually allocated (dtype-aware).
+    pub fn bytes_per_chunk(&self) -> usize {
+        2 * self.elems_per_tensor() * self.dtype.bytes()
     }
 
     /// Offset of `(head, pos)` row inside a chunk tensor.
@@ -54,23 +66,23 @@ impl KvShape {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct ChunkId(pub u32);
 
-/// One KV chunk: token ids for prefix matching plus K/V tensor slices.
+/// One KV chunk: token ids for prefix matching plus K/V tensor slabs.
 #[derive(Debug)]
 pub struct Chunk {
     /// Context tokens stored here (`len <= chunk_size`); drives tree lookups.
     tokens: Vec<u32>,
-    /// Key slice, `[heads, chunk_size, head_dim]`.
-    k: Box<[f32]>,
-    /// Value slice, `[heads, chunk_size, head_dim]`.
-    v: Box<[f32]>,
+    /// Key slab, `[heads, chunk_size, head_dim]` elements.
+    k: KvSlab,
+    /// Value slab, `[heads, chunk_size, head_dim]` elements.
+    v: KvSlab,
 }
 
 impl Chunk {
     fn new(shape: &KvShape) -> Self {
         Chunk {
             tokens: Vec::with_capacity(shape.chunk_size),
-            k: vec![0.0; shape.elems_per_tensor()].into_boxed_slice(),
-            v: vec![0.0; shape.elems_per_tensor()].into_boxed_slice(),
+            k: KvSlab::zeroed(shape.dtype, shape.elems_per_tensor()),
+            v: KvSlab::zeroed(shape.dtype, shape.elems_per_tensor()),
         }
     }
 
@@ -93,30 +105,33 @@ impl Chunk {
         &self.tokens
     }
 
-    pub fn k(&self) -> &[f32] {
+    /// The raw key slab (managers use the f32 adapters on it; kernels use
+    /// the typed [`Chunk::k_head`] views).
+    pub fn k_slab(&self) -> &KvSlab {
         &self.k
     }
 
-    pub fn v(&self) -> &[f32] {
+    pub fn v_slab(&self) -> &KvSlab {
         &self.v
     }
 
-    /// K rows for one head: contiguous `[chunk_size, head_dim]` slice.
+    /// K rows for one head: contiguous `[chunk_size, head_dim]` typed
+    /// slice. `E` must match `shape.dtype` (kernels dispatch once per call).
     #[inline]
-    pub fn k_head(&self, shape: &KvShape, head: usize) -> &[f32] {
+    pub fn k_head<E: KvElem>(&self, shape: &KvShape, head: usize) -> &[E] {
         let base = head * shape.chunk_size * shape.head_dim;
-        &self.k[base..base + shape.chunk_size * shape.head_dim]
+        &self.k.as_slice::<E>()[base..base + shape.chunk_size * shape.head_dim]
     }
 
     /// V rows for one head.
     #[inline]
-    pub fn v_head(&self, shape: &KvShape, head: usize) -> &[f32] {
+    pub fn v_head<E: KvElem>(&self, shape: &KvShape, head: usize) -> &[E] {
         let base = head * shape.chunk_size * shape.head_dim;
-        &self.v[base..base + shape.chunk_size * shape.head_dim]
+        &self.v.as_slice::<E>()[base..base + shape.chunk_size * shape.head_dim]
     }
 
-    /// Append one token and its per-head K/V rows.
-    /// `k_rows`/`v_rows` are `[heads, head_dim]`.
+    /// Append one token and its per-head K/V rows (narrowing f32 to the
+    /// storage dtype). `k_rows`/`v_rows` are `[heads, head_dim]`.
     pub fn append(&mut self, shape: &KvShape, token: u32, k_rows: &[f32], v_rows: &[f32]) {
         assert!(self.tokens.len() < shape.chunk_size, "append to full chunk");
         assert_eq!(k_rows.len(), shape.heads * shape.head_dim);
@@ -125,14 +140,15 @@ impl Chunk {
         for h in 0..shape.heads {
             let dst = shape.row_offset(h, pos);
             let src = h * shape.head_dim;
-            self.k[dst..dst + shape.head_dim].copy_from_slice(&k_rows[src..src + shape.head_dim]);
-            self.v[dst..dst + shape.head_dim].copy_from_slice(&v_rows[src..src + shape.head_dim]);
+            self.k.write_f32(dst, &k_rows[src..src + shape.head_dim]);
+            self.v.write_f32(dst, &v_rows[src..src + shape.head_dim]);
         }
         self.tokens.push(token);
     }
 
-    /// Copy the suffix rows `[from..len)` of `src` into `self` (which must be
-    /// empty) — used when a chunk is split at a divergence point.
+    /// Copy the suffix rows `[from..len)` of `src` into `self` (which must
+    /// be empty) — used when a chunk is split at a divergence point. The
+    /// copy is bit-exact (no re-rounding through f32).
     pub fn take_suffix_from(&mut self, shape: &KvShape, src: &mut Chunk, from: usize) {
         assert!(self.is_empty());
         assert!(from <= src.len());
@@ -141,8 +157,8 @@ impl Chunk {
             for p in 0..n {
                 let s = shape.row_offset(h, from + p);
                 let d = shape.row_offset(h, p);
-                self.k[d..d + shape.head_dim].copy_from_slice(&src.k[s..s + shape.head_dim]);
-                self.v[d..d + shape.head_dim].copy_from_slice(&src.v[s..s + shape.head_dim]);
+                self.k.copy_range_from(&src.k, s, d, shape.head_dim);
+                self.v.copy_range_from(&src.v, s, d, shape.head_dim);
             }
         }
         self.tokens.extend_from_slice(&src.tokens[from..]);
@@ -230,19 +246,20 @@ impl ChunkPool {
         self.slots.len()
     }
 
-    /// Resident KV bytes as allocated (f32).
-    pub fn resident_bytes_f32(&self) -> u64 {
-        (self.allocated() * self.shape.bytes_per_chunk_f32()) as u64
+    /// Resident KV bytes as actually allocated at the pool's dtype.
+    pub fn resident_bytes(&self) -> u64 {
+        (self.allocated() * self.shape.bytes_per_chunk()) as u64
     }
 
-    /// In-use KV bytes counted at FP16 like the paper's Table 4.
-    pub fn in_use_bytes_fp16(&self) -> u64 {
-        (self.in_use * self.shape.bytes_per_chunk_fp16()) as u64
+    /// In-use KV bytes at the pool's dtype (what `/metrics` and Table-4
+    /// style benches report, labelled with [`KvShape::dtype`]).
+    pub fn in_use_bytes(&self) -> u64 {
+        (self.in_use * self.shape.bytes_per_chunk()) as u64
     }
 
-    /// Peak in-use KV bytes counted at FP16.
-    pub fn peak_bytes_fp16(&self) -> u64 {
-        (self.peak_in_use * self.shape.bytes_per_chunk_fp16()) as u64
+    /// Peak in-use KV bytes at the pool's dtype.
+    pub fn peak_bytes(&self) -> u64 {
+        (self.peak_in_use * self.shape.bytes_per_chunk()) as u64
     }
 }
 
@@ -271,8 +288,26 @@ mod tests {
         let c = pool.get(id);
         assert_eq!(c.tokens(), &[42]);
         // Head 1, pos 0 row must equal k[4..8].
-        assert_eq!(&c.k_head(&s, 1)[0..4], &k[4..8]);
-        assert_eq!(&c.v_head(&s, 1)[0..4], &v[4..8]);
+        assert_eq!(&c.k_head::<f32>(&s, 1)[0..4], &k[4..8]);
+        assert_eq!(&c.v_head::<f32>(&s, 1)[0..4], &v[4..8]);
+    }
+
+    #[test]
+    fn append_round_trips_at_every_dtype() {
+        for dtype in KvDtype::ALL {
+            let s = shape().with_dtype(dtype);
+            let mut pool = ChunkPool::new(s);
+            let id = pool.acquire();
+            let (k, v) = rows(&s, 0.25);
+            pool.get_mut(id).append(&s, 7, &k, &v);
+            let c = pool.get(id);
+            let mut got = vec![0.0f32; s.head_dim];
+            c.k_slab().read_f32(s.row_offset(1, 0), &mut got);
+            for (g, want) in got.iter().zip(&k[s.head_dim..2 * s.head_dim]) {
+                let tol = dtype.unit_roundoff() * (1.0 + want.abs());
+                assert!((g - want).abs() <= tol, "{dtype:?}: {g} vs {want}");
+            }
+        }
     }
 
     #[test]
@@ -342,20 +377,25 @@ mod tests {
         assert_eq!(pool.get(b).tokens(), &[4, 5]);
         // Row for token 4 (head 0) must now be at pos 0 of b.
         let (k4, _) = rows(&s, 4.0);
-        assert_eq!(&pool.get(b).k_head(&s, 0)[0..4], &k4[0..4]);
+        assert_eq!(&pool.get(b).k_head::<f32>(&s, 0)[0..4], &k4[0..4]);
     }
 
     #[test]
-    fn byte_accounting() {
+    fn byte_accounting_tracks_the_active_dtype() {
         let s = shape(); // 2 heads * 8 tokens * 4 dim = 64 elems per tensor
         assert_eq!(s.elems_per_tensor(), 64);
-        assert_eq!(s.bytes_per_chunk_f32(), 512);
-        assert_eq!(s.bytes_per_chunk_fp16(), 256);
-        let mut pool = ChunkPool::new(s);
+        assert_eq!(s.bytes_per_chunk(), 512, "f32: 2 tensors x 64 elems x 4B");
+        let s16 = s.with_dtype(KvDtype::F16);
+        assert_eq!(s16.bytes_per_chunk(), 256, "f16 halves the chunk bytes");
+        assert_eq!(s.with_dtype(KvDtype::Bf16).bytes_per_chunk(), 256);
+
+        let mut pool = ChunkPool::new(s16);
         let a = pool.acquire();
-        assert_eq!(pool.in_use_bytes_fp16(), 256);
+        assert_eq!(pool.in_use_bytes(), 256);
+        assert_eq!(pool.resident_bytes(), 256);
         pool.release(a);
-        assert_eq!(pool.in_use_bytes_fp16(), 0);
-        assert_eq!(pool.peak_bytes_fp16(), 256);
+        assert_eq!(pool.in_use_bytes(), 0);
+        assert_eq!(pool.peak_bytes(), 256);
+        assert_eq!(pool.resident_bytes(), 256, "pool memory is never released");
     }
 }

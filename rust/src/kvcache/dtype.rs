@@ -1,0 +1,514 @@
+//! KV storage dtypes: the format seam between the cache managers and the
+//! attention kernels.
+//!
+//! The paper reports every KV-cache memory number in FP16 (Table 4) and the
+//! chunk-first phase of the TPP kernel is bandwidth-bound on the streamed
+//! `c×d` K-blocks, so the storage format directly sets both resident bytes
+//! and kernel traffic. This module provides:
+//!
+//! - [`KvDtype`] — the runtime tag (`f32`, `f16`, `bf16`), carried by
+//!   [`super::KvShape`] so every cache layout and kernel agrees on one
+//!   format;
+//! - software `f32 ↔ f16 / bf16` conversions (round-to-nearest-even,
+//!   subnormal- and NaN-correct; no external crates, validated bit-exact
+//!   against IEEE-754 binary16 semantics);
+//! - [`KvElem`] — the typed element view the monomorphized kernel load
+//!   paths are generic over: rows are widened to f32 registers at load
+//!   time, accumulation always stays f32;
+//! - [`KvSlab`] — a dtype-erased, 8-byte-aligned storage slab with typed
+//!   slice views and f32 read/write adapters, the unit every chunk, page
+//!   and dense buffer is built from.
+//!
+//! Accumulation-precision policy: storage may be half precision, but all
+//! dot products, softmax statistics and output accumulators are f32 (the
+//! f64 oracle tolerance therefore only loosens by the storage rounding of
+//! K/V, ~2⁻¹¹ relative for f16 and ~2⁻⁸ for bf16).
+
+/// KV-cache storage format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KvDtype {
+    /// IEEE-754 binary32 — the numerics baseline.
+    F32,
+    /// IEEE-754 binary16 — the paper's serving format (Table 4 accounting).
+    F16,
+    /// bfloat16 — truncated-exponent-preserving half precision.
+    Bf16,
+}
+
+impl KvDtype {
+    /// Bytes per stored element.
+    #[inline]
+    pub fn bytes(self) -> usize {
+        match self {
+            KvDtype::F32 => 4,
+            KvDtype::F16 | KvDtype::Bf16 => 2,
+        }
+    }
+
+    /// Canonical lowercase label (CLI values, metrics labels, bench rows).
+    pub fn label(self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::F16 => "f16",
+            KvDtype::Bf16 => "bf16",
+        }
+    }
+
+    /// Parse a CLI/config value.
+    pub fn parse(s: &str) -> Option<KvDtype> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => Some(KvDtype::F32),
+            "f16" | "fp16" | "float16" | "half" => Some(KvDtype::F16),
+            "bf16" | "bfloat16" => Some(KvDtype::Bf16),
+            _ => None,
+        }
+    }
+
+    /// All supported dtypes (bench sweeps, property-test grids).
+    pub const ALL: [KvDtype; 3] = [KvDtype::F32, KvDtype::F16, KvDtype::Bf16];
+
+    /// Unit roundoff of the storage format: the relative rounding error
+    /// bound for values stored at this dtype (the principled half of the
+    /// kernel-vs-reference error budget; see DESIGN.md).
+    pub fn unit_roundoff(self) -> f32 {
+        match self {
+            KvDtype::F32 => f32::EPSILON / 2.0, // 2^-24
+            KvDtype::F16 => 1.0 / 2048.0,       // 2^-11
+            KvDtype::Bf16 => 1.0 / 256.0,       // 2^-8
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bit-level conversions (round-to-nearest-even everywhere).
+// ---------------------------------------------------------------------------
+
+/// `f32 → f16` bits: RNE rounding, gradual underflow to subnormals,
+/// overflow to ±inf, NaN to a canonical quiet NaN.
+#[inline]
+pub fn f32_to_f16_bits(value: f32) -> u16 {
+    let x = value.to_bits();
+    let sign = ((x >> 16) & 0x8000) as u16;
+    let exp = (x >> 23) & 0xff;
+    let man = x & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf keeps its sign; any NaN becomes the canonical quiet NaN.
+        return if man == 0 { sign | 0x7c00 } else { sign | 0x7e00 };
+    }
+    let unbiased = exp as i32 - 127;
+    if unbiased >= 16 {
+        return sign | 0x7c00; // too large for binary16: ±inf
+    }
+    if unbiased >= -14 {
+        // Normal range: rebias the exponent, round 23→10 mantissa bits.
+        let half_exp = (unbiased + 15) as u32;
+        let mut out = (half_exp << 10) | (man >> 13);
+        let round_bits = man & 0x1fff;
+        // A mantissa carry propagates into the exponent, which is exactly
+        // the right behaviour (…1111₂ rounds up to the next binade, and
+        // 65520 rounds to +inf).
+        if round_bits > 0x1000 || (round_bits == 0x1000 && (out & 1) != 0) {
+            out += 1;
+        }
+        return sign | out as u16;
+    }
+    if unbiased >= -25 {
+        // Subnormal range: shift the implicit-1 mantissa into place.
+        let man = man | 0x0080_0000;
+        let shift = ((-14 - unbiased) + 13) as u32; // 14..=24
+        let mut out = man >> shift;
+        let halfway = 1u32 << (shift - 1);
+        let round_bits = man & ((1u32 << shift) - 1);
+        if round_bits > halfway || (round_bits == halfway && (out & 1) != 0) {
+            out += 1;
+        }
+        return sign | out as u16;
+    }
+    sign // underflows to ±0
+}
+
+/// `f16 bits → f32` (exact: every binary16 value is representable).
+#[inline]
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    if exp == 0x1f {
+        return f32::from_bits(sign | 0x7f80_0000 | (man << 13));
+    }
+    if exp == 0 {
+        // Subnormal (or zero): value is man × 2⁻²⁴, exact in f32.
+        let mag = man as f32 * (1.0 / (1u32 << 24) as f32);
+        return if sign != 0 { -mag } else { mag };
+    }
+    // 127 - 15 = 112 exponent rebias.
+    f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
+}
+
+/// `f32 → bf16` bits: RNE via the carry trick on the low 16 bits; NaN is
+/// quieted so truncation can never produce an infinity from a NaN payload.
+#[inline]
+pub fn f32_to_bf16_bits(value: f32) -> u16 {
+    let bits = value.to_bits();
+    if value.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let lsb = (bits >> 16) & 1;
+    // No overflow: the largest non-NaN bit pattern is 0xff80_0000 (-inf).
+    (((bits + 0x7fff + lsb) >> 16) & 0xffff) as u16
+}
+
+/// `bf16 bits → f32` (exact: bf16 is a truncated f32).
+#[inline]
+pub fn bf16_bits_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+// ---------------------------------------------------------------------------
+// Typed elements.
+// ---------------------------------------------------------------------------
+
+/// A KV storage element the kernels can be monomorphized over. Loads widen
+/// to f32 (`to_f32`), stores narrow from f32 (`from_f32`); all arithmetic
+/// stays in f32.
+pub trait KvElem: Copy + Send + Sync + 'static {
+    const DTYPE: KvDtype;
+    fn from_f32(x: f32) -> Self;
+    fn to_f32(self) -> f32;
+}
+
+/// IEEE-754 binary16 element (bit container + conversions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct F16(pub u16);
+
+/// bfloat16 element (bit container + conversions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct Bf16(pub u16);
+
+impl KvElem for f32 {
+    const DTYPE: KvDtype = KvDtype::F32;
+    #[inline]
+    fn from_f32(x: f32) -> Self {
+        x
+    }
+    #[inline]
+    fn to_f32(self) -> f32 {
+        self
+    }
+}
+
+impl KvElem for F16 {
+    const DTYPE: KvDtype = KvDtype::F16;
+    #[inline]
+    fn from_f32(x: f32) -> Self {
+        F16(f32_to_f16_bits(x))
+    }
+    #[inline]
+    fn to_f32(self) -> f32 {
+        f16_bits_to_f32(self.0)
+    }
+}
+
+impl KvElem for Bf16 {
+    const DTYPE: KvDtype = KvDtype::Bf16;
+    #[inline]
+    fn from_f32(x: f32) -> Self {
+        Bf16(f32_to_bf16_bits(x))
+    }
+    #[inline]
+    fn to_f32(self) -> f32 {
+        bf16_bits_to_f32(self.0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dtype-erased storage.
+// ---------------------------------------------------------------------------
+
+/// A dtype-erased element slab: the storage unit behind every KV chunk,
+/// page and dense buffer. Backed by `u64` words so every supported element
+/// type is alignment-safe; exposes typed slice views for the monomorphized
+/// kernels and f32 read/write adapters for the dtype-agnostic managers.
+#[derive(Clone)]
+pub struct KvSlab {
+    dtype: KvDtype,
+    /// Length in elements (not bytes).
+    len: usize,
+    raw: Box<[u64]>,
+}
+
+impl std::fmt::Debug for KvSlab {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "KvSlab({} x {})", self.len, self.dtype.label())
+    }
+}
+
+impl KvSlab {
+    /// Zero-initialised slab of `len` elements.
+    pub fn zeroed(dtype: KvDtype, len: usize) -> Self {
+        let words = (len * dtype.bytes()).div_ceil(8);
+        KvSlab { dtype, len, raw: vec![0u64; words].into_boxed_slice() }
+    }
+
+    #[inline]
+    pub fn dtype(&self) -> KvDtype {
+        self.dtype
+    }
+
+    /// Elements stored (fixed at construction).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Bytes of element payload (what accounting reports).
+    #[inline]
+    pub fn payload_bytes(&self) -> usize {
+        self.len * self.dtype.bytes()
+    }
+
+    /// Typed element view. Panics if `E` does not match the slab's dtype —
+    /// the kernels dispatch on [`KvDtype`] once per call, so a mismatch is
+    /// a programming error, not a data error.
+    #[inline]
+    pub fn as_slice<E: KvElem>(&self) -> &[E] {
+        assert!(E::DTYPE == self.dtype, "slab is {:?}, requested {:?}", self.dtype, E::DTYPE);
+        // Safety: `raw` is 8-byte aligned (≥ align_of::<E>()), holds at
+        // least `len * size_of::<E>()` bytes, and every bit pattern is a
+        // valid `f32`/`F16`/`Bf16` (the `u16` wrappers are
+        // repr(transparent)).
+        unsafe { std::slice::from_raw_parts(self.raw.as_ptr() as *const E, self.len) }
+    }
+
+    /// Typed mutable element view (same contract as [`KvSlab::as_slice`]).
+    #[inline]
+    pub fn as_mut_slice<E: KvElem>(&mut self) -> &mut [E] {
+        assert!(E::DTYPE == self.dtype, "slab is {:?}, requested {:?}", self.dtype, E::DTYPE);
+        // Safety: as in `as_slice`, plus exclusive access via `&mut self`.
+        unsafe { std::slice::from_raw_parts_mut(self.raw.as_mut_ptr() as *mut E, self.len) }
+    }
+
+    /// Store `src` (f32) at element offset `offset`, narrowing to the
+    /// slab's dtype.
+    pub fn write_f32(&mut self, offset: usize, src: &[f32]) {
+        assert!(offset + src.len() <= self.len, "slab write out of range");
+        match self.dtype {
+            KvDtype::F32 => {
+                self.as_mut_slice::<f32>()[offset..offset + src.len()].copy_from_slice(src);
+            }
+            KvDtype::F16 => {
+                let dst = &mut self.as_mut_slice::<F16>()[offset..offset + src.len()];
+                for (d, &x) in dst.iter_mut().zip(src) {
+                    *d = F16::from_f32(x);
+                }
+            }
+            KvDtype::Bf16 => {
+                let dst = &mut self.as_mut_slice::<Bf16>()[offset..offset + src.len()];
+                for (d, &x) in dst.iter_mut().zip(src) {
+                    *d = Bf16::from_f32(x);
+                }
+            }
+        }
+    }
+
+    /// Load `dst.len()` elements starting at `offset`, widening to f32.
+    pub fn read_f32(&self, offset: usize, dst: &mut [f32]) {
+        assert!(offset + dst.len() <= self.len, "slab read out of range");
+        match self.dtype {
+            KvDtype::F32 => {
+                dst.copy_from_slice(&self.as_slice::<f32>()[offset..offset + dst.len()]);
+            }
+            KvDtype::F16 => {
+                let src = &self.as_slice::<F16>()[offset..offset + dst.len()];
+                for (d, &x) in dst.iter_mut().zip(src) {
+                    *d = x.to_f32();
+                }
+            }
+            KvDtype::Bf16 => {
+                let src = &self.as_slice::<Bf16>()[offset..offset + dst.len()];
+                for (d, &x) in dst.iter_mut().zip(src) {
+                    *d = x.to_f32();
+                }
+            }
+        }
+    }
+
+    /// Copy `n` elements from `src[src_off..]` into `self[dst_off..]`
+    /// without widening (both slabs must share a dtype) — chunk splits move
+    /// rows between slabs bit-exactly.
+    pub fn copy_range_from(&mut self, src: &KvSlab, src_off: usize, dst_off: usize, n: usize) {
+        assert!(self.dtype == src.dtype, "slab dtype mismatch in copy");
+        assert!(src_off + n <= src.len && dst_off + n <= self.len, "slab copy out of range");
+        match self.dtype {
+            KvDtype::F32 => {
+                let s = &src.as_slice::<f32>()[src_off..src_off + n];
+                self.as_mut_slice::<f32>()[dst_off..dst_off + n].copy_from_slice(s);
+            }
+            KvDtype::F16 => {
+                let s = &src.as_slice::<F16>()[src_off..src_off + n];
+                self.as_mut_slice::<F16>()[dst_off..dst_off + n].copy_from_slice(s);
+            }
+            KvDtype::Bf16 => {
+                let s = &src.as_slice::<Bf16>()[src_off..src_off + n];
+                self.as_mut_slice::<Bf16>()[dst_off..dst_off + n].copy_from_slice(s);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference encode vectors generated against IEEE-754 semantics
+    /// (cross-checked with numpy's float16 cast and a bit-exact bf16 RNE
+    /// model): `(f32 bits, f16 bits, bf16 bits)`.
+    const ENCODE_VECTORS: &[(u32, u16, u16)] = &[
+        (0x00000000, 0x0000, 0x0000), // 0.0
+        (0x80000000, 0x8000, 0x8000), // -0.0
+        (0x3f800000, 0x3c00, 0x3f80), // 1.0
+        (0xbf800000, 0xbc00, 0xbf80), // -1.0
+        (0x3f000000, 0x3800, 0x3f00), // 0.5
+        (0x477fe000, 0x7bff, 0x4780), // 65504.0 (f16 max)
+        (0x477fefe6, 0x7bff, 0x4780), // 65519.9 (below overflow tie)
+        (0x477ff000, 0x7c00, 0x4780), // 65520.0 (tie -> +inf)
+        (0x4e6e6b28, 0x7c00, 0x4e6e), // 1e9 (f16 overflow, bf16 fine)
+        (0xce6e6b28, 0xfc00, 0xce6e), // -1e9
+        (0x33800000, 0x0001, 0x3380), // 2^-24 (smallest f16 subnormal)
+        (0x33000000, 0x0000, 0x3300), // 2^-25 (tie -> even -> 0)
+        (0x33000001, 0x0001, 0x3300), // just above 2^-25 -> rounds up
+        (0x38800000, 0x0400, 0x3880), // 2^-14 (smallest f16 normal)
+        (0x38000000, 0x0200, 0x3800), // 2^-15 (subnormal)
+        (0x3f801000, 0x3c00, 0x3f80), // 1 + 2^-11 (tie -> even, down)
+        (0x3f800800, 0x3c00, 0x3f80), // 1 + 2^-12 (rounds down)
+        (0x3f801800, 0x3c01, 0x3f80), // 1 + 3*2^-12 (rounds up)
+        (0x40490fdb, 0x4248, 0x4049), // pi
+        (0xc02df84d, 0xc170, 0xc02e), // -e
+    ];
+
+    #[test]
+    fn f16_encode_matches_reference_vectors() {
+        for &(bits, f16, _) in ENCODE_VECTORS {
+            let got = f32_to_f16_bits(f32::from_bits(bits));
+            assert_eq!(got, f16, "f32 bits {bits:#010x}: got {got:#06x}, want {f16:#06x}");
+        }
+    }
+
+    #[test]
+    fn bf16_encode_matches_reference_vectors() {
+        for &(bits, _, bf16) in ENCODE_VECTORS {
+            let got = f32_to_bf16_bits(f32::from_bits(bits));
+            assert_eq!(got, bf16, "f32 bits {bits:#010x}: got {got:#06x}, want {bf16:#06x}");
+        }
+    }
+
+    // The exhaustive 65536-pattern round-trip sweeps live in
+    // rust/tests/dtype_numerics.rs (`conversion_round_trip_sweeps`), which
+    // the CI dtype matrix runs under both debug (overflow checks on the
+    // bit-twiddling) and --release — not duplicated here.
+
+    fn via_f16(x: f32) -> f32 {
+        F16::from_f32(x).to_f32()
+    }
+
+    fn via_bf16(x: f32) -> f32 {
+        Bf16::from_f32(x).to_f32()
+    }
+
+    #[test]
+    fn special_values_survive_conversion() {
+        for dtype_conv in [via_f16 as fn(f32) -> f32, via_bf16] {
+            assert_eq!(dtype_conv(f32::INFINITY), f32::INFINITY);
+            assert_eq!(dtype_conv(f32::NEG_INFINITY), f32::NEG_INFINITY);
+            assert!(dtype_conv(f32::NAN).is_nan());
+            let z = dtype_conv(0.0);
+            assert_eq!(z, 0.0);
+            assert!(z.is_sign_positive());
+            let nz = dtype_conv(-0.0);
+            assert_eq!(nz, 0.0);
+            assert!(nz.is_sign_negative());
+        }
+    }
+
+    #[test]
+    fn conversion_error_is_within_unit_roundoff() {
+        // Deterministic sweep of magnitudes across both dtypes' normal
+        // ranges: |round(x) - x| <= u * |x| for normal values.
+        let mut x = 6.2e-5f32; // above the f16 subnormal range
+        while x < 6.0e4 {
+            for &v in &[x, -x, x * 1.337, x * 0.9113] {
+                let f16_err = (F16::from_f32(v).to_f32() - v).abs();
+                assert!(
+                    f16_err <= KvDtype::F16.unit_roundoff() * v.abs(),
+                    "f16 err {f16_err} at {v}"
+                );
+                let bf_err = (Bf16::from_f32(v).to_f32() - v).abs();
+                assert!(
+                    bf_err <= KvDtype::Bf16.unit_roundoff() * v.abs(),
+                    "bf16 err {bf_err} at {v}"
+                );
+            }
+            x *= 1.7;
+        }
+    }
+
+    #[test]
+    fn slab_typed_views_and_f32_adapters_agree() {
+        for dtype in KvDtype::ALL {
+            let mut slab = KvSlab::zeroed(dtype, 11);
+            assert_eq!(slab.len(), 11);
+            assert_eq!(slab.payload_bytes(), 11 * dtype.bytes());
+            let src: Vec<f32> = (0..7).map(|i| i as f32 * 0.25 - 0.8).collect();
+            slab.write_f32(3, &src);
+            let mut back = vec![0.0f32; 7];
+            slab.read_f32(3, &mut back);
+            for (a, b) in back.iter().zip(&src) {
+                let tol = dtype.unit_roundoff() * (1.0 + b.abs());
+                assert!((a - b).abs() <= tol, "{dtype:?}: {a} vs {b}");
+            }
+            // Elements before the write stay zero.
+            let mut head = vec![1.0f32; 3];
+            slab.read_f32(0, &mut head);
+            assert_eq!(head, vec![0.0; 3]);
+        }
+    }
+
+    #[test]
+    fn slab_copy_range_is_bit_exact() {
+        for dtype in KvDtype::ALL {
+            let mut a = KvSlab::zeroed(dtype, 8);
+            let src: Vec<f32> = (0..8).map(|i| (i as f32).sin()).collect();
+            a.write_f32(0, &src);
+            let mut b = KvSlab::zeroed(dtype, 8);
+            b.copy_range_from(&a, 2, 5, 3);
+            let (mut from_a, mut from_b) = (vec![0.0f32; 3], vec![0.0f32; 3]);
+            a.read_f32(2, &mut from_a);
+            b.read_f32(5, &mut from_b);
+            assert_eq!(from_a, from_b, "{dtype:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "slab is")]
+    fn slab_typed_view_checks_dtype() {
+        let slab = KvSlab::zeroed(KvDtype::F16, 4);
+        let _ = slab.as_slice::<f32>();
+    }
+
+    #[test]
+    fn dtype_parse_and_labels_round_trip() {
+        for dtype in KvDtype::ALL {
+            assert_eq!(KvDtype::parse(dtype.label()), Some(dtype));
+        }
+        assert_eq!(KvDtype::parse("fp16"), Some(KvDtype::F16));
+        assert_eq!(KvDtype::parse("bfloat16"), Some(KvDtype::Bf16));
+        assert_eq!(KvDtype::parse("int8"), None);
+    }
+}

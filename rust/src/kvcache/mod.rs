@@ -3,12 +3,14 @@
 //! tensors and vLLM-style paging).
 
 pub mod chunk;
+pub mod dtype;
 pub mod monolithic;
 pub mod paged;
 pub mod retain;
 pub mod tree;
 
 pub use chunk::{Chunk, ChunkId, ChunkPool, KvShape};
+pub use dtype::{Bf16, F16, KvDtype, KvElem, KvSlab};
 pub use monolithic::MonolithicKvCache;
 pub use paged::{PagedKvCache, PageId};
 pub use retain::{PrefixRetainer, PIN_ID_BASE};

@@ -2,35 +2,40 @@
 //! baselines in Table 3 operate on.
 //!
 //! Every sequence owns a contiguous `[heads, capacity, head_dim]` K and V
-//! buffer. There is no sharing: two sequences with identical prompts store
-//! two physical copies, exactly like stock `past_key_values` serving.
+//! slab stored at the shape's dtype. There is no sharing: two sequences
+//! with identical prompts store two physical copies, exactly like stock
+//! `past_key_values` serving. Using the same [`KvSlab`] storage as the
+//! prefix tree keeps the Table 3/4 layout comparison fair at every dtype.
 
 use std::collections::BTreeMap;
 
 use super::chunk::KvShape;
+use super::dtype::{KvElem, KvSlab};
 use super::tree::SeqId;
 
-/// One sequence's dense K/V buffers.
+/// One sequence's dense K/V slabs.
 #[derive(Debug)]
 pub struct DenseSeq {
-    /// `[heads, capacity, head_dim]`.
-    pub k: Box<[f32]>,
-    pub v: Box<[f32]>,
+    /// `[heads, capacity, head_dim]` elements.
+    pub k: KvSlab,
+    pub v: KvSlab,
     pub len: usize,
     pub capacity: usize,
 }
 
 impl DenseSeq {
+    /// K rows for one head: typed `[len, head_dim]` slice (`E` must match
+    /// the cache dtype; kernels dispatch once per call).
     #[inline]
-    pub fn k_head(&self, shape: &KvShape, head: usize) -> &[f32] {
+    pub fn k_head<E: KvElem>(&self, shape: &KvShape, head: usize) -> &[E] {
         let stride = self.capacity * shape.head_dim;
-        &self.k[head * stride..head * stride + self.len * shape.head_dim]
+        &self.k.as_slice::<E>()[head * stride..head * stride + self.len * shape.head_dim]
     }
 
     #[inline]
-    pub fn v_head(&self, shape: &KvShape, head: usize) -> &[f32] {
+    pub fn v_head<E: KvElem>(&self, shape: &KvShape, head: usize) -> &[E] {
         let stride = self.capacity * shape.head_dim;
-        &self.v[head * stride..head * stride + self.len * shape.head_dim]
+        &self.v.as_slice::<E>()[head * stride..head * stride + self.len * shape.head_dim]
     }
 }
 
@@ -62,18 +67,16 @@ impl MonolithicKvCache {
         assert!(!self.seqs.contains_key(&seq));
         assert!(tokens.len() <= capacity);
         let hd = self.shape.heads * self.shape.head_dim;
-        let mut k = vec![0.0f32; self.shape.heads * capacity * self.shape.head_dim];
-        let mut v = vec![0.0f32; self.shape.heads * capacity * self.shape.head_dim];
+        let elems = self.shape.heads * capacity * self.shape.head_dim;
+        let mut k = KvSlab::zeroed(self.shape.dtype, elems);
+        let mut v = KvSlab::zeroed(self.shape.dtype, elems);
         let mut k_row = vec![0.0f32; hd];
         let mut v_row = vec![0.0f32; hd];
         for (pos, &t) in tokens.iter().enumerate() {
             fill(pos, t, &mut k_row, &mut v_row);
             scatter_row(&self.shape, &mut k, &mut v, capacity, pos, &k_row, &v_row);
         }
-        self.seqs.insert(
-            seq,
-            DenseSeq { k: k.into_boxed_slice(), v: v.into_boxed_slice(), len: tokens.len(), capacity },
-        );
+        self.seqs.insert(seq, DenseSeq { k, v, len: tokens.len(), capacity });
         self.update_peak();
     }
 
@@ -111,22 +114,27 @@ impl MonolithicKvCache {
         self.peak_tokens = self.peak_tokens.max(total);
     }
 
-    /// Peak KV bytes at FP16 accounting (paper-comparable).
-    pub fn peak_bytes_fp16(&self) -> u64 {
-        (self.peak_tokens * self.shape.heads * self.shape.head_dim * 2 * 2) as u64
+    /// Bytes for `tokens` tokens at the cache's dtype (2 tensors).
+    fn token_bytes(&self, tokens: usize) -> u64 {
+        (tokens * self.shape.heads * self.shape.head_dim * 2 * self.shape.dtype.bytes()) as u64
     }
 
-    pub fn in_use_bytes_fp16(&self) -> u64 {
+    /// Peak KV bytes as actually allocated at the cache's dtype.
+    pub fn peak_bytes(&self) -> u64 {
+        self.token_bytes(self.peak_tokens)
+    }
+
+    pub fn in_use_bytes(&self) -> u64 {
         let total: usize = self.seqs.values().map(|s| s.capacity).sum();
-        (total * self.shape.heads * self.shape.head_dim * 2 * 2) as u64
+        self.token_bytes(total)
     }
 }
 
 #[inline]
 fn scatter_row(
     shape: &KvShape,
-    k: &mut [f32],
-    v: &mut [f32],
+    k: &mut KvSlab,
+    v: &mut KvSlab,
     capacity: usize,
     pos: usize,
     k_rows: &[f32],
@@ -135,13 +143,14 @@ fn scatter_row(
     for h in 0..shape.heads {
         let dst = (h * capacity + pos) * shape.head_dim;
         let src = h * shape.head_dim;
-        k[dst..dst + shape.head_dim].copy_from_slice(&k_rows[src..src + shape.head_dim]);
-        v[dst..dst + shape.head_dim].copy_from_slice(&v_rows[src..src + shape.head_dim]);
+        k.write_f32(dst, &k_rows[src..src + shape.head_dim]);
+        v.write_f32(dst, &v_rows[src..src + shape.head_dim]);
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::dtype::KvDtype;
     use super::*;
 
     fn fill(pos: usize, token: u32, k: &mut [f32], v: &mut [f32]) {
@@ -156,7 +165,7 @@ mod tests {
         cache.insert_sequence(SeqId(1), &[10, 20, 30], 8, &mut fill);
         let s = cache.get(SeqId(1)).unwrap();
         assert_eq!(s.len, 3);
-        let k0 = s.k_head(&shape, 0);
+        let k0 = s.k_head::<f32>(&shape, 0);
         assert_eq!(k0.len(), 3 * 4);
         assert_eq!(k0[0], 0.0 + 10.0 * 0.5);
         assert_eq!(k0[4], 1.0 + 20.0 * 0.5);
@@ -170,7 +179,7 @@ mod tests {
         cache.append_token(SeqId(1), &[9.0, 9.0], &[8.0, 8.0]);
         let s = cache.get(SeqId(1)).unwrap();
         assert_eq!(s.len, 2);
-        assert_eq!(s.k_head(&shape, 0)[2..4], [9.0, 9.0]);
+        assert_eq!(s.k_head::<f32>(&shape, 0)[2..4], [9.0, 9.0]);
     }
 
     #[test]
@@ -188,8 +197,21 @@ mod tests {
         let mut cache = MonolithicKvCache::new(shape);
         cache.insert_sequence(SeqId(1), &[1, 2, 3], 4, &mut fill);
         cache.insert_sequence(SeqId(2), &[1, 2, 3], 4, &mut fill);
-        // 2 sequences * 4 capacity * 1 head * 2 dim * 2 tensors * 2 bytes
-        assert_eq!(cache.in_use_bytes_fp16(), 2 * 4 * 2 * 2 * 2);
+        // 2 sequences * 4 capacity * 1 head * 2 dim * 2 tensors * 4 bytes
+        assert_eq!(cache.in_use_bytes(), 2 * 4 * 2 * 2 * 4);
+    }
+
+    #[test]
+    fn half_precision_halves_the_accounting() {
+        let shape = KvShape::new(1, 2, 8).with_dtype(KvDtype::F16);
+        let mut cache = MonolithicKvCache::new(shape);
+        cache.insert_sequence(SeqId(1), &[1, 2, 3], 4, &mut fill);
+        assert_eq!(cache.in_use_bytes(), 4 * 2 * 2 * 2);
+        // Values read back within f16 rounding.
+        let s = cache.get(SeqId(1)).unwrap();
+        let mut row = vec![0.0f32; 2];
+        s.k.read_f32(0, &mut row);
+        assert!((row[0] - 0.5).abs() < 1e-3);
     }
 
     #[test]
@@ -198,10 +220,10 @@ mod tests {
         let mut cache = MonolithicKvCache::new(shape);
         cache.insert_sequence(SeqId(1), &[1], 16, &mut fill);
         cache.insert_sequence(SeqId(2), &[1], 16, &mut fill);
-        let peak = cache.peak_bytes_fp16();
+        let peak = cache.peak_bytes();
         cache.remove_sequence(SeqId(1));
         cache.remove_sequence(SeqId(2));
-        assert_eq!(cache.peak_bytes_fp16(), peak);
-        assert_eq!(cache.in_use_bytes_fp16(), 0);
+        assert_eq!(cache.peak_bytes(), peak);
+        assert_eq!(cache.in_use_bytes(), 0);
     }
 }

@@ -3,8 +3,10 @@
 //! baseline in Table 3 / Table 4.
 //!
 //! K/V live in fixed-size *pages* held in a global pool; each sequence owns
-//! a *page table* mapping its logical token blocks to physical pages. Two
-//! modes reproduce the paper's two baselines:
+//! a *page table* mapping its logical token blocks to physical pages. Pages
+//! store [`KvSlab`]s at the shape's dtype, so the baseline pays the same
+//! bytes per token as the prefix tree and the layout comparison stays fair
+//! at every precision. Two modes reproduce the paper's two baselines:
 //!
 //! - `PagedKvCache` (plain): every sequence gets private pages, even for a
 //!   shared prompt — the released-vLLM behaviour ("PagedAttn" rows).
@@ -15,6 +17,7 @@
 use std::collections::BTreeMap;
 
 use super::chunk::KvShape;
+use super::dtype::{KvElem, KvSlab};
 use super::tree::SeqId;
 
 /// Physical page handle.
@@ -23,9 +26,9 @@ pub struct PageId(pub u32);
 
 #[derive(Debug)]
 struct Page {
-    /// `[heads, page_size, head_dim]`.
-    k: Box<[f32]>,
-    v: Box<[f32]>,
+    /// `[heads, page_size, head_dim]` elements.
+    k: KvSlab,
+    v: KvSlab,
     refcount: u32,
 }
 
@@ -74,6 +77,11 @@ impl PagedKvCache {
         self.shape.heads * self.page_size * self.shape.head_dim
     }
 
+    /// Bytes of K+V per page at the cache's dtype.
+    fn page_bytes(&self) -> usize {
+        2 * self.page_elems() * self.shape.dtype.bytes()
+    }
+
     fn alloc_page(&mut self) -> PageId {
         let id = match self.free.pop() {
             Some(id) => id,
@@ -81,8 +89,8 @@ impl PagedKvCache {
                 let id = PageId(self.pages.len() as u32);
                 let n = self.page_elems();
                 self.pages.push(Page {
-                    k: vec![0.0; n].into_boxed_slice(),
-                    v: vec![0.0; n].into_boxed_slice(),
+                    k: KvSlab::zeroed(self.shape.dtype, n),
+                    v: KvSlab::zeroed(self.shape.dtype, n),
                     refcount: 0,
                 });
                 id
@@ -179,7 +187,8 @@ impl PagedKvCache {
         } else {
             let tail = *entry.table.last().unwrap();
             if self.pages[tail.0 as usize].refcount > 1 {
-                // Copy-on-write: private copy of the partially filled page.
+                // Copy-on-write: private copy of the partially filled page
+                // (a bit-exact slab clone — no re-rounding).
                 let new = self.alloc_page();
                 let (kcopy, vcopy) = {
                     let p = &self.pages[tail.0 as usize];
@@ -211,8 +220,8 @@ impl PagedKvCache {
         for h in 0..self.shape.heads {
             let dst = (h * self.page_size + slot) * self.shape.head_dim;
             let src = h * self.shape.head_dim;
-            p.k[dst..dst + self.shape.head_dim].copy_from_slice(&k_rows[src..src + self.shape.head_dim]);
-            p.v[dst..dst + self.shape.head_dim].copy_from_slice(&v_rows[src..src + self.shape.head_dim]);
+            p.k.write_f32(dst, &k_rows[src..src + self.shape.head_dim]);
+            p.v.write_f32(dst, &v_rows[src..src + self.shape.head_dim]);
         }
     }
 
@@ -224,17 +233,18 @@ impl PagedKvCache {
         self.seqs.get(&seq).map(|e| e.table.as_slice())
     }
 
-    /// K rows of one (page, head): contiguous `[page_size, head_dim]`.
+    /// K rows of one (page, head): typed contiguous `[page_size, head_dim]`
+    /// slice (`E` must match the cache dtype).
     #[inline]
-    pub fn page_k_head(&self, page: PageId, head: usize) -> &[f32] {
+    pub fn page_k_head<E: KvElem>(&self, page: PageId, head: usize) -> &[E] {
         let stride = self.page_size * self.shape.head_dim;
-        &self.pages[page.0 as usize].k[head * stride..(head + 1) * stride]
+        &self.pages[page.0 as usize].k.as_slice::<E>()[head * stride..(head + 1) * stride]
     }
 
     #[inline]
-    pub fn page_v_head(&self, page: PageId, head: usize) -> &[f32] {
+    pub fn page_v_head<E: KvElem>(&self, page: PageId, head: usize) -> &[E] {
         let stride = self.page_size * self.shape.head_dim;
-        &self.pages[page.0 as usize].v[head * stride..(head + 1) * stride]
+        &self.pages[page.0 as usize].v.as_slice::<E>()[head * stride..(head + 1) * stride]
     }
 
     pub fn num_sequences(&self) -> usize {
@@ -245,12 +255,13 @@ impl PagedKvCache {
         self.in_use_pages
     }
 
-    pub fn in_use_bytes_fp16(&self) -> u64 {
-        (self.in_use_pages * self.page_elems() * 2 * 2) as u64
+    /// In-use KV bytes as actually allocated at the cache's dtype.
+    pub fn in_use_bytes(&self) -> u64 {
+        (self.in_use_pages * self.page_bytes()) as u64
     }
 
-    pub fn peak_bytes_fp16(&self) -> u64 {
-        (self.peak_pages * self.page_elems() * 2 * 2) as u64
+    pub fn peak_bytes(&self) -> u64 {
+        (self.peak_pages * self.page_bytes()) as u64
     }
 
     /// Integrity: refcounts match table references; lens match table sizes.
@@ -259,7 +270,11 @@ impl PagedKvCache {
         for (seq, e) in &self.seqs {
             let want_pages = e.len.div_ceil(self.page_size);
             if e.table.len() != want_pages {
-                return Err(format!("{seq:?}: table {} pages, len {} wants {want_pages}", e.table.len(), e.len));
+                return Err(format!(
+                    "{seq:?}: table {} pages, len {} wants {want_pages}",
+                    e.table.len(),
+                    e.len
+                ));
             }
             for pid in &e.table {
                 *counted.entry(pid.0).or_default() += 1;
@@ -281,6 +296,7 @@ impl PagedKvCache {
 
 #[cfg(test)]
 mod tests {
+    use super::super::dtype::KvDtype;
     use super::*;
 
     fn fill(pos: usize, token: u32, k: &mut [f32], v: &mut [f32]) {
@@ -332,7 +348,8 @@ mod tests {
         // then manual alias is impossible through the API; instead share a
         // full-page prefix and diverge inside the NEXT page.
         cache.insert_sequence(SeqId(3), &[1, 2, 3, 4, 5], &mut fill);
-        let aliased = cache.insert_sequence_shared(SeqId(4), SeqId(3), &[1, 2, 3, 4, 5], 5, &mut fill);
+        let aliased =
+            cache.insert_sequence_shared(SeqId(4), SeqId(3), &[1, 2, 3, 4, 5], 5, &mut fill);
         assert_eq!(aliased, 4);
         // Seq4's tail page (token 5) is private already; append must not COW.
         let pages_before = cache.in_use_pages();
@@ -365,13 +382,19 @@ mod tests {
     }
 
     #[test]
-    fn peak_accounting() {
+    fn peak_accounting_follows_dtype() {
+        // f32: 1 page * (2 heads * 4 tokens * 4 dim) * 2 tensors * 4 bytes.
         let mut cache = PagedKvCache::new(shape(), 4);
         cache.insert_sequence(SeqId(1), &[1, 2, 3, 4, 5, 6, 7, 8], &mut fill);
-        let peak = cache.peak_bytes_fp16();
-        assert_eq!(peak, (2 * 2 * 4 * 4 * 2 * 2) as u64);
+        let peak = cache.peak_bytes();
+        assert_eq!(peak, (2 * (2 * 4 * 4) * 2 * 4) as u64);
         cache.remove_sequence(SeqId(1));
-        assert_eq!(cache.peak_bytes_fp16(), peak);
+        assert_eq!(cache.peak_bytes(), peak);
+
+        // f16 pages cost exactly half.
+        let mut half = PagedKvCache::new(shape().with_dtype(KvDtype::F16), 4);
+        half.insert_sequence(SeqId(1), &[1, 2, 3, 4, 5, 6, 7, 8], &mut fill);
+        assert_eq!(half.peak_bytes() * 2, peak);
     }
 
     #[test]
@@ -381,7 +404,7 @@ mod tests {
         cache.insert_sequence(SeqId(1), &[10, 20, 30, 40, 50], &mut fill);
         // Token at pos 4 lives in page 1 slot 0.
         let table = cache.page_table(SeqId(1)).unwrap().to_vec();
-        let k = cache.page_k_head(table[1], 1);
+        let k = cache.page_k_head::<f32>(table[1], 1);
         assert_eq!(k[0], 4.0 + 50.0 * 0.01);
     }
 }

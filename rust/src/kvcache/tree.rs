@@ -481,7 +481,8 @@ impl PrefixTree {
     }
 
     /// Gather a sequence's full K/V into dense `[heads, len, head_dim]`
-    /// buffers (used by prefill, baselines, and tests).
+    /// f32 buffers, widening from the storage dtype (used by prefill, the
+    /// f64 oracle, baselines, and tests).
     pub fn gather_dense(&self, seq: SeqId) -> Option<(Vec<f32>, Vec<f32>, Vec<u32>)> {
         let info = self.seqs.get(&seq)?;
         let shape = self.pool.shape();
@@ -504,10 +505,8 @@ impl PrefixTree {
                 for p in 0..chunk.len() {
                     let src = shape.row_offset(h, p);
                     let dst = (h * n + pos + p) * shape.head_dim;
-                    k[dst..dst + shape.head_dim]
-                        .copy_from_slice(&chunk.k()[src..src + shape.head_dim]);
-                    v[dst..dst + shape.head_dim]
-                        .copy_from_slice(&chunk.v()[src..src + shape.head_dim]);
+                    chunk.k_slab().read_f32(src, &mut k[dst..dst + shape.head_dim]);
+                    chunk.v_slab().read_f32(src, &mut v[dst..dst + shape.head_dim]);
                 }
             }
             tokens.extend_from_slice(chunk.tokens());
@@ -518,11 +517,11 @@ impl PrefixTree {
     }
 
     /// Locate the chunk whose tokens begin at offset `pos` along the path
-    /// matching `tokens`. Returns `(usable_len, k, v)` where `usable_len`
-    /// is how many of the chunk's tokens match from `pos` on, and the K/V
-    /// slices are the full `[heads, chunk_size, head_dim]` chunk tensors.
+    /// matching `tokens`. Returns `(usable_len, chunk)` where `usable_len`
+    /// is how many of the chunk's tokens match from `pos` on; callers read
+    /// rows through the chunk's slab adapters or typed head views.
     /// Used by prefill to gather a matched prefix without owning a SeqId.
-    pub fn find_chunk_at(&self, tokens: &[u32], pos: usize) -> Option<(usize, &[f32], &[f32])> {
+    pub fn find_chunk_at(&self, tokens: &[u32], pos: usize) -> Option<(usize, &Chunk)> {
         let mut offset = 0usize;
         let mut candidates: &[NodeId] = &self.roots;
         loop {
@@ -538,7 +537,7 @@ impl PrefixTree {
             let (node_id, m) = found?;
             let chunk = self.pool.get(self.node(node_id).chunk);
             if offset == pos {
-                return Some((m, chunk.k(), chunk.v()));
+                return Some((m, chunk));
             }
             if m < chunk.len() {
                 return None; // diverged before reaching pos

@@ -5,7 +5,12 @@
 //! three-layer Rust + JAX + Pallas serving library:
 //!
 //! - **Layer 3 (this crate)** — the serving coordinator:
-//!   - prefix-aware KV cache ([`kvcache::PrefixTree`]) with a cached,
+//!   - prefix-aware KV cache ([`kvcache::PrefixTree`]) storing K/V in
+//!     dtype-erased slabs ([`kvcache::KvSlab`], `f32`/`f16`/`bf16` via
+//!     [`kvcache::KvDtype`] and `--kv-dtype`): half-precision storage
+//!     halves resident KV bytes and the chunk-first phase's streamed
+//!     traffic while every kernel keeps f32 accumulation (see DESIGN.md
+//!     "The KV storage seam"), with a cached,
 //!     generation-counted kernel context: the tree bumps
 //!     [`kvcache::PrefixTree::generation`] only on structural changes, so
 //!     the engine reuses one [`kvcache::TreeContext`] across every decode

@@ -16,6 +16,7 @@ use chunk_attention::coordinator::engine::testing::SyntheticRunner;
 use chunk_attention::coordinator::{
     simulate, Engine, KernelBench, MicroConfig, ModelRunner, SimConfig, SystemKind,
 };
+use chunk_attention::kvcache::KvDtype;
 use chunk_attention::model::ModelConfig;
 use chunk_attention::perf_model::{AttentionImpl, HardwareModel};
 #[cfg(feature = "pjrt")]
@@ -35,6 +36,13 @@ fn parse_or_exit(cli: &Cli, argv: &[String]) -> Args {
             std::process::exit(2);
         }
     }
+}
+
+/// Parse a `--kv-dtype` value (`f32` | `f16` | `bf16`).
+fn parse_kv_dtype(args: &Args) -> anyhow::Result<KvDtype> {
+    let s = args.get("kv-dtype");
+    KvDtype::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("invalid --kv-dtype {s:?}; expected f32, f16 or bf16"))
 }
 
 fn main() -> anyhow::Result<()> {
@@ -115,9 +123,11 @@ fn serve(argv: &[String]) -> anyhow::Result<()> {
         .opt("heads-total", "16", "synthetic runner: total KV heads (n_layers * heads)")
         .opt("head-dim", "32", "synthetic runner: head dimension")
         .opt("chunk", "16", "synthetic runner: KV chunk size (tokens)")
+        .opt("kv-dtype", "f32", "KV cache storage dtype: f32|f16|bf16")
         .opt("config", "", "optional TOML config overriding the flags")
         .flag("synthetic", "use the in-process synthetic runner (works on a default build)");
     let args = parse_or_exit(&cli, argv);
+    let kv_dtype = parse_kv_dtype(&args)?;
 
     let mut requests = args.get_usize("requests");
     let mut max_batch = args.get_usize("max-batch");
@@ -138,10 +148,10 @@ fn serve(argv: &[String]) -> anyhow::Result<()> {
             head_dim: args.get_usize("head-dim"),
             vocab: 32000,
         };
-        let engine = Engine::new(runner, args.get_usize("chunk"), max_batch);
+        let engine = Engine::with_dtype(runner, args.get_usize("chunk"), max_batch, kv_dtype);
         return run_offline_trace(engine, requests, tenants, sys_tokens, completion);
     }
-    serve_pjrt(args.get("artifacts"), requests, max_batch, completion, tenants, sys_tokens)
+    serve_pjrt(args.get("artifacts"), requests, max_batch, completion, tenants, sys_tokens, kv_dtype)
 }
 
 #[cfg(feature = "pjrt")]
@@ -152,15 +162,19 @@ fn serve_pjrt(
     completion: usize,
     tenants: usize,
     sys_tokens: u32,
+    kv_dtype: KvDtype,
 ) -> anyhow::Result<()> {
+    // The PJRT decode path stages chunks into f32 device tensors, so the
+    // tree may store at any dtype; rows widen at staging time.
     let model = PjrtModel::load(std::path::Path::new(artifacts))?;
     let chunk_size = model.chunk_size();
     let max_batch = max_batch.min(model.max_batch());
-    let engine = Engine::new(model, chunk_size, max_batch);
+    let engine = Engine::with_dtype(model, chunk_size, max_batch, kv_dtype);
     run_offline_trace(engine, requests, tenants, sys_tokens, completion)
 }
 
 #[cfg(not(feature = "pjrt"))]
+#[allow(clippy::too_many_arguments)]
 fn serve_pjrt(
     _artifacts: &str,
     _requests: usize,
@@ -168,6 +182,7 @@ fn serve_pjrt(
     _completion: usize,
     _tenants: usize,
     _sys_tokens: u32,
+    _kv_dtype: KvDtype,
 ) -> anyhow::Result<()> {
     anyhow::bail!(
         "the PJRT-compiled model is not in this build; rerun with --synthetic for the \
@@ -184,6 +199,7 @@ fn gateway_cmd(argv: &[String]) -> anyhow::Result<()> {
     .opt("max-batch", "16", "max decode batch")
     .opt("queue-cap", "64", "admission queue capacity; submissions beyond it get 429")
     .opt("chunk", "64", "KV chunk size (tokens)")
+    .opt("kv-dtype", "f32", "KV cache storage dtype: f32|f16|bf16")
     .opt("heads-total", "16", "synthetic runner: total KV heads")
     .opt("head-dim", "32", "synthetic runner: head dimension")
     .opt("max-new-tokens-cap", "4096", "hard cap on a request's completion budget")
@@ -200,7 +216,12 @@ fn gateway_cmd(argv: &[String]) -> anyhow::Result<()> {
         head_dim: args.get_usize("head-dim"),
         vocab: 32000,
     };
-    let engine = Engine::new(runner, args.get_usize("chunk"), args.get_usize("max-batch"));
+    let engine = Engine::with_dtype(
+        runner,
+        args.get_usize("chunk"),
+        args.get_usize("max-batch"),
+        parse_kv_dtype(&args)?,
+    );
     let cfg = GatewayConfig {
         addr: args.get("listen").to_string(),
         queue_cap: args.get_usize("queue-cap"),
@@ -239,13 +260,22 @@ fn bench_http(argv: &[String]) -> anyhow::Result<()> {
     .opt("max-batch", "16", "spawned gateway: max decode batch")
     .opt("queue-cap", "64", "spawned gateway: admission queue capacity")
     .opt("chunk", "64", "spawned gateway: KV chunk size")
+    .opt("kv-dtype", "f32", "spawned gateway: KV cache storage dtype: f32|f16|bf16")
     .opt("decode-interval-us", "200", "spawned gateway: decode pacing (us)");
     let args = parse_or_exit(&cli, argv);
+    // Validate the dtype up front even when benchmarking an external
+    // gateway (whose dtype is its own; a typo should still fail loudly).
+    let kv_dtype = parse_kv_dtype(&args)?;
 
     let mut spawned = None;
     let addr = if args.get("addr").is_empty() {
         let runner = SyntheticRunner { heads_total: 16, head_dim: 32, vocab: 32000 };
-        let engine = Engine::new(runner, args.get_usize("chunk"), args.get_usize("max-batch"));
+        let engine = Engine::with_dtype(
+            runner,
+            args.get_usize("chunk"),
+            args.get_usize("max-batch"),
+            kv_dtype,
+        );
         let gw = Gateway::start(
             engine,
             GatewayConfig {
@@ -260,6 +290,14 @@ fn bench_http(argv: &[String]) -> anyhow::Result<()> {
         spawned = Some(gw);
         addr
     } else {
+        if kv_dtype != KvDtype::F32 {
+            eprintln!(
+                "note: --kv-dtype {} only configures a spawned gateway; the gateway at {} \
+                 keeps whatever dtype it was started with",
+                kv_dtype.label(),
+                args.get("addr")
+            );
+        }
         args.get("addr").to_string()
     };
     let report = run_bench(&BenchConfig {
@@ -333,6 +371,7 @@ fn kernel(argv: &[String]) -> anyhow::Result<()> {
         .opt("heads", "8", "attention heads")
         .opt("np", "1024", "prompt tokens")
         .opt("ns", "1024", "shared prefix tokens")
+        .opt("kv-dtype", "f32", "KV cache storage dtype: f32|f16|bf16")
         .opt("steps", "5", "decode steps to time");
     let args = parse_or_exit(&cli, argv);
     let imp = match args.get("impl") {
@@ -347,6 +386,7 @@ fn kernel(argv: &[String]) -> anyhow::Result<()> {
         MicroConfig::paper(args.get_usize("batch"), args.get_usize("np"), args.get_usize("ns"));
     cfg.heads = args.get_usize("heads");
     cfg.max_new_tokens = args.get_usize("steps") + 1;
+    cfg.dtype = parse_kv_dtype(&args)?;
     let mut kb = KernelBench::new(cfg, imp);
     let steps = args.get_usize("steps");
     let t0 = std::time::Instant::now();
@@ -356,14 +396,15 @@ fn kernel(argv: &[String]) -> anyhow::Result<()> {
     }
     let us = t0.elapsed().as_secs_f64() * 1e6 / steps as f64;
     println!(
-        "{}: {} per decode step (b={}, h={}, np={}, ns={}); kv={}",
+        "{}: {} per decode step (b={}, h={}, np={}, ns={}); kv={} ({})",
         imp.label(),
         fmt_us(us),
         cfg.batch,
         cfg.heads,
         cfg.prompt_tokens,
         cfg.shared_tokens,
-        fmt_bytes(kb.kv_bytes_fp16())
+        fmt_bytes(kb.kv_bytes()),
+        cfg.dtype.label()
     );
     Ok(())
 }

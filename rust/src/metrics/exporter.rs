@@ -12,6 +12,24 @@ pub fn push_gauge(out: &mut String, prefix: &str, name: &str, help: &str, value:
     ));
 }
 
+/// Append one gauge carrying label pairs (e.g. the active KV dtype as
+/// `kv_dtype_info{dtype="f16"} 1`, the Prometheus "info" pattern).
+pub fn push_labeled_gauge(
+    out: &mut String,
+    prefix: &str,
+    name: &str,
+    help: &str,
+    labels: &[(&str, &str)],
+    value: f64,
+) {
+    let rendered: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+    out.push_str(&format!(
+        "# HELP {prefix}_{name} {help}\n# TYPE {prefix}_{name} gauge\n{prefix}_{name}{{{}}} {value}\n",
+        rendered.join(",")
+    ));
+}
+
 /// Render the exposition document (text format 0.0.4 subset).
 pub fn render_exposition(m: &MetricsRecorder, prefix: &str) -> String {
     let mut out = String::new();

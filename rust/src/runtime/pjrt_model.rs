@@ -134,8 +134,10 @@ impl PjrtModel {
             (vec![0i32; self.max_chunks], vec![0i32; self.max_chunks], vec![0i32; self.max_chunks]);
         for (i, e) in ctx.entries.iter().enumerate() {
             let chunk = tree.chunk(e.chunk);
-            self.stage_k[i * per_chunk..(i + 1) * per_chunk].copy_from_slice(chunk.k());
-            self.stage_v[i * per_chunk..(i + 1) * per_chunk].copy_from_slice(chunk.v());
+            // Widen from the tree's storage dtype into the f32 device
+            // staging tensors.
+            chunk.k_slab().read_f32(0, &mut self.stage_k[i * per_chunk..(i + 1) * per_chunk]);
+            chunk.v_slab().read_f32(0, &mut self.stage_v[i * per_chunk..(i + 1) * per_chunk]);
             starts[i] = e.start as i32;
             ends[i] = e.end as i32;
             lens[i] = chunk.len() as i32;

@@ -22,7 +22,7 @@
 
 use super::http;
 use crate::coordinator::{Engine, ModelRunner};
-use crate::metrics::{push_gauge, render_exposition};
+use crate::metrics::{push_gauge, push_labeled_gauge, render_exposition};
 use crate::util::json::Json;
 use crate::workload::{Request, Tokenizer};
 use std::collections::BTreeMap;
@@ -313,6 +313,32 @@ fn render_metrics<R: ModelRunner>(engine: &Engine<R>, live_streams: usize, prefi
         "chunks_allocated",
         "KV chunks ever allocated by the pool",
         engine.tree().pool().allocated() as f64,
+    );
+    // Byte-level KV accounting at the *actual* storage dtype (f16 halves
+    // these relative to f32), plus the dtype itself as an info gauge so
+    // dashboards can group byte series by format.
+    let pool = engine.tree().pool();
+    push_gauge(
+        &mut out,
+        prefix,
+        "kv_bytes_in_use",
+        "KV bytes referenced by live sequences or pins, at the storage dtype",
+        pool.in_use_bytes() as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "kv_bytes_resident",
+        "KV bytes ever allocated by the pool, at the storage dtype",
+        pool.resident_bytes() as f64,
+    );
+    push_labeled_gauge(
+        &mut out,
+        prefix,
+        "kv_dtype_info",
+        "active KV storage dtype (value is always 1)",
+        &[("dtype", engine.tree().shape().dtype.label())],
+        1.0,
     );
     out
 }

@@ -1,0 +1,240 @@
+//! Property tests for the dtype-abstracted KV cache: the TPP kernels over
+//! f16/bf16-stored trees versus the f64 oracle, across thread counts, with
+//! a principled error budget — plus conversion round-trip sweeps that the
+//! CI dtype matrix runs under both debug (overflow checks on the
+//! bit-twiddling) and `--release`.
+//!
+//! ## Error budget
+//!
+//! Two separate comparisons, two separate tolerances:
+//!
+//! 1. **Kernel vs f64 oracle, same storage** — the oracle gathers the
+//!    *stored* (already-quantised) rows widened to f32, so the difference
+//!    is pure f32 accumulation + the kernel's `fast_exp` (~2e-7 relative):
+//!    tolerance `2e-4 * (1 + |expect|)` independent of dtype.
+//! 2. **Half-precision tree vs f32 tree, same fill** — quantisation error.
+//!    With `|q|,|k|,|v| ≤ 1`: V rounding contributes ≤ `u`, and K rounding
+//!    perturbs each logit by ≤ `scale · u · Σ|q_j k_j| ≤ u·√d`, which moves
+//!    the softmax-weighted output by ≤ `2·u·√d · max|v|`. Budget:
+//!    `3 · (2·√d + 1) · u · (1 + |expect|)` with `u` the dtype's unit
+//!    roundoff (2⁻¹¹ for f16, 2⁻⁸ for bf16) and 3× slack for accumulation.
+
+use chunk_attention::attention::{oracle_attention, tpp_attention_2d, Queries, Tpp2dScratch};
+use chunk_attention::kvcache::{
+    dtype::{f16_bits_to_f32, f32_to_f16_bits, f32_to_bf16_bits, bf16_bits_to_f32},
+    KvDtype, KvShape, PrefixTree, SeqId,
+};
+use chunk_attention::util::pbt;
+use chunk_attention::util::rng::Pcg64;
+use chunk_attention::util::threadpool::ThreadPool;
+use std::collections::BTreeMap;
+
+/// One random workload: a shared prefix plus per-sequence suffixes.
+#[derive(Debug, Clone)]
+struct TreeSpec {
+    heads: usize,
+    head_dim: usize,
+    chunk_size: usize,
+    shared: usize,
+    suffixes: Vec<usize>,
+    seed: u64,
+}
+
+fn gen_spec(rng: &mut Pcg64) -> TreeSpec {
+    let head_dims = [8usize, 16, 64];
+    TreeSpec {
+        heads: 1 + rng.below(3) as usize,
+        head_dim: head_dims[rng.below(head_dims.len() as u64) as usize],
+        chunk_size: [4usize, 8][rng.below(2) as usize],
+        shared: rng.below(33) as usize,
+        suffixes: (0..2 + rng.below(5)).map(|_| 1 + rng.below(10) as usize).collect(),
+        seed: rng.below(1 << 30),
+    }
+}
+
+fn build_tree(spec: &TreeSpec, dtype: KvDtype) -> PrefixTree {
+    let shape = KvShape::new(spec.heads, spec.head_dim, spec.chunk_size).with_dtype(dtype);
+    let mut tree = PrefixTree::new(shape);
+    let seed = spec.seed;
+    for (i, &suffix) in spec.suffixes.iter().enumerate() {
+        let mut prompt: Vec<u32> = (0..spec.shared as u32).collect();
+        prompt.extend((0..suffix as u32).map(|j| 10_000 + i as u32 * 100 + j));
+        tree.insert_sequence(SeqId(i as u64), &prompt, &mut |pos, token, k, v| {
+            let mut r = Pcg64::new(seed ^ token as u64, pos as u64);
+            r.fill_uniform_f32(k, -1.0, 1.0);
+            r.fill_uniform_f32(v, -1.0, 1.0);
+        });
+    }
+    tree
+}
+
+fn queries_for(spec: &TreeSpec, b: usize) -> Vec<f32> {
+    let mut rng = Pcg64::new(spec.seed.wrapping_add(77), 1);
+    let mut q = vec![0.0f32; spec.heads * b * spec.head_dim];
+    rng.fill_uniform_f32(&mut q, -1.0, 1.0);
+    q
+}
+
+fn run_2d(tree: &mut PrefixTree, spec: &TreeSpec, workers: usize) -> (Vec<f32>, Vec<f32>) {
+    let ctx = tree.context();
+    let b = ctx.seq_order.len();
+    let qdata = queries_for(spec, b);
+    let q = Queries::new(&qdata, spec.heads, b, spec.head_dim);
+    let expect = oracle_attention(tree, &ctx, &q);
+    let pool = ThreadPool::new(workers);
+    let mut scratch = Tpp2dScratch::new();
+    let mut out = vec![0.0f32; expect.len()];
+    tpp_attention_2d(tree, &ctx, &q, &pool, &mut scratch, &mut out);
+    (out, expect)
+}
+
+/// Kernel-vs-oracle across every (thread count × dtype) grid point, with
+/// bit-identity across thread counts per (case, dtype).
+#[test]
+fn tpp_2d_matches_oracle_across_threads_and_dtypes() {
+    let grid: Vec<(usize, KvDtype)> = [1usize, 2, 8]
+        .iter()
+        .flat_map(|&w| KvDtype::ALL.iter().map(move |&d| (w, d)))
+        .collect();
+    // First output per (case, dtype): later thread counts must reproduce
+    // it bit-for-bit (the 2D schedule's determinism guarantee).
+    let mut reference: BTreeMap<(usize, &'static str), Vec<f32>> = BTreeMap::new();
+    pbt::check_grid(
+        "tpp2d-oracle-dtype-grid",
+        0xD17E,
+        16,
+        &grid,
+        gen_spec,
+        |case, spec, (workers, dtype)| {
+            let mut tree = build_tree(spec, dtype);
+            let (out, expect) = run_2d(&mut tree, spec, workers);
+            for (i, (&got, &want)) in out.iter().zip(&expect).enumerate() {
+                let tol = 2e-4 * (1.0 + want.abs());
+                if (got - want).abs() > tol {
+                    return Err(format!(
+                        "{dtype:?} workers={workers} idx {i}: kernel {got} vs oracle {want}"
+                    ));
+                }
+            }
+            match reference.entry((case, dtype.label())) {
+                std::collections::btree_map::Entry::Vacant(slot) => {
+                    slot.insert(out);
+                }
+                std::collections::btree_map::Entry::Occupied(slot) => {
+                    if slot.get() != &out {
+                        return Err(format!(
+                            "{dtype:?}: workers={workers} diverged bitwise from first run"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Half-precision storage vs f32 storage on the same workload: bounded by
+/// the dtype's unit roundoff (see the module docs for the derivation), and
+/// structurally identical (dtype never changes tree topology).
+#[test]
+fn half_precision_tree_tracks_f32_tree_within_unit_roundoff_budget() {
+    pbt::check_grid(
+        "half-vs-f32-budget",
+        0xBEEF,
+        24,
+        &[KvDtype::F16, KvDtype::Bf16],
+        gen_spec,
+        |_case, spec, dtype| {
+            let mut f32_tree = build_tree(spec, KvDtype::F32);
+            let mut half_tree = build_tree(spec, dtype);
+            if half_tree.pool().in_use() != f32_tree.pool().in_use() {
+                return Err("storage dtype changed the chunk count".into());
+            }
+            if half_tree.pool().in_use_bytes() * 2 != f32_tree.pool().in_use_bytes() {
+                return Err(format!(
+                    "half-precision bytes {} are not half of f32 bytes {}",
+                    half_tree.pool().in_use_bytes(),
+                    f32_tree.pool().in_use_bytes()
+                ));
+            }
+            let (f32_out, _) = run_2d(&mut f32_tree, spec, 2);
+            let (half_out, _) = run_2d(&mut half_tree, spec, 2);
+            let u = dtype.unit_roundoff();
+            let budget = 3.0 * (2.0 * (spec.head_dim as f32).sqrt() + 1.0) * u;
+            for (i, (&got, &want)) in half_out.iter().zip(&f32_out).enumerate() {
+                let tol = budget * (1.0 + want.abs());
+                if (got - want).abs() > tol {
+                    return Err(format!(
+                        "{dtype:?} idx {i}: {got} vs f32 {want} exceeds budget {tol}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Decode-append keeps the dtype seam consistent: growing trees at every
+/// dtype keep matching the oracle step after step.
+#[test]
+fn decode_appends_stay_within_budget_at_every_dtype() {
+    pbt::check_grid(
+        "append-dtype-grid",
+        0xA99E,
+        8,
+        &KvDtype::ALL,
+        gen_spec,
+        |_case, spec, dtype| {
+            let mut tree = build_tree(spec, dtype);
+            for round in 0..3u32 {
+                let (out, expect) = run_2d(&mut tree, spec, 2);
+                for (i, (&got, &want)) in out.iter().zip(&expect).enumerate() {
+                    if (got - want).abs() > 2e-4 * (1.0 + want.abs()) {
+                        return Err(format!("{dtype:?} round {round} idx {i}: {got} vs {want}"));
+                    }
+                }
+                let row = vec![0.25f32; spec.heads * spec.head_dim];
+                let seqs: Vec<SeqId> = (0..spec.suffixes.len() as u64).map(SeqId).collect();
+                for s in seqs {
+                    tree.append_token(s, 50_000 + round, &row, &row);
+                }
+                tree.check_invariants().map_err(|e| format!("{dtype:?}: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Exhaustive f16 round trip + RNE tie cases, also exercised by the CI
+/// dtype matrix in debug mode where integer overflow checks are on.
+#[test]
+fn conversion_round_trip_sweeps() {
+    for h in 0u16..=u16::MAX {
+        let f = f16_bits_to_f32(h);
+        if f.is_nan() {
+            assert!(f16_bits_to_f32(f32_to_f16_bits(f)).is_nan());
+            continue;
+        }
+        assert_eq!(f32_to_f16_bits(f), h, "f16 bits {h:#06x}");
+    }
+    for b in 0u16..=u16::MAX {
+        let f = bf16_bits_to_f32(b);
+        if f.is_nan() {
+            assert!(bf16_bits_to_f32(f32_to_bf16_bits(f)).is_nan());
+            continue;
+        }
+        assert_eq!(f32_to_bf16_bits(f), b, "bf16 bits {b:#06x}");
+    }
+    // RNE ties and range edges (reference values cross-checked against
+    // IEEE-754 binary16 semantics).
+    assert_eq!(f32_to_f16_bits(1.0 + 1.0 / 2048.0), 0x3c00, "tie rounds to even");
+    assert_eq!(f32_to_f16_bits(1.0 + 3.0 / 4096.0), 0x3c01, "above tie rounds up");
+    assert_eq!(f32_to_f16_bits(65519.9), 0x7bff, "below overflow tie stays finite");
+    assert_eq!(f32_to_f16_bits(65520.0), 0x7c00, "overflow tie rounds to +inf");
+    assert_eq!(f32_to_f16_bits(2.0f32.powi(-25)), 0x0000, "subnormal tie to even");
+    assert_eq!(f32_to_f16_bits(f32::from_bits(0x33000001)), 0x0001, "just above tie");
+    assert!(f16_bits_to_f32(0x0001) == 2.0f32.powi(-24), "smallest subnormal exact");
+    assert_eq!(f32_to_bf16_bits(f32::INFINITY), 0x7f80);
+    assert_eq!(f32_to_bf16_bits(f32::NEG_INFINITY), 0xff80);
+    assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+}

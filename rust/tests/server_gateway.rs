@@ -8,6 +8,7 @@
 
 use chunk_attention::coordinator::engine::testing::SyntheticRunner;
 use chunk_attention::coordinator::Engine;
+use chunk_attention::kvcache::KvDtype;
 use chunk_attention::server::client::{self, StreamEvent};
 use chunk_attention::server::{gauge_value, Gateway, GatewayConfig};
 use chunk_attention::util::json::Json;
@@ -119,6 +120,73 @@ fn concurrent_clients_share_a_1024_token_prefix_and_stream_incrementally() {
         let hit_rate = gauge_value(&metrics, "prefix_hit_rate").unwrap();
         assert!(hit_rate > 0.5, "prefix hit rate {hit_rate}");
         gw.shutdown().unwrap();
+    });
+}
+
+#[test]
+fn f16_storage_more_than_halves_kv_bytes_for_the_shared_prefix_scenario() {
+    with_watchdog(120, "f16_kv_bytes", || {
+        // The 4-client shared-1024-token-prefix scenario from the streaming
+        // test, run once per dtype. Prefix retention pins the shared system
+        // prompt, so after all clients finish the resident bytes are a
+        // deterministic function of (chunk count, dtype) — and the chunk
+        // count is dtype-independent (storage format never changes tree
+        // topology). Acceptance: f16 kv_bytes_in_use <= 55% of f32.
+        let run = |dtype: KvDtype| -> (f64, String) {
+            let engine = Engine::with_dtype(
+                SyntheticRunner { heads_total: 2, head_dim: 8, vocab: 32000 },
+                64,
+                8,
+                dtype,
+            );
+            let cfg = GatewayConfig {
+                retain_chunks: 10_000,
+                decode_interval: Duration::from_micros(200),
+                ..GatewayConfig::default()
+            };
+            let gw = Gateway::start(engine, cfg).unwrap();
+            let addr = gw.addr().to_string();
+            let system_prompt: Vec<u32> = (0..1024).collect();
+            let mut clients = Vec::new();
+            for c in 0..4u32 {
+                let addr = addr.clone();
+                let mut prompt = system_prompt.clone();
+                prompt.extend([5000 + c, 6000 + c]);
+                clients.push(thread::spawn(move || {
+                    let body = token_body(&prompt, 1024, 4);
+                    let mut stream =
+                        client::generate(&addr, &body, Duration::from_secs(30)).unwrap();
+                    assert_eq!(stream.status(), 200, "{}", stream.error_body);
+                    while let Some(ev) = stream.next_event().unwrap() {
+                        if matches!(ev, StreamEvent::Done { .. }) {
+                            break;
+                        }
+                    }
+                }));
+            }
+            for c in clients {
+                c.join().unwrap();
+            }
+            let metrics = scrape(&addr);
+            let bytes = gauge_value(&metrics, "kv_bytes_in_use").unwrap();
+            gw.shutdown().unwrap();
+            (bytes, metrics)
+        };
+
+        let (f32_bytes, f32_metrics) = run(KvDtype::F32);
+        let (f16_bytes, f16_metrics) = run(KvDtype::F16);
+        assert!(f32_bytes > 0.0, "pinned prefix must stay resident:\n{f32_metrics}");
+        assert!(f16_bytes > 0.0, "pinned prefix must stay resident:\n{f16_metrics}");
+        assert!(
+            f16_bytes <= 0.55 * f32_bytes,
+            "f16 kv_bytes_in_use {f16_bytes} must be <= 55% of f32 {f32_bytes}"
+        );
+        // The dtype is exported as a gauge label for dashboards.
+        assert!(
+            f16_metrics.contains("kv_dtype_info{dtype=\"f16\"} 1"),
+            "missing dtype info gauge:\n{f16_metrics}"
+        );
+        assert!(f32_metrics.contains("kv_dtype_info{dtype=\"f32\"} 1"));
     });
 }
 
