@@ -4,27 +4,42 @@
 //! see `runtime::PjrtModel`) or an in-process synthetic runner for tests.
 //!
 //! Per iteration the engine:
-//! 1. admits queued requests (continuous batching), running a *prefix
-//!    lookup* so only the unmatched prompt suffix is prefilled (§3.2);
-//! 2. runs one batched decode step through the runner (which performs the
+//! 1. admits queued requests (continuous batching) into the *prefill
+//!    queue* — prefix-aware, so requests sharing the longest cached or
+//!    in-progress prefix admit together;
+//! 2. advances prefill: each in-progress prompt's unmatched suffix is
+//!    split into chunk-aligned slices (prefix lookup first, §3.2, so
+//!    matched tokens cost nothing), round-robin under a per-step token
+//!    budget — one 4096-token cold prompt can no longer stall in-flight
+//!    decoders for its whole prefill (head-of-line blocking);
+//! 3. runs one batched decode step through the runner (which performs the
 //!    TPP attention over the tree's chunks);
-//! 3. appends each sequence's fresh K/V rows to the tree and retires
+//! 4. appends each sequence's fresh K/V rows to the tree and retires
 //!    completed sequences (their private chunks return to the pool).
+//!
+//! A partially prefilled prompt is a first-class tree resident: later
+//! arrivals match against the slices already inserted, and a follower
+//! whose prompt shares more with an in-progress leader than is resident
+//! yet *defers* its own first slice, so the leader's prefill becomes the
+//! follower's cache hit instead of duplicated compute.
 
-use super::scheduler::{FinishedSeq, Removed, Scheduler};
+use super::scheduler::{FinishedSeq, PrefillingSeq, Removed, Scheduler};
+use crate::kvcache::tree::common_prefix;
 use crate::kvcache::{KvDtype, KvShape, PrefixRetainer, PrefixTree, SeqId, TreeContext, PIN_ID_BASE};
 use crate::metrics::{MetricsRecorder, RequestRecord};
 use crate::workload::Request;
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-/// Result of prefilling a prompt suffix.
+/// Result of prefilling a (possibly partial) prompt suffix slice.
 pub struct PrefillOutput {
     /// K rows for each suffix position: `[suffix_len][heads_total * head_dim]`.
     pub k_rows: Vec<Vec<f32>>,
     pub v_rows: Vec<Vec<f32>>,
     /// First generated token (greedy from the last-position logits).
-    pub next_token: u32,
+    /// `Some` iff the slice was final (`is_final` was passed to
+    /// [`ModelRunner::prefill`]): mid-prompt slices produce K/V only.
+    pub next_token: Option<u32>,
 }
 
 /// Result of one batched decode step, rows in `ctx.seq_order`.
@@ -44,7 +59,12 @@ pub trait ModelRunner {
     fn head_dim(&self) -> usize;
 
     /// Prefill `suffix_tokens` (prompt positions `pos_offset..`), given the
-    /// dense KV of the matched prefix (`[heads_total, prefix_len, head_dim]`).
+    /// dense KV of everything before the slice — matched prefix plus any
+    /// earlier slices of the same prompt (`[heads_total, prefix_len,
+    /// head_dim]`, with `prefix_len == pos_offset`). Chunked prefill calls
+    /// this once per slice; `is_final` marks the slice containing the last
+    /// prompt position, whose output must carry `next_token` (the first
+    /// completion token). Mid-prompt slices may skip the logits work.
     fn prefill(
         &mut self,
         suffix_tokens: &[u32],
@@ -52,6 +72,7 @@ pub trait ModelRunner {
         prefix_k: &[f32],
         prefix_v: &[f32],
         prefix_len: usize,
+        is_final: bool,
     ) -> anyhow::Result<PrefillOutput>;
 
     /// One decode step: `last_tokens[i]`/`positions[i]` belong to
@@ -78,6 +99,12 @@ struct SeqState {
 pub struct EngineStats {
     pub prefill_tokens_computed: u64,
     pub prefill_tokens_reused: u64,
+    /// Prefill slices executed (== prompts prefilled when monolithic).
+    pub prefill_chunks_total: u64,
+    /// Requests whose first slice deferred (at least once) to an
+    /// in-progress leader sharing a longer prefix — the deferred tokens
+    /// become pure reuse. Counted once per request, not per polling pass.
+    pub prefill_deferrals: u64,
     pub decode_steps: u64,
     pub decoded_tokens: u64,
     pub prefill_time_s: f64,
@@ -98,6 +125,13 @@ pub struct Engine<R: ModelRunner> {
     metrics: MetricsRecorder,
     /// (admitted_at, first_token_at, reused_tokens) per live request.
     timing: BTreeMap<u64, (f64, f64, usize)>,
+    /// Token-major (`[pos][heads_total * head_dim]`) dense K/V of each
+    /// in-progress prompt's resident prefix. Filled from the tree once at
+    /// the first slice, then extended with each slice's own output, so
+    /// chunked prefill appends O(slice) per step instead of re-walking
+    /// (and re-widening) the whole tree prefix every slice. Dropped at
+    /// activation or cancellation.
+    prefill_kv: BTreeMap<u64, (Vec<f32>, Vec<f32>)>,
     /// Incrementally invalidated decode context: valid while the tree's
     /// generation counter still equals `ctx_generation`. Lets steady-state
     /// decode steps (in-place tail appends only) skip `PrefixTree::context`
@@ -130,6 +164,7 @@ impl<R: ModelRunner> Engine<R> {
             retainer: None,
             metrics: MetricsRecorder::new(),
             timing: BTreeMap::new(),
+            prefill_kv: BTreeMap::new(),
             ctx_cache: None,
             ctx_generation: 0,
         }
@@ -145,6 +180,17 @@ impl<R: ModelRunner> Engine<R> {
     /// chunk budget with LRU eviction.
     pub fn enable_prefix_retention(&mut self, budget_chunks: usize) {
         self.retainer = Some(PrefixRetainer::new(budget_chunks));
+    }
+
+    /// Enable chunked prefill: unmatched prompt suffixes advance in
+    /// `chunk_tokens`-sized slices interleaved with decode steps, and each
+    /// engine step spends at most `step_budget` tokens across prefill
+    /// slices and decode tokens. Either knob at 0 disables it (the default
+    /// is the monolithic whole-suffix prefill). `step_budget` should
+    /// exceed `max_batch`, or a full decode batch leaves no prefill
+    /// headroom.
+    pub fn set_chunked_prefill(&mut self, chunk_tokens: usize, step_budget: usize) {
+        self.sched.set_chunked_prefill(chunk_tokens, step_budget);
     }
 
     pub fn submit(&mut self, request: Request) {
@@ -181,6 +227,16 @@ impl<R: ModelRunner> Engine<R> {
         match self.sched.remove(id) {
             None => false,
             Some(Removed::Queued(_)) => {
+                self.metrics.cancelled += 1;
+                true
+            }
+            Some(Removed::Prefilling(pf)) => {
+                // Mid-prefill: tree residency exists once the first slice
+                // landed; release it (shared chunks stay with survivors).
+                if pf.filled > 0 {
+                    self.tree.remove_sequence(SeqId(id));
+                }
+                self.prefill_kv.remove(&id);
                 self.metrics.cancelled += 1;
                 true
             }
@@ -251,66 +307,211 @@ impl<R: ModelRunner> Engine<R> {
         Ok(finished_early)
     }
 
-    /// Admission phase: pull queued requests into free batch slots and
-    /// prefill each one's unmatched prompt suffix (prefix lookup, §3.2).
-    /// Returns requests whose one-token budget finished at prefill.
+    /// Admission + prefill phase. Queued requests are admitted into the
+    /// prefill queue prefix-aware (longest cached/in-progress match
+    /// first); the engine then advances in-progress prompts in
+    /// chunk-aligned slices, round-robin, under the per-step token budget
+    /// (decode tokens of the current batch are reserved up front, and a
+    /// completing prompt reserves one more for its first decode, so a
+    /// step never exceeds the budget). With chunking disabled this
+    /// degenerates to the old behavior: every admitted prompt prefills
+    /// fully in its admission step. Returns requests whose one-token
+    /// budget finished at prefill.
     fn admit_and_prefill(&mut self) -> anyhow::Result<Vec<FinishedSeq>> {
-        let mut finished_early = Vec::new();
-        let admitted = self.sched.admit(self.now());
-        for seq in admitted {
-            let req = &seq.request;
-            let t0 = Instant::now();
-            let matched = self.tree.match_prefix(&req.prompt);
-            // Never match the entire prompt: the model still needs at least
-            // the last position's logits to start decoding.
-            let matched = matched.min(req.prompt.len() - 1);
-            let (pk, pv) = self.gather_matched_prefix(&req.prompt, matched);
-            let out = self.runner.prefill(&req.prompt[matched..], matched, &pk, &pv, matched)?;
-            anyhow::ensure!(
-                out.k_rows.len() == req.prompt.len() - matched,
-                "prefill returned {} rows for {} suffix tokens",
-                out.k_rows.len(),
-                req.prompt.len() - matched
-            );
-            let mut idx = 0usize;
-            self.tree.insert_sequence(SeqId(req.id), &req.prompt, &mut |pos, _tok, k, v| {
-                // Called only for unmatched positions, in order.
-                debug_assert!(pos >= matched);
-                k.copy_from_slice(&out.k_rows[idx]);
-                v.copy_from_slice(&out.v_rows[idx]);
-                idx = pos - matched + 1;
-            });
-            self.states.insert(
-                req.id,
-                SeqState {
-                    last_token: out.next_token,
-                    position: req.prompt.len(),
-                    completion: vec![out.next_token],
-                },
-            );
-            if let Some(retainer) = &mut self.retainer {
-                let shared = req.shared_tokens.min(req.prompt.len());
-                retainer.touch(&req.prompt);
-                if shared > 0 {
-                    let prefix = req.prompt[..shared].to_vec();
-                    retainer.pin(&mut self.tree, &prefix);
-                }
-            }
-            self.stats.prefill_tokens_computed += (req.prompt.len() - matched) as u64;
-            self.stats.prefill_tokens_reused += matched as u64;
-            self.stats.prefill_time_s += t0.elapsed().as_secs_f64();
-            self.timing.insert(req.id, (seq.admitted_at, self.now(), matched));
-            // The prefill step emitted the first completion token.
-            let id = req.id;
-            self.sched.credit_tokens(id, 1);
+        let now = self.now();
+        {
+            let tree = &self.tree;
+            let sched = &mut self.sched;
+            sched.admit_prefilling(now, |req| tree.match_prefix(&req.prompt));
         }
+        let budget = match self.sched.step_token_budget() {
+            Some(b) => b.saturating_sub(self.sched.batch_size()),
+            None => usize::MAX,
+        };
+        let chunk_tokens = self.sched.prefill_chunk_tokens();
+        let mut pending: Vec<PrefillingSeq> = self.sched.take_prefilling().into();
+        // The queue is detached while slices run; restore it before
+        // propagating any runner error, or admitted requests (and their
+        // partial tree residency) would be orphaned unreachable by
+        // cancellation.
+        let result = self.advance_prefill(&mut pending, budget, chunk_tokens);
+        self.sched.put_back_prefilling(pending.into());
+        result?;
         // Requests whose budget is a single token finish at prefill.
+        let mut finished_early = Vec::new();
         for f in self.sched.retire_finished(self.now()) {
             self.tree.remove_sequence(SeqId(f.request.id));
             self.record_finished(&f);
             finished_early.push(f);
         }
         Ok(finished_early)
+    }
+
+    /// Advance the detached prefill queue under `budget` tokens, promoting
+    /// completed prompts into the decode batch. Entries are consumed from
+    /// `pending` only on activation, so the caller can restore whatever
+    /// remains even when a slice errors.
+    fn advance_prefill(
+        &mut self,
+        pending: &mut Vec<PrefillingSeq>,
+        mut budget: usize,
+        chunk_tokens: usize,
+    ) -> anyhow::Result<()> {
+        // Round-robin one slice per prompt per pass: a short prompt behind
+        // a 4096-token one prefills on its first pass instead of
+        // inheriting the head-of-line stall inside the prefill queue.
+        let mut progressed = true;
+        while budget > 0 && progressed {
+            progressed = false;
+            let mut i = 0usize;
+            while i < pending.len() && budget > 0 {
+                let (leaders, rest) = pending.split_at_mut(i);
+                let pf = &mut rest[0];
+                let prompt_len = pf.request.prompt.len();
+                let first_slice = pf.filled == 0;
+                let (start, matched) = if first_slice {
+                    // First slice: prefix lookup against everything
+                    // resident right now — including slices leaders have
+                    // produced earlier in this very step. Never match the
+                    // entire prompt: the model still needs the last
+                    // position's logits to start decoding.
+                    let m = self.tree.match_prefix(&pf.request.prompt).min(prompt_len - 1);
+                    // Defer while an earlier in-progress prompt will push
+                    // the matchable prefix further: the leader's prefill
+                    // becomes this request's cache hit instead of
+                    // duplicated compute.
+                    let will_extend = leaders
+                        .iter()
+                        .any(|l| common_prefix(&l.request.prompt, &pf.request.prompt) > m);
+                    if will_extend {
+                        // Count requests that deferred, not polling
+                        // iterations: the same waiting follower re-enters
+                        // this branch every pass until its leader lands.
+                        if !pf.deferred {
+                            pf.deferred = true;
+                            self.stats.prefill_deferrals += 1;
+                        }
+                        i += 1;
+                        continue;
+                    }
+                    (m, m)
+                } else {
+                    (pf.filled, pf.reused)
+                };
+                let remaining = prompt_len - start;
+                let mut take = remaining.min(chunk_tokens).min(budget);
+                if start + take == prompt_len && budget < take + 1 {
+                    // The final slice promotes the sequence into this
+                    // step's decode batch; reserve one budget token for
+                    // that decode so the whole step stays within budget.
+                    take -= 1;
+                }
+                if take == 0 {
+                    i += 1;
+                    continue;
+                }
+                let is_final = start + take == prompt_len;
+                let t0 = Instant::now();
+                let id = pf.request.id;
+                if first_slice {
+                    // Dense rows of the matched prefix, read (and widened)
+                    // from the tree exactly once; later slices of this
+                    // prompt extend the cache with their own output below
+                    // instead of re-walking the tree.
+                    let rows = self.gather_prefix_rows(&pf.request.prompt, start);
+                    self.prefill_kv.insert(id, rows);
+                }
+                let (pk, pv) = {
+                    let shape = self.tree.shape();
+                    let (ck, cv) =
+                        self.prefill_kv.get(&id).expect("prefix cache created at first slice");
+                    debug_assert_eq!(ck.len(), start * shape.heads * shape.head_dim);
+                    (
+                        head_major(ck, start, shape.heads, shape.head_dim),
+                        head_major(cv, start, shape.heads, shape.head_dim),
+                    )
+                };
+                let slice = &pf.request.prompt[start..start + take];
+                let out = self.runner.prefill(slice, start, &pk, &pv, start, is_final)?;
+                anyhow::ensure!(
+                    out.k_rows.len() == take,
+                    "prefill returned {} rows for {take} suffix tokens",
+                    out.k_rows.len()
+                );
+                if first_slice {
+                    // `matched` is clamped to len-1, but the tree may hold
+                    // the entire prompt (an identical prompt admitted
+                    // earlier): insert matches maximally and calls back
+                    // only for truly-unmatched positions, so any extra
+                    // computed row is simply dropped.
+                    self.tree.insert_sequence(
+                        SeqId(id),
+                        &pf.request.prompt[..start + take],
+                        &mut |pos, _tok, k, v| {
+                            debug_assert!(pos >= matched);
+                            k.copy_from_slice(&out.k_rows[pos - start]);
+                            v.copy_from_slice(&out.v_rows[pos - start]);
+                        },
+                    );
+                    pf.reused = matched;
+                } else {
+                    self.tree.extend_sequence(SeqId(id), slice, &mut |pos, _tok, k, v| {
+                        k.copy_from_slice(&out.k_rows[pos - start]);
+                        v.copy_from_slice(&out.v_rows[pos - start]);
+                    });
+                }
+                pf.filled = start + take;
+                budget -= take;
+                progressed = true;
+                self.stats.prefill_chunks_total += 1;
+                self.stats.prefill_tokens_computed += take as u64;
+                self.stats.prefill_time_s += t0.elapsed().as_secs_f64();
+                if is_final {
+                    // Prompt fully resident: the prefix cache is done.
+                    self.prefill_kv.remove(&id);
+                    // The reserved decode token for the fresh sequence.
+                    budget = budget.saturating_sub(1);
+                    let next = out.next_token.ok_or_else(|| {
+                        anyhow::anyhow!("final prefill slice must produce the first token")
+                    })?;
+                    self.states.insert(
+                        id,
+                        SeqState {
+                            last_token: next,
+                            position: prompt_len,
+                            completion: vec![next],
+                        },
+                    );
+                    if let Some(retainer) = &mut self.retainer {
+                        let shared = pf.request.shared_tokens.min(prompt_len);
+                        retainer.touch(&pf.request.prompt);
+                        if shared > 0 {
+                            let prefix = pf.request.prompt[..shared].to_vec();
+                            retainer.pin(&mut self.tree, &prefix);
+                        }
+                    }
+                    self.stats.prefill_tokens_reused += pf.reused as u64;
+                    self.timing.insert(id, (pf.admitted_at, self.now(), pf.reused));
+                    let done = pending.remove(i);
+                    self.sched.activate(done);
+                    // The prefill step emitted the first completion token.
+                    self.sched.credit_tokens(id, 1);
+                    // `i` now indexes the next entry — don't advance.
+                } else {
+                    // Extend the prefix cache with this slice's rows so
+                    // the next slice starts from memory, not the tree.
+                    let cache = self.prefill_kv.get_mut(&id).expect("cache created above");
+                    for r in &out.k_rows {
+                        cache.0.extend_from_slice(r);
+                    }
+                    for r in &out.v_rows {
+                        cache.1.extend_from_slice(r);
+                    }
+                    i += 1;
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Decode phase: one batched decode step over every active sequence,
@@ -343,7 +544,14 @@ impl<R: ModelRunner> Engine<R> {
                     positions.push(st.position);
                 }
                 None => {
-                    debug_assert!(sid.0 >= PIN_ID_BASE, "unknown non-pin sequence {sid:?}");
+                    // Pins and partially prefilled prompts are phantom
+                    // rows: resident in the tree (so their chunks stay
+                    // shared/referenced and later arrivals can match
+                    // them) but not decoding yet.
+                    debug_assert!(
+                        sid.0 >= PIN_ID_BASE || self.sched.is_prefilling(sid.0),
+                        "unknown non-pin sequence {sid:?}"
+                    );
                     last_tokens.push(0);
                     positions.push(0);
                 }
@@ -386,7 +594,7 @@ impl<R: ModelRunner> Engine<R> {
             first_token_s: first_token,
             finished_s: f.finished_at,
             prompt_tokens: f.request.prompt.len(),
-            completion_tokens: f.request.max_new_tokens,
+            completion_tokens: f.generated,
             reused_prompt_tokens: reused,
         });
     }
@@ -405,17 +613,21 @@ impl<R: ModelRunner> Engine<R> {
         Ok(all)
     }
 
-    /// Dense `[heads_total, matched, head_dim]` K/V of an existing prefix.
-    fn gather_matched_prefix(&self, tokens: &[u32], matched: usize) -> (Vec<f32>, Vec<f32>) {
+    /// Dense token-major (`[pos][heads_total * head_dim]`) K/V rows of a
+    /// resident prefix, widened from the storage dtype to the f32 the
+    /// runner consumes. Token-major so chunked prefill can append each
+    /// slice's fresh rows in O(slice); [`head_major`] re-lays it out into
+    /// the runner contract per call.
+    fn gather_prefix_rows(&self, tokens: &[u32], matched: usize) -> (Vec<f32>, Vec<f32>) {
         let shape = self.tree.shape();
         let d = shape.head_dim;
-        let mut k = vec![0.0f32; shape.heads * matched * d];
-        let mut v = vec![0.0f32; shape.heads * matched * d];
+        let row = shape.heads * d;
+        let mut k = vec![0.0f32; matched * row];
+        let mut v = vec![0.0f32; matched * row];
         if matched == 0 {
             return (k, v);
         }
-        // Walk matching chunks from the roots, copying rows (widened from
-        // the storage dtype to the f32 the runner consumes).
+        // Walk matching chunks from the roots.
         let probe = &tokens[..matched];
         let mut pos = 0usize;
         while pos < matched {
@@ -425,7 +637,7 @@ impl<R: ModelRunner> Engine<R> {
             for h in 0..shape.heads {
                 for p in 0..take {
                     let src = (h * shape.chunk_size + p) * d;
-                    let dst = (h * matched + pos + p) * d;
+                    let dst = (pos + p) * row + h * d;
                     chunk.k_slab().read_f32(src, &mut k[dst..dst + d]);
                     chunk.v_slab().read_f32(src, &mut v[dst..dst + d]);
                 }
@@ -434,6 +646,20 @@ impl<R: ModelRunner> Engine<R> {
         }
         (k, v)
     }
+}
+
+/// Re-layout token-major rows (`[len][heads * d]`) into the dense
+/// `[heads, len, d]` buffer [`ModelRunner::prefill`] takes as its prefix.
+fn head_major(rows: &[f32], len: usize, heads: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; heads * len * d];
+    for p in 0..len {
+        for h in 0..heads {
+            let src = (p * heads + h) * d;
+            let dst = (h * len + p) * d;
+            out[dst..dst + d].copy_from_slice(&rows[src..src + d]);
+        }
+    }
+    out
 }
 
 pub mod testing {
@@ -480,6 +706,7 @@ pub mod testing {
             _pk: &[f32],
             _pv: &[f32],
             _prefix_len: usize,
+            is_final: bool,
         ) -> anyhow::Result<PrefillOutput> {
             let k_rows = suffix_tokens
                 .iter()
@@ -491,12 +718,11 @@ pub mod testing {
                 .enumerate()
                 .map(|(i, &t)| self.kv_row(t, pos_offset + i, 1))
                 .collect();
-            let last = *suffix_tokens.last().unwrap();
-            Ok(PrefillOutput {
-                k_rows,
-                v_rows,
-                next_token: self.next_token(last, pos_offset + suffix_tokens.len()),
-            })
+            let next_token = is_final.then(|| {
+                let last = *suffix_tokens.last().expect("prefill slices are non-empty");
+                self.next_token(last, pos_offset + suffix_tokens.len())
+            });
+            Ok(PrefillOutput { k_rows, v_rows, next_token })
         }
 
         fn decode(
@@ -518,6 +744,53 @@ pub mod testing {
                 out.next_tokens.push(self.next_token(last_tokens[i], positions[i] + 1));
             }
             Ok(out)
+        }
+    }
+
+    /// Wraps a runner with a per-token prefill delay, emulating the
+    /// prefill FLOPs of a real model so head-of-line effects are
+    /// observable in wall time (the decode side is paced by the gateway's
+    /// `decode_interval`). Used by the mixed-workload bench and the
+    /// interleaving e2e tests.
+    pub struct PacedRunner<R> {
+        pub inner: R,
+        pub prefill_us_per_token: u64,
+    }
+
+    impl<R: ModelRunner> ModelRunner for PacedRunner<R> {
+        fn heads_total(&self) -> usize {
+            self.inner.heads_total()
+        }
+
+        fn head_dim(&self) -> usize {
+            self.inner.head_dim()
+        }
+
+        fn prefill(
+            &mut self,
+            suffix_tokens: &[u32],
+            pos_offset: usize,
+            prefix_k: &[f32],
+            prefix_v: &[f32],
+            prefix_len: usize,
+            is_final: bool,
+        ) -> anyhow::Result<PrefillOutput> {
+            if self.prefill_us_per_token > 0 {
+                std::thread::sleep(std::time::Duration::from_micros(
+                    self.prefill_us_per_token * suffix_tokens.len() as u64,
+                ));
+            }
+            self.inner.prefill(suffix_tokens, pos_offset, prefix_k, prefix_v, prefix_len, is_final)
+        }
+
+        fn decode(
+            &mut self,
+            tree: &PrefixTree,
+            ctx: &TreeContext,
+            last_tokens: &[u32],
+            positions: &[usize],
+        ) -> anyhow::Result<DecodeOutput> {
+            self.inner.decode(tree, ctx, last_tokens, positions)
         }
     }
 }
@@ -749,6 +1022,172 @@ mod tests {
         assert!(m.prefix_hit_rate() > 0.3, "second prompt reused the first's prefix");
         let text = crate::metrics::render_exposition(m, "t");
         assert!(text.contains("t_requests_total 2"));
+    }
+
+    #[test]
+    fn identical_prompts_in_one_batch_hit_the_full_prompt_clamp() {
+        // Two identical prompts admitted in the same engine step: the
+        // follower's prefix lookup happens after the leader's prefill has
+        // inserted the full prompt, so the tree internally matches all 12
+        // tokens while the engine clamps to 11 (the model still needs the
+        // last position's logits). The extra computed row is dropped, the
+        // tree's refcounts stay consistent, and both decode identically.
+        let run = |chunk_tokens: usize, budget: usize| {
+            let mut e = engine();
+            if chunk_tokens > 0 {
+                e.set_chunked_prefill(chunk_tokens, budget);
+            }
+            let p: Vec<u32> = (0..12).collect();
+            e.submit(request(0, p.clone(), 3));
+            e.submit(request(1, p, 3));
+            let done = e.run_to_completion().unwrap();
+            assert_eq!(done.len(), 2);
+            e.tree().check_invariants().unwrap();
+            assert_eq!(e.tree().pool().in_use(), 0, "everything returned to the pool");
+            let stats = e.stats();
+            assert_eq!(
+                stats.prefill_tokens_reused, 11,
+                "follower reuses all but the last position"
+            );
+            assert_eq!(
+                stats.prefill_tokens_computed,
+                12 + 1,
+                "leader computes 12, follower recomputes only the logits position"
+            );
+            let c0 = e.completion_of(0).unwrap().to_vec();
+            let c1 = e.completion_of(1).unwrap().to_vec();
+            assert_eq!(c0, c1, "identical prompts decode identically");
+            c0
+        };
+        let mono = run(0, 0);
+        let chunked = run(4, 16);
+        assert_eq!(mono, chunked, "chunked prefill must not change completions");
+    }
+
+    #[test]
+    fn chunked_prefill_interleaves_and_respects_the_step_budget() {
+        let mut e = Engine::new(SyntheticRunner { heads_total: 2, head_dim: 4, vocab: 101 }, 8, 4);
+        e.set_chunked_prefill(8, 24);
+        // Two active decoders with long completion budgets.
+        e.submit(request(0, vec![1, 2, 3], 64));
+        e.submit(request(1, vec![4, 5, 6], 64));
+        e.step().unwrap();
+        assert_eq!(e.scheduler().batch_size(), 2);
+        // A 200-token cold prompt joins; per step it may prefill at most
+        // 24 - 2 (decode) tokens, in 8-token slices.
+        e.submit(request(2, (1000..1200).collect(), 2));
+        let mut prev = e.stats();
+        let mut prefill_steps = 0;
+        let mut decode_alongside = 0;
+        let mut all_finished = Vec::new();
+        for _ in 0..64 {
+            all_finished.extend(e.step().unwrap());
+            let s = e.stats();
+            let spent = (s.prefill_tokens_computed - prev.prefill_tokens_computed)
+                + (s.decoded_tokens - prev.decoded_tokens);
+            assert!(spent <= 24, "engine step spent {spent} tokens, budget is 24");
+            if s.prefill_chunks_total > prev.prefill_chunks_total {
+                prefill_steps += 1;
+                if s.decode_steps > prev.decode_steps {
+                    decode_alongside += 1;
+                }
+            }
+            prev = s;
+            if e.scheduler().prefill_depth() == 0 {
+                break;
+            }
+        }
+        assert!(prefill_steps >= 2, "200-token prefill must span multiple engine steps");
+        assert!(decode_alongside >= 2, "decode must keep running between prefill slices");
+        assert_eq!(e.scheduler().prefill_depth(), 0, "cold prompt finished prefilling");
+        e.tree().check_invariants().unwrap();
+        all_finished.extend(e.run_to_completion().unwrap());
+        assert_eq!(all_finished.len(), 3);
+    }
+
+    #[test]
+    fn sibling_defers_to_inflight_leader_and_reuses_its_prefill() {
+        let mut e = engine(); // chunk_size 4, max_batch 4
+        e.set_chunked_prefill(4, 8);
+        let sys: Vec<u32> = (0..64).collect();
+        let mut p1 = sys.clone();
+        p1.extend([100, 101]);
+        let mut p2 = sys.clone();
+        p2.extend([200, 201]);
+        e.submit(request(0, p1, 2));
+        e.submit(request(1, p2, 2));
+        let done = e.run_to_completion().unwrap();
+        assert_eq!(done.len(), 2);
+        let stats = e.stats();
+        // The follower deferred its first slice while the leader was
+        // mid-prefill, so the whole shared prefix became pure reuse.
+        assert!(stats.prefill_deferrals > 0, "follower must defer to the in-flight leader");
+        assert_eq!(stats.prefill_tokens_reused, 64, "entire shared prefix reused");
+        assert_eq!(stats.prefill_tokens_computed, 66 + 2, "only the two private suffixes computed");
+        e.tree().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn chunked_prefill_matches_monolithic_end_state() {
+        // Same workload, chunked vs monolithic: identical completions,
+        // identical reuse accounting, empty tree at the end.
+        let run = |chunked: bool| {
+            let mut e = engine();
+            if chunked {
+                e.set_chunked_prefill(4, 12);
+            }
+            let sys: Vec<u32> = (0..32).collect();
+            for i in 0..3u64 {
+                let mut p = sys.clone();
+                p.extend([100 + i as u32, 200 + i as u32]);
+                e.submit(request(i, p, 5));
+            }
+            e.run_to_completion().unwrap();
+            let completions: Vec<Vec<u32>> =
+                (0..3).map(|i| e.completion_of(i).unwrap().to_vec()).collect();
+            e.tree().check_invariants().unwrap();
+            assert_eq!(e.tree().pool().in_use(), 0);
+            (completions, e.stats().prefill_tokens_reused)
+        };
+        let (mono, mono_reused) = run(false);
+        let (chunked, chunked_reused) = run(true);
+        assert_eq!(mono, chunked);
+        assert!(
+            chunked_reused >= mono_reused,
+            "deferral can only increase reuse: {chunked_reused} vs {mono_reused}"
+        );
+    }
+
+    #[test]
+    fn degenerate_one_token_budget_still_makes_progress() {
+        // Regression: a step budget of 1 can never fit a final slice plus
+        // its reserved decode token; the scheduler clamps it to 2 so the
+        // engine cannot spin forever on the last prompt position.
+        let mut e = engine();
+        e.set_chunked_prefill(1, 1);
+        e.submit(request(0, vec![1, 2, 3, 4, 5], 2));
+        let mut steps = 0;
+        while !e.is_idle() {
+            e.step().unwrap();
+            steps += 1;
+            assert!(steps < 1000, "engine livelocked under a degenerate token budget");
+        }
+        assert_eq!(e.completion_of(0).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn cancel_mid_prefill_releases_partial_residency() {
+        let mut e = engine();
+        e.set_chunked_prefill(4, 8);
+        e.submit(request(0, (0..64).collect(), 4));
+        e.step().unwrap(); // first slices land; prompt far from complete
+        assert_eq!(e.scheduler().prefill_depth(), 1);
+        assert!(e.tree().pool().in_use() > 0, "partial resident holds chunks");
+        assert!(e.cancel(0), "mid-prefill cancel succeeds");
+        assert_eq!(e.tree().pool().in_use(), 0, "partial chunks released");
+        assert_eq!(e.metrics().cancelled, 1);
+        assert!(e.is_idle());
+        e.tree().check_invariants().unwrap();
     }
 
     #[test]

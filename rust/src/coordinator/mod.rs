@@ -9,5 +9,5 @@ pub mod sim;
 
 pub use engine::{DecodeOutput, Engine, EngineStats, ModelRunner, PrefillOutput};
 pub use microbench::{AblationConfig, KernelBench, MicroConfig, TppVariant};
-pub use scheduler::{ActiveSeq, FinishedSeq, Scheduler};
+pub use scheduler::{ActiveSeq, FinishedSeq, PrefillingSeq, Removed, Scheduler};
 pub use sim::{simulate, SimConfig, SimResult, SystemKind};

@@ -1,13 +1,28 @@
-//! Iteration-based (continuous) batching scheduler (§2.2).
+//! Iteration-based (continuous) batching scheduler (§2.2) with chunked,
+//! prefix-aware prefill.
 //!
-//! FCFS admission with a max-batch cap: new sequences join at iteration
+//! Admission with a max-batch cap: new sequences join at iteration
 //! boundaries, completed sequences leave immediately, so the decode batch
 //! is re-formed every iteration — the Orca/vLLM discipline the paper
 //! assumes ("ChunkAttention ... assumes that iteration-based batching is
 //! enabled to form batches for its kernel to run efficiently").
+//!
+//! Two refinements over plain FCFS admission:
+//!
+//! - **Chunked prefill.** An admitted request does not prefill its whole
+//!   unmatched prompt suffix inline; it sits in a *prefill queue*
+//!   ([`PrefillingSeq`]) and the engine advances it in chunk-sized slices
+//!   under a per-step token budget ([`Scheduler::set_chunked_prefill`]),
+//!   so one 4096-token cold prompt can no longer stall every in-flight
+//!   decoder (head-of-line blocking, §3.2 regime).
+//! - **Prefix-aware admission.** Free batch slots go to the queued
+//!   requests sharing the longest prefix with content already resident —
+//!   cached in the tree or mid-prefill — so sibling prefills become pure
+//!   reuse instead of repeated work (the Prompt Cache observation).
 
 use std::collections::VecDeque;
 
+use crate::kvcache::tree::common_prefix;
 use crate::workload::Request;
 
 /// A sequence currently being decoded.
@@ -31,6 +46,30 @@ impl ActiveSeq {
     }
 }
 
+/// A request admitted into the batch whose prompt is still prefilling.
+/// Once its first slice lands it is a first-class resident of the prefix
+/// tree: later arrivals match against its partial content.
+#[derive(Debug, Clone)]
+pub struct PrefillingSeq {
+    pub request: Request,
+    pub admitted_at: f64,
+    /// Prompt tokens already resident in the tree (reused + computed).
+    pub filled: usize,
+    /// Prompt tokens served from the prefix tree at the first slice.
+    pub reused: usize,
+    /// Whether this request has (ever) deferred its first slice to an
+    /// in-progress leader — tracked so the deferral counter counts
+    /// requests, not polling iterations.
+    pub deferred: bool,
+}
+
+impl PrefillingSeq {
+    /// Prompt tokens not yet resident.
+    pub fn remaining(&self) -> usize {
+        self.request.prompt.len() - self.filled
+    }
+}
+
 /// A request that finished decoding, with its timing.
 #[derive(Debug, Clone)]
 pub struct FinishedSeq {
@@ -39,13 +78,19 @@ pub struct FinishedSeq {
     pub finished_at: f64,
     /// End-to-end latency including queueing (finish - arrival).
     pub e2e_latency_s: f64,
+    /// Completion tokens actually generated. Usually equals
+    /// `request.max_new_tokens`, but early-finished sequences (stop
+    /// conditions, multi-token crediting) can retire with a different
+    /// count — latency must be normalized by what was really produced.
+    pub generated: usize,
 }
 
 impl FinishedSeq {
-    /// The paper's normalized latency: end-to-end latency divided by
-    /// completion tokens (ms/token).
+    /// The paper's normalized latency: end-to-end latency divided by the
+    /// completion tokens actually generated (ms/token) — not the request's
+    /// budget, which would understate the cost of early-finished requests.
     pub fn normalized_latency_ms_per_tok(&self) -> f64 {
-        self.e2e_latency_s * 1e3 / self.request.max_new_tokens.max(1) as f64
+        self.e2e_latency_s * 1e3 / self.generated.max(1) as f64
     }
 }
 
@@ -54,13 +99,18 @@ impl FinishedSeq {
 pub enum Removed {
     /// Still waiting in the admission queue; never prefilled.
     Queued(Request),
+    /// Admitted but mid-prefill: holds tree residency iff `filled > 0`.
+    Prefilling(PrefillingSeq),
     /// Mid-flight: was decoding when removed.
     Active(ActiveSeq),
 }
 
-/// FCFS continuous-batching scheduler.
+/// Continuous-batching scheduler (FCFS queue, prefix-aware admission).
 pub struct Scheduler {
     queue: VecDeque<Request>,
+    /// Admitted requests whose prompts are still prefilling, in admission
+    /// order (the engine round-robins budget slices across them).
+    prefilling: VecDeque<PrefillingSeq>,
     active: Vec<ActiveSeq>,
     finished: Vec<FinishedSeq>,
     max_batch: usize,
@@ -73,6 +123,11 @@ pub struct Scheduler {
     finished_history_limit: Option<usize>,
     finished_total: u64,
     admission_rejections: u64,
+    /// Prefill slice granularity in tokens (`usize::MAX` = monolithic).
+    prefill_chunk_tokens: usize,
+    /// Per-step token budget across prefill slices and decode tokens;
+    /// `None` = unbounded (monolithic prefill behavior).
+    step_token_budget: Option<usize>,
 }
 
 impl Scheduler {
@@ -80,6 +135,7 @@ impl Scheduler {
         assert!(max_batch > 0);
         Scheduler {
             queue: VecDeque::new(),
+            prefilling: VecDeque::new(),
             active: Vec::new(),
             finished: Vec::new(),
             max_batch,
@@ -88,12 +144,45 @@ impl Scheduler {
             finished_history_limit: None,
             finished_total: 0,
             admission_rejections: 0,
+            prefill_chunk_tokens: usize::MAX,
+            step_token_budget: None,
         }
     }
 
     /// Cap the admission queue; `try_submit` rejects beyond it.
     pub fn set_queue_limit(&mut self, limit: Option<usize>) {
         self.queue_limit = limit;
+    }
+
+    /// Configure chunked prefill: unmatched prompt suffixes advance in
+    /// `chunk_tokens`-sized slices, and each engine step spends at most
+    /// `step_budget` tokens across prefill slices and decode tokens.
+    /// Either knob set to 0 disables it (monolithic prefill / no budget).
+    pub fn set_chunked_prefill(&mut self, chunk_tokens: usize, step_budget: usize) {
+        self.prefill_chunk_tokens = if chunk_tokens == 0 { usize::MAX } else { chunk_tokens };
+        // A budget of 1 could never complete any prompt: the final slice
+        // must fit one computed token plus the reserved decode token, so
+        // the engine would spin forever without progress. Clamp to the
+        // minimum viable budget.
+        let step_budget = if step_budget == 1 { 2 } else { step_budget };
+        self.step_token_budget = if step_budget == 0 { None } else { Some(step_budget) };
+        if let Some(b) = self.step_token_budget {
+            if b <= self.max_batch {
+                log::warn!(
+                    "step token budget {b} <= max batch {}: a full decode batch leaves no \
+                     headroom for prefill progress",
+                    self.max_batch
+                );
+            }
+        }
+    }
+
+    pub fn step_token_budget(&self) -> Option<usize> {
+        self.step_token_budget
+    }
+
+    pub fn prefill_chunk_tokens(&self) -> usize {
+        self.prefill_chunk_tokens
     }
 
     /// Bound the retained `finished` history (oldest entries are dropped).
@@ -136,6 +225,9 @@ impl Scheduler {
         if let Some(pos) = self.queue.iter().position(|r| r.id == id) {
             return self.queue.remove(pos).map(Removed::Queued);
         }
+        if let Some(pos) = self.prefilling.iter().position(|p| p.request.id == id) {
+            return self.prefilling.remove(pos).map(Removed::Prefilling);
+        }
         if let Some(pos) = self.active.iter().position(|s| s.request.id == id) {
             return Some(Removed::Active(self.active.remove(pos)));
         }
@@ -147,8 +239,11 @@ impl Scheduler {
         self.admission_rejections
     }
 
-    /// Admit queued requests into free batch slots at time `now`; returns
-    /// the newly admitted sequences (the engine must prefill them).
+    /// Admit queued requests straight into decode slots at time `now`,
+    /// FCFS; returns the newly admitted sequences (the caller prefills
+    /// them inline). Used by the virtual-time simulator, which models
+    /// prefill cost itself; the engine admits via
+    /// [`Scheduler::admit_prefilling`] instead.
     pub fn admit(&mut self, now: f64) -> Vec<ActiveSeq> {
         let mut admitted = Vec::new();
         while self.active.len() + admitted.len() < self.max_batch {
@@ -158,6 +253,97 @@ impl Scheduler {
         self.active.extend(admitted.iter().cloned());
         self.peak_batch = self.peak_batch.max(self.active.len());
         admitted
+    }
+
+    /// Admit queued requests into free batch slots as *prefilling*
+    /// residents at time `now`. Prefix-aware: each free slot goes to the
+    /// queued request sharing the longest prefix with resident content —
+    /// `cached_match` scores against the prefix tree, and requests already
+    /// prefilling contribute their (future) prompt content — with FCFS
+    /// order breaking ties. Grouping prefix-sharing requests this way
+    /// turns sibling prefills into cache hits. Returns how many admitted.
+    pub fn admit_prefilling<F: Fn(&Request) -> usize>(&mut self, now: f64, cached_match: F) -> usize {
+        let mut admitted = 0usize;
+        if self.active.len() + self.prefilling.len() >= self.max_batch || self.queue.is_empty() {
+            return 0;
+        }
+        // Seed each queued request's score once — tree match (the tree is
+        // stable during admission) folded with affinity against the
+        // current prefilling set — then per admitted slot fold in just
+        // the newly admitted prompt, the only term that can change.
+        let mut scores: Vec<usize> = self
+            .queue
+            .iter()
+            .map(|r| {
+                let mut s = cached_match(r);
+                for p in &self.prefilling {
+                    s = s.max(common_prefix(&p.request.prompt, &r.prompt));
+                }
+                s
+            })
+            .collect();
+        while self.active.len() + self.prefilling.len() < self.max_batch && !self.queue.is_empty() {
+            let mut best = 0usize;
+            let mut best_score = 0usize;
+            for (i, &s) in scores.iter().enumerate() {
+                if s > best_score {
+                    best = i;
+                    best_score = s;
+                }
+            }
+            scores.remove(best);
+            let req = self.queue.remove(best).expect("queue checked non-empty");
+            self.prefilling.push_back(PrefillingSeq {
+                request: req,
+                admitted_at: now,
+                filled: 0,
+                reused: 0,
+                deferred: false,
+            });
+            let newly = &self.prefilling.back().expect("just pushed").request.prompt;
+            for (s, r) in scores.iter_mut().zip(self.queue.iter()) {
+                *s = (*s).max(common_prefix(newly, &r.prompt));
+            }
+            admitted += 1;
+        }
+        admitted
+    }
+
+    /// Detach the prefill queue so the engine can advance slices without
+    /// borrowing the scheduler; pair with [`Scheduler::put_back_prefilling`].
+    pub fn take_prefilling(&mut self) -> VecDeque<PrefillingSeq> {
+        std::mem::take(&mut self.prefilling)
+    }
+
+    /// Restore the (possibly shrunk) prefill queue after a prefill phase.
+    pub fn put_back_prefilling(&mut self, pending: VecDeque<PrefillingSeq>) {
+        debug_assert!(self.prefilling.is_empty(), "prefill queue restored twice");
+        self.prefilling = pending;
+    }
+
+    /// Promote a fully prefilled request into the decode batch.
+    pub fn activate(&mut self, pf: PrefillingSeq) {
+        debug_assert_eq!(pf.remaining(), 0, "activating a partially prefilled prompt");
+        self.active.push(ActiveSeq {
+            request: pf.request,
+            generated: 0,
+            admitted_at: pf.admitted_at,
+        });
+        self.peak_batch = self.peak_batch.max(self.active.len());
+    }
+
+    /// Requests admitted but still prefilling (the prefill queue depth).
+    pub fn prefill_depth(&self) -> usize {
+        self.prefilling.len()
+    }
+
+    pub fn prefilling(&self) -> &VecDeque<PrefillingSeq> {
+        &self.prefilling
+    }
+
+    /// Whether `id` is admitted and still prefilling (a partial resident).
+    pub fn is_prefilling(&self, id: u64) -> bool {
+        self.prefilling.iter().any(|p| p.request.id == id)
     }
 
     /// Credit `n` already-generated tokens to a sequence (the prefill step
@@ -187,6 +373,7 @@ impl Scheduler {
                     e2e_latency_s: now - s.request.arrival_s,
                     admitted_at: s.admitted_at,
                     finished_at: now,
+                    generated: s.generated,
                     request: s.request.clone(),
                 });
                 false
@@ -227,7 +414,7 @@ impl Scheduler {
     }
 
     pub fn is_idle(&self) -> bool {
-        self.queue.is_empty() && self.active.is_empty()
+        self.queue.is_empty() && self.prefilling.is_empty() && self.active.is_empty()
     }
 }
 
@@ -294,6 +481,29 @@ mod tests {
     }
 
     #[test]
+    fn normalized_latency_divides_by_actual_completion_length() {
+        // Regression: the old implementation divided by
+        // `request.max_new_tokens`, so a sequence retiring with a different
+        // generated count (multi-token crediting today; stop tokens /
+        // cancellation paths tomorrow) reported the wrong per-token cost.
+        let mut s = Scheduler::new(1);
+        s.submit(req(0, 0.0, 4, 10));
+        s.admit(0.0);
+        // A runner that credits several tokens at once (prefill emits one,
+        // speculative decoding emits more) retires past the budget.
+        s.credit_tokens(0, 12);
+        let done = s.retire_finished(2.0);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].generated, 12, "actual completion length recorded");
+        let want = 2.0 * 1e3 / 12.0;
+        assert!(
+            (done[0].normalized_latency_ms_per_tok() - want).abs() < 1e-9,
+            "normalized latency must divide by generated tokens (12), not the budget (10): {}",
+            done[0].normalized_latency_ms_per_tok()
+        );
+    }
+
+    #[test]
     fn finished_history_is_bounded_when_capped() {
         let mut s = Scheduler::new(4);
         s.set_finished_history_limit(Some(2));
@@ -354,6 +564,73 @@ mod tests {
         assert_eq!(done, vec![1, 3]);
         assert_eq!(s.peak_batch(), 2, "cancellation must not corrupt the high-water mark");
         assert!(s.is_idle());
+    }
+
+    #[test]
+    fn remove_prefilling_sequence() {
+        let mut s = Scheduler::new(2);
+        s.submit(req(0, 0.0, 64, 4));
+        s.admit_prefilling(0.0, |_| 0);
+        assert_eq!(s.prefill_depth(), 1);
+        assert!(s.is_prefilling(0));
+        assert!(!s.is_idle());
+        match s.remove(0) {
+            Some(Removed::Prefilling(p)) => {
+                assert_eq!(p.request.id, 0);
+                assert_eq!(p.filled, 0);
+            }
+            other => panic!("expected prefilling removal, got {other:?}"),
+        }
+        assert_eq!(s.prefill_depth(), 0);
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn prefix_aware_admission_groups_sharers() {
+        // Queue: [cold A, sharer B of resident prefix, sharer C of B].
+        // One slot frees at a time; B (longest resident match) must admit
+        // before A despite FCFS order, and C groups with B.
+        let mut s = Scheduler::new(1);
+        let cold = Request { prompt: (500..540).collect(), ..req(10, 0.0, 0, 4) };
+        let sharer_b = Request { prompt: (0..40).collect(), ..req(11, 0.0, 0, 4) };
+        let sharer_c = Request { prompt: (0..48).collect(), ..req(12, 0.0, 0, 4) };
+        s.submit(cold);
+        s.submit(sharer_b);
+        s.submit(sharer_c);
+        // Pretend the tree holds a 32-token cached prefix of B/C's prompt.
+        let cached = |r: &Request| common_prefix(&r.prompt, &(0..32).collect::<Vec<u32>>());
+        assert_eq!(s.admit_prefilling(0.0, cached), 1);
+        assert_eq!(s.prefilling()[0].request.id, 11, "longest cached match first");
+        // B is mid-prefill: C now scores by its shared prefix with B (40)
+        // and still beats the cold request.
+        let mut pf = s.take_prefilling();
+        pf[0].filled = 8;
+        s.put_back_prefilling(pf);
+        // Free the slot math by raising the cap.
+        s.max_batch = 2;
+        assert_eq!(s.admit_prefilling(0.1, cached), 1);
+        assert_eq!(s.prefilling()[1].request.id, 12, "sibling groups with the in-progress leader");
+        assert_eq!(s.queued(), 1, "cold request waits");
+    }
+
+    #[test]
+    fn activate_promotes_prefilled_requests_into_the_batch() {
+        let mut s = Scheduler::new(2);
+        s.submit(req(0, 0.0, 16, 3));
+        s.admit_prefilling(0.0, |_| 0);
+        let mut pending = s.take_prefilling();
+        let mut pf = pending.pop_front().unwrap();
+        pf.filled = pf.request.prompt.len();
+        s.put_back_prefilling(pending);
+        s.activate(pf);
+        assert_eq!(s.batch_size(), 1);
+        assert_eq!(s.prefill_depth(), 0);
+        assert_eq!(s.peak_batch(), 1);
+        s.credit_tokens(0, 1);
+        s.step_decode(0.1);
+        let done = s.step_decode(0.2);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].generated, 3);
     }
 
     #[test]

@@ -395,6 +395,64 @@ impl PrefixTree {
         self.bump_epoch();
     }
 
+    /// Extend a resident sequence with `tokens` (K/V rows produced by
+    /// `fill`; positions continue from the current length). This is the
+    /// chunked-prefill growth path: a partially prefilled prompt is a
+    /// first-class resident, so between two slices other sequences may
+    /// have matched onto its tail chunk — in that case (or when the tail
+    /// is full) growth forks fresh private chunks, exactly like a decode
+    /// append on a shared leaf. In-place tail extension of a private,
+    /// partially filled chunk does not bump the generation counter.
+    pub fn extend_sequence(&mut self, seq: SeqId, tokens: &[u32], fill: KvFill) {
+        if tokens.is_empty() {
+            return;
+        }
+        let shape = self.pool.shape();
+        let info = self.seqs.get(&seq).unwrap_or_else(|| panic!("unknown {seq:?}")).clone();
+        let mut leaf = info.leaf;
+        let base = info.len;
+        let mut structural = false;
+        let mut k_row = vec![0.0f32; shape.heads * shape.head_dim];
+        let mut v_row = vec![0.0f32; shape.heads * shape.head_dim];
+        let mut idx = 0usize;
+        while idx < tokens.len() {
+            let leaf_private = self.node(leaf).nseqs == 1;
+            let leaf_len = self.pool.get(self.node(leaf).chunk).len();
+            let (target, avail) = if leaf_private && leaf_len < shape.chunk_size {
+                // Fast path: room left in the private tail chunk.
+                (leaf, shape.chunk_size - leaf_len)
+            } else {
+                // Shared or full tail: grow a fresh private chunk below it.
+                // The old leaf stops terminating this sequence.
+                let node = self.new_node(Some(leaf));
+                self.node_mut(leaf).children.push(node);
+                self.node_mut(leaf).nterm -= 1;
+                {
+                    let n = self.node_mut(node);
+                    n.nseqs = 1;
+                    n.nterm = 1;
+                }
+                structural = true;
+                leaf = node;
+                (node, shape.chunk_size)
+            };
+            let take = avail.min(tokens.len() - idx);
+            let chunk_id = self.node(target).chunk;
+            for i in 0..take {
+                let t = tokens[idx + i];
+                fill(base + idx + i, t, &mut k_row, &mut v_row);
+                self.pool.get_mut(chunk_id).append(&shape, t, &k_row, &v_row);
+            }
+            idx += take;
+        }
+        let info = self.seqs.get_mut(&seq).expect("checked above");
+        info.leaf = leaf;
+        info.len += tokens.len();
+        if structural {
+            self.bump_epoch();
+        }
+    }
+
     /// Decode-append one token for a sequence. Only triggers a structural
     /// change (and context rebuild) when the leaf chunk is full or shared.
     pub fn append_token(&mut self, seq: SeqId, token: u32, k_rows: &[f32], v_rows: &[f32]) {
@@ -450,32 +508,47 @@ impl PrefixTree {
 
     fn build_context(&self) -> TreeContext {
         let mut ctx = TreeContext::default();
-        // Iterative DFS assigning contiguous sequence intervals.
         // Leaf-to-seq mapping: collect sequences terminating at each node.
         let mut term: BTreeMap<u32, Vec<SeqId>> = BTreeMap::new();
         for (&seq, info) in &self.seqs {
             term.entry(info.leaf.0).or_default().push(seq);
         }
-        fn dfs(
-            tree: &PrefixTree,
-            node: NodeId,
-            term: &BTreeMap<u32, Vec<SeqId>>,
-            ctx: &mut TreeContext,
-        ) {
-            let start = ctx.seq_order.len();
-            // Sequences ending exactly here come first in the interval.
-            if let Some(seqs) = term.get(&node.0) {
-                ctx.seq_order.extend_from_slice(seqs);
-            }
-            let entry_idx = ctx.entries.len();
-            ctx.entries.push(CtxEntry { node, chunk: tree.node(node).chunk, start, end: 0 });
-            for &child in &tree.node(node).children {
-                dfs(tree, child, term, ctx);
-            }
-            ctx.entries[entry_idx].end = ctx.seq_order.len();
+        // Explicit-stack DFS assigning contiguous sequence intervals. Tree
+        // depth is tokens/chunk_size along a path, so a single long
+        // sequence (64k tokens at a small chunk size) produces a path far
+        // deeper than any thread stack tolerates — per-node recursion is
+        // not an option here. `Enter` emits a node's entry and schedules
+        // its children; the matching `Exit` patches the interval end once
+        // the whole subtree has been emitted, which reproduces the
+        // recursive post-order exactly.
+        enum Frame {
+            Enter(NodeId),
+            Exit(usize),
         }
-        for &root in &self.roots {
-            dfs(self, root, &term, &mut ctx);
+        let mut stack: Vec<Frame> = self.roots.iter().rev().map(|&r| Frame::Enter(r)).collect();
+        while let Some(frame) = stack.pop() {
+            match frame {
+                Frame::Enter(node) => {
+                    let start = ctx.seq_order.len();
+                    // Sequences ending exactly here come first in the
+                    // interval.
+                    if let Some(seqs) = term.get(&node.0) {
+                        ctx.seq_order.extend_from_slice(seqs);
+                    }
+                    let entry_idx = ctx.entries.len();
+                    ctx.entries.push(CtxEntry {
+                        node,
+                        chunk: self.node(node).chunk,
+                        start,
+                        end: 0,
+                    });
+                    stack.push(Frame::Exit(entry_idx));
+                    for &child in self.node(node).children.iter().rev() {
+                        stack.push(Frame::Enter(child));
+                    }
+                }
+                Frame::Exit(entry_idx) => ctx.entries[entry_idx].end = ctx.seq_order.len(),
+            }
         }
         ctx
     }
@@ -652,7 +725,9 @@ impl SharingStats {
     }
 }
 
-fn common_prefix(a: &[u32], b: &[u32]) -> usize {
+/// Length of the longest common prefix of two token slices. Shared by the
+/// tree walks and the scheduler's prefix-aware admission scoring.
+pub fn common_prefix(a: &[u32], b: &[u32]) -> usize {
     a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count()
 }
 
@@ -858,6 +933,123 @@ mod tests {
         assert_eq!(ctx.entries.len(), 3);
         assert!(ctx.entries.iter().all(|e| !e.is_shared()));
         tree.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn extend_sequence_grows_in_place_then_across_chunks() {
+        let mut tree = PrefixTree::new(shape()); // chunk_size 4
+        insert(&mut tree, 1, &[1, 2]); // partial private chunk
+        let epoch = tree.epoch();
+        tree.extend_sequence(SeqId(1), &[3, 4], &mut fill_fn);
+        assert_eq!(tree.epoch(), epoch, "in-place tail extension is non-structural");
+        tree.extend_sequence(SeqId(1), &[5, 6, 7, 8, 9], &mut fill_fn);
+        assert!(tree.epoch() > epoch, "chunk overflow forks new nodes");
+        assert_eq!(tree.sequence_len(SeqId(1)), Some(9));
+        assert_eq!(tree.pool().in_use(), 3); // 4 + 4 + 1
+        let (k, _, tokens) = tree.gather_dense(SeqId(1)).unwrap();
+        assert_eq!(tokens, vec![1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        // Rows carry the positions the fill callback saw (continuing from
+        // the existing length), so slices are indistinguishable from a
+        // monolithic insert.
+        let mut whole = PrefixTree::new(shape());
+        insert(&mut whole, 7, &[1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        let (kw, _, _) = whole.gather_dense(SeqId(7)).unwrap();
+        assert_eq!(k, kw, "extended K rows bit-identical to a one-shot insert");
+        tree.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn extend_forks_when_a_follower_matched_the_partial_tail() {
+        // Chunked prefill interleaving: sequence 1 is mid-prefill when
+        // sequence 2 joins and matches its partial tail chunk. Growing 1
+        // must fork (the tail is now shared) instead of mutating 2's
+        // prefix in place.
+        let mut tree = PrefixTree::new(shape());
+        insert(&mut tree, 1, &[1, 2, 3]); // partial resident (3 of 4)
+        insert(&mut tree, 2, &[1, 2, 3]); // follower matches everything
+        tree.extend_sequence(SeqId(1), &[4, 5], &mut fill_fn);
+        tree.check_invariants().unwrap();
+        let (_, _, t1) = tree.gather_dense(SeqId(1)).unwrap();
+        let (_, _, t2) = tree.gather_dense(SeqId(2)).unwrap();
+        assert_eq!(t1, vec![1, 2, 3, 4, 5]);
+        assert_eq!(t2, vec![1, 2, 3], "follower's prefix untouched by the leader's growth");
+        // Shared [1,2,3] + private [4,5].
+        assert_eq!(tree.pool().in_use(), 2);
+        // And a follower arriving later still matches the extended content.
+        let m = tree.match_prefix(&[1, 2, 3, 4, 5, 9]);
+        assert_eq!(m, 5);
+    }
+
+    #[test]
+    fn deep_tree_context_does_not_overflow_the_stack() {
+        // Regression for the recursive build_context: one 64k-token
+        // sequence at chunk_size 1 is a 64k-deep path — per-node recursion
+        // blows the (2 MiB default) test-thread stack; the explicit-stack
+        // traversal must handle it and agree with the recursive reference
+        // on every field.
+        let s = KvShape::new(1, 1, 1);
+        let mut tree = PrefixTree::new(s);
+        let n = 65_536usize;
+        let tokens: Vec<u32> = (0..n as u32).collect();
+        tree.insert_sequence(SeqId(1), &tokens, &mut fill_fn);
+        // A second, shorter sequence sharing the prefix exercises interval
+        // nesting at depth.
+        let tokens2: Vec<u32> = (0..1000).collect();
+        tree.insert_sequence(SeqId(2), &tokens2, &mut fill_fn);
+        let ctx = tree.context_fresh();
+        assert_eq!(ctx.seq_order.len(), 2);
+        assert_eq!(ctx.entries.len(), n);
+        // The first 1000 chunks cover both sequences, the rest only one.
+        assert_eq!(ctx.entries[0].end - ctx.entries[0].start, 2);
+        assert_eq!(ctx.entries[999].end - ctx.entries[999].start, 2);
+        assert_eq!(ctx.entries[1000].end - ctx.entries[1000].start, 1);
+        assert_eq!(ctx.entries[n - 1].end - ctx.entries[n - 1].start, 1);
+    }
+
+    /// Recursive reference implementation of the context build, kept only
+    /// to pin the explicit-stack traversal's output.
+    fn build_context_recursive(tree: &PrefixTree) -> TreeContext {
+        let mut ctx = TreeContext::default();
+        let mut term: BTreeMap<u32, Vec<SeqId>> = BTreeMap::new();
+        for (&seq, info) in &tree.seqs {
+            term.entry(info.leaf.0).or_default().push(seq);
+        }
+        fn dfs(
+            tree: &PrefixTree,
+            node: NodeId,
+            term: &BTreeMap<u32, Vec<SeqId>>,
+            ctx: &mut TreeContext,
+        ) {
+            let start = ctx.seq_order.len();
+            if let Some(seqs) = term.get(&node.0) {
+                ctx.seq_order.extend_from_slice(seqs);
+            }
+            let entry_idx = ctx.entries.len();
+            ctx.entries.push(CtxEntry { node, chunk: tree.node(node).chunk, start, end: 0 });
+            for &child in &tree.node(node).children {
+                dfs(tree, child, term, ctx);
+            }
+            ctx.entries[entry_idx].end = ctx.seq_order.len();
+        }
+        for &root in &tree.roots {
+            dfs(tree, root, &term, &mut ctx);
+        }
+        ctx
+    }
+
+    #[test]
+    fn iterative_context_is_identical_to_the_recursive_reference() {
+        let mut tree = PrefixTree::new(shape());
+        insert(&mut tree, 1, &[1, 2, 3, 4, 10, 11, 12, 13]);
+        insert(&mut tree, 2, &[1, 2, 3, 4, 20, 21, 22, 23]);
+        insert(&mut tree, 3, &[1, 2, 3, 4, 10, 11, 12, 13, 30, 31]);
+        insert(&mut tree, 4, &[7, 7, 7, 7, 8, 8]);
+        insert(&mut tree, 5, &[1, 2, 9]); // mid-chunk split
+        tree.extend_sequence(SeqId(4), &[9, 9, 9], &mut fill_fn);
+        let got = tree.build_context();
+        let want = build_context_recursive(&tree);
+        assert_eq!(got.seq_order, want.seq_order);
+        assert_eq!(got.entries, want.entries);
     }
 
     #[test]

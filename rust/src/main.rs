@@ -21,7 +21,10 @@ use chunk_attention::model::ModelConfig;
 use chunk_attention::perf_model::{AttentionImpl, HardwareModel};
 #[cfg(feature = "pjrt")]
 use chunk_attention::runtime::PjrtModel;
-use chunk_attention::server::{run_bench, BenchConfig, Gateway, GatewayConfig};
+use chunk_attention::server::{
+    render_comparison, run_bench, run_prefill_comparison, BenchConfig, ComparisonConfig, Gateway,
+    GatewayConfig, MixedBenchConfig,
+};
 use chunk_attention::util::cli::{Args, Cli};
 use chunk_attention::util::config::Config;
 use chunk_attention::util::stats::{fmt_bytes, fmt_us};
@@ -124,6 +127,12 @@ fn serve(argv: &[String]) -> anyhow::Result<()> {
         .opt("head-dim", "32", "synthetic runner: head dimension")
         .opt("chunk", "16", "synthetic runner: KV chunk size (tokens)")
         .opt("kv-dtype", "f32", "KV cache storage dtype: f32|f16|bf16")
+        .opt("prefill-chunk-tokens", "0", "chunked prefill slice size in tokens (0 = monolithic)")
+        .opt(
+            "step-token-budget",
+            "0",
+            "per-step token budget over prefill slices + decode (0 = unbounded)",
+        )
         .opt("config", "", "optional TOML config overriding the flags")
         .flag("synthetic", "use the in-process synthetic runner (works on a default build)");
     let args = parse_or_exit(&cli, argv);
@@ -148,9 +157,21 @@ fn serve(argv: &[String]) -> anyhow::Result<()> {
             head_dim: args.get_usize("head-dim"),
             vocab: 32000,
         };
-        let engine = Engine::with_dtype(runner, args.get_usize("chunk"), max_batch, kv_dtype);
+        let mut engine = Engine::with_dtype(runner, args.get_usize("chunk"), max_batch, kv_dtype);
+        engine.set_chunked_prefill(
+            args.get_usize("prefill-chunk-tokens"),
+            args.get_usize("step-token-budget"),
+        );
         return run_offline_trace(engine, requests, tenants, sys_tokens, completion);
     }
+    // The PJRT path does not wire chunked prefill yet: slices would also
+    // need max_prefix capacity validation against the AOT artifacts.
+    // Refusing the flags beats silently running monolithic.
+    anyhow::ensure!(
+        args.get_usize("prefill-chunk-tokens") == 0 && args.get_usize("step-token-budget") == 0,
+        "--prefill-chunk-tokens/--step-token-budget are only supported with --synthetic \
+         (the PJRT prefill artifact caps the dense prefix a slice may carry)"
+    );
     serve_pjrt(args.get("artifacts"), requests, max_batch, completion, tenants, sys_tokens, kv_dtype)
 }
 
@@ -205,6 +226,12 @@ fn gateway_cmd(argv: &[String]) -> anyhow::Result<()> {
     .opt("max-new-tokens-cap", "4096", "hard cap on a request's completion budget")
     .opt("decode-interval-us", "0", "pacing between decode steps in microseconds")
     .opt("retain-chunks", "0", "prefix retention budget in chunks (0 = off)")
+    .opt("prefill-chunk-tokens", "0", "chunked prefill slice size in tokens (0 = monolithic)")
+    .opt(
+        "step-token-budget",
+        "0",
+        "per-step token budget over prefill slices + decode (0 = unbounded)",
+    )
     .flag("synthetic", "use the in-process synthetic runner (the only gateway runner today)");
     let args = parse_or_exit(&cli, argv);
 
@@ -228,6 +255,8 @@ fn gateway_cmd(argv: &[String]) -> anyhow::Result<()> {
         max_new_tokens_cap: args.get_usize("max-new-tokens-cap"),
         decode_interval: Duration::from_micros(args.get_u64("decode-interval-us")),
         retain_chunks: args.get_usize("retain-chunks"),
+        prefill_chunk_tokens: args.get_usize("prefill-chunk-tokens"),
+        step_token_budget: args.get_usize("step-token-budget"),
         ..GatewayConfig::default()
     };
     let gw = Gateway::start(engine, cfg)?;
@@ -261,11 +290,34 @@ fn bench_http(argv: &[String]) -> anyhow::Result<()> {
     .opt("queue-cap", "64", "spawned gateway: admission queue capacity")
     .opt("chunk", "64", "spawned gateway: KV chunk size")
     .opt("kv-dtype", "f32", "spawned gateway: KV cache storage dtype: f32|f16|bf16")
-    .opt("decode-interval-us", "200", "spawned gateway: decode pacing (us)");
+    .opt("decode-interval-us", "200", "spawned gateway: decode pacing (us)")
+    .opt("prefill-chunk-tokens", "0", "spawned gateway: prefill slice tokens (0 = monolithic)")
+    .opt("step-token-budget", "0", "spawned gateway: per-step token budget (0 = unbounded)")
+    .opt("long-clients", "2", "mixed mode: closed-loop workers issuing long cold prompts")
+    .opt("long-requests", "8", "mixed mode: total long cold prompts")
+    .opt("long-prompt-tokens", "2048", "mixed mode: tokens per long cold prompt")
+    .opt("prefill-us-per-token", "50", "mixed mode: emulated prefill cost per token (us)")
+    .flag(
+        "mixed",
+        "run the head-of-line workload (long cold prompts + short shared-prefix requests) \
+         against a monolithic and a chunked gateway and print TTFT side by side",
+    );
     let args = parse_or_exit(&cli, argv);
     // Validate the dtype up front even when benchmarking an external
     // gateway (whose dtype is its own; a typo should still fail loudly).
     let kv_dtype = parse_kv_dtype(&args)?;
+
+    if args.get_flag("mixed") {
+        // The comparison needs control of both gateways' prefill configs,
+        // so it always spawns its own; refusing --addr beats silently
+        // benchmarking something other than the user's server.
+        anyhow::ensure!(
+            args.get("addr").is_empty(),
+            "--mixed spawns its own monolithic and chunked gateways and cannot benchmark an \
+             external --addr; drop one of the two flags"
+        );
+        return bench_http_mixed(&args, kv_dtype);
+    }
 
     let mut spawned = None;
     let addr = if args.get("addr").is_empty() {
@@ -282,6 +334,8 @@ fn bench_http(argv: &[String]) -> anyhow::Result<()> {
                 addr: "127.0.0.1:0".to_string(),
                 queue_cap: args.get_usize("queue-cap"),
                 decode_interval: Duration::from_micros(args.get_u64("decode-interval-us")),
+                prefill_chunk_tokens: args.get_usize("prefill-chunk-tokens"),
+                step_token_budget: args.get_usize("step-token-budget"),
                 ..GatewayConfig::default()
             },
         )?;
@@ -316,6 +370,50 @@ fn bench_http(argv: &[String]) -> anyhow::Result<()> {
         gw.shutdown()?;
     }
     anyhow::ensure!(report.completed > 0, "no request completed — is the gateway reachable?");
+    Ok(())
+}
+
+/// `bench-http --mixed`: the head-of-line workload against two freshly
+/// spawned gateways — monolithic prefill vs chunked — printed side by
+/// side. Short requests' TTFT p99 is the number the chunked scheduler
+/// exists to fix.
+fn bench_http_mixed(args: &Args, kv_dtype: KvDtype) -> anyhow::Result<()> {
+    let chunk_tokens = match args.get_usize("prefill-chunk-tokens") {
+        0 => 128,
+        n => n,
+    };
+    let budget = match args.get_usize("step-token-budget") {
+        0 => chunk_tokens + args.get_usize("max-batch") * 2,
+        n => n,
+    };
+    let cfg = ComparisonConfig {
+        mixed: MixedBenchConfig {
+            addr: String::new(),
+            long_clients: args.get_usize("long-clients"),
+            short_clients: args.get_usize("clients"),
+            long_requests: args.get_usize("long-requests"),
+            short_requests: args.get_usize("requests"),
+            long_prompt_tokens: args.get_usize("long-prompt-tokens"),
+            shared_prefix_tokens: args.get_usize("system-tokens"),
+            short_query_tokens: args.get_usize("query-tokens"),
+            max_new_tokens: args.get_usize("completion"),
+            timeout: Duration::from_secs(120),
+        },
+        max_batch: args.get_usize("max-batch"),
+        chunk: args.get_usize("chunk"),
+        queue_cap: args.get_usize("queue-cap"),
+        decode_interval: Duration::from_micros(args.get_u64("decode-interval-us")),
+        prefill_us_per_token: args.get_u64("prefill-us-per-token"),
+        prefill_chunk_tokens: chunk_tokens,
+        step_token_budget: budget,
+        kv_dtype,
+    };
+    let (mono, chunked) = run_prefill_comparison(&cfg)?;
+    println!("{}", render_comparison(&cfg, &mono, &chunked));
+    anyhow::ensure!(
+        mono.short_completed > 0 && chunked.short_completed > 0,
+        "no short request completed — is the workload misconfigured?"
+    );
     Ok(())
 }
 

@@ -162,6 +162,7 @@ impl ModelRunner for PjrtModel {
         prefix_k: &[f32],
         prefix_v: &[f32],
         prefix_len: usize,
+        is_final: bool,
     ) -> anyhow::Result<PrefillOutput> {
         let (p, n) = (self.max_suffix, self.max_prefix);
         let (h_total, d) = (self.manifest.heads_total, self.manifest.model.head_dim);
@@ -206,7 +207,11 @@ impl ModelRunner for PjrtModel {
             (0..suffix_tokens.len()).map(|i| k_flat[i * row..(i + 1) * row].to_vec()).collect();
         let v_rows: Vec<Vec<f32>> =
             (0..suffix_tokens.len()).map(|i| v_flat[i * row..(i + 1) * row].to_vec()).collect();
-        Ok(PrefillOutput { k_rows, v_rows, next_token: Self::argmax(&logits) })
+        // The AOT prefill artifact always computes last-position logits;
+        // the argmax is only meaningful (and only consumed) on the slice
+        // that contains the true last prompt position.
+        let next_token = is_final.then(|| Self::argmax(&logits));
+        Ok(PrefillOutput { k_rows, v_rows, next_token })
     }
 
     fn decode(

@@ -9,6 +9,10 @@
 //! measured end to end over the wire.
 
 use super::client::{self, StreamEvent};
+use super::gateway::{Gateway, GatewayConfig};
+use crate::coordinator::engine::testing::{PacedRunner, SyntheticRunner};
+use crate::coordinator::Engine;
+use crate::kvcache::KvDtype;
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 use crate::util::stats::Summary;
@@ -214,4 +218,304 @@ pub fn run_bench(cfg: &BenchConfig) -> anyhow::Result<BenchReport> {
         normalized_latency_ms,
         prefix_hit_rate,
     })
+}
+
+/// Mixed head-of-line workload: long *cold* prompts (unique tokens, so no
+/// prefix reuse is possible) interleaved with short requests that share
+/// one hot prefix. Under monolithic prefill every long admission stalls
+/// all in-flight decoders and every queued short for the whole prompt;
+/// chunked prefill bounds the stall at the per-step token budget — the
+/// regime where the serving path's biggest latency cliff lives.
+#[derive(Debug, Clone)]
+pub struct MixedBenchConfig {
+    /// Gateway address (filled in by [`run_prefill_comparison`] when it
+    /// spawns its own gateways).
+    pub addr: String,
+    /// Closed-loop workers issuing long cold prompts.
+    pub long_clients: usize,
+    /// Closed-loop workers issuing short shared-prefix requests.
+    pub short_clients: usize,
+    pub long_requests: usize,
+    pub short_requests: usize,
+    /// Tokens per long prompt; every token is unique across the run.
+    pub long_prompt_tokens: usize,
+    /// Hot prefix length shared by every short request.
+    pub shared_prefix_tokens: usize,
+    /// Per-request query tokens appended after the shared prefix.
+    pub short_query_tokens: usize,
+    pub max_new_tokens: usize,
+    pub timeout: Duration,
+}
+
+impl Default for MixedBenchConfig {
+    fn default() -> Self {
+        MixedBenchConfig {
+            addr: String::new(),
+            long_clients: 2,
+            short_clients: 6,
+            long_requests: 8,
+            short_requests: 64,
+            long_prompt_tokens: 2048,
+            shared_prefix_tokens: 1024,
+            short_query_tokens: 32,
+            max_new_tokens: 8,
+            timeout: Duration::from_secs(120),
+        }
+    }
+}
+
+/// Per-class tallies of one mixed run.
+#[derive(Debug, Default)]
+struct Tally {
+    completed: usize,
+    rejected: usize,
+    errors: usize,
+    ttft_ms: Summary,
+}
+
+/// Client-observed results of one mixed-workload run.
+#[derive(Debug)]
+pub struct MixedReport {
+    pub short_ttft_ms: Summary,
+    pub long_ttft_ms: Summary,
+    pub short_completed: usize,
+    pub long_completed: usize,
+    pub rejected: usize,
+    pub errors: usize,
+    pub wall_s: f64,
+}
+
+/// Issue one streaming request and record its TTFT into `tally`.
+fn issue_one(addr: &str, body: &Json, timeout: Duration, tally: &Mutex<Tally>) {
+    let sent = Instant::now();
+    let mut stream = match client::generate(addr, body, timeout) {
+        Ok(s) => s,
+        Err(_) => {
+            tally.lock().unwrap().errors += 1;
+            return;
+        }
+    };
+    if stream.status() == 429 {
+        tally.lock().unwrap().rejected += 1;
+        return;
+    }
+    if stream.status() != 200 {
+        tally.lock().unwrap().errors += 1;
+        return;
+    }
+    let mut first: Option<Duration> = None;
+    let mut got = 0u64;
+    let mut done = false;
+    loop {
+        match stream.next_event() {
+            Ok(Some(StreamEvent::Token { .. })) => {
+                if first.is_none() {
+                    first = Some(sent.elapsed());
+                }
+                got += 1;
+            }
+            Ok(Some(StreamEvent::Done { .. })) => {
+                done = true;
+                break;
+            }
+            Ok(None) | Err(_) => break,
+        }
+    }
+    let mut t = tally.lock().unwrap();
+    if done && got > 0 {
+        t.completed += 1;
+        t.ttft_ms.add(first.expect("done implies a first token").as_secs_f64() * 1e3);
+    } else {
+        t.errors += 1;
+    }
+}
+
+/// Run the mixed long-cold + short-shared-prefix workload against a live
+/// gateway, reporting TTFT per request class.
+pub fn run_mixed_bench(cfg: &MixedBenchConfig) -> anyhow::Result<MixedReport> {
+    anyhow::ensure!(
+        cfg.long_clients > 0 && cfg.short_clients > 0,
+        "the mixed workload needs both long and short clients"
+    );
+    let shared_prefix: Arc<Vec<u32>> = Arc::new((0..cfg.shared_prefix_tokens as u32).collect());
+    let next_long = Arc::new(AtomicUsize::new(0));
+    let next_short = Arc::new(AtomicUsize::new(0));
+    let long_tally = Arc::new(Mutex::new(Tally::default()));
+    let short_tally = Arc::new(Mutex::new(Tally::default()));
+
+    let t0 = Instant::now();
+    let mut workers = Vec::new();
+    for _ in 0..cfg.long_clients {
+        let cfg = cfg.clone();
+        let next = next_long.clone();
+        let tally = long_tally.clone();
+        workers.push(std::thread::spawn(move || loop {
+            let i = next.fetch_add(1, Ordering::SeqCst);
+            if i >= cfg.long_requests {
+                break;
+            }
+            // Unique token ids per request: a genuinely cold prompt.
+            let base = 1_000_000u32 + (i * cfg.long_prompt_tokens) as u32;
+            let prompt: Vec<u32> = (0..cfg.long_prompt_tokens as u32).map(|j| base + j).collect();
+            let mut body = Json::obj();
+            body.set("tokens", Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect()));
+            body.set("shared_tokens", 0usize).set("max_new_tokens", cfg.max_new_tokens);
+            issue_one(&cfg.addr, &body, cfg.timeout, &tally);
+        }));
+    }
+    for _ in 0..cfg.short_clients {
+        let cfg = cfg.clone();
+        let next = next_short.clone();
+        let tally = short_tally.clone();
+        let prefix = shared_prefix.clone();
+        workers.push(std::thread::spawn(move || loop {
+            let i = next.fetch_add(1, Ordering::SeqCst);
+            if i >= cfg.short_requests {
+                break;
+            }
+            let mut prompt = (*prefix).clone();
+            let base = 500_000_000u32 + (i * cfg.short_query_tokens.max(1)) as u32;
+            prompt.extend((0..cfg.short_query_tokens as u32).map(|j| base + j));
+            let shared = prefix.len();
+            let mut body = Json::obj();
+            body.set("tokens", Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect()));
+            body.set("shared_tokens", shared).set("max_new_tokens", cfg.max_new_tokens);
+            issue_one(&cfg.addr, &body, cfg.timeout, &tally);
+        }));
+    }
+    for w in workers {
+        w.join().map_err(|_| anyhow::anyhow!("mixed bench worker panicked"))?;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let long = Mutex::into_inner(
+        Arc::try_unwrap(long_tally).map_err(|_| anyhow::anyhow!("tally still shared"))?,
+    )
+    .map_err(|_| anyhow::anyhow!("tally poisoned"))?;
+    let short = Mutex::into_inner(
+        Arc::try_unwrap(short_tally).map_err(|_| anyhow::anyhow!("tally still shared"))?,
+    )
+    .map_err(|_| anyhow::anyhow!("tally poisoned"))?;
+    Ok(MixedReport {
+        short_ttft_ms: short.ttft_ms,
+        long_ttft_ms: long.ttft_ms,
+        short_completed: short.completed,
+        long_completed: long.completed,
+        rejected: short.rejected + long.rejected,
+        errors: short.errors + long.errors,
+        wall_s,
+    })
+}
+
+/// Gateway knobs for the monolithic-vs-chunked comparison.
+#[derive(Debug, Clone)]
+pub struct ComparisonConfig {
+    /// The workload (its `addr` is overwritten per spawned gateway).
+    pub mixed: MixedBenchConfig,
+    pub max_batch: usize,
+    /// Tree KV chunk size.
+    pub chunk: usize,
+    pub queue_cap: usize,
+    pub decode_interval: Duration,
+    /// Emulated model prefill cost (the synthetic runner hashes rows in
+    /// microseconds; real prefill FLOPs are what make head-of-line
+    /// blocking hurt, so the bench paces them explicitly).
+    pub prefill_us_per_token: u64,
+    /// Chunked leg: prefill slice granularity.
+    pub prefill_chunk_tokens: usize,
+    /// Chunked leg: per-step token budget.
+    pub step_token_budget: usize,
+    /// KV storage dtype of both spawned gateways.
+    pub kv_dtype: KvDtype,
+}
+
+impl Default for ComparisonConfig {
+    fn default() -> Self {
+        ComparisonConfig {
+            mixed: MixedBenchConfig::default(),
+            max_batch: 16,
+            chunk: 64,
+            queue_cap: 64,
+            decode_interval: Duration::from_micros(200),
+            prefill_us_per_token: 50,
+            prefill_chunk_tokens: 128,
+            step_token_budget: 160,
+            kv_dtype: KvDtype::F32,
+        }
+    }
+}
+
+/// Run the mixed workload twice against freshly spawned in-process
+/// gateways — monolithic prefill, then chunked prefill — and return both
+/// reports `(monolithic, chunked)`.
+pub fn run_prefill_comparison(cfg: &ComparisonConfig) -> anyhow::Result<(MixedReport, MixedReport)> {
+    let run = |chunked: bool| -> anyhow::Result<MixedReport> {
+        let runner = PacedRunner {
+            inner: SyntheticRunner { heads_total: 16, head_dim: 32, vocab: 32000 },
+            prefill_us_per_token: cfg.prefill_us_per_token,
+        };
+        let engine = Engine::with_dtype(runner, cfg.chunk, cfg.max_batch, cfg.kv_dtype);
+        let gw = Gateway::start(
+            engine,
+            GatewayConfig {
+                addr: "127.0.0.1:0".to_string(),
+                queue_cap: cfg.queue_cap,
+                decode_interval: cfg.decode_interval,
+                prefill_chunk_tokens: if chunked { cfg.prefill_chunk_tokens } else { 0 },
+                step_token_budget: if chunked { cfg.step_token_budget } else { 0 },
+                ..GatewayConfig::default()
+            },
+        )?;
+        let mut mixed = cfg.mixed.clone();
+        mixed.addr = gw.addr().to_string();
+        let report = run_mixed_bench(&mixed)?;
+        gw.shutdown()?;
+        Ok(report)
+    };
+    let monolithic = run(false)?;
+    let chunked = run(true)?;
+    Ok((monolithic, chunked))
+}
+
+/// Side-by-side rendering of the monolithic-vs-chunked comparison.
+pub fn render_comparison(cfg: &ComparisonConfig, mono: &MixedReport, chunked: &MixedReport) -> String {
+    format!(
+        "head-of-line comparison — {} long cold prompts ({} tok) + {} short requests \
+         ({}-tok shared prefix), prefill paced at {}µs/tok\n\
+         \n\
+         {:<26}{:>12}{:>12}\n\
+         {:<26}{:>12.1}{:>12.1}\n\
+         {:<26}{:>12.1}{:>12.1}\n\
+         {:<26}{:>12.1}{:>12.1}\n\
+         {:<26}{:>12.1}{:>12.1}\n\
+         {:<26}{:>9}/{:<2}{:>9}/{:<2}\n\
+         {:<26}{:>12.2}{:>12.2}",
+        cfg.mixed.long_requests,
+        cfg.mixed.long_prompt_tokens,
+        cfg.mixed.short_requests,
+        cfg.mixed.shared_prefix_tokens,
+        cfg.prefill_us_per_token,
+        "",
+        "monolithic",
+        "chunked",
+        "short TTFT p50 (ms)",
+        mono.short_ttft_ms.percentile(50.0),
+        chunked.short_ttft_ms.percentile(50.0),
+        "short TTFT p99 (ms)",
+        mono.short_ttft_ms.percentile(99.0),
+        chunked.short_ttft_ms.percentile(99.0),
+        "short TTFT max (ms)",
+        mono.short_ttft_ms.max(),
+        chunked.short_ttft_ms.max(),
+        "long TTFT p99 (ms)",
+        mono.long_ttft_ms.percentile(99.0),
+        chunked.long_ttft_ms.percentile(99.0),
+        "completed (short/long)",
+        mono.short_completed,
+        mono.long_completed,
+        chunked.short_completed,
+        chunked.long_completed,
+        "wall time (s)",
+        mono.wall_s,
+        chunked.wall_s,
+    )
 }

@@ -57,6 +57,13 @@ pub struct GatewayConfig {
     /// metrics records); keeps a long-running server's memory O(window)
     /// instead of O(total requests served).
     pub history_limit: usize,
+    /// Chunked prefill slice granularity in tokens; 0 = monolithic
+    /// prefill (a whole unmatched prompt suffix per admission).
+    pub prefill_chunk_tokens: usize,
+    /// Per-engine-step token budget across prefill slices and decode
+    /// tokens; 0 = unbounded. Must exceed `max_batch` for prefill to make
+    /// progress under a full decode batch.
+    pub step_token_budget: usize,
 }
 
 impl Default for GatewayConfig {
@@ -70,6 +77,8 @@ impl Default for GatewayConfig {
             retain_chunks: 0,
             io_timeout: Duration::from_secs(30),
             history_limit: 4096,
+            prefill_chunk_tokens: 0,
+            step_token_budget: 0,
         }
     }
 }
@@ -114,6 +123,7 @@ impl Gateway {
         let addr = listener.local_addr()?;
         engine.set_queue_limit(Some(cfg.queue_cap));
         engine.set_history_limit(cfg.history_limit);
+        engine.set_chunked_prefill(cfg.prefill_chunk_tokens, cfg.step_token_budget);
         if cfg.retain_chunks > 0 {
             engine.enable_prefix_retention(cfg.retain_chunks);
         }
@@ -300,6 +310,57 @@ fn render_metrics<R: ModelRunner>(engine: &Engine<R>, live_streams: usize, prefi
         sched.admission_rejections() as f64,
     );
     push_gauge(&mut out, prefix, "live_streams", "connected SSE token streams", live_streams as f64);
+    // Chunked-prefill liveness: queue depth, slice throughput, and the
+    // configured per-step budget, so a dashboard can see interleaving
+    // (prefill_chunks_total advancing while decode_steps_total advances)
+    // and spot a starved prefill queue.
+    let stats = engine.stats();
+    push_gauge(
+        &mut out,
+        prefix,
+        "prefill_queue_depth",
+        "admitted requests whose prompts are still prefilling",
+        sched.prefill_depth() as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "prefill_chunks_total",
+        "prefill slices executed (one per prompt when monolithic)",
+        stats.prefill_chunks_total as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "prefill_deferrals_total",
+        "requests whose first slice deferred to an in-progress prefix-sharing leader",
+        stats.prefill_deferrals as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "decode_steps_total",
+        "batched decode steps executed",
+        stats.decode_steps as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "step_token_budget",
+        "configured per-step token budget (0 = unbounded)",
+        sched.step_token_budget().unwrap_or(0) as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "prefill_chunk_tokens",
+        "configured prefill slice granularity in tokens (0 = monolithic)",
+        if sched.prefill_chunk_tokens() == usize::MAX {
+            0.0
+        } else {
+            sched.prefill_chunk_tokens() as f64
+        },
+    );
     push_gauge(
         &mut out,
         prefix,

@@ -21,6 +21,9 @@ pub mod client;
 pub mod gateway;
 pub mod http;
 
-pub use bench::{run_bench, BenchConfig, BenchReport};
+pub use bench::{
+    render_comparison, run_bench, run_mixed_bench, run_prefill_comparison, BenchConfig,
+    BenchReport, ComparisonConfig, MixedBenchConfig, MixedReport,
+};
 pub use client::{gauge_value, GenerateStream, StreamEvent};
 pub use gateway::{Gateway, GatewayConfig, TokenEvent};

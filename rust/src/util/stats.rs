@@ -113,21 +113,30 @@ impl Summary {
 
     /// Percentile by linear interpolation between closest ranks.
     /// `p` in `[0, 100]`.
+    ///
+    /// Runs on every `/metrics` scrape, so this is an O(n) rank selection
+    /// (`select_nth_unstable_by`), not a full sort, and it orders by
+    /// `f64::total_cmp`: a NaN sample (upstream instrumentation bug) ranks
+    /// above +inf instead of panicking the scrape — finite percentiles
+    /// stay exact, only the extreme quantiles surface the NaN itself.
     pub fn percentile(&self, p: f64) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
         }
-        let mut sorted = self.samples.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+        let mut buf = self.samples.clone();
+        let rank = (p.clamp(0.0, 100.0) / 100.0) * (buf.len() - 1) as f64;
         let lo = rank.floor() as usize;
         let hi = rank.ceil() as usize;
+        let (_, lo_val, above) = buf.select_nth_unstable_by(lo, f64::total_cmp);
+        let lo_val = *lo_val;
         if lo == hi {
-            sorted[lo]
-        } else {
-            let frac = rank - lo as f64;
-            sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+            return lo_val;
         }
+        // `hi == lo + 1`: the next rank is the minimum of the partition
+        // above the selected element.
+        let hi_val = above.iter().copied().min_by(f64::total_cmp).unwrap_or(lo_val);
+        let frac = rank - lo as f64;
+        lo_val * (1.0 - frac) + hi_val * frac
     }
 
     pub fn median(&self) -> f64 {
@@ -271,6 +280,28 @@ mod tests {
         assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
         assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
         assert!((s.percentile(99.0) - 99.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_tolerate_nan_samples() {
+        // A NaN sample must not panic the percentile (it used to poison
+        // every /metrics scrape via `partial_cmp(..).unwrap()`); it ranks
+        // above +inf under total order, so finite quantiles stay exact.
+        let mut s = Summary::new();
+        for x in 1..=99 {
+            s.add(x as f64);
+        }
+        s.add(f64::NAN);
+        let p50 = s.percentile(50.0);
+        assert!(p50.is_finite(), "median poisoned by NaN: {p50}");
+        assert!((p50 - 50.0).abs() < 1.0, "median {p50} shifted by the NaN tail");
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        // The top of the distribution is the NaN itself — surfaced, not a
+        // panic.
+        assert!(s.percentile(100.0).is_nan());
+        // Out-of-range p is clamped instead of indexing out of bounds.
+        assert!(s.percentile(150.0).is_nan());
+        assert!((s.percentile(-5.0) - 1.0).abs() < 1e-9);
     }
 
     #[test]

@@ -117,12 +117,12 @@ fn pjrt_prefill_matches_pure_rust_reference_model() {
     let (logits, k_rows, v_rows) = reference.prefill(&tokens);
 
     use chunk_attention::coordinator::ModelRunner;
-    let out = pjrt.prefill(&tokens, 0, &[], &[], 0).unwrap();
+    let out = pjrt.prefill(&tokens, 0, &[], &[], 0, true).unwrap();
 
     // Greedy next token must agree.
     let ref_argmax =
         (0..logits.len()).max_by(|&a, &b| logits[a].partial_cmp(&logits[b]).unwrap()).unwrap();
-    assert_eq!(out.next_token, ref_argmax as u32, "argmax disagreement");
+    assert_eq!(out.next_token, Some(ref_argmax as u32), "argmax disagreement");
 
     // K/V rows for every position must agree numerically.
     assert_eq!(out.k_rows.len(), tokens.len());

@@ -12,12 +12,15 @@ use chunk_attention::util::rng::Pcg64;
 use chunk_attention::util::threadpool::ThreadPool;
 
 /// A random prompt workload: tenants with shared prefixes + per-request
-/// suffixes, interleaved with removals and decode appends.
+/// suffixes, interleaved with removals, decode appends, and multi-token
+/// extends (the chunked-prefill growth path — partially prefilled
+/// sequences are first-class residents between slices).
 #[derive(Debug, Clone)]
 enum Op {
     Insert { seq: u64, tenant: u8, suffix: Vec<u32>, prefix_len: usize },
     Remove { idx: usize },
     Append { idx: usize, token: u32 },
+    Extend { idx: usize, tokens: Vec<u32> },
 }
 
 fn gen_ops(rng: &mut Pcg64) -> Vec<Op> {
@@ -25,7 +28,7 @@ fn gen_ops(rng: &mut Pcg64) -> Vec<Op> {
     let mut ops = Vec::with_capacity(n);
     let mut next_seq = 0u64;
     for _ in 0..n {
-        match rng.below(10) {
+        match rng.below(12) {
             0..=5 => {
                 let tenant = rng.below(3) as u8;
                 let prefix_len = rng.range(0, 20);
@@ -35,7 +38,12 @@ fn gen_ops(rng: &mut Pcg64) -> Vec<Op> {
                 next_seq += 1;
             }
             6..=7 => ops.push(Op::Remove { idx: rng.range(0, 64) }),
-            _ => ops.push(Op::Append { idx: rng.range(0, 64), token: rng.below(1000) as u32 }),
+            8..=9 => ops.push(Op::Append { idx: rng.range(0, 64), token: rng.below(1000) as u32 }),
+            _ => {
+                let tokens: Vec<u32> =
+                    (0..rng.range(1, 10)).map(|_| 20_000 + rng.below(40) as u32).collect();
+                ops.push(Op::Extend { idx: rng.range(0, 64), tokens });
+            }
         }
     }
     ops
@@ -74,6 +82,12 @@ fn apply_ops(ops: &[Op], shape: KvShape) -> Result<PrefixTree, String> {
                     let k = vec![*token as f32; row];
                     let v = vec![-(*token as f32); row];
                     tree.append_token(SeqId(seq), *token, &k, &v);
+                }
+            }
+            Op::Extend { idx, tokens } => {
+                if !live.is_empty() {
+                    let seq = live[idx % live.len()];
+                    tree.extend_sequence(SeqId(seq), tokens, &mut fill);
                 }
             }
         }

@@ -138,6 +138,77 @@ fn context_rebuilds_track_chunk_boundary_crossings() {
 }
 
 #[test]
+fn chunked_prefill_4096_token_cold_prompt_never_starves_decode() {
+    // The head-of-line acceptance scenario: one 4096-token cold prompt
+    // arrives while decoders are active. With chunked prefill no single
+    // engine step may spend more than the configured token budget, and
+    // decode steps must keep advancing between prefill slices.
+    let budget = 256u64;
+    let mut engine =
+        Engine::new(SyntheticRunner { heads_total: 2, head_dim: 8, vocab: 997 }, 32, 8);
+    engine.set_chunked_prefill(64, budget as usize);
+    for i in 0..2u64 {
+        engine.submit(chunk_attention::workload::Request {
+            id: i,
+            arrival_s: 0.0,
+            tenant: 0,
+            shared_tokens: 0,
+            prompt: vec![10 + i as u32, 2, 3, 4],
+            max_new_tokens: 400, // stays active for the whole prefill
+        });
+    }
+    engine.step().unwrap();
+    assert_eq!(engine.scheduler().batch_size(), 2, "decoders active before the cold prompt");
+
+    engine.submit(chunk_attention::workload::Request {
+        id: 9,
+        arrival_s: 0.0,
+        tenant: 1,
+        shared_tokens: 0,
+        prompt: (100_000u32..104_096).collect(), // 4096 cold tokens
+        max_new_tokens: 4,
+    });
+    let mut prev = engine.stats();
+    let mut prefill_iters = 0u32;
+    let mut decode_alongside = 0u32;
+    let mut steps = 0u32;
+    loop {
+        engine.step().unwrap();
+        steps += 1;
+        let s = engine.stats();
+        let spent = (s.prefill_tokens_computed - prev.prefill_tokens_computed)
+            + (s.decoded_tokens - prev.decoded_tokens);
+        assert!(spent <= budget, "engine step spent {spent} tokens, budget is {budget}");
+        if s.prefill_chunks_total > prev.prefill_chunks_total {
+            prefill_iters += 1;
+            if s.decode_steps > prev.decode_steps {
+                decode_alongside += 1;
+            }
+        }
+        prev = s;
+        if engine.scheduler().prefill_depth() == 0 {
+            break;
+        }
+        assert!(steps < 100, "4096-token prefill never completed");
+    }
+    assert!(
+        prefill_iters >= 2,
+        "the 4096-token prefill must be split across engine iterations, saw {prefill_iters}"
+    );
+    assert!(
+        decode_alongside >= 2,
+        "decode must advance between prefill slices, saw {decode_alongside}"
+    );
+    // ~16 slices of 64 tokens fit a 254-token budget per step: the whole
+    // prefill takes several iterations but far fewer than token count.
+    assert!(engine.stats().prefill_chunks_total as usize >= 4096 / 256);
+    engine.tree().check_invariants().unwrap();
+    let finished = engine.run_to_completion().unwrap();
+    assert_eq!(finished.len(), 3);
+    assert_eq!(engine.tree().pool().in_use(), 0);
+}
+
+#[test]
 fn simulator_and_engine_agree_on_scheduling_shape() {
     // The virtual-time simulator and the real engine share the Scheduler;
     // with the same trace they must admit the same peak batch.
