@@ -4,10 +4,14 @@
 
 pub mod engine;
 pub mod microbench;
+pub mod planner;
 pub mod scheduler;
 pub mod sim;
 
 pub use engine::{DecodeOutput, Engine, EngineStats, ModelRunner, PrefillOutput};
 pub use microbench::{AblationConfig, KernelBench, MicroConfig, TppVariant};
+pub use planner::{
+    PlannerConfig, SchedPolicy, SchedPolicyKind, StepPlan, StepPlanner, TenantCounters,
+};
 pub use scheduler::{ActiveSeq, FinishedSeq, PrefillingSeq, Removed, Scheduler};
 pub use sim::{simulate, SimConfig, SimResult, SystemKind};

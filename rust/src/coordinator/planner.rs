@@ -1,0 +1,902 @@
+//! Policy-driven step planning: who gets the shared budget, each step.
+//!
+//! ChunkAttention's prefix-aware KV cache makes *sharing* cheap, but the
+//! serving loop still has to decide *who* shares: greedy
+//! longest-shared-prefix admission maximizes reuse and can starve a cold
+//! tenant behind a storm of prefix-sharing arrivals (the RelayAttention /
+//! Prompt Cache observation that long-system-prompt wins are realized or
+//! lost at the scheduler). This module centralizes those decisions in a
+//! [`StepPlanner`]: once per engine iteration it produces a single
+//! [`StepPlan`] —
+//!
+//! - which queued requests to admit (ranked by the pluggable
+//!   [`SchedPolicy`]),
+//! - which active sequences decode this step (a *partial* batch when the
+//!   per-step token budget is tight, rotated so no sequence lags more
+//!   than a bounded number of steps),
+//! - how many eviction tokens the [`PrefixRetainer`] may spend
+//!   (amortizing pinned-prefix eviction instead of between-step bursts),
+//! - and how many tokens remain for prefill slices —
+//!
+//! all charged against one per-step token budget, so
+//! `prefill + decode + eviction <= budget` holds for every policy.
+//!
+//! Three policies ship behind `--sched-policy`:
+//!
+//! - [`PrefixGreedy`]: today's behavior, bit-for-bit — longest
+//!   cached/in-progress prefix match first, FCFS tiebreak.
+//! - [`Drr`]: per-tenant deficit round-robin with configurable weights;
+//!   a tenant's admissions are proportional to its weight regardless of
+//!   how well its prompts share.
+//! - [`Aging`]: prefix-greedy plus a wait-time boost, so a cold tenant's
+//!   score grows every step it waits and admission within
+//!   `ceil(max_prefix_score / aging_boost_tokens)` frees-of-a-slot is
+//!   guaranteed.
+//!
+//! [`PrefixRetainer`]: crate::kvcache::PrefixRetainer
+
+use std::collections::BTreeMap;
+
+use crate::kvcache::tree::common_prefix;
+use crate::workload::Request;
+
+use super::scheduler::{ActiveSeq, PrefillingSeq};
+
+/// Which scheduling policy ranks admissions (`--sched-policy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicyKind {
+    /// Longest cached/in-progress shared prefix first, FCFS tiebreak —
+    /// the historical behavior, preserved bit-for-bit.
+    PrefixGreedy,
+    /// Per-tenant deficit round-robin with configurable weights.
+    Drr,
+    /// Prefix-greedy plus a per-step wait boost: starvation-free.
+    Aging,
+}
+
+impl SchedPolicyKind {
+    /// Parse a `--sched-policy` value.
+    pub fn parse(s: &str) -> Option<SchedPolicyKind> {
+        match s {
+            "prefix-greedy" => Some(SchedPolicyKind::PrefixGreedy),
+            "drr" => Some(SchedPolicyKind::Drr),
+            "aging" => Some(SchedPolicyKind::Aging),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedPolicyKind::PrefixGreedy => "prefix-greedy",
+            SchedPolicyKind::Drr => "drr",
+            SchedPolicyKind::Aging => "aging",
+        }
+    }
+}
+
+/// Planner tuning knobs. The defaults keep `prefix-greedy` identical to
+/// the pre-planner engine.
+#[derive(Debug, Clone)]
+pub struct PlannerConfig {
+    pub policy: SchedPolicyKind,
+    /// DRR: tokens credited to a tenant's deficit per round-robin visit.
+    /// A tenant admits its head-of-line request once its deficit covers
+    /// the prompt length, so relative admission rates follow
+    /// `quantum * weight`.
+    pub drr_quantum: usize,
+    /// DRR: per-tenant weights (tenant id, weight); unlisted tenants get
+    /// weight 1. Parsed from `--tenant-weights 0=4,3=2`.
+    pub tenant_weights: Vec<(usize, u32)>,
+    /// Aging: admission-score boost (in shared-prefix-token equivalents)
+    /// per step a request has waited in the queue. Bounds starvation: a
+    /// request waiting `ceil(L / boost)` steps outranks any sharer whose
+    /// matchable prefix is at most `L` tokens.
+    pub aging_boost_tokens: usize,
+    /// Eviction-token allowance granted per step (charged against the
+    /// step budget) while the retainer is over its chunk budget. With no
+    /// step budget configured the allowance is unbounded (the historical
+    /// between-step burst).
+    pub evict_step_tokens: usize,
+    /// Bounded per-tenant metric cardinality: tenants beyond this many
+    /// distinct ids aggregate into one overflow bucket.
+    pub tenant_metrics_cap: usize,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            policy: SchedPolicyKind::PrefixGreedy,
+            drr_quantum: 256,
+            tenant_weights: Vec::new(),
+            aging_boost_tokens: 32,
+            evict_step_tokens: 256,
+            tenant_metrics_cap: 16,
+        }
+    }
+}
+
+/// One queued request as the ranking policies see it.
+#[derive(Debug, Clone, Copy)]
+pub struct QueueItem<'a> {
+    pub id: u64,
+    pub tenant: usize,
+    pub prompt: &'a [u32],
+    /// Longest prefix of `prompt` already resident in the KV cache.
+    pub cached: usize,
+    /// Planner steps this request has waited in the queue.
+    pub waited_steps: u64,
+}
+
+/// The admission-ranking seam: a policy orders queued requests into free
+/// batch slots. Everything else in the step plan (budget split, decode
+/// rotation, eviction allowance) is policy-independent budget enforcement
+/// owned by [`StepPlanner`].
+pub trait SchedPolicy: Send {
+    fn kind(&self) -> SchedPolicyKind;
+
+    /// Return up to `slots` request ids in admission order. `prefilling`
+    /// carries the prompts of requests already admitted but still
+    /// prefilling (their content is matchable, so policies may group
+    /// sharers with them).
+    fn rank_admission(
+        &mut self,
+        queue: &[QueueItem<'_>],
+        prefilling: &[&[u32]],
+        slots: usize,
+    ) -> Vec<u64>;
+}
+
+/// Greedy longest-shared-prefix admission with FCFS tiebreaks — exactly
+/// the pre-planner `Scheduler::admit_prefilling` algorithm (regression-
+/// tested against a literal copy of it below).
+#[derive(Debug, Default)]
+pub struct PrefixGreedy;
+
+/// Score + argmax selection shared by [`PrefixGreedy`] and [`Aging`]:
+/// seed each queued request's score once (tree match folded with
+/// affinity to the prefilling set), then per admitted slot fold in just
+/// the newly selected prompt — the only term that can change. `boost(i)`
+/// adds the policy-specific additive term (0 for prefix-greedy).
+fn rank_greedy_with_boost(
+    queue: &[QueueItem<'_>],
+    prefilling: &[&[u32]],
+    slots: usize,
+    boost: impl Fn(&QueueItem<'_>) -> usize,
+) -> Vec<u64> {
+    let mut order = Vec::new();
+    let mut remaining: Vec<&QueueItem<'_>> = queue.iter().collect();
+    let mut scores: Vec<usize> = remaining
+        .iter()
+        .map(|it| {
+            let mut s = it.cached;
+            for p in prefilling {
+                s = s.max(common_prefix(p, it.prompt));
+            }
+            s.saturating_add(boost(it))
+        })
+        .collect();
+    while order.len() < slots && !remaining.is_empty() {
+        let mut best = 0usize;
+        let mut best_score = 0usize;
+        for (i, &s) in scores.iter().enumerate() {
+            if s > best_score {
+                best = i;
+                best_score = s;
+            }
+        }
+        scores.remove(best);
+        let picked = remaining.remove(best);
+        order.push(picked.id);
+        for (s, it) in scores.iter_mut().zip(remaining.iter()) {
+            *s = (*s).max(common_prefix(picked.prompt, it.prompt).saturating_add(boost(it)));
+        }
+    }
+    order
+}
+
+impl SchedPolicy for PrefixGreedy {
+    fn kind(&self) -> SchedPolicyKind {
+        SchedPolicyKind::PrefixGreedy
+    }
+
+    fn rank_admission(
+        &mut self,
+        queue: &[QueueItem<'_>],
+        prefilling: &[&[u32]],
+        slots: usize,
+    ) -> Vec<u64> {
+        rank_greedy_with_boost(queue, prefilling, slots, |_| 0)
+    }
+}
+
+/// Prefix-greedy plus `waited_steps * boost`: reuse still wins while the
+/// queue is fresh, but a request's score grows every step it waits, so a
+/// cold tenant is admitted within `ceil(L / boost)` slot-frees, where `L`
+/// bounds any competitor's matchable prefix.
+#[derive(Debug)]
+pub struct Aging {
+    pub boost_tokens: usize,
+}
+
+impl SchedPolicy for Aging {
+    fn kind(&self) -> SchedPolicyKind {
+        SchedPolicyKind::Aging
+    }
+
+    fn rank_admission(
+        &mut self,
+        queue: &[QueueItem<'_>],
+        prefilling: &[&[u32]],
+        slots: usize,
+    ) -> Vec<u64> {
+        let boost = self.boost_tokens;
+        rank_greedy_with_boost(queue, prefilling, slots, |it| {
+            (it.waited_steps as usize).saturating_mul(boost)
+        })
+    }
+}
+
+/// Deficit round-robin over tenants: each visit credits a tenant's
+/// deficit with `quantum * weight` tokens; a tenant admits its
+/// head-of-line (FCFS within tenant) request when the deficit covers the
+/// prompt length. Tenants with nothing queued forfeit their deficit, so
+/// credit cannot be hoarded across idle periods.
+#[derive(Debug)]
+pub struct Drr {
+    pub quantum: usize,
+    pub weights: BTreeMap<usize, u32>,
+    deficits: BTreeMap<usize, u64>,
+    /// Last tenant served, so the round-robin resumes after it.
+    cursor: Option<usize>,
+}
+
+impl Drr {
+    pub fn new(quantum: usize, weights: &[(usize, u32)]) -> Self {
+        Drr {
+            quantum: quantum.max(1),
+            weights: weights.iter().copied().collect(),
+            deficits: BTreeMap::new(),
+            cursor: None,
+        }
+    }
+
+    fn weight(&self, tenant: usize) -> u64 {
+        (*self.weights.get(&tenant).unwrap_or(&1)).max(1) as u64
+    }
+}
+
+impl SchedPolicy for Drr {
+    fn kind(&self) -> SchedPolicyKind {
+        SchedPolicyKind::Drr
+    }
+
+    fn rank_admission(
+        &mut self,
+        queue: &[QueueItem<'_>],
+        _prefilling: &[&[u32]],
+        slots: usize,
+    ) -> Vec<u64> {
+        // FCFS within tenant: tenants keyed in first-appearance order.
+        let mut tenants: Vec<usize> = Vec::new();
+        let mut heads: BTreeMap<usize, Vec<&QueueItem<'_>>> = BTreeMap::new();
+        for it in queue {
+            let entry = heads.entry(it.tenant).or_default();
+            if entry.is_empty() {
+                tenants.push(it.tenant);
+            }
+            entry.push(it);
+        }
+        // Forfeit deficits of tenants with nothing queued.
+        self.deficits.retain(|t, _| heads.contains_key(t));
+        // Resume the round after the cursor tenant.
+        if let Some(cur) = self.cursor {
+            if let Some(pos) = tenants.iter().position(|&t| t == cur) {
+                tenants.rotate_left((pos + 1) % tenants.len());
+            }
+        }
+        let mut order = Vec::new();
+        let mut rr = 0usize;
+        while order.len() < slots {
+            if heads.values().all(|v| v.is_empty()) {
+                break; // every tenant's queue is drained
+            }
+            // One admission may need several credit rounds (quantum below
+            // the head-of-line prompt cost); each visit to a non-empty
+            // tenant grows its deficit by `quantum * weight >= 1`, so some
+            // deficit covers its head within ceil(max_cost / quantum)
+            // passes and the loop terminates.
+            loop {
+                let t = tenants[rr % tenants.len()];
+                rr += 1;
+                let pending = heads.get_mut(&t).expect("tenants derive from heads keys");
+                if pending.is_empty() {
+                    continue;
+                }
+                let credit = self.quantum as u64 * self.weight(t);
+                let deficit = self.deficits.entry(t).or_insert(0);
+                *deficit = deficit.saturating_add(credit);
+                let head = pending[0];
+                let cost = head.prompt.len() as u64;
+                if *deficit >= cost {
+                    *deficit -= cost;
+                    pending.remove(0);
+                    order.push(head.id);
+                    self.cursor = Some(t);
+                    break;
+                }
+            }
+        }
+        order
+    }
+}
+
+/// Build the policy object for a kind.
+pub fn make_policy(cfg: &PlannerConfig) -> Box<dyn SchedPolicy> {
+    match cfg.policy {
+        SchedPolicyKind::PrefixGreedy => Box::new(PrefixGreedy),
+        SchedPolicyKind::Drr => Box::new(Drr::new(cfg.drr_quantum, &cfg.tenant_weights)),
+        SchedPolicyKind::Aging => Box::new(Aging { boost_tokens: cfg.aging_boost_tokens.max(1) }),
+    }
+}
+
+/// Per-tenant serving counters (bounded cardinality; see
+/// [`StepPlanner::tenant_counters`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TenantCounters {
+    /// Requests admitted into the prefill queue.
+    pub admitted: u64,
+    /// Steps in which a queued request of this tenant was passed over by
+    /// a later-arrived admission (an out-of-FCFS-order bypass).
+    pub deferred: u64,
+    /// Decode tokens produced for this tenant's sequences.
+    pub decode_tokens: u64,
+}
+
+/// What the planner needs to see to plan one step. Borrowed views only —
+/// the planner never mutates engine state directly.
+pub struct PlanInputs<'a> {
+    pub queue: &'a std::collections::VecDeque<Request>,
+    pub prefilling: &'a std::collections::VecDeque<PrefillingSeq>,
+    pub active: &'a [ActiveSeq],
+    /// Free batch slots (max_batch - active - prefilling).
+    pub free_slots: usize,
+    /// Per-step token budget; `None` = unbounded.
+    pub step_budget: Option<usize>,
+    /// Whether the prefix retainer is over its chunk budget (the cheap
+    /// resident fast-path check) and has pins to spend.
+    pub retainer_over_budget: bool,
+    /// Longest resident prefix of a queued request's prompt.
+    pub cached_match: &'a dyn Fn(&Request) -> usize,
+}
+
+/// One step's scheduling decisions, all charged to the same budget:
+/// `decode_take + prefill_budget + evict_tokens <= step_budget`.
+#[derive(Debug, Clone)]
+pub struct StepPlan {
+    /// Queued request ids to admit, in admission order.
+    pub admit_ids: Vec<u64>,
+    /// Active sequence ids that sit this decode step out (partial decode
+    /// under a tight budget). Empty = full batch, the historical path.
+    pub decode_skip: Vec<u64>,
+    /// Decode tokens this step will spend (`active - skipped`).
+    pub decode_take: usize,
+    /// Eviction-token allowance granted to the retainer this step.
+    pub evict_tokens: usize,
+    /// Tokens left for prefill slices.
+    pub prefill_budget: usize,
+}
+
+/// The per-step planner: owns the policy, the admission wait clocks, the
+/// decode-lag rotation, and the per-tenant counters.
+pub struct StepPlanner {
+    cfg: PlannerConfig,
+    policy: Box<dyn SchedPolicy>,
+    /// Planner step counter (one per [`StepPlanner::plan`] call).
+    step: u64,
+    /// Queued request id -> step it was first seen (for aging).
+    first_seen: BTreeMap<u64, u64>,
+    /// Active sequence id -> consecutive decode steps skipped.
+    decode_lag: BTreeMap<u64, u64>,
+    /// Highest decode lag ever reached (observability + lag-bound tests).
+    max_lag_observed: u64,
+    tenants: BTreeMap<usize, TenantCounters>,
+    overflow: TenantCounters,
+}
+
+impl StepPlanner {
+    pub fn new(cfg: PlannerConfig) -> Self {
+        let policy = make_policy(&cfg);
+        StepPlanner {
+            cfg,
+            policy,
+            step: 0,
+            first_seen: BTreeMap::new(),
+            decode_lag: BTreeMap::new(),
+            max_lag_observed: 0,
+            tenants: BTreeMap::new(),
+            overflow: TenantCounters::default(),
+        }
+    }
+
+    pub fn config(&self) -> &PlannerConfig {
+        &self.cfg
+    }
+
+    pub fn policy_kind(&self) -> SchedPolicyKind {
+        self.policy.kind()
+    }
+
+    /// Highest consecutive decode-lag any sequence has accumulated.
+    pub fn max_decode_lag(&self) -> u64 {
+        self.max_lag_observed
+    }
+
+    /// Per-tenant counters, plus the overflow bucket aggregating tenants
+    /// beyond the cardinality cap (`None` key in exposition: "other").
+    pub fn tenant_counters(&self) -> (&BTreeMap<usize, TenantCounters>, &TenantCounters) {
+        (&self.tenants, &self.overflow)
+    }
+
+    fn tenant_mut(&mut self, tenant: usize) -> &mut TenantCounters {
+        if self.tenants.contains_key(&tenant) || self.tenants.len() < self.cfg.tenant_metrics_cap {
+            self.tenants.entry(tenant).or_default()
+        } else {
+            &mut self.overflow
+        }
+    }
+
+    /// Record one decode token for a tenant (called by the engine as it
+    /// appends decode output, so newly activated sequences count too).
+    pub fn note_decode_token(&mut self, tenant: usize) {
+        self.tenant_mut(tenant).decode_tokens += 1;
+    }
+
+    /// Forget a request's wait/lag state (cancelled or finished).
+    pub fn forget(&mut self, id: u64) {
+        self.first_seen.remove(&id);
+        self.decode_lag.remove(&id);
+    }
+
+    /// Produce this step's plan. Mutates planner state: wait clocks tick,
+    /// decode lags rotate, per-tenant admission/deferral counters bump.
+    pub fn plan(&mut self, inputs: &PlanInputs<'_>) -> StepPlan {
+        self.step += 1;
+        let step = self.step;
+
+        // --- Admission ranking ------------------------------------------------
+        // Tick wait clocks: a request waits from the first step it is seen
+        // queued. Prune ids no longer queued (admitted or cancelled).
+        let queued_ids: std::collections::BTreeSet<u64> =
+            inputs.queue.iter().map(|r| r.id).collect();
+        self.first_seen.retain(|id, _| queued_ids.contains(id));
+        for r in inputs.queue {
+            self.first_seen.entry(r.id).or_insert(step);
+        }
+        // Rank (and pay the per-request cached_match tree walks) only
+        // when a slot is actually free: a saturated batch must not spend
+        // O(queue × prompt) scoring work per step on an empty decision.
+        let admit_ids = if inputs.free_slots == 0 || inputs.queue.is_empty() {
+            Vec::new()
+        } else {
+            let items: Vec<QueueItem<'_>> = inputs
+                .queue
+                .iter()
+                .map(|r| QueueItem {
+                    id: r.id,
+                    tenant: r.tenant,
+                    prompt: &r.prompt,
+                    cached: (inputs.cached_match)(r),
+                    waited_steps: step - self.first_seen.get(&r.id).copied().unwrap_or(step),
+                })
+                .collect();
+            let prefilling_prompts: Vec<&[u32]> =
+                inputs.prefilling.iter().map(|p| p.request.prompt.as_slice()).collect();
+            let admit_ids =
+                self.policy.rank_admission(&items, &prefilling_prompts, inputs.free_slots);
+            // Per-tenant admission + bypass accounting.
+            if !admit_ids.is_empty() {
+                let admitted: std::collections::BTreeSet<u64> =
+                    admit_ids.iter().copied().collect();
+                let last_admitted_pos = items
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, it)| admitted.contains(&it.id))
+                    .map(|(i, _)| i)
+                    .max()
+                    .unwrap_or(0);
+                for (i, it) in items.iter().enumerate() {
+                    if admitted.contains(&it.id) {
+                        self.tenant_mut(it.tenant).admitted += 1;
+                    } else if i < last_admitted_pos {
+                        // Passed over by a later arrival this step.
+                        self.tenant_mut(it.tenant).deferred += 1;
+                    }
+                }
+                for id in &admit_ids {
+                    self.first_seen.remove(id);
+                }
+            }
+            admit_ids
+        };
+
+        // --- Budget split: decode first, then eviction, prefill last ---------
+        let batch = inputs.active.len();
+        // Prefill can actually consume budget this step only if a prompt
+        // is mid-prefill or one was just admitted; a full queue behind a
+        // saturated batch must NOT shrink decode for budget nothing can
+        // spend.
+        let prefill_has_work = !inputs.prefilling.is_empty() || !admit_ids.is_empty();
+        let (decode_take, decode_skip) = match inputs.step_budget {
+            None => (batch, Vec::new()),
+            Some(budget) => {
+                // Keep a sliver of budget for prefill whenever prompts
+                // can advance, so a full decode batch cannot starve
+                // prefill forever under `budget <= batch`
+                // misconfigurations.
+                let decode_cap = if prefill_has_work {
+                    budget - (budget / 4).max(1).min(budget)
+                } else {
+                    budget
+                };
+                let mut take = batch.min(decode_cap);
+                // Never let decode consume the entire budget while the
+                // retainer is over its chunk budget: eviction credit must
+                // grow on every over-budget step or a sustained full
+                // batch (budget <= max_batch misconfigurations) would
+                // hold evicted-pending memory forever.
+                if inputs.retainer_over_budget && take == budget {
+                    take -= 1;
+                }
+                let skip = self.rotate_decode(inputs.active, take);
+                (take, skip)
+            }
+        };
+
+        // --- Eviction allowance ----------------------------------------------
+        let after_decode = inputs.step_budget.map(|b| b - decode_take);
+        let evict_tokens = if !inputs.retainer_over_budget {
+            0
+        } else {
+            match after_decode {
+                None => usize::MAX,
+                // `.max(1)` guards an evict_step_tokens: 0 misconfig:
+                // eviction credit must grow on over-budget steps or
+                // maintenance could never converge.
+                Some(rem) => self.cfg.evict_step_tokens.max(1).min(rem),
+            }
+        };
+
+        let prefill_budget = match after_decode {
+            None => usize::MAX,
+            Some(rem) => rem - if evict_tokens == usize::MAX { 0 } else { evict_tokens },
+        };
+
+        StepPlan { admit_ids, decode_skip, decode_take, evict_tokens, prefill_budget }
+    }
+
+    /// Select which active sequences sit out (batch - take of them),
+    /// highest accumulated lag decoding first so the rotation bounds any
+    /// sequence's lag at `ceil(batch / take) - 1` consecutive skips.
+    /// Updates the lag map.
+    fn rotate_decode(&mut self, active: &[ActiveSeq], take: usize) -> Vec<u64> {
+        let live: std::collections::BTreeSet<u64> =
+            active.iter().map(|s| s.request.id).collect();
+        self.decode_lag.retain(|id, _| live.contains(id));
+        if take >= active.len() {
+            for s in active {
+                self.decode_lag.insert(s.request.id, 0);
+            }
+            return Vec::new();
+        }
+        // Stable order: by (lag desc, batch position asc) — deterministic
+        // for a given history, independent of map iteration quirks.
+        let mut ranked: Vec<(u64, usize, u64)> = active
+            .iter()
+            .enumerate()
+            .map(|(pos, s)| {
+                let lag = self.decode_lag.get(&s.request.id).copied().unwrap_or(0);
+                (lag, pos, s.request.id)
+            })
+            .collect();
+        ranked.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        let mut skip = Vec::with_capacity(active.len() - take);
+        for (i, &(lag, _, id)) in ranked.iter().enumerate() {
+            if i < take {
+                self.decode_lag.insert(id, 0);
+            } else {
+                let new_lag = lag + 1;
+                self.max_lag_observed = self.max_lag_observed.max(new_lag);
+                self.decode_lag.insert(id, new_lag);
+                skip.push(id);
+            }
+        }
+        skip
+    }
+}
+
+/// Rank a queue with the plain prefix-greedy policy — the seam
+/// [`Scheduler::admit_prefilling`] delegates to so its historical
+/// behavior and the planner's `prefix-greedy` policy cannot drift apart.
+///
+/// [`Scheduler::admit_prefilling`]: super::scheduler::Scheduler::admit_prefilling
+pub fn rank_prefix_greedy(
+    queue: &[QueueItem<'_>],
+    prefilling: &[&[u32]],
+    slots: usize,
+) -> Vec<u64> {
+    PrefixGreedy.rank_admission(queue, prefilling, slots)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::pbt;
+    use crate::util::rng::Pcg64;
+
+    fn item(id: u64, tenant: usize, prompt: &[u32], cached: usize, waited: u64) -> QueueItem<'_> {
+        QueueItem { id, tenant, prompt, cached, waited_steps: waited }
+    }
+
+    #[test]
+    fn parse_and_label_round_trip() {
+        for kind in [SchedPolicyKind::PrefixGreedy, SchedPolicyKind::Drr, SchedPolicyKind::Aging] {
+            assert_eq!(SchedPolicyKind::parse(kind.label()), Some(kind));
+        }
+        assert_eq!(SchedPolicyKind::parse("fifo"), None);
+    }
+
+    /// Literal copy of the pre-planner `Scheduler::admit_prefilling`
+    /// selection loop, kept as the bit-compatibility oracle: seed scores
+    /// from (cached match, prefilling affinity), then repeatedly take the
+    /// strict argmax (FCFS tiebreak) and fold the winner's prompt into
+    /// the survivors' scores.
+    fn reference_admission_order(
+        prompts: &[Vec<u32>],
+        cached: &[usize],
+        prefilling: &[Vec<u32>],
+        slots: usize,
+    ) -> Vec<usize> {
+        let mut queue: Vec<usize> = (0..prompts.len()).collect();
+        let mut scores: Vec<usize> = queue
+            .iter()
+            .map(|&i| {
+                let mut s = cached[i];
+                for p in prefilling {
+                    s = s.max(common_prefix(p, &prompts[i]));
+                }
+                s
+            })
+            .collect();
+        let mut order = Vec::new();
+        while order.len() < slots && !queue.is_empty() {
+            let mut best = 0usize;
+            let mut best_score = 0usize;
+            for (i, &s) in scores.iter().enumerate() {
+                if s > best_score {
+                    best = i;
+                    best_score = s;
+                }
+            }
+            scores.remove(best);
+            let picked = queue.remove(best);
+            order.push(picked);
+            for (s, &i) in scores.iter_mut().zip(queue.iter()) {
+                *s = (*s).max(common_prefix(&prompts[picked], &prompts[i]));
+            }
+        }
+        order
+    }
+
+    #[test]
+    fn prefix_greedy_is_bit_compatible_with_the_pre_planner_algorithm() {
+        // Random queues of tenant-structured prompts vs the literal copy
+        // of the old loop: the admission order must match element-wise for
+        // every slot count.
+        pbt::check(
+            "prefix-greedy-bit-compat",
+            0x96EED,
+            pbt::default_cases(),
+            |rng: &mut Pcg64| {
+                let n = rng.range(1, 12);
+                let prompts: Vec<Vec<u32>> = (0..n)
+                    .map(|_| {
+                        let tenant = rng.below(3) as u32;
+                        let shared = rng.range(0, 12);
+                        let mut p: Vec<u32> = (0..shared as u32).map(|i| tenant * 100 + i).collect();
+                        p.extend((0..rng.range(1, 4)).map(|_| 900 + rng.below(40) as u32));
+                        p
+                    })
+                    .collect();
+                let cached: Vec<usize> =
+                    prompts.iter().map(|p| rng.range(0, p.len().min(6))).collect();
+                let prefilling: Vec<Vec<u32>> = (0..rng.range(0, 2))
+                    .map(|_| (0..rng.range(1, 10) as u32).collect())
+                    .collect();
+                let slots = rng.range(1, n + 2);
+                (prompts, cached, prefilling, slots)
+            },
+            |(prompts, cached, prefilling, slots)| {
+                let expect = reference_admission_order(prompts, cached, prefilling, *slots);
+                let items: Vec<QueueItem<'_>> = prompts
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| item(i as u64, 0, p, cached[i], 0))
+                    .collect();
+                let pf: Vec<&[u32]> = prefilling.iter().map(|p| p.as_slice()).collect();
+                let got = rank_prefix_greedy(&items, &pf, *slots);
+                let got_idx: Vec<usize> = got.iter().map(|&id| id as usize).collect();
+                if got_idx != expect {
+                    return Err(format!("planner order {got_idx:?} != reference {expect:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn aging_boost_overcomes_any_prefix_score() {
+        // A cold request that has waited long enough must outrank a fresh
+        // sharer with a large cached prefix.
+        let sharer: Vec<u32> = (0..64).collect();
+        let cold: Vec<u32> = (500..540).collect();
+        let mut aging = Aging { boost_tokens: 8 };
+        // waited 0: reuse wins.
+        let q = [item(0, 0, &sharer, 64, 0), item(1, 9, &cold, 0, 0)];
+        assert_eq!(aging.rank_admission(&q, &[], 1), vec![0]);
+        // waited 8 steps * 8 tokens = 64: ties at 64, sharer still first
+        // (strict argmax keeps FCFS on ties). One more step wins.
+        let q = [item(0, 0, &sharer, 64, 0), item(1, 9, &cold, 0, 9)];
+        assert_eq!(aging.rank_admission(&q, &[], 1), vec![1], "aged cold request outranks");
+    }
+
+    #[test]
+    fn drr_shares_slots_across_tenants_by_weight() {
+        // Tenant 0 floods; tenant 1 trickles. Equal weights: admissions
+        // alternate regardless of arrival counts.
+        let p0: Vec<Vec<u32>> = (0..6).map(|i| vec![i as u32; 10]).collect();
+        let p1: Vec<u32> = vec![77; 10];
+        let mut items: Vec<QueueItem<'_>> = Vec::new();
+        for (i, p) in p0.iter().enumerate() {
+            items.push(item(i as u64, 0, p, 0, 0));
+        }
+        items.push(item(100, 1, &p1, 0, 0));
+        let mut drr = Drr::new(64, &[]);
+        let order = drr.rank_admission(&items, &[], 4);
+        assert_eq!(order.len(), 4);
+        assert!(
+            order.contains(&100),
+            "the minority tenant must get a slot within one round: {order:?}"
+        );
+        // FCFS within tenant 0.
+        let t0: Vec<u64> = order.iter().copied().filter(|&id| id < 100).collect();
+        let mut sorted = t0.clone();
+        sorted.sort_unstable();
+        assert_eq!(t0, sorted, "DRR keeps FCFS within a tenant");
+    }
+
+    #[test]
+    fn drr_weights_skew_admission_rates() {
+        // Tenant 0 at weight 3 vs tenant 1 at weight 1, equal-length
+        // prompts: tenant 0 should take ~3x the slots over a long run.
+        let prompts: Vec<Vec<u32>> = (0..40).map(|i| vec![i as u32; 16]).collect();
+        let mut items: Vec<QueueItem<'_>> = Vec::new();
+        for (i, p) in prompts.iter().enumerate() {
+            items.push(item(i as u64, i % 2, p, 0, 0));
+        }
+        let mut drr = Drr::new(8, &[(0, 3)]);
+        let order = drr.rank_admission(&items, &[], 16);
+        let t0 = order.iter().filter(|&&id| id % 2 == 0).count();
+        let t1 = order.len() - t0;
+        assert!(
+            t0 >= 2 * t1,
+            "weight 3 tenant got {t0} slots vs {t1} for weight 1: {order:?}"
+        );
+    }
+
+    #[test]
+    fn drr_deficit_does_not_hoard_across_empty_queues() {
+        let p: Vec<u32> = vec![1; 8];
+        let mut drr = Drr::new(4, &[]);
+        // Tenant 0 alone, needs 2 visits of quantum 4 for an 8-token prompt.
+        let items = [item(0, 0, &p, 0, 0)];
+        assert_eq!(drr.rank_admission(&items, &[], 1), vec![0]);
+        // Queue empties; deficits forfeit. A later request pays full price
+        // again (still admits — rank loops credit rounds — but the
+        // deficit map holds nothing stale for tenant 0).
+        assert!(drr.rank_admission(&[], &[], 1).is_empty());
+        assert!(drr.deficits.is_empty(), "deficits forfeit when a tenant's queue drains");
+    }
+
+    #[test]
+    fn planner_budget_split_conserves_the_step_budget() {
+        use crate::workload::Request;
+        let mk_active = |n: usize| -> Vec<ActiveSeq> {
+            (0..n)
+                .map(|i| ActiveSeq {
+                    request: Request {
+                        id: i as u64,
+                        arrival_s: 0.0,
+                        tenant: 0,
+                        prompt: vec![1, 2, 3],
+                        shared_tokens: 0,
+                        max_new_tokens: 10,
+                    },
+                    generated: 0,
+                    admitted_at: 0.0,
+                })
+                .collect()
+        };
+        let queue = std::collections::VecDeque::new();
+        let prefilling = std::collections::VecDeque::new();
+        let cached = |_: &Request| 0usize;
+        for (batch, budget, over) in
+            [(4usize, 24usize, false), (8, 8, true), (3, 4, true), (1, 2, false), (16, 8, false)]
+        {
+            let active = mk_active(batch);
+            let mut planner = StepPlanner::new(PlannerConfig::default());
+            let plan = planner.plan(&PlanInputs {
+                queue: &queue,
+                prefilling: &prefilling,
+                active: &active,
+                free_slots: 0,
+                step_budget: Some(budget),
+                retainer_over_budget: over,
+                cached_match: &cached,
+            });
+            let evict = if plan.evict_tokens == usize::MAX { 0 } else { plan.evict_tokens };
+            assert!(
+                plan.decode_take + plan.prefill_budget.min(budget) + evict <= budget,
+                "batch {batch} budget {budget}: take {} prefill {} evict {evict}",
+                plan.decode_take,
+                plan.prefill_budget
+            );
+            assert_eq!(plan.decode_skip.len(), batch - plan.decode_take);
+            assert!(plan.decode_take >= 1.min(batch), "decode must make progress");
+        }
+    }
+
+    #[test]
+    fn decode_rotation_bounds_per_sequence_lag() {
+        use crate::workload::Request;
+        let active: Vec<ActiveSeq> = (0..6)
+            .map(|i| ActiveSeq {
+                request: Request {
+                    id: i as u64,
+                    arrival_s: 0.0,
+                    tenant: 0,
+                    prompt: vec![1],
+                    shared_tokens: 0,
+                    max_new_tokens: 100,
+                },
+                generated: 0,
+                admitted_at: 0.0,
+            })
+            .collect();
+        let mut planner = StepPlanner::new(PlannerConfig::default());
+        // take=2 of batch=6 per step: every sequence must decode at least
+        // once every ceil(6/2)=3 steps, so lag never exceeds 2.
+        for _ in 0..30 {
+            let skip = planner.rotate_decode(&active, 2);
+            assert_eq!(skip.len(), 4);
+        }
+        assert!(
+            planner.max_decode_lag() <= 2,
+            "lag bound ceil(batch/take)-1 violated: {}",
+            planner.max_decode_lag()
+        );
+    }
+
+    #[test]
+    fn tenant_counters_bound_cardinality() {
+        let mut planner = StepPlanner::new(PlannerConfig {
+            tenant_metrics_cap: 2,
+            ..PlannerConfig::default()
+        });
+        for tenant in 0..10 {
+            planner.note_decode_token(tenant);
+        }
+        let (tenants, overflow) = planner.tenant_counters();
+        assert_eq!(tenants.len(), 2, "cardinality capped");
+        assert_eq!(overflow.decode_tokens, 8, "excess tenants aggregate");
+    }
+}

@@ -22,7 +22,7 @@
 
 use std::collections::VecDeque;
 
-use crate::kvcache::tree::common_prefix;
+use super::planner::{rank_prefix_greedy, QueueItem};
 use crate::workload::Request;
 
 /// A sequence currently being decoded.
@@ -255,6 +255,16 @@ impl Scheduler {
         admitted
     }
 
+    /// Free slots available for admission into the prefill queue.
+    pub fn free_slots(&self) -> usize {
+        self.max_batch.saturating_sub(self.active.len() + self.prefilling.len())
+    }
+
+    /// The admission queue, in arrival order (planner input).
+    pub fn queue(&self) -> &VecDeque<Request> {
+        &self.queue
+    }
+
     /// Admit queued requests into free batch slots as *prefilling*
     /// residents at time `now`. Prefix-aware: each free slot goes to the
     /// queued request sharing the longest prefix with resident content —
@@ -262,37 +272,47 @@ impl Scheduler {
     /// prefilling contribute their (future) prompt content — with FCFS
     /// order breaking ties. Grouping prefix-sharing requests this way
     /// turns sibling prefills into cache hits. Returns how many admitted.
+    ///
+    /// This is the historical entry point; it delegates to the planner's
+    /// `prefix-greedy` ranking ([`rank_prefix_greedy`]) so the two cannot
+    /// drift apart. The engine plans admission itself (any policy) and
+    /// applies it with [`Scheduler::admit_prefilling_ids`].
     pub fn admit_prefilling<F: Fn(&Request) -> usize>(&mut self, now: f64, cached_match: F) -> usize {
-        let mut admitted = 0usize;
-        if self.active.len() + self.prefilling.len() >= self.max_batch || self.queue.is_empty() {
+        let slots = self.free_slots();
+        if slots == 0 || self.queue.is_empty() {
             return 0;
         }
-        // Seed each queued request's score once — tree match (the tree is
-        // stable during admission) folded with affinity against the
-        // current prefilling set — then per admitted slot fold in just
-        // the newly admitted prompt, the only term that can change.
-        let mut scores: Vec<usize> = self
+        let items: Vec<QueueItem<'_>> = self
             .queue
             .iter()
-            .map(|r| {
-                let mut s = cached_match(r);
-                for p in &self.prefilling {
-                    s = s.max(common_prefix(&p.request.prompt, &r.prompt));
-                }
-                s
+            .map(|r| QueueItem {
+                id: r.id,
+                tenant: r.tenant,
+                prompt: &r.prompt,
+                cached: cached_match(r),
+                waited_steps: 0,
             })
             .collect();
-        while self.active.len() + self.prefilling.len() < self.max_batch && !self.queue.is_empty() {
-            let mut best = 0usize;
-            let mut best_score = 0usize;
-            for (i, &s) in scores.iter().enumerate() {
-                if s > best_score {
-                    best = i;
-                    best_score = s;
-                }
+        let prefilling: Vec<&[u32]> =
+            self.prefilling.iter().map(|p| p.request.prompt.as_slice()).collect();
+        let ids = rank_prefix_greedy(&items, &prefilling, slots);
+        drop(items);
+        drop(prefilling);
+        self.admit_prefilling_ids(&ids, now)
+    }
+
+    /// Admit specific queued requests (by id, in the given order) into the
+    /// prefill queue — the planner's admission plan applied. Ids not found
+    /// in the queue are skipped (cancelled between plan and apply);
+    /// admission stops when the batch is full. Returns how many admitted.
+    pub fn admit_prefilling_ids(&mut self, ids: &[u64], now: f64) -> usize {
+        let mut admitted = 0usize;
+        for &id in ids {
+            if self.free_slots() == 0 {
+                break;
             }
-            scores.remove(best);
-            let req = self.queue.remove(best).expect("queue checked non-empty");
+            let Some(pos) = self.queue.iter().position(|r| r.id == id) else { continue };
+            let req = self.queue.remove(pos).expect("position just found");
             self.prefilling.push_back(PrefillingSeq {
                 request: req,
                 admitted_at: now,
@@ -300,12 +320,26 @@ impl Scheduler {
                 reused: 0,
                 deferred: false,
             });
-            let newly = &self.prefilling.back().expect("just pushed").request.prompt;
-            for (s, r) in scores.iter_mut().zip(self.queue.iter()) {
-                *s = (*s).max(common_prefix(newly, &r.prompt));
-            }
             admitted += 1;
         }
+        admitted
+    }
+
+    /// Admit specific queued requests (by id, in order) straight into
+    /// decode slots — the virtual-time simulator's policy-ranked variant
+    /// of [`Scheduler::admit`] (prefill cost is modeled by the caller).
+    pub fn admit_ids(&mut self, ids: &[u64], now: f64) -> Vec<ActiveSeq> {
+        let mut admitted = Vec::new();
+        for &id in ids {
+            if self.active.len() + admitted.len() >= self.max_batch {
+                break;
+            }
+            let Some(pos) = self.queue.iter().position(|r| r.id == id) else { continue };
+            let req = self.queue.remove(pos).expect("position just found");
+            admitted.push(ActiveSeq { request: req, generated: 0, admitted_at: now });
+        }
+        self.active.extend(admitted.iter().cloned());
+        self.peak_batch = self.peak_batch.max(self.active.len());
         admitted
     }
 
@@ -357,8 +391,17 @@ impl Scheduler {
     /// Record one decoded token for every active sequence; retire the ones
     /// that reached their completion budget. Returns retired sequences.
     pub fn step_decode(&mut self, now: f64) -> Vec<FinishedSeq> {
+        self.step_decode_skipping(&[], now)
+    }
+
+    /// Like [`Scheduler::step_decode`], but sequences named in `skip`
+    /// sat this decode step out (budget-aware partial decode batches) and
+    /// generate nothing.
+    pub fn step_decode_skipping(&mut self, skip: &[u64], now: f64) -> Vec<FinishedSeq> {
         for s in &mut self.active {
-            s.generated += 1;
+            if !skip.contains(&s.request.id) {
+                s.generated += 1;
+            }
         }
         self.retire_finished(now)
     }
@@ -421,6 +464,7 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvcache::tree::common_prefix;
 
     fn req(id: u64, arrival: f64, prompt_len: usize, completion: usize) -> Request {
         Request {

@@ -11,6 +11,7 @@
 
 use std::collections::BTreeMap;
 
+use super::planner::{make_policy, PlannerConfig, QueueItem, SchedPolicyKind};
 use super::scheduler::{FinishedSeq, Scheduler};
 use crate::kvcache::{KvDtype, KvShape, MonolithicKvCache, PagedKvCache, PrefixTree, SeqId};
 use crate::model::ModelConfig;
@@ -57,11 +58,22 @@ pub struct SimConfig {
     /// Capacity headroom a monolithic server reserves per sequence
     /// (prompt + max_new_tokens), matching TGI's preallocation.
     pub mono_headroom: usize,
+    /// Admission-scheduling policy (`--sched-policy`); the same planner
+    /// policies the live engine runs, so Table-4-style comparisons can be
+    /// re-run per policy. The default degenerates to FCFS on single-
+    /// tenant traces (all scores tie).
+    pub policy: SchedPolicyKind,
 }
 
 impl SimConfig {
     pub fn new(system: SystemKind) -> Self {
-        SimConfig { system, max_batch: 32, chunk_size: 64, mono_headroom: 0 }
+        SimConfig {
+            system,
+            max_batch: 32,
+            chunk_size: 64,
+            mono_headroom: 0,
+            policy: SchedPolicyKind::PrefixGreedy,
+        }
     }
 }
 
@@ -126,6 +138,13 @@ pub fn simulate(
         SystemKind::Tgi => KvAccounting::Mono(MonolithicKvCache::new(shape)),
     };
     let mut sched = Scheduler::new(cfg.max_batch);
+    let mut policy = make_policy(&PlannerConfig { policy: cfg.policy, ..PlannerConfig::default() });
+    // Wait clocks for the aging policy, in scheduling iterations —
+    // mirrors `StepPlanner::plan`'s first_seen bookkeeping (seed on first
+    // sighting, prune on admission/disappearance) so the sim's
+    // waited_steps semantics match the live engine's.
+    let mut sched_iter: u64 = 0;
+    let mut first_seen: BTreeMap<u64, u64> = BTreeMap::new();
     let mut now = 0.0f64;
     let mut next_arrival = 0usize;
     let mut attn_time = 0.0f64;
@@ -152,8 +171,38 @@ pub fn simulate(
             }
             break;
         }
-        // Admit into free slots; prefill each admitted request.
-        let admitted = sched.admit(now);
+        // Admit into free slots, ranked by the configured policy; prefill
+        // each admitted request.
+        sched_iter += 1;
+        let queued_now: Vec<u64> = sched.queue().iter().map(|r| r.id).collect();
+        first_seen.retain(|id, _| queued_now.contains(id));
+        for &id in &queued_now {
+            first_seen.entry(id).or_insert(sched_iter);
+        }
+        let slots = cfg.max_batch.saturating_sub(sched.batch_size());
+        let admitted = if slots == 0 || sched.queued() == 0 {
+            Vec::new()
+        } else {
+            let items: Vec<QueueItem<'_>> = sched
+                .queue()
+                .iter()
+                .map(|r| QueueItem {
+                    id: r.id,
+                    tenant: r.tenant,
+                    prompt: &r.prompt,
+                    cached: match &kv {
+                        KvAccounting::Tree(tree) => tree.match_prefix(&r.prompt),
+                        _ => 0,
+                    },
+                    waited_steps: sched_iter - first_seen.get(&r.id).copied().unwrap_or(sched_iter),
+                })
+                .collect();
+            let ids = policy.rank_admission(&items, &[], slots);
+            for id in &ids {
+                first_seen.remove(id);
+            }
+            sched.admit_ids(&ids, now)
+        };
         for seq in &admitted {
             let req = &seq.request;
             let sid = SeqId(req.id);

@@ -33,11 +33,55 @@ pub struct PrefixRetainer {
     clock: u64,
     /// Max chunks the whole tree may keep in use before pins are evicted.
     budget_chunks: usize,
+    /// Accumulated eviction-token credit (amortized eviction): the step
+    /// planner grants an allowance per step while the tree is over
+    /// budget; a pin is evicted only once the credit covers its token
+    /// count, so per-step eviction work is bounded instead of bursting.
+    evict_credit: u64,
+    /// Tokens charged for pin eviction (granted allowances under a step
+    /// budget; actual pin tokens when unbounded).
+    eviction_tokens_total: u64,
+    /// Chunks returned to the pool by pin eviction.
+    evicted_chunks_total: u64,
+    /// Pins evicted.
+    evicted_pins_total: u64,
 }
 
 impl PrefixRetainer {
     pub fn new(budget_chunks: usize) -> Self {
-        PrefixRetainer { pins: BTreeMap::new(), next_pin_id: PIN_ID_BASE, clock: 0, budget_chunks }
+        PrefixRetainer {
+            pins: BTreeMap::new(),
+            next_pin_id: PIN_ID_BASE,
+            clock: 0,
+            budget_chunks,
+            evict_credit: 0,
+            eviction_tokens_total: 0,
+            evicted_chunks_total: 0,
+            evicted_pins_total: 0,
+        }
+    }
+
+    /// Cheap resident fast path: whether eviction work is needed at all.
+    /// O(1) — a pool-counter compare — so callers can skip eviction (and
+    /// any budget reservation for it) on the overwhelmingly common
+    /// under-budget step.
+    pub fn over_budget(&self, tree: &PrefixTree) -> bool {
+        !self.pins.is_empty() && tree.pool().in_use() > self.budget_chunks
+    }
+
+    /// Tokens charged for pin eviction so far (`eviction_tokens_total`).
+    pub fn eviction_tokens_total(&self) -> u64 {
+        self.eviction_tokens_total
+    }
+
+    /// Chunks freed by pin eviction so far (`evicted_chunks_total`).
+    pub fn evicted_chunks_total(&self) -> u64 {
+        self.evicted_chunks_total
+    }
+
+    /// Pins evicted so far.
+    pub fn evicted_pins_total(&self) -> u64 {
+        self.evicted_pins_total
     }
 
     pub fn pinned_count(&self) -> usize {
@@ -48,6 +92,12 @@ impl PrefixRetainer {
     /// fully cached already (call right after inserting a request that
     /// carries it). Touches LRU state if already pinned. Returns whether a
     /// new pin was created.
+    ///
+    /// Pinning never evicts inline: a pin that pushes the tree over
+    /// budget is paid off by the *caller's* next
+    /// [`Self::enforce_budget_amortized`] call (the engine spends an
+    /// eviction allowance every step), so activation cannot stall on a
+    /// burst of tree work.
     pub fn pin(&mut self, tree: &mut PrefixTree, prefix: &[u32]) -> bool {
         self.clock += 1;
         if prefix.is_empty() {
@@ -71,7 +121,6 @@ impl PrefixRetainer {
             prefix.to_vec(),
             Pin { seq, tokens: prefix.len(), last_used: self.clock },
         );
-        self.enforce_budget(tree);
         true
     }
 
@@ -87,20 +136,60 @@ impl PrefixRetainer {
         }
     }
 
-    /// Evict least-recently-used pins until the tree fits the budget.
-    /// Returns how many pins were evicted.
+    /// Evict least-recently-used pins until the tree fits the budget —
+    /// the unbounded (between-step burst) form, kept for [`Self::pin`]
+    /// and offline callers. Returns how many pins were evicted.
     pub fn enforce_budget(&mut self, tree: &mut PrefixTree) -> usize {
+        self.enforce_budget_amortized(tree, usize::MAX)
+    }
+
+    /// Amortized eviction: spend at most `grant_tokens` of eviction work
+    /// this call. The grant accumulates as credit while the tree stays
+    /// over budget, and an LRU pin is evicted once the credit covers its
+    /// token count — so a large pinned prefix is paid off over several
+    /// steps instead of stalling one (`usize::MAX` = unbounded, the
+    /// historical burst). Starts with the cheap [`Self::over_budget`]
+    /// fast path, so an under-budget step costs one counter compare.
+    /// Returns how many pins were evicted.
+    pub fn enforce_budget_amortized(&mut self, tree: &mut PrefixTree, grant_tokens: usize) -> usize {
+        if !self.over_budget(tree) {
+            // Balanced: drop any leftover credit so a later overload pays
+            // its own way instead of drawing on stale grants.
+            self.evict_credit = 0;
+            return 0;
+        }
+        let bounded = grant_tokens != usize::MAX;
+        if bounded {
+            self.evict_credit = self.evict_credit.saturating_add(grant_tokens as u64);
+            // Charged against the step budget whether or not a pin falls
+            // this very step — the credit is the spend.
+            self.eviction_tokens_total += grant_tokens as u64;
+        }
         let mut evicted = 0;
         while tree.pool().in_use() > self.budget_chunks && !self.pins.is_empty() {
-            let lru_key = self
+            let (lru_key, tokens) = self
                 .pins
                 .iter()
                 .min_by_key(|(_, p)| p.last_used)
-                .map(|(k, _)| k.clone())
+                .map(|(k, p)| (k.clone(), p.tokens as u64))
                 .expect("non-empty");
-            let pin = self.pins.remove(&lru_key).unwrap();
+            if bounded && self.evict_credit < tokens {
+                break; // keep accruing credit next step
+            }
+            let before = tree.pool().in_use();
+            let pin = self.pins.remove(&lru_key).expect("key just observed");
             tree.remove_sequence(pin.seq);
+            if bounded {
+                self.evict_credit -= tokens;
+            } else {
+                self.eviction_tokens_total += tokens;
+            }
+            self.evicted_chunks_total += before.saturating_sub(tree.pool().in_use()) as u64;
+            self.evicted_pins_total += 1;
             evicted += 1;
+        }
+        if tree.pool().in_use() <= self.budget_chunks {
+            self.evict_credit = 0;
         }
         evicted
     }
@@ -171,6 +260,7 @@ mod tests {
             t.insert_sequence(SeqId(tenant as u64), &sys, &mut fill);
             r.pin(&mut t, &sys);
             t.remove_sequence(SeqId(tenant as u64));
+            r.enforce_budget(&mut t);
         }
         // Budget 4 chunks = 2 tenants; tenant 0 (LRU) must be gone.
         assert_eq!(r.pinned_count(), 2);
@@ -201,8 +291,48 @@ mod tests {
         t.insert_sequence(SeqId(3), &sys_c, &mut fill);
         r.pin(&mut t, &sys_c);
         t.remove_sequence(SeqId(3));
+        r.enforce_budget(&mut t);
         assert_eq!(t.match_prefix(&sys_a), 8, "A retained (recently touched)");
         assert_eq!(t.match_prefix(&sys_b), 0, "B evicted");
+    }
+
+    #[test]
+    fn amortized_eviction_pays_a_pin_off_over_several_grants() {
+        let mut t = tree();
+        let mut r = PrefixRetainer::new(1); // over budget once anything pins
+        let sys: Vec<u32> = (0..12).collect(); // 12-token pin, 3 chunks
+        t.insert_sequence(SeqId(1), &sys, &mut fill);
+        r.pin(&mut t, &sys);
+        t.remove_sequence(SeqId(1));
+        assert!(r.over_budget(&t));
+        // 5-token grants: the 12-token pin needs ceil(12/5)=3 steps of
+        // credit before it falls; each step is bounded work.
+        assert_eq!(r.enforce_budget_amortized(&mut t, 5), 0, "credit 5 < 12");
+        assert_eq!(r.enforce_budget_amortized(&mut t, 5), 0, "credit 10 < 12");
+        assert_eq!(r.enforce_budget_amortized(&mut t, 5), 1, "credit 15 >= 12: evicted");
+        assert_eq!(t.pool().in_use(), 0);
+        assert_eq!(r.eviction_tokens_total(), 15, "every grant while over budget is charged");
+        assert_eq!(r.evicted_chunks_total(), 3);
+        assert_eq!(r.evicted_pins_total(), 1);
+        // Balanced again: further calls are the O(1) fast path and charge
+        // nothing.
+        assert_eq!(r.enforce_budget_amortized(&mut t, 5), 0);
+        assert_eq!(r.eviction_tokens_total(), 15);
+    }
+
+    #[test]
+    fn under_budget_fast_path_charges_nothing() {
+        let mut t = tree();
+        let mut r = PrefixRetainer::new(1000);
+        let sys: Vec<u32> = (0..8).collect();
+        t.insert_sequence(SeqId(1), &sys, &mut fill);
+        r.pin(&mut t, &sys);
+        assert!(!r.over_budget(&t));
+        for _ in 0..10 {
+            assert_eq!(r.enforce_budget_amortized(&mut t, 100), 0);
+        }
+        assert_eq!(r.eviction_tokens_total(), 0, "under-budget steps must not be charged");
+        assert_eq!(r.evicted_chunks_total(), 0);
     }
 
     #[test]

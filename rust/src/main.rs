@@ -14,7 +14,8 @@
 
 use chunk_attention::coordinator::engine::testing::SyntheticRunner;
 use chunk_attention::coordinator::{
-    simulate, Engine, KernelBench, MicroConfig, ModelRunner, SimConfig, SystemKind,
+    simulate, Engine, KernelBench, MicroConfig, ModelRunner, SchedPolicyKind, SimConfig,
+    SystemKind,
 };
 use chunk_attention::kvcache::KvDtype;
 use chunk_attention::model::ModelConfig;
@@ -22,8 +23,9 @@ use chunk_attention::perf_model::{AttentionImpl, HardwareModel};
 #[cfg(feature = "pjrt")]
 use chunk_attention::runtime::PjrtModel;
 use chunk_attention::server::{
-    render_comparison, run_bench, run_prefill_comparison, BenchConfig, ComparisonConfig, Gateway,
-    GatewayConfig, MixedBenchConfig,
+    render_comparison, render_policy_comparison, run_bench, run_policy_comparison,
+    run_prefill_comparison, BenchConfig, ComparisonConfig, Gateway, GatewayConfig,
+    MixedBenchConfig, PolicyComparisonConfig,
 };
 use chunk_attention::util::cli::{Args, Cli};
 use chunk_attention::util::config::Config;
@@ -46,6 +48,29 @@ fn parse_kv_dtype(args: &Args) -> anyhow::Result<KvDtype> {
     let s = args.get("kv-dtype");
     KvDtype::parse(s)
         .ok_or_else(|| anyhow::anyhow!("invalid --kv-dtype {s:?}; expected f32, f16 or bf16"))
+}
+
+/// Parse a `--sched-policy` value (`prefix-greedy` | `drr` | `aging`).
+fn parse_sched_policy(args: &Args) -> anyhow::Result<SchedPolicyKind> {
+    let s = args.get("sched-policy");
+    SchedPolicyKind::parse(s).ok_or_else(|| {
+        anyhow::anyhow!("invalid --sched-policy {s:?}; expected prefix-greedy, drr or aging")
+    })
+}
+
+/// Parse `--tenant-weights 0=4,3=2` into DRR (tenant, weight) pairs.
+fn parse_tenant_weights(s: &str) -> anyhow::Result<Vec<(usize, u32)>> {
+    let mut weights = Vec::new();
+    for pair in s.split(',').filter(|p| !p.is_empty()) {
+        let (tenant, weight) = pair
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("bad --tenant-weights entry {pair:?}; want T=W"))?;
+        weights.push((
+            tenant.trim().parse().map_err(|_| anyhow::anyhow!("bad tenant id {tenant:?}"))?,
+            weight.trim().parse().map_err(|_| anyhow::anyhow!("bad weight {weight:?}"))?,
+        ));
+    }
+    Ok(weights)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -133,10 +158,17 @@ fn serve(argv: &[String]) -> anyhow::Result<()> {
             "0",
             "per-step token budget over prefill slices + decode (0 = unbounded)",
         )
+        .opt("sched-policy", "prefix-greedy", "admission policy: prefix-greedy|drr|aging")
+        .opt("tenant-weights", "", "DRR per-tenant weights, e.g. 0=4,3=2 (unlisted weigh 1)")
         .opt("config", "", "optional TOML config overriding the flags")
         .flag("synthetic", "use the in-process synthetic runner (works on a default build)");
     let args = parse_or_exit(&cli, argv);
     let kv_dtype = parse_kv_dtype(&args)?;
+    let planner_cfg = chunk_attention::coordinator::PlannerConfig {
+        policy: parse_sched_policy(&args)?,
+        tenant_weights: parse_tenant_weights(args.get("tenant-weights"))?,
+        ..chunk_attention::coordinator::PlannerConfig::default()
+    };
 
     let mut requests = args.get_usize("requests");
     let mut max_batch = args.get_usize("max-batch");
@@ -162,6 +194,7 @@ fn serve(argv: &[String]) -> anyhow::Result<()> {
             args.get_usize("prefill-chunk-tokens"),
             args.get_usize("step-token-budget"),
         );
+        engine.set_planner_config(planner_cfg);
         return run_offline_trace(engine, requests, tenants, sys_tokens, completion);
     }
     // The PJRT path does not wire chunked prefill yet: slices would also
@@ -172,10 +205,20 @@ fn serve(argv: &[String]) -> anyhow::Result<()> {
         "--prefill-chunk-tokens/--step-token-budget are only supported with --synthetic \
          (the PJRT prefill artifact caps the dense prefix a slice may carry)"
     );
-    serve_pjrt(args.get("artifacts"), requests, max_batch, completion, tenants, sys_tokens, kv_dtype)
+    serve_pjrt(
+        args.get("artifacts"),
+        requests,
+        max_batch,
+        completion,
+        tenants,
+        sys_tokens,
+        kv_dtype,
+        planner_cfg,
+    )
 }
 
 #[cfg(feature = "pjrt")]
+#[allow(clippy::too_many_arguments)]
 fn serve_pjrt(
     artifacts: &str,
     requests: usize,
@@ -184,13 +227,15 @@ fn serve_pjrt(
     tenants: usize,
     sys_tokens: u32,
     kv_dtype: KvDtype,
+    planner_cfg: chunk_attention::coordinator::PlannerConfig,
 ) -> anyhow::Result<()> {
     // The PJRT decode path stages chunks into f32 device tensors, so the
     // tree may store at any dtype; rows widen at staging time.
     let model = PjrtModel::load(std::path::Path::new(artifacts))?;
     let chunk_size = model.chunk_size();
     let max_batch = max_batch.min(model.max_batch());
-    let engine = Engine::with_dtype(model, chunk_size, max_batch, kv_dtype);
+    let mut engine = Engine::with_dtype(model, chunk_size, max_batch, kv_dtype);
+    engine.set_planner_config(planner_cfg);
     run_offline_trace(engine, requests, tenants, sys_tokens, completion)
 }
 
@@ -204,6 +249,7 @@ fn serve_pjrt(
     _tenants: usize,
     _sys_tokens: u32,
     _kv_dtype: KvDtype,
+    _planner_cfg: chunk_attention::coordinator::PlannerConfig,
 ) -> anyhow::Result<()> {
     anyhow::bail!(
         "the PJRT-compiled model is not in this build; rerun with --synthetic for the \
@@ -232,6 +278,8 @@ fn gateway_cmd(argv: &[String]) -> anyhow::Result<()> {
         "0",
         "per-step token budget over prefill slices + decode (0 = unbounded)",
     )
+    .opt("sched-policy", "prefix-greedy", "admission policy: prefix-greedy|drr|aging")
+    .opt("tenant-weights", "", "DRR per-tenant weights, e.g. 0=4,3=2 (unlisted tenants weigh 1)")
     .flag("synthetic", "use the in-process synthetic runner (the only gateway runner today)");
     let args = parse_or_exit(&cli, argv);
 
@@ -257,6 +305,8 @@ fn gateway_cmd(argv: &[String]) -> anyhow::Result<()> {
         retain_chunks: args.get_usize("retain-chunks"),
         prefill_chunk_tokens: args.get_usize("prefill-chunk-tokens"),
         step_token_budget: args.get_usize("step-token-budget"),
+        sched_policy: parse_sched_policy(&args)?,
+        tenant_weights: parse_tenant_weights(args.get("tenant-weights"))?,
         ..GatewayConfig::default()
     };
     let gw = Gateway::start(engine, cfg)?;
@@ -293,20 +343,34 @@ fn bench_http(argv: &[String]) -> anyhow::Result<()> {
     .opt("decode-interval-us", "200", "spawned gateway: decode pacing (us)")
     .opt("prefill-chunk-tokens", "0", "spawned gateway: prefill slice tokens (0 = monolithic)")
     .opt("step-token-budget", "0", "spawned gateway: per-step token budget (0 = unbounded)")
-    .opt("long-clients", "2", "mixed mode: closed-loop workers issuing long cold prompts")
-    .opt("long-requests", "8", "mixed mode: total long cold prompts")
-    .opt("long-prompt-tokens", "2048", "mixed mode: tokens per long cold prompt")
-    .opt("prefill-us-per-token", "50", "mixed mode: emulated prefill cost per token (us)")
+    .opt("sched-policy", "prefix-greedy", "spawned gateway: admission policy")
+    .opt("tenant-weights", "", "spawned gateway: DRR per-tenant weights, e.g. 0=4,3=2")
+    .opt("long-clients", "2", "mixed/skewed mode: closed-loop workers issuing long cold prompts")
+    .opt("long-requests", "8", "mixed/skewed mode: total long cold prompts")
+    .opt("long-prompt-tokens", "2048", "mixed/skewed mode: tokens per long cold prompt")
+    .opt("prefill-us-per-token", "50", "mixed/skewed mode: emulated prefill cost per token (us)")
     .flag(
         "mixed",
         "run the head-of-line workload (long cold prompts + short shared-prefix requests) \
          against a monolithic and a chunked gateway and print TTFT side by side",
+    )
+    .flag(
+        "skewed",
+        "run the skewed-tenant workload (one cold long-prompt tenant vs a hot prefix-sharing \
+         storm) under prefix-greedy and aging and print per-tenant TTFT side by side",
     );
     let args = parse_or_exit(&cli, argv);
     // Validate the dtype up front even when benchmarking an external
     // gateway (whose dtype is its own; a typo should still fail loudly).
     let kv_dtype = parse_kv_dtype(&args)?;
 
+    if args.get_flag("skewed") {
+        anyhow::ensure!(
+            args.get("addr").is_empty() && !args.get_flag("mixed"),
+            "--skewed spawns its own per-policy gateways; drop --addr/--mixed"
+        );
+        return bench_http_skewed(&args, kv_dtype);
+    }
     if args.get_flag("mixed") {
         // The comparison needs control of both gateways' prefill configs,
         // so it always spawns its own; refusing --addr beats silently
@@ -336,6 +400,8 @@ fn bench_http(argv: &[String]) -> anyhow::Result<()> {
                 decode_interval: Duration::from_micros(args.get_u64("decode-interval-us")),
                 prefill_chunk_tokens: args.get_usize("prefill-chunk-tokens"),
                 step_token_budget: args.get_usize("step-token-budget"),
+                sched_policy: parse_sched_policy(&args)?,
+                tenant_weights: parse_tenant_weights(args.get("tenant-weights"))?,
                 ..GatewayConfig::default()
             },
         )?;
@@ -417,6 +483,51 @@ fn bench_http_mixed(args: &Args, kv_dtype: KvDtype) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `bench-http --skewed`: one cold long-prompt tenant vs a hot
+/// prefix-sharing storm, once per admission policy (prefix-greedy vs
+/// aging). The cold tenant's TTFT p50/p99 is the fairness headline.
+fn bench_http_skewed(args: &Args, kv_dtype: KvDtype) -> anyhow::Result<()> {
+    let defaults = PolicyComparisonConfig::default();
+    let chunk_tokens = match args.get_usize("prefill-chunk-tokens") {
+        0 => defaults.prefill_chunk_tokens,
+        n => n,
+    };
+    let budget = match args.get_usize("step-token-budget") {
+        0 => chunk_tokens + args.get_usize("max-batch") * 2,
+        n => n,
+    };
+    let cfg = PolicyComparisonConfig {
+        mixed: MixedBenchConfig {
+            addr: String::new(),
+            long_clients: args.get_usize("long-clients").max(1),
+            short_clients: args.get_usize("clients"),
+            long_requests: args.get_usize("long-requests"),
+            short_requests: args.get_usize("requests"),
+            long_prompt_tokens: args.get_usize("long-prompt-tokens"),
+            shared_prefix_tokens: args.get_usize("system-tokens"),
+            short_query_tokens: args.get_usize("query-tokens"),
+            max_new_tokens: args.get_usize("completion"),
+            timeout: Duration::from_secs(120),
+        },
+        max_batch: args.get_usize("max-batch"),
+        chunk: args.get_usize("chunk"),
+        queue_cap: args.get_usize("queue-cap"),
+        decode_interval: Duration::from_micros(args.get_u64("decode-interval-us")),
+        prefill_us_per_token: args.get_u64("prefill-us-per-token"),
+        prefill_chunk_tokens: chunk_tokens,
+        step_token_budget: budget,
+        kv_dtype,
+        ..defaults
+    };
+    let (greedy, aging) = run_policy_comparison(&cfg)?;
+    println!("{}", render_policy_comparison(&cfg, &greedy, &aging));
+    anyhow::ensure!(
+        greedy.long_completed > 0 && aging.long_completed > 0,
+        "no cold-tenant request completed — is the workload misconfigured?"
+    );
+    Ok(())
+}
+
 fn simulate_cmd(argv: &[String]) -> anyhow::Result<()> {
     let cli = Cli::new("chunk-serve simulate", "virtual-time 7B-scale e2e simulation")
         .opt("system", "chunkllama", "chunkllama | vllm | tgi")
@@ -426,6 +537,11 @@ fn simulate_cmd(argv: &[String]) -> anyhow::Result<()> {
         .opt("query", "128", "per-request query tokens")
         .opt("completion", "512", "completion tokens (n_c)")
         .opt("max-batch", "32", "max decode batch")
+        .opt(
+            "sched-policy",
+            "prefix-greedy",
+            "admission policy: prefix-greedy|drr|aging (drr runs unweighted here)",
+        )
         .opt("seed", "1234", "trace seed");
     let args = parse_or_exit(&cli, argv);
     let system = match args.get("system") {
@@ -445,9 +561,14 @@ fn simulate_cmd(argv: &[String]) -> anyhow::Result<()> {
         },
         args.get_usize("shared"),
     );
-    let cfg = SimConfig { max_batch: args.get_usize("max-batch"), ..SimConfig::new(system) };
+    let cfg = SimConfig {
+        max_batch: args.get_usize("max-batch"),
+        policy: parse_sched_policy(&args)?,
+        ..SimConfig::new(system)
+    };
     let r = simulate(&cfg, &ModelConfig::llama2_7b(), &HardwareModel::a100_80g(), &trace);
     println!("system:            {}", r.system.label());
+    println!("sched policy:      {}", cfg.policy.label());
     println!(
         "normalized latency {:.2} ms/tok (p99 {:.2})",
         r.normalized_latency_ms_per_tok, r.p99_normalized_latency

@@ -30,6 +30,31 @@ pub fn push_labeled_gauge(
     ));
 }
 
+/// One labeled sample of a multi-sample series: (label pairs, value).
+pub type LabeledSample<'a> = (Vec<(&'a str, String)>, f64);
+
+/// Append one gauge with several labeled samples (one HELP/TYPE header,
+/// one sample line per label set) — e.g. the per-tenant serving counters
+/// `tenant_admitted_total{tenant="0"} 4`. Emits nothing for an empty row
+/// set, so absent series don't clutter the document.
+pub fn push_labeled_series(
+    out: &mut String,
+    prefix: &str,
+    name: &str,
+    help: &str,
+    rows: &[LabeledSample<'_>],
+) {
+    if rows.is_empty() {
+        return;
+    }
+    out.push_str(&format!("# HELP {prefix}_{name} {help}\n# TYPE {prefix}_{name} gauge\n"));
+    for (labels, value) in rows {
+        let rendered: Vec<String> =
+            labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+        out.push_str(&format!("{prefix}_{name}{{{}}} {value}\n", rendered.join(",")));
+    }
+}
+
 /// Render the exposition document (text format 0.0.4 subset).
 pub fn render_exposition(m: &MetricsRecorder, prefix: &str) -> String {
     let mut out = String::new();
@@ -129,5 +154,30 @@ mod tests {
         }
         // Every series has HELP and TYPE lines.
         assert_eq!(text.matches("# HELP").count(), text.matches("# TYPE").count());
+    }
+
+    #[test]
+    fn labeled_series_shares_one_header_across_samples() {
+        let mut out = String::new();
+        push_labeled_series(
+            &mut out,
+            "gw",
+            "tenant_admitted_total",
+            "requests admitted per tenant",
+            &[
+                (vec![("tenant", "0".to_string())], 4.0),
+                (vec![("tenant", "7".to_string())], 1.0),
+                (vec![("tenant", "other".to_string())], 9.0),
+            ],
+        );
+        assert_eq!(out.matches("# HELP").count(), 1);
+        assert_eq!(out.matches("# TYPE").count(), 1);
+        assert!(out.contains("gw_tenant_admitted_total{tenant=\"0\"} 4"));
+        assert!(out.contains("gw_tenant_admitted_total{tenant=\"7\"} 1"));
+        assert!(out.contains("gw_tenant_admitted_total{tenant=\"other\"} 9"));
+        // Empty row sets emit nothing at all.
+        let mut empty = String::new();
+        push_labeled_series(&mut empty, "gw", "x", "h", &[]);
+        assert!(empty.is_empty());
     }
 }

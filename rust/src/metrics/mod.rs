@@ -5,5 +5,5 @@
 pub mod exporter;
 pub mod recorder;
 
-pub use exporter::{push_gauge, push_labeled_gauge, render_exposition};
+pub use exporter::{push_gauge, push_labeled_gauge, push_labeled_series, render_exposition};
 pub use recorder::{MetricsRecorder, RequestRecord, ThroughputWindow};

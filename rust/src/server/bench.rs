@@ -11,7 +11,7 @@
 use super::client::{self, StreamEvent};
 use super::gateway::{Gateway, GatewayConfig};
 use crate::coordinator::engine::testing::{PacedRunner, SyntheticRunner};
-use crate::coordinator::Engine;
+use crate::coordinator::{Engine, SchedPolicyKind};
 use crate::kvcache::KvDtype;
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
@@ -354,12 +354,16 @@ pub fn run_mixed_bench(cfg: &MixedBenchConfig) -> anyhow::Result<MixedReport> {
             if i >= cfg.long_requests {
                 break;
             }
-            // Unique token ids per request: a genuinely cold prompt.
+            // Unique token ids per request: a genuinely cold prompt. The
+            // long class is tenant 1 so per-tenant fairness metrics (and
+            // the DRR/aging policies) see it as the cold minority tenant.
             let base = 1_000_000u32 + (i * cfg.long_prompt_tokens) as u32;
             let prompt: Vec<u32> = (0..cfg.long_prompt_tokens as u32).map(|j| base + j).collect();
             let mut body = Json::obj();
             body.set("tokens", Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect()));
-            body.set("shared_tokens", 0usize).set("max_new_tokens", cfg.max_new_tokens);
+            body.set("shared_tokens", 0usize)
+                .set("tenant", 1usize)
+                .set("max_new_tokens", cfg.max_new_tokens);
             issue_one(&cfg.addr, &body, cfg.timeout, &tally);
         }));
     }
@@ -379,7 +383,9 @@ pub fn run_mixed_bench(cfg: &MixedBenchConfig) -> anyhow::Result<MixedReport> {
             let shared = prefix.len();
             let mut body = Json::obj();
             body.set("tokens", Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect()));
-            body.set("shared_tokens", shared).set("max_new_tokens", cfg.max_new_tokens);
+            body.set("shared_tokens", shared)
+                .set("tenant", 0usize)
+                .set("max_new_tokens", cfg.max_new_tokens);
             issue_one(&cfg.addr, &body, cfg.timeout, &tally);
         }));
     }
@@ -474,6 +480,142 @@ pub fn run_prefill_comparison(cfg: &ComparisonConfig) -> anyhow::Result<(MixedRe
     let monolithic = run(false)?;
     let chunked = run(true)?;
     Ok((monolithic, chunked))
+}
+
+/// Gateway + workload knobs for the `--skewed` policy comparison: one
+/// *cold* tenant issuing long unshareable prompts (the `long_*` side of
+/// [`MixedBenchConfig`], tenant 1) competes with a *hot* tenant storm of
+/// short prefix-sharing requests (the `short_*` side, tenant 0). Under
+/// `prefix-greedy` every freed slot goes to a sharer while any is queued,
+/// so the cold tenant's TTFT degrades to the storm duration; `aging`
+/// bounds its wait. Both gateways run chunked prefill with the same
+/// budget — only the admission policy differs.
+#[derive(Debug, Clone)]
+pub struct PolicyComparisonConfig {
+    /// The skewed workload (its `addr` is overwritten per gateway).
+    pub mixed: MixedBenchConfig,
+    pub max_batch: usize,
+    pub chunk: usize,
+    pub queue_cap: usize,
+    pub decode_interval: Duration,
+    pub prefill_us_per_token: u64,
+    pub prefill_chunk_tokens: usize,
+    pub step_token_budget: usize,
+    pub kv_dtype: KvDtype,
+    /// The two policies compared, `(baseline, contender)`.
+    pub policies: (SchedPolicyKind, SchedPolicyKind),
+}
+
+impl Default for PolicyComparisonConfig {
+    fn default() -> Self {
+        PolicyComparisonConfig {
+            mixed: MixedBenchConfig {
+                // A storm of hot sharers against a small batch keeps the
+                // queue contended, so admission *order* (not prefill
+                // bandwidth) decides the cold tenant's wait.
+                long_clients: 1,
+                short_clients: 6,
+                long_requests: 4,
+                short_requests: 48,
+                ..MixedBenchConfig::default()
+            },
+            max_batch: 4,
+            chunk: 64,
+            queue_cap: 64,
+            decode_interval: Duration::from_micros(200),
+            prefill_us_per_token: 20,
+            prefill_chunk_tokens: 128,
+            step_token_budget: 160,
+            kv_dtype: KvDtype::F32,
+            policies: (SchedPolicyKind::PrefixGreedy, SchedPolicyKind::Aging),
+        }
+    }
+}
+
+/// Run the skewed-tenant workload once per policy against freshly
+/// spawned gateways; returns `(baseline, contender)` reports. The cold
+/// tenant's numbers are the `long_*` fields of [`MixedReport`].
+pub fn run_policy_comparison(
+    cfg: &PolicyComparisonConfig,
+) -> anyhow::Result<(MixedReport, MixedReport)> {
+    let run = |policy: SchedPolicyKind| -> anyhow::Result<MixedReport> {
+        let runner = PacedRunner {
+            inner: SyntheticRunner { heads_total: 16, head_dim: 32, vocab: 32000 },
+            prefill_us_per_token: cfg.prefill_us_per_token,
+        };
+        let engine = Engine::with_dtype(runner, cfg.chunk, cfg.max_batch, cfg.kv_dtype);
+        let gw = Gateway::start(
+            engine,
+            GatewayConfig {
+                addr: "127.0.0.1:0".to_string(),
+                queue_cap: cfg.queue_cap,
+                decode_interval: cfg.decode_interval,
+                prefill_chunk_tokens: cfg.prefill_chunk_tokens,
+                step_token_budget: cfg.step_token_budget,
+                sched_policy: policy,
+                ..GatewayConfig::default()
+            },
+        )?;
+        let mut mixed = cfg.mixed.clone();
+        mixed.addr = gw.addr().to_string();
+        let report = run_mixed_bench(&mixed)?;
+        gw.shutdown()?;
+        Ok(report)
+    };
+    let baseline = run(cfg.policies.0)?;
+    let contender = run(cfg.policies.1)?;
+    Ok((baseline, contender))
+}
+
+/// Side-by-side rendering of the skewed-tenant policy comparison: the
+/// cold tenant's TTFT is the fairness headline, the hot storm's TTFT
+/// shows what the fairness costs.
+pub fn render_policy_comparison(
+    cfg: &PolicyComparisonConfig,
+    baseline: &MixedReport,
+    contender: &MixedReport,
+) -> String {
+    format!(
+        "skewed-tenant comparison — 1 cold tenant ({} prompts x {} tok) vs a hot storm \
+         ({} requests, {}-tok shared prefix); chunked prefill {} tok / budget {}\n\
+         \n\
+         {:<28}{:>14}{:>14}\n\
+         {:<28}{:>14.1}{:>14.1}\n\
+         {:<28}{:>14.1}{:>14.1}\n\
+         {:<28}{:>14.1}{:>14.1}\n\
+         {:<28}{:>14.1}{:>14.1}\n\
+         {:<28}{:>11}/{:<2}{:>11}/{:<2}\n\
+         {:<28}{:>14.2}{:>14.2}",
+        cfg.mixed.long_requests,
+        cfg.mixed.long_prompt_tokens,
+        cfg.mixed.short_requests,
+        cfg.mixed.shared_prefix_tokens,
+        cfg.prefill_chunk_tokens,
+        cfg.step_token_budget,
+        "",
+        cfg.policies.0.label(),
+        cfg.policies.1.label(),
+        "cold TTFT p50 (ms)",
+        baseline.long_ttft_ms.percentile(50.0),
+        contender.long_ttft_ms.percentile(50.0),
+        "cold TTFT p99 (ms)",
+        baseline.long_ttft_ms.percentile(99.0),
+        contender.long_ttft_ms.percentile(99.0),
+        "hot TTFT p50 (ms)",
+        baseline.short_ttft_ms.percentile(50.0),
+        contender.short_ttft_ms.percentile(50.0),
+        "hot TTFT p99 (ms)",
+        baseline.short_ttft_ms.percentile(99.0),
+        contender.short_ttft_ms.percentile(99.0),
+        "completed (hot/cold)",
+        baseline.short_completed,
+        baseline.long_completed,
+        contender.short_completed,
+        contender.long_completed,
+        "wall time (s)",
+        baseline.wall_s,
+        contender.wall_s,
+    )
 }
 
 /// Side-by-side rendering of the monolithic-vs-chunked comparison.

@@ -80,6 +80,31 @@ pub fn gauge_value(exposition: &str, name: &str) -> Option<f64> {
     None
 }
 
+/// Extract a labeled gauge sample from an exposition document: the series
+/// whose name ends with `_{name}` and whose label set contains
+/// `label="value"` (e.g. `tenant_admitted_total` with `tenant`/`"1"`).
+pub fn labeled_gauge_value(
+    exposition: &str,
+    name: &str,
+    label: &str,
+    value: &str,
+) -> Option<f64> {
+    let suffix = format!("_{name}");
+    let pair = format!("{label}=\"{value}\"");
+    for line in exposition.lines() {
+        if line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let (Some(series), Some(sample)) = (parts.next(), parts.next()) else { continue };
+        let Some(brace) = series.find('{') else { continue };
+        if series[..brace].ends_with(&suffix) && series[brace..].contains(&pair) {
+            return sample.parse().ok();
+        }
+    }
+    None
+}
+
 /// One event of a `/v1/generate` SSE stream.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StreamEvent {
@@ -163,5 +188,16 @@ mod tests {
         assert_eq!(gauge_value(doc, "x"), Some(3.5));
         assert_eq!(gauge_value(doc, "queue_depth"), Some(7.0));
         assert_eq!(gauge_value(doc, "missing"), None);
+    }
+
+    #[test]
+    fn labeled_gauge_value_matches_label_pairs() {
+        let doc = "# HELP g_tenant_admitted_total h\n# TYPE g_tenant_admitted_total gauge\n\
+                   g_tenant_admitted_total{tenant=\"0\"} 4\n\
+                   g_tenant_admitted_total{tenant=\"1\"} 1.5\n\
+                   g_sched_policy_info{policy=\"aging\"} 1\n";
+        assert_eq!(labeled_gauge_value(doc, "tenant_admitted_total", "tenant", "1"), Some(1.5));
+        assert_eq!(labeled_gauge_value(doc, "tenant_admitted_total", "tenant", "9"), None);
+        assert_eq!(labeled_gauge_value(doc, "sched_policy_info", "policy", "aging"), Some(1.0));
     }
 }

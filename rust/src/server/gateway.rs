@@ -21,8 +21,8 @@
 //! drains active sequences before the stepper exits.
 
 use super::http;
-use crate::coordinator::{Engine, ModelRunner};
-use crate::metrics::{push_gauge, push_labeled_gauge, render_exposition};
+use crate::coordinator::{Engine, ModelRunner, SchedPolicyKind};
+use crate::metrics::{push_gauge, push_labeled_gauge, push_labeled_series, render_exposition};
 use crate::util::json::Json;
 use crate::workload::{Request, Tokenizer};
 use std::collections::BTreeMap;
@@ -60,10 +60,20 @@ pub struct GatewayConfig {
     /// Chunked prefill slice granularity in tokens; 0 = monolithic
     /// prefill (a whole unmatched prompt suffix per admission).
     pub prefill_chunk_tokens: usize,
-    /// Per-engine-step token budget across prefill slices and decode
-    /// tokens; 0 = unbounded. Must exceed `max_batch` for prefill to make
-    /// progress under a full decode batch.
+    /// Per-engine-step token budget across prefill slices, decode
+    /// tokens, and eviction grants; 0 = unbounded. Budgets at or below
+    /// `max_batch` force partial decode batches (the planner rotates the
+    /// batch with bounded lag and keeps a prefill/eviction sliver), so
+    /// the budget should comfortably exceed `max_batch` unless decode
+    /// throttling is intended.
     pub step_token_budget: usize,
+    /// Admission-scheduling policy (`--sched-policy`): `prefix-greedy`
+    /// (historical behavior), `drr` (per-tenant deficit round-robin), or
+    /// `aging` (starvation-free wait boost).
+    pub sched_policy: SchedPolicyKind,
+    /// DRR per-tenant weights (`--tenant-weights 0=4,3=2`); unlisted
+    /// tenants weigh 1. Ignored by the other policies.
+    pub tenant_weights: Vec<(usize, u32)>,
 }
 
 impl Default for GatewayConfig {
@@ -79,6 +89,8 @@ impl Default for GatewayConfig {
             history_limit: 4096,
             prefill_chunk_tokens: 0,
             step_token_budget: 0,
+            sched_policy: SchedPolicyKind::PrefixGreedy,
+            tenant_weights: Vec::new(),
         }
     }
 }
@@ -124,6 +136,11 @@ impl Gateway {
         engine.set_queue_limit(Some(cfg.queue_cap));
         engine.set_history_limit(cfg.history_limit);
         engine.set_chunked_prefill(cfg.prefill_chunk_tokens, cfg.step_token_budget);
+        engine.set_planner_config(crate::coordinator::PlannerConfig {
+            policy: cfg.sched_policy,
+            tenant_weights: cfg.tenant_weights.clone(),
+            ..crate::coordinator::PlannerConfig::default()
+        });
         if cfg.retain_chunks > 0 {
             engine.enable_prefix_retention(cfg.retain_chunks);
         }
@@ -200,6 +217,15 @@ fn stepper_loop<R: ModelRunner>(
         if engine.is_idle() {
             if draining || disconnected {
                 break;
+            }
+            // Idle maintenance: keep spending the amortized eviction
+            // allowance while pinned prefixes sit over the retention
+            // budget, so the last request's pins drain between requests.
+            if engine.needs_maintenance() {
+                if let Err(e) = engine.step() {
+                    log::error!("engine maintenance step failed, stopping stepper: {e}");
+                    break;
+                }
             }
             // Park until work arrives, with a bounded wait so a Drain that
             // raced past the try_recv loop is still noticed promptly.
@@ -401,6 +427,81 @@ fn render_metrics<R: ModelRunner>(engine: &Engine<R>, live_streams: usize, prefi
         &[("dtype", engine.tree().shape().dtype.label())],
         1.0,
     );
+    // Scheduling-policy observability: the active policy as an info
+    // gauge, bounded-cardinality per-tenant fairness counters, and the
+    // amortized pin-eviction spend.
+    let planner = engine.planner();
+    push_labeled_gauge(
+        &mut out,
+        prefix,
+        "sched_policy_info",
+        "active admission-scheduling policy (value is always 1)",
+        &[("policy", planner.policy_kind().label())],
+        1.0,
+    );
+    let (tenants, overflow) = planner.tenant_counters();
+    let tenant_rows = |pick: fn(&crate::coordinator::TenantCounters) -> u64| {
+        let mut rows: Vec<(Vec<(&str, String)>, f64)> = tenants
+            .iter()
+            .map(|(t, c)| (vec![("tenant", t.to_string())], pick(c) as f64))
+            .collect();
+        let o = pick(overflow);
+        if o > 0 {
+            rows.push((vec![("tenant", "other".to_string())], o as f64));
+        }
+        rows
+    };
+    push_labeled_series(
+        &mut out,
+        prefix,
+        "tenant_admitted_total",
+        "requests admitted into the prefill queue, per tenant (bounded cardinality)",
+        &tenant_rows(|c| c.admitted),
+    );
+    push_labeled_series(
+        &mut out,
+        prefix,
+        "tenant_deferred_total",
+        "steps a tenant's queued request was passed over by a later arrival, per tenant",
+        &tenant_rows(|c| c.deferred),
+    );
+    push_labeled_series(
+        &mut out,
+        prefix,
+        "tenant_decode_tokens_total",
+        "decode tokens produced per tenant (bounded cardinality)",
+        &tenant_rows(|c| c.decode_tokens),
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "decode_lag_max",
+        "highest consecutive decode-steps any sequence sat out under partial decode batches",
+        planner.max_decode_lag() as f64,
+    );
+    if let Some(retainer) = engine.retainer() {
+        push_gauge(
+            &mut out,
+            prefix,
+            "eviction_tokens_total",
+            "tokens charged for amortized pin eviction",
+            retainer.eviction_tokens_total() as f64,
+        );
+        push_gauge(
+            &mut out,
+            prefix,
+            "evicted_chunks_total",
+            "KV chunks returned to the pool by pin eviction",
+            retainer.evicted_chunks_total() as f64,
+        );
+        push_gauge(
+            &mut out,
+            prefix,
+            "retained_pins",
+            "prefixes currently pinned by the retainer",
+            retainer.pinned_count() as f64,
+        );
+    }
     out
 }
 

@@ -22,8 +22,9 @@ pub mod gateway;
 pub mod http;
 
 pub use bench::{
-    render_comparison, run_bench, run_mixed_bench, run_prefill_comparison, BenchConfig,
-    BenchReport, ComparisonConfig, MixedBenchConfig, MixedReport,
+    render_comparison, render_policy_comparison, run_bench, run_mixed_bench,
+    run_policy_comparison, run_prefill_comparison, BenchConfig, BenchReport, ComparisonConfig,
+    MixedBenchConfig, MixedReport, PolicyComparisonConfig,
 };
-pub use client::{gauge_value, GenerateStream, StreamEvent};
+pub use client::{gauge_value, labeled_gauge_value, GenerateStream, StreamEvent};
 pub use gateway::{Gateway, GatewayConfig, TokenEvent};

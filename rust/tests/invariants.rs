@@ -6,10 +6,13 @@
 use chunk_attention::attention::{
     oracle_attention, tpp_attention, tpp_attention_2d, Queries, Tpp2dScratch, TppScratch,
 };
+use chunk_attention::coordinator::engine::testing::SyntheticRunner;
+use chunk_attention::coordinator::{Engine, PlannerConfig, SchedPolicyKind};
 use chunk_attention::kvcache::{KvShape, PagedKvCache, PrefixTree, SeqId};
 use chunk_attention::util::pbt;
 use chunk_attention::util::rng::Pcg64;
 use chunk_attention::util::threadpool::ThreadPool;
+use chunk_attention::workload::Request;
 
 /// A random prompt workload: tenants with shared prefixes + per-request
 /// suffixes, interleaved with removals, decode appends, and multi-token
@@ -201,6 +204,171 @@ fn two_d_kernel_matches_oracle_and_is_thread_count_invariant() {
         }
         Ok(())
     });
+}
+
+/// A random multi-tenant serving workload for the policy grid: shared
+/// tenant prefixes + private suffixes, a tight step budget, and a small
+/// retention budget so amortized pin eviction is exercised too.
+#[derive(Debug, Clone)]
+struct PolicyWorkload {
+    step_budget: usize,
+    prefill_chunk: usize,
+    max_batch: usize,
+    retain_chunks: usize,
+    /// (id, tenant, prompt, shared, completion)
+    requests: Vec<(u64, usize, Vec<u32>, usize, usize)>,
+}
+
+fn gen_policy_workload(rng: &mut Pcg64) -> PolicyWorkload {
+    let n = rng.range(3, 8);
+    let requests = (0..n)
+        .map(|i| {
+            let tenant = rng.below(3) as usize;
+            let shared = rng.range(0, 16);
+            let mut prompt: Vec<u32> =
+                (0..shared as u32).map(|t| tenant as u32 * 1000 + t).collect();
+            prompt.extend((0..rng.range(1, 4)).map(|_| 9000 + rng.below(64) as u32));
+            let shared = shared.min(prompt.len());
+            (i as u64, tenant, prompt, shared, rng.range(1, 5))
+        })
+        .collect();
+    PolicyWorkload {
+        step_budget: rng.range(6, 24),
+        prefill_chunk: rng.range(2, 8),
+        max_batch: rng.range(2, 4),
+        retain_chunks: if rng.chance(0.5) { rng.range(2, 5) } else { 0 },
+        requests,
+    }
+}
+
+#[test]
+fn sched_policies_conserve_the_step_budget_and_decode_identically() {
+    // Extends the check_grid discipline to the scheduling-policy seam:
+    // every policy (the grid) sees the SAME random workloads (the cases),
+    // and per engine step the spend — prefill slices + partial decode +
+    // eviction-token grants — must stay within the step budget; at the
+    // end, per-request completions must be bit-identical across policies
+    // (a policy reorders *who* runs, never *what* a sequence decodes),
+    // and the tree invariants must hold. A final kernel pass over the
+    // workload's prompt tree re-asserts thread-count bit-identity under
+    // the policy-shaped trees.
+    let grid = [SchedPolicyKind::PrefixGreedy, SchedPolicyKind::Drr, SchedPolicyKind::Aging];
+    let pools: Vec<(usize, ThreadPool)> =
+        [1usize, 2, 8].iter().map(|&n| (n, ThreadPool::new(n))).collect();
+    let mut baseline: std::collections::BTreeMap<usize, Vec<Vec<u32>>> = Default::default();
+    pbt::check_grid(
+        "policy-budget-grid",
+        0xB0D9E7,
+        12,
+        &grid,
+        gen_policy_workload,
+        |case, wl, policy| {
+            let mut e = Engine::new(
+                SyntheticRunner { heads_total: 2, head_dim: 4, vocab: 101 },
+                4,
+                wl.max_batch,
+            );
+            e.set_chunked_prefill(wl.prefill_chunk, wl.step_budget);
+            if wl.retain_chunks > 0 {
+                e.enable_prefix_retention(wl.retain_chunks);
+            }
+            e.set_planner_config(PlannerConfig {
+                policy,
+                // Small quantum/boost so DRR and aging take several
+                // rounds — the interesting regime.
+                drr_quantum: 8,
+                aging_boost_tokens: 4,
+                evict_step_tokens: 4,
+                ..PlannerConfig::default()
+            });
+            for (id, tenant, prompt, shared, completion) in &wl.requests {
+                e.submit(Request {
+                    id: *id,
+                    arrival_s: 0.0,
+                    tenant: *tenant,
+                    prompt: prompt.clone(),
+                    shared_tokens: *shared,
+                    max_new_tokens: *completion,
+                });
+            }
+            // The clamp guarantees an effective budget of at least 2.
+            let budget = wl.step_budget.max(2);
+            let mut prev = e.stats();
+            let mut prev_evict = 0u64;
+            let mut steps = 0usize;
+            while !e.is_idle() {
+                e.step().map_err(|err| format!("engine step failed: {err}"))?;
+                steps += 1;
+                if steps > 10_000 {
+                    return Err("policy livelocked the engine".to_string());
+                }
+                let s = e.stats();
+                let evict =
+                    e.retainer().map(|r| r.eviction_tokens_total()).unwrap_or(0);
+                let spent = (s.prefill_tokens_computed - prev.prefill_tokens_computed)
+                    + (s.decoded_tokens - prev.decoded_tokens)
+                    + (evict - prev_evict);
+                if spent > budget as u64 {
+                    return Err(format!(
+                        "policy {policy:?} spent {spent} tokens in one step, budget {budget}"
+                    ));
+                }
+                prev = s;
+                prev_evict = evict;
+            }
+            e.tree().check_invariants()?;
+            let completions: Vec<Vec<u32>> = wl
+                .requests
+                .iter()
+                .map(|(id, ..)| e.completion_of(*id).expect("request completed").to_vec())
+                .collect();
+            match baseline.entry(case) {
+                std::collections::btree_map::Entry::Vacant(slot) => {
+                    slot.insert(completions);
+                }
+                std::collections::btree_map::Entry::Occupied(first) => {
+                    if first.get() != &completions {
+                        return Err(format!(
+                            "policy {policy:?} changed a completion (policies may reorder \
+                             admissions, never decoded tokens)"
+                        ));
+                    }
+                }
+            }
+            // Thread-count bit-identity on a tree shaped like this
+            // workload's resident state: rebuild the prompts into a fresh
+            // tree and require `tpp_attention_2d` to produce bitwise-equal
+            // output for every pool size.
+            let shape = KvShape::new(2, 4, 4);
+            let mut tree = PrefixTree::new(shape);
+            for (id, _, prompt, ..) in &wl.requests {
+                tree.insert_sequence(SeqId(*id), prompt, &mut fill);
+            }
+            let ctx = tree.context();
+            let b = ctx.seq_order.len();
+            let mut rng = Pcg64::new(0xFA1C, case as u64);
+            let mut q = vec![0.0f32; shape.heads * b * shape.head_dim];
+            rng.fill_uniform_f32(&mut q, -1.0, 1.0);
+            let queries = Queries::new(&q, shape.heads, b, shape.head_dim);
+            let mut reference: Option<Vec<f32>> = None;
+            for (workers, pool) in &pools {
+                let mut scratch = Tpp2dScratch::new();
+                let mut got = vec![0.0f32; shape.heads * b * shape.head_dim];
+                tpp_attention_2d(&tree, &ctx, &queries, pool, &mut scratch, &mut got);
+                match &reference {
+                    None => reference = Some(got),
+                    Some(r) => {
+                        if r != &got {
+                            return Err(format!(
+                                "{workers}-thread kernel output not bit-identical"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]

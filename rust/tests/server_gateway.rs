@@ -7,10 +7,10 @@
 //! deadlocked stepper fails the test quickly instead of stalling CI.
 
 use chunk_attention::coordinator::engine::testing::SyntheticRunner;
-use chunk_attention::coordinator::Engine;
+use chunk_attention::coordinator::{Engine, SchedPolicyKind};
 use chunk_attention::kvcache::KvDtype;
 use chunk_attention::server::client::{self, StreamEvent};
-use chunk_attention::server::{gauge_value, Gateway, GatewayConfig};
+use chunk_attention::server::{gauge_value, labeled_gauge_value, Gateway, GatewayConfig};
 use chunk_attention::util::json::Json;
 use std::sync::mpsc;
 use std::thread;
@@ -47,10 +47,11 @@ fn engine(chunk: usize, max_batch: usize) -> Engine<SyntheticRunner> {
 }
 
 /// Base gateway config for the suite. CI runs the whole socket suite a
-/// second time with `CHUNKED_PREFILL_BUDGET` set (see
-/// .github/workflows/ci.yml), so every e2e scenario — streaming,
-/// backpressure, cancellation, shutdown, bench — also exercises the
-/// interleaved chunked-prefill path under the same watchdogs.
+/// second time with `CHUNKED_PREFILL_BUDGET` set and a third time with
+/// `SCHED_POLICY=drr` (see .github/workflows/ci.yml), so every e2e
+/// scenario — streaming, backpressure, cancellation, shutdown, bench —
+/// also exercises the interleaved chunked-prefill path and the
+/// non-default planner policies under the same watchdogs.
 fn base_cfg() -> GatewayConfig {
     let mut cfg = GatewayConfig::default();
     if let Ok(v) = std::env::var("CHUNKED_PREFILL_BUDGET") {
@@ -58,6 +59,10 @@ fn base_cfg() -> GatewayConfig {
             v.parse().expect("CHUNKED_PREFILL_BUDGET must be a token count");
         cfg.step_token_budget = budget;
         cfg.prefill_chunk_tokens = (budget / 4).max(16);
+    }
+    if let Ok(v) = std::env::var("SCHED_POLICY") {
+        cfg.sched_policy = SchedPolicyKind::parse(&v)
+            .expect("SCHED_POLICY must be prefix-greedy, drr or aging");
     }
     cfg
 }
@@ -496,6 +501,125 @@ fn mixed_workload_short_ttft_p99_improves_with_chunked_prefill() {
             "chunked prefill must improve short-request TTFT p99 (twice): chunked \
              {chunked_p99:.1}ms vs monolithic {mono_p99:.1}ms"
         );
+    });
+}
+
+#[test]
+fn skewed_tenants_cold_ttft_p99_improves_with_aging() {
+    with_watchdog(180, "skewed_policy_comparison", || {
+        use chunk_attention::server::{
+            run_policy_comparison, MixedBenchConfig, PolicyComparisonConfig,
+        };
+        // One cold tenant (long unshareable prompts) vs a hot storm of
+        // prefix-sharers against a 2-slot batch: under prefix-greedy,
+        // every freed slot goes to a queued sharer, so the cold tenant's
+        // later requests wait out the storm (tens of ms); under aging the
+        // wait boost admits them within a handful of engine steps. The
+        // per-step budget-conservation half of this acceptance criterion
+        // is asserted at the engine layer (invariants::
+        // sched_policies_conserve_the_step_budget_and_decode_identically
+        // and the engine's partial-decode/eviction unit tests), where
+        // spend is observable per step rather than through scrapes.
+        let cfg = PolicyComparisonConfig {
+            mixed: MixedBenchConfig {
+                addr: String::new(),
+                long_clients: 1,
+                short_clients: 5,
+                long_requests: 4,
+                short_requests: 48,
+                long_prompt_tokens: 256,
+                shared_prefix_tokens: 256,
+                short_query_tokens: 4,
+                max_new_tokens: 4,
+                timeout: Duration::from_secs(60),
+            },
+            max_batch: 2,
+            chunk: 64,
+            queue_cap: 64,
+            decode_interval: Duration::from_micros(300),
+            prefill_us_per_token: 30,
+            prefill_chunk_tokens: 64,
+            step_token_budget: 96,
+            kv_dtype: KvDtype::F32,
+            policies: (SchedPolicyKind::PrefixGreedy, SchedPolicyKind::Aging),
+        };
+        // Wall-clock TTFT on a shared CI box is noisy; the expected gap is
+        // large (storm drain time vs a few engine steps), so one retry
+        // makes a false failure vanishingly unlikely without weakening
+        // the criterion.
+        let mut last = None;
+        for attempt in 0..2 {
+            let (greedy, aging) = run_policy_comparison(&cfg).unwrap();
+            assert_eq!(greedy.errors, 0, "prefix-greedy leg had errors");
+            assert_eq!(aging.errors, 0, "aging leg had errors");
+            assert_eq!(greedy.long_completed, 4);
+            assert_eq!(aging.long_completed, 4);
+            assert_eq!(greedy.short_completed, 48);
+            assert_eq!(aging.short_completed, 48);
+            let greedy_p99 = greedy.long_ttft_ms.percentile(99.0);
+            let aging_p99 = aging.long_ttft_ms.percentile(99.0);
+            if aging_p99 < greedy_p99 {
+                return;
+            }
+            eprintln!(
+                "attempt {attempt}: aging cold p99 {aging_p99:.1}ms !< prefix-greedy \
+                 {greedy_p99:.1}ms"
+            );
+            last = Some((greedy_p99, aging_p99));
+        }
+        let (greedy_p99, aging_p99) = last.unwrap();
+        panic!(
+            "aging must improve the cold tenant's TTFT p99 (twice): aging {aging_p99:.1}ms vs \
+             prefix-greedy {greedy_p99:.1}ms"
+        );
+    });
+}
+
+#[test]
+fn metrics_expose_policy_info_and_per_tenant_counters() {
+    with_watchdog(60, "policy_metrics", || {
+        let cfg = GatewayConfig {
+            sched_policy: SchedPolicyKind::Drr,
+            tenant_weights: vec![(0, 2)],
+            decode_interval: Duration::from_micros(200),
+            ..base_cfg()
+        };
+        let gw = Gateway::start(engine(16, 4), cfg).unwrap();
+        let addr = gw.addr().to_string();
+        for (tenant, tokens) in [(0u64, [1u32, 2, 3]), (7, [9, 9, 9])] {
+            let mut body = token_body(&tokens, 0, 3);
+            body.set("tenant", tenant);
+            let mut s = client::generate(&addr, &body, Duration::from_secs(30)).unwrap();
+            assert_eq!(s.status(), 200, "{}", s.error_body);
+            while let Some(ev) = s.next_event().unwrap() {
+                if matches!(ev, StreamEvent::Done { .. }) {
+                    break;
+                }
+            }
+        }
+        let metrics = scrape(&addr);
+        assert!(
+            metrics.contains("sched_policy_info{policy=\"drr\"} 1"),
+            "missing policy info gauge:\n{metrics}"
+        );
+        assert_eq!(
+            labeled_gauge_value(&metrics, "tenant_admitted_total", "tenant", "0"),
+            Some(1.0),
+            "{metrics}"
+        );
+        assert_eq!(
+            labeled_gauge_value(&metrics, "tenant_admitted_total", "tenant", "7"),
+            Some(1.0),
+            "{metrics}"
+        );
+        // 3 completion tokens per request, the first credited at prefill.
+        assert_eq!(
+            labeled_gauge_value(&metrics, "tenant_decode_tokens_total", "tenant", "7"),
+            Some(2.0),
+            "{metrics}"
+        );
+        assert!(gauge_value(&metrics, "decode_lag_max").is_some(), "{metrics}");
+        gw.shutdown().unwrap();
     });
 }
 
