@@ -302,6 +302,100 @@ impl<R: ModelRunner> Engine<R> {
         self.states.remove(&id).map(|s| s.completion)
     }
 
+    /// Ids of every in-flight request: queued, prefilling, or active.
+    /// The supervisor's conservative quarantine set when a failure cannot
+    /// be attributed to one sequence.
+    pub fn inflight_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.sched.queue().iter().map(|r| r.id).collect();
+        ids.extend(self.sched.prefilling().iter().map(|p| p.request.id));
+        ids.extend(self.sched.active().iter().map(|s| s.request.id));
+        ids
+    }
+
+    /// Repair bookkeeping after a panic unwound out of [`Engine::step`],
+    /// leaving a partially-applied step behind. Returns `(orphans,
+    /// finished)`:
+    ///
+    /// - `orphans` — request ids whose scheduler entry was lost mid-step
+    ///   (a panic inside the prefill phase unwinds past the
+    ///   `put_back_prefilling` restore seam, dropping the detached prefill
+    ///   queue while partial tree residency stays behind). Their residency
+    ///   and caches are purged here; the caller must fail their streams.
+    /// - `finished` — sequences whose tokens appended before the panic met
+    ///   their budget; retired normally so the caller streams them out.
+    ///
+    /// The caller should run [`PrefixTree::check_invariants`] afterwards
+    /// and escalate to [`Engine::hard_reset`] if structural damage remains.
+    pub fn recover_after_panic(&mut self) -> (Vec<u64>, Vec<FinishedSeq>) {
+        // The cached context may describe half-applied tree topology; drop
+        // it so the next decode rebuilds from the tree itself.
+        self.ctx_cache = None;
+        let mut orphans = Vec::new();
+        for sid in self.tree.sequence_ids() {
+            let id = sid.0;
+            if id >= PIN_ID_BASE {
+                continue; // retention pins are engine-owned, never orphans
+            }
+            let known = self.sched.is_prefilling(id)
+                || self.sched.active().iter().any(|s| s.request.id == id)
+                || self.sched.queue().iter().any(|r| r.id == id);
+            if !known {
+                self.tree.remove_sequence(sid);
+                self.prefill_kv.remove(&id);
+                self.states.remove(&id);
+                self.timing.remove(&id);
+                self.planner.forget(id);
+                orphans.push(id);
+            }
+        }
+        // Tokens appended before the panic were never credited (the credit
+        // step runs after the full append loop); reconcile the scheduler's
+        // generated counts against the per-sequence completion state, then
+        // retire anything that reached its budget.
+        let mut credits = Vec::new();
+        for s in self.sched.active() {
+            let have =
+                self.states.get(&s.request.id).map(|st| st.completion.len()).unwrap_or(0);
+            if have > s.generated {
+                credits.push((s.request.id, have - s.generated));
+            }
+        }
+        for (id, n) in credits {
+            self.sched.credit_tokens(id, n);
+        }
+        let finished = self.sched.retire_finished(self.now());
+        for f in &finished {
+            if self.tree.sequence_len(SeqId(f.request.id)).is_some() {
+                self.tree.remove_sequence(SeqId(f.request.id));
+            }
+            self.record_finished(f);
+        }
+        (orphans, finished)
+    }
+
+    /// Last-resort recovery: drop every sequence, retention pin, prefix
+    /// cache, and queue entry and rebuild the tree from its shape. The
+    /// engine object itself (configuration, counters, finished history)
+    /// survives, so the gateway keeps serving new requests on a clean
+    /// slate. Returns the dropped in-flight request ids.
+    pub fn hard_reset(&mut self) -> Vec<u64> {
+        let dropped = self.sched.clear_inflight();
+        for id in &dropped {
+            self.planner.forget(*id);
+        }
+        let shape = self.tree.shape();
+        self.tree = PrefixTree::new(shape);
+        self.states.clear();
+        self.timing.clear();
+        self.prefill_kv.clear();
+        self.ctx_cache = None;
+        self.ctx_generation = 0;
+        if let Some(r) = &self.retainer {
+            self.retainer = Some(PrefixRetainer::new(r.budget_chunks()));
+        }
+        dropped
+    }
+
     pub fn is_idle(&self) -> bool {
         self.sched.is_idle()
     }
@@ -353,6 +447,11 @@ impl<R: ModelRunner> Engine<R> {
     /// `run_to_completion` below is the offline-trace driver over the
     /// same primitive.
     pub fn step(&mut self) -> anyhow::Result<Vec<FinishedSeq>> {
+        // Chaos site: whole-step latency (`sleep`), failure (`err`), or
+        // stepper panic (`panic`). Strictly a no-op unless armed.
+        if let Some(msg) = crate::util::failpoint::fire("engine.step") {
+            return Err(anyhow::anyhow!(msg));
+        }
         let plan = self.plan_step();
         let mut finished_early = self.admit_and_prefill(&plan)?;
         if self.sched.batch_size() > 0 {
@@ -508,7 +607,21 @@ impl<R: ModelRunner> Engine<R> {
                     )
                 };
                 let slice = &pf.request.prompt[start..start + take];
-                let out = self.runner.prefill(slice, start, &pk, &pv, start, is_final)?;
+                // Chaos site: injected runner prefill-slice failure. The
+                // `[seq:<id>]` tag (also stitched onto real runner errors
+                // below) lets the supervisor quarantine only this request
+                // once retries are exhausted.
+                if crate::util::failpoint::armed() {
+                    if let Some(msg) =
+                        crate::util::failpoint::fire_tagged("engine.prefill", &format!("seq:{id}"))
+                    {
+                        return Err(anyhow::anyhow!(msg));
+                    }
+                }
+                let out = self
+                    .runner
+                    .prefill(slice, start, &pk, &pv, start, is_final)
+                    .map_err(|e| anyhow::anyhow!("prefill slice failed [seq:{id}]: {e}"))?;
                 anyhow::ensure!(
                     out.k_rows.len() == take,
                     "prefill returned {} rows for {take} suffix tokens",
@@ -639,6 +752,11 @@ impl<R: ModelRunner> Engine<R> {
                 }
             }
         }
+        // Chaos site: whole-batch decode failure (no single sequence is
+        // implicated, so the supervisor quarantines conservatively).
+        if let Some(msg) = crate::util::failpoint::fire("engine.decode") {
+            return Err(anyhow::anyhow!(msg));
+        }
         let out = self.runner.decode(&self.tree, ctx, &last_tokens, &positions)?;
         let mut decoded = 0usize;
         for (i, sid) in ctx.seq_order.iter().enumerate() {
@@ -646,6 +764,18 @@ impl<R: ModelRunner> Engine<R> {
                 continue; // lagged this step; rows discarded like a phantom
             }
             let Some(st) = self.states.get_mut(&sid.0) else { continue };
+            // Chaos site: per-sequence panic mid-decode, after earlier rows
+            // of this very batch already appended — the partial-step
+            // scenario `recover_after_panic` repairs. Tagged so only this
+            // sequence is quarantined.
+            if crate::util::failpoint::armed() {
+                if let Some(msg) = crate::util::failpoint::fire_tagged(
+                    "engine.decode.append",
+                    &format!("seq:{}", sid.0),
+                ) {
+                    panic!("{msg}");
+                }
+            }
             self.tree.append_token(*sid, last_tokens[i], &out.k_rows[i], &out.v_rows[i]);
             st.position += 1;
             st.last_token = out.next_tokens[i];

@@ -459,6 +459,17 @@ impl Scheduler {
     pub fn is_idle(&self) -> bool {
         self.queue.is_empty() && self.prefilling.is_empty() && self.active.is_empty()
     }
+
+    /// Drop every queued, prefilling, and active entry, returning their
+    /// request ids. Crash recovery's last-resort full-reset path: caps,
+    /// counters, policy, and finished history all survive so the rebuilt
+    /// engine keeps serving with the same configuration.
+    pub fn clear_inflight(&mut self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.queue.drain(..).map(|r| r.id).collect();
+        ids.extend(self.prefilling.drain(..).map(|p| p.request.id));
+        ids.extend(self.active.drain(..).map(|s| s.request.id));
+        ids
+    }
 }
 
 #[cfg(test)]

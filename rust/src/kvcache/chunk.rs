@@ -187,6 +187,14 @@ impl ChunkPool {
     /// Acquire a chunk: reuse a freed slot if available, otherwise allocate
     /// fresh memory. Memory is never returned to the OS (paper §3.1).
     pub fn acquire(&mut self) -> ChunkId {
+        // Chaos site: simulated slab-allocation failure. `acquire` has no
+        // error channel, so both `panic` and `err` actions unwind here (the
+        // gateway supervisor catches the unwind). No-op unless armed.
+        if crate::util::failpoint::armed() {
+            if let Some(msg) = crate::util::failpoint::fire("chunk.alloc") {
+                panic!("{msg}");
+            }
+        }
         let id = match self.free.pop() {
             Some(id) => {
                 self.slots[id.0 as usize].reset();

@@ -84,6 +84,12 @@ impl PrefixRetainer {
         self.evicted_pins_total
     }
 
+    /// Configured chunk budget (crash recovery rebuilds the retainer with
+    /// the same budget after a hard reset).
+    pub fn budget_chunks(&self) -> usize {
+        self.budget_chunks
+    }
+
     pub fn pinned_count(&self) -> usize {
         self.pins.len()
     }

@@ -158,6 +158,13 @@ impl PrefixTree {
         self.seqs.len()
     }
 
+    /// Ids of every resident sequence (including retention pins). Crash
+    /// recovery diffs this against the scheduler's view to find residency
+    /// orphaned by a panic that unwound out of a partial step.
+    pub fn sequence_ids(&self) -> Vec<SeqId> {
+        self.seqs.keys().copied().collect()
+    }
+
     pub fn sequence_len(&self, seq: SeqId) -> Option<usize> {
         self.seqs.get(&seq).map(|s| s.len)
     }

@@ -23,11 +23,12 @@ use chunk_attention::perf_model::{AttentionImpl, HardwareModel};
 #[cfg(feature = "pjrt")]
 use chunk_attention::runtime::PjrtModel;
 use chunk_attention::server::{
-    render_comparison, render_policy_comparison, run_bench, run_policy_comparison,
-    run_prefill_comparison, BenchConfig, ComparisonConfig, Gateway, GatewayConfig,
-    MixedBenchConfig, PolicyComparisonConfig,
+    render_comparison, render_policy_comparison, run_bench, run_chaos_bench,
+    run_policy_comparison, run_prefill_comparison, BenchConfig, ChaosBenchConfig,
+    ComparisonConfig, Gateway, GatewayConfig, MixedBenchConfig, PolicyComparisonConfig,
 };
 use chunk_attention::util::cli::{Args, Cli};
+use chunk_attention::util::failpoint;
 use chunk_attention::util::config::Config;
 use chunk_attention::util::stats::{fmt_bytes, fmt_us};
 use chunk_attention::workload::{Corpus, Tokenizer, Trace, TraceConfig};
@@ -280,8 +281,20 @@ fn gateway_cmd(argv: &[String]) -> anyhow::Result<()> {
     )
     .opt("sched-policy", "prefix-greedy", "admission policy: prefix-greedy|drr|aging")
     .opt("tenant-weights", "", "DRR per-tenant weights, e.g. 0=4,3=2 (unlisted tenants weigh 1)")
+    .opt("watchdog-stall-ms", "5000", "stepper watchdog stall threshold in ms (0 = disabled)")
+    .opt(
+        "fail",
+        "",
+        "arm failpoints, e.g. engine.prefill=1*err(boom)@2,engine.step=5%sleep(10) \
+         (also read from the FAILPOINTS env var; empty = all disarmed)",
+    )
     .flag("synthetic", "use the in-process synthetic runner (the only gateway runner today)");
     let args = parse_or_exit(&cli, argv);
+    let armed = failpoint::configure_list(args.get("fail"))
+        .map_err(|e| anyhow::anyhow!("bad --fail spec: {e}"))?;
+    if armed > 0 {
+        eprintln!("warning: {armed} failpoint site(s) armed via --fail; faults WILL be injected");
+    }
 
     // The gateway always runs the synthetic runner for now; the flag is
     // accepted for symmetry with `serve` and future PJRT support.
@@ -307,6 +320,7 @@ fn gateway_cmd(argv: &[String]) -> anyhow::Result<()> {
         step_token_budget: args.get_usize("step-token-budget"),
         sched_policy: parse_sched_policy(&args)?,
         tenant_weights: parse_tenant_weights(args.get("tenant-weights"))?,
+        watchdog_stall: Duration::from_millis(args.get_u64("watchdog-stall-ms")),
         ..GatewayConfig::default()
     };
     let gw = Gateway::start(engine, cfg)?;
@@ -349,6 +363,18 @@ fn bench_http(argv: &[String]) -> anyhow::Result<()> {
     .opt("long-requests", "8", "mixed/skewed mode: total long cold prompts")
     .opt("long-prompt-tokens", "2048", "mixed/skewed mode: tokens per long cold prompt")
     .opt("prefill-us-per-token", "50", "mixed/skewed mode: emulated prefill cost per token (us)")
+    .opt(
+        "fail",
+        "",
+        "chaos mode: failpoint profile to arm against the spawned gateway \
+         (empty = the default latency + transient-error profile)",
+    )
+    .opt("watchdog-stall-ms", "500", "chaos mode: spawned gateway's watchdog threshold (ms)")
+    .flag(
+        "chaos",
+        "spawn a gateway, arm the --fail profile against it, and report availability and \
+         error rates under injected faults (plus the gateway's supervision counters)",
+    )
     .flag(
         "mixed",
         "run the head-of-line workload (long cold prompts + short shared-prefix requests) \
@@ -364,6 +390,14 @@ fn bench_http(argv: &[String]) -> anyhow::Result<()> {
     // gateway (whose dtype is its own; a typo should still fail loudly).
     let kv_dtype = parse_kv_dtype(&args)?;
 
+    if args.get_flag("chaos") {
+        anyhow::ensure!(
+            args.get("addr").is_empty() && !args.get_flag("mixed") && !args.get_flag("skewed"),
+            "--chaos spawns its own gateway (failpoints are process-local); drop \
+             --addr/--mixed/--skewed"
+        );
+        return bench_http_chaos(&args, kv_dtype);
+    }
     if args.get_flag("skewed") {
         anyhow::ensure!(
             args.get("addr").is_empty() && !args.get_flag("mixed"),
@@ -436,6 +470,54 @@ fn bench_http(argv: &[String]) -> anyhow::Result<()> {
         gw.shutdown()?;
     }
     anyhow::ensure!(report.completed > 0, "no request completed — is the gateway reachable?");
+    Ok(())
+}
+
+/// `bench-http --chaos`: the closed-loop workload against a freshly
+/// spawned gateway with a failpoint profile armed; reports availability,
+/// health-probe degradation, and the gateway's supervision counters.
+fn bench_http_chaos(args: &Args, kv_dtype: KvDtype) -> anyhow::Result<()> {
+    let defaults = ChaosBenchConfig::default();
+    let failpoints = match args.get("fail") {
+        "" => defaults.failpoints.clone(),
+        spec => spec.to_string(),
+    };
+    let cfg = ChaosBenchConfig {
+        bench: BenchConfig {
+            addr: String::new(),
+            clients: args.get_usize("clients"),
+            requests: args.get_usize("requests"),
+            tenants: args.get_usize("tenants"),
+            system_tokens: args.get_usize("system-tokens"),
+            query_tokens: args.get_usize("query-tokens"),
+            max_new_tokens: args.get_usize("completion"),
+            seed: args.get_u64("seed"),
+            timeout: Duration::from_secs(120),
+        },
+        failpoints,
+        max_batch: args.get_usize("max-batch"),
+        chunk: args.get_usize("chunk"),
+        queue_cap: args.get_usize("queue-cap"),
+        decode_interval: Duration::from_micros(args.get_u64("decode-interval-us")),
+        prefill_us_per_token: args.get_u64("prefill-us-per-token"),
+        prefill_chunk_tokens: match args.get_usize("prefill-chunk-tokens") {
+            0 => defaults.prefill_chunk_tokens,
+            n => n,
+        },
+        step_token_budget: match args.get_usize("step-token-budget") {
+            0 => defaults.step_token_budget,
+            n => n,
+        },
+        watchdog_stall: Duration::from_millis(args.get_u64("watchdog-stall-ms")),
+        kv_dtype,
+        ..defaults
+    };
+    let report = run_chaos_bench(&cfg)?;
+    println!("{}", report.render());
+    anyhow::ensure!(
+        report.bench.completed > 0,
+        "no request survived the chaos profile — is it too aggressive?"
+    );
     Ok(())
 }
 

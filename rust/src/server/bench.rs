@@ -13,13 +13,23 @@ use super::gateway::{Gateway, GatewayConfig};
 use crate::coordinator::engine::testing::{PacedRunner, SyntheticRunner};
 use crate::coordinator::{Engine, SchedPolicyKind};
 use crate::kvcache::KvDtype;
+use crate::util::failpoint;
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 use crate::util::stats::Summary;
 use crate::workload::{Corpus, Tokenizer};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
+
+/// Lock a shared tally even if another bench worker panicked while holding
+/// it: a `Summary` or `Tally` is valid after any sequence of `add` calls,
+/// so a poisoned mutex only means some samples are missing — the report
+/// must still come out rather than cascading the panic through every
+/// worker thread.
+fn tally_lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 #[derive(Debug, Clone)]
 pub struct BenchConfig {
@@ -62,9 +72,12 @@ impl Default for BenchConfig {
 #[derive(Debug)]
 pub struct BenchReport {
     pub completed: usize,
-    /// Requests answered 429 by admission control (not retried).
+    /// Requests answered 429 by admission control (after the retry budget).
     pub rejected: usize,
     pub errors: usize,
+    /// Requests that spent their one bounded retry (429/503 + `Retry-After`)
+    /// before reaching their final outcome.
+    pub retried: usize,
     pub wall_s: f64,
     pub completion_tokens: u64,
     /// Client-observed time to first token (ms).
@@ -85,7 +98,7 @@ impl BenchReport {
     /// Human-readable multi-line summary for the CLI.
     pub fn render(&self) -> String {
         format!(
-            "requests           {} completed, {} rejected (429), {} errors\n\
+            "requests           {} completed, {} rejected (429), {} errors, {} retried\n\
              wall time          {:.2}s ({:.1} completion tok/s)\n\
              ttft               mean {:.1} ms, p99 {:.1} ms\n\
              normalized latency mean {:.2} ms/tok, p99 {:.2} ms/tok\n\
@@ -93,6 +106,7 @@ impl BenchReport {
             self.completed,
             self.rejected,
             self.errors,
+            self.retried,
             self.wall_s,
             self.decode_tps(),
             self.ttft_ms.mean(),
@@ -114,6 +128,7 @@ pub fn run_bench(cfg: &BenchConfig) -> anyhow::Result<BenchReport> {
     let completed = Arc::new(AtomicUsize::new(0));
     let rejected = Arc::new(AtomicUsize::new(0));
     let errors = Arc::new(AtomicUsize::new(0));
+    let retried = Arc::new(AtomicUsize::new(0));
     let tokens_total = Arc::new(AtomicU64::new(0));
     let ttft = Arc::new(Mutex::new(Summary::new()));
     let norm = Arc::new(Mutex::new(Summary::new()));
@@ -128,6 +143,7 @@ pub fn run_bench(cfg: &BenchConfig) -> anyhow::Result<BenchReport> {
         let completed = completed.clone();
         let rejected = rejected.clone();
         let errors = errors.clone();
+        let retried = retried.clone();
         let tokens_total = tokens_total.clone();
         let ttft = ttft.clone();
         let norm = norm.clone();
@@ -151,14 +167,20 @@ pub fn run_bench(cfg: &BenchConfig) -> anyhow::Result<BenchReport> {
                     .set("tenant", tenant)
                     .set("max_new_tokens", cfg.max_new_tokens);
                 let sent = Instant::now();
-                let mut stream = match client::generate(&cfg.addr, &body, cfg.timeout) {
-                    Ok(s) => s,
+                let (mut stream, retries) = match client::generate_with_retry(
+                    &cfg.addr,
+                    &body,
+                    cfg.timeout,
+                    Duration::from_secs(2),
+                ) {
+                    Ok(pair) => pair,
                     Err(_) => {
                         errors.fetch_add(1, Ordering::SeqCst);
                         continue;
                     }
                 };
-                if stream.status() == 429 {
+                retried.fetch_add(retries, Ordering::SeqCst);
+                if stream.status() == 429 || stream.status() == 503 {
                     rejected.fetch_add(1, Ordering::SeqCst);
                     continue;
                 }
@@ -181,6 +203,11 @@ pub fn run_bench(cfg: &BenchConfig) -> anyhow::Result<BenchReport> {
                             done = true;
                             break;
                         }
+                        // Terminal failures (engine panic quarantine, deadline
+                        // timeout) end the stream cleanly; counted as errors.
+                        Ok(Some(StreamEvent::Error { .. })) | Ok(Some(StreamEvent::Timeout)) => {
+                            break
+                        }
                         Ok(None) | Err(_) => break,
                     }
                 }
@@ -188,8 +215,8 @@ pub fn run_bench(cfg: &BenchConfig) -> anyhow::Result<BenchReport> {
                     completed.fetch_add(1, Ordering::SeqCst);
                     tokens_total.fetch_add(got, Ordering::SeqCst);
                     let e2e = sent.elapsed().as_secs_f64();
-                    ttft.lock().unwrap().add(first_token_s.unwrap_or(e2e) * 1e3);
-                    norm.lock().unwrap().add(e2e * 1e3 / got as f64);
+                    tally_lock(&ttft).add(first_token_s.unwrap_or(e2e) * 1e3);
+                    tally_lock(&norm).add(e2e * 1e3 / got as f64);
                 } else {
                     errors.fetch_add(1, Ordering::SeqCst);
                 }
@@ -206,12 +233,13 @@ pub fn run_bench(cfg: &BenchConfig) -> anyhow::Result<BenchReport> {
         .and_then(|resp| client::gauge_value(&resp.body, "prefix_hit_rate"))
         .unwrap_or(f64::NAN);
 
-    let ttft_ms = ttft.lock().unwrap().clone();
-    let normalized_latency_ms = norm.lock().unwrap().clone();
+    let ttft_ms = tally_lock(&ttft).clone();
+    let normalized_latency_ms = tally_lock(&norm).clone();
     Ok(BenchReport {
         completed: completed.load(Ordering::SeqCst),
         rejected: rejected.load(Ordering::SeqCst),
         errors: errors.load(Ordering::SeqCst),
+        retried: retried.load(Ordering::SeqCst),
         wall_s,
         completion_tokens: tokens_total.load(Ordering::SeqCst),
         ttft_ms,
@@ -291,16 +319,16 @@ fn issue_one(addr: &str, body: &Json, timeout: Duration, tally: &Mutex<Tally>) {
     let mut stream = match client::generate(addr, body, timeout) {
         Ok(s) => s,
         Err(_) => {
-            tally.lock().unwrap().errors += 1;
+            tally_lock(tally).errors += 1;
             return;
         }
     };
     if stream.status() == 429 {
-        tally.lock().unwrap().rejected += 1;
+        tally_lock(tally).rejected += 1;
         return;
     }
     if stream.status() != 200 {
-        tally.lock().unwrap().errors += 1;
+        tally_lock(tally).errors += 1;
         return;
     }
     let mut first: Option<Duration> = None;
@@ -318,10 +346,11 @@ fn issue_one(addr: &str, body: &Json, timeout: Duration, tally: &Mutex<Tally>) {
                 done = true;
                 break;
             }
+            Ok(Some(StreamEvent::Error { .. })) | Ok(Some(StreamEvent::Timeout)) => break,
             Ok(None) | Err(_) => break,
         }
     }
-    let mut t = tally.lock().unwrap();
+    let mut t = tally_lock(tally);
     if done && got > 0 {
         t.completed += 1;
         t.ttft_ms.add(first.expect("done implies a first token").as_secs_f64() * 1e3);
@@ -393,14 +422,17 @@ pub fn run_mixed_bench(cfg: &MixedBenchConfig) -> anyhow::Result<MixedReport> {
         w.join().map_err(|_| anyhow::anyhow!("mixed bench worker panicked"))?;
     }
     let wall_s = t0.elapsed().as_secs_f64();
+    // A worker panicking mid-update poisons the tally mutex, but the data
+    // itself stays valid (partial counts); recover it instead of failing
+    // the whole report.
     let long = Mutex::into_inner(
         Arc::try_unwrap(long_tally).map_err(|_| anyhow::anyhow!("tally still shared"))?,
     )
-    .map_err(|_| anyhow::anyhow!("tally poisoned"))?;
+    .unwrap_or_else(|e| e.into_inner());
     let short = Mutex::into_inner(
         Arc::try_unwrap(short_tally).map_err(|_| anyhow::anyhow!("tally still shared"))?,
     )
-    .map_err(|_| anyhow::anyhow!("tally poisoned"))?;
+    .unwrap_or_else(|e| e.into_inner());
     Ok(MixedReport {
         short_ttft_ms: short.ttft_ms,
         long_ttft_ms: long.ttft_ms,
@@ -616,6 +648,223 @@ pub fn render_policy_comparison(
         baseline.wall_s,
         contender.wall_s,
     )
+}
+
+/// Knobs for the `--chaos` availability bench: spawn an in-process
+/// gateway, arm a failpoint profile against it, drive the standard
+/// closed-loop workload while a side thread probes `/healthz`, and report
+/// what fraction of requests (and health probes) survived the injected
+/// faults.
+#[derive(Debug, Clone)]
+pub struct ChaosBenchConfig {
+    /// The workload (its `addr` is overwritten by the spawned gateway).
+    pub bench: BenchConfig,
+    /// Failpoint profile, `--fail` grammar (comma/semicolon-separated
+    /// `name=spec` entries), armed for the duration of the run.
+    pub failpoints: String,
+    pub max_batch: usize,
+    pub chunk: usize,
+    pub queue_cap: usize,
+    pub decode_interval: Duration,
+    pub prefill_us_per_token: u64,
+    pub prefill_chunk_tokens: usize,
+    pub step_token_budget: usize,
+    /// Stepper watchdog threshold for the spawned gateway.
+    pub watchdog_stall: Duration,
+    /// Cadence of the `/healthz` availability probe.
+    pub healthz_poll: Duration,
+    pub kv_dtype: KvDtype,
+}
+
+impl Default for ChaosBenchConfig {
+    fn default() -> Self {
+        ChaosBenchConfig {
+            bench: BenchConfig::default(),
+            // Defaults exercise both rungs of the degradation ladder that
+            // a bench can survive: injected step latency (watchdog food)
+            // and transient prefill errors (retry food).
+            failpoints: "engine.step=2%sleep(2),engine.prefill=2%err(injected chaos)".to_string(),
+            max_batch: 16,
+            chunk: 64,
+            queue_cap: 64,
+            decode_interval: Duration::from_micros(200),
+            prefill_us_per_token: 20,
+            prefill_chunk_tokens: 128,
+            step_token_budget: 160,
+            watchdog_stall: Duration::from_millis(500),
+            healthz_poll: Duration::from_millis(25),
+            kv_dtype: KvDtype::F32,
+        }
+    }
+}
+
+/// Results of one chaos run: the client-side bench report plus the
+/// health-probe tallies and the gateway's own failure counters.
+#[derive(Debug)]
+pub struct ChaosReport {
+    pub bench: BenchReport,
+    /// Failpoint sites armed for the run.
+    pub armed: usize,
+    pub failpoints: String,
+    pub probes_total: usize,
+    /// Probes answered 503 (stepper stalled past the watchdog threshold).
+    pub probes_degraded: usize,
+    /// Probes that failed outright (connect/read error).
+    pub probes_failed: usize,
+    pub engine_panics: f64,
+    pub engine_rebuilds: f64,
+    pub watchdog_stalls: f64,
+    pub step_retries: f64,
+    pub requests_timed_out: f64,
+    pub requests_failed: f64,
+}
+
+impl ChaosReport {
+    /// Fraction of issued requests that completed despite the faults.
+    pub fn availability(&self) -> f64 {
+        let issued = self.bench.completed + self.bench.rejected + self.bench.errors;
+        if issued == 0 {
+            return f64::NAN;
+        }
+        self.bench.completed as f64 / issued as f64
+    }
+
+    /// Fraction of health probes that came back 200.
+    pub fn health_availability(&self) -> f64 {
+        if self.probes_total == 0 {
+            return f64::NAN;
+        }
+        (self.probes_total - self.probes_degraded - self.probes_failed) as f64
+            / self.probes_total as f64
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "chaos profile      {} ({} site{} armed)\n\
+             availability       {:.1}% of requests completed, {:.1}% of health probes 200\n\
+             health probes      {} total, {} degraded (503), {} failed\n\
+             supervision        {} panics, {} rebuilds, {} watchdog stalls, {} step retries\n\
+             failures           {} requests failed, {} timed out\n\
+             \n\
+             {}",
+            self.failpoints,
+            self.armed,
+            if self.armed == 1 { "" } else { "s" },
+            100.0 * self.availability(),
+            100.0 * self.health_availability(),
+            self.probes_total,
+            self.probes_degraded,
+            self.probes_failed,
+            self.engine_panics,
+            self.engine_rebuilds,
+            self.watchdog_stalls,
+            self.step_retries,
+            self.requests_failed,
+            self.requests_timed_out,
+            self.bench.render(),
+        )
+    }
+}
+
+/// Run the closed-loop bench against a freshly spawned gateway with the
+/// configured failpoint profile armed, measuring availability under
+/// injected faults. All failpoints are disarmed before returning (on every
+/// path), so a chaos run never leaks fault state into later runs.
+pub fn run_chaos_bench(cfg: &ChaosBenchConfig) -> anyhow::Result<ChaosReport> {
+    // Drop guard: whatever path exits this function, the process-global
+    // failpoint registry goes back to fully disarmed.
+    struct DisarmAll;
+    impl Drop for DisarmAll {
+        fn drop(&mut self) {
+            failpoint::disarm_all();
+        }
+    }
+
+    let runner = PacedRunner {
+        inner: SyntheticRunner { heads_total: 16, head_dim: 32, vocab: 32000 },
+        prefill_us_per_token: cfg.prefill_us_per_token,
+    };
+    let engine = Engine::with_dtype(runner, cfg.chunk, cfg.max_batch, cfg.kv_dtype);
+    let gw = Gateway::start(
+        engine,
+        GatewayConfig {
+            addr: "127.0.0.1:0".to_string(),
+            queue_cap: cfg.queue_cap,
+            decode_interval: cfg.decode_interval,
+            prefill_chunk_tokens: cfg.prefill_chunk_tokens,
+            step_token_budget: cfg.step_token_budget,
+            watchdog_stall: cfg.watchdog_stall,
+            ..GatewayConfig::default()
+        },
+    )?;
+    let addr = gw.addr().to_string();
+
+    // Arm only after the gateway is up, so startup runs clean.
+    let _disarm = DisarmAll;
+    let armed = failpoint::configure_list(&cfg.failpoints)
+        .map_err(|e| anyhow::anyhow!("bad failpoint profile: {e}"))?;
+
+    // Availability probe: poll /healthz on a fixed cadence for the whole
+    // run so watchdog-degraded windows show up even if every request
+    // eventually completes.
+    let stop = Arc::new(AtomicBool::new(false));
+    let probes = Arc::new((AtomicUsize::new(0), AtomicUsize::new(0), AtomicUsize::new(0)));
+    let probe_handle = {
+        let stop = stop.clone();
+        let probes = probes.clone();
+        let addr = addr.clone();
+        let poll = cfg.healthz_poll;
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                probes.0.fetch_add(1, Ordering::SeqCst);
+                match client::get(&addr, "/healthz", Duration::from_secs(2)) {
+                    Ok(resp) if resp.status == 200 => {}
+                    Ok(_) => {
+                        probes.1.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Err(_) => {
+                        probes.2.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+                std::thread::sleep(poll);
+            }
+        })
+    };
+
+    let mut bench = cfg.bench.clone();
+    bench.addr = addr.clone();
+    let bench_result = run_bench(&bench);
+
+    stop.store(true, Ordering::SeqCst);
+    probe_handle.join().map_err(|_| anyhow::anyhow!("healthz probe panicked"))?;
+    let bench_report = bench_result?;
+
+    // Scrape the supervision counters before tearing the gateway down.
+    let doc = client::get(&addr, "/metrics", cfg.bench.timeout).map(|r| r.body).unwrap_or_default();
+    let gauge = |name: &str| client::gauge_value(&doc, name).unwrap_or(0.0);
+    let failed = ["panic", "error", "rebuild"]
+        .iter()
+        .filter_map(|r| client::labeled_gauge_value(&doc, "requests_failed_total", "reason", r))
+        .sum::<f64>();
+    let report = ChaosReport {
+        armed,
+        failpoints: cfg.failpoints.clone(),
+        probes_total: probes.0.load(Ordering::SeqCst),
+        probes_degraded: probes.1.load(Ordering::SeqCst),
+        probes_failed: probes.2.load(Ordering::SeqCst),
+        engine_panics: gauge("engine_panics_total"),
+        engine_rebuilds: gauge("engine_rebuilds_total"),
+        watchdog_stalls: gauge("watchdog_stalls_total"),
+        step_retries: gauge("step_retries_total"),
+        requests_timed_out: gauge("requests_timed_out_total"),
+        requests_failed: failed,
+        bench: bench_report,
+    };
+
+    // Disarm before shutdown so draining steps are not subject to faults.
+    failpoint::disarm_all();
+    gw.shutdown()?;
+    Ok(report)
 }
 
 /// Side-by-side rendering of the monolithic-vs-chunked comparison.

@@ -14,6 +14,9 @@ use std::time::Duration;
 pub struct Response {
     pub status: u16,
     pub body: String,
+    /// Parsed `Retry-After` header (seconds), when the server sent one
+    /// (429 backpressure, 503 draining/degraded).
+    pub retry_after: Option<u64>,
 }
 
 fn connect(addr: &str, timeout: Duration) -> anyhow::Result<TcpStream> {
@@ -28,7 +31,7 @@ fn connect(addr: &str, timeout: Duration) -> anyhow::Result<TcpStream> {
     Ok(stream)
 }
 
-fn read_head<R: BufRead>(reader: &mut R) -> anyhow::Result<u16> {
+fn read_head<R: BufRead>(reader: &mut R) -> anyhow::Result<(u16, Option<u64>)> {
     let mut line = String::new();
     if reader.read_line(&mut line)? == 0 {
         anyhow::bail!("server closed the connection before responding");
@@ -39,14 +42,22 @@ fn read_head<R: BufRead>(reader: &mut R) -> anyhow::Result<u16> {
         .ok_or_else(|| anyhow::anyhow!("malformed status line {line:?}"))?
         .parse()?;
     // Consume headers up to the blank line; `Connection: close` framing
-    // means the body simply runs to EOF.
+    // means the body simply runs to EOF. `Retry-After` is the one header
+    // the retry helper cares about.
+    let mut retry_after = None;
     loop {
         let mut h = String::new();
         if reader.read_line(&mut h)? == 0 {
             anyhow::bail!("EOF inside response headers");
         }
-        if h.trim_end().is_empty() {
-            return Ok(status);
+        let trimmed = h.trim_end();
+        if trimmed.is_empty() {
+            return Ok((status, retry_after));
+        }
+        if let Some((name, value)) = trimmed.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("retry-after") {
+                retry_after = value.trim().parse().ok();
+            }
         }
     }
 }
@@ -57,10 +68,10 @@ pub fn get(addr: &str, path: &str, timeout: Duration) -> anyhow::Result<Response
     write!(stream, "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")?;
     stream.flush()?;
     let mut reader = BufReader::new(stream);
-    let status = read_head(&mut reader)?;
+    let (status, retry_after) = read_head(&mut reader)?;
     let mut body = String::new();
     reader.read_to_string(&mut body)?;
-    Ok(Response { status, body })
+    Ok(Response { status, body, retry_after })
 }
 
 /// Extract a gauge's value from a Prometheus exposition document by series
@@ -105,11 +116,18 @@ pub fn labeled_gauge_value(
     None
 }
 
-/// One event of a `/v1/generate` SSE stream.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// One event of a `/v1/generate` SSE stream. `Done`, `Error`, and
+/// `Timeout` are terminal: the gateway guarantees every stream ends with
+/// exactly one of them (no client ever hangs to its socket timeout).
+#[derive(Debug, Clone, PartialEq)]
 pub enum StreamEvent {
     Token { index: usize, token: u32 },
     Done { completion_tokens: usize },
+    /// The request failed server-side (engine panic quarantine, persistent
+    /// runner error, full engine rebuild).
+    Error { message: String },
+    /// The request exceeded its `deadline_ms`.
+    Timeout,
 }
 
 /// An open `/v1/generate` call: status plus, on 200, the live SSE stream.
@@ -118,6 +136,8 @@ pub struct GenerateStream {
     reader: Option<BufReader<TcpStream>>,
     /// Response body for non-200 statuses (429 backpressure, 400, ...).
     pub error_body: String,
+    /// Parsed `Retry-After` header (seconds), when present.
+    pub retry_after: Option<u64>,
 }
 
 impl GenerateStream {
@@ -144,6 +164,12 @@ impl GenerateStream {
                     j.get("completion_tokens").and_then(|v| v.as_f64()).unwrap_or(0.0) as usize;
                 return Ok(Some(StreamEvent::Done { completion_tokens: n }));
             }
+            if j.get("timeout").and_then(|t| t.as_bool()).unwrap_or(false) {
+                return Ok(Some(StreamEvent::Timeout));
+            }
+            if let Some(message) = j.get("error").and_then(|e| e.as_str()) {
+                return Ok(Some(StreamEvent::Error { message: message.to_string() }));
+            }
             let index = j.get("index").and_then(|v| v.as_f64()).unwrap_or(0.0) as usize;
             let token = j.get("token").and_then(|v| v.as_f64()).unwrap_or(0.0) as u32;
             return Ok(Some(StreamEvent::Token { index, token }));
@@ -169,13 +195,37 @@ pub fn generate(addr: &str, body: &Json, timeout: Duration) -> anyhow::Result<Ge
     stream.write_all(payload.as_bytes())?;
     stream.flush()?;
     let mut reader = BufReader::new(stream);
-    let status = read_head(&mut reader)?;
+    let (status, retry_after) = read_head(&mut reader)?;
     if status != 200 {
         let mut error_body = String::new();
         let _ = reader.read_to_string(&mut error_body);
-        return Ok(GenerateStream { status, reader: None, error_body });
+        return Ok(GenerateStream { status, reader: None, error_body, retry_after });
     }
-    Ok(GenerateStream { status, reader: Some(reader), error_body: String::new() })
+    Ok(GenerateStream { status, reader: Some(reader), error_body: String::new(), retry_after })
+}
+
+/// [`generate`] with one bounded retry: a 429/503 response (or a failed
+/// connect) is retried once after honoring the server's `Retry-After`
+/// (capped at `max_backoff`; defaulting to 100ms when absent). Returns the
+/// final stream plus how many retries were spent (0 or 1), so load
+/// generators can report retried vs. failed counts separately.
+pub fn generate_with_retry(
+    addr: &str,
+    body: &Json,
+    timeout: Duration,
+    max_backoff: Duration,
+) -> anyhow::Result<(GenerateStream, usize)> {
+    let backoff = match generate(addr, body, timeout) {
+        Ok(stream) if stream.status != 429 && stream.status != 503 => return Ok((stream, 0)),
+        Ok(stream) => stream
+            .retry_after
+            .map(Duration::from_secs)
+            .unwrap_or_else(|| Duration::from_millis(100)),
+        Err(_) => Duration::from_millis(100),
+    };
+    std::thread::sleep(backoff.min(max_backoff));
+    let stream = generate(addr, body, timeout)?;
+    Ok((stream, 1))
 }
 
 #[cfg(test)]

@@ -21,17 +21,19 @@
 //! drains active sequences before the stepper exits.
 
 use super::http;
-use crate::coordinator::{Engine, ModelRunner, SchedPolicyKind};
+use crate::coordinator::{Engine, FinishedSeq, ModelRunner, SchedPolicyKind};
 use crate::metrics::{push_gauge, push_labeled_gauge, push_labeled_series, render_exposition};
+use crate::util::failpoint;
 use crate::util::json::Json;
 use crate::workload::{Request, Tokenizer};
 use std::collections::BTreeMap;
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Gateway tuning knobs. The engine itself (runner, chunk size, max batch)
 /// is constructed by the caller and handed to [`Gateway::start`].
@@ -74,6 +76,17 @@ pub struct GatewayConfig {
     /// DRR per-tenant weights (`--tenant-weights 0=4,3=2`); unlisted
     /// tenants weigh 1. Ignored by the other policies.
     pub tenant_weights: Vec<(usize, u32)>,
+    /// Watchdog stall bound: if the stepper completes no loop pass within
+    /// this window, `/healthz` flips to 503-degraded until it recovers.
+    /// `Duration::ZERO` disables the watchdog thread.
+    pub watchdog_stall: Duration,
+    /// Transient engine-step errors are retried this many times (with
+    /// backoff) before the supervisor fails the implicated request(s).
+    pub step_retry_max: usize,
+    /// Base backoff between step retries (multiplied by the attempt number).
+    pub step_retry_backoff: Duration,
+    /// `Retry-After` seconds advertised on 429/503 responses.
+    pub retry_after_secs: u64,
 }
 
 impl Default for GatewayConfig {
@@ -91,8 +104,85 @@ impl Default for GatewayConfig {
             step_token_budget: 0,
             sched_policy: SchedPolicyKind::PrefixGreedy,
             tenant_weights: Vec::new(),
+            watchdog_stall: Duration::from_secs(5),
+            step_retry_max: 3,
+            step_retry_backoff: Duration::from_millis(10),
+            retry_after_secs: 1,
         }
     }
+}
+
+/// Liveness heartbeat and failure counters shared by the stepper thread,
+/// the watchdog thread, and connection handlers. All atomics: readable
+/// from any thread, unpoisonable by a panicking one.
+pub(crate) struct GatewayShared {
+    started: Instant,
+    /// Milliseconds since `started` of the stepper's last completed loop
+    /// pass (bumped on every pass, idle or busy, so staleness always
+    /// means a wedged or very slow step).
+    heartbeat_ms: AtomicU64,
+    /// Set by the watchdog while the heartbeat is stale; drives 503 on
+    /// `/healthz`.
+    stalled: AtomicBool,
+    watchdog_stalls: AtomicU64,
+    engine_panics: AtomicU64,
+    engine_rebuilds: AtomicU64,
+    requests_timed_out: AtomicU64,
+    step_retries: AtomicU64,
+    /// `requests_failed_total` by reason.
+    failed_panic: AtomicU64,
+    failed_error: AtomicU64,
+    failed_rebuild: AtomicU64,
+}
+
+impl GatewayShared {
+    fn new() -> Self {
+        GatewayShared {
+            started: Instant::now(),
+            heartbeat_ms: AtomicU64::new(0),
+            stalled: AtomicBool::new(false),
+            watchdog_stalls: AtomicU64::new(0),
+            engine_panics: AtomicU64::new(0),
+            engine_rebuilds: AtomicU64::new(0),
+            requests_timed_out: AtomicU64::new(0),
+            step_retries: AtomicU64::new(0),
+            failed_panic: AtomicU64::new(0),
+            failed_error: AtomicU64::new(0),
+            failed_rebuild: AtomicU64::new(0),
+        }
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.started.elapsed().as_millis() as u64
+    }
+
+    /// Stepper liveness beat, once per loop pass.
+    fn beat(&self) {
+        self.heartbeat_ms.store(self.now_ms(), Ordering::SeqCst);
+    }
+
+    fn heartbeat_age_ms(&self) -> u64 {
+        self.now_ms().saturating_sub(self.heartbeat_ms.load(Ordering::SeqCst))
+    }
+
+    fn count_failure(&self, reason: FailReason) {
+        match reason {
+            FailReason::Panic => &self.failed_panic,
+            FailReason::Error => &self.failed_error,
+            FailReason::Rebuild => &self.failed_rebuild,
+        }
+        .fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FailReason {
+    /// Quarantined after a panic unwound out of `Engine::step`.
+    Panic,
+    /// Failed after transient-error retries were exhausted.
+    Error,
+    /// Dropped by a full engine rebuild (broken invariants).
+    Rebuild,
 }
 
 /// Per-token events the stepper streams back to a request's handler.
@@ -105,11 +195,16 @@ pub enum TokenEvent {
     Token { index: usize, token: u32 },
     /// The sequence finished; the stream is complete.
     Done { completion_tokens: usize },
+    /// Terminal: the request failed server-side (panic quarantine,
+    /// persistent runner error, or a full engine rebuild).
+    Error { message: String },
+    /// Terminal: the request exceeded its `deadline_ms`.
+    Timeout,
 }
 
 /// Commands handler threads send to the stepper thread.
 enum EngineCmd {
-    Submit { request: Request, events: mpsc::Sender<TokenEvent> },
+    Submit { request: Request, events: mpsc::Sender<TokenEvent>, deadline: Option<Instant> },
     Cancel { id: u64 },
     Scrape { reply: mpsc::Sender<String> },
     Drain,
@@ -123,6 +218,7 @@ pub struct Gateway {
     stop: Arc<AtomicBool>,
     accept_thread: thread::JoinHandle<()>,
     stepper_thread: thread::JoinHandle<()>,
+    watchdog_thread: Option<thread::JoinHandle<()>>,
 }
 
 impl Gateway {
@@ -144,25 +240,45 @@ impl Gateway {
         if cfg.retain_chunks > 0 {
             engine.enable_prefix_retention(cfg.retain_chunks);
         }
+        // Arm failpoints from the environment (no-op when FAILPOINTS is
+        // unset) so the chaos CI leg reaches gateways spawned anywhere.
+        failpoint::arm_from_env();
         let (cmd_tx, cmd_rx) = mpsc::channel::<EngineCmd>();
         let stop = Arc::new(AtomicBool::new(false));
+        let shared = Arc::new(GatewayShared::new());
+        shared.beat();
 
         let stepper_cfg = cfg.clone();
+        let stepper_shared = shared.clone();
         let stepper_thread = thread::Builder::new()
             .name("gateway-stepper".to_string())
-            .spawn(move || stepper_loop(engine, cmd_rx, stepper_cfg))?;
+            .spawn(move || stepper_loop(engine, cmd_rx, stepper_cfg, stepper_shared))?;
+
+        let watchdog_thread = if cfg.watchdog_stall > Duration::ZERO {
+            let wd_shared = shared.clone();
+            let wd_stop = stop.clone();
+            let stall = cfg.watchdog_stall;
+            Some(
+                thread::Builder::new()
+                    .name("gateway-watchdog".to_string())
+                    .spawn(move || watchdog_loop(wd_shared, wd_stop, stall))?,
+            )
+        } else {
+            None
+        };
 
         // Built up front so the first connection doesn't pay BPE training.
         let tokenizer = Arc::new(Tokenizer::default_english());
         let accept_tx = cmd_tx.clone();
         let accept_stop = stop.clone();
         let accept_cfg = cfg.clone();
-        let accept_thread = thread::Builder::new()
-            .name("gateway-accept".to_string())
-            .spawn(move || accept_loop(listener, accept_tx, accept_stop, accept_cfg, tokenizer))?;
+        let accept_shared = shared.clone();
+        let accept_thread = thread::Builder::new().name("gateway-accept".to_string()).spawn(
+            move || accept_loop(listener, accept_tx, accept_stop, accept_cfg, tokenizer, accept_shared),
+        )?;
 
         log::info!("gateway listening on {addr}");
-        Ok(Gateway { addr, cmd_tx, stop, accept_thread, stepper_thread })
+        Ok(Gateway { addr, cmd_tx, stop, accept_thread, stepper_thread, watchdog_thread })
     }
 
     pub fn addr(&self) -> SocketAddr {
@@ -183,6 +299,9 @@ impl Gateway {
         self.stepper_thread
             .join()
             .map_err(|_| anyhow::anyhow!("gateway stepper thread panicked"))?;
+        if let Some(wd) = self.watchdog_thread {
+            wd.join().map_err(|_| anyhow::anyhow!("gateway watchdog thread panicked"))?;
+        }
         Ok(())
     }
 }
@@ -192,21 +311,50 @@ struct StreamState {
     events: mpsc::Sender<TokenEvent>,
     /// Completion tokens already pushed to the event channel.
     sent: usize,
+    /// Absolute deadline derived from the request's `deadline_ms`.
+    deadline: Option<Instant>,
+}
+
+/// Watchdog thread: flips the shared `stalled` flag while the stepper's
+/// heartbeat is stale. The stepper beats on every loop pass (including
+/// idle parking), so staleness always means a wedged or pathologically
+/// slow step — the flag drives `/healthz` 503-degraded.
+fn watchdog_loop(shared: Arc<GatewayShared>, stop: Arc<AtomicBool>, stall: Duration) {
+    let stall_ms = stall.as_millis().max(1) as u64;
+    let poll = (stall / 4).clamp(Duration::from_millis(5), Duration::from_millis(250));
+    while !stop.load(Ordering::SeqCst) {
+        thread::sleep(poll);
+        if shared.heartbeat_age_ms() > stall_ms {
+            if !shared.stalled.swap(true, Ordering::SeqCst) {
+                shared.watchdog_stalls.fetch_add(1, Ordering::SeqCst);
+                log::warn!(
+                    "watchdog: no stepper pass in {}ms (bound {}ms); /healthz degraded",
+                    shared.heartbeat_age_ms(),
+                    stall_ms
+                );
+            }
+        } else if shared.stalled.swap(false, Ordering::SeqCst) {
+            log::info!("watchdog: stepper recovered; /healthz healthy");
+        }
+    }
 }
 
 fn stepper_loop<R: ModelRunner>(
     mut engine: Engine<R>,
     cmd_rx: mpsc::Receiver<EngineCmd>,
     cfg: GatewayConfig,
+    shared: Arc<GatewayShared>,
 ) {
     let mut streams: BTreeMap<u64, StreamState> = BTreeMap::new();
     let mut draining = false;
+    let mut step_retries = 0usize;
     loop {
+        shared.beat();
         // Pull every pending command; commands are cheap, steps are not.
         let mut disconnected = false;
         loop {
             match cmd_rx.try_recv() {
-                Ok(cmd) => handle_cmd(cmd, &mut engine, &mut streams, &mut draining, &cfg),
+                Ok(cmd) => handle_cmd(cmd, &mut engine, &mut streams, &mut draining, &cfg, &shared),
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
                     disconnected = true;
@@ -214,6 +362,9 @@ fn stepper_loop<R: ModelRunner>(
                 }
             }
         }
+        // Deadlines are enforced on every pass (idle included) so a
+        // request expiring while *queued* times out promptly too.
+        enforce_deadlines(&mut engine, &mut streams, &shared);
         if engine.is_idle() {
             if draining || disconnected {
                 break;
@@ -221,28 +372,28 @@ fn stepper_loop<R: ModelRunner>(
             // Idle maintenance: keep spending the amortized eviction
             // allowance while pinned prefixes sit over the retention
             // budget, so the last request's pins drain between requests.
+            // Supervised like the busy path: an injected panic or error
+            // during maintenance must not kill the stepper either.
             if engine.needs_maintenance() {
-                if let Err(e) = engine.step() {
-                    log::error!("engine maintenance step failed, stopping stepper: {e}");
-                    break;
-                }
+                let _ = run_step_supervised(
+                    &mut engine,
+                    &mut streams,
+                    &shared,
+                    &cfg,
+                    &mut step_retries,
+                );
             }
             // Park until work arrives, with a bounded wait so a Drain that
             // raced past the try_recv loop is still noticed promptly.
             match cmd_rx.recv_timeout(Duration::from_millis(20)) {
-                Ok(cmd) => handle_cmd(cmd, &mut engine, &mut streams, &mut draining, &cfg),
+                Ok(cmd) => handle_cmd(cmd, &mut engine, &mut streams, &mut draining, &cfg, &shared),
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
             continue;
         }
-        let finished = match engine.step() {
-            Ok(f) => f,
-            Err(e) => {
-                log::error!("engine step failed, stopping stepper: {e}");
-                break;
-            }
-        };
+        let finished =
+            run_step_supervised(&mut engine, &mut streams, &shared, &cfg, &mut step_retries);
         // Stream freshly decoded tokens. A send error means the handler is
         // gone without managing to send Cancel (it died); reap eagerly so
         // the sequence stops burning decode slots.
@@ -276,8 +427,182 @@ fn stepper_loop<R: ModelRunner>(
             thread::sleep(cfg.decode_interval);
         }
     }
-    // Exiting drops every event sender; blocked handlers observe the
-    // disconnect and fail their streams instead of hanging.
+    // Terminal-event guarantee on the stepper's own exit path: any stream
+    // still open (e.g. the command channel disconnected mid-flight) gets
+    // an explicit SSE error instead of a silent sender drop.
+    for (_, st) in streams {
+        let _ = st
+            .events
+            .send(TokenEvent::Error { message: "gateway stepper exiting".to_string() });
+    }
+}
+
+/// One supervised engine iteration: `Engine::step` under `catch_unwind`,
+/// with the degradation ladder on failure —
+///
+/// 1. transient `Err`: bounded retry with backoff (the restore-queue seam
+///    makes whole-step retry safe for prefill errors);
+/// 2. retries exhausted: fail only the attributed request (`[seq:<id>]` in
+///    the error), or quarantine all in-flight when unattributed;
+/// 3. panic: quarantine the implicated sequences, repair bookkeeping
+///    (`recover_after_panic`), verify tree invariants;
+/// 4. invariants broken: full engine rebuild — drop all residency, fail
+///    every open stream, keep serving.
+fn run_step_supervised<R: ModelRunner>(
+    engine: &mut Engine<R>,
+    streams: &mut BTreeMap<u64, StreamState>,
+    shared: &GatewayShared,
+    cfg: &GatewayConfig,
+    step_retries: &mut usize,
+) -> Vec<FinishedSeq> {
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        // Chaos site: panic in the stepper thread itself, outside the
+        // engine — proves supervision covers the whole closure.
+        if let Some(msg) = failpoint::fire("gateway.stepper") {
+            return Err(anyhow::anyhow!(msg));
+        }
+        engine.step()
+    }));
+    match outcome {
+        Ok(Ok(finished)) => {
+            *step_retries = 0;
+            finished
+        }
+        Ok(Err(e)) => {
+            let msg = e.to_string();
+            if *step_retries < cfg.step_retry_max {
+                *step_retries += 1;
+                shared.step_retries.fetch_add(1, Ordering::SeqCst);
+                log::warn!(
+                    "engine step failed (retry {}/{}): {msg}",
+                    *step_retries,
+                    cfg.step_retry_max
+                );
+                thread::sleep(cfg.step_retry_backoff * *step_retries as u32);
+            } else {
+                *step_retries = 0;
+                log::error!("engine step failed after retries, quarantining: {msg}");
+                let victims = match failpoint::seq_attribution(&msg) {
+                    Some(id) => vec![id],
+                    None => engine.inflight_ids(),
+                };
+                fail_requests(engine, streams, shared, &victims, FailReason::Error, &msg);
+                verify_or_rebuild(engine, streams, shared);
+            }
+            Vec::new()
+        }
+        Err(payload) => {
+            *step_retries = 0;
+            shared.engine_panics.fetch_add(1, Ordering::SeqCst);
+            let msg = panic_message(payload.as_ref());
+            log::error!("engine step panicked ({msg}); recovering");
+            let (orphans, finished) = engine.recover_after_panic();
+            let mut victims = orphans;
+            match failpoint::seq_attribution(&msg) {
+                Some(id) => {
+                    if !victims.contains(&id) {
+                        victims.push(id);
+                    }
+                }
+                None => {
+                    // Unattributed panic: quarantine conservatively —
+                    // every in-flight sequence may have been implicated.
+                    for id in engine.inflight_ids() {
+                        if !victims.contains(&id) {
+                            victims.push(id);
+                        }
+                    }
+                }
+            }
+            fail_requests(engine, streams, shared, &victims, FailReason::Panic, &msg);
+            verify_or_rebuild(engine, streams, shared);
+            finished
+        }
+    }
+}
+
+/// Extract a readable message from a panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Quarantine `victims`: release their engine residency and send each open
+/// stream a terminal SSE error.
+fn fail_requests<R: ModelRunner>(
+    engine: &mut Engine<R>,
+    streams: &mut BTreeMap<u64, StreamState>,
+    shared: &GatewayShared,
+    victims: &[u64],
+    reason: FailReason,
+    msg: &str,
+) {
+    for &id in victims {
+        let cancelled = engine.cancel(id);
+        let released = engine.release(id).is_some();
+        let had_stream = match streams.remove(&id) {
+            Some(st) => {
+                let _ = st.events.send(TokenEvent::Error { message: msg.to_string() });
+                true
+            }
+            None => false,
+        };
+        if cancelled || released || had_stream {
+            shared.count_failure(reason);
+        }
+    }
+}
+
+/// Escalation: if the tree's invariants are broken after recovery, rebuild
+/// the engine's residency from scratch (dropping every in-flight request)
+/// and keep serving. The process never exits.
+fn verify_or_rebuild<R: ModelRunner>(
+    engine: &mut Engine<R>,
+    streams: &mut BTreeMap<u64, StreamState>,
+    shared: &GatewayShared,
+) {
+    if let Err(e) = engine.tree().check_invariants() {
+        log::error!("prefix-tree invariants broken after recovery ({e}); full engine rebuild");
+        shared.engine_rebuilds.fetch_add(1, Ordering::SeqCst);
+        let dropped = engine.hard_reset();
+        for _ in &dropped {
+            shared.count_failure(FailReason::Rebuild);
+        }
+        for (_, st) in std::mem::take(streams) {
+            let _ = st.events.send(TokenEvent::Error {
+                message: "engine rebuilt after broken invariants; request dropped".to_string(),
+            });
+        }
+    }
+}
+
+/// Fail every stream whose deadline has passed: release engine residency
+/// (private chunks return to the pool) and send the terminal timeout event.
+fn enforce_deadlines<R: ModelRunner>(
+    engine: &mut Engine<R>,
+    streams: &mut BTreeMap<u64, StreamState>,
+    shared: &GatewayShared,
+) {
+    let now = Instant::now();
+    let expired: Vec<u64> = streams
+        .iter()
+        .filter(|(_, st)| st.deadline.is_some_and(|d| now >= d))
+        .map(|(&id, _)| id)
+        .collect();
+    for id in expired {
+        engine.cancel(id);
+        engine.release(id);
+        if let Some(st) = streams.remove(&id) {
+            let _ = st.events.send(TokenEvent::Timeout);
+        }
+        shared.requests_timed_out.fetch_add(1, Ordering::SeqCst);
+        log::debug!("request {id} exceeded its deadline; residency released");
+    }
 }
 
 fn handle_cmd<R: ModelRunner>(
@@ -286,9 +611,10 @@ fn handle_cmd<R: ModelRunner>(
     streams: &mut BTreeMap<u64, StreamState>,
     draining: &mut bool,
     cfg: &GatewayConfig,
+    shared: &GatewayShared,
 ) {
     match cmd {
-        EngineCmd::Submit { mut request, events } => {
+        EngineCmd::Submit { mut request, events, deadline } => {
             if *draining {
                 let queued = engine.scheduler().queued();
                 let _ = events.send(TokenEvent::Rejected { queued, draining: true });
@@ -297,7 +623,7 @@ fn handle_cmd<R: ModelRunner>(
             request.arrival_s = engine.clock();
             let id = request.id;
             if engine.try_submit(request) {
-                streams.insert(id, StreamState { events, sent: 0 });
+                streams.insert(id, StreamState { events, sent: 0, deadline });
             } else {
                 let queued = engine.scheduler().queued();
                 let _ = events.send(TokenEvent::Rejected { queued, draining: false });
@@ -309,16 +635,82 @@ fn handle_cmd<R: ModelRunner>(
             engine.release(id);
         }
         EngineCmd::Scrape { reply } => {
-            let _ = reply.send(render_metrics(engine, streams.len(), &cfg.metrics_prefix));
+            let _ = reply.send(render_metrics(engine, streams.len(), &cfg.metrics_prefix, shared));
         }
         EngineCmd::Drain => *draining = true,
     }
 }
 
 /// The `/metrics` document: the engine's request/step series plus gateway
-/// liveness gauges (queue depth, admission rejections, chunk occupancy).
-fn render_metrics<R: ModelRunner>(engine: &Engine<R>, live_streams: usize, prefix: &str) -> String {
+/// liveness gauges (queue depth, admission rejections, chunk occupancy)
+/// and the supervisor's failure-domain counters.
+fn render_metrics<R: ModelRunner>(
+    engine: &Engine<R>,
+    live_streams: usize,
+    prefix: &str,
+    shared: &GatewayShared,
+) -> String {
     let mut out = render_exposition(engine.metrics(), prefix);
+    // Failure-domain observability: panic/rebuild/timeout/stall counters
+    // plus a live invariant probe, so chaos tests (and dashboards) can
+    // verify recovery from the outside.
+    push_gauge(
+        &mut out,
+        prefix,
+        "engine_panics_total",
+        "engine steps that panicked and were recovered by the supervisor",
+        shared.engine_panics.load(Ordering::SeqCst) as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "engine_rebuilds_total",
+        "full engine rebuilds after broken tree invariants",
+        shared.engine_rebuilds.load(Ordering::SeqCst) as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "requests_timed_out_total",
+        "requests terminated by their deadline_ms",
+        shared.requests_timed_out.load(Ordering::SeqCst) as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "watchdog_stalls_total",
+        "stepper stalls detected by the watchdog",
+        shared.watchdog_stalls.load(Ordering::SeqCst) as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "step_retries_total",
+        "engine step retries after transient errors",
+        shared.step_retries.load(Ordering::SeqCst) as f64,
+    );
+    let failed_rows: Vec<(Vec<(&str, String)>, f64)> = [
+        ("panic", shared.failed_panic.load(Ordering::SeqCst)),
+        ("error", shared.failed_error.load(Ordering::SeqCst)),
+        ("rebuild", shared.failed_rebuild.load(Ordering::SeqCst)),
+    ]
+    .iter()
+    .map(|(reason, n)| (vec![("reason", reason.to_string())], *n as f64))
+    .collect();
+    push_labeled_series(
+        &mut out,
+        prefix,
+        "requests_failed_total",
+        "requests terminated by the supervisor, by reason",
+        &failed_rows,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "tree_invariants_ok",
+        "1 while PrefixTree::check_invariants passes (0 = structural damage)",
+        if engine.tree().check_invariants().is_ok() { 1.0 } else { 0.0 },
+    );
     let sched = engine.scheduler();
     push_gauge(&mut out, prefix, "queue_depth", "requests waiting for admission", sched.queued() as f64);
     push_gauge(
@@ -511,6 +903,7 @@ fn accept_loop(
     stop: Arc<AtomicBool>,
     cfg: GatewayConfig,
     tokenizer: Arc<Tokenizer>,
+    shared: Arc<GatewayShared>,
 ) {
     // Request ids are gateway-assigned, monotonically increasing, and well
     // below the retainer's pin range.
@@ -524,8 +917,9 @@ fn accept_loop(
         let ids = next_id.clone();
         let tok = tokenizer.clone();
         let conn_cfg = cfg.clone();
+        let conn_shared = shared.clone();
         let spawned = thread::Builder::new().name("gateway-conn".to_string()).spawn(move || {
-            if let Err(e) = handle_connection(stream, tx, ids, tok, &conn_cfg) {
+            if let Err(e) = handle_connection(stream, tx, ids, tok, &conn_cfg, &conn_shared) {
                 log::debug!("connection handler: {e}");
             }
         });
@@ -547,6 +941,7 @@ fn handle_connection(
     ids: Arc<AtomicU64>,
     tokenizer: Arc<Tokenizer>,
     cfg: &GatewayConfig,
+    shared: &GatewayShared,
 ) -> std::io::Result<()> {
     stream.set_read_timeout(Some(cfg.io_timeout))?;
     stream.set_write_timeout(Some(cfg.io_timeout))?;
@@ -556,8 +951,24 @@ fn handle_connection(
     let Some(req) = http::read_request(&mut reader)? else {
         return Ok(());
     };
+    let retry_after = cfg.retry_after_secs.to_string();
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
+            if shared.stalled.load(Ordering::SeqCst) {
+                // Degraded: the stepper missed its watchdog bound. Detail
+                // helps operators tell a wedged step from a dead process.
+                let mut j = Json::obj();
+                j.set("status", "degraded")
+                    .set("reason", "stepper stalled")
+                    .set("heartbeat_age_ms", shared.heartbeat_age_ms())
+                    .set("engine_panics_total", shared.engine_panics.load(Ordering::SeqCst));
+                return http::write_json_with(
+                    &mut writer,
+                    503,
+                    &[("Retry-After", &retry_after)],
+                    &j,
+                );
+            }
             let mut j = Json::obj();
             j.set("status", "ok");
             http::write_json(&mut writer, 200, &j)
@@ -565,13 +976,23 @@ fn handle_connection(
         ("GET", "/metrics") => {
             let (reply_tx, reply_rx) = mpsc::channel();
             if cmd_tx.send(EngineCmd::Scrape { reply: reply_tx }).is_err() {
-                return http::write_json(&mut writer, 503, &err_json("gateway is shutting down"));
+                return http::write_json_with(
+                    &mut writer,
+                    503,
+                    &[("Retry-After", &retry_after)],
+                    &err_json("gateway is shutting down"),
+                );
             }
             match reply_rx.recv_timeout(Duration::from_secs(10)) {
                 Ok(text) => {
                     http::write_response(&mut writer, 200, "text/plain; version=0.0.4", text.as_bytes())
                 }
-                Err(_) => http::write_json(&mut writer, 503, &err_json("metrics unavailable")),
+                Err(_) => http::write_json_with(
+                    &mut writer,
+                    503,
+                    &[("Retry-After", &retry_after)],
+                    &err_json("metrics unavailable"),
+                ),
             }
         }
         ("POST", "/v1/generate") => handle_generate(&req, writer, cmd_tx, ids, &tokenizer, cfg),
@@ -586,6 +1007,10 @@ struct GenerateParams {
     tenant: usize,
     shared_tokens: usize,
     max_new_tokens: usize,
+    /// Wall-clock budget for the whole request; absent/0 = none. Enforced
+    /// in the stepper loop: expiry releases residency and sends the
+    /// terminal `timeout` SSE event.
+    deadline_ms: Option<u64>,
 }
 
 fn parse_generate(
@@ -614,12 +1039,17 @@ fn parse_generate(
     let num = |key: &str, default: usize| {
         j.get(key).and_then(|v| v.as_f64()).map(|f| f.max(0.0) as usize).unwrap_or(default)
     };
+    let deadline_ms = match num("deadline_ms", 0) {
+        0 => None,
+        ms => Some(ms as u64),
+    };
     Ok(GenerateParams {
         shared_tokens: num("shared_tokens", 0).min(tokens.len()),
         tenant: num("tenant", 0),
         // `.max(1)` on the cap guards a `--max-new-tokens-cap 0` misconfig:
         // clamp(1, 0) would panic the handler thread.
         max_new_tokens: num("max_new_tokens", 16).clamp(1, cfg.max_new_tokens_cap.max(1)),
+        deadline_ms,
         tokens,
     })
 }
@@ -664,15 +1094,23 @@ fn handle_generate(
         shared_tokens: params.shared_tokens,
         max_new_tokens: params.max_new_tokens,
     };
+    let deadline = params.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+    let retry_after = cfg.retry_after_secs.to_string();
     let (ev_tx, ev_rx) = mpsc::channel();
-    if cmd_tx.send(EngineCmd::Submit { request, events: ev_tx }).is_err() {
-        return http::write_json(&mut writer, 503, &err_json("gateway is shutting down"));
+    if cmd_tx.send(EngineCmd::Submit { request, events: ev_tx, deadline }).is_err() {
+        return http::write_json_with(
+            &mut writer,
+            503,
+            &[("Retry-After", &retry_after)],
+            &err_json("gateway is shutting down"),
+        );
     }
-    // The first event decides the HTTP status: Rejected -> 429/503 before
-    // any SSE bytes; anything else starts the stream. A queued request may
-    // legitimately wait here until a batch slot frees up, so poll the
-    // socket for liveness while waiting — a client that gave up while
-    // queued must not hold its queue slot (or later burn prefill work).
+    // The first event decides the HTTP status: Rejected -> 429/503, Error
+    // -> 500, Timeout -> 504 before any SSE bytes; a Token starts the
+    // stream. A queued request may legitimately wait here until a batch
+    // slot frees up, so poll the socket for liveness while waiting — a
+    // client that gave up while queued must not hold its queue slot (or
+    // later burn prefill work).
     let first = loop {
         match ev_rx.recv_timeout(Duration::from_millis(250)) {
             Ok(ev) => break ev,
@@ -687,13 +1125,29 @@ fn handle_generate(
             }
         }
     };
-    if let TokenEvent::Rejected { queued, draining } = first {
-        if draining {
-            return http::write_json(&mut writer, 503, &err_json("gateway is shutting down"));
+    match &first {
+        TokenEvent::Rejected { queued, draining } => {
+            if *draining {
+                return http::write_json_with(
+                    &mut writer,
+                    503,
+                    &[("Retry-After", &retry_after)],
+                    &err_json("gateway is shutting down"),
+                );
+            }
+            let mut j = err_json("admission queue full");
+            j.set("queued", *queued);
+            return http::write_json_with(&mut writer, 429, &[("Retry-After", &retry_after)], &j);
         }
-        let mut j = err_json("admission queue full");
-        j.set("queued", queued);
-        return http::write_json(&mut writer, 429, &j);
+        // Failures before any token: a plain HTTP error beats an SSE
+        // stream whose first event is terminal.
+        TokenEvent::Error { message } => {
+            return http::write_json(&mut writer, 500, &err_json(message));
+        }
+        TokenEvent::Timeout => {
+            return http::write_json(&mut writer, 504, &err_json("deadline exceeded"));
+        }
+        TokenEvent::Token { .. } | TokenEvent::Done { .. } => {}
     }
     http::start_sse(&mut writer)?;
     let mut pending = Some(first);
@@ -702,7 +1156,15 @@ fn handle_generate(
             Some(ev) => ev,
             None => match ev_rx.recv() {
                 Ok(ev) => ev,
-                Err(_) => break, // stepper went away mid-stream
+                Err(_) => {
+                    // Stepper went away mid-stream: still deliver a
+                    // terminal event before closing (no silent EOF).
+                    let _ = http::write_sse_event(
+                        &mut writer,
+                        &terminal_error_json(id, "engine unavailable").to_string(),
+                    );
+                    break;
+                }
             },
         };
         match event {
@@ -722,10 +1184,29 @@ fn handle_generate(
                 let _ = http::write_sse_event(&mut writer, &j.to_string());
                 break;
             }
+            TokenEvent::Error { message } => {
+                let _ = http::write_sse_event(
+                    &mut writer,
+                    &terminal_error_json(id, &message).to_string(),
+                );
+                break;
+            }
+            TokenEvent::Timeout => {
+                let mut j = Json::obj();
+                j.set("timeout", true).set("id", id);
+                let _ = http::write_sse_event(&mut writer, &j.to_string());
+                break;
+            }
             TokenEvent::Rejected { .. } => break, // unreachable after admission
         }
     }
     Ok(())
+}
+
+fn terminal_error_json(id: u64, message: &str) -> Json {
+    let mut j = Json::obj();
+    j.set("error", message).set("id", id);
+    j
 }
 
 #[cfg(test)]
@@ -776,6 +1257,7 @@ mod tests {
                     assert_eq!(completion_tokens, 3);
                     break;
                 }
+                other => panic!("unexpected terminal event: {other:?}"),
             }
         }
         assert_eq!(tokens, 3);

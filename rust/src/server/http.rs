@@ -91,6 +91,7 @@ fn reason(status: u16) -> &'static str {
         429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Unknown",
     }
 }
@@ -102,14 +103,30 @@ pub fn write_response<W: Write>(
     content_type: &str,
     body: &[u8],
 ) -> std::io::Result<()> {
+    write_response_with(w, status, content_type, &[], body)
+}
+
+/// Like [`write_response`], with extra headers (name, value) — the gateway
+/// uses this for `Retry-After` on backpressure and degraded-health replies.
+pub fn write_response_with<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+) -> std::io::Result<()> {
     write!(
         w,
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n",
         status,
         reason(status),
         content_type,
         body.len()
     )?;
+    for (name, value) in extra_headers {
+        write!(w, "{name}: {value}\r\n")?;
+    }
+    write!(w, "\r\n")?;
     w.write_all(body)?;
     w.flush()
 }
@@ -121,6 +138,16 @@ pub fn write_json<W: Write>(
     json: &crate::util::json::Json,
 ) -> std::io::Result<()> {
     write_response(w, status, "application/json", json.to_string().as_bytes())
+}
+
+/// JSON response with extra headers (`Retry-After` et al.).
+pub fn write_json_with<W: Write>(
+    w: &mut W,
+    status: u16,
+    extra_headers: &[(&str, &str)],
+    json: &crate::util::json::Json,
+) -> std::io::Result<()> {
+    write_response_with(w, status, "application/json", extra_headers, json.to_string().as_bytes())
 }
 
 /// Start a Server-Sent-Events response: headers only, no Content-Length —
@@ -216,6 +243,17 @@ mod tests {
         assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
         assert!(text.contains("Content-Length: 16\r\n"));
         assert!(text.ends_with("{\"error\":\"full\"}"));
+    }
+
+    #[test]
+    fn extra_headers_land_before_the_body() {
+        let mut buf = Vec::new();
+        write_response_with(&mut buf, 503, "application/json", &[("Retry-After", "2")], b"{}")
+            .unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
+        assert!(text.contains("Retry-After: 2\r\n"));
+        assert!(text.ends_with("\r\n\r\n{}"));
     }
 
     #[test]

@@ -22,9 +22,11 @@ pub mod gateway;
 pub mod http;
 
 pub use bench::{
-    render_comparison, render_policy_comparison, run_bench, run_mixed_bench,
-    run_policy_comparison, run_prefill_comparison, BenchConfig, BenchReport, ComparisonConfig,
-    MixedBenchConfig, MixedReport, PolicyComparisonConfig,
+    render_comparison, render_policy_comparison, run_bench, run_chaos_bench, run_mixed_bench,
+    run_policy_comparison, run_prefill_comparison, BenchConfig, BenchReport, ChaosBenchConfig,
+    ChaosReport, ComparisonConfig, MixedBenchConfig, MixedReport, PolicyComparisonConfig,
 };
-pub use client::{gauge_value, labeled_gauge_value, GenerateStream, StreamEvent};
+pub use client::{
+    gauge_value, generate_with_retry, labeled_gauge_value, GenerateStream, Response, StreamEvent,
+};
 pub use gateway::{Gateway, GatewayConfig, TokenEvent};

@@ -1,0 +1,411 @@
+//! Deterministic failpoint injection (tikv `fail-rs` idiom, rebuilt on the
+//! offline crate set).
+//!
+//! Named sites are compiled into serving hot paths — runner prefill/decode
+//! calls, slab allocation, the stepper loop — and evaluate to *nothing* until
+//! armed. The disarmed fast path is a single relaxed atomic load of a global
+//! armed-site counter, so shipping the sites costs no measurable overhead;
+//! this invariant is what lets the chaos CI leg assert the full e2e suite
+//! passes with failpoints compiled in but disarmed.
+//!
+//! # Spec grammar
+//!
+//! ```text
+//! spec   := [prob%] [count*] action [(arg)] [@skip]
+//! action := off | panic | err | sleep
+//! ```
+//!
+//! - `prob%`  — fire with the given probability per eligible evaluation,
+//!   drawn from a per-site PRNG seeded by `FAILPOINT_SEED` (deterministic
+//!   replay: same seed + same evaluation order = same firings).
+//! - `count*` — fire at most `count` times, then the site self-disarms.
+//! - `@skip`  — ignore the first `skip` evaluations ("fire on the Nth hit"
+//!   is spelled `1*action@N-1`).
+//! - `err(msg)` returns the message to the caller (mapped to an
+//!   `anyhow::Error` at the site); `panic(msg)`/`panic` unwinds;
+//!   `sleep(ms)` injects latency; `off` parks the site.
+//!
+//! Sites are armed programmatically via [`configure`], from a CLI flag via
+//! [`configure_list`] (`--fail name=spec,name=spec`), or from the
+//! `FAILPOINTS` environment variable via [`arm_from_env`].
+//!
+//! Failure attribution: sites evaluated on behalf of one sequence use
+//! [`fire_tagged`] with a `seq:<id>` tag; the injected panic/error message
+//! then carries `[seq:<id>]`, which the gateway supervisor parses back out
+//! with [`seq_attribution`] to quarantine only the implicated request.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+use crate::util::rng::Pcg64;
+
+/// What an armed site does when it fires.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Action {
+    Off,
+    /// Unwind with a descriptive payload.
+    Panic(String),
+    /// Return an error message for the site to surface as `anyhow::Error`.
+    Err(String),
+    /// Inject latency (milliseconds).
+    Sleep(u64),
+}
+
+#[derive(Debug)]
+struct Site {
+    action: Action,
+    /// Fire with this probability (percent); `None` = always.
+    percent: Option<u32>,
+    /// Fire at most this many times, then self-disarm; `None` = unlimited.
+    remaining: Option<u64>,
+    /// Ignore this many leading evaluations.
+    skip: u64,
+    /// Total evaluations since configuration.
+    hits: u64,
+    /// Total firings since configuration.
+    fired: u64,
+    rng: Pcg64,
+}
+
+impl Site {
+    fn active(&self) -> bool {
+        self.action != Action::Off && self.remaining != Some(0)
+    }
+}
+
+/// Number of currently-active sites. Zero means every `fire` call returns
+/// immediately after one relaxed load — the disarmed no-op invariant.
+static ARMED: AtomicUsize = AtomicUsize::new(0);
+
+fn registry() -> MutexGuard<'static, HashMap<String, Site>> {
+    static REG: OnceLock<Mutex<HashMap<String, Site>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+        .lock()
+        // A panic action unwinding through a caller can poison this lock;
+        // the registry is always left consistent, so recover the value.
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn recount(reg: &HashMap<String, Site>) {
+    let n = reg.values().filter(|s| s.active()).count();
+    ARMED.store(n, Ordering::SeqCst);
+}
+
+/// Cheap check used by call sites to skip tag formatting when disarmed.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed) != 0
+}
+
+fn site_seed(name: &str) -> u64 {
+    // FNV-1a so each site gets a distinct deterministic PRNG stream.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn base_seed() -> u64 {
+    std::env::var("FAILPOINT_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xfa11)
+}
+
+fn parse_spec(name: &str, spec: &str) -> Result<Site, String> {
+    let mut rest = spec.trim();
+    let mut skip = 0u64;
+    if let Some((head, tail)) = rest.rsplit_once('@') {
+        // Only treat `@N` as a skip suffix when N parses; `@` cannot occur
+        // inside action args otherwise.
+        if let Ok(n) = tail.trim().parse::<u64>() {
+            skip = n;
+            rest = head.trim();
+        }
+    }
+    let mut percent = None;
+    if let Some((p, tail)) = rest.split_once('%') {
+        let p: u32 = p.trim().parse().map_err(|_| format!("{name}: bad probability {p:?}"))?;
+        if p > 100 {
+            return Err(format!("{name}: probability {p} > 100"));
+        }
+        percent = Some(p);
+        rest = tail.trim();
+    }
+    let mut remaining = None;
+    if let Some((c, tail)) = rest.split_once('*') {
+        let c: u64 = c.trim().parse().map_err(|_| format!("{name}: bad count {c:?}"))?;
+        remaining = Some(c);
+        rest = tail.trim();
+    }
+    let (verb, arg) = match rest.split_once('(') {
+        Some((v, a)) => {
+            let a = a.strip_suffix(')').ok_or_else(|| format!("{name}: unclosed arg in {rest:?}"))?;
+            (v.trim(), Some(a.trim().to_string()))
+        }
+        None => (rest, None),
+    };
+    let action = match verb {
+        "off" => Action::Off,
+        "panic" => Action::Panic(arg.unwrap_or_else(|| "injected panic".to_string())),
+        "err" => Action::Err(arg.unwrap_or_else(|| "injected error".to_string())),
+        "sleep" => {
+            let ms = arg.ok_or_else(|| format!("{name}: sleep needs (ms)"))?;
+            Action::Sleep(ms.parse().map_err(|_| format!("{name}: bad sleep ms {ms:?}"))?)
+        }
+        other => return Err(format!("{name}: unknown action {other:?}")),
+    };
+    Ok(Site {
+        action,
+        percent,
+        remaining,
+        skip,
+        hits: 0,
+        fired: 0,
+        rng: Pcg64::new(base_seed(), site_seed(name)),
+    })
+}
+
+/// Arm (or re-arm) one site. Spec grammar is documented at module level.
+pub fn configure(name: &str, spec: &str) -> Result<(), String> {
+    let site = parse_spec(name, spec)?;
+    let mut reg = registry();
+    reg.insert(name.to_string(), site);
+    recount(&reg);
+    Ok(())
+}
+
+/// Arm a comma/semicolon-separated list: `name=spec,name=spec`.
+/// Returns how many sites were configured.
+pub fn configure_list(list: &str) -> Result<usize, String> {
+    let mut n = 0;
+    for entry in list.split([',', ';']) {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let (name, spec) =
+            entry.split_once('=').ok_or_else(|| format!("bad failpoint entry {entry:?} (want name=spec)"))?;
+        configure(name.trim(), spec)?;
+        n += 1;
+    }
+    Ok(n)
+}
+
+/// Arm sites from the `FAILPOINTS` environment variable, if set.
+/// Returns how many sites were configured (0 when unset — never disarms).
+pub fn arm_from_env() -> usize {
+    match std::env::var("FAILPOINTS") {
+        Ok(list) if !list.trim().is_empty() => match configure_list(&list) {
+            Ok(n) => n,
+            Err(e) => {
+                log::warn!("FAILPOINTS ignored: {e}");
+                0
+            }
+        },
+        _ => 0,
+    }
+}
+
+/// Park one site (keeps its counters readable until re-configured).
+pub fn disarm(name: &str) {
+    let mut reg = registry();
+    if let Some(site) = reg.get_mut(name) {
+        site.action = Action::Off;
+    }
+    recount(&reg);
+}
+
+/// Remove every site. Tests use this between scenarios.
+pub fn disarm_all() {
+    let mut reg = registry();
+    reg.clear();
+    recount(&reg);
+}
+
+/// Total evaluations of a site since it was configured (0 if unknown).
+pub fn hits(name: &str) -> u64 {
+    registry().get(name).map(|s| s.hits).unwrap_or(0)
+}
+
+/// Total firings of a site since it was configured (0 if unknown).
+pub fn fired(name: &str) -> u64 {
+    registry().get(name).map(|s| s.fired).unwrap_or(0)
+}
+
+/// Evaluate a site. Disarmed: returns `None` after one relaxed atomic load.
+/// Armed: `sleep` blocks then returns `None`; `panic` unwinds; `err` returns
+/// `Some(message)` for the caller to surface as an error.
+pub fn fire(name: &str) -> Option<String> {
+    if !armed() {
+        return None;
+    }
+    eval(name, None)
+}
+
+/// Like [`fire`], but injected panic/error messages carry `[{tag}]` so the
+/// supervisor can attribute the failure (tag convention: `seq:<id>`).
+pub fn fire_tagged(name: &str, tag: &str) -> Option<String> {
+    if !armed() {
+        return None;
+    }
+    eval(name, Some(tag))
+}
+
+fn eval(name: &str, tag: Option<&str>) -> Option<String> {
+    let mut reg = registry();
+    let site = reg.get_mut(name)?;
+    if !site.active() {
+        return None;
+    }
+    site.hits += 1;
+    if site.hits <= site.skip {
+        return None;
+    }
+    if let Some(p) = site.percent {
+        if site.rng.below(100) >= p as u64 {
+            return None;
+        }
+    }
+    let mut exhausted = false;
+    if let Some(rem) = site.remaining.as_mut() {
+        // `active()` guaranteed rem > 0.
+        *rem -= 1;
+        exhausted = *rem == 0;
+    }
+    site.fired += 1;
+    let action = site.action.clone();
+    if exhausted {
+        recount(&reg);
+    }
+    let suffix = tag.map(|t| format!(" [{t}]")).unwrap_or_default();
+    match action {
+        Action::Off => None,
+        Action::Sleep(ms) => {
+            drop(reg);
+            std::thread::sleep(Duration::from_millis(ms));
+            None
+        }
+        Action::Err(msg) => Some(format!("failpoint {name}: {msg}{suffix}")),
+        Action::Panic(msg) => {
+            // Drop the guard first so the unwind does not poison the registry.
+            drop(reg);
+            panic!("failpoint {name}: {msg}{suffix}");
+        }
+    }
+}
+
+/// Parse a `[seq:<id>]` attribution out of a panic payload or error message.
+pub fn seq_attribution(msg: &str) -> Option<u64> {
+    let start = msg.find("[seq:")? + "[seq:".len();
+    let rest = &msg[start..];
+    let end = rest.find(']')?;
+    rest[..end].trim().parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Failpoints are process-global; lib tests in other modules may run
+    // concurrently, so (a) serialize the tests in this module and (b) use
+    // `test.*` site names nothing in production evaluates.
+    fn guard() -> MutexGuard<'static, ()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    struct Reset;
+    impl Drop for Reset {
+        fn drop(&mut self) {
+            disarm_all();
+        }
+    }
+
+    #[test]
+    fn disarmed_is_noop() {
+        let _g = guard();
+        let _r = Reset;
+        disarm_all();
+        assert!(!armed());
+        assert_eq!(fire("test.nothing"), None);
+        assert_eq!(fire_tagged("test.nothing", "seq:1"), None);
+    }
+
+    #[test]
+    fn err_with_count_and_skip() {
+        let _g = guard();
+        let _r = Reset;
+        configure("test.err", "2*err(boom)@1").unwrap();
+        assert!(armed());
+        assert_eq!(fire("test.err"), None); // skipped (hit 1)
+        assert_eq!(fire("test.err"), Some("failpoint test.err: boom".to_string()));
+        assert_eq!(fire_tagged("test.err", "seq:7"), Some("failpoint test.err: boom [seq:7]".to_string()));
+        // Count exhausted: self-disarmed.
+        assert_eq!(fire("test.err"), None);
+        assert!(!armed());
+        assert_eq!(hits("test.err"), 3);
+        assert_eq!(fired("test.err"), 2);
+    }
+
+    #[test]
+    fn panic_action_unwinds_with_tag() {
+        let _g = guard();
+        let _r = Reset;
+        configure("test.panic", "1*panic").unwrap();
+        let out = std::panic::catch_unwind(|| {
+            fire_tagged("test.panic", "seq:42");
+        });
+        let payload = out.unwrap_err();
+        let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("failpoint test.panic"), "payload: {msg}");
+        assert_eq!(seq_attribution(&msg), Some(42));
+    }
+
+    #[test]
+    fn probability_is_seeded_and_deterministic() {
+        let _g = guard();
+        let _r = Reset;
+        let run = || -> Vec<bool> {
+            configure("test.prob", "50%err(x)").unwrap();
+            (0..64).map(|_| fire("test.prob").is_some()).collect()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b);
+        let fired_count = a.iter().filter(|&&f| f).count();
+        assert!(fired_count > 10 && fired_count < 54, "50% of 64 ≈ 32, got {fired_count}");
+    }
+
+    #[test]
+    fn sleep_injects_latency() {
+        let _g = guard();
+        let _r = Reset;
+        configure("test.sleep", "1*sleep(30)").unwrap();
+        let t0 = std::time::Instant::now();
+        assert_eq!(fire("test.sleep"), None);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn list_and_env_grammar() {
+        let _g = guard();
+        let _r = Reset;
+        let n = configure_list("test.a=off; test.b=5%sleep(1), test.c=1*err(z)@2").unwrap();
+        assert_eq!(n, 3);
+        assert!(armed()); // b and c are active even though a is off
+        assert!(configure_list("garbage").is_err());
+        assert!(configure("test.bad", "explode").is_err());
+        assert!(configure("test.bad", "200%err(x)").is_err());
+        assert!(configure("test.bad", "sleep").is_err());
+    }
+
+    #[test]
+    fn attribution_parsing() {
+        assert_eq!(seq_attribution("failpoint engine.prefill: boom [seq:19]"), Some(19));
+        assert_eq!(seq_attribution("prefill slice failed [seq:3]: io"), Some(3));
+        assert_eq!(seq_attribution("no tag here"), None);
+        assert_eq!(seq_attribution("[seq:notanum]"), None);
+    }
+}

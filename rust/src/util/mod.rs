@@ -4,6 +4,7 @@
 pub mod bench;
 pub mod cli;
 pub mod config;
+pub mod failpoint;
 pub mod json;
 pub mod logger;
 pub mod pbt;

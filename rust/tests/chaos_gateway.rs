@@ -1,0 +1,482 @@
+//! Socket-level chaos tests: armed failpoints against a live gateway.
+//!
+//! Each test arms a failpoint profile (process-global state), drives real
+//! TCP clients, and asserts the gateway's degradation ladder from the
+//! outside: transient errors retry, panics quarantine only the implicated
+//! stream, deadlines release residency, the watchdog degrades `/healthz`,
+//! and — above all — the process keeps serving. Because the failpoint
+//! registry is process-global and Rust tests share one process, every test
+//! serializes on [`chaos_guard`] and disarms on every exit path via the
+//! [`Disarm`] drop guard.
+
+use chunk_attention::coordinator::engine::testing::SyntheticRunner;
+use chunk_attention::coordinator::Engine;
+use chunk_attention::server::client::{self, StreamEvent};
+use chunk_attention::server::{gauge_value, labeled_gauge_value, Gateway, GatewayConfig};
+use chunk_attention::util::failpoint;
+use chunk_attention::util::json::Json;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::{mpsc, Mutex, MutexGuard, OnceLock};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Serialize every test in this binary: failpoints are process-global.
+fn chaos_guard() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Disarm every failpoint when the test exits, pass or panic.
+struct Disarm;
+impl Drop for Disarm {
+    fn drop(&mut self) {
+        failpoint::disarm_all();
+    }
+}
+
+/// Hard per-test timeout so a wedged gateway fails fast in CI.
+fn with_watchdog<T: Send + 'static>(
+    secs: u64,
+    name: &str,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> T {
+    let (tx, rx) = mpsc::channel();
+    let worker = thread::spawn(move || {
+        let result = f();
+        let _ = tx.send(());
+        result
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("test {name} exceeded its {secs}s watchdog (hung gateway?)")
+        }
+        Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => match worker.join() {
+            Ok(result) => result,
+            Err(panic) => std::panic::resume_unwind(panic),
+        },
+    }
+}
+
+fn engine(chunk: usize, max_batch: usize) -> Engine<SyntheticRunner> {
+    Engine::new(SyntheticRunner { heads_total: 2, head_dim: 8, vocab: 32000 }, chunk, max_batch)
+}
+
+fn token_body(tokens: &[u32], shared: usize, max_new: usize) -> Json {
+    let mut body = Json::obj();
+    body.set("tokens", Json::Arr(tokens.iter().map(|&t| Json::Num(t as f64)).collect()));
+    body.set("shared_tokens", shared).set("max_new_tokens", max_new);
+    body
+}
+
+fn scrape(addr: &str) -> String {
+    let resp = client::get(addr, "/metrics", Duration::from_secs(10)).expect("scrape /metrics");
+    assert_eq!(resp.status, 200);
+    resp.body
+}
+
+/// How one streamed request ended, as the client saw it.
+#[derive(Debug, PartialEq)]
+enum Outcome {
+    /// Stream completed; carries the tokens in arrival order.
+    Done(Vec<u32>),
+    /// Terminal SSE error, or a pre-stream HTTP 500; carries the message.
+    Failed(String),
+    /// Terminal SSE timeout, or a pre-stream HTTP 504.
+    TimedOut(Vec<u32>),
+    /// The stream ended with no terminal event — a bug this suite exists
+    /// to catch.
+    SilentEof,
+}
+
+/// Issue one request and drive its stream to a terminal outcome.
+fn drive(addr: &str, body: &Json) -> Outcome {
+    let mut stream = client::generate(addr, body, Duration::from_secs(30)).expect("connect");
+    match stream.status() {
+        200 => {}
+        500 => return Outcome::Failed(stream.error_body.clone()),
+        504 => return Outcome::TimedOut(Vec::new()),
+        other => panic!("unexpected HTTP status {other}: {}", stream.error_body),
+    }
+    let mut tokens = Vec::new();
+    loop {
+        match stream.next_event().expect("read SSE event") {
+            Some(StreamEvent::Token { index, token }) => {
+                assert_eq!(index, tokens.len(), "tokens arrive in order");
+                tokens.push(token);
+            }
+            Some(StreamEvent::Done { completion_tokens }) => {
+                assert_eq!(completion_tokens, tokens.len());
+                return Outcome::Done(tokens);
+            }
+            Some(StreamEvent::Error { message }) => return Outcome::Failed(message),
+            Some(StreamEvent::Timeout) => return Outcome::TimedOut(tokens),
+            None => return Outcome::SilentEof,
+        }
+    }
+}
+
+/// Poll `/metrics` until `pred` holds or the timeout expires; returns the
+/// last scraped document either way.
+fn poll_metrics(addr: &str, timeout: Duration, pred: impl Fn(&str) -> bool) -> String {
+    let t0 = Instant::now();
+    loop {
+        let doc = scrape(addr);
+        if pred(&doc) || t0.elapsed() > timeout {
+            return doc;
+        }
+        thread::sleep(Duration::from_millis(25));
+    }
+}
+
+#[test]
+fn disarmed_failpoints_are_a_noop() {
+    let _guard = chaos_guard();
+    let _disarm = Disarm;
+    failpoint::disarm_all();
+    with_watchdog(30, "disarmed_noop", || {
+        let gw = Gateway::start(engine(16, 4), GatewayConfig::default()).unwrap();
+        let addr = gw.addr().to_string();
+        match drive(&addr, &token_body(&[1, 2, 3, 4], 0, 8)) {
+            Outcome::Done(tokens) => assert_eq!(tokens.len(), 8),
+            other => panic!("clean request must complete, got {other:?}"),
+        }
+        let doc = scrape(&addr);
+        for counter in [
+            "engine_panics_total",
+            "engine_rebuilds_total",
+            "requests_timed_out_total",
+            "step_retries_total",
+            "watchdog_stalls_total",
+        ] {
+            assert_eq!(gauge_value(&doc, counter), Some(0.0), "{counter} must be 0 when disarmed");
+        }
+        assert_eq!(gauge_value(&doc, "tree_invariants_ok"), Some(1.0));
+        gw.shutdown().unwrap();
+    });
+}
+
+#[test]
+fn transient_step_error_is_retried_and_the_request_completes() {
+    let _guard = chaos_guard();
+    let _disarm = Disarm;
+    with_watchdog(30, "transient_retry", || {
+        let gw = Gateway::start(engine(16, 4), GatewayConfig::default()).unwrap();
+        let addr = gw.addr().to_string();
+        failpoint::configure("engine.prefill", "1*err(transient glitch)").unwrap();
+        match drive(&addr, &token_body(&[10, 20, 30], 0, 6)) {
+            Outcome::Done(tokens) => assert_eq!(tokens.len(), 6),
+            other => panic!("one transient error must be absorbed by retry, got {other:?}"),
+        }
+        let doc = scrape(&addr);
+        assert!(gauge_value(&doc, "step_retries_total") >= Some(1.0), "retry counter advanced");
+        assert_eq!(gauge_value(&doc, "engine_panics_total"), Some(0.0));
+        assert_eq!(labeled_gauge_value(&doc, "requests_failed_total", "reason", "error"), Some(0.0));
+        gw.shutdown().unwrap();
+    });
+}
+
+#[test]
+fn persistent_step_errors_fail_only_the_victim_after_retries() {
+    let _guard = chaos_guard();
+    let _disarm = Disarm;
+    with_watchdog(30, "persistent_error", || {
+        let gw = Gateway::start(engine(16, 4), GatewayConfig::default()).unwrap();
+        let addr = gw.addr().to_string();
+        // step_retry_max defaults to 3: the 4th consecutive failure
+        // exhausts the budget and quarantines the attributed sequence.
+        failpoint::configure("engine.prefill", "4*err(persistent failure)").unwrap();
+        match drive(&addr, &token_body(&[40, 50, 60], 0, 6)) {
+            Outcome::Failed(msg) => {
+                assert!(msg.contains("failpoint"), "error carries the injected cause: {msg}")
+            }
+            other => panic!("persistent errors must fail the request, got {other:?}"),
+        }
+        let doc = scrape(&addr);
+        assert_eq!(
+            labeled_gauge_value(&doc, "requests_failed_total", "reason", "error"),
+            Some(1.0)
+        );
+        assert_eq!(gauge_value(&doc, "tree_invariants_ok"), Some(1.0));
+        // The site is exhausted; the gateway keeps serving.
+        match drive(&addr, &token_body(&[40, 50, 60], 0, 6)) {
+            Outcome::Done(tokens) => assert_eq!(tokens.len(), 6),
+            other => panic!("gateway must keep serving after quarantine, got {other:?}"),
+        }
+        gw.shutdown().unwrap();
+    });
+}
+
+#[test]
+fn stepper_panic_mid_decode_quarantines_only_the_victim() {
+    let _guard = chaos_guard();
+    let _disarm = Disarm;
+    with_watchdog(60, "panic_quarantine", || {
+        let cfg = GatewayConfig {
+            decode_interval: Duration::from_micros(500),
+            ..GatewayConfig::default()
+        };
+        let gw = Gateway::start(engine(64, 8), cfg).unwrap();
+        let addr = gw.addr().to_string();
+        let system_prompt: Vec<u32> = (0..1024).collect();
+
+        // Panic exactly once, a few decode-append evaluations in, so the
+        // blast hits one sequence mid-stream while others share its prefix.
+        failpoint::configure("engine.decode.append", "1*panic(injected decode panic)@10")
+            .unwrap();
+
+        let mut clients = Vec::new();
+        for c in 0..4u32 {
+            let addr = addr.clone();
+            let mut prompt = system_prompt.clone();
+            prompt.extend([5000 + c, 6000 + c]);
+            clients.push(thread::spawn(move || {
+                (prompt.clone(), drive(&addr, &token_body(&prompt, 1024, 8)))
+            }));
+        }
+        let outcomes: Vec<(Vec<u32>, Outcome)> =
+            clients.into_iter().map(|c| c.join().unwrap()).collect();
+
+        let mut survivors = Vec::new();
+        let mut victims = 0usize;
+        for (prompt, outcome) in outcomes {
+            match outcome {
+                Outcome::Done(tokens) => {
+                    assert_eq!(tokens.len(), 8, "survivors stream their full completion");
+                    survivors.push((prompt, tokens));
+                }
+                Outcome::Failed(msg) => {
+                    assert!(
+                        msg.contains("failpoint") || msg.contains("panic"),
+                        "victim's terminal error names the injected cause: {msg}"
+                    );
+                    victims += 1;
+                }
+                other => panic!("no stream may end without a terminal event: {other:?}"),
+            }
+        }
+        assert_eq!(victims, 1, "exactly the implicated sequence is quarantined");
+        assert_eq!(survivors.len(), 3, "every other shared-prefix stream completes");
+
+        // Correctness, not just liveness: the synthetic runner is a pure
+        // function of (token, position), so a clean replay of a survivor's
+        // prompt must reproduce its exact tokens.
+        let (prompt, tokens) = &survivors[0];
+        match drive(&addr, &token_body(prompt, 1024, 8)) {
+            Outcome::Done(replay) => {
+                assert_eq!(&replay, tokens, "survivor tokens match a clean replay")
+            }
+            other => panic!("replay must complete, got {other:?}"),
+        }
+
+        let health = client::get(&addr, "/healthz", Duration::from_secs(5)).unwrap();
+        assert_eq!(health.status, 200, "the process never exits: {}", health.body);
+        let doc = scrape(&addr);
+        assert_eq!(gauge_value(&doc, "engine_panics_total"), Some(1.0));
+        assert_eq!(gauge_value(&doc, "engine_rebuilds_total"), Some(0.0));
+        assert_eq!(gauge_value(&doc, "tree_invariants_ok"), Some(1.0));
+        assert_eq!(
+            labeled_gauge_value(&doc, "requests_failed_total", "reason", "panic"),
+            Some(1.0)
+        );
+        gw.shutdown().unwrap();
+    });
+}
+
+#[test]
+fn deadline_is_enforced_and_residency_released() {
+    let _guard = chaos_guard();
+    let _disarm = Disarm;
+    failpoint::disarm_all();
+    with_watchdog(30, "deadline", || {
+        let cfg = GatewayConfig {
+            decode_interval: Duration::from_millis(5),
+            ..GatewayConfig::default()
+        };
+        let gw = Gateway::start(engine(16, 4), cfg).unwrap();
+        let addr = gw.addr().to_string();
+        let baseline = gauge_value(&scrape(&addr), "kv_bytes_in_use").unwrap();
+
+        // 500-token budget at 5ms/step cannot finish inside 150ms.
+        let mut body = token_body(&[7, 8, 9, 10], 0, 500);
+        body.set("deadline_ms", 150u64);
+        match drive(&addr, &body) {
+            Outcome::TimedOut(tokens) => {
+                assert!(
+                    tokens.len() < 500,
+                    "deadline must interrupt the stream, not let it finish"
+                );
+            }
+            other => panic!("expected a terminal timeout, got {other:?}"),
+        }
+        let doc = poll_metrics(&addr, Duration::from_secs(5), |doc| {
+            gauge_value(doc, "kv_bytes_in_use") == Some(baseline)
+        });
+        assert_eq!(
+            gauge_value(&doc, "kv_bytes_in_use"),
+            Some(baseline),
+            "timed-out request's private chunks return to the pool"
+        );
+        assert_eq!(gauge_value(&doc, "requests_timed_out_total"), Some(1.0));
+        assert_eq!(gauge_value(&doc, "tree_invariants_ok"), Some(1.0));
+        gw.shutdown().unwrap();
+    });
+}
+
+#[test]
+fn client_disconnect_races_injected_prefill_error_without_leaking_residency() {
+    let _guard = chaos_guard();
+    let _disarm = Disarm;
+    with_watchdog(60, "disconnect_race", || {
+        // Chunked prefill stretches a 512-token prompt over ~16 paced
+        // steps (~160ms) so both the disconnect (at ~100ms) and the
+        // injected runner error (slice 5) land mid-prefill.
+        let cfg = GatewayConfig {
+            prefill_chunk_tokens: 32,
+            step_token_budget: 48,
+            decode_interval: Duration::from_millis(10),
+            ..GatewayConfig::default()
+        };
+        let gw = Gateway::start(engine(32, 4), cfg).unwrap();
+        let addr = gw.addr().to_string();
+        let baseline = gauge_value(&scrape(&addr), "kv_bytes_in_use").unwrap();
+        failpoint::configure("engine.prefill", "1*err(mid-prefill glitch)@4").unwrap();
+
+        // Hand-rolled request so the socket can be dropped before the
+        // response head exists (the prompt is still prefilling).
+        let prompt: Vec<u32> = (0..512).collect();
+        let payload = token_body(&prompt, 0, 2000).to_string();
+        {
+            let mut sock = TcpStream::connect(&addr).unwrap();
+            write!(
+                sock,
+                "POST /v1/generate HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+                 Content-Length: {}\r\nConnection: close\r\n\r\n{payload}",
+                payload.len()
+            )
+            .unwrap();
+            sock.flush().unwrap();
+            thread::sleep(Duration::from_millis(100));
+            // Drop: the handler's liveness probe sees the FIN and cancels.
+        }
+
+        let doc = poll_metrics(&addr, Duration::from_secs(10), |doc| {
+            gauge_value(doc, "kv_bytes_in_use") == Some(baseline)
+                && gauge_value(doc, "live_streams") == Some(0.0)
+        });
+        assert_eq!(
+            gauge_value(&doc, "kv_bytes_in_use"),
+            Some(baseline),
+            "abandoned mid-prefill request must not leak residency"
+        );
+        assert_eq!(gauge_value(&doc, "tree_invariants_ok"), Some(1.0));
+        // The gateway still serves after the race.
+        match drive(&addr, &token_body(&[1, 2, 3], 0, 4)) {
+            Outcome::Done(tokens) => assert_eq!(tokens.len(), 4),
+            other => panic!("gateway must keep serving, got {other:?}"),
+        }
+        gw.shutdown().unwrap();
+    });
+}
+
+#[test]
+fn watchdog_degrades_healthz_during_stalls_and_recovers() {
+    let _guard = chaos_guard();
+    let _disarm = Disarm;
+    with_watchdog(60, "watchdog", || {
+        let cfg = GatewayConfig {
+            watchdog_stall: Duration::from_millis(100),
+            decode_interval: Duration::from_millis(1),
+            ..GatewayConfig::default()
+        };
+        let gw = Gateway::start(engine(16, 4), cfg).unwrap();
+        let addr = gw.addr().to_string();
+        // Each armed step blocks 300ms — three stall windows well past the
+        // 100ms watchdog bound, then the site exhausts and steps run free.
+        failpoint::configure("engine.step", "3*sleep(300)").unwrap();
+
+        // Keep the stepper busy while probing health from outside.
+        let bg_addr = addr.clone();
+        let bg = thread::spawn(move || drive(&bg_addr, &token_body(&[1, 2, 3], 0, 400)));
+
+        let t0 = Instant::now();
+        let mut saw_degraded = false;
+        while t0.elapsed() < Duration::from_secs(10) {
+            if let Ok(resp) = client::get(&addr, "/healthz", Duration::from_secs(2)) {
+                if resp.status == 503 {
+                    assert!(resp.body.contains("degraded"), "{}", resp.body);
+                    assert!(resp.retry_after.is_some(), "degraded health advertises Retry-After");
+                    saw_degraded = true;
+                    break;
+                }
+            }
+            thread::sleep(Duration::from_millis(10));
+        }
+        assert!(saw_degraded, "watchdog must flip /healthz to 503 during the stall");
+
+        // After the sleeps exhaust, the stepper beats again and health
+        // recovers without a restart.
+        let t0 = Instant::now();
+        let mut recovered = false;
+        while t0.elapsed() < Duration::from_secs(10) {
+            if let Ok(resp) = client::get(&addr, "/healthz", Duration::from_secs(2)) {
+                if resp.status == 200 {
+                    recovered = true;
+                    break;
+                }
+            }
+            thread::sleep(Duration::from_millis(10));
+        }
+        assert!(recovered, "healthz must recover once the stall clears");
+        match bg.join().unwrap() {
+            Outcome::Done(tokens) => assert_eq!(tokens.len(), 400),
+            other => panic!("the stalled request still completes, got {other:?}"),
+        }
+        let doc = scrape(&addr);
+        assert!(gauge_value(&doc, "watchdog_stalls_total") >= Some(1.0));
+        assert_eq!(gauge_value(&doc, "engine_panics_total"), Some(0.0));
+        gw.shutdown().unwrap();
+    });
+}
+
+#[test]
+fn every_injected_failure_path_ends_with_a_terminal_event() {
+    let _guard = chaos_guard();
+    let _disarm = Disarm;
+    with_watchdog(90, "terminal_events", || {
+        // (profile to arm, request deadline) — one gateway per scenario so
+        // each failure lands on a fresh engine.
+        let scenarios: [(&str, Option<u64>); 3] = [
+            ("engine.decode.append=1*panic(boom)@2", None),
+            ("engine.prefill=4*err(persistent failure)", None),
+            ("", Some(100)),
+        ];
+        for (profile, deadline_ms) in scenarios {
+            failpoint::disarm_all();
+            let cfg = GatewayConfig {
+                decode_interval: Duration::from_millis(2),
+                ..GatewayConfig::default()
+            };
+            let gw = Gateway::start(engine(16, 4), cfg).unwrap();
+            let addr = gw.addr().to_string();
+            failpoint::configure_list(profile).unwrap();
+            let mut body = token_body(&[11, 22, 33], 0, 300);
+            if let Some(ms) = deadline_ms {
+                body.set("deadline_ms", ms);
+            }
+            let outcome = drive(&addr, &body);
+            assert!(
+                outcome != Outcome::SilentEof,
+                "stream under profile {profile:?} ended without a terminal event"
+            );
+            match (deadline_ms, &outcome) {
+                (Some(_), Outcome::TimedOut(_)) => {}
+                (Some(_), other) => panic!("deadline scenario must time out, got {other:?}"),
+                (None, Outcome::Failed(_)) => {}
+                (None, other) => panic!("failure profile {profile:?} must fail, got {other:?}"),
+            }
+            failpoint::disarm_all();
+            gw.shutdown().unwrap();
+        }
+    });
+}

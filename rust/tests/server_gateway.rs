@@ -119,6 +119,7 @@ fn concurrent_clients_share_a_1024_token_prefix_and_stream_incrementally() {
                             done_at = Some(t0.elapsed());
                             break;
                         }
+                        other => panic!("unexpected terminal event: {other:?}"),
                     }
                 }
                 assert_eq!(tokens, 8, "all completion tokens streamed");
