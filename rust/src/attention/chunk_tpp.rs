@@ -53,6 +53,7 @@ use super::online::{attend_block, attn_reduce, OnlineState};
 use super::Queries;
 use crate::kvcache::{Bf16, CtxEntry, KvDtype, KvElem, PrefixTree, TreeContext, F16};
 use crate::util::threadpool::ThreadPool;
+use std::time::Instant;
 
 /// Reusable scratch for the TPP kernels: no allocation on the decode path.
 pub struct TppScratch {
@@ -369,6 +370,12 @@ fn tpp_attention_2d_impl<E: KvElem>(
     let o_addr = part_o.as_mut_ptr() as usize;
     let out_addr = out.as_mut_ptr() as usize;
 
+    // Phase boundaries are timed on every call (two monotonic reads per
+    // phase) and reported through the thread-local side channel in
+    // `util::trace`; the engine drains them into the per-phase histograms
+    // after each decode. Cost is well inside the bench's run-to-run noise.
+    let t_phase1 = Instant::now();
+
     // Phase 1 — chunk first (Algorithm 1), one task per (head, run): stream
     // each shared chunk's K/V once for all covered rows, writing
     // (O, m, n)^{(C)} partials into the task's disjoint buffer slice.
@@ -417,6 +424,8 @@ fn tpp_attention_2d_impl<E: KvElem>(
             });
         });
     }
+
+    let t_phase2 = Instant::now();
 
     // Phase 2 — sequence first (Algorithm 2), one task per (head, row):
     // merge the run partials covering the row in run-index order (fixed, so
@@ -476,6 +485,11 @@ fn tpp_attention_2d_impl<E: KvElem>(
             }
         }
     });
+
+    crate::util::trace::record_kernel_phases(
+        t_phase2.duration_since(t_phase1).as_micros() as u64,
+        t_phase2.elapsed().as_micros() as u64,
+    );
 }
 
 /// Algorithm 1 + Algorithm 2 verbatim: chunk-first saves `(O, m, n)^{(C)}`

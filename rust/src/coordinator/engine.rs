@@ -27,7 +27,8 @@ use super::planner::{PlanInputs, PlannerConfig, SchedPolicyKind, StepPlan, StepP
 use super::scheduler::{FinishedSeq, PrefillingSeq, Removed, Scheduler};
 use crate::kvcache::tree::common_prefix;
 use crate::kvcache::{KvDtype, KvShape, PrefixRetainer, PrefixTree, SeqId, TreeContext, PIN_ID_BASE};
-use crate::metrics::{MetricsRecorder, RequestRecord};
+use crate::metrics::{MetricsRecorder, RequestRecord, StepTiming};
+use crate::util::trace;
 use crate::workload::Request;
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -146,6 +147,10 @@ pub struct Engine<R: ModelRunner> {
     /// decode batches, grants eviction allowances — one [`StepPlan`] per
     /// engine iteration, all charged to the step token budget.
     planner: StepPlanner,
+    /// Phase breakdown of the most recent [`Engine::step`], measured
+    /// always-on with plain monotonic reads. The gateway stepper reads it
+    /// per step for the `/debug/steps` ring buffer and Chrome-trace spans.
+    last_step_timing: StepTiming,
 }
 
 impl<R: ModelRunner> Engine<R> {
@@ -176,6 +181,7 @@ impl<R: ModelRunner> Engine<R> {
             ctx_cache: None,
             ctx_generation: 0,
             planner: StepPlanner::new(PlannerConfig::default()),
+            last_step_timing: StepTiming::default(),
         }
     }
 
@@ -209,6 +215,18 @@ impl<R: ModelRunner> Engine<R> {
     /// `metrics::render_exposition`).
     pub fn metrics(&self) -> &MetricsRecorder {
         &self.metrics
+    }
+
+    /// Mutable metrics access for external drivers that observe events the
+    /// engine cannot (the gateway records inter-token gaps at the moment
+    /// each token is handed to its stream).
+    pub fn metrics_mut(&mut self) -> &mut MetricsRecorder {
+        &mut self.metrics
+    }
+
+    /// Phase breakdown of the most recent [`Engine::step`].
+    pub fn last_step_timing(&self) -> StepTiming {
+        self.last_step_timing
     }
 
     /// Keep hot shared prefixes resident across idle periods, bounded by a
@@ -452,14 +470,35 @@ impl<R: ModelRunner> Engine<R> {
         if let Some(msg) = crate::util::failpoint::fire("engine.step") {
             return Err(anyhow::anyhow!(msg));
         }
+        // Phase timing is always on (a handful of monotonic reads per
+        // step): the per-phase histograms on /metrics must populate with
+        // tracing disarmed. `trace` only gates the span *event* capture.
+        let step_t0 = Instant::now();
+        let mut timing = StepTiming::default();
+        let slices_before = self.stats.prefill_chunks_total;
+
+        let t = Instant::now();
         let plan = self.plan_step();
+        timing.plan_s = t.elapsed().as_secs_f64();
+        timing.admitted = plan.admit_ids.len();
+        if trace::armed() {
+            for id in &plan.admit_ids {
+                trace::instant("admitted", "request", *id, vec![]);
+            }
+        }
+
+        let t = Instant::now();
         let mut finished_early = self.admit_and_prefill(&plan)?;
+        timing.prefill_s = t.elapsed().as_secs_f64();
+        timing.prefill_slices = (self.stats.prefill_chunks_total - slices_before) as usize;
+
         if self.sched.batch_size() > 0 {
-            finished_early.extend(self.decode_once(&plan)?);
+            finished_early.extend(self.decode_once(&plan, &mut timing)?);
         }
         // Spend the eviction allowance even on decode-less steps, so pins
         // created by a prefill-only iteration still amortize out. With no
         // step budget the grant is unbounded — the historical burst.
+        let t = Instant::now();
         if let Some(retainer) = &mut self.retainer {
             let grant = if self.sched.step_token_budget().is_none() {
                 usize::MAX
@@ -468,6 +507,11 @@ impl<R: ModelRunner> Engine<R> {
             };
             retainer.enforce_budget_amortized(&mut self.tree, grant);
         }
+        timing.evict_s = t.elapsed().as_secs_f64();
+        timing.finished = finished_early.len();
+        timing.total_s = step_t0.elapsed().as_secs_f64();
+        self.metrics.record_step_timing(&timing);
+        self.last_step_timing = timing;
         Ok(finished_early)
     }
 
@@ -565,6 +609,7 @@ impl<R: ModelRunner> Engine<R> {
                         if !pf.deferred {
                             pf.deferred = true;
                             self.stats.prefill_deferrals += 1;
+                            trace::instant("deferred", "request", pf.request.id, vec![]);
                         }
                         i += 1;
                         continue;
@@ -655,6 +700,18 @@ impl<R: ModelRunner> Engine<R> {
                 self.stats.prefill_chunks_total += 1;
                 self.stats.prefill_tokens_computed += take as u64;
                 self.stats.prefill_time_s += t0.elapsed().as_secs_f64();
+                if trace::armed() {
+                    let end_us = trace::now_us();
+                    let dur_us = t0.elapsed().as_micros() as u64;
+                    trace::span(
+                        &format!("prefill_slice[{start}..{}]", start + take),
+                        "request",
+                        id,
+                        end_us.saturating_sub(dur_us),
+                        dur_us,
+                        vec![("tokens", take.to_string()), ("reused", matched.to_string())],
+                    );
+                }
                 if is_final {
                     // Prompt fully resident: the prefix cache is done.
                     self.prefill_kv.remove(&id);
@@ -682,6 +739,7 @@ impl<R: ModelRunner> Engine<R> {
                     }
                     self.stats.prefill_tokens_reused += pf.reused as u64;
                     self.timing.insert(id, (pf.admitted_at, self.now(), pf.reused));
+                    trace::instant("first_token", "request", id, vec![]);
                     let done = pending.remove(i);
                     self.sched.activate(done);
                     // The prefill step emitted the first completion token.
@@ -711,7 +769,11 @@ impl<R: ModelRunner> Engine<R> {
     /// and discarded like pin phantoms, their state does not advance, and
     /// the planner's lag rotation guarantees they decode within
     /// `ceil(batch / decode_take)` steps.
-    fn decode_once(&mut self, plan: &StepPlan) -> anyhow::Result<Vec<FinishedSeq>> {
+    fn decode_once(
+        &mut self,
+        plan: &StepPlan,
+        timing: &mut StepTiming,
+    ) -> anyhow::Result<Vec<FinishedSeq>> {
         // One batched decode step. Pin sequences (prefix retention) are
         // phantom rows: they get dummy queries and their outputs are
         // discarded — they exist only to keep shared chunks referenced.
@@ -757,7 +819,16 @@ impl<R: ModelRunner> Engine<R> {
         if let Some(msg) = crate::util::failpoint::fire("engine.decode") {
             return Err(anyhow::anyhow!(msg));
         }
+        // Clear any kernel-phase residue a previously failed step left on
+        // this thread, then drain what *this* decode's kernel reports.
+        let _ = trace::take_kernel_phases();
+        let t_dec = Instant::now();
         let out = self.runner.decode(&self.tree, ctx, &last_tokens, &positions)?;
+        let decode_call_s = t_dec.elapsed().as_secs_f64();
+        let (chunk_first_us, seq_first_us) = trace::take_kernel_phases();
+        timing.chunk_first_s = chunk_first_us as f64 / 1e6;
+        timing.seq_first_s = seq_first_us as f64 / 1e6;
+        let t_append = Instant::now();
         let mut decoded = 0usize;
         for (i, sid) in ctx.seq_order.iter().enumerate() {
             if plan.decode_skip.contains(&sid.0) {
@@ -788,6 +859,12 @@ impl<R: ModelRunner> Engine<R> {
         self.stats.decoded_tokens += decoded as u64;
         self.stats.decode_time_s += t0.elapsed().as_secs_f64();
         self.metrics.record_decode_step(t0.elapsed().as_secs_f64() * 1e6, decoded);
+        // `append` is the decode time not inside the kernel's two phases:
+        // the runner-call remainder (query build, sampling bookkeeping)
+        // plus the tree append loop above.
+        timing.append_s = (decode_call_s - timing.chunk_first_s - timing.seq_first_s).max(0.0)
+            + t_append.elapsed().as_secs_f64();
+        timing.decode_batch = decoded;
 
         // Retire completed sequences (skipped ones generated nothing).
         let finished = self.sched.step_decode_skipping(&plan.decode_skip, self.now());
@@ -966,6 +1043,95 @@ pub mod testing {
                 out.next_tokens.push(self.next_token(last_tokens[i], positions[i] + 1));
             }
             Ok(out)
+        }
+    }
+
+    /// [`SyntheticRunner`] plus the production attention path: every
+    /// decode step also runs the TPP kernel
+    /// ([`crate::attention::tpp_attention_2d`]) over the live tree with
+    /// deterministic queries. Tokens and K/V rows are the same hashes as
+    /// the plain synthetic runner (completions are identical), but gateway
+    /// runs through this runner execute — and therefore time — both
+    /// kernel phases exactly as a real serving path would, populating the
+    /// `step_phase_seconds{phase="chunk_first"/"seq_first"}` histograms
+    /// and the Chrome-trace kernel spans. Used by the HTTP gateway, the
+    /// bench-http load generator, and the observability e2e suite.
+    pub struct KernelRunner {
+        inner: SyntheticRunner,
+        pool: crate::util::threadpool::ThreadPool,
+        scratch: crate::attention::Tpp2dScratch,
+        q: Vec<f32>,
+        out: Vec<f32>,
+    }
+
+    impl KernelRunner {
+        pub fn new(heads_total: usize, head_dim: usize, vocab: u32) -> Self {
+            KernelRunner {
+                inner: SyntheticRunner { heads_total, head_dim, vocab },
+                pool: crate::util::threadpool::ThreadPool::default_for_host(),
+                scratch: crate::attention::Tpp2dScratch::new(),
+                q: Vec::new(),
+                out: Vec::new(),
+            }
+        }
+    }
+
+    impl ModelRunner for KernelRunner {
+        fn heads_total(&self) -> usize {
+            self.inner.heads_total
+        }
+
+        fn head_dim(&self) -> usize {
+            self.inner.head_dim
+        }
+
+        fn prefill(
+            &mut self,
+            suffix_tokens: &[u32],
+            pos_offset: usize,
+            prefix_k: &[f32],
+            prefix_v: &[f32],
+            prefix_len: usize,
+            is_final: bool,
+        ) -> anyhow::Result<PrefillOutput> {
+            self.inner.prefill(suffix_tokens, pos_offset, prefix_k, prefix_v, prefix_len, is_final)
+        }
+
+        fn decode(
+            &mut self,
+            tree: &PrefixTree,
+            ctx: &TreeContext,
+            last_tokens: &[u32],
+            positions: &[usize],
+        ) -> anyhow::Result<DecodeOutput> {
+            let b = ctx.seq_order.len();
+            let shape = tree.shape();
+            let n = shape.heads * b * shape.head_dim;
+            self.q.clear();
+            self.q.resize(n, 0.0);
+            // Deterministic per-row queries (same hash family as kv_row).
+            for r in 0..b {
+                let mut s = (last_tokens[r] as u64) << 24 | (positions[r] as u64) << 3 | 0b101;
+                for h in 0..shape.heads {
+                    let base = (h * b + r) * shape.head_dim;
+                    for x in &mut self.q[base..base + shape.head_dim] {
+                        s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+                        *x = ((s >> 40) as f32 / (1u32 << 24) as f32) - 0.5;
+                    }
+                }
+            }
+            self.out.clear();
+            self.out.resize(n, 0.0);
+            let q = crate::attention::Queries::new(&self.q, shape.heads, b, shape.head_dim);
+            crate::attention::tpp_attention_2d(
+                tree,
+                ctx,
+                &q,
+                &self.pool,
+                &mut self.scratch,
+                &mut self.out,
+            );
+            self.inner.decode(tree, ctx, last_tokens, positions)
         }
     }
 

@@ -211,6 +211,21 @@ impl PrefixRetainer {
     pub fn pinned_tokens(&self) -> usize {
         self.pins.values().map(|p| p.tokens).sum()
     }
+
+    /// Per-pin residency for debug endpoints: `(prefix_tokens, tokens,
+    /// lru_age)` per pin, LRU-hottest first. `lru_age` counts retainer
+    /// clock ticks since the pin was last used (0 = touched most
+    /// recently); the pin with the largest age falls first under budget
+    /// pressure.
+    pub fn pin_residency(&self) -> Vec<(usize, usize, u64)> {
+        let mut rows: Vec<(usize, usize, u64)> = self
+            .pins
+            .iter()
+            .map(|(prefix, p)| (prefix.len(), p.tokens, self.clock.saturating_sub(p.last_used)))
+            .collect();
+        rows.sort_by_key(|&(_, _, age)| age);
+        rows
+    }
 }
 
 #[cfg(test)]

@@ -12,7 +12,7 @@
 //!   kernel     one microkernel measurement (§4.1)
 //!   corpus     print Table-2-style tenant prompt statistics
 
-use chunk_attention::coordinator::engine::testing::SyntheticRunner;
+use chunk_attention::coordinator::engine::testing::{KernelRunner, SyntheticRunner};
 use chunk_attention::coordinator::{
     simulate, Engine, KernelBench, MicroConfig, ModelRunner, SchedPolicyKind, SimConfig,
     SystemKind,
@@ -283,6 +283,12 @@ fn gateway_cmd(argv: &[String]) -> anyhow::Result<()> {
     .opt("tenant-weights", "", "DRR per-tenant weights, e.g. 0=4,3=2 (unlisted tenants weigh 1)")
     .opt("watchdog-stall-ms", "5000", "stepper watchdog stall threshold in ms (0 = disabled)")
     .opt(
+        "trace-out",
+        "",
+        "write a Chrome trace_event JSON file (load in chrome://tracing or Perfetto) with \
+         per-step phase spans and per-request lifecycle events (empty = tracing off)",
+    )
+    .opt(
         "fail",
         "",
         "arm failpoints, e.g. engine.prefill=1*err(boom)@2,engine.step=5%sleep(10) \
@@ -296,20 +302,21 @@ fn gateway_cmd(argv: &[String]) -> anyhow::Result<()> {
         eprintln!("warning: {armed} failpoint site(s) armed via --fail; faults WILL be injected");
     }
 
-    // The gateway always runs the synthetic runner for now; the flag is
-    // accepted for symmetry with `serve` and future PJRT support.
+    // The gateway decodes token ids with the synthetic sampler but runs
+    // the real two-phase-partition attention kernel over the live prefix
+    // tree every step, so kernel-phase timings (and the step_phase
+    // histograms) reflect actual kernel work. The flag is accepted for
+    // symmetry with `serve` and future PJRT support.
     let _ = args.get_flag("synthetic");
-    let runner = SyntheticRunner {
-        heads_total: args.get_usize("heads-total"),
-        head_dim: args.get_usize("head-dim"),
-        vocab: 32000,
-    };
+    let runner =
+        KernelRunner::new(args.get_usize("heads-total"), args.get_usize("head-dim"), 32000);
     let engine = Engine::with_dtype(
         runner,
         args.get_usize("chunk"),
         args.get_usize("max-batch"),
         parse_kv_dtype(&args)?,
     );
+    let trace_out = args.get("trace-out");
     let cfg = GatewayConfig {
         addr: args.get("listen").to_string(),
         queue_cap: args.get_usize("queue-cap"),
@@ -321,6 +328,7 @@ fn gateway_cmd(argv: &[String]) -> anyhow::Result<()> {
         sched_policy: parse_sched_policy(&args)?,
         tenant_weights: parse_tenant_weights(args.get("tenant-weights"))?,
         watchdog_stall: Duration::from_millis(args.get_u64("watchdog-stall-ms")),
+        trace_path: (!trace_out.is_empty()).then(|| std::path::PathBuf::from(trace_out)),
         ..GatewayConfig::default()
     };
     let gw = Gateway::start(engine, cfg)?;
@@ -330,7 +338,12 @@ fn gateway_cmd(argv: &[String]) -> anyhow::Result<()> {
          \"shared_tokens\": N, \"tenant\": N}} -> text/event-stream"
     );
     println!("  GET  /healthz      liveness probe");
-    println!("  GET  /metrics      Prometheus text exposition");
+    println!("  GET  /metrics      Prometheus text exposition (0.0.4, with histograms)");
+    println!("  GET  /debug/steps  recent engine steps with per-phase timings (JSON)");
+    println!("  GET  /debug/tree   prefix-tree residency and sharing snapshot (JSON)");
+    if !trace_out.is_empty() {
+        println!("tracing to {trace_out} (Chrome trace_event JSON, rewritten periodically)");
+    }
     println!("Ctrl-C to stop.");
     loop {
         std::thread::sleep(Duration::from_secs(3600));
@@ -370,6 +383,12 @@ fn bench_http(argv: &[String]) -> anyhow::Result<()> {
          (empty = the default latency + transient-error profile)",
     )
     .opt("watchdog-stall-ms", "500", "chaos mode: spawned gateway's watchdog threshold (ms)")
+    .opt(
+        "trace-out",
+        "",
+        "spawned gateway: write a Chrome trace_event JSON file with step-phase spans and \
+         request lifecycle events (empty = off; requires a spawned gateway, not --addr)",
+    )
     .flag(
         "chaos",
         "spawn a gateway, arm the --fail profile against it, and report availability and \
@@ -417,9 +436,17 @@ fn bench_http(argv: &[String]) -> anyhow::Result<()> {
         return bench_http_mixed(&args, kv_dtype);
     }
 
+    let trace_out = args.get("trace-out");
+    anyhow::ensure!(
+        trace_out.is_empty() || args.get("addr").is_empty(),
+        "--trace-out traces the spawned in-process gateway; drop --addr"
+    );
     let mut spawned = None;
     let addr = if args.get("addr").is_empty() {
-        let runner = SyntheticRunner { heads_total: 16, head_dim: 32, vocab: 32000 };
+        // Real two-phase-partition kernel over the live tree, synthetic
+        // token sampling — so server-side phase histograms and --trace-out
+        // spans carry actual kernel timings.
+        let runner = KernelRunner::new(16, 32, 32000);
         let engine = Engine::with_dtype(
             runner,
             args.get_usize("chunk"),
@@ -436,6 +463,8 @@ fn bench_http(argv: &[String]) -> anyhow::Result<()> {
                 step_token_budget: args.get_usize("step-token-budget"),
                 sched_policy: parse_sched_policy(&args)?,
                 tenant_weights: parse_tenant_weights(args.get("tenant-weights"))?,
+                trace_path: (!trace_out.is_empty())
+                    .then(|| std::path::PathBuf::from(trace_out)),
                 ..GatewayConfig::default()
             },
         )?;
@@ -468,6 +497,9 @@ fn bench_http(argv: &[String]) -> anyhow::Result<()> {
     println!("{}", report.render());
     if let Some(gw) = spawned {
         gw.shutdown()?;
+    }
+    if !trace_out.is_empty() {
+        println!("trace written to {trace_out} (open in chrome://tracing or Perfetto)");
     }
     anyhow::ensure!(report.completed > 0, "no request completed — is the gateway reachable?");
     Ok(())
@@ -510,10 +542,20 @@ fn bench_http_chaos(args: &Args, kv_dtype: KvDtype) -> anyhow::Result<()> {
         },
         watchdog_stall: Duration::from_millis(args.get_u64("watchdog-stall-ms")),
         kv_dtype,
+        trace_path: match args.get("trace-out") {
+            "" => None,
+            p => Some(std::path::PathBuf::from(p)),
+        },
         ..defaults
     };
     let report = run_chaos_bench(&cfg)?;
     println!("{}", report.render());
+    if !args.get("trace-out").is_empty() {
+        println!(
+            "trace written to {} (includes step_retry/step_panic fault events)",
+            args.get("trace-out")
+        );
+    }
     anyhow::ensure!(
         report.bench.completed > 0,
         "no request survived the chaos profile — is it too aggressive?"

@@ -2,6 +2,7 @@
 //! (or a human with `curl`) can watch a live coordinator.
 
 use super::recorder::MetricsRecorder;
+use crate::util::stats::LogHistogram;
 
 /// Append one gauge (HELP + TYPE + sample) to an exposition document.
 /// Public so other exporters (the HTTP gateway's `/metrics` endpoint) can
@@ -53,6 +54,68 @@ pub fn push_labeled_series(
             labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
         out.push_str(&format!("{prefix}_{name}{{{}}} {value}\n", rendered.join(",")));
     }
+}
+
+fn render_labels(labels: &[(&str, String)]) -> String {
+    labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect::<Vec<_>>().join(",")
+}
+
+/// Append the `_bucket`/`_sum`/`_count` sample lines for one histogram
+/// (cumulative counts, closed by the mandatory `le="+Inf"` bucket).
+fn push_histogram_samples(
+    out: &mut String,
+    full_name: &str,
+    labels: &[(&str, String)],
+    h: &LogHistogram,
+) {
+    let base = render_labels(labels);
+    let mut cum = 0u64;
+    for (i, &c) in h.counts().iter().enumerate() {
+        cum += c;
+        let le = if i < h.bounds().len() {
+            format!("{}", h.bounds()[i])
+        } else {
+            "+Inf".to_string()
+        };
+        let sep = if base.is_empty() { String::new() } else { format!("{base},") };
+        out.push_str(&format!("{full_name}_bucket{{{sep}le=\"{le}\"}} {cum}\n"));
+    }
+    let braces = if base.is_empty() { String::new() } else { format!("{{{base}}}") };
+    out.push_str(&format!("{full_name}_sum{braces} {}\n", h.sum()));
+    out.push_str(&format!("{full_name}_count{braces} {}\n", h.total()));
+}
+
+/// Append one histogram family: a single HELP/TYPE header followed by
+/// `_bucket`/`_sum`/`_count` samples per labeled child. Use one call per
+/// metric name — the exposition format allows metadata at most once per
+/// family, so `step_phase_seconds{phase=...}` children must share a header.
+pub fn push_histogram_family(
+    out: &mut String,
+    prefix: &str,
+    name: &str,
+    help: &str,
+    children: &[(Vec<(&str, String)>, &LogHistogram)],
+) {
+    if children.is_empty() {
+        return;
+    }
+    let full = format!("{prefix}_{name}");
+    out.push_str(&format!("# HELP {full} {help}\n# TYPE {full} histogram\n"));
+    for (labels, h) in children {
+        push_histogram_samples(out, &full, labels, h);
+    }
+}
+
+/// Append one unlabeled Prometheus histogram (HELP + TYPE + cumulative
+/// `le` buckets + `_sum` + `_count`).
+pub fn push_histogram(
+    out: &mut String,
+    prefix: &str,
+    name: &str,
+    help: &str,
+    h: &LogHistogram,
+) {
+    push_histogram_family(out, prefix, name, help, &[(Vec::new(), h)]);
 }
 
 /// Render the exposition document (text format 0.0.4 subset).
@@ -154,6 +217,67 @@ mod tests {
         }
         // Every series has HELP and TYPE lines.
         assert_eq!(text.matches("# HELP").count(), text.matches("# TYPE").count());
+    }
+
+    #[test]
+    fn histogram_renders_monotone_cumulative_buckets_with_inf() {
+        let mut h = LogHistogram::new(0.001, 2.0, 6);
+        for x in [0.0005, 0.003, 0.003, 0.02, 5.0] {
+            h.record(x);
+        }
+        let mut out = String::new();
+        push_histogram(&mut out, "gw", "ttft_seconds", "time to first token", &h);
+        assert_eq!(out.matches("# HELP gw_ttft_seconds ").count(), 1);
+        assert!(out.contains("# TYPE gw_ttft_seconds histogram"));
+        // Cumulative counts are monotone non-decreasing and end at +Inf.
+        let mut prev = 0u64;
+        let mut inf_seen = false;
+        for line in out.lines().filter(|l| l.contains("_bucket{")) {
+            let count: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(count >= prev, "non-monotone bucket line: {line}");
+            prev = count;
+            if line.contains("le=\"+Inf\"") {
+                inf_seen = true;
+                assert_eq!(count, h.total(), "+Inf bucket must equal _count");
+            }
+        }
+        assert!(inf_seen, "missing le=\"+Inf\" bucket:\n{out}");
+        // _sum/_count agree with the recorder.
+        assert!(out.contains(&format!("gw_ttft_seconds_count {}", h.total())));
+        let sum_line = out.lines().find(|l| l.starts_with("gw_ttft_seconds_sum ")).unwrap();
+        let sum: f64 = sum_line.rsplit(' ').next().unwrap().parse().unwrap();
+        assert!((sum - h.sum()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_family_shares_header_and_labels_every_sample() {
+        let mut a = LogHistogram::new(0.001, 2.0, 3);
+        let mut b = LogHistogram::new(0.001, 2.0, 3);
+        a.record(0.002);
+        b.record(0.004);
+        b.record(0.004);
+        let mut out = String::new();
+        push_histogram_family(
+            &mut out,
+            "gw",
+            "step_phase_seconds",
+            "per-phase step time",
+            &[
+                (vec![("phase", "chunk_first".to_string())], &a),
+                (vec![("phase", "seq_first".to_string())], &b),
+            ],
+        );
+        assert_eq!(out.matches("# HELP").count(), 1);
+        assert_eq!(out.matches("# TYPE").count(), 1);
+        assert!(out.contains("gw_step_phase_seconds_bucket{phase=\"chunk_first\",le=\"+Inf\"} 1"));
+        assert!(out.contains("gw_step_phase_seconds_bucket{phase=\"seq_first\",le=\"+Inf\"} 2"));
+        assert!(out.contains("gw_step_phase_seconds_count{phase=\"chunk_first\"} 1"));
+        assert!(out.contains("gw_step_phase_seconds_count{phase=\"seq_first\"} 2"));
+        assert!(out.contains("gw_step_phase_seconds_sum{phase=\"seq_first\"} 0.008"));
+        // Empty family emits nothing.
+        let mut empty = String::new();
+        push_histogram_family(&mut empty, "gw", "x", "h", &[]);
+        assert!(empty.is_empty());
     }
 
     #[test]

@@ -5,5 +5,8 @@
 pub mod exporter;
 pub mod recorder;
 
-pub use exporter::{push_gauge, push_labeled_gauge, push_labeled_series, render_exposition};
-pub use recorder::{MetricsRecorder, RequestRecord, ThroughputWindow};
+pub use exporter::{
+    push_gauge, push_histogram, push_histogram_family, push_labeled_gauge, push_labeled_series,
+    render_exposition,
+};
+pub use recorder::{MetricsRecorder, RequestRecord, StepTiming, ThroughputWindow, STEP_PHASES};

@@ -37,6 +37,59 @@ impl RequestRecord {
     }
 }
 
+/// Phase labels of one engine step, in execution order. Parallel to
+/// [`StepTiming::phases`] and the `step_phase_seconds{phase=...}` histogram
+/// children on `/metrics`.
+pub const STEP_PHASES: [&str; 6] =
+    ["plan", "prefill", "chunk_first", "seq_first", "append", "evict"];
+
+/// Wall-clock breakdown of one `Engine::step`, measured always-on with
+/// plain monotonic reads (a handful of `Instant::now` calls per step).
+/// `chunk_first`/`seq_first` are the TPP kernel's two partition phases,
+/// reported by the kernel through `util::trace::record_kernel_phases`;
+/// they are zero when the step's runner never entered the TPP kernel.
+/// `append` is the decode remainder around the kernel (token append +
+/// sampling bookkeeping).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepTiming {
+    pub plan_s: f64,
+    pub prefill_s: f64,
+    pub chunk_first_s: f64,
+    pub seq_first_s: f64,
+    pub append_s: f64,
+    pub evict_s: f64,
+    pub total_s: f64,
+    /// Sequences decoded this step (0 = prefill/maintenance-only step).
+    pub decode_batch: usize,
+    /// Prompt slices advanced this step.
+    pub prefill_slices: usize,
+    /// Requests admitted from the queue this step.
+    pub admitted: usize,
+    /// Requests that reached completion this step.
+    pub finished: usize,
+}
+
+impl StepTiming {
+    /// `(label, seconds)` per phase, ordered as [`STEP_PHASES`].
+    pub fn phases(&self) -> [(&'static str, f64); 6] {
+        [
+            ("plan", self.plan_s),
+            ("prefill", self.prefill_s),
+            ("chunk_first", self.chunk_first_s),
+            ("seq_first", self.seq_first_s),
+            ("append", self.append_s),
+            ("evict", self.evict_s),
+        ]
+    }
+
+    /// Whether the step did any request work (admission, prefill, decode).
+    /// Idle maintenance passes are not recorded into the histograms so a
+    /// quiet gateway doesn't drown the distributions in no-op samples.
+    pub fn did_work(&self) -> bool {
+        self.decode_batch > 0 || self.prefill_slices > 0 || self.admitted > 0
+    }
+}
+
 /// Sliding-window token throughput (tokens per second over the last `w` s).
 #[derive(Debug)]
 pub struct ThroughputWindow {
@@ -100,6 +153,14 @@ pub struct MetricsRecorder {
     /// Requests cancelled mid-flight (client disconnect / explicit abort);
     /// their private chunks were returned to the tree pool.
     pub cancelled: u64,
+    /// Time to first token, seconds (true Prometheus histogram on /metrics).
+    pub ttft_seconds: LogHistogram,
+    /// Gap between consecutive streamed tokens of one request, seconds.
+    pub inter_token_seconds: LogHistogram,
+    /// Whole `Engine::step` wall time for steps that did work, seconds.
+    pub step_duration_seconds: LogHistogram,
+    /// Per-phase step time; index parallel to [`STEP_PHASES`].
+    step_phase_seconds: [LogHistogram; STEP_PHASES.len()],
 }
 
 impl Default for MetricsRecorder {
@@ -124,7 +185,35 @@ impl MetricsRecorder {
             context_rebuilds: 0,
             context_cache_hits: 0,
             cancelled: 0,
+            ttft_seconds: LogHistogram::time_seconds(),
+            inter_token_seconds: LogHistogram::time_seconds(),
+            step_duration_seconds: LogHistogram::time_seconds(),
+            step_phase_seconds: std::array::from_fn(|_| LogHistogram::time_seconds()),
         }
+    }
+
+    /// `(phase label, histogram)` pairs for exposition, ordered as
+    /// [`STEP_PHASES`].
+    pub fn step_phases(&self) -> impl Iterator<Item = (&'static str, &LogHistogram)> {
+        STEP_PHASES.iter().copied().zip(self.step_phase_seconds.iter())
+    }
+
+    /// Record one step's phase breakdown. Idle maintenance passes
+    /// (`!t.did_work()`) are skipped so the histograms describe steps that
+    /// actually served requests.
+    pub fn record_step_timing(&mut self, t: &StepTiming) {
+        if !t.did_work() {
+            return;
+        }
+        self.step_duration_seconds.record(t.total_s);
+        for (i, (_, secs)) in t.phases().iter().enumerate() {
+            self.step_phase_seconds[i].record(*secs);
+        }
+    }
+
+    /// Record the gap between two consecutive streamed tokens of a request.
+    pub fn record_inter_token(&mut self, dt_s: f64) {
+        self.inter_token_seconds.record(dt_s);
     }
 
     /// Fraction of decode steps served from the cached tree context.
@@ -152,6 +241,7 @@ impl MetricsRecorder {
         self.requests_total += 1;
         self.normalized_latency.add(r.normalized_ms_per_tok());
         self.ttft.add(r.ttft_s() * 1e3);
+        self.ttft_seconds.record(r.ttft_s());
         self.queue_delay.add(r.queue_delay_s() * 1e3);
         self.prefill_computed += (r.prompt_tokens - r.reused_prompt_tokens) as u64;
         self.prefill_reused += r.reused_prompt_tokens as u64;
@@ -235,6 +325,46 @@ mod tests {
         assert!(m.requests()[0].arrival_s >= 90.0, "oldest dropped first");
         assert_eq!(m.normalized_latency.count(), 100, "summary moments stay lifetime");
         assert!(m.normalized_latency.samples().len() <= 6, "percentile buffer bounded");
+    }
+
+    #[test]
+    fn step_timing_records_phases_and_skips_idle_passes() {
+        let mut m = MetricsRecorder::new();
+        let idle = StepTiming { total_s: 1e-6, ..Default::default() };
+        m.record_step_timing(&idle);
+        assert_eq!(m.step_duration_seconds.total(), 0, "idle pass skipped");
+        let busy = StepTiming {
+            plan_s: 1e-5,
+            prefill_s: 2e-4,
+            chunk_first_s: 3e-4,
+            seq_first_s: 1e-4,
+            append_s: 5e-5,
+            evict_s: 0.0,
+            total_s: 7e-4,
+            decode_batch: 4,
+            ..Default::default()
+        };
+        m.record_step_timing(&busy);
+        assert_eq!(m.step_duration_seconds.total(), 1);
+        for (name, h) in m.step_phases() {
+            assert_eq!(h.total(), 1, "phase {name} missed the busy step");
+        }
+        let phases: Vec<&str> = m.step_phases().map(|(n, _)| n).collect();
+        assert_eq!(phases, STEP_PHASES.to_vec());
+        let chunk_first = m.step_phases().find(|(n, _)| *n == "chunk_first").unwrap().1;
+        assert!((chunk_first.sum() - 3e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ttft_and_inter_token_histograms_accumulate() {
+        let mut m = MetricsRecorder::new();
+        m.record_request(rec(0.0, 1.0, 10, 0));
+        assert_eq!(m.ttft_seconds.total(), 1);
+        assert!((m.ttft_seconds.sum() - 0.3).abs() < 1e-9);
+        m.record_inter_token(0.02);
+        m.record_inter_token(0.03);
+        assert_eq!(m.inter_token_seconds.total(), 2);
+        assert!((m.inter_token_seconds.sum() - 0.05).abs() < 1e-12);
     }
 
     #[test]

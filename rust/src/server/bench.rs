@@ -10,7 +10,7 @@
 
 use super::client::{self, StreamEvent};
 use super::gateway::{Gateway, GatewayConfig};
-use crate::coordinator::engine::testing::{PacedRunner, SyntheticRunner};
+use crate::coordinator::engine::testing::{KernelRunner, PacedRunner};
 use crate::coordinator::{Engine, SchedPolicyKind};
 use crate::kvcache::KvDtype;
 use crate::util::failpoint;
@@ -87,6 +87,14 @@ pub struct BenchReport {
     /// Server-side fraction of prompt tokens served from the prefix tree,
     /// scraped from `/metrics` after the run (NaN if unavailable).
     pub prefix_hit_rate: f64,
+    /// Server-side TTFT quantiles `(p50, p99)` in ms, interpolated from the
+    /// `ttft_seconds` histogram scraped off `/metrics` (NaN if unavailable).
+    /// These measure queue-to-first-token inside the gateway, so the gap to
+    /// the client-side `ttft_ms` above is wire + connection-handling time.
+    pub server_ttft_ms: (f64, f64),
+    /// Server-side inter-token latency quantiles `(p50, p99)` in ms, from
+    /// the `inter_token_seconds` histogram (NaN if unavailable).
+    pub server_itl_ms: (f64, f64),
 }
 
 impl BenchReport {
@@ -100,7 +108,9 @@ impl BenchReport {
         format!(
             "requests           {} completed, {} rejected (429), {} errors, {} retried\n\
              wall time          {:.2}s ({:.1} completion tok/s)\n\
-             ttft               mean {:.1} ms, p99 {:.1} ms\n\
+             ttft               mean {:.1} ms, p99 {:.1} ms (client-side)\n\
+             server ttft        p50 {:.1} ms, p99 {:.1} ms (from ttft_seconds histogram)\n\
+             server inter-token p50 {:.2} ms, p99 {:.2} ms (from inter_token_seconds histogram)\n\
              normalized latency mean {:.2} ms/tok, p99 {:.2} ms/tok\n\
              prefix hit rate    {:.1}% (server-side, from /metrics)",
             self.completed,
@@ -111,6 +121,10 @@ impl BenchReport {
             self.decode_tps(),
             self.ttft_ms.mean(),
             self.ttft_ms.percentile(99.0),
+            self.server_ttft_ms.0,
+            self.server_ttft_ms.1,
+            self.server_itl_ms.0,
+            self.server_itl_ms.1,
             self.normalized_latency_ms.mean(),
             self.normalized_latency_ms.percentile(99.0),
             100.0 * self.prefix_hit_rate,
@@ -228,10 +242,18 @@ pub fn run_bench(cfg: &BenchConfig) -> anyhow::Result<BenchReport> {
     }
     let wall_s = t0.elapsed().as_secs_f64();
 
-    let prefix_hit_rate = client::get(&cfg.addr, "/metrics", cfg.timeout)
-        .ok()
-        .and_then(|resp| client::gauge_value(&resp.body, "prefix_hit_rate"))
-        .unwrap_or(f64::NAN);
+    // One post-run scrape feeds both the prefix-hit gauge and the
+    // server-side latency histograms.
+    let metrics_doc =
+        client::get(&cfg.addr, "/metrics", cfg.timeout).map(|resp| resp.body).unwrap_or_default();
+    let prefix_hit_rate =
+        client::gauge_value(&metrics_doc, "prefix_hit_rate").unwrap_or(f64::NAN);
+    let quantiles = |name: &str| {
+        (
+            client::histogram_quantile(&metrics_doc, name, 0.5) * 1e3,
+            client::histogram_quantile(&metrics_doc, name, 0.99) * 1e3,
+        )
+    };
 
     let ttft_ms = tally_lock(&ttft).clone();
     let normalized_latency_ms = tally_lock(&norm).clone();
@@ -245,6 +267,8 @@ pub fn run_bench(cfg: &BenchConfig) -> anyhow::Result<BenchReport> {
         ttft_ms,
         normalized_latency_ms,
         prefix_hit_rate,
+        server_ttft_ms: quantiles("ttft_seconds"),
+        server_itl_ms: quantiles("inter_token_seconds"),
     })
 }
 
@@ -488,7 +512,7 @@ impl Default for ComparisonConfig {
 pub fn run_prefill_comparison(cfg: &ComparisonConfig) -> anyhow::Result<(MixedReport, MixedReport)> {
     let run = |chunked: bool| -> anyhow::Result<MixedReport> {
         let runner = PacedRunner {
-            inner: SyntheticRunner { heads_total: 16, head_dim: 32, vocab: 32000 },
+            inner: KernelRunner::new(16, 32, 32000),
             prefill_us_per_token: cfg.prefill_us_per_token,
         };
         let engine = Engine::with_dtype(runner, cfg.chunk, cfg.max_batch, cfg.kv_dtype);
@@ -572,7 +596,7 @@ pub fn run_policy_comparison(
 ) -> anyhow::Result<(MixedReport, MixedReport)> {
     let run = |policy: SchedPolicyKind| -> anyhow::Result<MixedReport> {
         let runner = PacedRunner {
-            inner: SyntheticRunner { heads_total: 16, head_dim: 32, vocab: 32000 },
+            inner: KernelRunner::new(16, 32, 32000),
             prefill_us_per_token: cfg.prefill_us_per_token,
         };
         let engine = Engine::with_dtype(runner, cfg.chunk, cfg.max_batch, cfg.kv_dtype);
@@ -674,6 +698,10 @@ pub struct ChaosBenchConfig {
     /// Cadence of the `/healthz` availability probe.
     pub healthz_poll: Duration,
     pub kv_dtype: KvDtype,
+    /// When set, the spawned gateway records a Chrome `trace_event` file
+    /// here — fault injections (`step_retry`, `step_panic`) show up as
+    /// instant events alongside the step/phase spans.
+    pub trace_path: Option<std::path::PathBuf>,
 }
 
 impl Default for ChaosBenchConfig {
@@ -694,6 +722,7 @@ impl Default for ChaosBenchConfig {
             watchdog_stall: Duration::from_millis(500),
             healthz_poll: Duration::from_millis(25),
             kv_dtype: KvDtype::F32,
+            trace_path: None,
         }
     }
 }
@@ -781,7 +810,7 @@ pub fn run_chaos_bench(cfg: &ChaosBenchConfig) -> anyhow::Result<ChaosReport> {
     }
 
     let runner = PacedRunner {
-        inner: SyntheticRunner { heads_total: 16, head_dim: 32, vocab: 32000 },
+        inner: KernelRunner::new(16, 32, 32000),
         prefill_us_per_token: cfg.prefill_us_per_token,
     };
     let engine = Engine::with_dtype(runner, cfg.chunk, cfg.max_batch, cfg.kv_dtype);
@@ -794,6 +823,7 @@ pub fn run_chaos_bench(cfg: &ChaosBenchConfig) -> anyhow::Result<ChaosReport> {
             prefill_chunk_tokens: cfg.prefill_chunk_tokens,
             step_token_budget: cfg.step_token_budget,
             watchdog_stall: cfg.watchdog_stall,
+            trace_path: cfg.trace_path.clone(),
             ..GatewayConfig::default()
         },
     )?;

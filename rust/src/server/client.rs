@@ -116,6 +116,262 @@ pub fn labeled_gauge_value(
     None
 }
 
+/// Split a sample's series into `(name, label-body)`; the label body is
+/// the text between the braces ("" when unlabeled).
+fn split_series(series: &str) -> (&str, &str) {
+    match series.split_once('{') {
+        Some((name, rest)) => (name, rest.strip_suffix('}').unwrap_or(rest)),
+        None => (series, ""),
+    }
+}
+
+/// A server-side histogram parsed from `_bucket`/`_sum`/`_count` lines of
+/// an exposition document.
+#[derive(Debug, Clone)]
+pub struct HistogramSnapshot {
+    /// `(le upper bound, cumulative count)` in document order; the last
+    /// entry is the `+Inf` bucket.
+    pub buckets: Vec<(f64, f64)>,
+    pub sum: f64,
+    pub count: u64,
+}
+
+impl HistogramSnapshot {
+    /// Estimate the q-th quantile (q in [0,1]) by linear interpolation
+    /// inside the first bucket whose cumulative count reaches the rank —
+    /// the same estimate `histogram_quantile()` makes in PromQL. Returns
+    /// the highest finite bound when the rank lands in `+Inf`, and NaN
+    /// for an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 || self.buckets.is_empty() {
+            return f64::NAN;
+        }
+        let rank = q.clamp(0.0, 1.0) * self.count as f64;
+        let mut lower = 0.0f64;
+        let mut prev_cum = 0.0f64;
+        for &(le, cum) in &self.buckets {
+            if cum >= rank {
+                if le.is_infinite() {
+                    return lower;
+                }
+                let in_bucket = cum - prev_cum;
+                if in_bucket <= 0.0 {
+                    return le;
+                }
+                let frac = ((rank - prev_cum) / in_bucket).clamp(0.0, 1.0);
+                return lower + (le - lower) * frac;
+            }
+            if le.is_finite() {
+                lower = le;
+            }
+            prev_cum = cum;
+        }
+        lower
+    }
+}
+
+/// Parse one histogram child from an exposition document by series name
+/// suffix (prefix-agnostic, like [`gauge_value`]). `label` selects a child
+/// of a labeled family (e.g. `("phase", "chunk_first")`); `None` matches
+/// any child — use it only for unlabeled histograms.
+pub fn histogram_snapshot(
+    exposition: &str,
+    name: &str,
+    label: Option<(&str, &str)>,
+) -> Option<HistogramSnapshot> {
+    let bucket_suffix = format!("_{name}_bucket");
+    let sum_suffix = format!("_{name}_sum");
+    let count_suffix = format!("_{name}_count");
+    let want = label.map(|(k, v)| format!("{k}=\"{v}\""));
+    let mut buckets: Vec<(f64, f64)> = Vec::new();
+    let mut sum: Option<f64> = None;
+    let mut count: Option<u64> = None;
+    for line in exposition.lines() {
+        if line.starts_with('#') {
+            continue;
+        }
+        let Some((series, value)) = line.rsplit_once(' ') else { continue };
+        let (sname, labels) = split_series(series);
+        let label_ok = match &want {
+            Some(w) => labels.contains(w.as_str()),
+            None => true,
+        };
+        if !label_ok {
+            continue;
+        }
+        if sname.ends_with(&bucket_suffix) {
+            let Some(bound) = labels
+                .split(',')
+                .find_map(|p| p.strip_prefix("le=\"").and_then(|r| r.strip_suffix('"')))
+            else {
+                continue;
+            };
+            let le = if bound == "+Inf" { f64::INFINITY } else { bound.parse().ok()? };
+            let cum: f64 = value.parse().ok()?;
+            buckets.push((le, cum));
+        } else if sname.ends_with(&sum_suffix) {
+            sum = value.parse().ok();
+        } else if sname.ends_with(&count_suffix) {
+            count = value.parse().ok();
+        }
+    }
+    if buckets.is_empty() {
+        return None;
+    }
+    Some(HistogramSnapshot { buckets, sum: sum?, count: count? })
+}
+
+/// Convenience: the q-th quantile of a named (unlabeled) server-side
+/// histogram; NaN when the document has no such family.
+pub fn histogram_quantile(exposition: &str, name: &str, q: f64) -> f64 {
+    histogram_snapshot(exposition, name, None).map(|h| h.quantile(q)).unwrap_or(f64::NAN)
+}
+
+/// Promtool-style exposition lint: returns one message per violation
+/// (empty = clean). Checks that every sample's family has HELP and TYPE
+/// metadata (at most once each), that no series repeats, and that each
+/// histogram child has strictly increasing `le` bounds, monotone
+/// cumulative counts, a terminal `+Inf` bucket agreeing with `_count`,
+/// and a `_sum` sample.
+pub fn lint_exposition(doc: &str) -> Vec<String> {
+    use std::collections::{BTreeMap, BTreeSet};
+    let mut violations: Vec<String> = Vec::new();
+    if !doc.ends_with('\n') {
+        violations.push("exposition must end with a trailing newline".to_string());
+    }
+    let mut help: BTreeSet<String> = BTreeSet::new();
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    for line in doc.lines() {
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().unwrap_or("").to_string();
+            if !help.insert(name.clone()) {
+                violations.push(format!("duplicate HELP for {name}"));
+            }
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().unwrap_or("").to_string();
+            let ty = it.next().unwrap_or("").to_string();
+            if !matches!(ty.as_str(), "gauge" | "counter" | "histogram" | "summary" | "untyped") {
+                violations.push(format!("invalid TYPE {ty:?} for {name}"));
+            }
+            if types.insert(name.clone(), ty).is_some() {
+                violations.push(format!("duplicate TYPE for {name}"));
+            }
+        }
+    }
+    // Resolve a sample's family: `_bucket`/`_sum`/`_count` fold into their
+    // base name only when the base is declared a histogram.
+    let family_of = |sname: &str| -> String {
+        for suffix in ["_bucket", "_sum", "_count"] {
+            if let Some(base) = sname.strip_suffix(suffix) {
+                if types.get(base).is_some_and(|t| t == "histogram") {
+                    return base.to_string();
+                }
+            }
+        }
+        sname.to_string()
+    };
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+    // Histogram children keyed by (family, labels-without-le).
+    let mut buckets: BTreeMap<(String, String), Vec<(f64, f64)>> = BTreeMap::new();
+    let mut counts: BTreeMap<(String, String), f64> = BTreeMap::new();
+    let mut sums: BTreeSet<(String, String)> = BTreeSet::new();
+    for line in doc.lines() {
+        if line.starts_with('#') || line.trim().is_empty() {
+            continue;
+        }
+        let Some((series, value)) = line.rsplit_once(' ') else {
+            violations.push(format!("malformed sample line {line:?}"));
+            continue;
+        };
+        let parsed: Option<f64> = value.parse().ok();
+        if parsed.is_none() {
+            violations.push(format!("non-numeric value in {line:?}"));
+        }
+        if !seen.insert(series.to_string()) {
+            violations.push(format!("duplicate series {series}"));
+        }
+        let (sname, labels) = split_series(series);
+        let family = family_of(sname);
+        if !help.contains(&family) {
+            violations.push(format!("series {series}: no HELP for family {family}"));
+        }
+        if !types.contains_key(&family) {
+            violations.push(format!("series {series}: no TYPE for family {family}"));
+        }
+        if types.get(&family).is_some_and(|t| t == "histogram") {
+            let mut le: Option<String> = None;
+            let child: Vec<&str> = labels
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .filter(|p| {
+                    match p.strip_prefix("le=\"").and_then(|r| r.strip_suffix('"')) {
+                        Some(bound) => {
+                            le = Some(bound.to_string());
+                            false
+                        }
+                        None => true,
+                    }
+                })
+                .collect();
+            let key = (family.clone(), child.join(","));
+            if sname.ends_with("_bucket") {
+                let Some(bound) = le else {
+                    violations.push(format!("bucket without le label: {series}"));
+                    continue;
+                };
+                let b = if bound == "+Inf" {
+                    f64::INFINITY
+                } else {
+                    match bound.parse::<f64>() {
+                        Ok(x) => x,
+                        Err(_) => {
+                            violations.push(format!("unparseable le bound in {series}"));
+                            continue;
+                        }
+                    }
+                };
+                buckets.entry(key).or_default().push((b, parsed.unwrap_or(f64::NAN)));
+            } else if sname.ends_with("_count") {
+                counts.insert(key, parsed.unwrap_or(f64::NAN));
+            } else if sname.ends_with("_sum") {
+                sums.insert(key);
+            }
+        }
+    }
+    for (key, bs) in &buckets {
+        let label = |k: &(String, String)| {
+            if k.1.is_empty() { k.0.clone() } else { format!("{}{{{}}}", k.0, k.1) }
+        };
+        let mut prev_le = f64::NEG_INFINITY;
+        let mut prev_cum = -1.0f64;
+        for &(le, cum) in bs {
+            if le <= prev_le {
+                violations.push(format!("{}: le bounds not increasing at {le}", label(key)));
+            }
+            if cum < prev_cum {
+                violations
+                    .push(format!("{}: cumulative bucket counts decrease at le {le}", label(key)));
+            }
+            prev_le = le;
+            prev_cum = cum;
+        }
+        match bs.last() {
+            Some(&(le, cum)) if le.is_infinite() => match counts.get(key) {
+                Some(&c) if (c - cum).abs() < 1e-9 => {}
+                Some(&c) => violations
+                    .push(format!("{}: +Inf bucket {cum} != _count {c}", label(key))),
+                None => violations.push(format!("{}: missing _count", label(key))),
+            },
+            _ => violations.push(format!("{}: missing le=\"+Inf\" bucket", label(key))),
+        }
+        if !sums.contains(key) {
+            violations.push(format!("{}: missing _sum", label(key)));
+        }
+    }
+    violations
+}
+
 /// One event of a `/v1/generate` SSE stream. `Done`, `Error`, and
 /// `Timeout` are terminal: the gateway guarantees every stream ends with
 /// exactly one of them (no client ever hangs to its socket timeout).
@@ -238,6 +494,78 @@ mod tests {
         assert_eq!(gauge_value(doc, "x"), Some(3.5));
         assert_eq!(gauge_value(doc, "queue_depth"), Some(7.0));
         assert_eq!(gauge_value(doc, "missing"), None);
+    }
+
+    #[test]
+    fn histogram_snapshot_parses_real_exporter_output() {
+        use crate::metrics::{push_histogram, push_histogram_family};
+        use crate::util::stats::LogHistogram;
+        let mut h = LogHistogram::time_seconds();
+        for x in [0.001, 0.002, 0.002, 0.01, 0.05, 0.5] {
+            h.record(x);
+        }
+        let mut doc = String::new();
+        push_histogram(&mut doc, "gw", "ttft_seconds", "ttft", &h);
+        let snap = histogram_snapshot(&doc, "ttft_seconds", None).expect("parses");
+        assert_eq!(snap.count, 6);
+        assert!((snap.sum - h.sum()).abs() < 1e-9);
+        assert!(snap.buckets.last().unwrap().0.is_infinite());
+        let p50 = snap.quantile(0.5);
+        let p99 = snap.quantile(0.99);
+        assert!(p50 > 0.0 && p50 < 0.05, "p50 {p50} out of range");
+        assert!(p99 >= p50, "p99 {p99} < p50 {p50}");
+        assert!(histogram_quantile(&doc, "ttft_seconds", 0.5) > 0.0);
+        assert!(histogram_quantile(&doc, "missing", 0.5).is_nan());
+
+        // Labeled children are selectable individually.
+        let mut a = LogHistogram::time_seconds();
+        a.record(0.003);
+        let mut fam = String::new();
+        push_histogram_family(
+            &mut fam,
+            "gw",
+            "step_phase_seconds",
+            "phases",
+            &[(vec![("phase", "chunk_first".to_string())], &a)],
+        );
+        let child =
+            histogram_snapshot(&fam, "step_phase_seconds", Some(("phase", "chunk_first")))
+                .expect("labeled child parses");
+        assert_eq!(child.count, 1);
+        assert!(
+            histogram_snapshot(&fam, "step_phase_seconds", Some(("phase", "seq_first"))).is_none()
+        );
+    }
+
+    #[test]
+    fn lint_accepts_exporter_output_and_flags_violations() {
+        use crate::metrics::push_histogram;
+        use crate::util::stats::LogHistogram;
+        let mut h = LogHistogram::time_seconds();
+        h.record(0.004);
+        let mut doc = String::new();
+        doc.push_str("# HELP gw_depth queue depth\n# TYPE gw_depth gauge\ngw_depth 3\n");
+        push_histogram(&mut doc, "gw", "ttft_seconds", "ttft", &h);
+        assert_eq!(lint_exposition(&doc), Vec::<String>::new());
+
+        // No trailing newline.
+        assert!(lint_exposition("# HELP x h\n# TYPE x gauge\nx 1")
+            .iter()
+            .any(|v| v.contains("newline")));
+        // Missing metadata.
+        assert!(lint_exposition("x 1\n").iter().any(|v| v.contains("no HELP")));
+        // Duplicate series.
+        let dup = "# HELP x h\n# TYPE x gauge\nx 1\nx 2\n";
+        assert!(lint_exposition(dup).iter().any(|v| v.contains("duplicate series")));
+        // Non-monotone cumulative buckets.
+        let bad = "# HELP h q\n# TYPE h histogram\n\
+                   h_bucket{le=\"1\"} 5\nh_bucket{le=\"2\"} 3\nh_bucket{le=\"+Inf\"} 5\n\
+                   h_sum 1\nh_count 5\n";
+        assert!(lint_exposition(bad).iter().any(|v| v.contains("decrease")));
+        // Missing +Inf bucket.
+        let noinf = "# HELP h q\n# TYPE h histogram\n\
+                     h_bucket{le=\"1\"} 5\nh_sum 1\nh_count 5\n";
+        assert!(lint_exposition(noinf).iter().any(|v| v.contains("+Inf")));
     }
 
     #[test]

@@ -22,14 +22,19 @@
 
 use super::http;
 use crate::coordinator::{Engine, FinishedSeq, ModelRunner, SchedPolicyKind};
-use crate::metrics::{push_gauge, push_labeled_gauge, push_labeled_series, render_exposition};
+use crate::metrics::{
+    push_gauge, push_histogram, push_histogram_family, push_labeled_gauge, push_labeled_series,
+    render_exposition, StepTiming,
+};
 use crate::util::failpoint;
 use crate::util::json::Json;
+use crate::util::trace;
 use crate::workload::{Request, Tokenizer};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread;
@@ -87,6 +92,12 @@ pub struct GatewayConfig {
     pub step_retry_backoff: Duration,
     /// `Retry-After` seconds advertised on 429/503 responses.
     pub retry_after_secs: u64,
+    /// When set, arm the span recorder and write a Chrome `trace_event`
+    /// JSON file here (rewritten periodically and on stepper exit). Load
+    /// it in `chrome://tracing` / Perfetto: track 0 is the stepper (step
+    /// and kernel-phase spans), one track per request id for lifecycle
+    /// events.
+    pub trace_path: Option<PathBuf>,
 }
 
 impl Default for GatewayConfig {
@@ -108,6 +119,7 @@ impl Default for GatewayConfig {
             step_retry_max: 3,
             step_retry_backoff: Duration::from_millis(10),
             retry_after_secs: 1,
+            trace_path: None,
         }
     }
 }
@@ -207,6 +219,10 @@ enum EngineCmd {
     Submit { request: Request, events: mpsc::Sender<TokenEvent>, deadline: Option<Instant> },
     Cancel { id: u64 },
     Scrape { reply: mpsc::Sender<String> },
+    /// `/debug/steps`: JSON dump of the stepper's recent-step ring.
+    DebugSteps { reply: mpsc::Sender<String> },
+    /// `/debug/tree`: JSON snapshot of prefix-tree residency and sharing.
+    DebugTree { reply: mpsc::Sender<String> },
     Drain,
 }
 
@@ -243,6 +259,11 @@ impl Gateway {
         // Arm failpoints from the environment (no-op when FAILPOINTS is
         // unset) so the chaos CI leg reaches gateways spawned anywhere.
         failpoint::arm_from_env();
+        // Arm the span recorder only when a trace file was requested; the
+        // disarmed path stays one relaxed atomic load per site.
+        if cfg.trace_path.is_some() {
+            trace::arm();
+        }
         let (cmd_tx, cmd_rx) = mpsc::channel::<EngineCmd>();
         let stop = Arc::new(AtomicBool::new(false));
         let shared = Arc::new(GatewayShared::new());
@@ -313,7 +334,27 @@ struct StreamState {
     sent: usize,
     /// Absolute deadline derived from the request's `deadline_ms`.
     deadline: Option<Instant>,
+    /// When the previous completion token was streamed; feeds the
+    /// `inter_token_seconds` histogram.
+    last_token_at: Option<Instant>,
 }
+
+/// One completed engine step, kept in a bounded ring for `/debug/steps`.
+#[derive(Clone, Copy)]
+struct StepRecord {
+    /// Monotone step ordinal (the step-duration histogram's count).
+    seq: u64,
+    /// Milliseconds since gateway start when the step was observed.
+    ts_ms: u64,
+    timing: StepTiming,
+}
+
+/// `/debug/steps` ring capacity.
+const STEP_RING_CAP: usize = 256;
+
+/// Stepper passes between periodic trace-file rewrites when `--trace-out`
+/// is set (the file is also written on stepper exit).
+const TRACE_FLUSH_PASSES: u64 = 1024;
 
 /// Watchdog thread: flips the shared `stalled` flag while the stepper's
 /// heartbeat is stale. The stepper beats on every loop pass (including
@@ -348,13 +389,35 @@ fn stepper_loop<R: ModelRunner>(
     let mut streams: BTreeMap<u64, StreamState> = BTreeMap::new();
     let mut draining = false;
     let mut step_retries = 0usize;
+    // `/debug/steps` ring + the ordinal of the last step pushed into it
+    // (the step-duration histogram count doubles as a step sequence
+    // number, so failed/retried passes never duplicate stale records).
+    let mut step_ring: VecDeque<StepRecord> = VecDeque::with_capacity(STEP_RING_CAP);
+    let mut steps_seen: u64 = 0;
+    // Accumulated trace events when `--trace-out` is set; the Chrome JSON
+    // file is rewritten periodically so a long-running gateway can be
+    // inspected without a clean shutdown.
+    let mut trace_events: Vec<trace::TraceEvent> = Vec::new();
+    let mut passes: u64 = 0;
     loop {
         shared.beat();
+        passes += 1;
+        if cfg.trace_path.is_some() && passes % TRACE_FLUSH_PASSES == 0 {
+            flush_trace(cfg.trace_path.as_deref(), &mut trace_events);
+        }
         // Pull every pending command; commands are cheap, steps are not.
         let mut disconnected = false;
         loop {
             match cmd_rx.try_recv() {
-                Ok(cmd) => handle_cmd(cmd, &mut engine, &mut streams, &mut draining, &cfg, &shared),
+                Ok(cmd) => handle_cmd(
+                    cmd,
+                    &mut engine,
+                    &mut streams,
+                    &mut draining,
+                    &cfg,
+                    &shared,
+                    &step_ring,
+                ),
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
                     disconnected = true;
@@ -382,11 +445,20 @@ fn stepper_loop<R: ModelRunner>(
                     &cfg,
                     &mut step_retries,
                 );
+                note_step(&engine, &shared, &mut step_ring, &mut steps_seen);
             }
             // Park until work arrives, with a bounded wait so a Drain that
             // raced past the try_recv loop is still noticed promptly.
             match cmd_rx.recv_timeout(Duration::from_millis(20)) {
-                Ok(cmd) => handle_cmd(cmd, &mut engine, &mut streams, &mut draining, &cfg, &shared),
+                Ok(cmd) => handle_cmd(
+                    cmd,
+                    &mut engine,
+                    &mut streams,
+                    &mut draining,
+                    &cfg,
+                    &shared,
+                    &step_ring,
+                ),
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
@@ -394,10 +466,12 @@ fn stepper_loop<R: ModelRunner>(
         }
         let finished =
             run_step_supervised(&mut engine, &mut streams, &shared, &cfg, &mut step_retries);
+        note_step(&engine, &shared, &mut step_ring, &mut steps_seen);
         // Stream freshly decoded tokens. A send error means the handler is
         // gone without managing to send Cancel (it died); reap eagerly so
         // the sequence stops burning decode slots.
         let mut dead: Vec<u64> = Vec::new();
+        let mut inter_token_gaps: Vec<f64> = Vec::new();
         for (&id, st) in streams.iter_mut() {
             let Some(completion) = engine.completion_of(id) else { continue };
             let total = completion.len();
@@ -408,12 +482,25 @@ fn stepper_loop<R: ModelRunner>(
                     break;
                 }
                 st.sent += 1;
+                let now = Instant::now();
+                if let Some(prev) = st.last_token_at.replace(now) {
+                    // Gap since this request's previous token (the first
+                    // token's latency is the TTFT histogram's job).
+                    inter_token_gaps.push(now.duration_since(prev).as_secs_f64());
+                }
             }
+        }
+        for dt in inter_token_gaps {
+            engine.metrics_mut().record_inter_token(dt);
         }
         for id in dead {
             streams.remove(&id);
             engine.cancel(id);
             engine.release(id);
+            if trace::armed() {
+                trace::instant("cancelled", "request", id, vec![("why", "disconnect".into())]);
+            }
+            log::debug!("request {id}: client gone mid-stream; residency released");
         }
         for f in finished {
             let id = f.request.id;
@@ -422,10 +509,27 @@ fn stepper_loop<R: ModelRunner>(
                 let _ = st.events.send(TokenEvent::Done { completion_tokens: n });
             }
             engine.release(id);
+            if trace::armed() {
+                trace::instant(
+                    "finished",
+                    "request",
+                    id,
+                    vec![("completion_tokens", n.to_string())],
+                );
+            }
+            log::debug!("request {id}: finished with {n} completion tokens");
         }
         if cfg.decode_interval > Duration::ZERO {
             thread::sleep(cfg.decode_interval);
         }
+    }
+    if cfg.trace_path.is_some() {
+        flush_trace(cfg.trace_path.as_deref(), &mut trace_events);
+        log::info!(
+            "wrote {} trace events to {}",
+            trace_events.len(),
+            cfg.trace_path.as_ref().unwrap().display()
+        );
     }
     // Terminal-event guarantee on the stepper's own exit path: any stream
     // still open (e.g. the command channel disconnected mid-flight) gets
@@ -434,6 +538,74 @@ fn stepper_loop<R: ModelRunner>(
         let _ = st
             .events
             .send(TokenEvent::Error { message: "gateway stepper exiting".to_string() });
+    }
+}
+
+/// Record the most recent *completed* step into the `/debug/steps` ring and
+/// (when tracing is armed) emit its Chrome spans. Keyed on the step-duration
+/// histogram count so passes that failed or only pumped commands are skipped.
+fn note_step<R: ModelRunner>(
+    engine: &Engine<R>,
+    shared: &GatewayShared,
+    ring: &mut VecDeque<StepRecord>,
+    steps_seen: &mut u64,
+) {
+    let n = engine.metrics().step_duration_seconds.total();
+    if n == *steps_seen {
+        return;
+    }
+    *steps_seen = n;
+    let timing = engine.last_step_timing();
+    if ring.len() == STEP_RING_CAP {
+        ring.pop_front();
+    }
+    ring.push_back(StepRecord { seq: n, ts_ms: shared.now_ms(), timing });
+    if trace::armed() {
+        emit_step_spans(n, &timing);
+    }
+}
+
+/// Emit one "step" span plus its per-phase child spans on the stepper track
+/// (tid 0). Phases are laid out back-to-back from the step's start; the
+/// kernel's chunk-first/seq-first sub-phases ran inside the decode call, so
+/// the layout is a readable approximation rather than exact wall intervals.
+fn emit_step_spans(seq: u64, t: &StepTiming) {
+    let end_us = trace::now_us();
+    let total_us = (t.total_s * 1e6) as u64;
+    let start = end_us.saturating_sub(total_us);
+    trace::span(
+        "step",
+        "step",
+        0,
+        start,
+        total_us,
+        vec![
+            ("seq", seq.to_string()),
+            ("decode_batch", t.decode_batch.to_string()),
+            ("prefill_slices", t.prefill_slices.to_string()),
+            ("admitted", t.admitted.to_string()),
+            ("finished", t.finished.to_string()),
+        ],
+    );
+    let mut cursor = start;
+    for (name, secs) in t.phases() {
+        let dur = (secs * 1e6) as u64;
+        if dur == 0 {
+            continue;
+        }
+        let cat = if matches!(name, "chunk_first" | "seq_first") { "kernel" } else { "step" };
+        trace::span(name, cat, 0, cursor, dur, Vec::new());
+        cursor = cursor.saturating_add(dur);
+    }
+}
+
+/// Drain buffered span-recorder events into `events` and rewrite the Chrome
+/// trace file. Quiet on success (called periodically); warns on I/O errors.
+fn flush_trace(path: Option<&std::path::Path>, events: &mut Vec<trace::TraceEvent>) {
+    let Some(path) = path else { return };
+    events.extend(trace::drain());
+    if let Err(e) = trace::write_chrome_trace_file(path, events) {
+        log::warn!("failed to write trace file {}: {e}", path.display());
     }
 }
 
@@ -473,6 +645,14 @@ fn run_step_supervised<R: ModelRunner>(
             if *step_retries < cfg.step_retry_max {
                 *step_retries += 1;
                 shared.step_retries.fetch_add(1, Ordering::SeqCst);
+                if trace::armed() {
+                    trace::instant(
+                        "step_retry",
+                        "fault",
+                        0,
+                        vec![("attempt", step_retries.to_string()), ("error", msg.clone())],
+                    );
+                }
                 log::warn!(
                     "engine step failed (retry {}/{}): {msg}",
                     *step_retries,
@@ -481,6 +661,9 @@ fn run_step_supervised<R: ModelRunner>(
                 thread::sleep(cfg.step_retry_backoff * *step_retries as u32);
             } else {
                 *step_retries = 0;
+                if trace::armed() {
+                    trace::instant("step_failed", "fault", 0, vec![("error", msg.clone())]);
+                }
                 log::error!("engine step failed after retries, quarantining: {msg}");
                 let victims = match failpoint::seq_attribution(&msg) {
                     Some(id) => vec![id],
@@ -495,6 +678,9 @@ fn run_step_supervised<R: ModelRunner>(
             *step_retries = 0;
             shared.engine_panics.fetch_add(1, Ordering::SeqCst);
             let msg = panic_message(payload.as_ref());
+            if trace::armed() {
+                trace::instant("step_panic", "fault", 0, vec![("message", msg.clone())]);
+            }
             log::error!("engine step panicked ({msg}); recovering");
             let (orphans, finished) = engine.recover_after_panic();
             let mut victims = orphans;
@@ -612,6 +798,7 @@ fn handle_cmd<R: ModelRunner>(
     draining: &mut bool,
     cfg: &GatewayConfig,
     shared: &GatewayShared,
+    step_ring: &VecDeque<StepRecord>,
 ) {
     match cmd {
         EngineCmd::Submit { mut request, events, deadline } => {
@@ -622,23 +809,173 @@ fn handle_cmd<R: ModelRunner>(
             }
             request.arrival_s = engine.clock();
             let id = request.id;
+            let prompt_tokens = request.prompt.len();
             if engine.try_submit(request) {
-                streams.insert(id, StreamState { events, sent: 0, deadline });
+                streams.insert(id, StreamState { events, sent: 0, deadline, last_token_at: None });
+                if trace::armed() {
+                    trace::instant(
+                        "queued",
+                        "request",
+                        id,
+                        vec![("prompt_tokens", prompt_tokens.to_string())],
+                    );
+                }
+                log::debug!("request {id}: queued ({prompt_tokens} prompt tokens)");
             } else {
                 let queued = engine.scheduler().queued();
                 let _ = events.send(TokenEvent::Rejected { queued, draining: false });
+                log::debug!("request {id}: rejected, admission queue full ({queued} queued)");
             }
         }
         EngineCmd::Cancel { id } => {
             streams.remove(&id);
             engine.cancel(id);
             engine.release(id);
+            if trace::armed() {
+                trace::instant("cancelled", "request", id, vec![("why", "client".into())]);
+            }
+            log::debug!("request {id}: cancelled by client; residency released");
         }
         EngineCmd::Scrape { reply } => {
             let _ = reply.send(render_metrics(engine, streams.len(), &cfg.metrics_prefix, shared));
         }
+        EngineCmd::DebugSteps { reply } => {
+            let _ = reply.send(debug_steps_json(step_ring).pretty());
+        }
+        EngineCmd::DebugTree { reply } => {
+            let _ = reply.send(debug_tree_json(engine).pretty());
+        }
         EngineCmd::Drain => *draining = true,
     }
+}
+
+/// `/debug/steps` body: the ring of recent engine steps, newest last, with
+/// per-phase wall times in seconds.
+fn debug_steps_json(ring: &VecDeque<StepRecord>) -> Json {
+    let steps: Vec<Json> = ring
+        .iter()
+        .map(|r| {
+            let mut s = Json::obj();
+            s.set("seq", r.seq).set("ts_ms", r.ts_ms).set("total_s", r.timing.total_s);
+            let mut phases = Json::obj();
+            for (name, secs) in r.timing.phases() {
+                phases.set(name, secs);
+            }
+            s.set("phases", phases)
+                .set("decode_batch", r.timing.decode_batch)
+                .set("prefill_slices", r.timing.prefill_slices)
+                .set("admitted", r.timing.admitted)
+                .set("finished", r.timing.finished);
+            s
+        })
+        .collect();
+    let mut j = Json::obj();
+    j.set("count", steps.len()).set("capacity", STEP_RING_CAP).set("steps", steps);
+    j
+}
+
+/// `/debug/tree` body: a residency snapshot of the prefix tree — sharing
+/// ratios, shared-vs-private split of the live decode context, context-cache
+/// hit rate, pool occupancy, and per-pin retention residency.
+fn debug_tree_json<R: ModelRunner>(engine: &Engine<R>) -> Json {
+    let tree = engine.tree();
+    let stats = tree.sharing_stats();
+    let (rebuilds, hits) = tree.context_stats();
+    let pool = tree.pool();
+    let chunk_size = tree.shape().chunk_size.max(1);
+
+    let mut j = Json::obj();
+    j.set("sequences", tree.num_sequences())
+        .set("epoch", tree.epoch())
+        .set("generation", tree.generation());
+
+    let mut tokens = Json::obj();
+    tokens
+        .set("logical", stats.logical_tokens)
+        .set("physical", stats.physical_tokens)
+        .set("sharing_ratio", stats.sharing_ratio());
+    j.set("tokens", tokens);
+
+    let mut chunks = Json::obj();
+    chunks
+        .set("nodes", stats.chunks)
+        .set("in_use", pool.in_use())
+        .set("allocated", pool.allocated())
+        .set("in_use_bytes", pool.in_use_bytes())
+        .set("resident_bytes", pool.resident_bytes());
+    j.set("chunks", chunks);
+
+    // Deepest sequence in chunk hops — how long the phase-1 chunk-first
+    // walk is for the worst-case sequence.
+    let max_depth = tree
+        .sequence_ids()
+        .into_iter()
+        .filter_map(|s| tree.sequence_len(s))
+        .map(|len| len.div_ceil(chunk_size))
+        .max()
+        .unwrap_or(0);
+    j.set("max_chunk_depth", max_depth);
+
+    // Shared vs private split of the *current decode context*: a chunk is
+    // shared when its row interval covers more than one sequence (phase-1
+    // chunk-first work), private otherwise (phase-2 seq-first work).
+    let ctx = tree.context_fresh();
+    let mut shared_chunks = 0usize;
+    let mut private_chunks = 0usize;
+    let mut shared_tokens = 0usize;
+    let mut private_tokens = 0usize;
+    for e in ctx.shared() {
+        shared_chunks += 1;
+        shared_tokens += pool.get(e.chunk).len();
+    }
+    for e in ctx.private() {
+        private_chunks += 1;
+        private_tokens += pool.get(e.chunk).len();
+    }
+    let mut context = Json::obj();
+    context
+        .set("shared_chunks", shared_chunks)
+        .set("private_chunks", private_chunks)
+        .set("shared_tokens", shared_tokens)
+        .set("private_tokens", private_tokens)
+        .set("cache_rebuilds", rebuilds)
+        .set("cache_hits", hits)
+        .set("cache_hit_rate", if rebuilds + hits > 0 {
+            hits as f64 / (rebuilds + hits) as f64
+        } else {
+            0.0
+        });
+    j.set("context", context);
+
+    let mut retain = Json::obj();
+    match engine.retainer() {
+        Some(r) => {
+            retain
+                .set("enabled", true)
+                .set("budget_chunks", r.budget_chunks())
+                .set("pinned_count", r.pinned_count())
+                .set("pinned_tokens", r.pinned_tokens())
+                .set("evicted_pins_total", r.evicted_pins_total())
+                .set("evicted_chunks_total", r.evicted_chunks_total());
+            let pins: Vec<Json> = r
+                .pin_residency()
+                .into_iter()
+                .map(|(prefix_tokens, tokens, lru_age)| {
+                    let mut p = Json::obj();
+                    p.set("prefix_tokens", prefix_tokens)
+                        .set("tokens", tokens)
+                        .set("lru_age", lru_age);
+                    p
+                })
+                .collect();
+            retain.set("pins", pins);
+        }
+        None => {
+            retain.set("enabled", false);
+        }
+    }
+    j.set("retain", retain);
+    j
 }
 
 /// The `/metrics` document: the engine's request/step series plus gateway
@@ -651,6 +988,42 @@ fn render_metrics<R: ModelRunner>(
     shared: &GatewayShared,
 ) -> String {
     let mut out = render_exposition(engine.metrics(), prefix);
+    // True Prometheus histograms (cumulative `le` buckets + _sum/_count):
+    // request latency distributions and per-phase step timing, so p50/p99
+    // are computable server-side instead of from client-side sampling.
+    let m = engine.metrics();
+    push_histogram(
+        &mut out,
+        prefix,
+        "ttft_seconds",
+        "time to first token (seconds), per finished request",
+        &m.ttft_seconds,
+    );
+    push_histogram(
+        &mut out,
+        prefix,
+        "inter_token_seconds",
+        "gap between consecutive streamed tokens of one request (seconds)",
+        &m.inter_token_seconds,
+    );
+    push_histogram(
+        &mut out,
+        prefix,
+        "step_duration_seconds",
+        "wall time of one engine step (seconds)",
+        &m.step_duration_seconds,
+    );
+    let phase_children: Vec<(Vec<(&str, String)>, &crate::util::stats::LogHistogram)> = m
+        .step_phases()
+        .map(|(phase, h)| (vec![("phase", phase.to_string())], h))
+        .collect();
+    push_histogram_family(
+        &mut out,
+        prefix,
+        "step_phase_seconds",
+        "wall time per engine-step phase (seconds); chunk_first/seq_first are the kernel's two partition phases",
+        &phase_children,
+    );
     // Failure-domain observability: panic/rebuild/timeout/stall counters
     // plus a live invariant probe, so chaos tests (and dashboards) can
     // verify recovery from the outside.
@@ -935,6 +1308,41 @@ fn err_json(msg: &str) -> Json {
     j
 }
 
+/// Ask the stepper thread for a rendered document (metrics or a debug
+/// snapshot) over a one-shot reply channel and serve it; 503 with
+/// `Retry-After` when the stepper is gone or wedged.
+fn stepper_query(
+    writer: &mut TcpStream,
+    cmd_tx: &mpsc::Sender<EngineCmd>,
+    retry_after: &str,
+    content_type: &str,
+    make_cmd: impl FnOnce(mpsc::Sender<String>) -> EngineCmd,
+) -> std::io::Result<()> {
+    let (reply_tx, reply_rx) = mpsc::channel();
+    if cmd_tx.send(make_cmd(reply_tx)).is_err() {
+        return http::write_json_with(
+            writer,
+            503,
+            &[("Retry-After", retry_after)],
+            &err_json("gateway is shutting down"),
+        );
+    }
+    match reply_rx.recv_timeout(Duration::from_secs(10)) {
+        Ok(mut text) => {
+            if !text.ends_with('\n') {
+                text.push('\n');
+            }
+            http::write_response(writer, 200, content_type, text.as_bytes())
+        }
+        Err(_) => http::write_json_with(
+            writer,
+            503,
+            &[("Retry-After", retry_after)],
+            &err_json("stepper unavailable"),
+        ),
+    }
+}
+
 fn handle_connection(
     stream: TcpStream,
     cmd_tx: mpsc::Sender<EngineCmd>,
@@ -973,28 +1381,28 @@ fn handle_connection(
             j.set("status", "ok");
             http::write_json(&mut writer, 200, &j)
         }
-        ("GET", "/metrics") => {
-            let (reply_tx, reply_rx) = mpsc::channel();
-            if cmd_tx.send(EngineCmd::Scrape { reply: reply_tx }).is_err() {
-                return http::write_json_with(
-                    &mut writer,
-                    503,
-                    &[("Retry-After", &retry_after)],
-                    &err_json("gateway is shutting down"),
-                );
-            }
-            match reply_rx.recv_timeout(Duration::from_secs(10)) {
-                Ok(text) => {
-                    http::write_response(&mut writer, 200, "text/plain; version=0.0.4", text.as_bytes())
-                }
-                Err(_) => http::write_json_with(
-                    &mut writer,
-                    503,
-                    &[("Retry-After", &retry_after)],
-                    &err_json("metrics unavailable"),
-                ),
-            }
-        }
+        ("GET", "/metrics") => stepper_query(
+            &mut writer,
+            &cmd_tx,
+            &retry_after,
+            // The exposition content type scrapers expect (format 0.0.4).
+            "text/plain; version=0.0.4; charset=utf-8",
+            |reply| EngineCmd::Scrape { reply },
+        ),
+        ("GET", "/debug/steps") => stepper_query(
+            &mut writer,
+            &cmd_tx,
+            &retry_after,
+            "application/json",
+            |reply| EngineCmd::DebugSteps { reply },
+        ),
+        ("GET", "/debug/tree") => stepper_query(
+            &mut writer,
+            &cmd_tx,
+            &retry_after,
+            "application/json",
+            |reply| EngineCmd::DebugTree { reply },
+        ),
         ("POST", "/v1/generate") => handle_generate(&req, writer, cmd_tx, ids, &tokenizer, cfg),
         ("GET" | "POST", _) => http::write_json(&mut writer, 404, &err_json("not found")),
         _ => http::write_json(&mut writer, 405, &err_json("method not allowed")),
@@ -1086,6 +1494,12 @@ fn handle_generate(
         Err(msg) => return http::write_json(&mut writer, 400, &err_json(&msg)),
     };
     let id = ids.fetch_add(1, Ordering::SeqCst);
+    log::debug!(
+        "request {id}: POST /v1/generate ({} prompt tokens, tenant {}, max_new {})",
+        params.tokens.len(),
+        params.tenant,
+        params.max_new_tokens
+    );
     let request = Request {
         id,
         arrival_s: 0.0, // stamped with the engine clock at submit

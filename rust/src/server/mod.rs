@@ -8,9 +8,11 @@
 //! module supplies that missing layer:
 //!
 //! - [`gateway`] — `POST /v1/generate` with SSE token streaming,
-//!   `GET /healthz`, `GET /metrics` (Prometheus text format); bounded
-//!   admission (429 backpressure), disconnect cancellation, graceful
-//!   drain. Threading model documented in DESIGN.md.
+//!   `GET /healthz`, `GET /metrics` (Prometheus text format 0.0.4 with
+//!   true histograms), `GET /debug/steps` and `GET /debug/tree` (JSON
+//!   introspection); bounded admission (429 backpressure), disconnect
+//!   cancellation, graceful drain, optional Chrome `trace_event` output
+//!   (`--trace-out`). Threading model documented in DESIGN.md.
 //! - [`http`] — minimal HTTP/1.1 framing shared by server and client.
 //! - [`client`] — blocking client + SSE reader for tests and tooling.
 //! - [`bench`] — closed-loop multi-tenant load generator
@@ -27,6 +29,7 @@ pub use bench::{
     ChaosReport, ComparisonConfig, MixedBenchConfig, MixedReport, PolicyComparisonConfig,
 };
 pub use client::{
-    gauge_value, generate_with_retry, labeled_gauge_value, GenerateStream, Response, StreamEvent,
+    gauge_value, generate_with_retry, histogram_quantile, histogram_snapshot, labeled_gauge_value,
+    lint_exposition, GenerateStream, HistogramSnapshot, Response, StreamEvent,
 };
 pub use gateway::{Gateway, GatewayConfig, TokenEvent};

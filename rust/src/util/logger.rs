@@ -1,19 +1,95 @@
 //! Minimal `log`-crate backend writing to stderr with a monotonic timestamp.
 //!
-//! Level is controlled by `CHUNK_ATTN_LOG` (`error|warn|info|debug|trace`,
-//! default `info`). Install once with [`init`]; repeated calls are no-ops.
+//! Verbosity is controlled by `LOG_LEVEL`, an env_logger-style filter list:
+//! `LOG_LEVEL=debug` sets the default level, and
+//! `LOG_LEVEL=gateway=debug,engine=info` raises or lowers individual
+//! modules — a spec name matches any `::`-separated segment of the log
+//! target, so `gateway` covers `chunk_attention::server::gateway`. The
+//! legacy `CHUNK_ATTN_LOG` (`error|warn|info|debug|trace`) still sets the
+//! default level when `LOG_LEVEL` is unset. Install once with [`init`];
+//! repeated calls are no-ops.
 
 use log::{Level, LevelFilter, Metadata, Record};
 use std::sync::OnceLock;
 use std::time::Instant;
 
+fn parse_level(s: &str) -> Option<LevelFilter> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "off" => Some(LevelFilter::Off),
+        "error" => Some(LevelFilter::Error),
+        "warn" => Some(LevelFilter::Warn),
+        "info" => Some(LevelFilter::Info),
+        "debug" => Some(LevelFilter::Debug),
+        "trace" => Some(LevelFilter::Trace),
+        _ => None,
+    }
+}
+
+/// Parsed filter config: a default level plus per-module overrides.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Filters {
+    default: LevelFilter,
+    /// `(module segment, level)`; later entries win on overlap.
+    modules: Vec<(String, LevelFilter)>,
+}
+
+impl Filters {
+    /// Parse a `LOG_LEVEL` spec: comma-separated entries, each either a
+    /// bare level (sets the default) or `module=level`. Unparseable
+    /// entries are ignored rather than fatal — a misconfigured filter
+    /// must never take logging down with it.
+    fn parse(spec: &str, fallback_default: LevelFilter) -> Filters {
+        let mut default = fallback_default;
+        let mut modules = Vec::new();
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            match entry.split_once('=') {
+                Some((module, level)) => {
+                    if let Some(l) = parse_level(level) {
+                        modules.push((module.trim().to_string(), l));
+                    }
+                }
+                None => {
+                    if let Some(l) = parse_level(entry) {
+                        default = l;
+                    }
+                }
+            }
+        }
+        Filters { default, modules }
+    }
+
+    /// Effective level for a log target (a Rust module path). A module
+    /// spec matches any `::` path segment, so `gateway` covers
+    /// `chunk_attention::server::gateway`; the last matching entry wins.
+    fn level_for(&self, target: &str) -> LevelFilter {
+        let mut level = self.default;
+        for (module, l) in &self.modules {
+            if target.split("::").any(|seg| seg == module) || target == module {
+                level = *l;
+            }
+        }
+        level
+    }
+
+    /// Upper bound across default and overrides — what `log::max_level`
+    /// must be set to so no override is filtered out upstream.
+    fn max(&self) -> LevelFilter {
+        self.modules.iter().map(|(_, l)| *l).fold(self.default, |a, b| a.max(b))
+    }
+}
+
 struct StderrLogger {
     start: Instant,
+    filters: Filters,
 }
 
 impl log::Log for StderrLogger {
     fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
+        metadata.level() <= self.filters.level_for(metadata.target())
     }
 
     fn log(&self, record: &Record) {
@@ -38,25 +114,71 @@ static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
 
 /// Install the logger (idempotent).
 pub fn init() {
-    let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now() });
-    if log::set_logger(logger).is_ok() {
-        let level = match std::env::var("CHUNK_ATTN_LOG").as_deref() {
-            Ok("error") => LevelFilter::Error,
-            Ok("warn") => LevelFilter::Warn,
-            Ok("debug") => LevelFilter::Debug,
-            Ok("trace") => LevelFilter::Trace,
-            _ => LevelFilter::Info,
+    let logger = LOGGER.get_or_init(|| {
+        // Legacy default-level knob, overridden by any LOG_LEVEL default.
+        let fallback = std::env::var("CHUNK_ATTN_LOG")
+            .ok()
+            .and_then(|v| parse_level(&v))
+            .unwrap_or(LevelFilter::Info);
+        let filters = match std::env::var("LOG_LEVEL") {
+            Ok(spec) => Filters::parse(&spec, fallback),
+            Err(_) => Filters { default: fallback, modules: Vec::new() },
         };
-        log::set_max_level(level);
+        StderrLogger { start: Instant::now(), filters }
+    });
+    if log::set_logger(logger).is_ok() {
+        log::set_max_level(logger.filters.max());
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
         log::info!("logger smoke test");
+    }
+
+    #[test]
+    fn parse_bare_level_sets_default() {
+        let f = Filters::parse("debug", LevelFilter::Info);
+        assert_eq!(f.default, LevelFilter::Debug);
+        assert!(f.modules.is_empty());
+        assert_eq!(f.max(), LevelFilter::Debug);
+    }
+
+    #[test]
+    fn parse_per_module_overrides() {
+        let f = Filters::parse("gateway=debug,engine=warn", LevelFilter::Info);
+        assert_eq!(f.default, LevelFilter::Info);
+        assert_eq!(f.level_for("chunk_attention::server::gateway"), LevelFilter::Debug);
+        assert_eq!(f.level_for("chunk_attention::coordinator::engine"), LevelFilter::Warn);
+        assert_eq!(f.level_for("chunk_attention::kvcache::tree"), LevelFilter::Info);
+        assert_eq!(f.max(), LevelFilter::Debug);
+    }
+
+    #[test]
+    fn parse_mixed_default_and_modules() {
+        let f = Filters::parse("warn,gateway=trace", LevelFilter::Info);
+        assert_eq!(f.default, LevelFilter::Warn);
+        assert_eq!(f.level_for("chunk_attention::server::gateway"), LevelFilter::Trace);
+        assert_eq!(f.level_for("other"), LevelFilter::Warn);
+        assert_eq!(f.max(), LevelFilter::Trace);
+    }
+
+    #[test]
+    fn garbage_entries_are_ignored() {
+        let f = Filters::parse("nonsense,gateway=loud,,=,engine=debug", LevelFilter::Info);
+        assert_eq!(f.default, LevelFilter::Info);
+        assert_eq!(f.modules, vec![("engine".to_string(), LevelFilter::Debug)]);
+    }
+
+    #[test]
+    fn exact_target_match_works_without_path() {
+        let f = Filters::parse("bench=debug", LevelFilter::Error);
+        assert_eq!(f.level_for("bench"), LevelFilter::Debug);
     }
 }

@@ -11,6 +11,7 @@ pub mod pbt;
 pub mod rng;
 pub mod stats;
 pub mod threadpool;
+pub mod trace;
 
 pub use bench::{BenchSuite, Mode};
 pub use cli::{Args, Cli};

@@ -159,6 +159,7 @@ pub struct LogHistogram {
     bounds: Vec<f64>,
     counts: Vec<u64>,
     total: u64,
+    sum: f64,
 }
 
 impl LogHistogram {
@@ -172,12 +173,19 @@ impl LogHistogram {
             bounds.push(b);
             b *= growth;
         }
-        LogHistogram { counts: vec![0; n + 1], bounds, total: 0 }
+        LogHistogram { counts: vec![0; n + 1], bounds, total: 0, sum: 0.0 }
     }
 
     /// Default latency histogram: 1µs .. ~17s in 32 buckets (×1.7 growth).
     pub fn latency_us() -> Self {
         Self::new(1.0, 1.7, 32)
+    }
+
+    /// Seconds-domain histogram for serving latencies: 10µs .. ~48s in 30
+    /// buckets (×1.7 growth). Wide enough that one scheme serves TTFT,
+    /// inter-token gaps, whole steps, and sub-millisecond step phases.
+    pub fn time_seconds() -> Self {
+        Self::new(1e-5, 1.7, 30)
     }
 
     pub fn record(&mut self, x: f64) {
@@ -187,10 +195,28 @@ impl LogHistogram {
         };
         self.counts[idx] += 1;
         self.total += 1;
+        self.sum += x;
     }
 
     pub fn total(&self) -> u64 {
         self.total
+    }
+
+    /// Sum of every recorded sample (the Prometheus `_sum` series).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Finite bucket upper bounds (ascending). The overflow bucket's bound
+    /// is implicitly `+Inf`.
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Per-bucket counts; `counts().len() == bounds().len() + 1`, the last
+    /// entry being the overflow (`+Inf`) bucket.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
     }
 
     /// Approximate quantile from bucket boundaries (upper bound of the bucket
@@ -330,6 +356,21 @@ mod tests {
         let mut h = LogHistogram::new(1.0, 2.0, 4); // buckets up to 8
         h.record(1e9);
         assert_eq!(h.quantile(1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn histogram_sum_and_bucket_accessors() {
+        let mut h = LogHistogram::new(1.0, 2.0, 4); // bounds 1,2,4,8
+        for x in [0.5, 3.0, 100.0] {
+            h.record(x);
+        }
+        assert_eq!(h.total(), 3);
+        assert!((h.sum() - 103.5).abs() < 1e-12);
+        assert_eq!(h.bounds(), &[1.0, 2.0, 4.0, 8.0]);
+        assert_eq!(h.counts(), &[1, 0, 1, 0, 1]); // 0.5→b0, 3.0→b2, 100→+Inf
+        assert_eq!(h.counts().len(), h.bounds().len() + 1);
+        // Count consistency: bucket counts sum to total.
+        assert_eq!(h.counts().iter().sum::<u64>(), h.total());
     }
 
     #[test]

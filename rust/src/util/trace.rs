@@ -1,0 +1,323 @@
+//! Lightweight span tracing with Chrome `trace_event` export.
+//!
+//! Mirrors the arming discipline of [`crate::util::failpoint`]: trace sites
+//! are compiled into the serving hot paths unconditionally and evaluate to
+//! *nothing* until armed — the disarmed fast path is a single relaxed atomic
+//! load, so shipping the sites costs no measurable overhead (asserted by the
+//! `table3_microkernel` bench staying within run-to-run noise).
+//!
+//! Two kinds of data flow through this module:
+//!
+//! - **Trace events** ([`span`] / [`instant`]): buffered only while armed
+//!   ([`arm`]), drained with [`drain`], and serialized to the Chrome
+//!   `trace_event` JSON array format by [`write_chrome_trace`] so a run
+//!   opens directly in `chrome://tracing` / Perfetto. Events carry a `tid`
+//!   used as a logical track: track 0 is the engine stepper; per-request
+//!   lifecycle events use the request id as their track so each request
+//!   renders as its own timeline row.
+//! - **Kernel phase timings** ([`record_kernel_phases`] /
+//!   [`take_kernel_phases`]): a thread-local side channel the TPP kernel
+//!   writes (chunk-first and seq-first phase durations) and the engine
+//!   drains after each `runner.decode` call. This path is *always on* —
+//!   the per-phase histograms on `/metrics` must populate without tracing
+//!   armed — and costs two `Instant::now` reads plus one `Cell` store per
+//!   kernel invocation.
+//!
+//! Timestamps are microseconds on a process-wide monotonic epoch
+//! ([`now_us`]), established lazily on first use so spans from different
+//! threads share one clock.
+
+use std::cell::Cell;
+use std::io::{self, Write};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+/// Upper bound on buffered events; beyond it new events are dropped (and
+/// counted in [`dropped`]) so a long armed run cannot exhaust memory.
+const MAX_EVENTS: usize = 1 << 20;
+
+/// One Chrome `trace_event` record.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: String,
+    /// Event category (`"step"`, `"kernel"`, `"request"`, `"fault"`).
+    pub cat: &'static str,
+    /// `'X'` = complete span (uses `dur_us`), `'i'` = instant event.
+    pub ph: char,
+    /// Start time, microseconds since the trace epoch.
+    pub ts_us: u64,
+    /// Duration for `'X'` events; ignored for instants.
+    pub dur_us: u64,
+    /// Logical track (Chrome thread id): 0 = engine stepper, request
+    /// events use the request id.
+    pub tid: u64,
+    /// Extra key/value payload rendered into the event's `args` object.
+    pub args: Vec<(&'static str, String)>,
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process trace epoch (monotonic).
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+fn buffer() -> MutexGuard<'static, Vec<TraceEvent>> {
+    static BUF: OnceLock<Mutex<Vec<TraceEvent>>> = OnceLock::new();
+    BUF.get_or_init(|| Mutex::new(Vec::new()))
+        .lock()
+        // A panic unwinding through an armed caller can poison this lock;
+        // the buffer is always left consistent, so recover the value.
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// Cheap check used by call sites to skip span assembly while disarmed.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Start collecting trace events (pins the epoch if not already set).
+pub fn arm() {
+    epoch();
+    ARMED.store(true, Ordering::SeqCst);
+}
+
+/// Stop collecting. Buffered events stay available to [`drain`].
+pub fn disarm() {
+    ARMED.store(false, Ordering::SeqCst);
+}
+
+/// Take every buffered event, leaving the buffer empty.
+pub fn drain() -> Vec<TraceEvent> {
+    std::mem::take(&mut *buffer())
+}
+
+/// Events discarded because the buffer hit [`MAX_EVENTS`].
+pub fn dropped() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+fn push(ev: TraceEvent) {
+    let mut buf = buffer();
+    if buf.len() >= MAX_EVENTS {
+        DROPPED.fetch_add(1, Ordering::Relaxed);
+    } else {
+        buf.push(ev);
+    }
+}
+
+/// Record a complete span (`ph: "X"`). No-op while disarmed.
+pub fn span(
+    name: &str,
+    cat: &'static str,
+    tid: u64,
+    ts_us: u64,
+    dur_us: u64,
+    args: Vec<(&'static str, String)>,
+) {
+    if !armed() {
+        return;
+    }
+    push(TraceEvent { name: name.to_string(), cat, ph: 'X', ts_us, dur_us, tid, args });
+}
+
+/// Record an instant event (`ph: "i"`) stamped now. No-op while disarmed.
+pub fn instant(name: &str, cat: &'static str, tid: u64, args: Vec<(&'static str, String)>) {
+    if !armed() {
+        return;
+    }
+    push(TraceEvent { name: name.to_string(), cat, ph: 'i', ts_us: now_us(), dur_us: 0, tid, args });
+}
+
+thread_local! {
+    // (chunk_first_us, seq_first_us) accumulated since the last take.
+    static KERNEL_PHASES: Cell<(u64, u64)> = const { Cell::new((0, 0)) };
+}
+
+/// Called by the TPP kernel after every invocation with the measured
+/// durations of its two phases. Accumulates (a step may run the kernel
+/// more than once); always on — the `/metrics` phase histograms depend
+/// on it whether or not tracing is armed.
+pub fn record_kernel_phases(chunk_first_us: u64, seq_first_us: u64) {
+    KERNEL_PHASES.with(|c| {
+        let (a, b) = c.get();
+        c.set((a.wrapping_add(chunk_first_us), b.wrapping_add(seq_first_us)));
+    });
+}
+
+/// Drain the kernel-phase accumulator for the calling thread. The engine
+/// calls this right after `runner.decode`; `(0, 0)` means the runner never
+/// entered the TPP kernel on this thread.
+pub fn take_kernel_phases() -> (u64, u64) {
+    KERNEL_PHASES.with(|c| c.replace((0, 0)))
+}
+
+fn escape_json(s: &str, out: &mut String) {
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}
+
+/// Serialize events as a Chrome `trace_event` JSON array (the format
+/// `chrome://tracing` and Perfetto open directly).
+pub fn write_chrome_trace(w: &mut dyn Write, events: &[TraceEvent]) -> io::Result<()> {
+    w.write_all(b"[\n")?;
+    for (i, ev) in events.iter().enumerate() {
+        let mut line = String::with_capacity(128);
+        line.push_str("{\"name\":\"");
+        escape_json(&ev.name, &mut line);
+        line.push_str("\",\"cat\":\"");
+        escape_json(ev.cat, &mut line);
+        line.push_str(&format!(
+            "\",\"ph\":\"{}\",\"ts\":{},\"pid\":1,\"tid\":{}",
+            ev.ph, ev.ts_us, ev.tid
+        ));
+        if ev.ph == 'X' {
+            line.push_str(&format!(",\"dur\":{}", ev.dur_us));
+        }
+        if ev.ph == 'i' {
+            // Scope the instant to its thread track.
+            line.push_str(",\"s\":\"t\"");
+        }
+        if !ev.args.is_empty() {
+            line.push_str(",\"args\":{");
+            for (j, (k, v)) in ev.args.iter().enumerate() {
+                if j > 0 {
+                    line.push(',');
+                }
+                line.push('"');
+                escape_json(k, &mut line);
+                line.push_str("\":\"");
+                escape_json(v, &mut line);
+                line.push('"');
+            }
+            line.push('}');
+        }
+        line.push('}');
+        if i + 1 < events.len() {
+            line.push(',');
+        }
+        line.push('\n');
+        w.write_all(line.as_bytes())?;
+    }
+    w.write_all(b"]\n")
+}
+
+/// Write a drained event list to `path` as Chrome trace JSON.
+pub fn write_chrome_trace_file(path: &std::path::Path, events: &[TraceEvent]) -> io::Result<()> {
+    let mut f = io::BufWriter::new(std::fs::File::create(path)?);
+    write_chrome_trace(&mut f, events)?;
+    f.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tracing is process-global; serialize tests in this module and always
+    // disarm + drain on exit so concurrent lib tests see a quiet recorder.
+    fn guard() -> MutexGuard<'static, ()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    struct Reset;
+    impl Drop for Reset {
+        fn drop(&mut self) {
+            disarm();
+            drain();
+        }
+    }
+
+    #[test]
+    fn disarmed_records_nothing() {
+        let _g = guard();
+        let _r = Reset;
+        disarm();
+        drain();
+        span("step", "step", 0, 0, 10, vec![]);
+        instant("queued", "request", 7, vec![]);
+        assert!(drain().is_empty());
+        assert!(!armed());
+    }
+
+    #[test]
+    fn armed_buffers_and_drains() {
+        let _g = guard();
+        let _r = Reset;
+        arm();
+        span("step", "step", 0, 100, 50, vec![("batch", "4".into())]);
+        instant("first_token", "request", 9, vec![]);
+        let evs = drain();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].name, "step");
+        assert_eq!(evs[0].ph, 'X');
+        assert_eq!(evs[0].dur_us, 50);
+        assert_eq!(evs[1].tid, 9);
+        assert!(drain().is_empty());
+    }
+
+    #[test]
+    fn kernel_phase_channel_accumulates_and_clears() {
+        // Thread-local: no cross-test interference, no guard needed.
+        take_kernel_phases();
+        assert_eq!(take_kernel_phases(), (0, 0));
+        record_kernel_phases(5, 7);
+        record_kernel_phases(3, 2);
+        assert_eq!(take_kernel_phases(), (8, 9));
+        assert_eq!(take_kernel_phases(), (0, 0));
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_shape() {
+        let events = vec![
+            TraceEvent {
+                name: "step \"quoted\"".into(),
+                cat: "step",
+                ph: 'X',
+                ts_us: 10,
+                dur_us: 20,
+                tid: 0,
+                args: vec![("batch", "3".into())],
+            },
+            TraceEvent {
+                name: "queued".into(),
+                cat: "request",
+                ph: 'i',
+                ts_us: 15,
+                dur_us: 0,
+                tid: 4,
+                args: vec![],
+            },
+        ];
+        let mut out = Vec::new();
+        write_chrome_trace(&mut out, &events).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("[\n"));
+        assert!(text.trim_end().ends_with(']'));
+        assert!(text.contains("\\\"quoted\\\""));
+        assert!(text.contains("\"ph\":\"X\""));
+        assert!(text.contains("\"dur\":20"));
+        assert!(text.contains("\"ph\":\"i\""));
+        assert!(text.contains("\"args\":{\"batch\":\"3\"}"));
+        // Parses as JSON via the crate's own parser.
+        let parsed = crate::util::json::Json::parse(&text).expect("valid json");
+        assert_eq!(parsed.as_arr().map(|a| a.len()), Some(2));
+    }
+}

@@ -1,0 +1,296 @@
+//! Socket-level e2e tests of the observability stack: Prometheus
+//! histograms on `/metrics` (content type, exposition lint, quantile
+//! reads), the `/debug/steps` and `/debug/tree` JSON snapshots, and the
+//! Chrome `trace_event` file written via `GatewayConfig::trace_path` —
+//! all observed through a gateway running the real two-phase-partition
+//! kernel ([`KernelRunner`]), so the per-phase histograms and kernel
+//! spans carry actual `chunk_first` / `seq_first` timings.
+//!
+//! Every test runs under a hard watchdog so a hung accept loop or a
+//! deadlocked stepper fails the test quickly instead of stalling CI.
+
+use chunk_attention::coordinator::engine::testing::KernelRunner;
+use chunk_attention::coordinator::Engine;
+use chunk_attention::server::client::{self, StreamEvent};
+use chunk_attention::server::{histogram_snapshot, lint_exposition, Gateway, GatewayConfig};
+use chunk_attention::util::json::Json;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+/// Run `f` on a worker thread; panic (failing the test fast) if it does
+/// not finish within `secs`. The hard per-test timeout for CI.
+fn with_watchdog<T: Send + 'static>(
+    secs: u64,
+    name: &str,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> T {
+    let (tx, rx) = mpsc::channel();
+    let worker = thread::spawn(move || {
+        let result = f();
+        let _ = tx.send(());
+        result
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("test {name} exceeded its {secs}s watchdog (hung gateway?)")
+        }
+        Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => match worker.join() {
+            Ok(result) => result,
+            Err(panic) => std::panic::resume_unwind(panic),
+        },
+    }
+}
+
+fn engine(chunk: usize, max_batch: usize) -> Engine<KernelRunner> {
+    Engine::new(KernelRunner::new(2, 8, 32000), chunk, max_batch)
+}
+
+fn token_body(tokens: &[u32], shared: usize, max_new: usize) -> Json {
+    let mut body = Json::obj();
+    body.set("tokens", Json::Arr(tokens.iter().map(|&t| Json::Num(t as f64)).collect()));
+    body.set("shared_tokens", shared).set("max_new_tokens", max_new);
+    body
+}
+
+fn scrape(addr: &str) -> String {
+    let resp = client::get(addr, "/metrics", Duration::from_secs(10)).expect("scrape /metrics");
+    assert_eq!(resp.status, 200);
+    resp.body
+}
+
+/// Raw GET keeping the response headers, which [`client::get`] discards —
+/// the exposition content-type assertions need them verbatim.
+fn raw_get(addr: &str, path: &str) -> (u16, Vec<String>, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    stream.set_write_timeout(Some(Duration::from_secs(10))).unwrap();
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n").unwrap();
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).unwrap();
+    let status: u16 =
+        status_line.split_whitespace().nth(1).expect("status line").parse().expect("status code");
+    let mut headers = Vec::new();
+    loop {
+        let mut h = String::new();
+        assert!(reader.read_line(&mut h).unwrap() > 0, "EOF inside headers");
+        let t = h.trim_end().to_string();
+        if t.is_empty() {
+            break;
+        }
+        headers.push(t);
+    }
+    let mut body = String::new();
+    reader.read_to_string(&mut body).unwrap();
+    (status, headers, body)
+}
+
+fn run_to_done(addr: &str, body: &Json) {
+    let mut s = client::generate(addr, body, Duration::from_secs(30)).unwrap();
+    assert_eq!(s.status(), 200, "{}", s.error_body);
+    while let Some(ev) = s.next_event().unwrap() {
+        if matches!(ev, StreamEvent::Done { .. }) {
+            return;
+        }
+    }
+    panic!("stream ended without Done");
+}
+
+#[test]
+fn metrics_exposition_has_prometheus_content_type_and_passes_lint() {
+    with_watchdog(60, "exposition_lint", || {
+        let cfg = GatewayConfig {
+            decode_interval: Duration::from_micros(200),
+            ..GatewayConfig::default()
+        };
+        let gw = Gateway::start(engine(16, 4), cfg).unwrap();
+        let addr = gw.addr().to_string();
+        // One request end to end so every histogram family has samples.
+        run_to_done(&addr, &token_body(&[1, 2, 3, 4], 0, 4));
+
+        let (status, headers, body) = raw_get(&addr, "/metrics");
+        assert_eq!(status, 200);
+        assert!(
+            headers
+                .iter()
+                .any(|h| h == "Content-Type: text/plain; version=0.0.4; charset=utf-8"),
+            "missing Prometheus 0.0.4 content type, headers: {headers:?}"
+        );
+        assert!(body.ends_with('\n'), "exposition must end with a newline");
+
+        // promtool-style lint: HELP/TYPE present once per family, buckets
+        // cumulative/monotone ending at +Inf matching _count, no duplicate
+        // series. An empty violation list is the acceptance criterion the
+        // CI exposition-lint leg runs this test for.
+        let violations = lint_exposition(&body);
+        assert!(violations.is_empty(), "exposition lint violations: {violations:#?}\n{body}");
+
+        // All four histogram families are present and well formed.
+        for family in
+            ["ttft_seconds", "inter_token_seconds", "step_duration_seconds", "step_phase_seconds"]
+        {
+            assert!(
+                body.contains(&format!("_{family}_bucket")),
+                "missing histogram family {family}:\n{body}"
+            );
+        }
+        gw.shutdown().unwrap();
+    });
+}
+
+#[test]
+fn debug_endpoints_serve_json_on_an_idle_gateway() {
+    with_watchdog(60, "debug_idle", || {
+        let gw = Gateway::start(engine(16, 2), GatewayConfig::default()).unwrap();
+        let addr = gw.addr().to_string();
+
+        let (status, headers, body) = raw_get(&addr, "/debug/steps");
+        assert_eq!(status, 200);
+        assert!(
+            headers.iter().any(|h| h == "Content-Type: application/json"),
+            "headers: {headers:?}"
+        );
+        let steps = Json::parse(&body).expect("valid /debug/steps JSON");
+        assert!(steps.get("count").and_then(Json::as_f64).is_some(), "{body}");
+        assert!(steps.get("steps").and_then(Json::as_arr).is_some(), "{body}");
+
+        let (status, _, body) = raw_get(&addr, "/debug/tree");
+        assert_eq!(status, 200);
+        let tree = Json::parse(&body).expect("valid /debug/tree JSON");
+        assert_eq!(tree.get("sequences").and_then(Json::as_f64), Some(0.0), "{body}");
+        let tokens = tree.get("tokens").expect("tokens object");
+        assert!(tokens.get("logical").and_then(Json::as_f64).is_some(), "{body}");
+        assert!(tree.get("retain").and_then(|r| r.get("enabled")).is_some(), "{body}");
+        gw.shutdown().unwrap();
+    });
+}
+
+#[test]
+fn shared_prefix_run_populates_histograms_debug_snapshots_and_chrome_trace() {
+    with_watchdog(120, "observability_e2e", || {
+        let trace_path = std::env::temp_dir()
+            .join(format!("chunk_attn_observability_trace_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&trace_path);
+        let cfg = GatewayConfig {
+            decode_interval: Duration::from_micros(300),
+            trace_path: Some(trace_path.clone()),
+            ..GatewayConfig::default()
+        };
+        let gw = Gateway::start(engine(64, 8), cfg).unwrap();
+        let addr = gw.addr().to_string();
+        let system_prompt: Vec<u32> = (0..1024).collect();
+
+        // 4 concurrent clients share the 1024-token system prefix, so
+        // decode steps walk shared chunks (phase 1, chunk-first) and each
+        // sequence's private suffix (phase 2, seq-first).
+        let mut clients = Vec::new();
+        for c in 0..4u32 {
+            let addr = addr.clone();
+            let mut prompt = system_prompt.clone();
+            prompt.extend([5000 + c, 6000 + c]);
+            clients.push(thread::spawn(move || {
+                run_to_done(&addr, &token_body(&prompt, 1024, 32));
+            }));
+        }
+        for c in clients {
+            c.join().unwrap();
+        }
+
+        // A live stream keeps sequences resident while /debug/tree is
+        // snapshotted mid-decode.
+        let mut live_prompt = system_prompt.clone();
+        live_prompt.extend([7000, 7001]);
+        let mut live =
+            client::generate(&addr, &token_body(&live_prompt, 1024, 5000), Duration::from_secs(30))
+                .unwrap();
+        assert_eq!(live.status(), 200, "{}", live.error_body);
+        for _ in 0..3 {
+            assert!(matches!(live.next_event().unwrap(), Some(StreamEvent::Token { .. })));
+        }
+
+        let (status, _, body) = raw_get(&addr, "/debug/tree");
+        assert_eq!(status, 200);
+        let tree = Json::parse(&body).expect("valid /debug/tree JSON");
+        assert!(tree.get("sequences").and_then(Json::as_f64).unwrap() >= 1.0, "{body}");
+        let tokens = tree.get("tokens").expect("tokens object");
+        assert!(tokens.get("logical").and_then(Json::as_f64).unwrap() >= 1024.0, "{body}");
+        assert!(tokens.get("sharing_ratio").and_then(Json::as_f64).is_some(), "{body}");
+        let ctx = tree.get("context").expect("context object");
+        assert!(ctx.get("shared_chunks").and_then(Json::as_f64).is_some(), "{body}");
+        assert!(ctx.get("private_chunks").and_then(Json::as_f64).is_some(), "{body}");
+        assert!(tree.get("max_chunk_depth").and_then(Json::as_f64).unwrap() >= 16.0, "{body}");
+        live.abandon();
+
+        // The step ring has real per-phase wall times.
+        let (status, _, body) = raw_get(&addr, "/debug/steps");
+        assert_eq!(status, 200);
+        let steps = Json::parse(&body).expect("valid /debug/steps JSON");
+        assert!(steps.get("count").and_then(Json::as_f64).unwrap() >= 1.0, "{body}");
+        let ring = steps.get("steps").and_then(Json::as_arr).unwrap();
+        assert!(!ring.is_empty());
+        let phases = ring[0].get("phases").expect("phases object");
+        for phase in ["plan", "prefill", "chunk_first", "seq_first", "append", "evict"] {
+            assert!(phases.get(phase).and_then(Json::as_f64).is_some(), "{phase} in {body}");
+        }
+
+        // Server-side latency histograms accumulated over the run: TTFT
+        // once per finished request, inter-token gaps, step durations, and
+        // both kernel phases of the two-phase partition.
+        let metrics = scrape(&addr);
+        assert!(lint_exposition(&metrics).is_empty(), "{:?}", lint_exposition(&metrics));
+        let ttft = histogram_snapshot(&metrics, "ttft_seconds", None).expect("ttft histogram");
+        assert!(ttft.count >= 4, "4 finished requests, ttft count {}:\n{metrics}", ttft.count);
+        assert!(ttft.sum > 0.0);
+        assert!(ttft.quantile(0.5) > 0.0, "ttft p50 must be positive");
+        let itl = histogram_snapshot(&metrics, "inter_token_seconds", None).expect("itl histogram");
+        assert!(itl.count > 0, "{metrics}");
+        let steps_h =
+            histogram_snapshot(&metrics, "step_duration_seconds", None).expect("step histogram");
+        assert!(steps_h.count > 0, "{metrics}");
+        let chunk_first =
+            histogram_snapshot(&metrics, "step_phase_seconds", Some(("phase", "chunk_first")))
+                .expect("chunk_first child");
+        assert!(
+            chunk_first.count > 0 && chunk_first.sum > 0.0,
+            "chunk-first phase must accumulate over a shared-prefix run: count {} sum {}\n{metrics}",
+            chunk_first.count,
+            chunk_first.sum,
+        );
+        let seq_first =
+            histogram_snapshot(&metrics, "step_phase_seconds", Some(("phase", "seq_first")))
+                .expect("seq_first child");
+        assert!(seq_first.count > 0, "{metrics}");
+
+        // Shutdown flushes the Chrome trace; it must parse as trace_event
+        // JSON and contain step spans with BOTH kernel phases plus the
+        // request lifecycle instants.
+        gw.shutdown().unwrap();
+        let text = std::fs::read_to_string(&trace_path).expect("trace file written");
+        let doc = Json::parse(&text).expect("trace file is valid JSON");
+        let events = doc.as_arr().expect("trace_event array");
+        assert!(!events.is_empty(), "trace must not be empty");
+        let names_of = |ph: &str| -> Vec<&str> {
+            events
+                .iter()
+                .filter(|e| e.get("ph").and_then(Json::as_str) == Some(ph))
+                .filter_map(|e| e.get("name").and_then(Json::as_str))
+                .collect()
+        };
+        let spans = names_of("X");
+        for span in ["step", "chunk_first", "seq_first"] {
+            assert!(spans.contains(&span), "missing {span:?} span; spans seen: {spans:?}");
+        }
+        let instants = names_of("i");
+        for instant in ["queued", "finished"] {
+            assert!(
+                instants.contains(&instant),
+                "missing {instant:?} lifecycle event; instants seen: {instants:?}"
+            );
+        }
+        let _ = std::fs::remove_file(&trace_path);
+    });
+}
