@@ -13,8 +13,10 @@ use chunk_attention::coordinator::{KernelBench, MicroConfig};
 use chunk_attention::kvcache::{KvDtype, PrefixTree, SeqId};
 use chunk_attention::perf_model::AttentionImpl;
 use chunk_attention::util::bench::{print_table, BenchSuite};
+use chunk_attention::util::json::Json;
 use chunk_attention::util::rng::Pcg64;
 use chunk_attention::util::threadpool::ThreadPool;
+use chunk_attention::util::{simd, threadpool};
 
 fn main() {
     let mut suite = BenchSuite::new("table3_microkernel");
@@ -71,7 +73,54 @@ fn main() {
 
     two_d_vs_head_only(&mut suite);
     dtype_sweep(&mut suite);
+    emit_kernel_json(&mut suite);
     suite.finish();
+}
+
+/// Machine-readable perf record at the acceptance shape (h=8, d=128, c=64,
+/// b=32, 1024-token shared prefix, ChunkAttn 2D schedule), written to
+/// `BENCH_kernel.json` so the kernel-perf trajectory is comparable across
+/// PRs: shape, which ISA path actually ran, thread count, ns/step and
+/// bytes/step.
+fn emit_kernel_json(suite: &mut BenchSuite) {
+    let (heads, batch, np, ns) = (8usize, 32usize, 1024usize, 1024usize);
+    let mut cfg = MicroConfig::paper(batch, np, ns);
+    cfg.heads = heads;
+    cfg.max_new_tokens = 4;
+    let chunk = cfg.chunk_size;
+    let head_dim = cfg.head_dim;
+    let mut kb = KernelBench::new(cfg, AttentionImpl::ChunkAttn);
+    suite.measure(
+        "kernel_json/chunk_attn",
+        &[("isa", simd::active().label().to_string()), ("np", np.to_string()), ("ns", ns.to_string())],
+        Some("tok/s"),
+        || kb.decode_step(),
+    );
+    let step_us = suite.rows().last().unwrap().stats.mean();
+
+    let mut shape = Json::obj();
+    shape
+        .set("heads", heads)
+        .set("head_dim", head_dim)
+        .set("chunk_size", chunk)
+        .set("batch", batch)
+        .set("prefix_tokens", np)
+        .set("suffix_tokens", ns);
+    let mut doc = Json::obj();
+    doc.set("bench", "table3_microkernel")
+        .set("impl", "chunk_attn_2d")
+        .set("shape", shape)
+        .set("isa", simd::active().label())
+        .set("simd_env", simd::env_request())
+        .set("threads", kb.threads())
+        .set("affinity", threadpool::affinity_mode())
+        .set("ns_per_step", step_us * 1000.0)
+        .set("ns_per_token", step_us * 1000.0 / batch as f64)
+        .set("kv_bytes_per_step", kb.kv_bytes())
+        .set("unit_note", "ns_per_step = one batched decode step; kv_bytes_per_step = resident KV streamed by the chunk-first phase");
+    let path = "BENCH_kernel.json";
+    std::fs::write(path, doc.pretty()).expect("write BENCH_kernel.json");
+    println!("wrote {path}");
 }
 
 /// KV storage dtype at the acceptance shape (h=8, d=128, c=64, b=32,

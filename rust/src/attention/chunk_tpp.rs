@@ -379,8 +379,18 @@ fn tpp_attention_2d_impl<E: KvElem>(
     // Phase 1 — chunk first (Algorithm 1), one task per (head, run): stream
     // each shared chunk's K/V once for all covered rows, writing
     // (O, m, n)^{(C)} partials into the task's disjoint buffer slice.
+    //
+    // Sticky schedule: run indices are stable while the tree shape is (the
+    // common case across consecutive decode steps), and slab addresses are
+    // stable for a chunk's lifetime — so pinning each (head, run) task to
+    // a fixed worker keeps that run's K/V slabs hot in one core's private
+    // cache across steps (the CoDec/RelayAttention locality argument).
+    // Phase 2 stays dynamic: its per-row merge tasks are cheap and uneven,
+    // so balancing matters more than reuse. Numerics are identical under
+    // either schedule (each task owns a disjoint slice; merge order in
+    // phase 2 is fixed by run index, not worker).
     if nruns > 0 {
-        pool.parallel_for(heads * nruns, |t| {
+        pool.parallel_for_sticky(heads * nruns, |t| {
             let h = t / nruns;
             let run = &runs[t % nruns];
             let span = run.row_hi - run.row_lo;

@@ -16,8 +16,21 @@
 //! f32. Half-precision storage therefore halves the streamed K/V bytes —
 //! the dominant traffic in the chunk-first phase — without changing
 //! accumulation precision.
+//!
+//! ## SIMD dispatch
+//!
+//! [`attend_block`] routes through `util/simd.rs` (see DESIGN.md §"The
+//! SIMD dispatch seam"): on an accelerated ISA the K/V block is widened to
+//! f32 once into a thread-local scratch and an explicit-SIMD f32 body
+//! runs; otherwise the generic scalar body below executes unchanged. The
+//! scalar path is the bit-identity oracle — every accelerated path must
+//! reproduce it bit for bit (same reduction geometry, no FMA contraction),
+//! so `PALLAS_SIMD=scalar` and the cross-ISA tests can hold outputs to
+//! `assert_eq!` rather than tolerances.
 
 use crate::kvcache::KvElem;
+use crate::util::simd;
+use std::cell::RefCell;
 
 /// Accumulator state for a set of rows: `m[r]`, `n[r]`, `o[r * d ..]`.
 pub struct OnlineState<'a> {
@@ -76,6 +89,31 @@ pub fn attend_block<E: KvElem>(
     debug_assert!(k.len() >= len * d && v.len() >= len * d);
     debug_assert!(w.len() >= len);
     debug_assert_eq!(state.head_dim, d);
+    let isa = simd::active();
+    if isa.is_accelerated() {
+        attend_block_widened::<E>(isa, q, rows, d, k, v, len, scale, state, w);
+    } else {
+        attend_block_scalar::<E>(q, rows, d, k, v, len, scale, state, w);
+    }
+}
+
+/// Generic scalar body — the bit-identity oracle every SIMD path must
+/// reproduce exactly. Its reduction geometries (`dot_d`'s 8 lanes,
+/// `dot_kv`'s 4 lanes, `fast_exp_block`'s sequential normaliser) are
+/// contract, not implementation detail: `util/simd.rs` replicates them.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn attend_block_scalar<E: KvElem>(
+    q: &[f32],
+    rows: usize,
+    d: usize,
+    k: &[E],
+    v: &[E],
+    len: usize,
+    scale: f32,
+    state: &mut OnlineState<'_>,
+    w: &mut [f32],
+) {
     // Register-blocked fast path: 8 (then 4) query rows share each streamed
     // K/V row (§Perf: cuts K/V cache traffic 8× in the chunk-first phase —
     // the CPU analogue of the paper's query-matrix tensor-core batching).
@@ -156,7 +194,7 @@ fn attend_block_rows8<E: KvElem>(
     if len > BLOCK_MAX_LEN {
         // Rare (chunk sizes are small); fall back to the scalar path.
         for r in 0..8 {
-            attend_block(
+            attend_block_scalar(
                 &q[r * d..(r + 1) * d],
                 1,
                 d,
@@ -305,7 +343,7 @@ fn attend_block_rows4<E: KvElem>(
     if len > BLOCK_MAX_LEN {
         // Rare (chunk sizes are small); fall back to the scalar path.
         for r in 0..4 {
-            attend_block(
+            attend_block_scalar(
                 &q[r * d..(r + 1) * d],
                 1,
                 d,
@@ -385,6 +423,299 @@ fn attend_block_rows4<E: KvElem>(
             o4[2 * d + i] += e[2] * vv;
             o4[3 * d + i] += e[3] * vv;
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Explicit-SIMD path. The storage block is widened to f32 once (exact, so
+// the seam relocation cannot change results — see the
+// `simd_paths_match_scalar_bitwise` test below) and an f32 body
+// mirroring the scalar structure runs on vector primitives that replicate
+// the scalar reduction geometries bit for bit.
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    /// Per-thread f32 scratch for the widened K/V block (grown on demand,
+    /// reused across decode steps — same idiom as chunk_tpp's weight
+    /// buffers, so the steady state allocates nothing).
+    static WIDE_BUF: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+fn with_wide_buf<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    WIDE_BUF.with(|buf| {
+        let mut buf = buf.borrow_mut();
+        if buf.len() < len {
+            buf.resize(len, 0.0);
+        }
+        f(&mut buf[..len])
+    })
+}
+
+/// Entry for accelerated ISAs: obtain an f32 view of the K/V block (free
+/// for f32 storage, one vectorized widening pass for f16/bf16) and run the
+/// explicit-SIMD f32 body.
+#[allow(clippy::too_many_arguments)]
+fn attend_block_widened<E: KvElem>(
+    isa: simd::SimdIsa,
+    q: &[f32],
+    rows: usize,
+    d: usize,
+    k: &[E],
+    v: &[E],
+    len: usize,
+    scale: f32,
+    state: &mut OnlineState<'_>,
+    w: &mut [f32],
+) {
+    let k = &k[..len * d];
+    let v = &v[..len * d];
+    if let (Some(kf), Some(vf)) = (E::as_f32(k), E::as_f32(v)) {
+        attend_block_f32(isa, q, rows, d, kf, vf, len, scale, state, w);
+        return;
+    }
+    with_wide_buf(2 * len * d, |buf| {
+        let (kw, vw) = buf.split_at_mut(len * d);
+        E::widen_into(k, kw);
+        E::widen_into(v, vw);
+        attend_block_f32(isa, q, rows, d, kw, vw, len, scale, state, w);
+    });
+}
+
+/// f32 body of the SIMD path: same row-blocking structure as
+/// [`attend_block_scalar`], with the hot loops routed through the
+/// `util/simd.rs` primitives.
+#[allow(clippy::too_many_arguments)]
+fn attend_block_f32(
+    isa: simd::SimdIsa,
+    q: &[f32],
+    rows: usize,
+    d: usize,
+    k: &[f32],
+    v: &[f32],
+    len: usize,
+    scale: f32,
+    state: &mut OnlineState<'_>,
+    w: &mut [f32],
+) {
+    let mut r0 = 0;
+    while rows - r0 >= 8 {
+        rows8_f32(isa, &q[r0 * d..], d, k, v, len, scale, state, r0, w);
+        r0 += 8;
+    }
+    while rows - r0 >= 4 {
+        rows4_f32(isa, &q[r0 * d..], d, k, v, len, scale, state, r0, w);
+        r0 += 4;
+    }
+    for r in r0..rows {
+        let q_row = &q[r * d..(r + 1) * d];
+        let mut m_c = f32::NEG_INFINITY;
+        for t in 0..len {
+            let s = simd::dot_kv_f32(isa, q_row, &k[t * d..(t + 1) * d]) * scale;
+            w[t] = s;
+            if s > m_c {
+                m_c = s;
+            }
+        }
+        // fast_exp (cutoff) semantics, matching the scalar tail loop.
+        let n_c = simd::exp_block_cutoff(isa, &mut w[..len], m_c);
+        let m_old = state.m[r];
+        let m_new = m_old.max(m_c);
+        let x = (m_c - m_new).exp();
+        let y = if m_old == f32::NEG_INFINITY { 0.0 } else { (m_old - m_new).exp() };
+        let o_row = &mut state.o[r * d..(r + 1) * d];
+        if y != 1.0 {
+            for o in o_row.iter_mut() {
+                *o *= y;
+            }
+        }
+        for t in 0..len {
+            let e = w[t] * x;
+            if e != 0.0 {
+                simd::axpy_f32(isa, e, &v[t * d..(t + 1) * d], o_row);
+            }
+        }
+        state.n[r] = state.n[r] * y + n_c * x;
+        state.m[r] = m_new;
+    }
+}
+
+/// 8-row SIMD body: [`simd::qk_dots8`] keeps the shared K row in registers
+/// across all 8 query dots, [`simd::exp_block`] vectorizes the softmax
+/// transform (the ordered scalar normaliser sum stays sequential), and
+/// [`simd::axpy_rows8`] runs the V accumulation at full vector width.
+#[allow(clippy::too_many_arguments)]
+fn rows8_f32(
+    isa: simd::SimdIsa,
+    q: &[f32], // 8 rows, [8, d]
+    d: usize,
+    k: &[f32],
+    v: &[f32],
+    len: usize,
+    scale: f32,
+    state: &mut OnlineState<'_>,
+    base_row: usize,
+    w_fallback: &mut [f32],
+) {
+    if len > BLOCK_MAX_LEN {
+        for r in 0..8 {
+            attend_block_f32(
+                isa,
+                &q[r * d..(r + 1) * d],
+                1,
+                d,
+                k,
+                v,
+                len,
+                scale,
+                &mut OnlineState {
+                    m: &mut state.m[base_row + r..base_row + r + 1],
+                    n: &mut state.n[base_row + r..base_row + r + 1],
+                    o: &mut state.o[(base_row + r) * d..(base_row + r + 1) * d],
+                    head_dim: d,
+                },
+                w_fallback,
+            );
+        }
+        return;
+    }
+    let mut w = [0.0f32; 8 * BLOCK_MAX_LEN];
+    let mut m_c = [f32::NEG_INFINITY; 8];
+    for t in 0..len {
+        let k_t = &k[t * d..(t + 1) * d];
+        let mut s8 = [0.0f32; 8];
+        simd::qk_dots8(isa, q, d, k_t, &mut s8);
+        for (r, &s_raw) in s8.iter().enumerate() {
+            let s = s_raw * scale;
+            w[r * BLOCK_MAX_LEN + t] = s;
+            if s > m_c[r] {
+                m_c[r] = s;
+            }
+        }
+    }
+    let mut n_c = [0.0f32; 8];
+    for r in 0..8 {
+        n_c[r] = simd::exp_block(isa, &mut w[r * BLOCK_MAX_LEN..r * BLOCK_MAX_LEN + len], m_c[r]);
+    }
+    let mut x_scale = [0.0f32; 8];
+    for r in 0..8 {
+        let row = base_row + r;
+        let m_old = state.m[row];
+        let m_new = m_old.max(m_c[r]);
+        let x = (m_c[r] - m_new).exp();
+        let y = if m_old == f32::NEG_INFINITY { 0.0 } else { (m_old - m_new).exp() };
+        if y != 1.0 {
+            for o in &mut state.o[row * d..(row + 1) * d] {
+                *o *= y;
+            }
+        }
+        state.n[row] = state.n[row] * y + n_c[r] * x;
+        state.m[row] = m_new;
+        x_scale[r] = x;
+    }
+    let o_base = base_row * d;
+    let o8 = &mut state.o[o_base..o_base + 8 * d];
+    for t in 0..len {
+        let v_t = &v[t * d..(t + 1) * d];
+        let mut e = [0.0f32; 8];
+        for r in 0..8 {
+            e[r] = w[r * BLOCK_MAX_LEN + t] * x_scale[r];
+        }
+        // Row-major vs the scalar body's element-interleaved order: every
+        // (row, element) update is independent, so this is bit-identical.
+        simd::axpy_rows8(isa, &e, v_t, d, o8);
+    }
+}
+
+/// 4-row SIMD body. The fused 4-row dots stay scalar on the widened f32
+/// data (their fully sequential accumulation is the contract the scalar
+/// body fixes); exp and the V pass use the vector primitives.
+#[allow(clippy::too_many_arguments)]
+fn rows4_f32(
+    isa: simd::SimdIsa,
+    q: &[f32], // 4 rows, [4, d]
+    d: usize,
+    k: &[f32],
+    v: &[f32],
+    len: usize,
+    scale: f32,
+    state: &mut OnlineState<'_>,
+    base_row: usize,
+    w_fallback: &mut [f32],
+) {
+    if len > BLOCK_MAX_LEN {
+        for r in 0..4 {
+            attend_block_f32(
+                isa,
+                &q[r * d..(r + 1) * d],
+                1,
+                d,
+                k,
+                v,
+                len,
+                scale,
+                &mut OnlineState {
+                    m: &mut state.m[base_row + r..base_row + r + 1],
+                    n: &mut state.n[base_row + r..base_row + r + 1],
+                    o: &mut state.o[(base_row + r) * d..(base_row + r + 1) * d],
+                    head_dim: d,
+                },
+                w_fallback,
+            );
+        }
+        return;
+    }
+    let mut w = [0.0f32; 4 * BLOCK_MAX_LEN];
+    let (q0, q1, q2, q3) = (&q[0..d], &q[d..2 * d], &q[2 * d..3 * d], &q[3 * d..4 * d]);
+    let mut m_c = [f32::NEG_INFINITY; 4];
+    for t in 0..len {
+        let k_t = &k[t * d..(t + 1) * d];
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for i in 0..d {
+            let kv = k_t[i];
+            s0 += q0[i] * kv;
+            s1 += q1[i] * kv;
+            s2 += q2[i] * kv;
+            s3 += q3[i] * kv;
+        }
+        let s = [s0 * scale, s1 * scale, s2 * scale, s3 * scale];
+        for r in 0..4 {
+            w[r * BLOCK_MAX_LEN + t] = s[r];
+            if s[r] > m_c[r] {
+                m_c[r] = s[r];
+            }
+        }
+    }
+    let mut n_c = [0.0f32; 4];
+    for r in 0..4 {
+        n_c[r] = simd::exp_block(isa, &mut w[r * BLOCK_MAX_LEN..r * BLOCK_MAX_LEN + len], m_c[r]);
+    }
+    let mut x_scale = [0.0f32; 4];
+    for r in 0..4 {
+        let row = base_row + r;
+        let m_old = state.m[row];
+        let m_new = m_old.max(m_c[r]);
+        let x = (m_c[r] - m_new).exp();
+        let y = if m_old == f32::NEG_INFINITY { 0.0 } else { (m_old - m_new).exp() };
+        if y != 1.0 {
+            for o in &mut state.o[row * d..(row + 1) * d] {
+                *o *= y;
+            }
+        }
+        state.n[row] = state.n[row] * y + n_c[r] * x;
+        state.m[row] = m_new;
+        x_scale[r] = x;
+    }
+    let o_base = base_row * d;
+    let o4 = &mut state.o[o_base..o_base + 4 * d];
+    for t in 0..len {
+        let v_t = &v[t * d..(t + 1) * d];
+        let e = [
+            w[t] * x_scale[0],
+            w[BLOCK_MAX_LEN + t] * x_scale[1],
+            w[2 * BLOCK_MAX_LEN + t] * x_scale[2],
+            w[3 * BLOCK_MAX_LEN + t] * x_scale[3],
+        ];
+        simd::axpy_rows4(isa, &e, v_t, d, o4);
     }
 }
 
@@ -827,5 +1158,77 @@ mod tests {
         assert!(o.iter().all(|x| x.is_finite()));
         // Equal logits → average of the two value rows.
         assert!((o[0] - 3.0).abs() < 1e-4);
+    }
+
+    /// The core tentpole invariant: every available ISA path produces the
+    /// scalar kernel's output bit for bit — (m, n, o) all of them — for
+    /// every storage dtype, across the 8-row/4-row/tail blocking and the
+    /// long-block fallback.
+    #[test]
+    fn simd_paths_match_scalar_bitwise() {
+        use crate::util::simd;
+        // Serialise against other tests that flip the global dispatch.
+        let _serial = simd::force_lock();
+
+        fn run<E: KvElem>(
+            q: &[f32],
+            rows: usize,
+            d: usize,
+            k: &[E],
+            v: &[E],
+            len: usize,
+        ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+            let scale = 1.0 / (d as f32).sqrt();
+            let (mut m, mut n, mut o) =
+                (vec![0.0f32; rows], vec![0.0f32; rows], vec![0.0f32; rows * d]);
+            let mut state = OnlineState { m: &mut m, n: &mut n, o: &mut o, head_dim: d };
+            state.reset();
+            let mut w = vec![0.0f32; len];
+            attend_block(q, rows, d, k, v, len, scale, &mut state, &mut w);
+            state.finish();
+            (m, n, o)
+        }
+
+        // len = 43 leaves ragged vector tails; len = 600 exercises the
+        // > BLOCK_MAX_LEN per-row fallback. rows = 21 covers two 8-blocks,
+        // one 4-block and a scalar tail row.
+        for &(d, len, rows) in &[(24usize, 43usize, 21usize), (64, 43, 21), (128, 43, 9), (24, 600, 13)]
+        {
+            let q = rand_vec(700 + d as u64 + len as u64, rows * d);
+            let k = rand_vec(800 + d as u64 + len as u64, len * d);
+            let v = rand_vec(900 + d as u64 + len as u64, len * d);
+            let k16: Vec<F16> = k.iter().map(|&x| F16::from_f32(x)).collect();
+            let v16: Vec<F16> = v.iter().map(|&x| F16::from_f32(x)).collect();
+            let kb: Vec<Bf16> = k.iter().map(|&x| Bf16::from_f32(x)).collect();
+            let vb: Vec<Bf16> = v.iter().map(|&x| Bf16::from_f32(x)).collect();
+
+            simd::force(Some(simd::SimdIsa::Scalar));
+            let base_f32 = run(&q, rows, d, &k, &v, len);
+            let base_f16 = run(&q, rows, d, &k16, &v16, len);
+            let base_bf16 = run(&q, rows, d, &kb, &vb, len);
+
+            for isa in simd::available() {
+                simd::force(Some(isa));
+                assert_eq!(
+                    run(&q, rows, d, &k, &v, len),
+                    base_f32,
+                    "{} f32 d={d} len={len}",
+                    isa.label()
+                );
+                assert_eq!(
+                    run(&q, rows, d, &k16, &v16, len),
+                    base_f16,
+                    "{} f16 d={d} len={len}",
+                    isa.label()
+                );
+                assert_eq!(
+                    run(&q, rows, d, &kb, &vb, len),
+                    base_bf16,
+                    "{} bf16 d={d} len={len}",
+                    isa.label()
+                );
+            }
+            simd::force(None);
+        }
     }
 }

@@ -281,6 +281,11 @@ impl KernelBench {
         self.decoded
     }
 
+    /// Worker count of the kernel's thread pool (for bench records).
+    pub fn threads(&self) -> usize {
+        self.pool.size()
+    }
+
     /// In-use KV bytes as actually allocated at the configured dtype —
     /// memory side of Table 3 configs (label with [`MicroConfig::dtype`]).
     pub fn kv_bytes(&self) -> u64 {

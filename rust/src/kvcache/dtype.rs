@@ -175,6 +175,24 @@ pub trait KvElem: Copy + Send + Sync + 'static {
     const DTYPE: KvDtype;
     fn from_f32(x: f32) -> Self;
     fn to_f32(self) -> f32;
+
+    /// Zero-copy f32 view when the element already *is* f32 (lets the
+    /// SIMD kernel skip the widening copy entirely at full precision).
+    #[inline]
+    fn as_f32(slice: &[Self]) -> Option<&[f32]> {
+        let _ = slice;
+        None
+    }
+
+    /// Widen a whole slice to f32 through the SIMD seam (exact for every
+    /// dtype: f16/bf16→f32 conversion never rounds). `dst` must be the
+    /// same length as `src`.
+    #[inline]
+    fn widen_into(src: &[Self], dst: &mut [f32]) {
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = s.to_f32();
+        }
+    }
 }
 
 /// IEEE-754 binary16 element (bit container + conversions).
@@ -197,6 +215,14 @@ impl KvElem for f32 {
     fn to_f32(self) -> f32 {
         self
     }
+    #[inline]
+    fn as_f32(slice: &[Self]) -> Option<&[f32]> {
+        Some(slice)
+    }
+    #[inline]
+    fn widen_into(src: &[Self], dst: &mut [f32]) {
+        dst.copy_from_slice(src);
+    }
 }
 
 impl KvElem for F16 {
@@ -209,6 +235,13 @@ impl KvElem for F16 {
     fn to_f32(self) -> f32 {
         f16_bits_to_f32(self.0)
     }
+    #[inline]
+    fn widen_into(src: &[Self], dst: &mut [f32]) {
+        // Safety: F16 is repr(transparent) over u16, so the slice casts
+        // losslessly to its bit patterns.
+        let bits = unsafe { std::slice::from_raw_parts(src.as_ptr() as *const u16, src.len()) };
+        crate::util::simd::widen_f16(crate::util::simd::active(), bits, dst);
+    }
 }
 
 impl KvElem for Bf16 {
@@ -220,6 +253,12 @@ impl KvElem for Bf16 {
     #[inline]
     fn to_f32(self) -> f32 {
         bf16_bits_to_f32(self.0)
+    }
+    #[inline]
+    fn widen_into(src: &[Self], dst: &mut [f32]) {
+        // Safety: Bf16 is repr(transparent) over u16 (see F16::widen_into).
+        let bits = unsafe { std::slice::from_raw_parts(src.as_ptr() as *const u16, src.len()) };
+        crate::util::simd::widen_bf16(crate::util::simd::active(), bits, dst);
     }
 }
 

@@ -299,6 +299,17 @@ impl Gateway {
         )?;
 
         log::info!("gateway listening on {addr}");
+        // Record which kernel path and pool placement this process runs —
+        // bench logs must say what they measured.
+        let placement = crate::util::threadpool::placement();
+        log::info!(
+            "kernel simd isa: {} (PALLAS_SIMD={}); pool affinity: {} ({} workers, {} pinned)",
+            crate::util::simd::active().label(),
+            crate::util::simd::env_request(),
+            crate::util::threadpool::affinity_mode(),
+            placement.workers,
+            placement.pinned,
+        );
         Ok(Gateway { addr, cmd_tx, stop, accept_thread, stepper_thread, watchdog_thread })
     }
 
@@ -1191,6 +1202,40 @@ fn render_metrics<R: ModelRunner>(
         "active KV storage dtype (value is always 1)",
         &[("dtype", engine.tree().shape().dtype.label())],
         1.0,
+    );
+    // Kernel-path observability: which SIMD ISA the attention kernels
+    // dispatch to and how the thread pool is placed — bench runs grab
+    // these so recorded numbers say what they measured.
+    push_labeled_gauge(
+        &mut out,
+        prefix,
+        "simd_isa_info",
+        "active attention-kernel SIMD ISA path (value is always 1)",
+        &[("isa", crate::util::simd::active().label())],
+        1.0,
+    );
+    let placement = crate::util::threadpool::placement();
+    push_labeled_gauge(
+        &mut out,
+        prefix,
+        "pool_affinity_info",
+        "thread-pool core-affinity policy (value is always 1)",
+        &[("mode", crate::util::threadpool::affinity_mode())],
+        1.0,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "pool_workers",
+        "live thread-pool workers across the process",
+        placement.workers as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "pool_workers_pinned",
+        "live thread-pool workers successfully pinned to a core",
+        placement.pinned as f64,
     );
     // Scheduling-policy observability: the active policy as an info
     // gauge, bounded-cardinality per-tenant fairness counters, and the

@@ -9,6 +9,7 @@ pub mod json;
 pub mod logger;
 pub mod pbt;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 pub mod threadpool;
 pub mod trace;
@@ -18,5 +19,6 @@ pub use cli::{Args, Cli};
 pub use config::Config;
 pub use json::Json;
 pub use rng::Pcg64;
+pub use simd::SimdIsa;
 pub use stats::Summary;
 pub use threadpool::ThreadPool;

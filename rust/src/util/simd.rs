@@ -1,0 +1,1198 @@
+//! Explicit-SIMD micro-kernel seam with runtime ISA dispatch.
+//!
+//! The attention hot loops (`attention/online.rs`) historically leaned on
+//! LLVM autovectorization. This module makes the vector width explicit:
+//! the q·k dot products, the `fast_exp`-based softmax pass, the V
+//! accumulation, and the f16/bf16→f32 widening loads each get
+//! `#[target_feature]` bodies per ISA, selected once at runtime.
+//!
+//! ## Dispatch
+//!
+//! [`active`] probes the host once (`is_x86_feature_detected!`-style) and
+//! caches the result: AVX-512F ≻ AVX2(+FMA+F16C) on x86-64, NEON on
+//! aarch64, scalar everywhere else. `PALLAS_SIMD=scalar|avx2|avx512|neon|
+//! auto` forces a path (an unavailable request falls back to the best
+//! available one, with a warning); [`force`] is the in-process override
+//! test grids use to run every path in one binary.
+//!
+//! ## Bit-identity policy
+//!
+//! Every accelerated path is **bit-identical** to the scalar kernel, not
+//! merely within tolerance. This is cheap to guarantee because the scalar
+//! bodies already fix their reduction geometry (8 accumulator lanes in
+//! `dot_d`, 4 in `dot_kv`, sequential normalizer sums), so the vector
+//! code reproduces exactly that geometry:
+//!
+//! - dots use the same lane count as the scalar body they replace (even
+//!   on AVX-512, which keeps 8-lane ymm dots and spends its width on the
+//!   element-wise widen/V passes, where any width is exact);
+//! - no FMA contractions — multiply and add round separately, exactly as
+//!   the scalar `a * b` then `+=` do (the `fma` feature is required for
+//!   dispatch parity with real serving hosts but never used to contract);
+//! - horizontal lane sums run sequentially in scalar lane order;
+//! - `f32::round` (ties away from zero) is emulated exactly on x86 where
+//!   SSE4 rounding only offers ties-to-even (see `exp` bodies); NEON's
+//!   FRINTA is natively ties-away;
+//! - f16/bf16→f32 widening is exact in any order, so the conversions may
+//!   use full vector width freely.
+//!
+//! The scalar kernel therefore stays the oracle: `PALLAS_SIMD=scalar`
+//! must reproduce today's outputs bit-for-bit, and every other path must
+//! reproduce *it* bit-for-bit (asserted by the cross-ISA property tests).
+//!
+//! ## Why widening lives here
+//!
+//! Half-precision KV pays a per-element scalar decode tax in the generic
+//! kernels (`to_f32` inside every dot/axpy). The SIMD entry path instead
+//! widens a whole K/V block once into a thread-local f32 scratch
+//! (hardware `vcvtph2ps` for f16, a vector shift for bf16) and runs the
+//! f32 body — the conversion is exact, so the seam relocation cannot
+//! change results (asserted per dtype by `simd_paths_match_scalar_bitwise`
+//! in `attention/online.rs`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// An instruction-set path the kernel can run on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SimdIsa {
+    /// Portable scalar bodies — always available, the bit-identity oracle.
+    Scalar = 0,
+    /// AVX2 + FMA + F16C (x86-64 serving hosts since Haswell).
+    Avx2 = 1,
+    /// AVX-512F (dots stay 8-lane for bit-identity; widen/V passes go 16-wide).
+    Avx512 = 2,
+    /// aarch64 NEON (baseline on every aarch64 target).
+    Neon = 3,
+}
+
+impl SimdIsa {
+    /// Canonical lowercase label (metrics labels, logs, bench rows).
+    pub fn label(self) -> &'static str {
+        match self {
+            SimdIsa::Scalar => "scalar",
+            SimdIsa::Avx2 => "avx2",
+            SimdIsa::Avx512 => "avx512",
+            SimdIsa::Neon => "neon",
+        }
+    }
+
+    /// Parse a `PALLAS_SIMD` value (not including `auto`).
+    pub fn parse(s: &str) -> Option<SimdIsa> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" | "off" | "none" => Some(SimdIsa::Scalar),
+            "avx2" => Some(SimdIsa::Avx2),
+            "avx512" | "avx-512" | "avx512f" => Some(SimdIsa::Avx512),
+            "neon" => Some(SimdIsa::Neon),
+            _ => None,
+        }
+    }
+
+    /// Whether this path uses explicit vector bodies (false = generic
+    /// scalar kernel, which also stays the fallback for exotic targets).
+    #[inline]
+    pub fn is_accelerated(self) -> bool {
+        !matches!(self, SimdIsa::Scalar)
+    }
+
+    fn from_u8(v: u8) -> SimdIsa {
+        match v {
+            1 => SimdIsa::Avx2,
+            2 => SimdIsa::Avx512,
+            3 => SimdIsa::Neon,
+            _ => SimdIsa::Scalar,
+        }
+    }
+}
+
+/// Is `isa` runnable on this host?
+pub fn is_available(isa: SimdIsa) -> bool {
+    match isa {
+        SimdIsa::Scalar => true,
+        _ => probe_available(isa),
+    }
+}
+
+/// Every ISA path runnable on this host, scalar first — the grid the
+/// cross-ISA bit-identity property tests iterate.
+pub fn available() -> Vec<SimdIsa> {
+    [SimdIsa::Scalar, SimdIsa::Avx2, SimdIsa::Avx512, SimdIsa::Neon]
+        .into_iter()
+        .filter(|&i| is_available(i))
+        .collect()
+}
+
+#[cfg(any(target_arch = "x86_64", target_arch = "x86"))]
+fn probe_available(isa: SimdIsa) -> bool {
+    match isa {
+        SimdIsa::Scalar => true,
+        // FMA/F16C ship with AVX2 on every real core; requiring them keeps
+        // the f16 widen on hardware conversions. (FMA is detected for host
+        // parity but never used to contract — see the bit-identity policy.)
+        SimdIsa::Avx2 => {
+            std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+                && std::arch::is_x86_feature_detected!("f16c")
+        }
+        SimdIsa::Avx512 => {
+            std::arch::is_x86_feature_detected!("avx512f")
+                && std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+                && std::arch::is_x86_feature_detected!("f16c")
+        }
+        SimdIsa::Neon => false,
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn probe_available(isa: SimdIsa) -> bool {
+    // NEON is baseline on aarch64; the x86 paths never are.
+    matches!(isa, SimdIsa::Scalar | SimdIsa::Neon)
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "x86", target_arch = "aarch64")))]
+fn probe_available(isa: SimdIsa) -> bool {
+    matches!(isa, SimdIsa::Scalar)
+}
+
+/// Best path the host supports.
+fn detect_best() -> SimdIsa {
+    for isa in [SimdIsa::Avx512, SimdIsa::Avx2, SimdIsa::Neon] {
+        if is_available(isa) {
+            return isa;
+        }
+    }
+    SimdIsa::Scalar
+}
+
+const ISA_UNSET: u8 = 0xff;
+static ACTIVE: AtomicU8 = AtomicU8::new(ISA_UNSET);
+
+/// The ISA path the kernels are currently dispatching to. Detected once
+/// (honouring `PALLAS_SIMD`) and cached; [`force`] overrides it.
+pub fn active() -> SimdIsa {
+    let v = ACTIVE.load(Ordering::Relaxed);
+    if v != ISA_UNSET {
+        return SimdIsa::from_u8(v);
+    }
+    let isa = choose_from_env();
+    // A racing first call resolves identically (env + cpuid are stable).
+    ACTIVE.store(isa as u8, Ordering::Relaxed);
+    isa
+}
+
+/// The raw `PALLAS_SIMD` request, for startup logs (`auto` when unset).
+pub fn env_request() -> String {
+    match std::env::var("PALLAS_SIMD") {
+        Ok(s) if !s.is_empty() => s,
+        _ => "auto".to_string(),
+    }
+}
+
+fn choose_from_env() -> SimdIsa {
+    match std::env::var("PALLAS_SIMD").ok().as_deref() {
+        None | Some("") | Some("auto") => detect_best(),
+        Some(s) => match SimdIsa::parse(s) {
+            Some(req) if is_available(req) => req,
+            Some(req) => {
+                let best = detect_best();
+                log::warn!(
+                    "PALLAS_SIMD={} is not available on this host; using {}",
+                    req.label(),
+                    best.label()
+                );
+                best
+            }
+            None => {
+                let best = detect_best();
+                log::warn!(
+                    "PALLAS_SIMD={s:?} not recognised (want auto|scalar|avx2|avx512|neon); \
+                     using {}",
+                    best.label()
+                );
+                best
+            }
+        },
+    }
+}
+
+/// Test/bench hook: pin the dispatch to `isa` (`None` re-runs detection on
+/// the next [`active`] call). Panics if `isa` is not runnable on this host
+/// — forcing an absent ISA would execute illegal instructions.
+///
+/// The override is process-global. That is safe to flip even while other
+/// threads run kernels precisely because every path is bit-identical; the
+/// cross-ISA property tests rely on this to cover all paths in one binary.
+pub fn force(isa: Option<SimdIsa>) {
+    if let Some(isa) = isa {
+        assert!(is_available(isa), "cannot force {}: not available on this host", isa.label());
+        ACTIVE.store(isa as u8, Ordering::Relaxed);
+    } else {
+        ACTIVE.store(ISA_UNSET, Ordering::Relaxed);
+    }
+}
+
+/// Serialises unit tests that assert on exact [`active`] values while
+/// flipping [`force`] (tests run in parallel threads within one binary).
+/// Bit-identity makes concurrent flips harmless to *outputs*, but not to
+/// assertions about which path is currently selected.
+#[cfg(test)]
+pub(crate) fn force_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference bodies.
+//
+// These replicate, operation for operation, the geometries of the generic
+// kernels in `attention/online.rs` (`dot_d`, `dot_kv`, `fast_exp`,
+// `fast_exp_block`, `axpy_kv`). They are the fallback arm of every
+// dispatcher and the oracle the unit tests compare the vector bodies
+// against. Any drift from `online.rs` breaks the cross-ISA bit-identity
+// suite, which compares full kernels, not just these helpers.
+// ---------------------------------------------------------------------------
+
+const EXP_LOG2E: f32 = std::f32::consts::LOG2_E;
+const EXP_LN2_HI: f32 = 0.693_359_4;
+const EXP_LN2_LO: f32 = -2.121_944_4e-4;
+const EXP_C3: f32 = 0.166_666_55;
+const EXP_C4: f32 = 0.041_665_795;
+const EXP_C5: f32 = 0.008_333_452;
+const EXP_C6: f32 = 0.001_388_89;
+
+/// Core of `fast_exp`/`fast_exp_block` for an argument already clamped to
+/// `[-87, 88]`: `2^k · poly(r)` with `k = round(a·log2 e)`.
+#[inline]
+fn exp_core(a: f32) -> f32 {
+    let k = (a * EXP_LOG2E).round();
+    let r = a - k * EXP_LN2_HI - k * EXP_LN2_LO;
+    let p = 1.0 + r * (1.0 + r * (0.5 + r * (EXP_C3 + r * (EXP_C4 + r * (EXP_C5 + r * EXP_C6)))));
+    let bits = ((k as i32 + 127) as u32) << 23;
+    p * f32::from_bits(bits)
+}
+
+/// One element of the `fast_exp_block` pass (clamp-at−87 semantics).
+#[inline]
+fn exp_clamped(x: f32, shift: f32) -> f32 {
+    exp_core((x - shift).max(-87.0))
+}
+
+/// One element of the per-row tail pass (`fast_exp` semantics: exactly
+/// 0.0 below −87 — note this *differs in the last bits* from the clamped
+/// variant, which returns e⁻⁸⁷ ≈ 1.6e-38; each call site replicates the
+/// scalar kernel it replaces).
+#[inline]
+fn exp_cutoff(x: f32, shift: f32) -> f32 {
+    let a = x - shift;
+    if a < -87.0 {
+        return 0.0;
+    }
+    exp_core(a)
+}
+
+/// `dot_d` geometry: 8 accumulator lanes, stride 8, sequential lane fold,
+/// scalar tail.
+fn dot8_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let mut lanes = [0.0f32; 8];
+    let mut i = 0;
+    while i + 8 <= n {
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            *lane += a[i + l] * b[i + l];
+        }
+        i += 8;
+    }
+    let mut s = 0.0;
+    for l in lanes {
+        s += l;
+    }
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+/// `dot_kv` geometry: 4 accumulator lanes, `((s0+s1)+s2)+s3` fold, tail.
+fn dot4_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+fn exp_block_scalar(w: &mut [f32], shift: f32, cutoff: bool) -> f32 {
+    let mut acc = 0.0f32;
+    for x in w.iter_mut() {
+        let e = if cutoff { exp_cutoff(*x, shift) } else { exp_clamped(*x, shift) };
+        *x = e;
+        acc += e;
+    }
+    acc
+}
+
+fn axpy_scalar(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+fn widen_f16_scalar(src: &[u16], dst: &mut [f32]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = crate::kvcache::dtype::f16_bits_to_f32(s);
+    }
+}
+
+fn widen_bf16_scalar(src: &[u16], dst: &mut [f32]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = crate::kvcache::dtype::bf16_bits_to_f32(s);
+    }
+}
+
+fn qk_dots8_scalar(q: &[f32], d: usize, k_t: &[f32], out: &mut [f32; 8]) {
+    for (r, o) in out.iter_mut().enumerate() {
+        let q_r = &q[r * d..(r + 1) * d];
+        *o = if d == 64 || d == 128 { dot8_scalar(q_r, k_t) } else { dot4_scalar(q_r, k_t) };
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public dispatchers. Each takes the ISA explicitly so the kernel reads
+// `active()` once per block instead of once per primitive call.
+// ---------------------------------------------------------------------------
+
+/// Widen f16 bit patterns to f32 (exact; hardware `vcvtph2ps` where
+/// available). `src` and `dst` must have equal lengths.
+pub fn widen_f16(isa: SimdIsa, src: &[u16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len());
+    match isa {
+        #[cfg(any(target_arch = "x86_64", target_arch = "x86"))]
+        SimdIsa::Avx2 => unsafe { x86::widen_f16_avx2(src, dst) },
+        #[cfg(any(target_arch = "x86_64", target_arch = "x86"))]
+        SimdIsa::Avx512 => unsafe { x86::widen_f16_avx512(src, dst) },
+        // No stable aarch64 f16 conversion intrinsics; the bf16 shift and
+        // the f32 bodies still make NEON worthwhile.
+        _ => widen_f16_scalar(src, dst),
+    }
+}
+
+/// Widen bf16 bit patterns to f32 (exact: a 16-bit left shift).
+pub fn widen_bf16(isa: SimdIsa, src: &[u16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len());
+    match isa {
+        #[cfg(any(target_arch = "x86_64", target_arch = "x86"))]
+        SimdIsa::Avx2 => unsafe { x86::widen_bf16_avx2(src, dst) },
+        #[cfg(any(target_arch = "x86_64", target_arch = "x86"))]
+        SimdIsa::Avx512 => unsafe { x86::widen_bf16_avx512(src, dst) },
+        #[cfg(target_arch = "aarch64")]
+        SimdIsa::Neon => unsafe { neon::widen_bf16_neon(src, dst) },
+        _ => widen_bf16_scalar(src, dst),
+    }
+}
+
+/// Eight q·k dots sharing one K row: `out[r] = q[r*d..][..d] · k_t`.
+/// Replicates the scalar reduction geometry for the given `d` (8-lane for
+/// the monomorphized head dims 64/128, `dot_kv`'s 4-lane otherwise).
+pub fn qk_dots8(isa: SimdIsa, q: &[f32], d: usize, k_t: &[f32], out: &mut [f32; 8]) {
+    debug_assert!(q.len() >= 8 * d && k_t.len() >= d);
+    match isa {
+        #[cfg(any(target_arch = "x86_64", target_arch = "x86"))]
+        SimdIsa::Avx2 | SimdIsa::Avx512 => unsafe { x86::qk_dots8_avx2(q, d, k_t, out) },
+        #[cfg(target_arch = "aarch64")]
+        SimdIsa::Neon => unsafe { neon::qk_dots8_neon(q, d, k_t, out) },
+        _ => qk_dots8_scalar(q, d, k_t, out),
+    }
+}
+
+/// Single dot with `dot_kv`'s 4-lane geometry (the per-row tail path).
+pub fn dot_kv_f32(isa: SimdIsa, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match isa {
+        #[cfg(any(target_arch = "x86_64", target_arch = "x86"))]
+        SimdIsa::Avx2 | SimdIsa::Avx512 => unsafe { x86::dot4_sse(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        SimdIsa::Neon => unsafe { neon::dot4_neon(a, b) },
+        _ => dot4_scalar(a, b),
+    }
+}
+
+/// `fast_exp_block`: `w[i] = e^(w[i]-shift)` with the −87 clamp, returning
+/// the sum accumulated in element order.
+pub fn exp_block(isa: SimdIsa, w: &mut [f32], shift: f32) -> f32 {
+    exp_block_dispatch(isa, w, shift, false)
+}
+
+/// Per-row tail exp pass: `fast_exp` semantics (exact 0.0 below −87),
+/// returning the element-order sum.
+pub fn exp_block_cutoff(isa: SimdIsa, w: &mut [f32], shift: f32) -> f32 {
+    exp_block_dispatch(isa, w, shift, true)
+}
+
+fn exp_block_dispatch(isa: SimdIsa, w: &mut [f32], shift: f32, cutoff: bool) -> f32 {
+    match isa {
+        #[cfg(any(target_arch = "x86_64", target_arch = "x86"))]
+        SimdIsa::Avx2 | SimdIsa::Avx512 => unsafe { x86::exp_block_avx2(w, shift, cutoff) },
+        #[cfg(target_arch = "aarch64")]
+        SimdIsa::Neon => unsafe { neon::exp_block_neon(w, shift, cutoff) },
+        _ => exp_block_scalar(w, shift, cutoff),
+    }
+}
+
+/// V accumulation for 8 rows: `o8[r*d + i] += e[r] * v_t[i]`. Element-wise
+/// multiply-then-add, bit-identical at any vector width.
+pub fn axpy_rows8(isa: SimdIsa, e: &[f32; 8], v_t: &[f32], d: usize, o8: &mut [f32]) {
+    debug_assert!(v_t.len() >= d && o8.len() >= 8 * d);
+    match isa {
+        #[cfg(any(target_arch = "x86_64", target_arch = "x86"))]
+        SimdIsa::Avx2 => unsafe { x86::axpy_rows_avx2(e, v_t, d, o8) },
+        #[cfg(any(target_arch = "x86_64", target_arch = "x86"))]
+        SimdIsa::Avx512 => unsafe { x86::axpy_rows_avx512(e, v_t, d, o8) },
+        #[cfg(target_arch = "aarch64")]
+        SimdIsa::Neon => unsafe { neon::axpy_rows_neon(e, v_t, d, o8) },
+        _ => {
+            for (r, &er) in e.iter().enumerate() {
+                axpy_scalar(er, &v_t[..d], &mut o8[r * d..(r + 1) * d]);
+            }
+        }
+    }
+}
+
+/// V accumulation for 4 rows (same contract as [`axpy_rows8`]).
+pub fn axpy_rows4(isa: SimdIsa, e: &[f32; 4], v_t: &[f32], d: usize, o4: &mut [f32]) {
+    debug_assert!(v_t.len() >= d && o4.len() >= 4 * d);
+    match isa {
+        #[cfg(any(target_arch = "x86_64", target_arch = "x86"))]
+        SimdIsa::Avx2 => unsafe { x86::axpy_rows_avx2(&e[..], v_t, d, o4) },
+        #[cfg(any(target_arch = "x86_64", target_arch = "x86"))]
+        SimdIsa::Avx512 => unsafe { x86::axpy_rows_avx512(&e[..], v_t, d, o4) },
+        #[cfg(target_arch = "aarch64")]
+        SimdIsa::Neon => unsafe { neon::axpy_rows_neon(&e[..], v_t, d, o4) },
+        _ => {
+            for (r, &er) in e.iter().enumerate() {
+                axpy_scalar(er, &v_t[..d], &mut o4[r * d..(r + 1) * d]);
+            }
+        }
+    }
+}
+
+/// `y += alpha * x` (the per-row tail V pass).
+pub fn axpy_f32(isa: SimdIsa, alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    match isa {
+        #[cfg(any(target_arch = "x86_64", target_arch = "x86"))]
+        SimdIsa::Avx2 => unsafe { x86::axpy_avx2(alpha, x, y) },
+        #[cfg(any(target_arch = "x86_64", target_arch = "x86"))]
+        SimdIsa::Avx512 => unsafe { x86::axpy_avx512(alpha, x, y) },
+        #[cfg(target_arch = "aarch64")]
+        SimdIsa::Neon => unsafe { neon::axpy_neon(alpha, x, y) },
+        _ => axpy_scalar(alpha, x, y),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86 / x86-64 vector bodies.
+//
+// Safety contract for every function here: the caller must have verified
+// the corresponding features at runtime (the dispatchers above only route
+// here for Avx2/Avx512, which `probe_available` gates on cpuid). All use
+// raw-pointer loads/stores, so slice bounds are the callers' contract
+// (debug-asserted at the dispatchers).
+// ---------------------------------------------------------------------------
+
+#[cfg(any(target_arch = "x86_64", target_arch = "x86"))]
+mod x86 {
+    use super::{exp_clamped, exp_cutoff, EXP_C3, EXP_C4, EXP_C5, EXP_C6};
+    use super::{EXP_LN2_HI, EXP_LN2_LO, EXP_LOG2E};
+    #[cfg(target_arch = "x86")]
+    use core::arch::x86::*;
+    #[cfg(target_arch = "x86_64")]
+    use core::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2,f16c")]
+    pub(super) unsafe fn widen_f16_avx2(src: &[u16], dst: &mut [f32]) {
+        let n = src.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            let h = _mm_loadu_si128(src.as_ptr().add(i) as *const __m128i);
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_cvtph_ps(h));
+            i += 8;
+        }
+        while i < n {
+            *dst.get_unchecked_mut(i) =
+                crate::kvcache::dtype::f16_bits_to_f32(*src.get_unchecked(i));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx512f,f16c")]
+    pub(super) unsafe fn widen_f16_avx512(src: &[u16], dst: &mut [f32]) {
+        let n = src.len();
+        let mut i = 0;
+        while i + 16 <= n {
+            let h = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            _mm512_storeu_ps(dst.as_mut_ptr().add(i), _mm512_cvtph_ps(h));
+            i += 16;
+        }
+        if i < n {
+            widen_f16_avx2(&src[i..], &mut dst[i..]);
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn widen_bf16_avx2(src: &[u16], dst: &mut [f32]) {
+        let n = src.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            let h = _mm_loadu_si128(src.as_ptr().add(i) as *const __m128i);
+            let w = _mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(h));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_castsi256_ps(w));
+            i += 8;
+        }
+        while i < n {
+            *dst.get_unchecked_mut(i) =
+                crate::kvcache::dtype::bf16_bits_to_f32(*src.get_unchecked(i));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn widen_bf16_avx512(src: &[u16], dst: &mut [f32]) {
+        let n = src.len();
+        let mut i = 0;
+        while i + 16 <= n {
+            let h = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            let w = _mm512_slli_epi32::<16>(_mm512_cvtepu16_epi32(h));
+            _mm512_storeu_ps(dst.as_mut_ptr().add(i), _mm512_castsi512_ps(w));
+            i += 16;
+        }
+        if i < n {
+            widen_bf16_avx2(&src[i..], &mut dst[i..]);
+        }
+    }
+
+    /// 8 dots against one K row. For d ∈ {64, 128} this replicates
+    /// `dot_d`'s 8-lane geometry: one ymm accumulator per query row, the
+    /// shared K vector loaded once per 8 columns, then a sequential
+    /// lane-order horizontal fold. Multiply and add stay separate ops —
+    /// a vfmadd here would skip the intermediate rounding the scalar
+    /// kernel performs and break bit-identity.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn qk_dots8_avx2(q: &[f32], d: usize, k_t: &[f32], out: &mut [f32; 8]) {
+        if d != 64 && d != 128 {
+            // Dynamic head dims use dot_kv's 4-lane geometry per row.
+            for (r, o) in out.iter_mut().enumerate() {
+                *o = dot4_sse(&q[r * d..(r + 1) * d], &k_t[..d]);
+            }
+            return;
+        }
+        let qp = q.as_ptr();
+        let kp = k_t.as_ptr();
+        let mut acc = [_mm256_setzero_ps(); 8];
+        let mut i = 0;
+        while i + 8 <= d {
+            let kv = _mm256_loadu_ps(kp.add(i));
+            for (r, a) in acc.iter_mut().enumerate() {
+                let qv = _mm256_loadu_ps(qp.add(r * d + i));
+                *a = _mm256_add_ps(*a, _mm256_mul_ps(qv, kv));
+            }
+            i += 8;
+        }
+        for (r, o) in out.iter_mut().enumerate() {
+            let mut lanes = [0.0f32; 8];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), acc[r]);
+            let mut s = 0.0f32;
+            for l in lanes {
+                s += l;
+            }
+            *o = s;
+        }
+    }
+
+    /// `dot_kv` geometry on SSE registers: 4 accumulator lanes, the scalar
+    /// `((s0+s1)+s2)+s3` fold, then the scalar tail.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot4_sse(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc = _mm_setzero_ps();
+        for i in 0..chunks {
+            let av = _mm_loadu_ps(a.as_ptr().add(i * 4));
+            let bv = _mm_loadu_ps(b.as_ptr().add(i * 4));
+            acc = _mm_add_ps(acc, _mm_mul_ps(av, bv));
+        }
+        let mut lanes = [0.0f32; 4];
+        _mm_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut s = ((lanes[0] + lanes[1]) + lanes[2]) + lanes[3];
+        for i in chunks * 4..n {
+            s += *a.get_unchecked(i) * *b.get_unchecked(i);
+        }
+        s
+    }
+
+    /// Vectorized `fast_exp_block` body. The one subtlety is rounding:
+    /// the scalar kernel uses `f32::round` (ties away from zero) while
+    /// SSE4/AVX rounding instructions only offer ties-to-even. For the
+    /// softmax domain (arguments ≤ 0, so y = a·log₂e ∈ [−125.6, 0], far
+    /// below 2²³) ties-away is exactly `trunc(y) − (frac(y) ≤ −0.5)`:
+    /// `trunc` is exact, the fraction `y − trunc(y)` is exact in f32, and
+    /// the comparison reproduces the away-from-zero tie break.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn exp_block_avx2(w: &mut [f32], shift: f32, cutoff: bool) -> f32 {
+        let n = w.len();
+        let shift_v = _mm256_set1_ps(shift);
+        let clamp_v = _mm256_set1_ps(-87.0);
+        let log2e_v = _mm256_set1_ps(EXP_LOG2E);
+        let ln2_hi_v = _mm256_set1_ps(EXP_LN2_HI);
+        let ln2_lo_v = _mm256_set1_ps(EXP_LN2_LO);
+        let neg_half = _mm256_set1_ps(-0.5);
+        let neg_one = _mm256_set1_ps(-1.0);
+        let half = _mm256_set1_ps(0.5);
+        let one = _mm256_set1_ps(1.0);
+        let bias = _mm256_set1_epi32(127);
+        let mut i = 0;
+        while i + 8 <= n {
+            let x = _mm256_loadu_ps(w.as_ptr().add(i));
+            let arg = _mm256_sub_ps(x, shift_v);
+            let a = _mm256_max_ps(arg, clamp_v);
+            let y = _mm256_mul_ps(a, log2e_v);
+            let t = _mm256_round_ps::<{ _MM_FROUND_TO_ZERO | _MM_FROUND_NO_EXC }>(y);
+            let frac = _mm256_sub_ps(y, t);
+            let tie = _mm256_cmp_ps::<_CMP_LE_OQ>(frac, neg_half);
+            let k = _mm256_add_ps(t, _mm256_and_ps(tie, neg_one));
+            let r = _mm256_sub_ps(
+                _mm256_sub_ps(a, _mm256_mul_ps(k, ln2_hi_v)),
+                _mm256_mul_ps(k, ln2_lo_v),
+            );
+            // Horner in the scalar evaluation order, multiply and add
+            // rounded separately (no FMA).
+            let mut p = _mm256_set1_ps(EXP_C6);
+            p = _mm256_add_ps(_mm256_set1_ps(EXP_C5), _mm256_mul_ps(r, p));
+            p = _mm256_add_ps(_mm256_set1_ps(EXP_C4), _mm256_mul_ps(r, p));
+            p = _mm256_add_ps(_mm256_set1_ps(EXP_C3), _mm256_mul_ps(r, p));
+            p = _mm256_add_ps(half, _mm256_mul_ps(r, p));
+            p = _mm256_add_ps(one, _mm256_mul_ps(r, p));
+            p = _mm256_add_ps(one, _mm256_mul_ps(r, p));
+            // k is integral, so the f32→i32 convert is exact.
+            let bits = _mm256_slli_epi32::<23>(_mm256_add_epi32(_mm256_cvtps_epi32(k), bias));
+            let mut e = _mm256_mul_ps(p, _mm256_castsi256_ps(bits));
+            if cutoff {
+                // fast_exp semantics: exactly 0.0 where the argument is
+                // below −87 (mask-and with the "alive" lanes).
+                let alive = _mm256_cmp_ps::<_CMP_GE_OQ>(arg, clamp_v);
+                e = _mm256_and_ps(e, alive);
+            }
+            _mm256_storeu_ps(w.as_mut_ptr().add(i), e);
+            i += 8;
+        }
+        while i < n {
+            let x = *w.get_unchecked(i);
+            *w.get_unchecked_mut(i) =
+                if cutoff { exp_cutoff(x, shift) } else { exp_clamped(x, shift) };
+            i += 1;
+        }
+        // The normalizer must fold in the scalar loop's element order.
+        let mut acc = 0.0f32;
+        for &e in w.iter() {
+            acc += e;
+        }
+        acc
+    }
+
+    /// Row-major V accumulation: `o[r*d + i] += e[r] * v_t[i]`. The scalar
+    /// kernel interleaves rows per element; every (r, i) update is an
+    /// independent mul-then-add on the same operands, so the row-major
+    /// order here is bit-identical.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy_rows_avx2(e: &[f32], v_t: &[f32], d: usize, o: &mut [f32]) {
+        let vp = v_t.as_ptr();
+        for (r, &er) in e.iter().enumerate() {
+            let ev = _mm256_set1_ps(er);
+            let op = o.as_mut_ptr().add(r * d);
+            let mut i = 0;
+            while i + 8 <= d {
+                let prod = _mm256_mul_ps(ev, _mm256_loadu_ps(vp.add(i)));
+                _mm256_storeu_ps(op.add(i), _mm256_add_ps(_mm256_loadu_ps(op.add(i)), prod));
+                i += 8;
+            }
+            while i < d {
+                *op.add(i) += er * *vp.add(i);
+                i += 1;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn axpy_rows_avx512(e: &[f32], v_t: &[f32], d: usize, o: &mut [f32]) {
+        let vp = v_t.as_ptr();
+        for (r, &er) in e.iter().enumerate() {
+            let ev = _mm512_set1_ps(er);
+            let op = o.as_mut_ptr().add(r * d);
+            let mut i = 0;
+            while i + 16 <= d {
+                let prod = _mm512_mul_ps(ev, _mm512_loadu_ps(vp.add(i)));
+                _mm512_storeu_ps(op.add(i), _mm512_add_ps(_mm512_loadu_ps(op.add(i)), prod));
+                i += 16;
+            }
+            while i < d {
+                *op.add(i) += er * *vp.add(i);
+                i += 1;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy_avx2(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let av = _mm256_set1_ps(alpha);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let prod = _mm256_mul_ps(av, _mm256_loadu_ps(xp.add(i)));
+            _mm256_storeu_ps(yp.add(i), _mm256_add_ps(_mm256_loadu_ps(yp.add(i)), prod));
+            i += 8;
+        }
+        while i < n {
+            *yp.add(i) += alpha * *xp.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn axpy_avx512(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let av = _mm512_set1_ps(alpha);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i + 16 <= n {
+            let prod = _mm512_mul_ps(av, _mm512_loadu_ps(xp.add(i)));
+            _mm512_storeu_ps(yp.add(i), _mm512_add_ps(_mm512_loadu_ps(yp.add(i)), prod));
+            i += 16;
+        }
+        while i < n {
+            *yp.add(i) += alpha * *xp.add(i);
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// aarch64 NEON vector bodies. NEON is baseline on aarch64, so the only
+// safety obligation is the raw-pointer bounds contract. `vmlaq_f32` is
+// deliberately avoided: it may lower to a fused FMLA, which would skip the
+// intermediate rounding the scalar kernel performs.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{exp_clamped, exp_cutoff, EXP_C3, EXP_C4, EXP_C5, EXP_C6};
+    use super::{EXP_LN2_HI, EXP_LN2_LO, EXP_LOG2E};
+    use core::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn widen_bf16_neon(src: &[u16], dst: &mut [f32]) {
+        let n = src.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            let h = vld1_u16(src.as_ptr().add(i));
+            let w = vshlq_n_u32::<16>(vmovl_u16(h));
+            vst1q_f32(dst.as_mut_ptr().add(i), vreinterpretq_f32_u32(w));
+            i += 4;
+        }
+        while i < n {
+            *dst.get_unchecked_mut(i) =
+                crate::kvcache::dtype::bf16_bits_to_f32(*src.get_unchecked(i));
+            i += 1;
+        }
+    }
+
+    /// 8 dots against one K row; `dot_d`'s 8-lane geometry is split over
+    /// two q-registers (lanes 0–3 and 4–7), folded in scalar lane order.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn qk_dots8_neon(q: &[f32], d: usize, k_t: &[f32], out: &mut [f32; 8]) {
+        if d != 64 && d != 128 {
+            for (r, o) in out.iter_mut().enumerate() {
+                *o = dot4_neon(&q[r * d..(r + 1) * d], &k_t[..d]);
+            }
+            return;
+        }
+        let kp = k_t.as_ptr();
+        for (r, o) in out.iter_mut().enumerate() {
+            let qp = q.as_ptr().add(r * d);
+            let mut lo = vdupq_n_f32(0.0);
+            let mut hi = vdupq_n_f32(0.0);
+            let mut i = 0;
+            while i + 8 <= d {
+                lo = vaddq_f32(lo, vmulq_f32(vld1q_f32(qp.add(i)), vld1q_f32(kp.add(i))));
+                hi = vaddq_f32(
+                    hi,
+                    vmulq_f32(vld1q_f32(qp.add(i + 4)), vld1q_f32(kp.add(i + 4))),
+                );
+                i += 8;
+            }
+            let mut s = 0.0f32;
+            s += vgetq_lane_f32::<0>(lo);
+            s += vgetq_lane_f32::<1>(lo);
+            s += vgetq_lane_f32::<2>(lo);
+            s += vgetq_lane_f32::<3>(lo);
+            s += vgetq_lane_f32::<0>(hi);
+            s += vgetq_lane_f32::<1>(hi);
+            s += vgetq_lane_f32::<2>(hi);
+            s += vgetq_lane_f32::<3>(hi);
+            *o = s;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot4_neon(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc = vdupq_n_f32(0.0);
+        for i in 0..chunks {
+            acc = vaddq_f32(
+                acc,
+                vmulq_f32(vld1q_f32(a.as_ptr().add(i * 4)), vld1q_f32(b.as_ptr().add(i * 4))),
+            );
+        }
+        let mut s = ((vgetq_lane_f32::<0>(acc) + vgetq_lane_f32::<1>(acc))
+            + vgetq_lane_f32::<2>(acc))
+            + vgetq_lane_f32::<3>(acc);
+        for i in chunks * 4..n {
+            s += *a.get_unchecked(i) * *b.get_unchecked(i);
+        }
+        s
+    }
+
+    /// Vectorized `fast_exp_block` body. FRINTA (`vrndaq_f32`) rounds
+    /// ties away from zero natively — exactly `f32::round` — so no
+    /// emulation is needed on this path.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn exp_block_neon(w: &mut [f32], shift: f32, cutoff: bool) -> f32 {
+        let n = w.len();
+        let shift_v = vdupq_n_f32(shift);
+        let clamp_v = vdupq_n_f32(-87.0);
+        let log2e_v = vdupq_n_f32(EXP_LOG2E);
+        let ln2_hi_v = vdupq_n_f32(EXP_LN2_HI);
+        let ln2_lo_v = vdupq_n_f32(EXP_LN2_LO);
+        let half = vdupq_n_f32(0.5);
+        let one = vdupq_n_f32(1.0);
+        let bias = vdupq_n_s32(127);
+        let mut i = 0;
+        while i + 4 <= n {
+            let x = vld1q_f32(w.as_ptr().add(i));
+            let arg = vsubq_f32(x, shift_v);
+            let a = vmaxq_f32(arg, clamp_v);
+            let y = vmulq_f32(a, log2e_v);
+            let k = vrndaq_f32(y);
+            let r = vsubq_f32(vsubq_f32(a, vmulq_f32(k, ln2_hi_v)), vmulq_f32(k, ln2_lo_v));
+            let mut p = vdupq_n_f32(EXP_C6);
+            p = vaddq_f32(vdupq_n_f32(EXP_C5), vmulq_f32(r, p));
+            p = vaddq_f32(vdupq_n_f32(EXP_C4), vmulq_f32(r, p));
+            p = vaddq_f32(vdupq_n_f32(EXP_C3), vmulq_f32(r, p));
+            p = vaddq_f32(half, vmulq_f32(r, p));
+            p = vaddq_f32(one, vmulq_f32(r, p));
+            p = vaddq_f32(one, vmulq_f32(r, p));
+            // k is integral, so the truncating convert is exact.
+            let bits = vshlq_n_s32::<23>(vaddq_s32(vcvtq_s32_f32(k), bias));
+            let mut e = vmulq_f32(p, vreinterpretq_f32_s32(bits));
+            if cutoff {
+                let alive = vcgeq_f32(arg, clamp_v);
+                e = vreinterpretq_f32_u32(vandq_u32(vreinterpretq_u32_f32(e), alive));
+            }
+            vst1q_f32(w.as_mut_ptr().add(i), e);
+            i += 4;
+        }
+        while i < n {
+            let x = *w.get_unchecked(i);
+            *w.get_unchecked_mut(i) =
+                if cutoff { exp_cutoff(x, shift) } else { exp_clamped(x, shift) };
+            i += 1;
+        }
+        let mut acc = 0.0f32;
+        for &e in w.iter() {
+            acc += e;
+        }
+        acc
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn axpy_rows_neon(e: &[f32], v_t: &[f32], d: usize, o: &mut [f32]) {
+        let vp = v_t.as_ptr();
+        for (r, &er) in e.iter().enumerate() {
+            let ev = vdupq_n_f32(er);
+            let op = o.as_mut_ptr().add(r * d);
+            let mut i = 0;
+            while i + 4 <= d {
+                let prod = vmulq_f32(ev, vld1q_f32(vp.add(i)));
+                vst1q_f32(op.add(i), vaddq_f32(vld1q_f32(op.add(i)), prod));
+                i += 4;
+            }
+            while i < d {
+                *op.add(i) += er * *vp.add(i);
+                i += 1;
+            }
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn axpy_neon(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let av = vdupq_n_f32(alpha);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            let prod = vmulq_f32(av, vld1q_f32(xp.add(i)));
+            vst1q_f32(yp.add(i), vaddq_f32(vld1q_f32(yp.add(i)), prod));
+            i += 4;
+        }
+        while i < n {
+            *yp.add(i) += alpha * *xp.add(i);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::online::{fast_exp, fast_exp_block};
+    use crate::util::rng::Pcg64;
+
+    fn accelerated() -> Vec<SimdIsa> {
+        available().into_iter().filter(|i| i.is_accelerated()).collect()
+    }
+
+    fn rand_vec(seed: u64, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let mut rng = Pcg64::seeded(seed);
+        let mut v = vec![0.0; n];
+        rng.fill_uniform_f32(&mut v, lo, hi);
+        v
+    }
+
+    #[test]
+    fn scalar_is_always_available_and_active_resolves() {
+        assert!(is_available(SimdIsa::Scalar));
+        assert!(available().contains(&SimdIsa::Scalar));
+        let isa = active();
+        assert!(is_available(isa));
+        assert!(!isa.label().is_empty());
+    }
+
+    #[test]
+    fn parse_labels_round_trip() {
+        for isa in [SimdIsa::Scalar, SimdIsa::Avx2, SimdIsa::Avx512, SimdIsa::Neon] {
+            assert_eq!(SimdIsa::parse(isa.label()), Some(isa));
+        }
+        assert_eq!(SimdIsa::parse("auto"), None);
+        assert_eq!(SimdIsa::parse("mmx"), None);
+    }
+
+    /// The widen paths must be exact on every one of the 65536 bit
+    /// patterns. NaNs compare by NaN-ness only: hardware `vcvtph2ps`
+    /// quiets signalling NaNs where the software decoder preserves them,
+    /// and no KV row ever stores a NaN.
+    #[test]
+    fn widen_is_exact_for_every_bit_pattern() {
+        let src: Vec<u16> = (0..=u16::MAX).collect();
+        let mut expect_f16 = vec![0.0f32; src.len()];
+        let mut expect_bf16 = vec![0.0f32; src.len()];
+        widen_f16_scalar(&src, &mut expect_f16);
+        widen_bf16_scalar(&src, &mut expect_bf16);
+        for isa in accelerated() {
+            let mut got = vec![0.0f32; src.len()];
+            widen_f16(isa, &src, &mut got);
+            for (i, (g, e)) in got.iter().zip(&expect_f16).enumerate() {
+                if e.is_nan() {
+                    assert!(g.is_nan(), "{} f16 widen of {:#06x}", isa.label(), src[i]);
+                } else {
+                    assert_eq!(
+                        g.to_bits(),
+                        e.to_bits(),
+                        "{} f16 widen of {:#06x}",
+                        isa.label(),
+                        src[i]
+                    );
+                }
+            }
+            let mut got = vec![0.0f32; src.len()];
+            widen_bf16(isa, &src, &mut got);
+            for (i, (g, e)) in got.iter().zip(&expect_bf16).enumerate() {
+                if e.is_nan() {
+                    assert!(g.is_nan(), "{} bf16 widen of {:#06x}", isa.label(), src[i]);
+                } else {
+                    assert_eq!(
+                        g.to_bits(),
+                        e.to_bits(),
+                        "{} bf16 widen of {:#06x}",
+                        isa.label(),
+                        src[i]
+                    );
+                }
+            }
+        }
+    }
+
+    /// Ragged lengths exercise the vector/tail seams of the widen loops.
+    #[test]
+    fn widen_handles_ragged_tails() {
+        for isa in accelerated() {
+            for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 33] {
+                let src: Vec<u16> = (0..n as u16).map(|i| 0x3c00 + i * 7).collect();
+                let mut expect = vec![0.0f32; n];
+                widen_f16_scalar(&src, &mut expect);
+                let mut got = vec![0.0f32; n];
+                widen_f16(isa, &src, &mut got);
+                assert_eq!(got, expect, "{} f16 n={n}", isa.label());
+                widen_bf16_scalar(&src, &mut expect);
+                widen_bf16(isa, &src, &mut got);
+                assert_eq!(got, expect, "{} bf16 n={n}", isa.label());
+            }
+        }
+    }
+
+    /// Vector exp vs the scalar kernels, bit for bit, including arguments
+    /// engineered to land on rounding ties of `k = round(a·log₂e)` —
+    /// the case where a naive ties-to-even vector rounding diverges.
+    #[test]
+    fn exp_paths_match_fast_exp_bitwise() {
+        let mut args = rand_vec(0x5EED, 1024, -100.0, 0.0);
+        // Near-tie arguments: y = -(m + 0.5) for integer m maps k to the
+        // half-way point; perturb by ±1 ulp to cover both sides too.
+        for m in 0..60 {
+            let y = -(m as f32) - 0.5;
+            let a = y / std::f32::consts::LOG2_E;
+            args.push(a);
+            args.push(f32::from_bits(a.to_bits() + 1));
+            args.push(f32::from_bits(a.to_bits() - 1));
+        }
+        args.push(0.0);
+        args.push(-87.0);
+        args.push(-86.999_99);
+        args.push(-87.000_01);
+        args.push(-200.0);
+        for isa in accelerated() {
+            // Clamped (fast_exp_block) semantics, including the sum.
+            let mut scalar_buf = args.clone();
+            let scalar_sum = fast_exp_block(&mut scalar_buf, 0.0);
+            let mut vec_buf = args.clone();
+            let vec_sum = exp_block(isa, &mut vec_buf, 0.0);
+            for (i, (g, e)) in vec_buf.iter().zip(&scalar_buf).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    e.to_bits(),
+                    "{} exp_block arg {} = {}",
+                    isa.label(),
+                    i,
+                    args[i]
+                );
+            }
+            assert_eq!(vec_sum.to_bits(), scalar_sum.to_bits(), "{} sum", isa.label());
+            // Cutoff (fast_exp) semantics.
+            let expect: Vec<f32> = args.iter().map(|&x| fast_exp(x)).collect();
+            let expect_sum: f32 = expect.iter().copied().sum();
+            let mut vec_buf = args.clone();
+            let vec_sum = exp_block_cutoff(isa, &mut vec_buf, 0.0);
+            for (i, (g, e)) in vec_buf.iter().zip(&expect).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    e.to_bits(),
+                    "{} exp_block_cutoff arg {} = {}",
+                    isa.label(),
+                    i,
+                    args[i]
+                );
+            }
+            assert_eq!(vec_sum.to_bits(), expect_sum.to_bits(), "{} cutoff sum", isa.label());
+        }
+    }
+
+    #[test]
+    fn dots_match_scalar_geometry_bitwise() {
+        for isa in accelerated() {
+            for &d in &[8usize, 12, 24, 64, 100, 128] {
+                let q = rand_vec(1000 + d as u64, 8 * d, -2.0, 2.0);
+                let k = rand_vec(2000 + d as u64, d, -2.0, 2.0);
+                let mut expect = [0.0f32; 8];
+                qk_dots8_scalar(&q, d, &k, &mut expect);
+                let mut got = [0.0f32; 8];
+                qk_dots8(isa, &q, d, &k, &mut got);
+                for r in 0..8 {
+                    assert_eq!(
+                        got[r].to_bits(),
+                        expect[r].to_bits(),
+                        "{} qk_dots8 d={d} r={r}",
+                        isa.label()
+                    );
+                }
+                let single = dot_kv_f32(isa, &q[..d], &k);
+                assert_eq!(
+                    single.to_bits(),
+                    dot4_scalar(&q[..d], &k).to_bits(),
+                    "{} dot_kv_f32 d={d}",
+                    isa.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_matches_scalar_bitwise() {
+        for isa in accelerated() {
+            for &d in &[7usize, 16, 24, 64, 128] {
+                let v = rand_vec(3000 + d as u64, d, -2.0, 2.0);
+                let e8: [f32; 8] = std::array::from_fn(|i| 0.1 + i as f32 * 0.37);
+                let base = rand_vec(4000 + d as u64, 8 * d, -1.0, 1.0);
+                let mut expect = base.clone();
+                for (r, &er) in e8.iter().enumerate() {
+                    axpy_scalar(er, &v, &mut expect[r * d..(r + 1) * d]);
+                }
+                let mut got = base.clone();
+                axpy_rows8(isa, &e8, &v, d, &mut got);
+                assert_eq!(got, expect, "{} axpy_rows8 d={d}", isa.label());
+
+                let e4: [f32; 4] = std::array::from_fn(|i| 0.3 - i as f32 * 0.21);
+                let mut expect = base[..4 * d].to_vec();
+                for (r, &er) in e4.iter().enumerate() {
+                    axpy_scalar(er, &v, &mut expect[r * d..(r + 1) * d]);
+                }
+                let mut got = base[..4 * d].to_vec();
+                axpy_rows4(isa, &e4, &v, d, &mut got);
+                assert_eq!(got, expect, "{} axpy_rows4 d={d}", isa.label());
+
+                let mut expect = base[..d].to_vec();
+                axpy_scalar(0.77, &v, &mut expect);
+                let mut got = base[..d].to_vec();
+                axpy_f32(isa, 0.77, &v, &mut got);
+                assert_eq!(got, expect, "{} axpy_f32 d={d}", isa.label());
+            }
+        }
+    }
+
+    #[test]
+    fn force_overrides_and_restores() {
+        let _serial = force_lock();
+        let detected = active();
+        for isa in available() {
+            force(Some(isa));
+            assert_eq!(active(), isa);
+        }
+        force(None);
+        assert!(is_available(active()));
+        // Leave the process on its detected path for the other tests.
+        let _ = detected;
+    }
+}

@@ -1,26 +1,153 @@
-//! Work-stealing-free persistent thread pool with a `parallel_for` primitive.
+//! Persistent thread pool with reusable `parallel_for` machinery, a
+//! locality-aware *sticky* schedule, and best-effort core-affinity pinning.
 //!
 //! The kernel layer partitions work over (head, chunk) pairs exactly as the
 //! paper partitions CUDA thread blocks; on CPU those partitions map to pool
 //! workers. The pool is persistent (workers park between calls) so the decode
 //! hot loop pays no thread-spawn cost per iteration.
 //!
+//! ## Steady-state cost
+//!
+//! The original pool funnelled per-call boxed jobs through one
+//! `Mutex<Receiver>`, allocating a latch, several `Arc`s and `size` boxed
+//! closures on every `parallel_for` — visible in
+//! `step_phase_seconds{phase=chunk_first}` at small batch. This version
+//! broadcasts an *epoch*: the caller publishes one `Copy` operation record
+//! (a type-erased borrow of the closure plus the iteration geometry) under
+//! a mutex, bumps an epoch counter and wakes the workers; completion is a
+//! reusable counter + condvar. A decode step therefore allocates nothing
+//! in the pool.
+//!
+//! ## Schedules
+//!
+//! [`ThreadPool::parallel_for`] claims grain-sized index blocks dynamically
+//! (load balances when per-index cost varies); `parallel_for_sticky`
+//! instead gives worker `w` the fixed contiguous
+//! range `[w·n/P, (w+1)·n/P)`: the same index lands on the same worker on
+//! every call, so per-index working sets (a chunk-run's KV slabs — slab
+//! addresses are stable) stay in one worker's cache across decode steps
+//! (the CoDec/RelayAttention locality argument). Numerics never depend on
+//! the schedule — both produce bit-identical results for the kernels here.
+//!
+//! ## Affinity
+//!
+//! On Linux each worker pins itself to one allowed CPU (round-robin over
+//! the process's `sched_getaffinity` mask) via raw `sched_setaffinity`
+//! syscalls — best effort, a no-op elsewhere. `PALLAS_AFFINITY=none`
+//! disables pinning; [`affinity_mode`] and [`placement`] expose what
+//! happened for `/metrics` and startup logs.
+//!
 //! On a single-core host the pool degrades gracefully: `ThreadPool::new(1)`
 //! runs everything inline on the caller thread with zero synchronisation.
 
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+/// How an operation's index space maps to workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Schedule {
+    /// Grain-sized blocks claimed dynamically from a shared cursor.
+    Dynamic,
+    /// Deterministic contiguous partition: worker `w` owns `[w·n/P, (w+1)·n/P)`.
+    Sticky,
+}
+
+/// A published operation: a type-erased borrow of the caller's closure plus
+/// iteration geometry. `data` borrows the `parallel_for` frame; the epoch
+/// protocol guarantees every participant finishes (and counts down) before
+/// that frame returns, so the borrow never escapes.
+#[derive(Clone, Copy)]
+struct Op {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+    n: usize,
+    grain: usize,
+    participants: usize,
+    schedule: Schedule,
+}
+
+// Safety: `Op` is only dereferenced between publication and the matching
+// count-down, while the owning `parallel_for` frame is pinned on the
+// done-condvar; the raw pointer itself is just bits.
+unsafe impl Send for Op {}
+
+unsafe fn call_erased<F: Fn(usize) + Sync>(data: *const (), i: usize) {
+    (*(data as *const F))(i);
+}
+
+struct Ctrl {
+    epoch: u64,
+    op: Option<Op>,
+    shutdown: bool,
+}
+
+struct Done {
+    remaining: usize,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+struct Shared {
+    ctrl: Mutex<Ctrl>,
+    work_cv: Condvar,
+    done: Mutex<Done>,
+    done_cv: Condvar,
+    next: AtomicUsize,
+    poisoned: AtomicBool,
+    /// Workers of this pool that successfully pinned to a core.
+    pinned: AtomicUsize,
+}
+
+// Process-wide placement counters for /metrics (live pools only).
+static POOLS: AtomicUsize = AtomicUsize::new(0);
+static WORKERS: AtomicUsize = AtomicUsize::new(0);
+static PINNED: AtomicUsize = AtomicUsize::new(0);
+
+/// Live thread-pool placement across the process, for `/metrics`.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolPlacement {
+    pub pools: usize,
+    pub workers: usize,
+    pub pinned: usize,
+}
+
+/// Snapshot of the process-wide pool placement counters.
+pub fn placement() -> PoolPlacement {
+    PoolPlacement {
+        pools: POOLS.load(Ordering::Relaxed),
+        workers: WORKERS.load(Ordering::Relaxed),
+        pinned: PINNED.load(Ordering::Relaxed),
+    }
+}
+
+/// The effective affinity policy: `"compact"` (workers pin round-robin over
+/// the allowed CPUs), `"none"` (`PALLAS_AFFINITY=none`), or
+/// `"unsupported"` (no Linux `sched_setaffinity` on this target).
+pub fn affinity_mode() -> &'static str {
+    if !affinity::supported() {
+        "unsupported"
+    } else if affinity_requested() {
+        "compact"
+    } else {
+        "none"
+    }
+}
+
+fn affinity_requested() -> bool {
+    !matches!(
+        std::env::var("PALLAS_AFFINITY").ok().as_deref(),
+        Some("none") | Some("off") | Some("0")
+    )
+}
 
 /// A fixed-size persistent worker pool.
 pub struct ThreadPool {
-    tx: Option<Sender<Job>>,
+    shared: Option<Arc<Shared>>,
     workers: Vec<JoinHandle<()>>,
     size: usize,
+    /// Serialises concurrent `parallel_for` callers (one op slot).
+    submit: Mutex<()>,
 }
 
 impl ThreadPool {
@@ -28,21 +155,38 @@ impl ThreadPool {
     /// workers are spawned and all work runs on the caller.
     pub fn new(size: usize) -> Self {
         assert!(size >= 1);
+        POOLS.fetch_add(1, Ordering::Relaxed);
         if size == 1 {
-            return ThreadPool { tx: None, workers: Vec::new(), size };
+            return ThreadPool { shared: None, workers: Vec::new(), size, submit: Mutex::new(()) };
         }
-        let (tx, rx) = channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(Shared {
+            ctrl: Mutex::new(Ctrl { epoch: 0, op: None, shutdown: false }),
+            work_cv: Condvar::new(),
+            done: Mutex::new(Done { remaining: 0, panic: None }),
+            done_cv: Condvar::new(),
+            next: AtomicUsize::new(0),
+            poisoned: AtomicBool::new(false),
+            pinned: AtomicUsize::new(0),
+        });
+        let cpus = if affinity::supported() && affinity_requested() {
+            affinity::allowed_cpus()
+        } else {
+            Vec::new()
+        };
+        // Keep the global pinned ≤ workers invariant: count the workers
+        // before any of them can report a successful pin.
+        WORKERS.fetch_add(size, Ordering::Relaxed);
         let workers = (0..size)
             .map(|i| {
-                let rx = Arc::clone(&rx);
+                let shared = Arc::clone(&shared);
+                let pin_cpu = if cpus.is_empty() { None } else { Some(cpus[i % cpus.len()]) };
                 std::thread::Builder::new()
                     .name(format!("chunk-attn-worker-{i}"))
-                    .spawn(move || worker_loop(rx))
+                    .spawn(move || worker_loop(shared, i, pin_cpu))
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers, size }
+        ThreadPool { shared: Some(shared), workers, size, submit: Mutex::new(()) }
     }
 
     /// Pool sized from `CHUNK_ATTN_THREADS` env or the number of cpus.
@@ -60,73 +204,84 @@ impl ThreadPool {
         self.size
     }
 
-    /// Run `f(i)` for every `i` in `0..n`, distributing indices over workers
-    /// in contiguous blocks. Blocks until all iterations complete.
+    /// Run `f(i)` for every `i` in `0..n`, workers claiming contiguous
+    /// grain-sized blocks dynamically. Blocks until all iterations complete.
     ///
     /// `f` must be `Sync` because multiple workers call it concurrently.
     ///
-    /// Panic safety: a panic inside `f` is caught on the worker, the latch
+    /// Panic safety: a panic inside `f` is caught on the worker, completion
     /// still counts down (no deadlocked caller, no dead worker thread), the
     /// remaining indices are abandoned, and the first panic payload is
-    /// re-raised on the submitting thread once every task has stopped.
+    /// re-raised on the submitting thread once every participant has
+    /// stopped.
+    ///
+    /// Not reentrant: `f` must not call back into the same pool.
     pub fn parallel_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        self.run(n, f, Schedule::Dynamic);
+    }
+
+    /// Like [`ThreadPool::parallel_for`], but with the deterministic sticky
+    /// partition: index `i` always runs on worker `i·P/n` (same mapping on
+    /// every call with the same `n`), trading load balancing for cache
+    /// locality of per-index working sets across calls.
+    pub fn parallel_for_sticky<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        self.run(n, f, Schedule::Sticky);
+    }
+
+    fn run<F>(&self, n: usize, f: F, schedule: Schedule)
     where
         F: Fn(usize) + Sync,
     {
         if n == 0 {
             return;
         }
-        if self.tx.is_none() || n == 1 {
+        let Some(shared) = &self.shared else {
             for i in 0..n {
                 f(i);
             }
             return;
+        };
+        if n == 1 {
+            f(0);
+            return;
         }
-        let latch = Arc::new(Latch::new(self.size.min(n)));
-        let next = Arc::new(AtomicUsize::new(0));
-        let poisoned = Arc::new(AtomicBool::new(false));
-        let panic_payload: Arc<Mutex<Option<Box<dyn std::any::Any + Send>>>> =
-            Arc::new(Mutex::new(None));
-        // Safety: `parallel_for` blocks on the latch until every submitted
-        // closure has finished, so borrowing `f` across the 'static job
-        // boundary never outlives this frame.
-        let f_ptr = &f as *const F as usize;
-        let tx = self.tx.as_ref().unwrap();
+        let _caller = self.submit.lock().unwrap();
+        let participants = self.size.min(n);
         let grain = (n / (self.size * 4)).max(1);
-        for _ in 0..self.size.min(n) {
-            let latch = Arc::clone(&latch);
-            let next = Arc::clone(&next);
-            let poisoned = Arc::clone(&poisoned);
-            let panic_payload = Arc::clone(&panic_payload);
-            let job: Job = Box::new(move || {
-                let f = unsafe { &*(f_ptr as *const F) };
-                while !poisoned.load(Ordering::Relaxed) {
-                    let start = next.fetch_add(grain, Ordering::Relaxed);
-                    if start >= n {
-                        break;
-                    }
-                    let end = (start + grain).min(n);
-                    // Catch so the worker thread survives and the latch
-                    // always fires; re-raised on the caller below.
-                    if let Err(p) = std::panic::catch_unwind(AssertUnwindSafe(|| {
-                        for i in start..end {
-                            f(i);
-                        }
-                    })) {
-                        let mut slot = panic_payload.lock().unwrap();
-                        if slot.is_none() {
-                            *slot = Some(p);
-                        }
-                        poisoned.store(true, Ordering::Relaxed);
-                        break;
-                    }
-                }
-                latch.count_down();
-            });
-            tx.send(job).expect("pool alive");
+        shared.next.store(0, Ordering::Relaxed);
+        shared.poisoned.store(false, Ordering::Relaxed);
+        {
+            let mut done = shared.done.lock().unwrap();
+            done.remaining = participants;
+            done.panic = None;
         }
-        latch.wait();
-        if let Some(p) = panic_payload.lock().unwrap().take() {
+        let op = Op {
+            data: &f as *const F as *const (),
+            call: call_erased::<F>,
+            n,
+            grain,
+            participants,
+            schedule,
+        };
+        {
+            let mut ctrl = shared.ctrl.lock().unwrap();
+            ctrl.epoch += 1;
+            ctrl.op = Some(op);
+        }
+        shared.work_cv.notify_all();
+        let mut done = shared.done.lock().unwrap();
+        while done.remaining > 0 {
+            done = shared.done_cv.wait(done).unwrap();
+        }
+        let payload = done.panic.take();
+        drop(done);
+        if let Some(p) = payload {
             std::panic::resume_unwind(p);
         }
     }
@@ -134,50 +289,221 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        drop(self.tx.take()); // close the channel; workers exit
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        if let Some(shared) = self.shared.take() {
+            {
+                let mut ctrl = shared.ctrl.lock().unwrap();
+                ctrl.shutdown = true;
+            }
+            shared.work_cv.notify_all();
+            let spawned = self.workers.len();
+            for w in self.workers.drain(..) {
+                let _ = w.join();
+            }
+            // Workers are joined, so the pool's pin count is final.
+            PINNED.fetch_sub(shared.pinned.load(Ordering::Relaxed), Ordering::Relaxed);
+            WORKERS.fetch_sub(spawned, Ordering::Relaxed);
         }
+        POOLS.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
-fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>) {
+fn worker_loop(shared: Arc<Shared>, index: usize, pin_cpu: Option<usize>) {
+    if let Some(cpu) = pin_cpu {
+        if affinity::pin_current(cpu) {
+            shared.pinned.fetch_add(1, Ordering::Relaxed);
+            PINNED.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    let mut seen = 0u64;
     loop {
-        let job = {
-            let guard = rx.lock().expect("pool lock");
-            guard.recv()
+        let op = {
+            let mut ctrl = shared.ctrl.lock().unwrap();
+            loop {
+                if ctrl.shutdown {
+                    return;
+                }
+                if ctrl.epoch != seen {
+                    seen = ctrl.epoch;
+                    break ctrl.op;
+                }
+                ctrl = shared.work_cv.wait(ctrl).unwrap();
+            }
         };
-        match job {
-            Ok(job) => job(),
-            Err(_) => break, // channel closed: pool dropped
+        let Some(op) = op else { continue };
+        if index >= op.participants {
+            continue;
+        }
+        run_op(&shared, &op, index);
+        let mut done = shared.done.lock().unwrap();
+        done.remaining -= 1;
+        if done.remaining == 0 {
+            shared.done_cv.notify_all();
         }
     }
 }
 
-/// Count-down latch: `wait` blocks until `count_down` has been called N times.
-struct Latch {
-    remaining: Mutex<usize>,
-    cv: Condvar,
+fn run_op(shared: &Shared, op: &Op, worker: usize) {
+    let run_range = |lo: usize, hi: usize| {
+        // Catch so the worker thread survives and completion always counts
+        // down; the payload is re-raised on the caller.
+        std::panic::catch_unwind(AssertUnwindSafe(|| {
+            for i in lo..hi {
+                unsafe { (op.call)(op.data, i) };
+            }
+        }))
+    };
+    match op.schedule {
+        Schedule::Dynamic => loop {
+            if shared.poisoned.load(Ordering::Relaxed) {
+                return;
+            }
+            let start = shared.next.fetch_add(op.grain, Ordering::Relaxed);
+            if start >= op.n {
+                return;
+            }
+            if let Err(p) = run_range(start, (start + op.grain).min(op.n)) {
+                poison(shared, p);
+                return;
+            }
+        },
+        Schedule::Sticky => {
+            let lo = worker * op.n / op.participants;
+            let hi = (worker + 1) * op.n / op.participants;
+            let mut s = lo;
+            while s < hi {
+                if shared.poisoned.load(Ordering::Relaxed) {
+                    return;
+                }
+                let e = (s + op.grain).min(hi);
+                if let Err(p) = run_range(s, e) {
+                    poison(shared, p);
+                    return;
+                }
+                s = e;
+            }
+        }
+    }
 }
 
-impl Latch {
-    fn new(n: usize) -> Self {
-        Latch { remaining: Mutex::new(n), cv: Condvar::new() }
-    }
-
-    fn count_down(&self) {
-        let mut rem = self.remaining.lock().unwrap();
-        *rem -= 1;
-        if *rem == 0 {
-            self.cv.notify_all();
+fn poison(shared: &Shared, p: Box<dyn std::any::Any + Send>) {
+    {
+        let mut done = shared.done.lock().unwrap();
+        if done.panic.is_none() {
+            done.panic = Some(p);
         }
     }
+    shared.poisoned.store(true, Ordering::Relaxed);
+}
 
-    fn wait(&self) {
-        let mut rem = self.remaining.lock().unwrap();
-        while *rem > 0 {
-            rem = self.cv.wait(rem).unwrap();
+// ---------------------------------------------------------------------------
+// Best-effort core affinity. No libc in the offline crate set, so the two
+// Linux targets issue raw syscalls; everything else is a no-op.
+// ---------------------------------------------------------------------------
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod affinity {
+    /// 16 × 64 bits = 1024 CPUs, the conventional cpu_set_t size.
+    const MASK_WORDS: usize = 16;
+
+    #[cfg(target_arch = "x86_64")]
+    const SYS_SETAFFINITY: usize = 203;
+    #[cfg(target_arch = "x86_64")]
+    const SYS_GETAFFINITY: usize = 204;
+    #[cfg(target_arch = "aarch64")]
+    const SYS_SETAFFINITY: usize = 122;
+    #[cfg(target_arch = "aarch64")]
+    const SYS_GETAFFINITY: usize = 123;
+
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn syscall3(nr: usize, a1: usize, a2: usize, a3: usize) -> isize {
+        let ret: isize;
+        // `syscall` clobbers rcx/r11 and rflags (so no preserves_flags).
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") nr as isize => ret,
+            in("rdi") a1,
+            in("rsi") a2,
+            in("rdx") a3,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn syscall3(nr: usize, a1: usize, a2: usize, a3: usize) -> isize {
+        let ret: isize;
+        std::arch::asm!(
+            "svc 0",
+            in("x8") nr,
+            inlateout("x0") a1 as isize => ret,
+            in("x1") a2,
+            in("x2") a3,
+            options(nostack),
+        );
+        ret
+    }
+
+    pub(super) fn supported() -> bool {
+        true
+    }
+
+    /// CPUs the process may run on, from `sched_getaffinity(0)` — respects
+    /// cgroup cpusets, so pinning targets only CPUs we can actually use.
+    /// Empty on failure (callers then skip pinning).
+    pub(super) fn allowed_cpus() -> Vec<usize> {
+        let mut mask = [0u64; MASK_WORDS];
+        let ret = unsafe {
+            syscall3(
+                SYS_GETAFFINITY,
+                0,
+                std::mem::size_of_val(&mask),
+                mask.as_mut_ptr() as usize,
+            )
+        };
+        if ret <= 0 {
+            return Vec::new();
         }
+        let mut cpus = Vec::new();
+        for (word, &bits) in mask.iter().enumerate() {
+            for bit in 0..64 {
+                if bits & (1u64 << bit) != 0 {
+                    cpus.push(word * 64 + bit);
+                }
+            }
+        }
+        cpus
+    }
+
+    /// Pin the calling thread to one CPU. Best effort: `false` on any
+    /// failure (e.g. the CPU left the allowed set), leaving the thread
+    /// unpinned.
+    pub(super) fn pin_current(cpu: usize) -> bool {
+        if cpu >= MASK_WORDS * 64 {
+            return false;
+        }
+        let mut mask = [0u64; MASK_WORDS];
+        mask[cpu / 64] = 1u64 << (cpu % 64);
+        let ret = unsafe {
+            syscall3(SYS_SETAFFINITY, 0, std::mem::size_of_val(&mask), mask.as_ptr() as usize)
+        };
+        ret == 0
+    }
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+mod affinity {
+    pub(super) fn supported() -> bool {
+        false
+    }
+
+    pub(super) fn allowed_cpus() -> Vec<usize> {
+        Vec::new()
+    }
+
+    pub(super) fn pin_current(_cpu: usize) -> bool {
+        false
     }
 }
 
@@ -235,7 +561,7 @@ mod tests {
     #[test]
     fn worker_panic_propagates_to_caller() {
         // Before the fix this deadlocked: the panicking worker skipped
-        // `latch.count_down()` and `wait` blocked forever.
+        // the completion count-down and the caller blocked forever.
         let pool = ThreadPool::new(4);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             pool.parallel_for(100, |i| {
@@ -278,5 +604,83 @@ mod tests {
             });
         }));
         assert!(result.is_err());
+    }
+
+    #[test]
+    fn sticky_covers_all_indices() {
+        let pool = ThreadPool::new(4);
+        for &n in &[1usize, 3, 4, 7, 103, 1000] {
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            pool.parallel_for_sticky(n, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "n={n}: every index exactly once"
+            );
+        }
+    }
+
+    #[test]
+    fn sticky_maps_indices_to_the_same_worker_every_call() {
+        let pool = ThreadPool::new(4);
+        let n = 103;
+        let record = || {
+            let owners: Vec<Mutex<Option<std::thread::ThreadId>>> =
+                (0..n).map(|_| Mutex::new(None)).collect();
+            pool.parallel_for_sticky(n, |i| {
+                *owners[i].lock().unwrap() = Some(std::thread::current().id());
+            });
+            owners.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect::<Vec<_>>()
+        };
+        let first = record();
+        for round in 0..3 {
+            assert_eq!(record(), first, "round {round}: index→worker mapping must be stable");
+        }
+    }
+
+    #[test]
+    fn sticky_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(3);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.parallel_for_sticky(60, |i| {
+                if i == 41 {
+                    panic!("sticky boom");
+                }
+            });
+        }));
+        assert!(result.is_err());
+        let sum = AtomicU64::new(0);
+        pool.parallel_for_sticky(100, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn inline_pool_sticky_runs_everything() {
+        let pool = ThreadPool::new(1);
+        let sum = AtomicU64::new(0);
+        pool.parallel_for_sticky(100, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn placement_counters_track_live_pools() {
+        // Other tests create and drop pools concurrently, so only the
+        // invariants that survive interleaving are asserted.
+        let pool = ThreadPool::new(3);
+        let snap = placement();
+        assert!(snap.pools >= 1, "our pool is live: {snap:?}");
+        assert!(snap.workers >= 3, "our 3 workers are counted: {snap:?}");
+        assert!(snap.pinned <= snap.workers, "pinned never exceeds workers: {snap:?}");
+        drop(pool);
+    }
+
+    #[test]
+    fn affinity_mode_is_a_known_label() {
+        assert!(["compact", "none", "unsupported"].contains(&affinity_mode()));
     }
 }

@@ -26,6 +26,7 @@ use chunk_attention::kvcache::{
 };
 use chunk_attention::util::pbt;
 use chunk_attention::util::rng::Pcg64;
+use chunk_attention::util::simd::{self, SimdIsa};
 use chunk_attention::util::threadpool::ThreadPool;
 use std::collections::BTreeMap;
 
@@ -131,6 +132,46 @@ fn tpp_2d_matches_oracle_across_threads_and_dtypes() {
             Ok(())
         },
     );
+}
+
+/// Scalar is the bit-identity oracle: every accelerated ISA path available
+/// on this host must reproduce the scalar kernel output *bit for bit* at
+/// every storage dtype and thread count, on workload-shaped trees (shared
+/// prefix + per-sequence suffixes). The oracle-tolerance tests above bound
+/// the error; this one asserts the exact scalar↔SIMD contract from
+/// DESIGN.md "The SIMD dispatch seam" — the vector bodies replicate the
+/// scalar reduction geometry, so there is nothing to tolerate.
+#[test]
+fn every_isa_path_matches_scalar_bit_for_bit() {
+    // Under the CI scalar leg (`PALLAS_SIMD=scalar`) the grid collapses to
+    // scalar-only so the leg never executes a vector body.
+    let isas: Vec<SimdIsa> = if simd::env_request() == "scalar" {
+        vec![SimdIsa::Scalar]
+    } else {
+        simd::available()
+    };
+    pbt::check("isa-bit-identity", 0x51D3, 12, gen_spec, |spec| {
+        for &dtype in &KvDtype::ALL {
+            for workers in [1usize, 4] {
+                let mut tree = build_tree(spec, dtype);
+                simd::force(Some(SimdIsa::Scalar));
+                let (base, _) = run_2d(&mut tree, spec, workers);
+                for &isa in &isas {
+                    simd::force(Some(isa));
+                    let (out, _) = run_2d(&mut tree, spec, workers);
+                    if out != base {
+                        return Err(format!(
+                            "{dtype:?} workers={workers} isa {}: output differs bitwise \
+                             from the scalar oracle",
+                            isa.label()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+    simd::force(None);
 }
 
 /// Half-precision storage vs f32 storage on the same workload: bounded by

@@ -11,6 +11,7 @@ use chunk_attention::coordinator::{Engine, PlannerConfig, SchedPolicyKind};
 use chunk_attention::kvcache::{KvShape, PagedKvCache, PrefixTree, SeqId};
 use chunk_attention::util::pbt;
 use chunk_attention::util::rng::Pcg64;
+use chunk_attention::util::simd::{self, SimdIsa};
 use chunk_attention::util::threadpool::ThreadPool;
 use chunk_attention::workload::Request;
 
@@ -157,53 +158,85 @@ fn tpp_matches_oracle_on_random_trees() {
     });
 }
 
+/// The ISA axis of the property grids: every path runnable on this host,
+/// unless `PALLAS_SIMD=scalar` pins the whole process (the CI scalar leg) —
+/// then the grid stays scalar-only so that leg really never executes a
+/// vector body.
+fn isa_grid() -> Vec<SimdIsa> {
+    if simd::env_request() == "scalar" {
+        vec![SimdIsa::Scalar]
+    } else {
+        simd::available()
+    }
+}
+
 #[test]
 fn two_d_kernel_matches_oracle_and_is_thread_count_invariant() {
     // Random trees (random live batch sizes fall out of the random
-    // insert/remove/append mix) × thread counts {1, 2, 8}: the production
-    // 2D-scheduled kernel must match the f64 oracle within 2e-4 AND be
-    // bit-identical for every thread count — its run schedule and merge
-    // order depend only on the context, never on the pool size.
+    // insert/remove/append mix) × thread counts {1, 2, 8} × every ISA path
+    // available on this host: the production 2D-scheduled kernel must match
+    // the f64 oracle within 2e-4 AND be bit-identical across the whole grid
+    // — its run schedule and merge order depend only on the context, never
+    // on the pool size, and the SIMD bodies replicate the scalar reduction
+    // geometry exactly (DESIGN.md "The SIMD dispatch seam").
     let shape = KvShape::new(3, 8, 4);
-    let grid = [1usize, 2, 8];
+    let threads = [1usize, 2, 8];
     let pools: Vec<(usize, ThreadPool)> =
-        grid.iter().map(|&n| (n, ThreadPool::new(n))).collect();
+        threads.iter().map(|&n| (n, ThreadPool::new(n))).collect();
+    let mut grid: Vec<(usize, SimdIsa)> = Vec::new();
+    for &n in &threads {
+        for isa in isa_grid() {
+            grid.push((n, isa));
+        }
+    }
     let mut baseline: std::collections::BTreeMap<usize, Vec<f32>> = Default::default();
-    pbt::check_grid("tpp2d-vs-oracle-grid", 0x2D5EED, 16, &grid, gen_ops, |case, ops, workers| {
-        let mut tree = apply_ops(ops, shape)?;
-        let ctx = tree.context();
-        let b = ctx.seq_order.len();
-        if b == 0 {
-            return Ok(());
-        }
-        // Queries depend only on the case index, so every grid point sees
-        // the same problem.
-        let mut rng = Pcg64::new(0xD00D, case as u64);
-        let mut q = vec![0.0f32; shape.heads * b * shape.head_dim];
-        rng.fill_uniform_f32(&mut q, -1.0, 1.0);
-        let queries = Queries::new(&q, shape.heads, b, shape.head_dim);
-        let expect = oracle_attention(&tree, &ctx, &queries);
-        let pool = &pools.iter().find(|(n, _)| *n == workers).unwrap().1;
-        let mut scratch = Tpp2dScratch::new();
-        let mut got = vec![0.0f32; expect.len()];
-        tpp_attention_2d(&tree, &ctx, &queries, pool, &mut scratch, &mut got);
-        for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
-            if (g - e).abs() > 2e-4 * (1.0 + e.abs()) {
-                return Err(format!("workers {workers} idx {i}: {g} vs {e}"));
+    pbt::check_grid(
+        "tpp2d-vs-oracle-grid",
+        0x2D5EED,
+        16,
+        &grid,
+        gen_ops,
+        |case, ops, (workers, isa)| {
+            let mut tree = apply_ops(ops, shape)?;
+            let ctx = tree.context();
+            let b = ctx.seq_order.len();
+            if b == 0 {
+                return Ok(());
             }
-        }
-        match baseline.entry(case) {
-            std::collections::btree_map::Entry::Vacant(slot) => {
-                slot.insert(got);
-            }
-            std::collections::btree_map::Entry::Occupied(first) => {
-                if first.get() != &got {
-                    return Err(format!("workers {workers}: output not bit-identical"));
+            // Queries depend only on the case index, so every grid point sees
+            // the same problem.
+            let mut rng = Pcg64::new(0xD00D, case as u64);
+            let mut q = vec![0.0f32; shape.heads * b * shape.head_dim];
+            rng.fill_uniform_f32(&mut q, -1.0, 1.0);
+            let queries = Queries::new(&q, shape.heads, b, shape.head_dim);
+            let expect = oracle_attention(&tree, &ctx, &queries);
+            let pool = &pools.iter().find(|(n, _)| *n == workers).unwrap().1;
+            simd::force(Some(isa));
+            let mut scratch = Tpp2dScratch::new();
+            let mut got = vec![0.0f32; expect.len()];
+            tpp_attention_2d(&tree, &ctx, &queries, pool, &mut scratch, &mut got);
+            for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
+                if (g - e).abs() > 2e-4 * (1.0 + e.abs()) {
+                    return Err(format!("workers {workers} isa {} idx {i}: {g} vs {e}", isa.label()));
                 }
             }
-        }
-        Ok(())
-    });
+            match baseline.entry(case) {
+                std::collections::btree_map::Entry::Vacant(slot) => {
+                    slot.insert(got);
+                }
+                std::collections::btree_map::Entry::Occupied(first) => {
+                    if first.get() != &got {
+                        return Err(format!(
+                            "workers {workers} isa {}: output not bit-identical",
+                            isa.label()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+    simd::force(None);
 }
 
 /// A random multi-tenant serving workload for the policy grid: shared
