@@ -23,9 +23,10 @@ use chunk_attention::perf_model::{AttentionImpl, HardwareModel};
 #[cfg(feature = "pjrt")]
 use chunk_attention::runtime::PjrtModel;
 use chunk_attention::server::{
-    render_comparison, render_policy_comparison, run_bench, run_chaos_bench,
-    run_policy_comparison, run_prefill_comparison, BenchConfig, ChaosBenchConfig,
-    ComparisonConfig, Gateway, GatewayConfig, MixedBenchConfig, PolicyComparisonConfig,
+    render_comparison, render_policy_comparison, render_shard_sweep, run_bench, run_chaos_bench,
+    run_policy_comparison, run_prefill_comparison, run_shard_sweep, shard_sweep_json, BenchConfig,
+    ChaosBenchConfig, ComparisonConfig, Gateway, GatewayConfig, MixedBenchConfig,
+    PolicyComparisonConfig, ShardSweepConfig,
 };
 use chunk_attention::util::cli::{Args, Cli};
 use chunk_attention::util::failpoint;
@@ -264,6 +265,12 @@ fn gateway_cmd(argv: &[String]) -> anyhow::Result<()> {
         "online HTTP serving gateway over the prefix-tree engine (SSE streaming)",
     )
     .opt("listen", "127.0.0.1:8080", "bind address (port 0 picks an ephemeral port)")
+    .opt(
+        "shards",
+        "1",
+        "engine shards; requests route by consistent-hash prefix affinity, each shard owns \
+         its own engine, stepper, and admission queue",
+    )
     .opt("max-batch", "16", "max decode batch")
     .opt("queue-cap", "64", "admission queue capacity; submissions beyond it get 429")
     .opt("chunk", "64", "KV chunk size (tokens)")
@@ -308,17 +315,15 @@ fn gateway_cmd(argv: &[String]) -> anyhow::Result<()> {
     // histograms) reflect actual kernel work. The flag is accepted for
     // symmetry with `serve` and future PJRT support.
     let _ = args.get_flag("synthetic");
-    let runner =
-        KernelRunner::new(args.get_usize("heads-total"), args.get_usize("head-dim"), 32000);
-    let engine = Engine::with_dtype(
-        runner,
-        args.get_usize("chunk"),
-        args.get_usize("max-batch"),
-        parse_kv_dtype(&args)?,
-    );
+    let heads_total = args.get_usize("heads-total");
+    let head_dim = args.get_usize("head-dim");
+    let chunk = args.get_usize("chunk");
+    let max_batch = args.get_usize("max-batch");
+    let kv_dtype = parse_kv_dtype(&args)?;
     let trace_out = args.get("trace-out");
     let cfg = GatewayConfig {
         addr: args.get("listen").to_string(),
+        shards: args.get_usize("shards"),
         queue_cap: args.get_usize("queue-cap"),
         max_new_tokens_cap: args.get_usize("max-new-tokens-cap"),
         decode_interval: Duration::from_micros(args.get_u64("decode-interval-us")),
@@ -331,7 +336,19 @@ fn gateway_cmd(argv: &[String]) -> anyhow::Result<()> {
         trace_path: (!trace_out.is_empty()).then(|| std::path::PathBuf::from(trace_out)),
         ..GatewayConfig::default()
     };
-    let gw = Gateway::start(engine, cfg)?;
+    // Each shard gets its own engine (and KV tree): the factory runs once
+    // per shard id.
+    let gw = Gateway::start_sharded(
+        move |_| {
+            Engine::with_dtype(
+                KernelRunner::new(heads_total, head_dim, 32000),
+                chunk,
+                max_batch,
+                kv_dtype,
+            )
+        },
+        cfg,
+    )?;
     println!("gateway listening on http://{}", gw.addr());
     println!(
         "  POST /v1/generate  JSON {{\"tokens\": [..] | \"text\": \"..\", \"max_new_tokens\": N, \
@@ -341,6 +358,9 @@ fn gateway_cmd(argv: &[String]) -> anyhow::Result<()> {
     println!("  GET  /metrics      Prometheus text exposition (0.0.4, with histograms)");
     println!("  GET  /debug/steps  recent engine steps with per-phase timings (JSON)");
     println!("  GET  /debug/tree   prefix-tree residency and sharing snapshot (JSON)");
+    println!("  GET  /admin/shards routing table: shard states + hash-ring membership (JSON)");
+    println!("  POST /admin/drain?shard=N   stop routing to shard N (in-flight finish)");
+    println!("  POST /admin/join?shard=N    return shard N to the routing ring");
     if !trace_out.is_empty() {
         println!("tracing to {trace_out} (Chrome trace_event JSON, rewritten periodically)");
     }
@@ -363,6 +383,15 @@ fn bench_http(argv: &[String]) -> anyhow::Result<()> {
     .opt("query-tokens", "32", "user query tokens per request")
     .opt("completion", "64", "completion tokens per request")
     .opt("seed", "7", "workload seed")
+    .opt("shards", "1", "spawned gateway: engine shards (prefix-affinity routing)")
+    .opt(
+        "shard-sweep",
+        "",
+        "run the workload once per shard count (e.g. 1,2,4) against freshly spawned \
+         gateways and report RPS scaling + per-shard prefix hit rates; pair with \
+         --tenants >= max shards and --decode-interval-us ~300 for a stepper-bound sweep",
+    )
+    .opt("out", "BENCH_shards.json", "shard-sweep mode: JSON results path")
     .opt("max-batch", "16", "spawned gateway: max decode batch")
     .opt("queue-cap", "64", "spawned gateway: admission queue capacity")
     .opt("chunk", "64", "spawned gateway: KV chunk size")
@@ -409,6 +438,17 @@ fn bench_http(argv: &[String]) -> anyhow::Result<()> {
     // gateway (whose dtype is its own; a typo should still fail loudly).
     let kv_dtype = parse_kv_dtype(&args)?;
 
+    if !args.get("shard-sweep").is_empty() {
+        anyhow::ensure!(
+            args.get("addr").is_empty()
+                && !args.get_flag("chaos")
+                && !args.get_flag("mixed")
+                && !args.get_flag("skewed"),
+            "--shard-sweep spawns its own gateways per shard count; drop \
+             --addr/--chaos/--mixed/--skewed"
+        );
+        return bench_http_shard_sweep(&args, kv_dtype);
+    }
     if args.get_flag("chaos") {
         anyhow::ensure!(
             args.get("addr").is_empty() && !args.get_flag("mixed") && !args.get_flag("skewed"),
@@ -446,17 +486,15 @@ fn bench_http(argv: &[String]) -> anyhow::Result<()> {
         // Real two-phase-partition kernel over the live tree, synthetic
         // token sampling — so server-side phase histograms and --trace-out
         // spans carry actual kernel timings.
-        let runner = KernelRunner::new(16, 32, 32000);
-        let engine = Engine::with_dtype(
-            runner,
-            args.get_usize("chunk"),
-            args.get_usize("max-batch"),
-            kv_dtype,
-        );
-        let gw = Gateway::start(
-            engine,
+        let chunk = args.get_usize("chunk");
+        let max_batch = args.get_usize("max-batch");
+        let gw = Gateway::start_sharded(
+            move |_| {
+                Engine::with_dtype(KernelRunner::new(16, 32, 32000), chunk, max_batch, kv_dtype)
+            },
             GatewayConfig {
                 addr: "127.0.0.1:0".to_string(),
+                shards: args.get_usize("shards"),
                 queue_cap: args.get_usize("queue-cap"),
                 decode_interval: Duration::from_micros(args.get_u64("decode-interval-us")),
                 prefill_chunk_tokens: args.get_usize("prefill-chunk-tokens"),
@@ -502,6 +540,55 @@ fn bench_http(argv: &[String]) -> anyhow::Result<()> {
         println!("trace written to {trace_out} (open in chrome://tracing or Perfetto)");
     }
     anyhow::ensure!(report.completed > 0, "no request completed — is the gateway reachable?");
+    Ok(())
+}
+
+/// `bench-http --shard-sweep 1,2,4`: the closed-loop workload once per
+/// shard count against freshly spawned gateways; prints the RPS-scaling
+/// table and writes machine-readable results to `--out`.
+fn bench_http_shard_sweep(args: &Args, kv_dtype: KvDtype) -> anyhow::Result<()> {
+    let shard_counts = args
+        .get("shard-sweep")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            s.parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("bad --shard-sweep entry {s:?}; want e.g. 1,2,4"))
+        })
+        .collect::<anyhow::Result<Vec<usize>>>()?;
+    let cfg = ShardSweepConfig {
+        bench: BenchConfig {
+            addr: String::new(),
+            clients: args.get_usize("clients"),
+            requests: args.get_usize("requests"),
+            tenants: args.get_usize("tenants"),
+            system_tokens: args.get_usize("system-tokens"),
+            query_tokens: args.get_usize("query-tokens"),
+            max_new_tokens: args.get_usize("completion"),
+            seed: args.get_u64("seed"),
+            timeout: Duration::from_secs(120),
+        },
+        shard_counts,
+        max_batch: args.get_usize("max-batch"),
+        chunk: args.get_usize("chunk"),
+        queue_cap: args.get_usize("queue-cap"),
+        decode_interval: Duration::from_micros(args.get_u64("decode-interval-us")),
+        prefill_us_per_token: args.get_u64("prefill-us-per-token"),
+        prefill_chunk_tokens: args.get_usize("prefill-chunk-tokens"),
+        step_token_budget: args.get_usize("step-token-budget"),
+        kv_dtype,
+    };
+    let points = run_shard_sweep(&cfg)?;
+    println!("{}", render_shard_sweep(&points));
+    let out = args.get("out");
+    anyhow::ensure!(!out.is_empty(), "--out must name the sweep results file");
+    std::fs::write(out, shard_sweep_json(&cfg, &points).pretty() + "\n")?;
+    println!("sweep written to {out}");
+    anyhow::ensure!(
+        points.iter().all(|p| p.report.completed > 0),
+        "a sweep point completed no requests — is the workload misconfigured?"
+    );
     Ok(())
 }
 

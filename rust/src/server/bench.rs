@@ -272,6 +272,202 @@ pub fn run_bench(cfg: &BenchConfig) -> anyhow::Result<BenchReport> {
     })
 }
 
+/// Knobs for the `--shard-sweep` scaling harness: run the closed-loop
+/// multi-tenant workload once per shard count against freshly spawned
+/// in-process gateways and compare throughput. The decode interval paces
+/// each shard's stepper, so with enough tenants the single-shard gateway
+/// is stepper-bound and RPS should scale near-linearly with shards while
+/// prefix affinity keeps every tenant's system prompt hot on one shard.
+#[derive(Debug, Clone)]
+pub struct ShardSweepConfig {
+    /// The workload (its `addr` is overwritten per spawned gateway).
+    pub bench: BenchConfig,
+    /// Shard counts to sweep, e.g. `[1, 2, 4]`.
+    pub shard_counts: Vec<usize>,
+    pub max_batch: usize,
+    pub chunk: usize,
+    pub queue_cap: usize,
+    /// Stepper pacing — the serialized per-shard cost that sharding
+    /// parallelizes.
+    pub decode_interval: Duration,
+    pub prefill_us_per_token: u64,
+    pub prefill_chunk_tokens: usize,
+    pub step_token_budget: usize,
+    pub kv_dtype: KvDtype,
+}
+
+impl Default for ShardSweepConfig {
+    fn default() -> Self {
+        ShardSweepConfig {
+            bench: BenchConfig {
+                // More tenants than the widest sweep point, so every shard
+                // owns at least one hot prefix and stays busy.
+                clients: 16,
+                requests: 96,
+                tenants: 8,
+                system_tokens: 512,
+                query_tokens: 16,
+                max_new_tokens: 48,
+                ..BenchConfig::default()
+            },
+            shard_counts: vec![1, 2, 4],
+            max_batch: 16,
+            chunk: 64,
+            queue_cap: 64,
+            decode_interval: Duration::from_micros(300),
+            prefill_us_per_token: 20,
+            prefill_chunk_tokens: 128,
+            step_token_budget: 160,
+            kv_dtype: KvDtype::F32,
+        }
+    }
+}
+
+/// One sweep point: the client-side report plus each shard's prefix hit
+/// rate (affinity quality — a shard that keeps its tenants' prefixes
+/// local should match the single-engine hit rate).
+#[derive(Debug)]
+pub struct ShardSweepPoint {
+    pub shards: usize,
+    pub report: BenchReport,
+    /// Per-shard `prefix_hit_rate`, scraped from the aggregated `/metrics`
+    /// (`shard="i"` series; the plain gauge for a single-shard run). NaN
+    /// where unavailable.
+    pub per_shard_hit_rate: Vec<f64>,
+}
+
+/// Run the closed-loop workload once per shard count against freshly
+/// spawned in-process gateways; returns one point per count, in order.
+pub fn run_shard_sweep(cfg: &ShardSweepConfig) -> anyhow::Result<Vec<ShardSweepPoint>> {
+    anyhow::ensure!(!cfg.shard_counts.is_empty(), "need at least one shard count to sweep");
+    let mut points = Vec::with_capacity(cfg.shard_counts.len());
+    for &n in &cfg.shard_counts {
+        anyhow::ensure!(n > 0, "shard counts must be positive");
+        let gw = Gateway::start_sharded(
+            |_| {
+                let runner = PacedRunner {
+                    inner: KernelRunner::new(16, 32, 32000),
+                    prefill_us_per_token: cfg.prefill_us_per_token,
+                };
+                Engine::with_dtype(runner, cfg.chunk, cfg.max_batch, cfg.kv_dtype)
+            },
+            GatewayConfig {
+                addr: "127.0.0.1:0".to_string(),
+                shards: n,
+                queue_cap: cfg.queue_cap,
+                decode_interval: cfg.decode_interval,
+                prefill_chunk_tokens: cfg.prefill_chunk_tokens,
+                step_token_budget: cfg.step_token_budget,
+                ..GatewayConfig::default()
+            },
+        )?;
+        let mut bench = cfg.bench.clone();
+        bench.addr = gw.addr().to_string();
+        let report = run_bench(&bench)?;
+        // The post-run scrape inside run_bench read the cluster rollup;
+        // this one reads the per-shard affinity series.
+        let doc = client::get(&bench.addr, "/metrics", cfg.bench.timeout)
+            .map(|r| r.body)
+            .unwrap_or_default();
+        let per_shard_hit_rate: Vec<f64> = if n == 1 {
+            vec![client::gauge_value(&doc, "prefix_hit_rate").unwrap_or(f64::NAN)]
+        } else {
+            (0..n)
+                .map(|i| {
+                    client::labeled_gauge_value(&doc, "prefix_hit_rate", "shard", &i.to_string())
+                        .unwrap_or(f64::NAN)
+                })
+                .collect()
+        };
+        gw.shutdown()?;
+        points.push(ShardSweepPoint { shards: n, report, per_shard_hit_rate });
+    }
+    Ok(points)
+}
+
+/// Machine-readable sweep results (`bench-http --shard-sweep --out
+/// BENCH_shards.json`). Non-finite samples serialize as `null` so the
+/// document always parses.
+pub fn shard_sweep_json(cfg: &ShardSweepConfig, points: &[ShardSweepPoint]) -> Json {
+    let num = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+    let mut config = Json::obj();
+    config
+        .set("clients", cfg.bench.clients)
+        .set("requests", cfg.bench.requests)
+        .set("tenants", cfg.bench.tenants)
+        .set("system_tokens", cfg.bench.system_tokens)
+        .set("query_tokens", cfg.bench.query_tokens)
+        .set("max_new_tokens", cfg.bench.max_new_tokens)
+        .set("seed", cfg.bench.seed)
+        .set("chunk", cfg.chunk)
+        .set("max_batch", cfg.max_batch)
+        .set("queue_cap", cfg.queue_cap)
+        .set("decode_interval_us", cfg.decode_interval.as_micros() as u64)
+        .set("prefill_us_per_token", cfg.prefill_us_per_token)
+        .set("prefill_chunk_tokens", cfg.prefill_chunk_tokens)
+        .set("step_token_budget", cfg.step_token_budget);
+    let rows: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            let rps = p.report.completed as f64 / p.report.wall_s.max(1e-9);
+            let mut o = Json::obj();
+            o.set("shards", p.shards)
+                .set("rps", num(rps))
+                .set("decode_tps", num(p.report.decode_tps()))
+                .set("server_ttft_p50_ms", num(p.report.server_ttft_ms.0))
+                .set("server_ttft_p99_ms", num(p.report.server_ttft_ms.1))
+                .set("client_ttft_mean_ms", num(p.report.ttft_ms.mean()))
+                .set("prefix_hit_rate", num(p.report.prefix_hit_rate))
+                .set(
+                    "per_shard_prefix_hit_rate",
+                    Json::Arr(p.per_shard_hit_rate.iter().map(|&h| num(h)).collect()),
+                )
+                .set("completed", p.report.completed)
+                .set("rejected", p.report.rejected)
+                .set("errors", p.report.errors)
+                .set("wall_s", num(p.report.wall_s));
+            o
+        })
+        .collect();
+    let mut root = Json::obj();
+    root.set("bench", "shard_sweep").set("config", config).set("points", rows);
+    root
+}
+
+/// Human-readable sweep table: RPS scaling against the first point and
+/// per-shard prefix affinity quality.
+pub fn render_shard_sweep(points: &[ShardSweepPoint]) -> String {
+    let rps_of =
+        |p: &ShardSweepPoint| p.report.completed as f64 / p.report.wall_s.max(1e-9);
+    let base_rps = points.first().map(&rps_of).unwrap_or(f64::NAN);
+    let mut out = format!(
+        "shard sweep — closed-loop multi-tenant workload per shard count\n\n\
+         {:<8}{:>9}{:>10}{:>15}{:>15}{:>15}  {}\n",
+        "shards", "RPS", "speedup", "decode tok/s", "ttft p50 (ms)", "ttft p99 (ms)",
+        "per-shard hit rate"
+    );
+    for p in points {
+        let rps = rps_of(p);
+        let hits = p
+            .per_shard_hit_rate
+            .iter()
+            .map(|h| format!("{h:.2}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        out.push_str(&format!(
+            "{:<8}{:>9.2}{:>9.2}x{:>15.1}{:>15.1}{:>15.1}  {}\n",
+            p.shards,
+            rps,
+            rps / base_rps,
+            p.report.decode_tps(),
+            p.report.server_ttft_ms.0,
+            p.report.server_ttft_ms.1,
+            hits,
+        ));
+    }
+    out
+}
+
 /// Mixed head-of-line workload: long *cold* prompts (unique tokens, so no
 /// prefix reuse is possible) interleaved with short requests that share
 /// one hot prefix. Under monolithic prefill every long admission stalls

@@ -17,6 +17,8 @@ pub struct Response {
     /// Parsed `Retry-After` header (seconds), when the server sent one
     /// (429 backpressure, 503 draining/degraded).
     pub retry_after: Option<u64>,
+    /// Echoed `X-Request-Id` header, when the server sent one.
+    pub request_id: Option<String>,
 }
 
 fn connect(addr: &str, timeout: Duration) -> anyhow::Result<TcpStream> {
@@ -31,7 +33,7 @@ fn connect(addr: &str, timeout: Duration) -> anyhow::Result<TcpStream> {
     Ok(stream)
 }
 
-fn read_head<R: BufRead>(reader: &mut R) -> anyhow::Result<(u16, Option<u64>)> {
+fn read_head<R: BufRead>(reader: &mut R) -> anyhow::Result<(u16, Option<u64>, Option<String>)> {
     let mut line = String::new();
     if reader.read_line(&mut line)? == 0 {
         anyhow::bail!("server closed the connection before responding");
@@ -42,9 +44,10 @@ fn read_head<R: BufRead>(reader: &mut R) -> anyhow::Result<(u16, Option<u64>)> {
         .ok_or_else(|| anyhow::anyhow!("malformed status line {line:?}"))?
         .parse()?;
     // Consume headers up to the blank line; `Connection: close` framing
-    // means the body simply runs to EOF. `Retry-After` is the one header
-    // the retry helper cares about.
+    // means the body simply runs to EOF. `Retry-After` (backpressure) and
+    // `X-Request-Id` (correlation echo) are the headers callers care about.
     let mut retry_after = None;
+    let mut request_id = None;
     loop {
         let mut h = String::new();
         if reader.read_line(&mut h)? == 0 {
@@ -52,11 +55,13 @@ fn read_head<R: BufRead>(reader: &mut R) -> anyhow::Result<(u16, Option<u64>)> {
         }
         let trimmed = h.trim_end();
         if trimmed.is_empty() {
-            return Ok((status, retry_after));
+            return Ok((status, retry_after, request_id));
         }
         if let Some((name, value)) = trimmed.split_once(':') {
             if name.trim().eq_ignore_ascii_case("retry-after") {
                 retry_after = value.trim().parse().ok();
+            } else if name.trim().eq_ignore_ascii_case("x-request-id") {
+                request_id = Some(value.trim().to_string());
             }
         }
     }
@@ -68,10 +73,26 @@ pub fn get(addr: &str, path: &str, timeout: Duration) -> anyhow::Result<Response
     write!(stream, "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")?;
     stream.flush()?;
     let mut reader = BufReader::new(stream);
-    let (status, retry_after) = read_head(&mut reader)?;
+    let (status, retry_after, request_id) = read_head(&mut reader)?;
     let mut body = String::new();
     reader.read_to_string(&mut body)?;
-    Ok(Response { status, body, retry_after })
+    Ok(Response { status, body, retry_after, request_id })
+}
+
+/// Blocking POST with an empty body (admin endpoints: `/admin/drain`,
+/// `/admin/join`).
+pub fn post(addr: &str, path: &str, timeout: Duration) -> anyhow::Result<Response> {
+    let mut stream = connect(addr, timeout)?;
+    write!(
+        stream,
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: 0\r\nConnection: close\r\n\r\n"
+    )?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let (status, retry_after, request_id) = read_head(&mut reader)?;
+    let mut body = String::new();
+    reader.read_to_string(&mut body)?;
+    Ok(Response { status, body, retry_after, request_id })
 }
 
 /// Extract a gauge's value from a Prometheus exposition document by series
@@ -172,8 +193,10 @@ impl HistogramSnapshot {
 
 /// Parse one histogram child from an exposition document by series name
 /// suffix (prefix-agnostic, like [`gauge_value`]). `label` selects a child
-/// of a labeled family (e.g. `("phase", "chunk_first")`); `None` matches
-/// any child — use it only for unlabeled histograms.
+/// of a labeled family (e.g. `("phase", "chunk_first")`); `None` selects
+/// the *unlabeled* child. Matching is on the exact label set minus `le`,
+/// so in an aggregated document the unlabeled cluster rollup and its
+/// per-shard `shard="N"` children are distinct, non-mixing snapshots.
 pub fn histogram_snapshot(
     exposition: &str,
     name: &str,
@@ -192,9 +215,13 @@ pub fn histogram_snapshot(
         }
         let Some((series, value)) = line.rsplit_once(' ') else { continue };
         let (sname, labels) = split_series(series);
+        let child: Vec<&str> = labels
+            .split(',')
+            .filter(|p| !p.is_empty() && !p.starts_with("le=\""))
+            .collect();
         let label_ok = match &want {
-            Some(w) => labels.contains(w.as_str()),
-            None => true,
+            Some(w) => child.len() == 1 && child[0] == w.as_str(),
+            None => child.is_empty(),
         };
         if !label_ok {
             continue;
@@ -394,6 +421,8 @@ pub struct GenerateStream {
     pub error_body: String,
     /// Parsed `Retry-After` header (seconds), when present.
     pub retry_after: Option<u64>,
+    /// Echoed `X-Request-Id` header, when the request carried one.
+    pub request_id: Option<String>,
 }
 
 impl GenerateStream {
@@ -440,24 +469,46 @@ impl GenerateStream {
 /// POST `/v1/generate`; returns once the response head arrived. For a 200
 /// the stream is live: pull tokens with [`GenerateStream::next_event`].
 pub fn generate(addr: &str, body: &Json, timeout: Duration) -> anyhow::Result<GenerateStream> {
+    generate_with_request_id(addr, body, timeout, None)
+}
+
+/// [`generate`] sending a client-chosen `X-Request-Id` header; the gateway
+/// echoes it on the response head (SSE included) and tags its logs with
+/// it, so one id correlates client, gateway, and shard records.
+pub fn generate_with_request_id(
+    addr: &str,
+    body: &Json,
+    timeout: Duration,
+    request_id: Option<&str>,
+) -> anyhow::Result<GenerateStream> {
     let mut stream = connect(addr, timeout)?;
     let payload = body.to_string();
     write!(
         stream,
         "POST /v1/generate HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n",
+         Content-Length: {}\r\nConnection: close\r\n",
         payload.len()
     )?;
+    if let Some(rid) = request_id {
+        write!(stream, "X-Request-Id: {rid}\r\n")?;
+    }
+    write!(stream, "\r\n")?;
     stream.write_all(payload.as_bytes())?;
     stream.flush()?;
     let mut reader = BufReader::new(stream);
-    let (status, retry_after) = read_head(&mut reader)?;
+    let (status, retry_after, request_id) = read_head(&mut reader)?;
     if status != 200 {
         let mut error_body = String::new();
         let _ = reader.read_to_string(&mut error_body);
-        return Ok(GenerateStream { status, reader: None, error_body, retry_after });
+        return Ok(GenerateStream { status, reader: None, error_body, retry_after, request_id });
     }
-    Ok(GenerateStream { status, reader: Some(reader), error_body: String::new(), retry_after })
+    Ok(GenerateStream {
+        status,
+        reader: Some(reader),
+        error_body: String::new(),
+        retry_after,
+        request_id,
+    })
 }
 
 /// [`generate`] with one bounded retry: a 429/503 response (or a failed

@@ -1,52 +1,57 @@
-//! The serving gateway: an HTTP/1.1 + SSE frontend over the continuous-
-//! batching [`Engine`].
+//! The serving gateway: an HTTP/1.1 + SSE frontend routing over N engine
+//! shards.
 //!
-//! Threading model (see DESIGN.md for the full note):
+//! Threading model (see DESIGN.md "The shard seam" for the full note):
 //!
 //! - one **accept thread** owns the `TcpListener` and spawns a short-lived
 //!   **handler thread** per connection (`Connection: close` discipline);
-//! - one **stepper thread** owns the `Engine` exclusively and pumps
-//!   [`Engine::step`] in a loop — the engine is never shared or locked;
-//! - handler threads talk to the stepper over an mpsc **command channel**
-//!   (`Submit` / `Cancel` / `Scrape`), and each submitted request carries
-//!   its own **event channel** on which the stepper streams per-token
-//!   events back.
+//! - N **shard workers** ([`super::shard`]), each a stepper thread owning
+//!   its own [`Engine`] exclusively — engines are never shared or locked;
+//! - handler threads pick a shard through the [`Router`]'s consistent-hash
+//!   ring (keyed on the longest chunk-aligned prompt prefix, so tenants
+//!   sharing a system prompt land on the shard already holding its KV
+//!   chunks) and talk to it over the typed [`WorkerMsg`] protocol; each
+//!   submitted request carries its own event channel on which the shard
+//!   streams per-token events back.
 //!
-//! Backpressure is admission control in the scheduler: a `Submit` beyond
-//! the queue cap is answered with a `Rejected` event, which the handler
-//! maps to HTTP 429. A client disconnect surfaces as a failed SSE write in
-//! the handler, which sends `Cancel`; the stepper then removes the
-//! sequence mid-decode, returning its private chunks to the tree pool.
-//! Graceful shutdown stops the accept loop, rejects new submissions, and
-//! drains active sequences before the stepper exits.
+//! Backpressure is per-shard admission control: a `Submit` beyond a
+//! shard's queue cap is answered with a `Rejected` event, which the
+//! handler maps to HTTP 429 carrying the shard id. A client disconnect
+//! surfaces as a failed SSE write in the handler, which sends `Cancel` to
+//! the same shard; the stepper then removes the sequence mid-decode.
+//! `POST /admin/drain?shard=N` takes a shard out of the ring without
+//! touching its stepper (in-flight requests finish; new traffic reroutes)
+//! and `POST /admin/join?shard=N` puts it back, moving only the affected
+//! key range. Graceful shutdown stops the accept loop and drains every
+//! shard before joining its threads.
 
 use super::http;
-use crate::coordinator::{Engine, FinishedSeq, ModelRunner, SchedPolicyKind};
-use crate::metrics::{
-    push_gauge, push_histogram, push_histogram_family, push_labeled_gauge, push_labeled_series,
-    render_exposition, StepTiming,
-};
-use crate::util::failpoint;
+use super::router::{aggregate_expositions, routing_key, Router};
+use super::shard::{spawn_shard, EngineHandle, ShardRuntime, WorkerMsg};
+pub use super::shard::TokenEvent;
+use crate::coordinator::{Engine, ModelRunner, SchedPolicyKind};
 use crate::util::json::Json;
-use crate::util::trace;
 use crate::workload::{Request, Tokenizer};
-use std::collections::{BTreeMap, VecDeque};
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
 
-/// Gateway tuning knobs. The engine itself (runner, chunk size, max batch)
-/// is constructed by the caller and handed to [`Gateway::start`].
+/// Gateway tuning knobs. The engines themselves (runner, chunk size, max
+/// batch) are constructed by the caller and handed to [`Gateway::start`]
+/// (one engine) or [`Gateway::start_sharded`] (a factory, one per shard).
 #[derive(Debug, Clone)]
 pub struct GatewayConfig {
     /// Bind address; port 0 picks an ephemeral port (tests).
     pub addr: String,
-    /// Admission-queue capacity; submissions beyond it get HTTP 429.
+    /// Engine shards; each is a thread owning its own engine, scheduler,
+    /// and retainer. 1 keeps the historical single-engine behavior
+    /// (`/metrics` byte-compatible, no `shard` labels).
+    pub shards: usize,
+    /// Per-shard admission-queue capacity; submissions beyond it get 429.
     pub queue_cap: usize,
     /// Hard cap on a request's `max_new_tokens`.
     pub max_new_tokens_cap: usize,
@@ -56,7 +61,7 @@ pub struct GatewayConfig {
     pub decode_interval: Duration,
     /// Prefix for every `/metrics` series.
     pub metrics_prefix: String,
-    /// Prefix-retention chunk budget; 0 disables retention.
+    /// Per-shard prefix-retention chunk budget; 0 disables retention.
     pub retain_chunks: usize,
     /// Per-connection socket read/write timeout.
     pub io_timeout: Duration,
@@ -81,9 +86,9 @@ pub struct GatewayConfig {
     /// DRR per-tenant weights (`--tenant-weights 0=4,3=2`); unlisted
     /// tenants weigh 1. Ignored by the other policies.
     pub tenant_weights: Vec<(usize, u32)>,
-    /// Watchdog stall bound: if the stepper completes no loop pass within
-    /// this window, `/healthz` flips to 503-degraded until it recovers.
-    /// `Duration::ZERO` disables the watchdog thread.
+    /// Watchdog stall bound: if a shard's stepper completes no loop pass
+    /// within this window, `/healthz` flips to 503-degraded until it
+    /// recovers. `Duration::ZERO` disables the watchdog threads.
     pub watchdog_stall: Duration,
     /// Transient engine-step errors are retried this many times (with
     /// backoff) before the supervisor fails the implicated request(s).
@@ -94,9 +99,9 @@ pub struct GatewayConfig {
     pub retry_after_secs: u64,
     /// When set, arm the span recorder and write a Chrome `trace_event`
     /// JSON file here (rewritten periodically and on stepper exit). Load
-    /// it in `chrome://tracing` / Perfetto: track 0 is the stepper (step
-    /// and kernel-phase spans), one track per request id for lifecycle
-    /// events.
+    /// it in `chrome://tracing` / Perfetto: tid N is shard N's stepper
+    /// (step and kernel-phase spans), one track per request id for
+    /// lifecycle events. Shard 0 owns the file.
     pub trace_path: Option<PathBuf>,
 }
 
@@ -104,6 +109,7 @@ impl Default for GatewayConfig {
     fn default() -> Self {
         GatewayConfig {
             addr: "127.0.0.1:0".to_string(),
+            shards: 1,
             queue_cap: 64,
             max_new_tokens_cap: 4096,
             decode_interval: Duration::ZERO,
@@ -124,181 +130,65 @@ impl Default for GatewayConfig {
     }
 }
 
-/// Liveness heartbeat and failure counters shared by the stepper thread,
-/// the watchdog thread, and connection handlers. All atomics: readable
-/// from any thread, unpoisonable by a panicking one.
-pub(crate) struct GatewayShared {
-    started: Instant,
-    /// Milliseconds since `started` of the stepper's last completed loop
-    /// pass (bumped on every pass, idle or busy, so staleness always
-    /// means a wedged or very slow step).
-    heartbeat_ms: AtomicU64,
-    /// Set by the watchdog while the heartbeat is stale; drives 503 on
-    /// `/healthz`.
-    stalled: AtomicBool,
-    watchdog_stalls: AtomicU64,
-    engine_panics: AtomicU64,
-    engine_rebuilds: AtomicU64,
-    requests_timed_out: AtomicU64,
-    step_retries: AtomicU64,
-    /// `requests_failed_total` by reason.
-    failed_panic: AtomicU64,
-    failed_error: AtomicU64,
-    failed_rebuild: AtomicU64,
-}
-
-impl GatewayShared {
-    fn new() -> Self {
-        GatewayShared {
-            started: Instant::now(),
-            heartbeat_ms: AtomicU64::new(0),
-            stalled: AtomicBool::new(false),
-            watchdog_stalls: AtomicU64::new(0),
-            engine_panics: AtomicU64::new(0),
-            engine_rebuilds: AtomicU64::new(0),
-            requests_timed_out: AtomicU64::new(0),
-            step_retries: AtomicU64::new(0),
-            failed_panic: AtomicU64::new(0),
-            failed_error: AtomicU64::new(0),
-            failed_rebuild: AtomicU64::new(0),
-        }
-    }
-
-    fn now_ms(&self) -> u64 {
-        self.started.elapsed().as_millis() as u64
-    }
-
-    /// Stepper liveness beat, once per loop pass.
-    fn beat(&self) {
-        self.heartbeat_ms.store(self.now_ms(), Ordering::SeqCst);
-    }
-
-    fn heartbeat_age_ms(&self) -> u64 {
-        self.now_ms().saturating_sub(self.heartbeat_ms.load(Ordering::SeqCst))
-    }
-
-    fn count_failure(&self, reason: FailReason) {
-        match reason {
-            FailReason::Panic => &self.failed_panic,
-            FailReason::Error => &self.failed_error,
-            FailReason::Rebuild => &self.failed_rebuild,
-        }
-        .fetch_add(1, Ordering::SeqCst);
-    }
-}
-
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum FailReason {
-    /// Quarantined after a panic unwound out of `Engine::step`.
-    Panic,
-    /// Failed after transient-error retries were exhausted.
-    Error,
-    /// Dropped by a full engine rebuild (broken invariants).
-    Rebuild,
-}
-
-/// Per-token events the stepper streams back to a request's handler.
-#[derive(Debug, Clone)]
-pub enum TokenEvent {
-    /// Admission control refused the request. `draining` distinguishes a
-    /// shutting-down gateway (HTTP 503) from a full queue (HTTP 429).
-    Rejected { queued: usize, draining: bool },
-    /// One freshly decoded completion token.
-    Token { index: usize, token: u32 },
-    /// The sequence finished; the stream is complete.
-    Done { completion_tokens: usize },
-    /// Terminal: the request failed server-side (panic quarantine,
-    /// persistent runner error, or a full engine rebuild).
-    Error { message: String },
-    /// Terminal: the request exceeded its `deadline_ms`.
-    Timeout,
-}
-
-/// Commands handler threads send to the stepper thread.
-enum EngineCmd {
-    Submit { request: Request, events: mpsc::Sender<TokenEvent>, deadline: Option<Instant> },
-    Cancel { id: u64 },
-    Scrape { reply: mpsc::Sender<String> },
-    /// `/debug/steps`: JSON dump of the stepper's recent-step ring.
-    DebugSteps { reply: mpsc::Sender<String> },
-    /// `/debug/tree`: JSON snapshot of prefix-tree residency and sharing.
-    DebugTree { reply: mpsc::Sender<String> },
-    Drain,
-}
-
 /// A running gateway; dropping it does NOT stop the threads — call
 /// [`Gateway::shutdown`] for a clean exit.
 pub struct Gateway {
     addr: SocketAddr,
-    cmd_tx: mpsc::Sender<EngineCmd>,
+    router: Arc<Router>,
     stop: Arc<AtomicBool>,
     accept_thread: thread::JoinHandle<()>,
-    stepper_thread: thread::JoinHandle<()>,
-    watchdog_thread: Option<thread::JoinHandle<()>>,
+    shards: Vec<ShardRuntime>,
 }
 
 impl Gateway {
-    /// Bind, then move `engine` onto the stepper thread and start serving.
+    /// Bind, then move `engine` onto a single shard worker and start
+    /// serving. The single-shard fast path: routing is trivial and
+    /// `/metrics` stays byte-compatible with the pre-sharding gateway.
     pub fn start<R: ModelRunner + Send + 'static>(
-        mut engine: Engine<R>,
-        cfg: GatewayConfig,
+        engine: Engine<R>,
+        mut cfg: GatewayConfig,
     ) -> anyhow::Result<Gateway> {
+        cfg.shards = 1;
+        let mut slot = Some(engine);
+        Gateway::start_sharded(move |_| slot.take().expect("single-shard factory called once"), cfg)
+    }
+
+    /// Bind, build `cfg.shards` engines through `factory` (called with the
+    /// shard id), spawn one shard worker per engine, and start routing.
+    pub fn start_sharded<R, F>(mut factory: F, cfg: GatewayConfig) -> anyhow::Result<Gateway>
+    where
+        R: ModelRunner + Send + 'static,
+        F: FnMut(usize) -> Engine<R>,
+    {
         let listener = TcpListener::bind(&cfg.addr)?;
         let addr = listener.local_addr()?;
-        engine.set_queue_limit(Some(cfg.queue_cap));
-        engine.set_history_limit(cfg.history_limit);
-        engine.set_chunked_prefill(cfg.prefill_chunk_tokens, cfg.step_token_budget);
-        engine.set_planner_config(crate::coordinator::PlannerConfig {
-            policy: cfg.sched_policy,
-            tenant_weights: cfg.tenant_weights.clone(),
-            ..crate::coordinator::PlannerConfig::default()
-        });
-        if cfg.retain_chunks > 0 {
-            engine.enable_prefix_retention(cfg.retain_chunks);
-        }
-        // Arm failpoints from the environment (no-op when FAILPOINTS is
-        // unset) so the chaos CI leg reaches gateways spawned anywhere.
-        failpoint::arm_from_env();
-        // Arm the span recorder only when a trace file was requested; the
-        // disarmed path stays one relaxed atomic load per site.
-        if cfg.trace_path.is_some() {
-            trace::arm();
-        }
-        let (cmd_tx, cmd_rx) = mpsc::channel::<EngineCmd>();
         let stop = Arc::new(AtomicBool::new(false));
-        let shared = Arc::new(GatewayShared::new());
-        shared.beat();
-
-        let stepper_cfg = cfg.clone();
-        let stepper_shared = shared.clone();
-        let stepper_thread = thread::Builder::new()
-            .name("gateway-stepper".to_string())
-            .spawn(move || stepper_loop(engine, cmd_rx, stepper_cfg, stepper_shared))?;
-
-        let watchdog_thread = if cfg.watchdog_stall > Duration::ZERO {
-            let wd_shared = shared.clone();
-            let wd_stop = stop.clone();
-            let stall = cfg.watchdog_stall;
-            Some(
-                thread::Builder::new()
-                    .name("gateway-watchdog".to_string())
-                    .spawn(move || watchdog_loop(wd_shared, wd_stop, stall))?,
-            )
-        } else {
-            None
-        };
+        let n = cfg.shards.max(1);
+        let mut shards = Vec::with_capacity(n);
+        // The routing key is chunk-aligned, so the router needs the chunk
+        // size; every shard must use the same tree shape for affinity to
+        // mean anything, so shard 0's is taken as canonical.
+        let mut chunk_size = 1usize;
+        for i in 0..n {
+            let engine = factory(i);
+            if i == 0 {
+                chunk_size = engine.tree().shape().chunk_size.max(1);
+            }
+            shards.push(spawn_shard(i, engine, &cfg, stop.clone())?);
+        }
+        let handles: Vec<Arc<EngineHandle>> = shards.iter().map(|s| s.handle.clone()).collect();
+        let router = Arc::new(Router::new(handles, chunk_size));
 
         // Built up front so the first connection doesn't pay BPE training.
         let tokenizer = Arc::new(Tokenizer::default_english());
-        let accept_tx = cmd_tx.clone();
+        let accept_router = router.clone();
         let accept_stop = stop.clone();
         let accept_cfg = cfg.clone();
-        let accept_shared = shared.clone();
         let accept_thread = thread::Builder::new().name("gateway-accept".to_string()).spawn(
-            move || accept_loop(listener, accept_tx, accept_stop, accept_cfg, tokenizer, accept_shared),
+            move || accept_loop(listener, accept_router, accept_stop, accept_cfg, tokenizer),
         )?;
 
-        log::info!("gateway listening on {addr}");
+        log::info!("gateway listening on {addr} ({n} shard{})", if n == 1 { "" } else { "s" });
         // Record which kernel path and pool placement this process runs —
         // bench logs must say what they measured.
         let placement = crate::util::threadpool::placement();
@@ -310,7 +200,7 @@ impl Gateway {
             placement.workers,
             placement.pinned,
         );
-        Ok(Gateway { addr, cmd_tx, stop, accept_thread, stepper_thread, watchdog_thread })
+        Ok(Gateway { addr, router, stop, accept_thread, shards })
     }
 
     pub fn addr(&self) -> SocketAddr {
@@ -318,1026 +208,46 @@ impl Gateway {
     }
 
     /// Graceful shutdown: stop accepting connections, reject further
-    /// submissions, drain active sequences, and join both service threads.
+    /// submissions on every shard, drain active sequences, and join every
+    /// worker thread.
     pub fn shutdown(self) -> anyhow::Result<()> {
         self.stop.store(true, Ordering::SeqCst);
         // Unblock the accept loop with a throwaway connection.
         let _ = TcpStream::connect(self.addr);
-        let _ = self.cmd_tx.send(EngineCmd::Drain);
-        drop(self.cmd_tx);
+        for handle in self.router.handles() {
+            let _ = handle.send(WorkerMsg::Drain);
+        }
         self.accept_thread
             .join()
             .map_err(|_| anyhow::anyhow!("gateway accept thread panicked"))?;
-        self.stepper_thread
-            .join()
-            .map_err(|_| anyhow::anyhow!("gateway stepper thread panicked"))?;
-        if let Some(wd) = self.watchdog_thread {
-            wd.join().map_err(|_| anyhow::anyhow!("gateway watchdog thread panicked"))?;
+        for shard in self.shards {
+            shard.join()?;
         }
         Ok(())
     }
 }
 
-/// Stream bookkeeping the stepper keeps per live request.
-struct StreamState {
-    events: mpsc::Sender<TokenEvent>,
-    /// Completion tokens already pushed to the event channel.
-    sent: usize,
-    /// Absolute deadline derived from the request's `deadline_ms`.
-    deadline: Option<Instant>,
-    /// When the previous completion token was streamed; feeds the
-    /// `inter_token_seconds` histogram.
-    last_token_at: Option<Instant>,
-}
-
-/// One completed engine step, kept in a bounded ring for `/debug/steps`.
-#[derive(Clone, Copy)]
-struct StepRecord {
-    /// Monotone step ordinal (the step-duration histogram's count).
-    seq: u64,
-    /// Milliseconds since gateway start when the step was observed.
-    ts_ms: u64,
-    timing: StepTiming,
-}
-
-/// `/debug/steps` ring capacity.
-const STEP_RING_CAP: usize = 256;
-
-/// Stepper passes between periodic trace-file rewrites when `--trace-out`
-/// is set (the file is also written on stepper exit).
-const TRACE_FLUSH_PASSES: u64 = 1024;
-
-/// Watchdog thread: flips the shared `stalled` flag while the stepper's
-/// heartbeat is stale. The stepper beats on every loop pass (including
-/// idle parking), so staleness always means a wedged or pathologically
-/// slow step — the flag drives `/healthz` 503-degraded.
-fn watchdog_loop(shared: Arc<GatewayShared>, stop: Arc<AtomicBool>, stall: Duration) {
-    let stall_ms = stall.as_millis().max(1) as u64;
-    let poll = (stall / 4).clamp(Duration::from_millis(5), Duration::from_millis(250));
-    while !stop.load(Ordering::SeqCst) {
-        thread::sleep(poll);
-        if shared.heartbeat_age_ms() > stall_ms {
-            if !shared.stalled.swap(true, Ordering::SeqCst) {
-                shared.watchdog_stalls.fetch_add(1, Ordering::SeqCst);
-                log::warn!(
-                    "watchdog: no stepper pass in {}ms (bound {}ms); /healthz degraded",
-                    shared.heartbeat_age_ms(),
-                    stall_ms
-                );
-            }
-        } else if shared.stalled.swap(false, Ordering::SeqCst) {
-            log::info!("watchdog: stepper recovered; /healthz healthy");
-        }
-    }
-}
-
-fn stepper_loop<R: ModelRunner>(
-    mut engine: Engine<R>,
-    cmd_rx: mpsc::Receiver<EngineCmd>,
-    cfg: GatewayConfig,
-    shared: Arc<GatewayShared>,
-) {
-    let mut streams: BTreeMap<u64, StreamState> = BTreeMap::new();
-    let mut draining = false;
-    let mut step_retries = 0usize;
-    // `/debug/steps` ring + the ordinal of the last step pushed into it
-    // (the step-duration histogram count doubles as a step sequence
-    // number, so failed/retried passes never duplicate stale records).
-    let mut step_ring: VecDeque<StepRecord> = VecDeque::with_capacity(STEP_RING_CAP);
-    let mut steps_seen: u64 = 0;
-    // Accumulated trace events when `--trace-out` is set; the Chrome JSON
-    // file is rewritten periodically so a long-running gateway can be
-    // inspected without a clean shutdown.
-    let mut trace_events: Vec<trace::TraceEvent> = Vec::new();
-    let mut passes: u64 = 0;
-    loop {
-        shared.beat();
-        passes += 1;
-        if cfg.trace_path.is_some() && passes % TRACE_FLUSH_PASSES == 0 {
-            flush_trace(cfg.trace_path.as_deref(), &mut trace_events);
-        }
-        // Pull every pending command; commands are cheap, steps are not.
-        let mut disconnected = false;
-        loop {
-            match cmd_rx.try_recv() {
-                Ok(cmd) => handle_cmd(
-                    cmd,
-                    &mut engine,
-                    &mut streams,
-                    &mut draining,
-                    &cfg,
-                    &shared,
-                    &step_ring,
-                ),
-                Err(mpsc::TryRecvError::Empty) => break,
-                Err(mpsc::TryRecvError::Disconnected) => {
-                    disconnected = true;
-                    break;
-                }
-            }
-        }
-        // Deadlines are enforced on every pass (idle included) so a
-        // request expiring while *queued* times out promptly too.
-        enforce_deadlines(&mut engine, &mut streams, &shared);
-        if engine.is_idle() {
-            if draining || disconnected {
-                break;
-            }
-            // Idle maintenance: keep spending the amortized eviction
-            // allowance while pinned prefixes sit over the retention
-            // budget, so the last request's pins drain between requests.
-            // Supervised like the busy path: an injected panic or error
-            // during maintenance must not kill the stepper either.
-            if engine.needs_maintenance() {
-                let _ = run_step_supervised(
-                    &mut engine,
-                    &mut streams,
-                    &shared,
-                    &cfg,
-                    &mut step_retries,
-                );
-                note_step(&engine, &shared, &mut step_ring, &mut steps_seen);
-            }
-            // Park until work arrives, with a bounded wait so a Drain that
-            // raced past the try_recv loop is still noticed promptly.
-            match cmd_rx.recv_timeout(Duration::from_millis(20)) {
-                Ok(cmd) => handle_cmd(
-                    cmd,
-                    &mut engine,
-                    &mut streams,
-                    &mut draining,
-                    &cfg,
-                    &shared,
-                    &step_ring,
-                ),
-                Err(mpsc::RecvTimeoutError::Timeout) => {}
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-            }
-            continue;
-        }
-        let finished =
-            run_step_supervised(&mut engine, &mut streams, &shared, &cfg, &mut step_retries);
-        note_step(&engine, &shared, &mut step_ring, &mut steps_seen);
-        // Stream freshly decoded tokens. A send error means the handler is
-        // gone without managing to send Cancel (it died); reap eagerly so
-        // the sequence stops burning decode slots.
-        let mut dead: Vec<u64> = Vec::new();
-        let mut inter_token_gaps: Vec<f64> = Vec::new();
-        for (&id, st) in streams.iter_mut() {
-            let Some(completion) = engine.completion_of(id) else { continue };
-            let total = completion.len();
-            while st.sent < total {
-                let token = completion[st.sent];
-                if st.events.send(TokenEvent::Token { index: st.sent, token }).is_err() {
-                    dead.push(id);
-                    break;
-                }
-                st.sent += 1;
-                let now = Instant::now();
-                if let Some(prev) = st.last_token_at.replace(now) {
-                    // Gap since this request's previous token (the first
-                    // token's latency is the TTFT histogram's job).
-                    inter_token_gaps.push(now.duration_since(prev).as_secs_f64());
-                }
-            }
-        }
-        for dt in inter_token_gaps {
-            engine.metrics_mut().record_inter_token(dt);
-        }
-        for id in dead {
-            streams.remove(&id);
-            engine.cancel(id);
-            engine.release(id);
-            if trace::armed() {
-                trace::instant("cancelled", "request", id, vec![("why", "disconnect".into())]);
-            }
-            log::debug!("request {id}: client gone mid-stream; residency released");
-        }
-        for f in finished {
-            let id = f.request.id;
-            let n = engine.completion_of(id).map(|c| c.len()).unwrap_or(0);
-            if let Some(st) = streams.remove(&id) {
-                let _ = st.events.send(TokenEvent::Done { completion_tokens: n });
-            }
-            engine.release(id);
-            if trace::armed() {
-                trace::instant(
-                    "finished",
-                    "request",
-                    id,
-                    vec![("completion_tokens", n.to_string())],
-                );
-            }
-            log::debug!("request {id}: finished with {n} completion tokens");
-        }
-        if cfg.decode_interval > Duration::ZERO {
-            thread::sleep(cfg.decode_interval);
-        }
-    }
-    if cfg.trace_path.is_some() {
-        flush_trace(cfg.trace_path.as_deref(), &mut trace_events);
-        log::info!(
-            "wrote {} trace events to {}",
-            trace_events.len(),
-            cfg.trace_path.as_ref().unwrap().display()
-        );
-    }
-    // Terminal-event guarantee on the stepper's own exit path: any stream
-    // still open (e.g. the command channel disconnected mid-flight) gets
-    // an explicit SSE error instead of a silent sender drop.
-    for (_, st) in streams {
-        let _ = st
-            .events
-            .send(TokenEvent::Error { message: "gateway stepper exiting".to_string() });
-    }
-}
-
-/// Record the most recent *completed* step into the `/debug/steps` ring and
-/// (when tracing is armed) emit its Chrome spans. Keyed on the step-duration
-/// histogram count so passes that failed or only pumped commands are skipped.
-fn note_step<R: ModelRunner>(
-    engine: &Engine<R>,
-    shared: &GatewayShared,
-    ring: &mut VecDeque<StepRecord>,
-    steps_seen: &mut u64,
-) {
-    let n = engine.metrics().step_duration_seconds.total();
-    if n == *steps_seen {
-        return;
-    }
-    *steps_seen = n;
-    let timing = engine.last_step_timing();
-    if ring.len() == STEP_RING_CAP {
-        ring.pop_front();
-    }
-    ring.push_back(StepRecord { seq: n, ts_ms: shared.now_ms(), timing });
-    if trace::armed() {
-        emit_step_spans(n, &timing);
-    }
-}
-
-/// Emit one "step" span plus its per-phase child spans on the stepper track
-/// (tid 0). Phases are laid out back-to-back from the step's start; the
-/// kernel's chunk-first/seq-first sub-phases ran inside the decode call, so
-/// the layout is a readable approximation rather than exact wall intervals.
-fn emit_step_spans(seq: u64, t: &StepTiming) {
-    let end_us = trace::now_us();
-    let total_us = (t.total_s * 1e6) as u64;
-    let start = end_us.saturating_sub(total_us);
-    trace::span(
-        "step",
-        "step",
-        0,
-        start,
-        total_us,
-        vec![
-            ("seq", seq.to_string()),
-            ("decode_batch", t.decode_batch.to_string()),
-            ("prefill_slices", t.prefill_slices.to_string()),
-            ("admitted", t.admitted.to_string()),
-            ("finished", t.finished.to_string()),
-        ],
-    );
-    let mut cursor = start;
-    for (name, secs) in t.phases() {
-        let dur = (secs * 1e6) as u64;
-        if dur == 0 {
-            continue;
-        }
-        let cat = if matches!(name, "chunk_first" | "seq_first") { "kernel" } else { "step" };
-        trace::span(name, cat, 0, cursor, dur, Vec::new());
-        cursor = cursor.saturating_add(dur);
-    }
-}
-
-/// Drain buffered span-recorder events into `events` and rewrite the Chrome
-/// trace file. Quiet on success (called periodically); warns on I/O errors.
-fn flush_trace(path: Option<&std::path::Path>, events: &mut Vec<trace::TraceEvent>) {
-    let Some(path) = path else { return };
-    events.extend(trace::drain());
-    if let Err(e) = trace::write_chrome_trace_file(path, events) {
-        log::warn!("failed to write trace file {}: {e}", path.display());
-    }
-}
-
-/// One supervised engine iteration: `Engine::step` under `catch_unwind`,
-/// with the degradation ladder on failure —
-///
-/// 1. transient `Err`: bounded retry with backoff (the restore-queue seam
-///    makes whole-step retry safe for prefill errors);
-/// 2. retries exhausted: fail only the attributed request (`[seq:<id>]` in
-///    the error), or quarantine all in-flight when unattributed;
-/// 3. panic: quarantine the implicated sequences, repair bookkeeping
-///    (`recover_after_panic`), verify tree invariants;
-/// 4. invariants broken: full engine rebuild — drop all residency, fail
-///    every open stream, keep serving.
-fn run_step_supervised<R: ModelRunner>(
-    engine: &mut Engine<R>,
-    streams: &mut BTreeMap<u64, StreamState>,
-    shared: &GatewayShared,
-    cfg: &GatewayConfig,
-    step_retries: &mut usize,
-) -> Vec<FinishedSeq> {
-    let outcome = catch_unwind(AssertUnwindSafe(|| {
-        // Chaos site: panic in the stepper thread itself, outside the
-        // engine — proves supervision covers the whole closure.
-        if let Some(msg) = failpoint::fire("gateway.stepper") {
-            return Err(anyhow::anyhow!(msg));
-        }
-        engine.step()
-    }));
-    match outcome {
-        Ok(Ok(finished)) => {
-            *step_retries = 0;
-            finished
-        }
-        Ok(Err(e)) => {
-            let msg = e.to_string();
-            if *step_retries < cfg.step_retry_max {
-                *step_retries += 1;
-                shared.step_retries.fetch_add(1, Ordering::SeqCst);
-                if trace::armed() {
-                    trace::instant(
-                        "step_retry",
-                        "fault",
-                        0,
-                        vec![("attempt", step_retries.to_string()), ("error", msg.clone())],
-                    );
-                }
-                log::warn!(
-                    "engine step failed (retry {}/{}): {msg}",
-                    *step_retries,
-                    cfg.step_retry_max
-                );
-                thread::sleep(cfg.step_retry_backoff * *step_retries as u32);
-            } else {
-                *step_retries = 0;
-                if trace::armed() {
-                    trace::instant("step_failed", "fault", 0, vec![("error", msg.clone())]);
-                }
-                log::error!("engine step failed after retries, quarantining: {msg}");
-                let victims = match failpoint::seq_attribution(&msg) {
-                    Some(id) => vec![id],
-                    None => engine.inflight_ids(),
-                };
-                fail_requests(engine, streams, shared, &victims, FailReason::Error, &msg);
-                verify_or_rebuild(engine, streams, shared);
-            }
-            Vec::new()
-        }
-        Err(payload) => {
-            *step_retries = 0;
-            shared.engine_panics.fetch_add(1, Ordering::SeqCst);
-            let msg = panic_message(payload.as_ref());
-            if trace::armed() {
-                trace::instant("step_panic", "fault", 0, vec![("message", msg.clone())]);
-            }
-            log::error!("engine step panicked ({msg}); recovering");
-            let (orphans, finished) = engine.recover_after_panic();
-            let mut victims = orphans;
-            match failpoint::seq_attribution(&msg) {
-                Some(id) => {
-                    if !victims.contains(&id) {
-                        victims.push(id);
-                    }
-                }
-                None => {
-                    // Unattributed panic: quarantine conservatively —
-                    // every in-flight sequence may have been implicated.
-                    for id in engine.inflight_ids() {
-                        if !victims.contains(&id) {
-                            victims.push(id);
-                        }
-                    }
-                }
-            }
-            fail_requests(engine, streams, shared, &victims, FailReason::Panic, &msg);
-            verify_or_rebuild(engine, streams, shared);
-            finished
-        }
-    }
-}
-
-/// Extract a readable message from a panic payload.
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
-    if let Some(s) = payload.downcast_ref::<String>() {
-        s.clone()
-    } else if let Some(s) = payload.downcast_ref::<&str>() {
-        (*s).to_string()
-    } else {
-        "non-string panic payload".to_string()
-    }
-}
-
-/// Quarantine `victims`: release their engine residency and send each open
-/// stream a terminal SSE error.
-fn fail_requests<R: ModelRunner>(
-    engine: &mut Engine<R>,
-    streams: &mut BTreeMap<u64, StreamState>,
-    shared: &GatewayShared,
-    victims: &[u64],
-    reason: FailReason,
-    msg: &str,
-) {
-    for &id in victims {
-        let cancelled = engine.cancel(id);
-        let released = engine.release(id).is_some();
-        let had_stream = match streams.remove(&id) {
-            Some(st) => {
-                let _ = st.events.send(TokenEvent::Error { message: msg.to_string() });
-                true
-            }
-            None => false,
-        };
-        if cancelled || released || had_stream {
-            shared.count_failure(reason);
-        }
-    }
-}
-
-/// Escalation: if the tree's invariants are broken after recovery, rebuild
-/// the engine's residency from scratch (dropping every in-flight request)
-/// and keep serving. The process never exits.
-fn verify_or_rebuild<R: ModelRunner>(
-    engine: &mut Engine<R>,
-    streams: &mut BTreeMap<u64, StreamState>,
-    shared: &GatewayShared,
-) {
-    if let Err(e) = engine.tree().check_invariants() {
-        log::error!("prefix-tree invariants broken after recovery ({e}); full engine rebuild");
-        shared.engine_rebuilds.fetch_add(1, Ordering::SeqCst);
-        let dropped = engine.hard_reset();
-        for _ in &dropped {
-            shared.count_failure(FailReason::Rebuild);
-        }
-        for (_, st) in std::mem::take(streams) {
-            let _ = st.events.send(TokenEvent::Error {
-                message: "engine rebuilt after broken invariants; request dropped".to_string(),
-            });
-        }
-    }
-}
-
-/// Fail every stream whose deadline has passed: release engine residency
-/// (private chunks return to the pool) and send the terminal timeout event.
-fn enforce_deadlines<R: ModelRunner>(
-    engine: &mut Engine<R>,
-    streams: &mut BTreeMap<u64, StreamState>,
-    shared: &GatewayShared,
-) {
-    let now = Instant::now();
-    let expired: Vec<u64> = streams
-        .iter()
-        .filter(|(_, st)| st.deadline.is_some_and(|d| now >= d))
-        .map(|(&id, _)| id)
-        .collect();
-    for id in expired {
-        engine.cancel(id);
-        engine.release(id);
-        if let Some(st) = streams.remove(&id) {
-            let _ = st.events.send(TokenEvent::Timeout);
-        }
-        shared.requests_timed_out.fetch_add(1, Ordering::SeqCst);
-        log::debug!("request {id} exceeded its deadline; residency released");
-    }
-}
-
-fn handle_cmd<R: ModelRunner>(
-    cmd: EngineCmd,
-    engine: &mut Engine<R>,
-    streams: &mut BTreeMap<u64, StreamState>,
-    draining: &mut bool,
-    cfg: &GatewayConfig,
-    shared: &GatewayShared,
-    step_ring: &VecDeque<StepRecord>,
-) {
-    match cmd {
-        EngineCmd::Submit { mut request, events, deadline } => {
-            if *draining {
-                let queued = engine.scheduler().queued();
-                let _ = events.send(TokenEvent::Rejected { queued, draining: true });
-                return;
-            }
-            request.arrival_s = engine.clock();
-            let id = request.id;
-            let prompt_tokens = request.prompt.len();
-            if engine.try_submit(request) {
-                streams.insert(id, StreamState { events, sent: 0, deadline, last_token_at: None });
-                if trace::armed() {
-                    trace::instant(
-                        "queued",
-                        "request",
-                        id,
-                        vec![("prompt_tokens", prompt_tokens.to_string())],
-                    );
-                }
-                log::debug!("request {id}: queued ({prompt_tokens} prompt tokens)");
-            } else {
-                let queued = engine.scheduler().queued();
-                let _ = events.send(TokenEvent::Rejected { queued, draining: false });
-                log::debug!("request {id}: rejected, admission queue full ({queued} queued)");
-            }
-        }
-        EngineCmd::Cancel { id } => {
-            streams.remove(&id);
-            engine.cancel(id);
-            engine.release(id);
-            if trace::armed() {
-                trace::instant("cancelled", "request", id, vec![("why", "client".into())]);
-            }
-            log::debug!("request {id}: cancelled by client; residency released");
-        }
-        EngineCmd::Scrape { reply } => {
-            let _ = reply.send(render_metrics(engine, streams.len(), &cfg.metrics_prefix, shared));
-        }
-        EngineCmd::DebugSteps { reply } => {
-            let _ = reply.send(debug_steps_json(step_ring).pretty());
-        }
-        EngineCmd::DebugTree { reply } => {
-            let _ = reply.send(debug_tree_json(engine).pretty());
-        }
-        EngineCmd::Drain => *draining = true,
-    }
-}
-
-/// `/debug/steps` body: the ring of recent engine steps, newest last, with
-/// per-phase wall times in seconds.
-fn debug_steps_json(ring: &VecDeque<StepRecord>) -> Json {
-    let steps: Vec<Json> = ring
-        .iter()
-        .map(|r| {
-            let mut s = Json::obj();
-            s.set("seq", r.seq).set("ts_ms", r.ts_ms).set("total_s", r.timing.total_s);
-            let mut phases = Json::obj();
-            for (name, secs) in r.timing.phases() {
-                phases.set(name, secs);
-            }
-            s.set("phases", phases)
-                .set("decode_batch", r.timing.decode_batch)
-                .set("prefill_slices", r.timing.prefill_slices)
-                .set("admitted", r.timing.admitted)
-                .set("finished", r.timing.finished);
-            s
-        })
-        .collect();
-    let mut j = Json::obj();
-    j.set("count", steps.len()).set("capacity", STEP_RING_CAP).set("steps", steps);
-    j
-}
-
-/// `/debug/tree` body: a residency snapshot of the prefix tree — sharing
-/// ratios, shared-vs-private split of the live decode context, context-cache
-/// hit rate, pool occupancy, and per-pin retention residency.
-fn debug_tree_json<R: ModelRunner>(engine: &Engine<R>) -> Json {
-    let tree = engine.tree();
-    let stats = tree.sharing_stats();
-    let (rebuilds, hits) = tree.context_stats();
-    let pool = tree.pool();
-    let chunk_size = tree.shape().chunk_size.max(1);
-
-    let mut j = Json::obj();
-    j.set("sequences", tree.num_sequences())
-        .set("epoch", tree.epoch())
-        .set("generation", tree.generation());
-
-    let mut tokens = Json::obj();
-    tokens
-        .set("logical", stats.logical_tokens)
-        .set("physical", stats.physical_tokens)
-        .set("sharing_ratio", stats.sharing_ratio());
-    j.set("tokens", tokens);
-
-    let mut chunks = Json::obj();
-    chunks
-        .set("nodes", stats.chunks)
-        .set("in_use", pool.in_use())
-        .set("allocated", pool.allocated())
-        .set("in_use_bytes", pool.in_use_bytes())
-        .set("resident_bytes", pool.resident_bytes());
-    j.set("chunks", chunks);
-
-    // Deepest sequence in chunk hops — how long the phase-1 chunk-first
-    // walk is for the worst-case sequence.
-    let max_depth = tree
-        .sequence_ids()
-        .into_iter()
-        .filter_map(|s| tree.sequence_len(s))
-        .map(|len| len.div_ceil(chunk_size))
-        .max()
-        .unwrap_or(0);
-    j.set("max_chunk_depth", max_depth);
-
-    // Shared vs private split of the *current decode context*: a chunk is
-    // shared when its row interval covers more than one sequence (phase-1
-    // chunk-first work), private otherwise (phase-2 seq-first work).
-    let ctx = tree.context_fresh();
-    let mut shared_chunks = 0usize;
-    let mut private_chunks = 0usize;
-    let mut shared_tokens = 0usize;
-    let mut private_tokens = 0usize;
-    for e in ctx.shared() {
-        shared_chunks += 1;
-        shared_tokens += pool.get(e.chunk).len();
-    }
-    for e in ctx.private() {
-        private_chunks += 1;
-        private_tokens += pool.get(e.chunk).len();
-    }
-    let mut context = Json::obj();
-    context
-        .set("shared_chunks", shared_chunks)
-        .set("private_chunks", private_chunks)
-        .set("shared_tokens", shared_tokens)
-        .set("private_tokens", private_tokens)
-        .set("cache_rebuilds", rebuilds)
-        .set("cache_hits", hits)
-        .set("cache_hit_rate", if rebuilds + hits > 0 {
-            hits as f64 / (rebuilds + hits) as f64
-        } else {
-            0.0
-        });
-    j.set("context", context);
-
-    let mut retain = Json::obj();
-    match engine.retainer() {
-        Some(r) => {
-            retain
-                .set("enabled", true)
-                .set("budget_chunks", r.budget_chunks())
-                .set("pinned_count", r.pinned_count())
-                .set("pinned_tokens", r.pinned_tokens())
-                .set("evicted_pins_total", r.evicted_pins_total())
-                .set("evicted_chunks_total", r.evicted_chunks_total());
-            let pins: Vec<Json> = r
-                .pin_residency()
-                .into_iter()
-                .map(|(prefix_tokens, tokens, lru_age)| {
-                    let mut p = Json::obj();
-                    p.set("prefix_tokens", prefix_tokens)
-                        .set("tokens", tokens)
-                        .set("lru_age", lru_age);
-                    p
-                })
-                .collect();
-            retain.set("pins", pins);
-        }
-        None => {
-            retain.set("enabled", false);
-        }
-    }
-    j.set("retain", retain);
-    j
-}
-
-/// The `/metrics` document: the engine's request/step series plus gateway
-/// liveness gauges (queue depth, admission rejections, chunk occupancy)
-/// and the supervisor's failure-domain counters.
-fn render_metrics<R: ModelRunner>(
-    engine: &Engine<R>,
-    live_streams: usize,
-    prefix: &str,
-    shared: &GatewayShared,
-) -> String {
-    let mut out = render_exposition(engine.metrics(), prefix);
-    // True Prometheus histograms (cumulative `le` buckets + _sum/_count):
-    // request latency distributions and per-phase step timing, so p50/p99
-    // are computable server-side instead of from client-side sampling.
-    let m = engine.metrics();
-    push_histogram(
-        &mut out,
-        prefix,
-        "ttft_seconds",
-        "time to first token (seconds), per finished request",
-        &m.ttft_seconds,
-    );
-    push_histogram(
-        &mut out,
-        prefix,
-        "inter_token_seconds",
-        "gap between consecutive streamed tokens of one request (seconds)",
-        &m.inter_token_seconds,
-    );
-    push_histogram(
-        &mut out,
-        prefix,
-        "step_duration_seconds",
-        "wall time of one engine step (seconds)",
-        &m.step_duration_seconds,
-    );
-    let phase_children: Vec<(Vec<(&str, String)>, &crate::util::stats::LogHistogram)> = m
-        .step_phases()
-        .map(|(phase, h)| (vec![("phase", phase.to_string())], h))
-        .collect();
-    push_histogram_family(
-        &mut out,
-        prefix,
-        "step_phase_seconds",
-        "wall time per engine-step phase (seconds); chunk_first/seq_first are the kernel's two partition phases",
-        &phase_children,
-    );
-    // Failure-domain observability: panic/rebuild/timeout/stall counters
-    // plus a live invariant probe, so chaos tests (and dashboards) can
-    // verify recovery from the outside.
-    push_gauge(
-        &mut out,
-        prefix,
-        "engine_panics_total",
-        "engine steps that panicked and were recovered by the supervisor",
-        shared.engine_panics.load(Ordering::SeqCst) as f64,
-    );
-    push_gauge(
-        &mut out,
-        prefix,
-        "engine_rebuilds_total",
-        "full engine rebuilds after broken tree invariants",
-        shared.engine_rebuilds.load(Ordering::SeqCst) as f64,
-    );
-    push_gauge(
-        &mut out,
-        prefix,
-        "requests_timed_out_total",
-        "requests terminated by their deadline_ms",
-        shared.requests_timed_out.load(Ordering::SeqCst) as f64,
-    );
-    push_gauge(
-        &mut out,
-        prefix,
-        "watchdog_stalls_total",
-        "stepper stalls detected by the watchdog",
-        shared.watchdog_stalls.load(Ordering::SeqCst) as f64,
-    );
-    push_gauge(
-        &mut out,
-        prefix,
-        "step_retries_total",
-        "engine step retries after transient errors",
-        shared.step_retries.load(Ordering::SeqCst) as f64,
-    );
-    let failed_rows: Vec<(Vec<(&str, String)>, f64)> = [
-        ("panic", shared.failed_panic.load(Ordering::SeqCst)),
-        ("error", shared.failed_error.load(Ordering::SeqCst)),
-        ("rebuild", shared.failed_rebuild.load(Ordering::SeqCst)),
-    ]
-    .iter()
-    .map(|(reason, n)| (vec![("reason", reason.to_string())], *n as f64))
-    .collect();
-    push_labeled_series(
-        &mut out,
-        prefix,
-        "requests_failed_total",
-        "requests terminated by the supervisor, by reason",
-        &failed_rows,
-    );
-    push_gauge(
-        &mut out,
-        prefix,
-        "tree_invariants_ok",
-        "1 while PrefixTree::check_invariants passes (0 = structural damage)",
-        if engine.tree().check_invariants().is_ok() { 1.0 } else { 0.0 },
-    );
-    let sched = engine.scheduler();
-    push_gauge(&mut out, prefix, "queue_depth", "requests waiting for admission", sched.queued() as f64);
-    push_gauge(
-        &mut out,
-        prefix,
-        "active_sequences",
-        "sequences in the decode batch",
-        sched.batch_size() as f64,
-    );
-    push_gauge(
-        &mut out,
-        prefix,
-        "admission_rejections_total",
-        "requests rejected by admission control (HTTP 429)",
-        sched.admission_rejections() as f64,
-    );
-    push_gauge(&mut out, prefix, "live_streams", "connected SSE token streams", live_streams as f64);
-    // Chunked-prefill liveness: queue depth, slice throughput, and the
-    // configured per-step budget, so a dashboard can see interleaving
-    // (prefill_chunks_total advancing while decode_steps_total advances)
-    // and spot a starved prefill queue.
-    let stats = engine.stats();
-    push_gauge(
-        &mut out,
-        prefix,
-        "prefill_queue_depth",
-        "admitted requests whose prompts are still prefilling",
-        sched.prefill_depth() as f64,
-    );
-    push_gauge(
-        &mut out,
-        prefix,
-        "prefill_chunks_total",
-        "prefill slices executed (one per prompt when monolithic)",
-        stats.prefill_chunks_total as f64,
-    );
-    push_gauge(
-        &mut out,
-        prefix,
-        "prefill_deferrals_total",
-        "requests whose first slice deferred to an in-progress prefix-sharing leader",
-        stats.prefill_deferrals as f64,
-    );
-    push_gauge(
-        &mut out,
-        prefix,
-        "decode_steps_total",
-        "batched decode steps executed",
-        stats.decode_steps as f64,
-    );
-    push_gauge(
-        &mut out,
-        prefix,
-        "step_token_budget",
-        "configured per-step token budget (0 = unbounded)",
-        sched.step_token_budget().unwrap_or(0) as f64,
-    );
-    push_gauge(
-        &mut out,
-        prefix,
-        "prefill_chunk_tokens",
-        "configured prefill slice granularity in tokens (0 = monolithic)",
-        if sched.prefill_chunk_tokens() == usize::MAX {
-            0.0
-        } else {
-            sched.prefill_chunk_tokens() as f64
-        },
-    );
-    push_gauge(
-        &mut out,
-        prefix,
-        "chunks_in_use",
-        "KV chunks currently referenced by live sequences or pins",
-        engine.tree().pool().in_use() as f64,
-    );
-    push_gauge(
-        &mut out,
-        prefix,
-        "chunks_allocated",
-        "KV chunks ever allocated by the pool",
-        engine.tree().pool().allocated() as f64,
-    );
-    // Byte-level KV accounting at the *actual* storage dtype (f16 halves
-    // these relative to f32), plus the dtype itself as an info gauge so
-    // dashboards can group byte series by format.
-    let pool = engine.tree().pool();
-    push_gauge(
-        &mut out,
-        prefix,
-        "kv_bytes_in_use",
-        "KV bytes referenced by live sequences or pins, at the storage dtype",
-        pool.in_use_bytes() as f64,
-    );
-    push_gauge(
-        &mut out,
-        prefix,
-        "kv_bytes_resident",
-        "KV bytes ever allocated by the pool, at the storage dtype",
-        pool.resident_bytes() as f64,
-    );
-    push_labeled_gauge(
-        &mut out,
-        prefix,
-        "kv_dtype_info",
-        "active KV storage dtype (value is always 1)",
-        &[("dtype", engine.tree().shape().dtype.label())],
-        1.0,
-    );
-    // Kernel-path observability: which SIMD ISA the attention kernels
-    // dispatch to and how the thread pool is placed — bench runs grab
-    // these so recorded numbers say what they measured.
-    push_labeled_gauge(
-        &mut out,
-        prefix,
-        "simd_isa_info",
-        "active attention-kernel SIMD ISA path (value is always 1)",
-        &[("isa", crate::util::simd::active().label())],
-        1.0,
-    );
-    let placement = crate::util::threadpool::placement();
-    push_labeled_gauge(
-        &mut out,
-        prefix,
-        "pool_affinity_info",
-        "thread-pool core-affinity policy (value is always 1)",
-        &[("mode", crate::util::threadpool::affinity_mode())],
-        1.0,
-    );
-    push_gauge(
-        &mut out,
-        prefix,
-        "pool_workers",
-        "live thread-pool workers across the process",
-        placement.workers as f64,
-    );
-    push_gauge(
-        &mut out,
-        prefix,
-        "pool_workers_pinned",
-        "live thread-pool workers successfully pinned to a core",
-        placement.pinned as f64,
-    );
-    // Scheduling-policy observability: the active policy as an info
-    // gauge, bounded-cardinality per-tenant fairness counters, and the
-    // amortized pin-eviction spend.
-    let planner = engine.planner();
-    push_labeled_gauge(
-        &mut out,
-        prefix,
-        "sched_policy_info",
-        "active admission-scheduling policy (value is always 1)",
-        &[("policy", planner.policy_kind().label())],
-        1.0,
-    );
-    let (tenants, overflow) = planner.tenant_counters();
-    let tenant_rows = |pick: fn(&crate::coordinator::TenantCounters) -> u64| {
-        let mut rows: Vec<(Vec<(&str, String)>, f64)> = tenants
-            .iter()
-            .map(|(t, c)| (vec![("tenant", t.to_string())], pick(c) as f64))
-            .collect();
-        let o = pick(overflow);
-        if o > 0 {
-            rows.push((vec![("tenant", "other".to_string())], o as f64));
-        }
-        rows
-    };
-    push_labeled_series(
-        &mut out,
-        prefix,
-        "tenant_admitted_total",
-        "requests admitted into the prefill queue, per tenant (bounded cardinality)",
-        &tenant_rows(|c| c.admitted),
-    );
-    push_labeled_series(
-        &mut out,
-        prefix,
-        "tenant_deferred_total",
-        "steps a tenant's queued request was passed over by a later arrival, per tenant",
-        &tenant_rows(|c| c.deferred),
-    );
-    push_labeled_series(
-        &mut out,
-        prefix,
-        "tenant_decode_tokens_total",
-        "decode tokens produced per tenant (bounded cardinality)",
-        &tenant_rows(|c| c.decode_tokens),
-    );
-    push_gauge(
-        &mut out,
-        prefix,
-        "decode_lag_max",
-        "highest consecutive decode-steps any sequence sat out under partial decode batches",
-        planner.max_decode_lag() as f64,
-    );
-    if let Some(retainer) = engine.retainer() {
-        push_gauge(
-            &mut out,
-            prefix,
-            "eviction_tokens_total",
-            "tokens charged for amortized pin eviction",
-            retainer.eviction_tokens_total() as f64,
-        );
-        push_gauge(
-            &mut out,
-            prefix,
-            "evicted_chunks_total",
-            "KV chunks returned to the pool by pin eviction",
-            retainer.evicted_chunks_total() as f64,
-        );
-        push_gauge(
-            &mut out,
-            prefix,
-            "retained_pins",
-            "prefixes currently pinned by the retainer",
-            retainer.pinned_count() as f64,
-        );
-    }
-    out
-}
-
 fn accept_loop(
     listener: TcpListener,
-    cmd_tx: mpsc::Sender<EngineCmd>,
+    router: Arc<Router>,
     stop: Arc<AtomicBool>,
     cfg: GatewayConfig,
     tokenizer: Arc<Tokenizer>,
-    shared: Arc<GatewayShared>,
 ) {
-    // Request ids are gateway-assigned, monotonically increasing, and well
-    // below the retainer's pin range.
+    // Request ids are gateway-assigned (global across shards),
+    // monotonically increasing, and well below the retainer's pin range.
     let next_id = Arc::new(AtomicU64::new(0));
     for stream in listener.incoming() {
         if stop.load(Ordering::SeqCst) {
             break;
         }
         let Ok(stream) = stream else { continue };
-        let tx = cmd_tx.clone();
+        let conn_router = router.clone();
         let ids = next_id.clone();
         let tok = tokenizer.clone();
         let conn_cfg = cfg.clone();
-        let conn_shared = shared.clone();
         let spawned = thread::Builder::new().name("gateway-conn".to_string()).spawn(move || {
-            if let Err(e) = handle_connection(stream, tx, ids, tok, &conn_cfg, &conn_shared) {
+            if let Err(e) = handle_connection(stream, &conn_router, ids, tok, &conn_cfg) {
                 log::debug!("connection handler: {e}");
             }
         });
@@ -1353,48 +263,190 @@ fn err_json(msg: &str) -> Json {
     j
 }
 
-/// Ask the stepper thread for a rendered document (metrics or a debug
-/// snapshot) over a one-shot reply channel and serve it; 503 with
-/// `Retry-After` when the stepper is gone or wedged.
-fn stepper_query(
+/// How long a handler waits for a shard's one-shot reply (metrics or a
+/// debug snapshot) before answering 503.
+const SHARD_REPLY_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Ask every shard for a rendered document over one-shot reply channels.
+/// All requests are sent before any reply is awaited so shards render in
+/// parallel. `None` means some shard is gone or wedged (maps to 503).
+fn all_shards_query(
+    router: &Router,
+    make: impl Fn(mpsc::Sender<String>) -> WorkerMsg,
+) -> Option<Vec<String>> {
+    let mut replies = Vec::with_capacity(router.shard_count());
+    for handle in router.handles() {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        if !handle.send(make(reply_tx)) {
+            return None;
+        }
+        replies.push(reply_rx);
+    }
+    let mut docs = Vec::with_capacity(replies.len());
+    for rx in replies {
+        docs.push(rx.recv_timeout(SHARD_REPLY_TIMEOUT).ok()?);
+    }
+    Some(docs)
+}
+
+/// Serve a per-shard-rendered document: `/metrics` documents are merged by
+/// [`aggregate_expositions`]; debug JSON documents are wrapped in a
+/// `{"shards": [...]}` envelope. One shard passes through untouched.
+fn serve_shard_docs(
     writer: &mut TcpStream,
-    cmd_tx: &mpsc::Sender<EngineCmd>,
+    router: &Router,
     retry_after: &str,
     content_type: &str,
-    make_cmd: impl FnOnce(mpsc::Sender<String>) -> EngineCmd,
+    metrics: bool,
+    make: impl Fn(mpsc::Sender<String>) -> WorkerMsg,
 ) -> std::io::Result<()> {
-    let (reply_tx, reply_rx) = mpsc::channel();
-    if cmd_tx.send(make_cmd(reply_tx)).is_err() {
+    let Some(docs) = all_shards_query(router, make) else {
         return http::write_json_with(
             writer,
             503,
             &[("Retry-After", retry_after)],
-            &err_json("gateway is shutting down"),
+            &err_json("shard unavailable"),
         );
+    };
+    let mut text = if metrics {
+        aggregate_expositions(&docs)
+    } else if docs.len() == 1 {
+        docs.into_iter().next().expect("one doc")
+    } else {
+        let per_shard: Vec<Json> = docs
+            .iter()
+            .enumerate()
+            .map(|(i, doc)| {
+                let mut o = Json::obj();
+                o.set("shard", i);
+                match Json::parse(doc) {
+                    Ok(j) => o.set("state", j),
+                    Err(_) => o.set("raw", doc.as_str()),
+                };
+                o
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("shards", per_shard);
+        j.pretty()
+    };
+    if !text.ends_with('\n') {
+        text.push('\n');
     }
-    match reply_rx.recv_timeout(Duration::from_secs(10)) {
-        Ok(mut text) => {
-            if !text.ends_with('\n') {
-                text.push('\n');
-            }
-            http::write_response(writer, 200, content_type, text.as_bytes())
+    http::write_response(writer, 200, content_type, text.as_bytes())
+}
+
+/// `?shard=N` lookup in a raw query string.
+fn query_param<'a>(query: &'a str, key: &str) -> Option<&'a str> {
+    query.split('&').find_map(|kv| {
+        let (k, v) = kv.split_once('=')?;
+        (k == key).then_some(v)
+    })
+}
+
+/// `/healthz` body. Single shard keeps the historical shape; with N the
+/// gateway is degraded iff any shard is, and a per-shard array names the
+/// culprit.
+fn handle_healthz(writer: &mut TcpStream, router: &Router, retry_after: &str) -> std::io::Result<()> {
+    let handles = router.handles();
+    if handles.len() == 1 {
+        let shared = &handles[0].shared;
+        if shared.stalled.load(Ordering::SeqCst) {
+            // Degraded: the stepper missed its watchdog bound. Detail
+            // helps operators tell a wedged step from a dead process.
+            let mut j = Json::obj();
+            j.set("status", "degraded")
+                .set("reason", "stepper stalled")
+                .set("heartbeat_age_ms", shared.heartbeat_age_ms())
+                .set("engine_panics_total", shared.engine_panics.load(Ordering::SeqCst));
+            return http::write_json_with(writer, 503, &[("Retry-After", retry_after)], &j);
         }
-        Err(_) => http::write_json_with(
-            writer,
-            503,
-            &[("Retry-After", retry_after)],
-            &err_json("stepper unavailable"),
-        ),
+        let mut j = Json::obj();
+        j.set("status", "ok");
+        return http::write_json(writer, 200, &j);
     }
+    let mut any_stalled = false;
+    let per_shard: Vec<Json> = handles
+        .iter()
+        .map(|h| {
+            let stalled = h.shared.stalled.load(Ordering::SeqCst);
+            any_stalled |= stalled;
+            let mut o = Json::obj();
+            o.set("shard", h.id)
+                .set("status", if stalled { "degraded" } else { "ok" })
+                .set("draining", router.is_draining(h.id))
+                .set("heartbeat_age_ms", h.shared.heartbeat_age_ms())
+                .set("engine_panics_total", h.shared.engine_panics.load(Ordering::SeqCst));
+            o
+        })
+        .collect();
+    let mut j = Json::obj();
+    if any_stalled {
+        j.set("status", "degraded").set("reason", "shard stalled").set("shards", per_shard);
+        http::write_json_with(writer, 503, &[("Retry-After", retry_after)], &j)
+    } else {
+        j.set("status", "ok").set("shards", per_shard);
+        http::write_json(writer, 200, &j)
+    }
+}
+
+/// `POST /admin/drain?shard=N` / `POST /admin/join?shard=N`: live ring
+/// membership changes for rolling restarts. Drain stops routing new
+/// admissions to the shard without touching its stepper (in-flight
+/// requests finish and stream to completion); join re-inserts its ring
+/// points, moving back only the key range it originally owned.
+fn handle_admin_membership(
+    writer: &mut TcpStream,
+    router: &Router,
+    query: &str,
+    join: bool,
+) -> std::io::Result<()> {
+    let Some(shard) = query_param(query, "shard").and_then(|s| s.parse::<usize>().ok()) else {
+        return http::write_json(writer, 400, &err_json("missing or invalid ?shard=N"));
+    };
+    let result = if join { router.join(shard) } else { router.drain(shard) };
+    match result {
+        Ok(members) => {
+            let verb = if join { "joined" } else { "draining" };
+            log::info!("admin: shard {shard} {verb}; ring members now {members:?}");
+            let mut j = Json::obj();
+            j.set("shard", shard)
+                .set("state", if join { "active" } else { "draining" })
+                .set("ring_members", members.into_iter().map(Json::from).collect::<Vec<Json>>());
+            http::write_json(writer, 200, &j)
+        }
+        Err(msg) => http::write_json(writer, 404, &err_json(&msg)),
+    }
+}
+
+/// `GET /admin/shards`: the routing table — every shard's draining/stalled
+/// state and current ring membership.
+fn handle_admin_shards(writer: &mut TcpStream, router: &Router) -> std::io::Result<()> {
+    let members = router.members();
+    let per_shard: Vec<Json> = router
+        .handles()
+        .iter()
+        .map(|h| {
+            let mut o = Json::obj();
+            o.set("shard", h.id)
+                .set("draining", router.is_draining(h.id))
+                .set("stalled", h.shared.stalled.load(Ordering::SeqCst))
+                .set("in_ring", members.contains(&h.id));
+            o
+        })
+        .collect();
+    let mut j = Json::obj();
+    j.set("shards", per_shard)
+        .set("ring_members", members.into_iter().map(Json::from).collect::<Vec<Json>>());
+    http::write_json(writer, 200, &j)
 }
 
 fn handle_connection(
     stream: TcpStream,
-    cmd_tx: mpsc::Sender<EngineCmd>,
+    router: &Router,
     ids: Arc<AtomicU64>,
     tokenizer: Arc<Tokenizer>,
     cfg: &GatewayConfig,
-    shared: &GatewayShared,
 ) -> std::io::Result<()> {
     stream.set_read_timeout(Some(cfg.io_timeout))?;
     stream.set_write_timeout(Some(cfg.io_timeout))?;
@@ -1405,50 +457,41 @@ fn handle_connection(
         return Ok(());
     };
     let retry_after = cfg.retry_after_secs.to_string();
-    match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => {
-            if shared.stalled.load(Ordering::SeqCst) {
-                // Degraded: the stepper missed its watchdog bound. Detail
-                // helps operators tell a wedged step from a dead process.
-                let mut j = Json::obj();
-                j.set("status", "degraded")
-                    .set("reason", "stepper stalled")
-                    .set("heartbeat_age_ms", shared.heartbeat_age_ms())
-                    .set("engine_panics_total", shared.engine_panics.load(Ordering::SeqCst));
-                return http::write_json_with(
-                    &mut writer,
-                    503,
-                    &[("Retry-After", &retry_after)],
-                    &j,
-                );
-            }
-            let mut j = Json::obj();
-            j.set("status", "ok");
-            http::write_json(&mut writer, 200, &j)
-        }
-        ("GET", "/metrics") => stepper_query(
+    let (path, query) = match req.path.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (req.path.as_str(), ""),
+    };
+    match (req.method.as_str(), path) {
+        ("GET", "/healthz") => handle_healthz(&mut writer, router, &retry_after),
+        ("GET", "/metrics") => serve_shard_docs(
             &mut writer,
-            &cmd_tx,
+            router,
             &retry_after,
             // The exposition content type scrapers expect (format 0.0.4).
             "text/plain; version=0.0.4; charset=utf-8",
-            |reply| EngineCmd::Scrape { reply },
+            true,
+            |reply| WorkerMsg::Scrape { reply },
         ),
-        ("GET", "/debug/steps") => stepper_query(
+        ("GET", "/debug/steps") => serve_shard_docs(
             &mut writer,
-            &cmd_tx,
+            router,
             &retry_after,
             "application/json",
-            |reply| EngineCmd::DebugSteps { reply },
+            false,
+            |reply| WorkerMsg::DebugSteps { reply },
         ),
-        ("GET", "/debug/tree") => stepper_query(
+        ("GET", "/debug/tree") => serve_shard_docs(
             &mut writer,
-            &cmd_tx,
+            router,
             &retry_after,
             "application/json",
-            |reply| EngineCmd::DebugTree { reply },
+            false,
+            |reply| WorkerMsg::DebugTree { reply },
         ),
-        ("POST", "/v1/generate") => handle_generate(&req, writer, cmd_tx, ids, &tokenizer, cfg),
+        ("GET", "/admin/shards") => handle_admin_shards(&mut writer, router),
+        ("POST", "/admin/drain") => handle_admin_membership(&mut writer, router, query, false),
+        ("POST", "/admin/join") => handle_admin_membership(&mut writer, router, query, true),
+        ("POST", "/v1/generate") => handle_generate(&req, writer, router, ids, &tokenizer, cfg),
         ("GET" | "POST", _) => http::write_json(&mut writer, 404, &err_json("not found")),
         _ => http::write_json(&mut writer, 405, &err_json("method not allowed")),
     }
@@ -1507,6 +550,18 @@ fn parse_generate(
     })
 }
 
+/// A client-supplied `X-Request-Id`, sanitized for log/header echo:
+/// printable ASCII only, bounded length. Empty after sanitizing = absent.
+fn request_id(req: &http::HttpRequest) -> Option<String> {
+    let rid: String =
+        req.header("x-request-id")?.chars().filter(|c| c.is_ascii_graphic()).take(128).collect();
+    if rid.is_empty() {
+        None
+    } else {
+        Some(rid)
+    }
+}
+
 /// Non-blocking liveness probe for a connection we are only writing to:
 /// after the request is consumed a well-behaved client sends nothing, so a
 /// successful 0-byte peek (orderly FIN) or a hard error means it is gone;
@@ -1529,22 +584,53 @@ fn client_gone(stream: &TcpStream) -> bool {
 fn handle_generate(
     req: &http::HttpRequest,
     mut writer: TcpStream,
-    cmd_tx: mpsc::Sender<EngineCmd>,
+    router: &Router,
     ids: Arc<AtomicU64>,
     tokenizer: &Tokenizer,
     cfg: &GatewayConfig,
 ) -> std::io::Result<()> {
+    let rid = request_id(req);
+    // Echoed on every response to this request, streaming or not, so the
+    // client can correlate its logs with the gateway's and the shard's.
+    let mut echo: Vec<(&str, &str)> = Vec::new();
+    if let Some(r) = rid.as_deref() {
+        echo.push(("X-Request-Id", r));
+    }
     let params = match parse_generate(req, tokenizer, cfg) {
         Ok(p) => p,
-        Err(msg) => return http::write_json(&mut writer, 400, &err_json(&msg)),
+        Err(msg) => return http::write_json_with(&mut writer, 400, &echo, &err_json(&msg)),
     };
+    let retry_after = cfg.retry_after_secs.to_string();
+    let mut echo_retry: Vec<(&str, &str)> = vec![("Retry-After", &retry_after)];
+    echo_retry.extend(echo.iter().copied());
+    // Prefix-affinity routing: hash the longest chunk-aligned prefix so
+    // requests sharing a system prompt land on the shard already holding
+    // its chunks; prefix-less traffic spreads by full-prompt hash.
+    let key = routing_key(&params.tokens, params.shared_tokens, router.chunk_size());
+    let Some(handle) = router.route(key) else {
+        return http::write_json_with(
+            &mut writer,
+            503,
+            &echo_retry,
+            &err_json("all shards draining"),
+        );
+    };
+    let shard = handle.id;
     let id = ids.fetch_add(1, Ordering::SeqCst);
-    log::debug!(
-        "request {id}: POST /v1/generate ({} prompt tokens, tenant {}, max_new {})",
-        params.tokens.len(),
-        params.tenant,
-        params.max_new_tokens
-    );
+    match rid.as_deref() {
+        Some(r) => log::debug!(
+            "request {id} rid={r}: POST /v1/generate -> shard {shard} ({} prompt tokens, tenant {}, max_new {})",
+            params.tokens.len(),
+            params.tenant,
+            params.max_new_tokens
+        ),
+        None => log::debug!(
+            "request {id}: POST /v1/generate -> shard {shard} ({} prompt tokens, tenant {}, max_new {})",
+            params.tokens.len(),
+            params.tenant,
+            params.max_new_tokens
+        ),
+    }
     let request = Request {
         id,
         arrival_s: 0.0, // stamped with the engine clock at submit
@@ -1554,13 +640,12 @@ fn handle_generate(
         max_new_tokens: params.max_new_tokens,
     };
     let deadline = params.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
-    let retry_after = cfg.retry_after_secs.to_string();
     let (ev_tx, ev_rx) = mpsc::channel();
-    if cmd_tx.send(EngineCmd::Submit { request, events: ev_tx, deadline }).is_err() {
+    if !handle.send(WorkerMsg::Submit { request, events: ev_tx, deadline, rid: rid.clone() }) {
         return http::write_json_with(
             &mut writer,
             503,
-            &[("Retry-After", &retry_after)],
+            &echo_retry,
             &err_json("gateway is shutting down"),
         );
     }
@@ -1574,11 +659,11 @@ fn handle_generate(
         match ev_rx.recv_timeout(Duration::from_millis(250)) {
             Ok(ev) => break ev,
             Err(mpsc::RecvTimeoutError::Disconnected) => {
-                return http::write_json(&mut writer, 500, &err_json("engine unavailable"));
+                return http::write_json_with(&mut writer, 500, &echo, &err_json("engine unavailable"));
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 if client_gone(&writer) {
-                    let _ = cmd_tx.send(EngineCmd::Cancel { id });
+                    let _ = handle.send(WorkerMsg::Cancel { id });
                     return Ok(());
                 }
             }
@@ -1590,25 +675,28 @@ fn handle_generate(
                 return http::write_json_with(
                     &mut writer,
                     503,
-                    &[("Retry-After", &retry_after)],
+                    &echo_retry,
                     &err_json("gateway is shutting down"),
                 );
             }
+            // The shard id in the body tells a client (or bench) *which*
+            // admission queue is full — under prefix routing a hot prefix
+            // saturates its shard while others sit idle.
             let mut j = err_json("admission queue full");
-            j.set("queued", *queued);
-            return http::write_json_with(&mut writer, 429, &[("Retry-After", &retry_after)], &j);
+            j.set("queued", *queued).set("shard", shard);
+            return http::write_json_with(&mut writer, 429, &echo_retry, &j);
         }
         // Failures before any token: a plain HTTP error beats an SSE
         // stream whose first event is terminal.
         TokenEvent::Error { message } => {
-            return http::write_json(&mut writer, 500, &err_json(message));
+            return http::write_json_with(&mut writer, 500, &echo, &err_json(message));
         }
         TokenEvent::Timeout => {
-            return http::write_json(&mut writer, 504, &err_json("deadline exceeded"));
+            return http::write_json_with(&mut writer, 504, &echo, &err_json("deadline exceeded"));
         }
         TokenEvent::Token { .. } | TokenEvent::Done { .. } => {}
     }
-    http::start_sse(&mut writer)?;
+    http::start_sse_with(&mut writer, &echo)?;
     let mut pending = Some(first);
     loop {
         let event = match pending.take() {
@@ -1633,7 +721,7 @@ fn handle_generate(
                 if http::write_sse_event(&mut writer, &j.to_string()).is_err() {
                     // Client disconnected: cancel so the sequence's private
                     // chunks return to the tree pool mid-decode.
-                    let _ = cmd_tx.send(EngineCmd::Cancel { id });
+                    let _ = handle.send(WorkerMsg::Cancel { id });
                     return Ok(());
                 }
             }

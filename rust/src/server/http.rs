@@ -106,6 +106,29 @@ pub fn write_response<W: Write>(
     write_response_with(w, status, content_type, &[], body)
 }
 
+/// Write a response head: status line, `Content-Type`, optional
+/// `Content-Length` (omitted for SSE, whose `Connection: close` delimits
+/// the stream), `Connection: close`, any extra headers, and the blank
+/// line. Every response — fixed-length or streaming, server or shard
+/// path — goes through here so the wire format cannot drift.
+pub fn write_head<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    content_length: Option<usize>,
+    extra_headers: &[(&str, &str)],
+) -> std::io::Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\nContent-Type: {}\r\n", status, reason(status), content_type)?;
+    if let Some(len) = content_length {
+        write!(w, "Content-Length: {len}\r\n")?;
+    }
+    write!(w, "Connection: close\r\n")?;
+    for (name, value) in extra_headers {
+        write!(w, "{name}: {value}\r\n")?;
+    }
+    write!(w, "\r\n")
+}
+
 /// Like [`write_response`], with extra headers (name, value) — the gateway
 /// uses this for `Retry-After` on backpressure and degraded-health replies.
 pub fn write_response_with<W: Write>(
@@ -115,18 +138,7 @@ pub fn write_response_with<W: Write>(
     extra_headers: &[(&str, &str)],
     body: &[u8],
 ) -> std::io::Result<()> {
-    write!(
-        w,
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n",
-        status,
-        reason(status),
-        content_type,
-        body.len()
-    )?;
-    for (name, value) in extra_headers {
-        write!(w, "{name}: {value}\r\n")?;
-    }
-    write!(w, "\r\n")?;
+    write_head(w, status, content_type, Some(body.len()), extra_headers)?;
     w.write_all(body)?;
     w.flush()
 }
@@ -153,11 +165,15 @@ pub fn write_json_with<W: Write>(
 /// Start a Server-Sent-Events response: headers only, no Content-Length —
 /// the `Connection: close` frame delimits the stream.
 pub fn start_sse<W: Write>(w: &mut W) -> std::io::Result<()> {
-    write!(
-        w,
-        "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\n\
-         Connection: close\r\n\r\n"
-    )?;
+    start_sse_with(w, &[])
+}
+
+/// [`start_sse`] with extra headers — the gateway echoes a client-supplied
+/// `X-Request-Id` on the stream head this way.
+pub fn start_sse_with<W: Write>(w: &mut W, extra_headers: &[(&str, &str)]) -> std::io::Result<()> {
+    let mut headers: Vec<(&str, &str)> = vec![("Cache-Control", "no-cache")];
+    headers.extend_from_slice(extra_headers);
+    write_head(w, 200, "text/event-stream", None, &headers)?;
     w.flush()
 }
 
@@ -254,6 +270,19 @@ mod tests {
         assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
         assert!(text.contains("Retry-After: 2\r\n"));
         assert!(text.ends_with("\r\n\r\n{}"));
+    }
+
+    #[test]
+    fn sse_head_carries_extra_headers() {
+        let mut buf = Vec::new();
+        start_sse_with(&mut buf, &[("X-Request-Id", "abc-123")]).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Type: text/event-stream\r\n"));
+        assert!(text.contains("Cache-Control: no-cache\r\n"));
+        assert!(text.contains("X-Request-Id: abc-123\r\n"));
+        assert!(!text.contains("Content-Length"));
+        assert!(text.ends_with("\r\n\r\n"));
     }
 
     #[test]

@@ -10,26 +10,37 @@
 //! - [`gateway`] — `POST /v1/generate` with SSE token streaming,
 //!   `GET /healthz`, `GET /metrics` (Prometheus text format 0.0.4 with
 //!   true histograms), `GET /debug/steps` and `GET /debug/tree` (JSON
-//!   introspection); bounded admission (429 backpressure), disconnect
+//!   introspection), `POST /admin/drain|join` (live shard membership);
+//!   bounded per-shard admission (429 backpressure), disconnect
 //!   cancellation, graceful drain, optional Chrome `trace_event` output
 //!   (`--trace-out`). Threading model documented in DESIGN.md.
+//! - [`shard`] — one engine worker: a stepper thread owning an `Engine`,
+//!   driven over the typed `WorkerMsg` protocol (the EngineHandle seam).
+//! - [`router`] — consistent-hash prefix-affinity routing over N shards,
+//!   live drain/join, and cluster `/metrics` aggregation.
 //! - [`http`] — minimal HTTP/1.1 framing shared by server and client.
 //! - [`client`] — blocking client + SSE reader for tests and tooling.
 //! - [`bench`] — closed-loop multi-tenant load generator
-//!   (`chunk-serve bench-http`).
+//!   (`chunk-serve bench-http`), including the `--shard-sweep` scaling
+//!   harness.
 
 pub mod bench;
 pub mod client;
 pub mod gateway;
 pub mod http;
+pub mod router;
+pub(crate) mod shard;
 
 pub use bench::{
-    render_comparison, render_policy_comparison, run_bench, run_chaos_bench, run_mixed_bench,
-    run_policy_comparison, run_prefill_comparison, BenchConfig, BenchReport, ChaosBenchConfig,
-    ChaosReport, ComparisonConfig, MixedBenchConfig, MixedReport, PolicyComparisonConfig,
+    render_comparison, render_policy_comparison, render_shard_sweep, run_bench, run_chaos_bench,
+    run_mixed_bench, run_policy_comparison, run_prefill_comparison, run_shard_sweep,
+    shard_sweep_json, BenchConfig, BenchReport, ChaosBenchConfig, ChaosReport, ComparisonConfig,
+    MixedBenchConfig, MixedReport, PolicyComparisonConfig, ShardSweepConfig, ShardSweepPoint,
 };
 pub use client::{
-    gauge_value, generate_with_retry, histogram_quantile, histogram_snapshot, labeled_gauge_value,
-    lint_exposition, GenerateStream, HistogramSnapshot, Response, StreamEvent,
+    gauge_value, generate_with_request_id, generate_with_retry, histogram_quantile,
+    histogram_snapshot, labeled_gauge_value, lint_exposition, GenerateStream, HistogramSnapshot,
+    Response, StreamEvent,
 };
 pub use gateway::{Gateway, GatewayConfig, TokenEvent};
+pub use router::{aggregate_expositions, routing_key, HashRing, RING_SEED, RING_VNODES};

@@ -1,0 +1,681 @@
+//! Prefix-affinity routing over N engine shards.
+//!
+//! The gateway no longer owns an engine: it owns a [`Router`], which maps
+//! every request to one shard's [`EngineHandle`](super::shard::EngineHandle)
+//! by **consistent hashing the longest chunk-aligned prefix** of the
+//! prompt. Requests sharing a system prompt therefore land on the shard
+//! whose prefix tree already holds its KV chunks — the cross-shard
+//! analogue of the intra-node sharing ChunkAttention exploits.
+//!
+//! The ring ([`HashRing`]) is deterministic: virtual-node positions depend
+//! only on `(seed, shard, vnode)`, so identical prompts route identically
+//! across router restarts, and draining then rejoining a shard restores
+//! the exact original mapping. Removing one of N members remaps only the
+//! keys that lived on it (~1/N of the corpus); everything else keeps its
+//! successor point untouched.
+//!
+//! Live **drain** is a routing-only state change: the shard stops
+//! receiving new admissions but its stepper keeps running, so in-flight
+//! requests finish and stream to completion — zero accepted requests are
+//! lost. **Join** re-inserts the shard's points, moving only the affected
+//! key range back.
+//!
+//! [`aggregate_expositions`] merges N per-shard `/metrics` documents into
+//! one: each family keeps a cluster **rollup** sample first (sum for
+//! counters, max/min/mean where summing would lie, ratio-of-sums for hit
+//! rates) followed by per-shard `shard="N"` series; histograms merge
+//! bucket-wise. A single-shard document passes through byte-for-byte.
+
+use super::shard::EngineHandle;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Virtual nodes per shard on the ring; enough for ~±10% load spread at
+/// small N without making membership changes expensive.
+pub const RING_VNODES: usize = 64;
+
+/// Fixed ring seed: routing must be reproducible across gateway restarts
+/// (same prompts → same shard), so the seed is part of the protocol, not
+/// a runtime knob.
+pub const RING_SEED: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// SplitMix64 finalizer: a cheap, well-distributed 64-bit mixer.
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// The routing key for a prompt: FNV-1a over its longest chunk-aligned
+/// shared prefix, finalized through SplitMix64.
+///
+/// `shared_tokens > 0` declares the prefix the client expects to share
+/// (the system prompt); otherwise the whole prompt is the candidate. The
+/// candidate is truncated down to a chunk boundary so every prompt
+/// sharing the same leading chunks hashes identically regardless of its
+/// private tail — the tree dedupes at chunk granularity, so that is the
+/// granularity at which affinity pays. Prompts shorter than one chunk
+/// (prefix-less traffic) fall back to hashing the full prompt, which
+/// spreads them uniformly.
+pub fn routing_key(prompt: &[u32], shared_tokens: usize, chunk_size: usize) -> u64 {
+    let chunk = chunk_size.max(1);
+    let declared =
+        if shared_tokens > 0 { shared_tokens.min(prompt.len()) } else { prompt.len() };
+    let aligned = (declared / chunk) * chunk;
+    let span = if aligned > 0 { &prompt[..aligned] } else { prompt };
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in span {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x1_0000_0001_b3);
+    }
+    splitmix64(h)
+}
+
+/// A consistent-hash ring over shard ids with virtual nodes.
+///
+/// Deterministic by construction: point positions are pure functions of
+/// `(seed, shard, vnode)`. `remove` + `add` of the same shard is an exact
+/// involution.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    /// `(position, shard)` sorted by position (shard breaks ties).
+    points: Vec<(u64, usize)>,
+    vnodes: usize,
+    seed: u64,
+}
+
+impl HashRing {
+    /// A ring with members `0..shards`.
+    pub fn new(shards: usize, vnodes: usize, seed: u64) -> HashRing {
+        let mut ring = HashRing { points: Vec::new(), vnodes: vnodes.max(1), seed };
+        for s in 0..shards {
+            ring.add(s);
+        }
+        ring
+    }
+
+    fn point(&self, shard: usize, vnode: usize) -> u64 {
+        splitmix64(self.seed ^ splitmix64((shard as u64) << 32 | vnode as u64))
+    }
+
+    /// Insert `shard`'s virtual nodes (no-op if already a member).
+    pub fn add(&mut self, shard: usize) {
+        if self.contains(shard) {
+            return;
+        }
+        for v in 0..self.vnodes {
+            self.points.push((self.point(shard, v), shard));
+        }
+        self.points.sort_unstable();
+    }
+
+    /// Remove `shard`'s virtual nodes (no-op if not a member).
+    pub fn remove(&mut self, shard: usize) {
+        self.points.retain(|&(_, s)| s != shard);
+    }
+
+    pub fn contains(&self, shard: usize) -> bool {
+        self.points.iter().any(|&(_, s)| s == shard)
+    }
+
+    /// Current members, ascending.
+    pub fn members(&self) -> Vec<usize> {
+        let mut m: Vec<usize> = self.points.iter().map(|&(_, s)| s).collect();
+        m.sort_unstable();
+        m.dedup();
+        m
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// The shard owning `key`: the first point at or after it, wrapping.
+    pub fn shard_for(&self, key: u64) -> Option<usize> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let idx = self.points.partition_point(|&(p, _)| p < key);
+        let (_, shard) = self.points[if idx == self.points.len() { 0 } else { idx }];
+        Some(shard)
+    }
+}
+
+/// The gateway's routing table: shard handles, the ring, and per-shard
+/// draining flags. Ring membership changes (drain/join) are serialized by
+/// the ring mutex; routing is one lock + one binary search.
+pub(crate) struct Router {
+    shards: Vec<Arc<EngineHandle>>,
+    ring: Mutex<HashRing>,
+    draining: Vec<AtomicBool>,
+    chunk_size: usize,
+}
+
+impl Router {
+    pub(crate) fn new(shards: Vec<Arc<EngineHandle>>, chunk_size: usize) -> Router {
+        let n = shards.len();
+        Router {
+            shards,
+            ring: Mutex::new(HashRing::new(n, RING_VNODES, RING_SEED)),
+            draining: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            chunk_size,
+        }
+    }
+
+    pub(crate) fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub(crate) fn chunk_size(&self) -> usize {
+        self.chunk_size
+    }
+
+    pub(crate) fn handles(&self) -> &[Arc<EngineHandle>] {
+        &self.shards
+    }
+
+    pub(crate) fn handle(&self, id: usize) -> Option<Arc<EngineHandle>> {
+        self.shards.get(id).cloned()
+    }
+
+    /// Route a key to its owning shard's handle; `None` when every shard
+    /// is draining (the caller answers 503).
+    pub(crate) fn route(&self, key: u64) -> Option<Arc<EngineHandle>> {
+        let ring = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        ring.shard_for(key).and_then(|s| self.shards.get(s).cloned())
+    }
+
+    /// Live drain: stop routing new admissions to `id`. In-flight requests
+    /// keep streaming (the shard's stepper is untouched). Idempotent.
+    pub(crate) fn drain(&self, id: usize) -> Result<Vec<usize>, String> {
+        if id >= self.shards.len() {
+            return Err(format!("no such shard {id} (have {})", self.shards.len()));
+        }
+        self.draining[id].store(true, Ordering::SeqCst);
+        let mut ring = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        ring.remove(id);
+        Ok(ring.members())
+    }
+
+    /// Rejoin a drained shard: its ring points return to their original
+    /// positions, moving back exactly the key range it owned. Idempotent.
+    pub(crate) fn join(&self, id: usize) -> Result<Vec<usize>, String> {
+        if id >= self.shards.len() {
+            return Err(format!("no such shard {id} (have {})", self.shards.len()));
+        }
+        self.draining[id].store(false, Ordering::SeqCst);
+        let mut ring = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        ring.add(id);
+        Ok(ring.members())
+    }
+
+    pub(crate) fn is_draining(&self, id: usize) -> bool {
+        self.draining.get(id).map(|d| d.load(Ordering::SeqCst)).unwrap_or(false)
+    }
+
+    pub(crate) fn members(&self) -> Vec<usize> {
+        self.ring.lock().unwrap_or_else(|e| e.into_inner()).members()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// /metrics aggregation
+// ---------------------------------------------------------------------------
+
+/// One histogram child (labels minus `le`) accumulated across shards.
+struct HistChild {
+    /// `le` bounds in the order the first contributing shard emitted them.
+    bounds: Vec<String>,
+    /// Summed cumulative count per `le` bound.
+    bucket_sums: BTreeMap<String, f64>,
+    sum: f64,
+    count: f64,
+    /// Raw per-shard children for `shard="N"` emission:
+    /// `(shard, buckets as (le, cum-string), sum-string, count-string)`.
+    per_shard: Vec<(usize, Vec<(String, String)>, String, String)>,
+}
+
+/// One family accumulated across shards.
+struct Family {
+    help: String,
+    ty: String,
+    /// Gauge samples grouped by label body, in first-seen order:
+    /// `(labels, per-shard (shard, value, raw-string))`.
+    rows: Vec<(String, Vec<(usize, f64, String)>)>,
+    /// Histogram children keyed by labels-minus-le, in first-seen order.
+    children: Vec<(String, HistChild)>,
+}
+
+/// Split a sample's series into `(name, label-body)`.
+fn split_series(series: &str) -> (&str, &str) {
+    match series.split_once('{') {
+        Some((name, rest)) => (name, rest.strip_suffix('}').unwrap_or(rest)),
+        None => (series, ""),
+    }
+}
+
+/// Append `shard="N"` to a label body ("" stays valid).
+fn with_shard(labels: &str, shard: usize) -> String {
+    if labels.is_empty() {
+        format!("shard=\"{shard}\"")
+    } else {
+        format!("{labels},shard=\"{shard}\"")
+    }
+}
+
+fn fmt_series(name: &str, labels: &str) -> String {
+    if labels.is_empty() {
+        name.to_string()
+    } else {
+        format!("{name}{{{labels}}}")
+    }
+}
+
+/// Cluster rollup of one gauge family's samples. Summing is right for
+/// counters and occupancy; info gauges and config echoes take max (every
+/// shard reports the same value), health probes take min (degraded if any
+/// shard is), and pre-averaged statistics take the mean.
+fn rollup_value(name: &str, values: &[f64]) -> f64 {
+    let max = || values.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if name.ends_with("_info") {
+        return max();
+    }
+    if name.ends_with("tree_invariants_ok") {
+        return values.iter().cloned().fold(f64::INFINITY, f64::min);
+    }
+    if name.ends_with("step_token_budget")
+        || name.ends_with("prefill_chunk_tokens")
+        || name.ends_with("pool_workers")
+        || name.ends_with("pool_workers_pinned")
+        || name.ends_with("decode_lag_max")
+    {
+        return max();
+    }
+    if name.ends_with("_mean")
+        || name.ends_with("_p50")
+        || name.ends_with("_p99")
+        || name.ends_with("_rate")
+    {
+        return values.iter().sum::<f64>() / values.len().max(1) as f64;
+    }
+    values.iter().sum()
+}
+
+/// Sum one unlabeled gauge family (matched by name suffix) across docs.
+fn sum_suffix(docs: &[String], suffix: &str) -> Option<f64> {
+    let mut total = 0.0;
+    let mut seen = false;
+    for doc in docs {
+        for line in doc.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let Some((series, value)) = line.rsplit_once(' ') else { continue };
+            let (name, labels) = split_series(series);
+            if labels.is_empty() && name.ends_with(suffix) {
+                if let Ok(v) = value.parse::<f64>() {
+                    total += v;
+                    seen = true;
+                }
+            }
+        }
+    }
+    seen.then_some(total)
+}
+
+/// Merge N per-shard exposition documents into one cluster document.
+///
+/// For every family (order taken from the first document that has it):
+/// `# HELP`/`# TYPE` once, the cluster rollup sample(s) first — so
+/// suffix-matching parsers and dashboards that predate sharding keep
+/// reading cluster totals — then per-shard `shard="N"` series. Histograms
+/// merge bucket-wise (per-shard children are emitted only for unlabeled
+/// families, keeping labeled-family cardinality bounded). Hit rates are
+/// recomputed as ratio-of-sums from their component counters so idle
+/// shards cannot dilute them. One document passes through unchanged.
+pub fn aggregate_expositions(docs: &[String]) -> String {
+    if docs.len() == 1 {
+        return docs[0].clone();
+    }
+    let mut order: Vec<String> = Vec::new();
+    let mut families: BTreeMap<String, Family> = BTreeMap::new();
+    // First pass: metadata, so histogram sample names resolve to families.
+    for doc in docs {
+        for line in doc.lines() {
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                let mut it = rest.splitn(2, ' ');
+                let name = it.next().unwrap_or("").to_string();
+                let help = it.next().unwrap_or("").to_string();
+                if let std::collections::btree_map::Entry::Vacant(slot) = families.entry(name) {
+                    order.push(slot.key().clone());
+                    slot.insert(Family {
+                        help,
+                        ty: "untyped".to_string(),
+                        rows: Vec::new(),
+                        children: Vec::new(),
+                    });
+                }
+            } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split_whitespace();
+                let name = it.next().unwrap_or("");
+                let ty = it.next().unwrap_or("untyped");
+                if let Some(f) = families.get_mut(name) {
+                    if f.ty == "untyped" {
+                        f.ty = ty.to_string();
+                    }
+                }
+            }
+        }
+    }
+    let hist = |families: &BTreeMap<String, Family>, sname: &str| -> Option<String> {
+        for suffix in ["_bucket", "_sum", "_count"] {
+            if let Some(base) = sname.strip_suffix(suffix) {
+                if families.get(base).is_some_and(|f| f.ty == "histogram") {
+                    return Some(base.to_string());
+                }
+            }
+        }
+        None
+    };
+    // Second pass: samples.
+    for (shard, doc) in docs.iter().enumerate() {
+        for line in doc.lines() {
+            if line.starts_with('#') || line.trim().is_empty() {
+                continue;
+            }
+            let Some((series, value)) = line.rsplit_once(' ') else { continue };
+            let (sname, labels) = split_series(series);
+            if let Some(base) = hist(&families, sname) {
+                // Histogram sample: fold into the child keyed by labels
+                // minus `le`.
+                let mut le: Option<String> = None;
+                let child_labels: Vec<&str> = labels
+                    .split(',')
+                    .filter(|p| !p.is_empty())
+                    .filter(|p| match p.strip_prefix("le=\"").and_then(|r| r.strip_suffix('"')) {
+                        Some(bound) => {
+                            le = Some(bound.to_string());
+                            false
+                        }
+                        None => true,
+                    })
+                    .collect();
+                let key = child_labels.join(",");
+                let fam = families.get_mut(&base).expect("family registered");
+                let child = match fam.children.iter_mut().find(|(k, _)| *k == key) {
+                    Some((_, c)) => c,
+                    None => {
+                        fam.children.push((
+                            key.clone(),
+                            HistChild {
+                                bounds: Vec::new(),
+                                bucket_sums: BTreeMap::new(),
+                                sum: 0.0,
+                                count: 0.0,
+                                per_shard: Vec::new(),
+                            },
+                        ));
+                        &mut fam.children.last_mut().expect("just pushed").1
+                    }
+                };
+                if child.per_shard.last().map(|p| p.0) != Some(shard) {
+                    child.per_shard.push((shard, Vec::new(), "0".to_string(), "0".to_string()));
+                }
+                let slot = child.per_shard.last_mut().expect("just ensured");
+                let v: f64 = value.parse().unwrap_or(0.0);
+                if sname.ends_with("_bucket") {
+                    let bound = le.unwrap_or_default();
+                    if !child.bounds.contains(&bound) {
+                        child.bounds.push(bound.clone());
+                    }
+                    *child.bucket_sums.entry(bound.clone()).or_insert(0.0) += v;
+                    slot.1.push((bound, value.to_string()));
+                } else if sname.ends_with("_sum") {
+                    child.sum += v;
+                    slot.2 = value.to_string();
+                } else {
+                    child.count += v;
+                    slot.3 = value.to_string();
+                }
+            } else if let Some(fam) = families.get_mut(sname) {
+                let v: f64 = match value.parse() {
+                    Ok(v) => v,
+                    Err(_) => continue,
+                };
+                match fam.rows.iter_mut().find(|(k, _)| *k == labels) {
+                    Some((_, samples)) => samples.push((shard, v, value.to_string())),
+                    None => fam
+                        .rows
+                        .push((labels.to_string(), vec![(shard, v, value.to_string())])),
+                }
+            }
+        }
+    }
+    // Ratio-of-sums overrides: a mean of per-shard rates would let idle
+    // shards (0/0 → 0.0) dilute the cluster number.
+    let reused = sum_suffix(docs, "_prefill_reused_tokens_total");
+    let computed = sum_suffix(docs, "_prefill_computed_tokens_total");
+    let cache_hits = sum_suffix(docs, "_context_cache_hits_total");
+    let cache_rebuilds = sum_suffix(docs, "_context_rebuilds_total");
+
+    let mut out = String::new();
+    for name in &order {
+        let fam = &families[name];
+        out.push_str(&format!("# HELP {name} {}\n", fam.help));
+        out.push_str(&format!("# TYPE {name} {}\n", fam.ty));
+        if fam.ty == "histogram" {
+            for (labels, child) in &fam.children {
+                // Merged cluster child first.
+                for bound in &child.bounds {
+                    let b = with_le(labels, bound);
+                    let v = child.bucket_sums.get(bound).copied().unwrap_or(0.0);
+                    out.push_str(&format!("{} {v}\n", fmt_series(&format!("{name}_bucket"), &b)));
+                }
+                out.push_str(&format!("{} {}\n", fmt_series(&format!("{name}_sum"), labels), child.sum));
+                out.push_str(&format!("{} {}\n", fmt_series(&format!("{name}_count"), labels), child.count));
+                // Per-shard children only for unlabeled families: labeled
+                // families (per-phase timings) would explode cardinality.
+                if labels.is_empty() {
+                    for (shard, buckets, sum, count) in &child.per_shard {
+                        let shard_labels = with_shard(labels, *shard);
+                        for (bound, cum) in buckets {
+                            let b = with_le(&shard_labels, bound);
+                            out.push_str(&format!(
+                                "{} {cum}\n",
+                                fmt_series(&format!("{name}_bucket"), &b)
+                            ));
+                        }
+                        out.push_str(&format!(
+                            "{} {sum}\n",
+                            fmt_series(&format!("{name}_sum"), &shard_labels)
+                        ));
+                        out.push_str(&format!(
+                            "{} {count}\n",
+                            fmt_series(&format!("{name}_count"), &shard_labels)
+                        ));
+                    }
+                }
+            }
+        } else {
+            for (labels, samples) in &fam.rows {
+                let values: Vec<f64> = samples.iter().map(|&(_, v, _)| v).collect();
+                let mut v = rollup_value(name, &values);
+                if name.ends_with("_prefix_hit_rate") {
+                    if let (Some(r), Some(c)) = (reused, computed) {
+                        v = r / (r + c).max(1.0);
+                    }
+                } else if name.ends_with("_context_cache_hit_rate") {
+                    if let (Some(h), Some(r)) = (cache_hits, cache_rebuilds) {
+                        v = if h + r > 0.0 { h / (h + r) } else { 0.0 };
+                    }
+                }
+                out.push_str(&format!("{} {v}\n", fmt_series(name, labels)));
+                for (shard, _, raw) in samples {
+                    out.push_str(&format!(
+                        "{} {raw}\n",
+                        fmt_series(name, &with_shard(labels, *shard))
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Append `le="bound"` to a label body (the `le` label goes last, matching
+/// the exporter's layout).
+fn with_le(labels: &str, bound: &str) -> String {
+    if labels.is_empty() {
+        format!("le=\"{bound}\"")
+    } else {
+        format!("{labels},le=\"{bound}\"")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::client::{gauge_value, histogram_snapshot, labeled_gauge_value, lint_exposition};
+
+    fn corpus(n: usize, chunk: usize) -> Vec<u64> {
+        // Distinct chunk-aligned prefixes: each "tenant" is one shared
+        // system prompt of 2 chunks.
+        (0..n)
+            .map(|i| {
+                let prompt: Vec<u32> = (0..2 * chunk as u32).map(|j| i as u32 * 10_000 + j).collect();
+                routing_key(&prompt, 2 * chunk, chunk)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn draining_one_of_n_remaps_only_its_own_keys() {
+        let keys = corpus(2000, 64);
+        let mut ring = HashRing::new(4, RING_VNODES, RING_SEED);
+        let before: Vec<usize> = keys.iter().map(|&k| ring.shard_for(k).unwrap()).collect();
+        // Every member owns a sane share (vnode spread, not exact balance).
+        for s in 0..4 {
+            let share = before.iter().filter(|&&b| b == s).count() as f64 / keys.len() as f64;
+            assert!((0.10..=0.45).contains(&share), "shard {s} owns {share:.2} of the corpus");
+        }
+        ring.remove(2);
+        let after: Vec<usize> = keys.iter().map(|&k| ring.shard_for(k).unwrap()).collect();
+        let mut moved = 0usize;
+        for (i, (&b, &a)) in before.iter().zip(after.iter()).enumerate() {
+            if b == 2 {
+                assert_ne!(a, 2, "key {i} still routed to the drained shard");
+                moved += 1;
+            } else {
+                // Consistent hashing: keys not owned by the drained shard
+                // keep their successor point, hence their shard.
+                assert_eq!(a, b, "key {i} moved although its shard stayed");
+            }
+        }
+        let frac = moved as f64 / keys.len() as f64;
+        assert!((0.10..=0.45).contains(&frac), "drain moved {frac:.2} of keys, expected ~1/4");
+        // Join restores the exact original mapping.
+        ring.add(2);
+        let rejoined: Vec<usize> = keys.iter().map(|&k| ring.shard_for(k).unwrap()).collect();
+        assert_eq!(rejoined, before);
+    }
+
+    #[test]
+    fn ring_is_deterministic_across_restarts() {
+        let keys = corpus(500, 64);
+        let a = HashRing::new(3, RING_VNODES, RING_SEED);
+        let b = HashRing::new(3, RING_VNODES, RING_SEED);
+        for &k in &keys {
+            assert_eq!(a.shard_for(k), b.shard_for(k));
+        }
+        assert_eq!(a.members(), vec![0, 1, 2]);
+        assert!(HashRing::new(0, RING_VNODES, RING_SEED).shard_for(7).is_none());
+    }
+
+    #[test]
+    fn routing_key_is_chunk_aligned_and_tail_blind() {
+        let chunk = 64;
+        let prefix: Vec<u32> = (0..128).collect();
+        let mut a = prefix.clone();
+        a.extend([900, 901, 902]);
+        let mut b = prefix.clone();
+        b.extend([7000, 7001]);
+        // Same declared shared prefix → same key, any private tail.
+        assert_eq!(routing_key(&a, 128, chunk), routing_key(&b, 128, chunk));
+        // A mid-chunk shared length truncates down to the boundary.
+        assert_eq!(routing_key(&a, 130, chunk), routing_key(&b, 128, chunk));
+        // Different prefixes diverge.
+        let other: Vec<u32> = (1000..1128).collect();
+        assert_ne!(routing_key(&other, 128, chunk), routing_key(&a, 128, chunk));
+        // Prefix-less short prompts still hash deterministically (full
+        // prompt fallback) and depend on the tail.
+        let s1 = vec![1, 2, 3];
+        let s2 = vec![1, 2, 4];
+        assert_eq!(routing_key(&s1, 0, chunk), routing_key(&s1, 0, chunk));
+        assert_ne!(routing_key(&s1, 0, chunk), routing_key(&s2, 0, chunk));
+    }
+
+    fn doc(prefix: &str, depth: f64, reused: f64, computed: f64, tenant: &str, ttft: &[f64]) -> String {
+        use crate::metrics::{push_gauge, push_histogram, push_labeled_gauge, push_labeled_series};
+        use crate::util::stats::LogHistogram;
+        let mut out = String::new();
+        push_gauge(&mut out, prefix, "queue_depth", "q", depth);
+        push_gauge(&mut out, prefix, "prefill_reused_tokens_total", "r", reused);
+        push_gauge(&mut out, prefix, "prefill_computed_tokens_total", "c", computed);
+        push_gauge(
+            &mut out,
+            prefix,
+            "prefix_hit_rate",
+            "h",
+            reused / (reused + computed).max(1.0),
+        );
+        push_gauge(&mut out, prefix, "step_token_budget", "b", 128.0);
+        push_labeled_gauge(&mut out, prefix, "kv_dtype_info", "d", &[("dtype", "f16")], 1.0);
+        push_labeled_series(
+            &mut out,
+            prefix,
+            "tenant_admitted_total",
+            "t",
+            &[(vec![("tenant", tenant.to_string())], 2.0)],
+        );
+        let mut h = LogHistogram::time_seconds();
+        for &x in ttft {
+            h.record(x);
+        }
+        push_histogram(&mut out, prefix, "ttft_seconds", "ttft", &h);
+        out
+    }
+
+    #[test]
+    fn aggregation_rolls_up_then_labels_per_shard() {
+        let docs = vec![
+            doc("gw", 3.0, 900.0, 100.0, "0", &[0.01, 0.02]),
+            doc("gw", 5.0, 0.0, 0.0, "7", &[0.04]),
+        ];
+        let merged = aggregate_expositions(&docs);
+        assert_eq!(lint_exposition(&merged), Vec::<String>::new(), "merged doc must lint clean");
+        // Counters sum; the rollup line is the suffix-matchable one.
+        assert_eq!(gauge_value(&merged, "queue_depth"), Some(8.0));
+        // Config echoes take max, not sum.
+        assert!(merged.contains("gw_step_token_budget 128\n"), "{merged}");
+        // Hit rate is ratio-of-sums (0.9), not the diluted mean (0.45).
+        let hit = gauge_value(&merged, "prefix_hit_rate").unwrap();
+        assert!((hit - 0.9).abs() < 1e-9, "hit rate {hit}");
+        // Info gauges keep their label and value 1.
+        assert!(merged.contains("gw_kv_dtype_info{dtype=\"f16\"} 1\n"), "{merged}");
+        // Tenant series from different shards coexist with rollups first.
+        assert_eq!(labeled_gauge_value(&merged, "tenant_admitted_total", "tenant", "0"), Some(2.0));
+        assert_eq!(labeled_gauge_value(&merged, "tenant_admitted_total", "tenant", "7"), Some(2.0));
+        // Per-shard series are present and labeled.
+        assert_eq!(labeled_gauge_value(&merged, "queue_depth", "shard", "1"), Some(5.0));
+        // Histograms merge bucket-wise: cluster count is 3, and the
+        // unlabeled child is the rollup (exact-label-match semantics).
+        let snap = histogram_snapshot(&merged, "ttft_seconds", None).expect("merged histogram");
+        assert_eq!(snap.count, 3);
+        let s0 = histogram_snapshot(&merged, "ttft_seconds", Some(("shard", "0"))).expect("shard 0");
+        assert_eq!(s0.count, 2);
+        // Single doc passes through byte-for-byte.
+        assert_eq!(aggregate_expositions(&docs[..1]), docs[0]);
+    }
+}

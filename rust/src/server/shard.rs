@@ -1,0 +1,1249 @@
+//! One engine shard: a stepper thread owning an [`Engine`] exclusively,
+//! driven over a typed worker-protocol channel ([`WorkerMsg`]).
+//!
+//! This is the seam the gateway's router speaks through. Each shard is a
+//! thread that owns its own engine, scheduler, retainer, and failpoint/
+//! trace context; the only way in is an [`EngineHandle`] carrying the
+//! shard id and the command sender. Submit / cancel / scrape / debug /
+//! drain all travel as [`WorkerMsg`] variants, and each submitted request
+//! carries its own event channel on which the shard streams per-token
+//! [`TokenEvent`]s back.
+//!
+//! The supervision ladder (retry → attribute-and-fail → panic recovery →
+//! invariant verify → full rebuild), the watchdog heartbeat, the
+//! `/debug/steps` ring, and the per-shard `/metrics` rendering all live
+//! here — they are per-engine concerns, so a gateway with N shards gets N
+//! independent failure domains.
+
+use super::gateway::GatewayConfig;
+use crate::coordinator::{Engine, FinishedSeq, ModelRunner};
+use crate::metrics::{
+    push_gauge, push_histogram, push_histogram_family, push_labeled_gauge, push_labeled_series,
+    render_exposition, StepTiming,
+};
+use crate::util::failpoint;
+use crate::util::json::Json;
+use crate::util::trace;
+use crate::workload::Request;
+use std::collections::{BTreeMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Per-token events a shard streams back to a request's handler.
+#[derive(Debug, Clone)]
+pub enum TokenEvent {
+    /// Admission control refused the request. `draining` distinguishes a
+    /// shutting-down gateway (HTTP 503) from a full queue (HTTP 429).
+    Rejected { queued: usize, draining: bool },
+    /// One freshly decoded completion token.
+    Token { index: usize, token: u32 },
+    /// The sequence finished; the stream is complete.
+    Done { completion_tokens: usize },
+    /// Terminal: the request failed server-side (panic quarantine,
+    /// persistent runner error, or a full engine rebuild).
+    Error { message: String },
+    /// Terminal: the request exceeded its `deadline_ms`.
+    Timeout,
+}
+
+/// The worker protocol: every way a handler (or the router) can drive a
+/// shard. One enum so the seam is explicit and exhaustively matched.
+pub(crate) enum WorkerMsg {
+    Submit {
+        request: Request,
+        events: mpsc::Sender<TokenEvent>,
+        deadline: Option<Instant>,
+        /// Client-supplied `X-Request-Id`, for shard-side log correlation.
+        rid: Option<String>,
+    },
+    Cancel {
+        id: u64,
+    },
+    Scrape {
+        reply: mpsc::Sender<String>,
+    },
+    /// `/debug/steps`: JSON dump of the shard's recent-step ring.
+    DebugSteps {
+        reply: mpsc::Sender<String>,
+    },
+    /// `/debug/tree`: JSON snapshot of prefix-tree residency and sharing.
+    DebugTree {
+        reply: mpsc::Sender<String>,
+    },
+    /// Shutdown drain: reject new submissions, finish in-flight, exit.
+    /// (A *live* routing drain is a router-side ring change and never
+    /// reaches the shard — its stepper keeps running.)
+    Drain,
+}
+
+/// Liveness heartbeat and failure counters shared by a shard's stepper
+/// thread, its watchdog, and connection handlers. All atomics: readable
+/// from any thread, unpoisonable by a panicking one.
+pub(crate) struct ShardShared {
+    started: Instant,
+    /// Milliseconds since `started` of the stepper's last completed loop
+    /// pass (bumped on every pass, idle or busy, so staleness always
+    /// means a wedged or very slow step).
+    heartbeat_ms: AtomicU64,
+    /// Set by the watchdog while the heartbeat is stale; drives 503 on
+    /// `/healthz`.
+    pub(crate) stalled: AtomicBool,
+    pub(crate) watchdog_stalls: AtomicU64,
+    pub(crate) engine_panics: AtomicU64,
+    pub(crate) engine_rebuilds: AtomicU64,
+    pub(crate) requests_timed_out: AtomicU64,
+    pub(crate) step_retries: AtomicU64,
+    /// `requests_failed_total` by reason.
+    failed_panic: AtomicU64,
+    failed_error: AtomicU64,
+    failed_rebuild: AtomicU64,
+}
+
+impl ShardShared {
+    fn new() -> Self {
+        ShardShared {
+            started: Instant::now(),
+            heartbeat_ms: AtomicU64::new(0),
+            stalled: AtomicBool::new(false),
+            watchdog_stalls: AtomicU64::new(0),
+            engine_panics: AtomicU64::new(0),
+            engine_rebuilds: AtomicU64::new(0),
+            requests_timed_out: AtomicU64::new(0),
+            step_retries: AtomicU64::new(0),
+            failed_panic: AtomicU64::new(0),
+            failed_error: AtomicU64::new(0),
+            failed_rebuild: AtomicU64::new(0),
+        }
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.started.elapsed().as_millis() as u64
+    }
+
+    /// Stepper liveness beat, once per loop pass.
+    fn beat(&self) {
+        self.heartbeat_ms.store(self.now_ms(), Ordering::SeqCst);
+    }
+
+    pub(crate) fn heartbeat_age_ms(&self) -> u64 {
+        self.now_ms().saturating_sub(self.heartbeat_ms.load(Ordering::SeqCst))
+    }
+
+    fn count_failure(&self, reason: FailReason) {
+        match reason {
+            FailReason::Panic => &self.failed_panic,
+            FailReason::Error => &self.failed_error,
+            FailReason::Rebuild => &self.failed_rebuild,
+        }
+        .fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FailReason {
+    /// Quarantined after a panic unwound out of `Engine::step`.
+    Panic,
+    /// Failed after transient-error retries were exhausted.
+    Error,
+    /// Dropped by a full engine rebuild (broken invariants).
+    Rebuild,
+}
+
+/// A shard's public face: the id plus the command sender. Cloneable via
+/// `Arc`; the sender sits behind a `Mutex` so the handle is `Sync` without
+/// per-handler channel clones (the lock covers only the enqueue, never a
+/// reply wait, so a slow scrape cannot block a submit for long).
+pub(crate) struct EngineHandle {
+    pub(crate) id: usize,
+    tx: Mutex<mpsc::Sender<WorkerMsg>>,
+    pub(crate) shared: Arc<ShardShared>,
+}
+
+impl EngineHandle {
+    /// Enqueue one message; `false` means the shard's stepper is gone
+    /// (shutdown), which handlers map to HTTP 503.
+    pub(crate) fn send(&self, msg: WorkerMsg) -> bool {
+        match self.tx.lock() {
+            Ok(tx) => tx.send(msg).is_ok(),
+            Err(_) => false,
+        }
+    }
+}
+
+/// A running shard: its handle plus the thread handles the gateway joins
+/// on shutdown.
+pub(crate) struct ShardRuntime {
+    pub(crate) handle: Arc<EngineHandle>,
+    stepper: thread::JoinHandle<()>,
+    watchdog: Option<thread::JoinHandle<()>>,
+}
+
+impl ShardRuntime {
+    pub(crate) fn join(self) -> anyhow::Result<()> {
+        let id = self.handle.id;
+        self.stepper
+            .join()
+            .map_err(|_| anyhow::anyhow!("shard {id} stepper thread panicked"))?;
+        if let Some(wd) = self.watchdog {
+            wd.join().map_err(|_| anyhow::anyhow!("shard {id} watchdog thread panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+/// Configure `engine` from the gateway knobs and spawn its stepper (and
+/// watchdog) threads. This is the per-engine half of what `Gateway::start`
+/// used to do inline; the gateway now calls it once per shard.
+pub(crate) fn spawn_shard<R: ModelRunner + Send + 'static>(
+    id: usize,
+    mut engine: Engine<R>,
+    cfg: &GatewayConfig,
+    stop: Arc<AtomicBool>,
+) -> anyhow::Result<ShardRuntime> {
+    engine.set_queue_limit(Some(cfg.queue_cap));
+    engine.set_history_limit(cfg.history_limit);
+    engine.set_chunked_prefill(cfg.prefill_chunk_tokens, cfg.step_token_budget);
+    engine.set_planner_config(crate::coordinator::PlannerConfig {
+        policy: cfg.sched_policy,
+        tenant_weights: cfg.tenant_weights.clone(),
+        ..crate::coordinator::PlannerConfig::default()
+    });
+    if cfg.retain_chunks > 0 {
+        engine.enable_prefix_retention(cfg.retain_chunks);
+    }
+    // Arm failpoints from the environment (no-op when FAILPOINTS is
+    // unset) so the chaos CI leg reaches gateways spawned anywhere. The
+    // registry is process-global: every shard shares one fault profile.
+    failpoint::arm_from_env();
+    // Arm the span recorder only when a trace file was requested; the
+    // disarmed path stays one relaxed atomic load per site.
+    if cfg.trace_path.is_some() {
+        trace::arm();
+    }
+    let (tx, rx) = mpsc::channel::<WorkerMsg>();
+    let shared = Arc::new(ShardShared::new());
+    shared.beat();
+
+    let stepper_cfg = cfg.clone();
+    let stepper_shared = shared.clone();
+    let stepper = thread::Builder::new()
+        .name(format!("gateway-stepper-{id}"))
+        .spawn(move || stepper_loop(id, engine, rx, stepper_cfg, stepper_shared))?;
+
+    let watchdog = if cfg.watchdog_stall > Duration::ZERO {
+        let wd_shared = shared.clone();
+        let stall = cfg.watchdog_stall;
+        Some(
+            thread::Builder::new()
+                .name(format!("gateway-watchdog-{id}"))
+                .spawn(move || watchdog_loop(id, wd_shared, stop, stall))?,
+        )
+    } else {
+        None
+    };
+
+    Ok(ShardRuntime { handle: Arc::new(EngineHandle { id, tx: Mutex::new(tx), shared }), stepper, watchdog })
+}
+
+/// Stream bookkeeping the stepper keeps per live request.
+struct StreamState {
+    events: mpsc::Sender<TokenEvent>,
+    /// Completion tokens already pushed to the event channel.
+    sent: usize,
+    /// Absolute deadline derived from the request's `deadline_ms`.
+    deadline: Option<Instant>,
+    /// When the previous completion token was streamed; feeds the
+    /// `inter_token_seconds` histogram.
+    last_token_at: Option<Instant>,
+}
+
+/// One completed engine step, kept in a bounded ring for `/debug/steps`.
+#[derive(Clone, Copy)]
+struct StepRecord {
+    /// Monotone step ordinal (the step-duration histogram's count).
+    seq: u64,
+    /// Milliseconds since shard start when the step was observed.
+    ts_ms: u64,
+    timing: StepTiming,
+}
+
+/// `/debug/steps` ring capacity.
+const STEP_RING_CAP: usize = 256;
+
+/// Stepper passes between periodic trace-file rewrites when `--trace-out`
+/// is set (the file is also written on stepper exit).
+const TRACE_FLUSH_PASSES: u64 = 1024;
+
+/// Watchdog thread: flips the shard's `stalled` flag while the stepper's
+/// heartbeat is stale. The stepper beats on every loop pass (including
+/// idle parking), so staleness always means a wedged or pathologically
+/// slow step — the flag drives `/healthz` 503-degraded (the gateway is
+/// degraded iff any shard is).
+fn watchdog_loop(shard: usize, shared: Arc<ShardShared>, stop: Arc<AtomicBool>, stall: Duration) {
+    let stall_ms = stall.as_millis().max(1) as u64;
+    let poll = (stall / 4).clamp(Duration::from_millis(5), Duration::from_millis(250));
+    while !stop.load(Ordering::SeqCst) {
+        thread::sleep(poll);
+        if shared.heartbeat_age_ms() > stall_ms {
+            if !shared.stalled.swap(true, Ordering::SeqCst) {
+                shared.watchdog_stalls.fetch_add(1, Ordering::SeqCst);
+                log::warn!(
+                    "watchdog: shard {shard} made no stepper pass in {}ms (bound {}ms); /healthz degraded",
+                    shared.heartbeat_age_ms(),
+                    stall_ms
+                );
+            }
+        } else if shared.stalled.swap(false, Ordering::SeqCst) {
+            log::info!("watchdog: shard {shard} stepper recovered; /healthz healthy");
+        }
+    }
+}
+
+fn stepper_loop<R: ModelRunner>(
+    shard: usize,
+    mut engine: Engine<R>,
+    cmd_rx: mpsc::Receiver<WorkerMsg>,
+    cfg: GatewayConfig,
+    shared: Arc<ShardShared>,
+) {
+    let mut streams: BTreeMap<u64, StreamState> = BTreeMap::new();
+    let mut draining = false;
+    let mut step_retries = 0usize;
+    // `/debug/steps` ring + the ordinal of the last step pushed into it
+    // (the step-duration histogram count doubles as a step sequence
+    // number, so failed/retried passes never duplicate stale records).
+    let mut step_ring: VecDeque<StepRecord> = VecDeque::with_capacity(STEP_RING_CAP);
+    let mut steps_seen: u64 = 0;
+    // Accumulated trace events when `--trace-out` is set. The span ring is
+    // process-global, so exactly one shard (0) drains it and rewrites the
+    // Chrome JSON file — two writers would each produce a file missing the
+    // other's events.
+    let trace_owner = cfg.trace_path.is_some() && shard == 0;
+    let mut trace_events: Vec<trace::TraceEvent> = Vec::new();
+    let mut passes: u64 = 0;
+    loop {
+        shared.beat();
+        passes += 1;
+        if trace_owner && passes % TRACE_FLUSH_PASSES == 0 {
+            flush_trace(cfg.trace_path.as_deref(), &mut trace_events);
+        }
+        // Pull every pending command; commands are cheap, steps are not.
+        let mut disconnected = false;
+        loop {
+            match cmd_rx.try_recv() {
+                Ok(cmd) => handle_cmd(
+                    shard,
+                    cmd,
+                    &mut engine,
+                    &mut streams,
+                    &mut draining,
+                    &cfg,
+                    &shared,
+                    &step_ring,
+                ),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        // Deadlines are enforced on every pass (idle included) so a
+        // request expiring while *queued* times out promptly too.
+        enforce_deadlines(&mut engine, &mut streams, &shared);
+        if engine.is_idle() {
+            if draining || disconnected {
+                break;
+            }
+            // Idle maintenance: keep spending the amortized eviction
+            // allowance while pinned prefixes sit over the retention
+            // budget, so the last request's pins drain between requests.
+            // Supervised like the busy path: an injected panic or error
+            // during maintenance must not kill the stepper either.
+            if engine.needs_maintenance() {
+                let _ = run_step_supervised(
+                    &mut engine,
+                    &mut streams,
+                    &shared,
+                    &cfg,
+                    &mut step_retries,
+                );
+                note_step(shard, &engine, &shared, &mut step_ring, &mut steps_seen);
+            }
+            // Park until work arrives, with a bounded wait so a Drain that
+            // raced past the try_recv loop is still noticed promptly.
+            match cmd_rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(cmd) => handle_cmd(
+                    shard,
+                    cmd,
+                    &mut engine,
+                    &mut streams,
+                    &mut draining,
+                    &cfg,
+                    &shared,
+                    &step_ring,
+                ),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+            continue;
+        }
+        let finished =
+            run_step_supervised(&mut engine, &mut streams, &shared, &cfg, &mut step_retries);
+        note_step(shard, &engine, &shared, &mut step_ring, &mut steps_seen);
+        // Stream freshly decoded tokens. A send error means the handler is
+        // gone without managing to send Cancel (it died); reap eagerly so
+        // the sequence stops burning decode slots.
+        let mut dead: Vec<u64> = Vec::new();
+        let mut inter_token_gaps: Vec<f64> = Vec::new();
+        for (&id, st) in streams.iter_mut() {
+            let Some(completion) = engine.completion_of(id) else { continue };
+            let total = completion.len();
+            while st.sent < total {
+                let token = completion[st.sent];
+                if st.events.send(TokenEvent::Token { index: st.sent, token }).is_err() {
+                    dead.push(id);
+                    break;
+                }
+                st.sent += 1;
+                let now = Instant::now();
+                if let Some(prev) = st.last_token_at.replace(now) {
+                    // Gap since this request's previous token (the first
+                    // token's latency is the TTFT histogram's job).
+                    inter_token_gaps.push(now.duration_since(prev).as_secs_f64());
+                }
+            }
+        }
+        for dt in inter_token_gaps {
+            engine.metrics_mut().record_inter_token(dt);
+        }
+        for id in dead {
+            streams.remove(&id);
+            engine.cancel(id);
+            engine.release(id);
+            if trace::armed() {
+                trace::instant("cancelled", "request", id, vec![("why", "disconnect".into())]);
+            }
+            log::debug!("request {id}: client gone mid-stream; shard {shard} residency released");
+        }
+        for f in finished {
+            let id = f.request.id;
+            let n = engine.completion_of(id).map(|c| c.len()).unwrap_or(0);
+            if let Some(st) = streams.remove(&id) {
+                let _ = st.events.send(TokenEvent::Done { completion_tokens: n });
+            }
+            engine.release(id);
+            if trace::armed() {
+                trace::instant(
+                    "finished",
+                    "request",
+                    id,
+                    vec![("completion_tokens", n.to_string())],
+                );
+            }
+            log::debug!("request {id}: finished with {n} completion tokens on shard {shard}");
+        }
+        if cfg.decode_interval > Duration::ZERO {
+            thread::sleep(cfg.decode_interval);
+        }
+    }
+    if trace_owner {
+        flush_trace(cfg.trace_path.as_deref(), &mut trace_events);
+        log::info!(
+            "wrote {} trace events to {}",
+            trace_events.len(),
+            cfg.trace_path.as_ref().unwrap().display()
+        );
+    }
+    // Terminal-event guarantee on the stepper's own exit path: any stream
+    // still open (e.g. the command channel disconnected mid-flight) gets
+    // an explicit SSE error instead of a silent sender drop.
+    for (_, st) in streams {
+        let _ = st
+            .events
+            .send(TokenEvent::Error { message: "gateway stepper exiting".to_string() });
+    }
+}
+
+/// Record the most recent *completed* step into the `/debug/steps` ring and
+/// (when tracing is armed) emit its Chrome spans. Keyed on the step-duration
+/// histogram count so passes that failed or only pumped commands are skipped.
+fn note_step<R: ModelRunner>(
+    shard: usize,
+    engine: &Engine<R>,
+    shared: &ShardShared,
+    ring: &mut VecDeque<StepRecord>,
+    steps_seen: &mut u64,
+) {
+    let n = engine.metrics().step_duration_seconds.total();
+    if n == *steps_seen {
+        return;
+    }
+    *steps_seen = n;
+    let timing = engine.last_step_timing();
+    if ring.len() == STEP_RING_CAP {
+        ring.pop_front();
+    }
+    ring.push_back(StepRecord { seq: n, ts_ms: shared.now_ms(), timing });
+    if trace::armed() {
+        emit_step_spans(shard, n, &timing);
+    }
+}
+
+/// Emit one "step" span plus its per-phase child spans on the shard's
+/// stepper track (tid = shard id; single-shard gateways keep the historical
+/// track 0). Phases are laid out back-to-back from the step's start; the
+/// kernel's chunk-first/seq-first sub-phases ran inside the decode call, so
+/// the layout is a readable approximation rather than exact wall intervals.
+fn emit_step_spans(shard: usize, seq: u64, t: &StepTiming) {
+    let tid = shard as u64;
+    let end_us = trace::now_us();
+    let total_us = (t.total_s * 1e6) as u64;
+    let start = end_us.saturating_sub(total_us);
+    trace::span(
+        "step",
+        "step",
+        tid,
+        start,
+        total_us,
+        vec![
+            ("seq", seq.to_string()),
+            ("decode_batch", t.decode_batch.to_string()),
+            ("prefill_slices", t.prefill_slices.to_string()),
+            ("admitted", t.admitted.to_string()),
+            ("finished", t.finished.to_string()),
+        ],
+    );
+    let mut cursor = start;
+    for (name, secs) in t.phases() {
+        let dur = (secs * 1e6) as u64;
+        if dur == 0 {
+            continue;
+        }
+        let cat = if matches!(name, "chunk_first" | "seq_first") { "kernel" } else { "step" };
+        trace::span(name, cat, tid, cursor, dur, Vec::new());
+        cursor = cursor.saturating_add(dur);
+    }
+}
+
+/// Drain buffered span-recorder events into `events` and rewrite the Chrome
+/// trace file. Quiet on success (called periodically); warns on I/O errors.
+fn flush_trace(path: Option<&std::path::Path>, events: &mut Vec<trace::TraceEvent>) {
+    let Some(path) = path else { return };
+    events.extend(trace::drain());
+    if let Err(e) = trace::write_chrome_trace_file(path, events) {
+        log::warn!("failed to write trace file {}: {e}", path.display());
+    }
+}
+
+/// One supervised engine iteration: `Engine::step` under `catch_unwind`,
+/// with the degradation ladder on failure —
+///
+/// 1. transient `Err`: bounded retry with backoff (the restore-queue seam
+///    makes whole-step retry safe for prefill errors);
+/// 2. retries exhausted: fail only the attributed request (`[seq:<id>]` in
+///    the error), or quarantine all in-flight when unattributed;
+/// 3. panic: quarantine the implicated sequences, repair bookkeeping
+///    (`recover_after_panic`), verify tree invariants;
+/// 4. invariants broken: full engine rebuild — drop all residency, fail
+///    every open stream, keep serving.
+fn run_step_supervised<R: ModelRunner>(
+    engine: &mut Engine<R>,
+    streams: &mut BTreeMap<u64, StreamState>,
+    shared: &ShardShared,
+    cfg: &GatewayConfig,
+    step_retries: &mut usize,
+) -> Vec<FinishedSeq> {
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        // Chaos site: panic in the stepper thread itself, outside the
+        // engine — proves supervision covers the whole closure.
+        if let Some(msg) = failpoint::fire("gateway.stepper") {
+            return Err(anyhow::anyhow!(msg));
+        }
+        engine.step()
+    }));
+    match outcome {
+        Ok(Ok(finished)) => {
+            *step_retries = 0;
+            finished
+        }
+        Ok(Err(e)) => {
+            let msg = e.to_string();
+            if *step_retries < cfg.step_retry_max {
+                *step_retries += 1;
+                shared.step_retries.fetch_add(1, Ordering::SeqCst);
+                if trace::armed() {
+                    trace::instant(
+                        "step_retry",
+                        "fault",
+                        0,
+                        vec![("attempt", step_retries.to_string()), ("error", msg.clone())],
+                    );
+                }
+                log::warn!(
+                    "engine step failed (retry {}/{}): {msg}",
+                    *step_retries,
+                    cfg.step_retry_max
+                );
+                thread::sleep(cfg.step_retry_backoff * *step_retries as u32);
+            } else {
+                *step_retries = 0;
+                if trace::armed() {
+                    trace::instant("step_failed", "fault", 0, vec![("error", msg.clone())]);
+                }
+                log::error!("engine step failed after retries, quarantining: {msg}");
+                let victims = match failpoint::seq_attribution(&msg) {
+                    Some(id) => vec![id],
+                    None => engine.inflight_ids(),
+                };
+                fail_requests(engine, streams, shared, &victims, FailReason::Error, &msg);
+                verify_or_rebuild(engine, streams, shared);
+            }
+            Vec::new()
+        }
+        Err(payload) => {
+            *step_retries = 0;
+            shared.engine_panics.fetch_add(1, Ordering::SeqCst);
+            let msg = panic_message(payload.as_ref());
+            if trace::armed() {
+                trace::instant("step_panic", "fault", 0, vec![("message", msg.clone())]);
+            }
+            log::error!("engine step panicked ({msg}); recovering");
+            let (orphans, finished) = engine.recover_after_panic();
+            let mut victims = orphans;
+            match failpoint::seq_attribution(&msg) {
+                Some(id) => {
+                    if !victims.contains(&id) {
+                        victims.push(id);
+                    }
+                }
+                None => {
+                    // Unattributed panic: quarantine conservatively —
+                    // every in-flight sequence may have been implicated.
+                    for id in engine.inflight_ids() {
+                        if !victims.contains(&id) {
+                            victims.push(id);
+                        }
+                    }
+                }
+            }
+            fail_requests(engine, streams, shared, &victims, FailReason::Panic, &msg);
+            verify_or_rebuild(engine, streams, shared);
+            finished
+        }
+    }
+}
+
+/// Extract a readable message from a panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Quarantine `victims`: release their engine residency and send each open
+/// stream a terminal SSE error.
+fn fail_requests<R: ModelRunner>(
+    engine: &mut Engine<R>,
+    streams: &mut BTreeMap<u64, StreamState>,
+    shared: &ShardShared,
+    victims: &[u64],
+    reason: FailReason,
+    msg: &str,
+) {
+    for &id in victims {
+        let cancelled = engine.cancel(id);
+        let released = engine.release(id).is_some();
+        let had_stream = match streams.remove(&id) {
+            Some(st) => {
+                let _ = st.events.send(TokenEvent::Error { message: msg.to_string() });
+                true
+            }
+            None => false,
+        };
+        if cancelled || released || had_stream {
+            shared.count_failure(reason);
+        }
+    }
+}
+
+/// Escalation: if the tree's invariants are broken after recovery, rebuild
+/// the engine's residency from scratch (dropping every in-flight request)
+/// and keep serving. The process never exits.
+fn verify_or_rebuild<R: ModelRunner>(
+    engine: &mut Engine<R>,
+    streams: &mut BTreeMap<u64, StreamState>,
+    shared: &ShardShared,
+) {
+    if let Err(e) = engine.tree().check_invariants() {
+        log::error!("prefix-tree invariants broken after recovery ({e}); full engine rebuild");
+        shared.engine_rebuilds.fetch_add(1, Ordering::SeqCst);
+        let dropped = engine.hard_reset();
+        for _ in &dropped {
+            shared.count_failure(FailReason::Rebuild);
+        }
+        for (_, st) in std::mem::take(streams) {
+            let _ = st.events.send(TokenEvent::Error {
+                message: "engine rebuilt after broken invariants; request dropped".to_string(),
+            });
+        }
+    }
+}
+
+/// Fail every stream whose deadline has passed: release engine residency
+/// (private chunks return to the pool) and send the terminal timeout event.
+fn enforce_deadlines<R: ModelRunner>(
+    engine: &mut Engine<R>,
+    streams: &mut BTreeMap<u64, StreamState>,
+    shared: &ShardShared,
+) {
+    let now = Instant::now();
+    let expired: Vec<u64> = streams
+        .iter()
+        .filter(|(_, st)| st.deadline.is_some_and(|d| now >= d))
+        .map(|(&id, _)| id)
+        .collect();
+    for id in expired {
+        engine.cancel(id);
+        engine.release(id);
+        if let Some(st) = streams.remove(&id) {
+            let _ = st.events.send(TokenEvent::Timeout);
+        }
+        shared.requests_timed_out.fetch_add(1, Ordering::SeqCst);
+        log::debug!("request {id} exceeded its deadline; residency released");
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_cmd<R: ModelRunner>(
+    shard: usize,
+    cmd: WorkerMsg,
+    engine: &mut Engine<R>,
+    streams: &mut BTreeMap<u64, StreamState>,
+    draining: &mut bool,
+    cfg: &GatewayConfig,
+    shared: &ShardShared,
+    step_ring: &VecDeque<StepRecord>,
+) {
+    match cmd {
+        WorkerMsg::Submit { mut request, events, deadline, rid } => {
+            if *draining {
+                let queued = engine.scheduler().queued();
+                let _ = events.send(TokenEvent::Rejected { queued, draining: true });
+                return;
+            }
+            request.arrival_s = engine.clock();
+            let id = request.id;
+            let prompt_tokens = request.prompt.len();
+            if engine.try_submit(request) {
+                streams.insert(id, StreamState { events, sent: 0, deadline, last_token_at: None });
+                if trace::armed() {
+                    trace::instant(
+                        "queued",
+                        "request",
+                        id,
+                        vec![("prompt_tokens", prompt_tokens.to_string())],
+                    );
+                }
+                match &rid {
+                    Some(r) => log::debug!(
+                        "request {id} rid={r}: queued on shard {shard} ({prompt_tokens} prompt tokens)"
+                    ),
+                    None => log::debug!(
+                        "request {id}: queued on shard {shard} ({prompt_tokens} prompt tokens)"
+                    ),
+                }
+            } else {
+                let queued = engine.scheduler().queued();
+                let _ = events.send(TokenEvent::Rejected { queued, draining: false });
+                log::debug!(
+                    "request {id}: rejected, shard {shard} admission queue full ({queued} queued)"
+                );
+            }
+        }
+        WorkerMsg::Cancel { id } => {
+            streams.remove(&id);
+            engine.cancel(id);
+            engine.release(id);
+            if trace::armed() {
+                trace::instant("cancelled", "request", id, vec![("why", "client".into())]);
+            }
+            log::debug!("request {id}: cancelled by client; residency released");
+        }
+        WorkerMsg::Scrape { reply } => {
+            let _ = reply.send(render_metrics(engine, streams.len(), &cfg.metrics_prefix, shared));
+        }
+        WorkerMsg::DebugSteps { reply } => {
+            let _ = reply.send(debug_steps_json(step_ring).pretty());
+        }
+        WorkerMsg::DebugTree { reply } => {
+            let _ = reply.send(debug_tree_json(engine).pretty());
+        }
+        WorkerMsg::Drain => *draining = true,
+    }
+}
+
+/// `/debug/steps` body: the ring of recent engine steps, newest last, with
+/// per-phase wall times in seconds.
+fn debug_steps_json(ring: &VecDeque<StepRecord>) -> Json {
+    let steps: Vec<Json> = ring
+        .iter()
+        .map(|r| {
+            let mut s = Json::obj();
+            s.set("seq", r.seq).set("ts_ms", r.ts_ms).set("total_s", r.timing.total_s);
+            let mut phases = Json::obj();
+            for (name, secs) in r.timing.phases() {
+                phases.set(name, secs);
+            }
+            s.set("phases", phases)
+                .set("decode_batch", r.timing.decode_batch)
+                .set("prefill_slices", r.timing.prefill_slices)
+                .set("admitted", r.timing.admitted)
+                .set("finished", r.timing.finished);
+            s
+        })
+        .collect();
+    let mut j = Json::obj();
+    j.set("count", steps.len()).set("capacity", STEP_RING_CAP).set("steps", steps);
+    j
+}
+
+/// `/debug/tree` body: a residency snapshot of the prefix tree — sharing
+/// ratios, shared-vs-private split of the live decode context, context-cache
+/// hit rate, pool occupancy, and per-pin retention residency.
+fn debug_tree_json<R: ModelRunner>(engine: &Engine<R>) -> Json {
+    let tree = engine.tree();
+    let stats = tree.sharing_stats();
+    let (rebuilds, hits) = tree.context_stats();
+    let pool = tree.pool();
+    let chunk_size = tree.shape().chunk_size.max(1);
+
+    let mut j = Json::obj();
+    j.set("sequences", tree.num_sequences())
+        .set("epoch", tree.epoch())
+        .set("generation", tree.generation());
+
+    let mut tokens = Json::obj();
+    tokens
+        .set("logical", stats.logical_tokens)
+        .set("physical", stats.physical_tokens)
+        .set("sharing_ratio", stats.sharing_ratio());
+    j.set("tokens", tokens);
+
+    let mut chunks = Json::obj();
+    chunks
+        .set("nodes", stats.chunks)
+        .set("in_use", pool.in_use())
+        .set("allocated", pool.allocated())
+        .set("in_use_bytes", pool.in_use_bytes())
+        .set("resident_bytes", pool.resident_bytes());
+    j.set("chunks", chunks);
+
+    // Deepest sequence in chunk hops — how long the phase-1 chunk-first
+    // walk is for the worst-case sequence.
+    let max_depth = tree
+        .sequence_ids()
+        .into_iter()
+        .filter_map(|s| tree.sequence_len(s))
+        .map(|len| len.div_ceil(chunk_size))
+        .max()
+        .unwrap_or(0);
+    j.set("max_chunk_depth", max_depth);
+
+    // Shared vs private split of the *current decode context*: a chunk is
+    // shared when its row interval covers more than one sequence (phase-1
+    // chunk-first work), private otherwise (phase-2 seq-first work).
+    let ctx = tree.context_fresh();
+    let mut shared_chunks = 0usize;
+    let mut private_chunks = 0usize;
+    let mut shared_tokens = 0usize;
+    let mut private_tokens = 0usize;
+    for e in ctx.shared() {
+        shared_chunks += 1;
+        shared_tokens += pool.get(e.chunk).len();
+    }
+    for e in ctx.private() {
+        private_chunks += 1;
+        private_tokens += pool.get(e.chunk).len();
+    }
+    let mut context = Json::obj();
+    context
+        .set("shared_chunks", shared_chunks)
+        .set("private_chunks", private_chunks)
+        .set("shared_tokens", shared_tokens)
+        .set("private_tokens", private_tokens)
+        .set("cache_rebuilds", rebuilds)
+        .set("cache_hits", hits)
+        .set("cache_hit_rate", if rebuilds + hits > 0 {
+            hits as f64 / (rebuilds + hits) as f64
+        } else {
+            0.0
+        });
+    j.set("context", context);
+
+    let mut retain = Json::obj();
+    match engine.retainer() {
+        Some(r) => {
+            retain
+                .set("enabled", true)
+                .set("budget_chunks", r.budget_chunks())
+                .set("pinned_count", r.pinned_count())
+                .set("pinned_tokens", r.pinned_tokens())
+                .set("evicted_pins_total", r.evicted_pins_total())
+                .set("evicted_chunks_total", r.evicted_chunks_total());
+            let pins: Vec<Json> = r
+                .pin_residency()
+                .into_iter()
+                .map(|(prefix_tokens, tokens, lru_age)| {
+                    let mut p = Json::obj();
+                    p.set("prefix_tokens", prefix_tokens)
+                        .set("tokens", tokens)
+                        .set("lru_age", lru_age);
+                    p
+                })
+                .collect();
+            retain.set("pins", pins);
+        }
+        None => {
+            retain.set("enabled", false);
+        }
+    }
+    j.set("retain", retain);
+    j
+}
+
+/// The per-shard `/metrics` document: the engine's request/step series plus
+/// shard liveness gauges (queue depth, admission rejections, chunk
+/// occupancy) and the supervisor's failure-domain counters. With N > 1
+/// shards the router aggregates N of these documents (cluster rollups plus
+/// `shard="N"` series); with one shard this document passes through
+/// byte-for-byte.
+fn render_metrics<R: ModelRunner>(
+    engine: &Engine<R>,
+    live_streams: usize,
+    prefix: &str,
+    shared: &ShardShared,
+) -> String {
+    let mut out = render_exposition(engine.metrics(), prefix);
+    // True Prometheus histograms (cumulative `le` buckets + _sum/_count):
+    // request latency distributions and per-phase step timing, so p50/p99
+    // are computable server-side instead of from client-side sampling.
+    let m = engine.metrics();
+    push_histogram(
+        &mut out,
+        prefix,
+        "ttft_seconds",
+        "time to first token (seconds), per finished request",
+        &m.ttft_seconds,
+    );
+    push_histogram(
+        &mut out,
+        prefix,
+        "inter_token_seconds",
+        "gap between consecutive streamed tokens of one request (seconds)",
+        &m.inter_token_seconds,
+    );
+    push_histogram(
+        &mut out,
+        prefix,
+        "step_duration_seconds",
+        "wall time of one engine step (seconds)",
+        &m.step_duration_seconds,
+    );
+    let phase_children: Vec<(Vec<(&str, String)>, &crate::util::stats::LogHistogram)> = m
+        .step_phases()
+        .map(|(phase, h)| (vec![("phase", phase.to_string())], h))
+        .collect();
+    push_histogram_family(
+        &mut out,
+        prefix,
+        "step_phase_seconds",
+        "wall time per engine-step phase (seconds); chunk_first/seq_first are the kernel's two partition phases",
+        &phase_children,
+    );
+    // Failure-domain observability: panic/rebuild/timeout/stall counters
+    // plus a live invariant probe, so chaos tests (and dashboards) can
+    // verify recovery from the outside.
+    push_gauge(
+        &mut out,
+        prefix,
+        "engine_panics_total",
+        "engine steps that panicked and were recovered by the supervisor",
+        shared.engine_panics.load(Ordering::SeqCst) as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "engine_rebuilds_total",
+        "full engine rebuilds after broken tree invariants",
+        shared.engine_rebuilds.load(Ordering::SeqCst) as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "requests_timed_out_total",
+        "requests terminated by their deadline_ms",
+        shared.requests_timed_out.load(Ordering::SeqCst) as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "watchdog_stalls_total",
+        "stepper stalls detected by the watchdog",
+        shared.watchdog_stalls.load(Ordering::SeqCst) as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "step_retries_total",
+        "engine step retries after transient errors",
+        shared.step_retries.load(Ordering::SeqCst) as f64,
+    );
+    let failed_rows: Vec<(Vec<(&str, String)>, f64)> = [
+        ("panic", shared.failed_panic.load(Ordering::SeqCst)),
+        ("error", shared.failed_error.load(Ordering::SeqCst)),
+        ("rebuild", shared.failed_rebuild.load(Ordering::SeqCst)),
+    ]
+    .iter()
+    .map(|(reason, n)| (vec![("reason", reason.to_string())], *n as f64))
+    .collect();
+    push_labeled_series(
+        &mut out,
+        prefix,
+        "requests_failed_total",
+        "requests terminated by the supervisor, by reason",
+        &failed_rows,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "tree_invariants_ok",
+        "1 while PrefixTree::check_invariants passes (0 = structural damage)",
+        if engine.tree().check_invariants().is_ok() { 1.0 } else { 0.0 },
+    );
+    let sched = engine.scheduler();
+    push_gauge(&mut out, prefix, "queue_depth", "requests waiting for admission", sched.queued() as f64);
+    push_gauge(
+        &mut out,
+        prefix,
+        "active_sequences",
+        "sequences in the decode batch",
+        sched.batch_size() as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "admission_rejections_total",
+        "requests rejected by admission control (HTTP 429)",
+        sched.admission_rejections() as f64,
+    );
+    push_gauge(&mut out, prefix, "live_streams", "connected SSE token streams", live_streams as f64);
+    // Chunked-prefill liveness: queue depth, slice throughput, and the
+    // configured per-step budget, so a dashboard can see interleaving
+    // (prefill_chunks_total advancing while decode_steps_total advances)
+    // and spot a starved prefill queue.
+    let stats = engine.stats();
+    push_gauge(
+        &mut out,
+        prefix,
+        "prefill_queue_depth",
+        "admitted requests whose prompts are still prefilling",
+        sched.prefill_depth() as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "prefill_chunks_total",
+        "prefill slices executed (one per prompt when monolithic)",
+        stats.prefill_chunks_total as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "prefill_deferrals_total",
+        "requests whose first slice deferred to an in-progress prefix-sharing leader",
+        stats.prefill_deferrals as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "decode_steps_total",
+        "batched decode steps executed",
+        stats.decode_steps as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "step_token_budget",
+        "configured per-step token budget (0 = unbounded)",
+        sched.step_token_budget().unwrap_or(0) as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "prefill_chunk_tokens",
+        "configured prefill slice granularity in tokens (0 = monolithic)",
+        if sched.prefill_chunk_tokens() == usize::MAX {
+            0.0
+        } else {
+            sched.prefill_chunk_tokens() as f64
+        },
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "chunks_in_use",
+        "KV chunks currently referenced by live sequences or pins",
+        engine.tree().pool().in_use() as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "chunks_allocated",
+        "KV chunks ever allocated by the pool",
+        engine.tree().pool().allocated() as f64,
+    );
+    // Byte-level KV accounting at the *actual* storage dtype (f16 halves
+    // these relative to f32), plus the dtype itself as an info gauge so
+    // dashboards can group byte series by format.
+    let pool = engine.tree().pool();
+    push_gauge(
+        &mut out,
+        prefix,
+        "kv_bytes_in_use",
+        "KV bytes referenced by live sequences or pins, at the storage dtype",
+        pool.in_use_bytes() as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "kv_bytes_resident",
+        "KV bytes ever allocated by the pool, at the storage dtype",
+        pool.resident_bytes() as f64,
+    );
+    push_labeled_gauge(
+        &mut out,
+        prefix,
+        "kv_dtype_info",
+        "active KV storage dtype (value is always 1)",
+        &[("dtype", engine.tree().shape().dtype.label())],
+        1.0,
+    );
+    // Kernel-path observability: which SIMD ISA the attention kernels
+    // dispatch to and how the thread pool is placed — bench runs grab
+    // these so recorded numbers say what they measured.
+    push_labeled_gauge(
+        &mut out,
+        prefix,
+        "simd_isa_info",
+        "active attention-kernel SIMD ISA path (value is always 1)",
+        &[("isa", crate::util::simd::active().label())],
+        1.0,
+    );
+    let placement = crate::util::threadpool::placement();
+    push_labeled_gauge(
+        &mut out,
+        prefix,
+        "pool_affinity_info",
+        "thread-pool core-affinity policy (value is always 1)",
+        &[("mode", crate::util::threadpool::affinity_mode())],
+        1.0,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "pool_workers",
+        "live thread-pool workers across the process",
+        placement.workers as f64,
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "pool_workers_pinned",
+        "live thread-pool workers successfully pinned to a core",
+        placement.pinned as f64,
+    );
+    // Scheduling-policy observability: the active policy as an info
+    // gauge, bounded-cardinality per-tenant fairness counters, and the
+    // amortized pin-eviction spend.
+    let planner = engine.planner();
+    push_labeled_gauge(
+        &mut out,
+        prefix,
+        "sched_policy_info",
+        "active admission-scheduling policy (value is always 1)",
+        &[("policy", planner.policy_kind().label())],
+        1.0,
+    );
+    let (tenants, overflow) = planner.tenant_counters();
+    let tenant_rows = |pick: fn(&crate::coordinator::TenantCounters) -> u64| {
+        let mut rows: Vec<(Vec<(&str, String)>, f64)> = tenants
+            .iter()
+            .map(|(t, c)| (vec![("tenant", t.to_string())], pick(c) as f64))
+            .collect();
+        let o = pick(overflow);
+        if o > 0 {
+            rows.push((vec![("tenant", "other".to_string())], o as f64));
+        }
+        rows
+    };
+    push_labeled_series(
+        &mut out,
+        prefix,
+        "tenant_admitted_total",
+        "requests admitted into the prefill queue, per tenant (bounded cardinality)",
+        &tenant_rows(|c| c.admitted),
+    );
+    push_labeled_series(
+        &mut out,
+        prefix,
+        "tenant_deferred_total",
+        "steps a tenant's queued request was passed over by a later arrival, per tenant",
+        &tenant_rows(|c| c.deferred),
+    );
+    push_labeled_series(
+        &mut out,
+        prefix,
+        "tenant_decode_tokens_total",
+        "decode tokens produced per tenant (bounded cardinality)",
+        &tenant_rows(|c| c.decode_tokens),
+    );
+    push_gauge(
+        &mut out,
+        prefix,
+        "decode_lag_max",
+        "highest consecutive decode-steps any sequence sat out under partial decode batches",
+        planner.max_decode_lag() as f64,
+    );
+    if let Some(retainer) = engine.retainer() {
+        push_gauge(
+            &mut out,
+            prefix,
+            "eviction_tokens_total",
+            "tokens charged for amortized pin eviction",
+            retainer.eviction_tokens_total() as f64,
+        );
+        push_gauge(
+            &mut out,
+            prefix,
+            "evicted_chunks_total",
+            "KV chunks returned to the pool by pin eviction",
+            retainer.evicted_chunks_total() as f64,
+        );
+        push_gauge(
+            &mut out,
+            prefix,
+            "retained_pins",
+            "prefixes currently pinned by the retainer",
+            retainer.pinned_count() as f64,
+        );
+    }
+    out
+}

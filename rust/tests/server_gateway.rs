@@ -47,11 +47,12 @@ fn engine(chunk: usize, max_batch: usize) -> Engine<SyntheticRunner> {
 }
 
 /// Base gateway config for the suite. CI runs the whole socket suite a
-/// second time with `CHUNKED_PREFILL_BUDGET` set and a third time with
-/// `SCHED_POLICY=drr` (see .github/workflows/ci.yml), so every e2e
-/// scenario — streaming, backpressure, cancellation, shutdown, bench —
-/// also exercises the interleaved chunked-prefill path and the
-/// non-default planner policies under the same watchdogs.
+/// second time with `CHUNKED_PREFILL_BUDGET` set, a third time with
+/// `SCHED_POLICY=drr`, and a fourth time with `SHARDS=2` (see
+/// .github/workflows/ci.yml), so every e2e scenario — streaming,
+/// backpressure, cancellation, shutdown, bench — also exercises the
+/// interleaved chunked-prefill path, the non-default planner policies,
+/// and the prefix-affinity router under the same watchdogs.
 fn base_cfg() -> GatewayConfig {
     let mut cfg = GatewayConfig::default();
     if let Ok(v) = std::env::var("CHUNKED_PREFILL_BUDGET") {
@@ -64,7 +65,17 @@ fn base_cfg() -> GatewayConfig {
         cfg.sched_policy = SchedPolicyKind::parse(&v)
             .expect("SCHED_POLICY must be prefix-greedy, drr or aging");
     }
+    if let Ok(v) = std::env::var("SHARDS") {
+        cfg.shards = v.parse().expect("SHARDS must be a shard count");
+    }
     cfg
+}
+
+/// Spawn a gateway honoring `cfg.shards`: every shard gets its own
+/// synthetic engine built from the same (chunk, max_batch) recipe, so the
+/// suite's admission and reuse scenarios hold per shard.
+fn start_gw(chunk: usize, max_batch: usize, cfg: GatewayConfig) -> Gateway {
+    Gateway::start_sharded(move |_| engine(chunk, max_batch), cfg).unwrap()
 }
 
 fn token_body(tokens: &[u32], shared: usize, max_new: usize) -> Json {
@@ -87,7 +98,7 @@ fn concurrent_clients_share_a_1024_token_prefix_and_stream_incrementally() {
             decode_interval: Duration::from_micros(500),
             ..base_cfg()
         };
-        let gw = Gateway::start(engine(64, 8), cfg).unwrap();
+        let gw = start_gw(64, 8, cfg);
         let addr = gw.addr().to_string();
         let system_prompt: Vec<u32> = (0..1024).collect();
 
@@ -155,18 +166,23 @@ fn f16_storage_more_than_halves_kv_bytes_for_the_shared_prefix_scenario() {
         // count is dtype-independent (storage format never changes tree
         // topology). Acceptance: f16 kv_bytes_in_use <= 55% of f32.
         let run = |dtype: KvDtype| -> (f64, String) {
-            let engine = Engine::with_dtype(
-                SyntheticRunner { heads_total: 2, head_dim: 8, vocab: 32000 },
-                64,
-                8,
-                dtype,
-            );
             let cfg = GatewayConfig {
                 retain_chunks: 10_000,
                 decode_interval: Duration::from_micros(200),
                 ..base_cfg()
             };
-            let gw = Gateway::start(engine, cfg).unwrap();
+            let gw = Gateway::start_sharded(
+                move |_| {
+                    Engine::with_dtype(
+                        SyntheticRunner { heads_total: 2, head_dim: 8, vocab: 32000 },
+                        64,
+                        8,
+                        dtype,
+                    )
+                },
+                cfg,
+            )
+            .unwrap();
             let addr = gw.addr().to_string();
             let system_prompt: Vec<u32> = (0..1024).collect();
             let mut clients = Vec::new();
@@ -216,30 +232,43 @@ fn f16_storage_more_than_halves_kv_bytes_for_the_shared_prefix_scenario() {
 fn admission_queue_overflow_returns_429() {
     with_watchdog(60, "backpressure_429", || {
         // One decode slot, one queue slot: the third in-flight request
-        // must bounce with 429.
+        // must bounce with 429. All three prompts share an identical
+        // 16-token first chunk (declared via shared_tokens), so under a
+        // multi-shard router they hash to the same shard and contend for
+        // the same admission queue — per-shard admission is the contract.
         let cfg = GatewayConfig {
             queue_cap: 1,
             decode_interval: Duration::from_millis(2),
             ..base_cfg()
         };
-        let gw = Gateway::start(engine(16, 1), cfg).unwrap();
+        let gw = start_gw(16, 1, cfg);
         let addr = gw.addr().to_string();
+        let prefix: Vec<u32> = (0..16).collect();
+        let prompt = |tail: [u32; 3]| -> Vec<u32> {
+            let mut p = prefix.clone();
+            p.extend(tail);
+            p
+        };
 
         // A: admitted; wait for its first token so it occupies the batch.
         // Its budget is long enough (2000 tok x 2 ms) that it stays active
         // until explicitly abandoned at the end of the test.
-        let mut a =
-            client::generate(&addr, &token_body(&[1, 2, 3], 0, 2000), Duration::from_secs(30))
-                .unwrap();
+        let mut a = client::generate(
+            &addr,
+            &token_body(&prompt([1, 2, 3]), 16, 2000),
+            Duration::from_secs(30),
+        )
+        .unwrap();
         assert_eq!(a.status(), 200);
         assert!(matches!(a.next_event().unwrap(), Some(StreamEvent::Token { .. })));
 
         // B: fills the single queue slot; its response head only arrives
         // once admitted, so run it on its own thread.
         let b_addr = addr.clone();
+        let b_prompt = prompt([4, 5, 6]);
         let b = thread::spawn(move || {
             let mut b =
-                client::generate(&b_addr, &token_body(&[4, 5, 6], 0, 4), Duration::from_secs(60))
+                client::generate(&b_addr, &token_body(&b_prompt, 16, 4), Duration::from_secs(60))
                     .unwrap();
             assert_eq!(b.status(), 200, "queued request eventually streams");
             while let Some(ev) = b.next_event().unwrap() {
@@ -260,8 +289,12 @@ fn admission_queue_overflow_returns_429() {
         }
 
         // C: queue is full -> 429 with a JSON error body.
-        let c = client::generate(&addr, &token_body(&[7, 8, 9], 0, 4), Duration::from_secs(30))
-            .unwrap();
+        let c = client::generate(
+            &addr,
+            &token_body(&prompt([7, 8, 9]), 16, 4),
+            Duration::from_secs(30),
+        )
+        .unwrap();
         assert_eq!(c.status(), 429, "{}", c.error_body);
         assert!(c.error_body.contains("queue"), "{}", c.error_body);
 
@@ -286,7 +319,7 @@ fn client_disconnect_releases_private_chunks_to_the_pinned_baseline() {
             decode_interval: Duration::from_millis(1),
             ..base_cfg()
         };
-        let gw = Gateway::start(engine(8, 4), cfg).unwrap();
+        let gw = start_gw(8, 4, cfg);
         let addr = gw.addr().to_string();
         let system_prompt: Vec<u32> = (0..64).collect();
 
@@ -341,7 +374,7 @@ fn client_disconnect_releases_private_chunks_to_the_pinned_baseline() {
 #[test]
 fn graceful_shutdown_drains_and_stops_accepting() {
     with_watchdog(60, "graceful_shutdown", || {
-        let gw = Gateway::start(engine(16, 4), base_cfg()).unwrap();
+        let gw = start_gw(16, 4, base_cfg());
         let addr = gw.addr().to_string();
         let health = client::get(&addr, "/healthz", Duration::from_secs(5)).unwrap();
         assert_eq!(health.status, 200);
@@ -585,7 +618,7 @@ fn metrics_expose_policy_info_and_per_tenant_counters() {
             decode_interval: Duration::from_micros(200),
             ..base_cfg()
         };
-        let gw = Gateway::start(engine(16, 4), cfg).unwrap();
+        let gw = start_gw(16, 4, cfg);
         let addr = gw.addr().to_string();
         for (tenant, tokens) in [(0u64, [1u32, 2, 3]), (7, [9, 9, 9])] {
             let mut body = token_body(&tokens, 0, 3);
@@ -633,7 +666,7 @@ fn bench_harness_round_trips_against_a_live_gateway() {
             decode_interval: Duration::from_micros(200),
             ..base_cfg()
         };
-        let gw = Gateway::start(engine(64, 8), cfg).unwrap();
+        let gw = start_gw(64, 8, cfg);
         let report = run_bench(&BenchConfig {
             addr: gw.addr().to_string(),
             clients: 4,
