@@ -49,9 +49,9 @@
 //!   what a prefix-aware cache *without* TPP costs, isolating the kernel
 //!   contribution from the memory-sharing contribution.
 
-use super::online::{attend_block, attn_reduce, OnlineState};
+use super::online::{attend_block_scaled, attn_reduce, OnlineState};
 use super::Queries;
-use crate::kvcache::{Bf16, CtxEntry, KvDtype, KvElem, PrefixTree, TreeContext, F16};
+use crate::kvcache::{Bf16, CtxEntry, KvDtype, KvElem, PrefixTree, TreeContext, F16, I8};
 use crate::util::threadpool::ThreadPool;
 use std::time::Instant;
 
@@ -109,6 +109,7 @@ pub fn tpp_attention(
         KvDtype::F32 => tpp_attention_impl::<f32>(tree, ctx, q, pool, scratch, out),
         KvDtype::F16 => tpp_attention_impl::<F16>(tree, ctx, q, pool, scratch, out),
         KvDtype::Bf16 => tpp_attention_impl::<Bf16>(tree, ctx, q, pool, scratch, out),
+        KvDtype::Int8 => tpp_attention_impl::<I8>(tree, ctx, q, pool, scratch, out),
     }
 }
 
@@ -158,12 +159,14 @@ fn tpp_attention_impl<E: KvElem>(
         for e in ctx.shared() {
             let chunk = tree.chunk(e.chunk);
             let rows = e.end - e.start;
-            attend_block(
+            attend_block_scaled(
                 &q_head[e.start * d..e.end * d],
                 rows,
                 d,
                 chunk.k_head::<E>(&shape, h),
+                chunk.k_head_scale(&shape, h),
                 chunk.v_head::<E>(&shape, h),
+                chunk.v_head_scale(&shape, h),
                 chunk.len(),
                 scale,
                 &mut OnlineState {
@@ -181,12 +184,14 @@ fn tpp_attention_impl<E: KvElem>(
         for e in ctx.private() {
             let chunk = tree.chunk(e.chunk);
             let r = e.start;
-            attend_block(
+            attend_block_scaled(
                 &q_head[r * d..(r + 1) * d],
                 1,
                 d,
                 chunk.k_head::<E>(&shape, h),
+                chunk.k_head_scale(&shape, h),
                 chunk.v_head::<E>(&shape, h),
+                chunk.v_head_scale(&shape, h),
                 chunk.len(),
                 scale,
                 &mut OnlineState {
@@ -329,6 +334,7 @@ pub fn tpp_attention_2d(
         KvDtype::F32 => tpp_attention_2d_impl::<f32>(tree, ctx, q, pool, scratch, out),
         KvDtype::F16 => tpp_attention_2d_impl::<F16>(tree, ctx, q, pool, scratch, out),
         KvDtype::Bf16 => tpp_attention_2d_impl::<Bf16>(tree, ctx, q, pool, scratch, out),
+        KvDtype::Int8 => tpp_attention_2d_impl::<I8>(tree, ctx, q, pool, scratch, out),
     }
 }
 
@@ -414,12 +420,14 @@ fn tpp_attention_2d_impl<E: KvElem>(
                     let chunk = tree.chunk(e.chunk);
                     let rel = e.start - run.row_lo;
                     let rows = e.end - e.start;
-                    attend_block(
+                    attend_block_scaled(
                         &q_head[e.start * d..e.end * d],
                         rows,
                         d,
                         chunk.k_head::<E>(&shape, h),
+                        chunk.k_head_scale(&shape, h),
                         chunk.v_head::<E>(&shape, h),
+                        chunk.v_head_scale(&shape, h),
                         chunk.len(),
                         scale,
                         &mut OnlineState {
@@ -470,12 +478,14 @@ fn tpp_attention_2d_impl<E: KvElem>(
         with_wbuf(c, |w| {
             for e in &private[private_row_ptr[r]..private_row_ptr[r + 1]] {
                 let chunk = tree.chunk(e.chunk);
-                attend_block(
+                attend_block_scaled(
                     &q_head[r * d..(r + 1) * d],
                     1,
                     d,
                     chunk.k_head::<E>(&shape, h),
+                    chunk.k_head_scale(&shape, h),
                     chunk.v_head::<E>(&shape, h),
+                    chunk.v_head_scale(&shape, h),
                     chunk.len(),
                     scale,
                     &mut OnlineState {
@@ -515,6 +525,7 @@ pub fn tpp_attention_buffered(
         KvDtype::F32 => tpp_attention_buffered_impl::<f32>(tree, ctx, q, out),
         KvDtype::F16 => tpp_attention_buffered_impl::<F16>(tree, ctx, q, out),
         KvDtype::Bf16 => tpp_attention_buffered_impl::<Bf16>(tree, ctx, q, out),
+        KvDtype::Int8 => tpp_attention_buffered_impl::<I8>(tree, ctx, q, out),
     }
 }
 
@@ -555,12 +566,14 @@ fn tpp_attention_buffered_impl<E: KvElem>(
             let chunk = tree.chunk(e.chunk);
             let rows = e.end - e.start;
             let off = offsets[ci];
-            attend_block(
+            attend_block_scaled(
                 &q_head[e.start * d..e.end * d],
                 rows,
                 d,
                 chunk.k_head::<E>(&shape, h),
+                chunk.k_head_scale(&shape, h),
                 chunk.v_head::<E>(&shape, h),
+                chunk.v_head_scale(&shape, h),
                 chunk.len(),
                 scale,
                 &mut OnlineState {
@@ -601,12 +614,14 @@ fn tpp_attention_buffered_impl<E: KvElem>(
                 }
                 let chunk = tree.chunk(e.chunk);
                 let (o_lo, o_hi) = (o_base, o_base + d);
-                attend_block(
+                attend_block_scaled(
                     &q_head[r * d..(r + 1) * d],
                     1,
                     d,
                     chunk.k_head::<E>(&shape, h),
+                    chunk.k_head_scale(&shape, h),
                     chunk.v_head::<E>(&shape, h),
+                    chunk.v_head_scale(&shape, h),
                     chunk.len(),
                     scale,
                     &mut OnlineState {
@@ -642,6 +657,7 @@ pub fn tpp_attention_seq_only(
         KvDtype::F32 => tpp_attention_seq_only_impl::<f32>(tree, ctx, q, scratch, out),
         KvDtype::F16 => tpp_attention_seq_only_impl::<F16>(tree, ctx, q, scratch, out),
         KvDtype::Bf16 => tpp_attention_seq_only_impl::<Bf16>(tree, ctx, q, scratch, out),
+        KvDtype::Int8 => tpp_attention_seq_only_impl::<I8>(tree, ctx, q, scratch, out),
     }
 }
 
@@ -671,12 +687,14 @@ fn tpp_attention_seq_only_impl<E: KvElem>(
             // One row at a time — no batching, so shared chunks are
             // re-read (end - start) times.
             for r in e.start..e.end {
-                attend_block(
+                attend_block_scaled(
                     &q_head[r * d..(r + 1) * d],
                     1,
                     d,
                     chunk.k_head::<E>(&shape, h),
+                    chunk.k_head_scale(&shape, h),
                     chunk.v_head::<E>(&shape, h),
+                    chunk.v_head_scale(&shape, h),
                     chunk.len(),
                     scale,
                     &mut OnlineState {
@@ -763,8 +781,10 @@ mod tests {
     fn all_variants_agree_with_oracle_at_half_precision() {
         // The oracle gathers the *stored* (already quantised) rows and
         // widens them, so the kernel-vs-oracle tolerance is set by f32
-        // accumulation, not by the storage dtype.
-        for dtype in [KvDtype::F16, KvDtype::Bf16] {
+        // accumulation, not by the storage dtype — int8 included: the
+        // oracle's read_f32 dequantizes with the same exact
+        // convert-and-multiply the kernel's widening load uses.
+        for dtype in [KvDtype::F16, KvDtype::Bf16, KvDtype::Int8] {
             let shape = KvShape::new(2, 8, 4).with_dtype(dtype);
             let mut tree = build_tree(shape, 5);
             let ctx = tree.context();

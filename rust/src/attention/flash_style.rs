@@ -9,9 +9,9 @@
 //! two-pass structure faithfully rather than quietly optimising it away.
 //! K/V may be stored at any [`crate::kvcache::KvDtype`]; partials are f32.
 
-use super::online::{attend_block, OnlineState};
+use super::online::{attend_block_scaled, OnlineState};
 use super::{out_row, Queries};
-use crate::kvcache::{Bf16, KvDtype, KvElem, MonolithicKvCache, SeqId, F16};
+use crate::kvcache::{Bf16, KvDtype, KvElem, MonolithicKvCache, SeqId, F16, I8};
 
 /// Output layout `[heads, batch, head_dim]`, rows in `order`.
 /// `tile` is the KV tile length (FlashAttention uses 64/128-row tiles).
@@ -26,6 +26,7 @@ pub fn flash_style_attention(
         KvDtype::F32 => flash_impl::<f32>(cache, order, q, tile, out),
         KvDtype::F16 => flash_impl::<F16>(cache, order, q, tile, out),
         KvDtype::Bf16 => flash_impl::<Bf16>(cache, order, q, tile, out),
+        KvDtype::Int8 => flash_impl::<I8>(cache, order, q, tile, out),
     }
 }
 
@@ -60,6 +61,8 @@ fn flash_impl<E: KvElem>(
             let n = s.len;
             let k = s.k_head::<E>(&shape, h);
             let v = s.v_head::<E>(&shape, h);
+            let k_scale = s.k_head_scale(&shape, h);
+            let v_scale = s.v_head_scale(&shape, h);
             let q_row = q.row(h, row);
             let ntiles = n.div_ceil(tile);
             // Pass 1: independent partials per tile.
@@ -70,12 +73,14 @@ fn flash_impl<E: KvElem>(
                 let o_tile = &mut part_o[ti * d..(ti + 1) * d];
                 let mut state = OnlineState { m: &mut m1, n: &mut n1, o: o_tile, head_dim: d };
                 state.reset();
-                attend_block(
+                attend_block_scaled(
                     q_row,
                     1,
                     d,
                     &k[start * d..(start + len) * d],
+                    k_scale,
                     &v[start * d..(start + len) * d],
+                    v_scale,
                     len,
                     scale,
                     &mut state,

@@ -6,7 +6,7 @@
 
 use super::online::{axpy_kv, dot_kv};
 use super::{out_row, Queries};
-use crate::kvcache::{Bf16, KvDtype, KvElem, MonolithicKvCache, SeqId, F16};
+use crate::kvcache::{Bf16, KvDtype, KvElem, MonolithicKvCache, SeqId, F16, I8};
 
 /// Output layout `[heads, batch, head_dim]`, rows in `order`.
 pub fn naive_attention(cache: &MonolithicKvCache, order: &[SeqId], q: &Queries, out: &mut [f32]) {
@@ -14,6 +14,7 @@ pub fn naive_attention(cache: &MonolithicKvCache, order: &[SeqId], q: &Queries, 
         KvDtype::F32 => naive_attention_impl::<f32>(cache, order, q, out),
         KvDtype::F16 => naive_attention_impl::<F16>(cache, order, q, out),
         KvDtype::Bf16 => naive_attention_impl::<Bf16>(cache, order, q, out),
+        KvDtype::Int8 => naive_attention_impl::<I8>(cache, order, q, out),
     }
 }
 
@@ -42,11 +43,17 @@ fn naive_attention_impl<E: KvElem>(
             let n = s.len;
             let k = s.k_head::<E>(&shape, h);
             let v = s.v_head::<E>(&shape, h);
+            // Int8 stores unscaled quantised codes; folding the per-head
+            // dequant scale into the logit (and the softmax weight, below)
+            // is mathematically identical to dequantising each row first.
+            // Float dtypes report 1.0, and `x * 1.0` is a bitwise no-op.
+            let k_scale = s.k_head_scale(&shape, h);
+            let v_scale = s.v_head_scale(&shape, h);
             let q_row = q.row(h, row);
             // Materialised weights (the "naive" part: no online softmax).
             let mut m = f32::NEG_INFINITY;
             for t in 0..n {
-                let x = dot_kv(q_row, &k[t * d..(t + 1) * d]) * scale;
+                let x = dot_kv(q_row, &k[t * d..(t + 1) * d]) * k_scale * scale;
                 w[t] = x;
                 m = m.max(x);
             }
@@ -59,7 +66,7 @@ fn naive_attention_impl<E: KvElem>(
             let o = out_row(out, q.heads, q.batch, d, h, row);
             o.fill(0.0);
             for t in 0..n {
-                axpy_kv(w[t], &v[t * d..(t + 1) * d], o);
+                axpy_kv(w[t] * v_scale, &v[t * d..(t + 1) * d], o);
             }
             let inv = 1.0 / norm;
             for x in o.iter_mut() {

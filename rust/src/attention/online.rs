@@ -28,7 +28,7 @@
 //! so `PALLAS_SIMD=scalar` and the cross-ISA tests can hold outputs to
 //! `assert_eq!` rather than tolerances.
 
-use crate::kvcache::KvElem;
+use crate::kvcache::{KvDtype, KvElem};
 use crate::util::simd;
 use std::cell::RefCell;
 
@@ -89,12 +89,70 @@ pub fn attend_block<E: KvElem>(
     debug_assert!(k.len() >= len * d && v.len() >= len * d);
     debug_assert!(w.len() >= len);
     debug_assert_eq!(state.head_dim, d);
+    // Int8 storage must come through `attend_block_scaled` — the raw
+    // quantized integers are meaningless without their group scales.
+    debug_assert!(E::DTYPE != KvDtype::Int8, "int8 blocks require attend_block_scaled");
     let isa = simd::active();
     if isa.is_accelerated() {
         attend_block_widened::<E>(isa, q, rows, d, k, v, len, scale, state, w);
     } else {
         attend_block_scalar::<E>(q, rows, d, k, v, len, scale, state, w);
     }
+}
+
+/// [`attend_block`] with per-block dequantization scales for quantized
+/// storage. `k_scale`/`v_scale` are the owning slab's group scales for this
+/// K/V block (one group per head, so a `[len, d]` head-major block has a
+/// single scale each); float dtypes pass 1.0 and take the unscaled path
+/// unchanged.
+///
+/// The int8 path *always* pre-widens the block — `dst = (q as f32) ·
+/// scale` via [`simd::widen_i8`] — and then runs the f32 bodies, on every
+/// ISA including scalar. That makes the dequantization a single-rounding
+/// elementwise map (exact int→f32 convert, one f32 multiply), identical at
+/// any vector width, so the bit-identity policy holds for int8 exactly as
+/// for f16/bf16: the scalar widen + scalar f32 kernel is the oracle, and
+/// every accelerated path must reproduce it bit for bit.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn attend_block_scaled<E: KvElem>(
+    q: &[f32],
+    rows: usize,
+    d: usize,
+    k: &[E],
+    k_scale: f32,
+    v: &[E],
+    v_scale: f32,
+    len: usize,
+    scale: f32,
+    state: &mut OnlineState<'_>,
+    w: &mut [f32],
+) {
+    if E::DTYPE == KvDtype::Int8 {
+        debug_assert!(q.len() >= rows * d);
+        debug_assert!(k.len() >= len * d && v.len() >= len * d);
+        debug_assert!(w.len() >= len);
+        debug_assert_eq!(state.head_dim, d);
+        let kq = E::as_i8(&k[..len * d]).expect("int8 dtype exposes an i8 view");
+        let vq = E::as_i8(&v[..len * d]).expect("int8 dtype exposes an i8 view");
+        let isa = simd::active();
+        with_wide_buf(2 * len * d, |buf| {
+            let (kw, vw) = buf.split_at_mut(len * d);
+            simd::widen_i8(isa, kq, k_scale, kw);
+            simd::widen_i8(isa, vq, v_scale, vw);
+            if isa.is_accelerated() {
+                attend_block_f32(isa, q, rows, d, kw, vw, len, scale, state, w);
+            } else {
+                attend_block_scalar::<f32>(q, rows, d, kw, vw, len, scale, state, w);
+            }
+        });
+        return;
+    }
+    debug_assert!(
+        k_scale == 1.0 && v_scale == 1.0,
+        "dequant scales only apply to int8 storage"
+    );
+    attend_block::<E>(q, rows, d, k, v, len, scale, state, w);
 }
 
 /// Generic scalar body — the bit-identity oracle every SIMD path must
@@ -871,7 +929,7 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kvcache::{Bf16, F16};
+    use crate::kvcache::{quantize_i8, Bf16, F16, I8};
 
     fn softmax_attn_ref(q: &[f32], k: &[f32], v: &[f32], len: usize, d: usize) -> Vec<f32> {
         // f64 dense reference for one row.
@@ -1117,6 +1175,104 @@ mod tests {
             attend_block(&q, rows, d, &kb, &vb, len, scale, &mut state, &mut w);
             state.finish();
             assert_eq!(o, expect_b, "bf16 kernel d={d} must match widened-f32 kernel exactly");
+        }
+    }
+
+    fn quantize_block(x: &[f32]) -> (Vec<I8>, f32) {
+        let max_abs = x.iter().fold(0f32, |m, v| m.max(v.abs()));
+        let scale = max_abs / 127.0;
+        (x.iter().map(|&v| I8(quantize_i8(v, scale))).collect(), scale)
+    }
+
+    /// The int8 kernel must equal the f32 kernel run on the dequantized
+    /// values exactly: dequantization happens once at the load seam
+    /// (`widen_i8` — exact convert + one multiply), then the arithmetic is
+    /// identical — the int8 analogue of the half-precision contract above.
+    #[test]
+    fn int8_blocks_equal_f32_on_dequantized_values() {
+        for &d in &[24usize, 64, 128] {
+            let (len, rows) = (40, 21);
+            let q = rand_vec(420 + d as u64, rows * d);
+            let k = rand_vec(520 + d as u64, len * d);
+            let v = rand_vec(620 + d as u64, len * d);
+            let scale = 1.0 / (d as f32).sqrt();
+
+            let (kq, k_scale) = quantize_block(&k);
+            let (vq, v_scale) = quantize_block(&v);
+            let deq_k: Vec<f32> = kq.iter().map(|x| x.0 as f32 * k_scale).collect();
+            let deq_v: Vec<f32> = vq.iter().map(|x| x.0 as f32 * v_scale).collect();
+
+            let (mut m, mut n, mut o) =
+                (vec![0.0f32; rows], vec![0.0f32; rows], vec![0.0f32; rows * d]);
+            let mut state = OnlineState { m: &mut m, n: &mut n, o: &mut o, head_dim: d };
+            state.reset();
+            let mut w = vec![0.0f32; len];
+            attend_block(&q, rows, d, &deq_k, &deq_v, len, scale, &mut state, &mut w);
+            state.finish();
+            let expect = o.clone();
+
+            let (mut m, mut n, mut o) =
+                (vec![0.0f32; rows], vec![0.0f32; rows], vec![0.0f32; rows * d]);
+            let mut state = OnlineState { m: &mut m, n: &mut n, o: &mut o, head_dim: d };
+            state.reset();
+            attend_block_scaled(
+                &q, rows, d, &kq, k_scale, &vq, v_scale, len, scale, &mut state, &mut w,
+            );
+            state.finish();
+            assert_eq!(o, expect, "int8 kernel d={d} must match dequantized-f32 kernel exactly");
+        }
+    }
+
+    /// Every available ISA reproduces the scalar int8 path (scalar widen +
+    /// scalar f32 kernel) bit for bit — the int8 leg of
+    /// `simd_paths_match_scalar_bitwise`.
+    #[test]
+    fn int8_simd_paths_match_scalar_bitwise() {
+        use crate::util::simd;
+        let _serial = simd::force_lock();
+
+        fn run(
+            q: &[f32],
+            rows: usize,
+            d: usize,
+            k: &[I8],
+            ks: f32,
+            v: &[I8],
+            vs: f32,
+            len: usize,
+        ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+            let scale = 1.0 / (d as f32).sqrt();
+            let (mut m, mut n, mut o) =
+                (vec![0.0f32; rows], vec![0.0f32; rows], vec![0.0f32; rows * d]);
+            let mut state = OnlineState { m: &mut m, n: &mut n, o: &mut o, head_dim: d };
+            state.reset();
+            let mut w = vec![0.0f32; len];
+            attend_block_scaled(q, rows, d, k, ks, v, vs, len, scale, &mut state, &mut w);
+            state.finish();
+            (m, n, o)
+        }
+
+        for &(d, len, rows) in
+            &[(24usize, 43usize, 21usize), (64, 43, 21), (128, 43, 9), (24, 600, 13)]
+        {
+            let q = rand_vec(710 + d as u64 + len as u64, rows * d);
+            let k = rand_vec(810 + d as u64 + len as u64, len * d);
+            let v = rand_vec(910 + d as u64 + len as u64, len * d);
+            let (kq, ks) = quantize_block(&k);
+            let (vq, vs) = quantize_block(&v);
+
+            simd::force(Some(simd::SimdIsa::Scalar));
+            let base = run(&q, rows, d, &kq, ks, &vq, vs, len);
+            for isa in simd::available() {
+                simd::force(Some(isa));
+                assert_eq!(
+                    run(&q, rows, d, &kq, ks, &vq, vs, len),
+                    base,
+                    "{} int8 d={d} len={len}",
+                    isa.label()
+                );
+            }
+            simd::force(None);
         }
     }
 

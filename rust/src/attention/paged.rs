@@ -12,9 +12,9 @@
 //! Pages may be stored at any [`crate::kvcache::KvDtype`]; the kernel
 //! dispatches once per call and widens rows to f32 at load.
 
-use super::online::{attend_block, OnlineState};
+use super::online::{attend_block_scaled, OnlineState};
 use super::{out_row, Queries};
-use crate::kvcache::{Bf16, KvDtype, KvElem, PagedKvCache, SeqId, F16};
+use crate::kvcache::{Bf16, KvDtype, KvElem, PagedKvCache, SeqId, F16, I8};
 
 /// Output layout `[heads, batch, head_dim]`, rows in `order`.
 pub fn paged_attention(cache: &PagedKvCache, order: &[SeqId], q: &Queries, out: &mut [f32]) {
@@ -22,6 +22,7 @@ pub fn paged_attention(cache: &PagedKvCache, order: &[SeqId], q: &Queries, out: 
         KvDtype::F32 => paged_attention_impl::<f32>(cache, order, q, out),
         KvDtype::F16 => paged_attention_impl::<F16>(cache, order, q, out),
         KvDtype::Bf16 => paged_attention_impl::<Bf16>(cache, order, q, out),
+        KvDtype::Int8 => paged_attention_impl::<I8>(cache, order, q, out),
     }
 }
 
@@ -52,7 +53,21 @@ fn paged_attention_impl<E: KvElem>(
                 let len = page.min(n - start);
                 let k = cache.page_k_head::<E>(pid, h);
                 let v = cache.page_v_head::<E>(pid, h);
-                attend_block(q.row(h, row), 1, d, k, v, len, scale, &mut state, &mut w);
+                let ks = cache.page_k_head_scale(pid, h);
+                let vs = cache.page_v_head_scale(pid, h);
+                attend_block_scaled(
+                    q.row(h, row),
+                    1,
+                    d,
+                    k,
+                    ks,
+                    v,
+                    vs,
+                    len,
+                    scale,
+                    &mut state,
+                    &mut w,
+                );
             }
             state.finish();
         }

@@ -4,9 +4,9 @@
 //! vector is materialised. Still per-sequence and prefix-agnostic; K/V may
 //! be stored at any [`crate::kvcache::KvDtype`].
 
-use super::online::{attend_block, OnlineState};
+use super::online::{attend_block_scaled, OnlineState};
 use super::{out_row, Queries};
-use crate::kvcache::{Bf16, KvDtype, KvElem, MonolithicKvCache, SeqId, F16};
+use crate::kvcache::{Bf16, KvDtype, KvElem, MonolithicKvCache, SeqId, F16, I8};
 
 /// Output layout `[heads, batch, head_dim]`, rows in `order`.
 /// `block` is the KV tile length (xformers uses 32/64 key blocks).
@@ -21,6 +21,7 @@ pub fn xformers_style_attention(
         KvDtype::F32 => xformers_impl::<f32>(cache, order, q, block, out),
         KvDtype::F16 => xformers_impl::<F16>(cache, order, q, block, out),
         KvDtype::Bf16 => xformers_impl::<Bf16>(cache, order, q, block, out),
+        KvDtype::Int8 => xformers_impl::<I8>(cache, order, q, block, out),
     }
 }
 
@@ -46,18 +47,22 @@ fn xformers_impl<E: KvElem>(
             let n = s.len;
             let k = s.k_head::<E>(&shape, h);
             let v = s.v_head::<E>(&shape, h);
+            let k_scale = s.k_head_scale(&shape, h);
+            let v_scale = s.v_head_scale(&shape, h);
             let o = out_row(out, q.heads, q.batch, d, h, row);
             let mut state = OnlineState { m: &mut m1, n: &mut n1, o, head_dim: d };
             state.reset();
             let mut t = 0;
             while t < n {
                 let len = block.min(n - t);
-                attend_block(
+                attend_block_scaled(
                     q.row(h, row),
                     1,
                     d,
                     &k[t * d..(t + len) * d],
+                    k_scale,
                     &v[t * d..(t + len) * d],
+                    v_scale,
                     len,
                     scale,
                     &mut state,

@@ -26,7 +26,9 @@
 use super::planner::{PlanInputs, PlannerConfig, SchedPolicyKind, StepPlan, StepPlanner};
 use super::scheduler::{FinishedSeq, PrefillingSeq, Removed, Scheduler};
 use crate::kvcache::tree::common_prefix;
-use crate::kvcache::{KvDtype, KvShape, PrefixRetainer, PrefixTree, SeqId, TreeContext, PIN_ID_BASE};
+use crate::kvcache::{
+    KvDtype, KvShape, PrefixRetainer, PrefixTree, SeqId, TieringConfig, TreeContext, PIN_ID_BASE,
+};
 use crate::metrics::{MetricsRecorder, RequestRecord, StepTiming};
 use crate::util::trace;
 use crate::workload::Request;
@@ -235,6 +237,17 @@ impl<R: ModelRunner> Engine<R> {
         self.retainer = Some(PrefixRetainer::new(budget_chunks));
     }
 
+    /// Tier cold retained prefixes: int8 re-narrow past `demote_after`
+    /// LRU ticks, spill file past `spill_after` (see
+    /// [`crate::kvcache::TieringConfig`]). Requires retention to be
+    /// enabled first; a promoted prefix rejoins the tree *before* prefix
+    /// matching at admission, so kernels only ever see hot chunks.
+    pub fn set_retention_tiering(&mut self, cfg: TieringConfig) {
+        if let Some(r) = &mut self.retainer {
+            r.set_tiering(cfg);
+        }
+    }
+
     /// Enable chunked prefill: unmatched prompt suffixes advance in
     /// `chunk_tokens`-sized slices interleaved with decode steps, and each
     /// engine step spends at most `step_budget` tokens across prefill
@@ -409,7 +422,9 @@ impl<R: ModelRunner> Engine<R> {
         self.ctx_cache = None;
         self.ctx_generation = 0;
         if let Some(r) = &self.retainer {
-            self.retainer = Some(PrefixRetainer::new(r.budget_chunks()));
+            let mut fresh = PrefixRetainer::new(r.budget_chunks());
+            fresh.set_tiering(r.tiering().clone());
+            self.retainer = Some(fresh);
         }
         dropped
     }
@@ -419,13 +434,14 @@ impl<R: ModelRunner> Engine<R> {
     }
 
     /// Whether an idle engine still has amortized maintenance to do
-    /// (pinned prefixes over the retention budget). Idle drivers (the
-    /// gateway stepper) keep calling [`Engine::step`] while this holds so
-    /// the eviction credit keeps accruing between requests.
+    /// (pinned prefixes over the retention budget, or pins cold enough to
+    /// demote/spill). Idle drivers (the gateway stepper) keep calling
+    /// [`Engine::step`] while this holds so the eviction credit keeps
+    /// accruing — and cold prefixes keep tiering down — between requests.
     pub fn needs_maintenance(&self) -> bool {
         self.retainer
             .as_ref()
-            .map(|r| r.over_budget(&self.tree))
+            .map(|r| r.over_budget(&self.tree) || r.tiering_pending())
             .unwrap_or(false)
     }
 
@@ -500,6 +516,22 @@ impl<R: ModelRunner> Engine<R> {
         // step budget the grant is unbounded — the historical burst.
         let t = Instant::now();
         if let Some(retainer) = &mut self.retainer {
+            // Tiering runs before budget eviction: a demotion frees the
+            // same chunks an eviction would, but keeps the prefix
+            // promotable. The active-prompt snapshot guards any pin a
+            // live sequence's tree context still depends on; it is built
+            // only when a pin is actually cold (tiering_pending), so the
+            // common hot step pays one O(pins) scan at most.
+            if retainer.tiering_pending() {
+                let mut active: Vec<Vec<u32>> = self
+                    .sched
+                    .prefilling()
+                    .iter()
+                    .map(|p| p.request.prompt.clone())
+                    .collect();
+                active.extend(self.sched.active().iter().map(|a| a.request.prompt.clone()));
+                retainer.run_tiering(&mut self.tree, &active);
+            }
             let grant = if self.sched.step_token_budget().is_none() {
                 usize::MAX
             } else {
@@ -589,6 +621,14 @@ impl<R: ModelRunner> Engine<R> {
                 let prompt_len = pf.request.prompt.len();
                 let first_slice = pf.filled == 0;
                 let (start, matched) = if first_slice {
+                    // Promote any demoted/spilled pinned prefix of this
+                    // prompt back into the tree *before* the lookup: the
+                    // dequantized rows must be resident for match_prefix
+                    // to see them, and the kernel must never be handed a
+                    // quantized-at-rest copy.
+                    if let Some(retainer) = &mut self.retainer {
+                        retainer.promote_for_prompt(&mut self.tree, &pf.request.prompt);
+                    }
                     // First slice: prefix lookup against everything
                     // resident right now — including slices leaders have
                     // produced earlier in this very step. Never match the
@@ -1304,6 +1344,97 @@ mod tests {
         }
         assert!(e.tree().pool().in_use() <= 5, "LRU eviction keeps the pool bounded");
         e.tree().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn promoted_prefix_restores_the_cache_hit_at_admission() {
+        let mut e = engine();
+        e.enable_prefix_retention(1000);
+        e.set_retention_tiering(TieringConfig {
+            demote_after: 1,
+            spill_after: 0,
+            spill_dir: None,
+        });
+        let sys: Vec<u32> = (0..16).collect();
+        let mut p1 = sys.clone();
+        p1.extend([100, 101]);
+        e.submit(Request { shared_tokens: 16, ..request(0, p1, 2) });
+        e.run_to_completion().unwrap();
+        // Unrelated traffic ages the pin; the maintenance pass demotes it.
+        e.submit(request(1, vec![500, 501, 502], 1));
+        e.run_to_completion().unwrap();
+        assert_eq!(e.retainer().unwrap().demotions_total(), 1);
+        assert_eq!(e.tree().pool().in_use(), 0, "demoted prefix left the tree");
+        let reused_before = e.stats().prefill_tokens_reused;
+        // A prompt carrying the prefix promotes it back before matching.
+        let mut p2 = sys.clone();
+        p2.extend([200, 201]);
+        e.submit(Request { shared_tokens: 16, ..request(2, p2, 2) });
+        e.run_to_completion().unwrap();
+        assert_eq!(e.retainer().unwrap().promotions_total(), 1);
+        assert_eq!(
+            e.stats().prefill_tokens_reused - reused_before,
+            16,
+            "promoted prefix is a full cache hit at admission"
+        );
+        e.tree().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn decode_racing_tiering_never_demotes_an_inflight_prefix() {
+        // The same workload with and without tiering: the in-flight guard
+        // must keep the decoder's pinned prefix hot for its whole
+        // lifetime, so the completions are identical and the demotion
+        // only lands once the sequence has retired.
+        let run = |tiered: bool| -> Vec<u32> {
+            let mut e = engine();
+            e.enable_prefix_retention(1000);
+            if tiered {
+                e.set_retention_tiering(TieringConfig {
+                    demote_after: 1,
+                    spill_after: 0,
+                    spill_dir: None,
+                });
+            }
+            let sys: Vec<u32> = (0..16).collect();
+            let mut p0 = sys.clone();
+            p0.push(100);
+            e.submit(Request { shared_tokens: 16, ..request(0, p0, 1) });
+            e.run_to_completion().unwrap();
+            // A long decoder over the pinned prefix...
+            let mut pa = sys.clone();
+            pa.push(200);
+            e.submit(Request { shared_tokens: 16, ..request(1, pa, 24) });
+            // ...racing one-shot prompts whose admissions tick the
+            // retainer clock past the demote threshold every step.
+            let mut next_id = 2u64;
+            for _ in 0..400 {
+                if e.completion_of(1).map(|c| c.len() >= 24).unwrap_or(false) {
+                    break;
+                }
+                e.submit(request(next_id, vec![900 + next_id as u32, 901, 902], 1));
+                next_id += 1;
+                e.step().unwrap();
+                if tiered && e.scheduler().active().iter().any(|a| a.request.id == 1) {
+                    assert_eq!(
+                        e.retainer().unwrap().demotions_total(),
+                        0,
+                        "a prefix under a live decode must not demote mid-step"
+                    );
+                }
+            }
+            assert_eq!(e.completion_of(1).unwrap().len(), 24, "decoder finished");
+            e.run_to_completion().unwrap();
+            if tiered {
+                assert!(
+                    e.retainer().unwrap().demotions_total() >= 1,
+                    "once the decoder retires, the cold pin demotes"
+                );
+            }
+            e.tree().check_invariants().unwrap();
+            e.completion_of(1).unwrap().to_vec()
+        };
+        assert_eq!(run(true), run(false), "tiering never perturbs an in-flight decode");
     }
 
     #[test]

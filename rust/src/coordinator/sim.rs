@@ -63,6 +63,11 @@ pub struct SimConfig {
     /// re-run per policy. The default degenerates to FCFS on single-
     /// tenant traces (all scores tie).
     pub policy: SchedPolicyKind,
+    /// Storage dtype the token accounting prices KV bytes at
+    /// (`--kv-dtype`). F16 reproduces the paper's Table-4 convention;
+    /// int8 halves the per-token cost and adds the per-head scale
+    /// overhead the real chunks carry.
+    pub kv_dtype: KvDtype,
 }
 
 impl SimConfig {
@@ -73,6 +78,7 @@ impl SimConfig {
             chunk_size: 64,
             mono_headroom: 0,
             policy: SchedPolicyKind::PrefixGreedy,
+            kv_dtype: KvDtype::F16,
         }
     }
 }
@@ -85,7 +91,8 @@ pub struct SimResult {
     /// the paper's Fig 5 / Table 4 headline metric.
     pub normalized_latency_ms_per_tok: f64,
     pub p99_normalized_latency: f64,
-    /// Peak KV cache bytes (FP16 accounting), Table 4.
+    /// Peak KV cache bytes priced at `SimConfig::kv_dtype` (the f16
+    /// default is Table 4's accounting convention).
     pub peak_kv_bytes: u64,
     pub peak_batch: usize,
     /// Completion tokens per simulated second.
@@ -106,18 +113,24 @@ enum KvAccounting {
 }
 
 impl KvAccounting {
-    fn peak_tokens_bytes(&self, model: &ModelConfig) -> u64 {
-        // Structures run at shape heads=1, head_dim=1 and FP16 storage —
-        // the paper's Table-4 accounting convention — so one token costs
-        // 2 tensors × 2 bytes; scale to the real model's per-token KV
-        // bytes (also priced at FP16 in `ModelConfig::kv_bytes_per_token`).
-        let unit = 4.0f64;
+    fn peak_tokens_bytes(&self, model: &ModelConfig, shape: &KvShape) -> u64 {
+        // Structures run at shape heads=1, head_dim=1 in the configured
+        // storage dtype, so peak token *counts* come from dividing peak
+        // structure bytes by that shape's exact per-token cost (for int8
+        // this includes the per-chunk scale bytes the slabs carry). The
+        // count is then priced at the real model: `kv_bytes_per_token` is
+        // an FP16 convention (2 bytes/element — the paper's Table 4), so
+        // other dtypes rescale by `dtype.bytes() / 2`; at real head_dim ×
+        // chunk_size granularity the int8 scale overhead per element is
+        // negligible and is not re-added.
+        let unit = shape.bytes_per_chunk() as f64 / shape.chunk_size as f64;
         let bytes = match self {
             KvAccounting::Tree(t) => t.pool().peak_bytes() as f64,
             KvAccounting::Paged(p, _) => p.peak_bytes() as f64,
             KvAccounting::Mono(m) => m.peak_bytes() as f64,
         };
-        (bytes / unit * model.kv_bytes_per_token()) as u64
+        let dtype_scale = shape.dtype.bytes() as f64 / 2.0;
+        (bytes / unit * model.kv_bytes_per_token() * dtype_scale) as u64
     }
 }
 
@@ -128,8 +141,9 @@ pub fn simulate(
     hw: &HardwareModel,
     trace: &Trace,
 ) -> SimResult {
-    // Token-accounting shape at FP16: Table 4 prices KV in fp16 bytes.
-    let shape = KvShape::new(1, 1, cfg.chunk_size).with_dtype(KvDtype::F16);
+    // Token-accounting shape in the configured storage dtype (`--kv-dtype`;
+    // the f16 default reproduces Table 4's fp16 pricing).
+    let shape = KvShape::new(1, 1, cfg.chunk_size).with_dtype(cfg.kv_dtype);
     let mut kv = match cfg.system {
         SystemKind::ChunkLlama => KvAccounting::Tree(PrefixTree::new(shape)),
         SystemKind::Vllm => {
@@ -301,7 +315,7 @@ pub fn simulate(
         system: cfg.system,
         normalized_latency_ms_per_tok: mean,
         p99_normalized_latency: p99,
-        peak_kv_bytes: kv.peak_tokens_bytes(model),
+        peak_kv_bytes: kv.peak_tokens_bytes(model, &shape),
         peak_batch: sched.peak_batch(),
         decode_tps: decoded_tokens as f64 / now.max(1e-9),
         finished_requests: finished.len(),
@@ -343,6 +357,36 @@ mod tests {
             let r = run(sys, &t);
             assert_eq!(r.finished_requests, 60, "{sys:?}");
             assert!(r.normalized_latency_ms_per_tok > 0.0);
+        }
+    }
+
+    #[test]
+    fn peak_kv_accounting_honors_the_configured_dtype() {
+        // Same trace, same system: f32 doubles the f16 peak and int8
+        // roughly halves it (exactly, up to the per-chunk scale bytes the
+        // int8 slabs carry). Latency is dtype-independent in the sim.
+        let t = trace(0.8, 40, 1024, 64);
+        for sys in [SystemKind::ChunkLlama, SystemKind::Vllm, SystemKind::Tgi] {
+            let at = |d: KvDtype| {
+                let cfg = SimConfig { kv_dtype: d, ..SimConfig::new(sys) };
+                simulate(&cfg, &ModelConfig::llama2_7b(), &HardwareModel::a100_80g(), &t)
+            };
+            let half = at(KvDtype::F16);
+            let full = at(KvDtype::F32);
+            let int8 = at(KvDtype::Int8);
+            assert_eq!(full.peak_kv_bytes, 2 * half.peak_kv_bytes, "{sys:?}");
+            let want = half.peak_kv_bytes as f64 / 2.0;
+            let ratio = int8.peak_kv_bytes as f64 / want;
+            assert!(
+                (0.9..=1.1).contains(&ratio),
+                "{sys:?}: int8 peak {} not ~half of f16 {}",
+                int8.peak_kv_bytes,
+                half.peak_kv_bytes
+            );
+            assert_eq!(
+                half.normalized_latency_ms_per_tok, int8.normalized_latency_ms_per_tok,
+                "{sys:?}: accounting dtype must not change simulated timing"
+            );
         }
     }
 

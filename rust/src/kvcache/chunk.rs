@@ -50,9 +50,18 @@ impl KvShape {
         self.heads * self.chunk_size * self.head_dim
     }
 
-    /// Bytes of K+V storage per chunk as actually allocated (dtype-aware).
+    /// Bytes of K+V storage per chunk as actually allocated (dtype-aware;
+    /// int8 includes the per-head f32 scale each of K and V carries).
     pub fn bytes_per_chunk(&self) -> usize {
-        2 * self.elems_per_tensor() * self.dtype.bytes()
+        let scale_bytes = if self.dtype == KvDtype::Int8 { 2 * self.heads * 4 } else { 0 };
+        2 * self.elems_per_tensor() * self.dtype.bytes() + scale_bytes
+    }
+
+    /// Allocate one K or V slab for this shape: for int8 the scale groups
+    /// are per head (`chunk_size * head_dim` elements), so a head's rows —
+    /// the unit the kernels stream — share a single dequant scale.
+    pub fn new_slab(&self) -> KvSlab {
+        KvSlab::zeroed_grouped(self.dtype, self.elems_per_tensor(), self.chunk_size * self.head_dim)
     }
 
     /// Offset of `(head, pos)` row inside a chunk tensor.
@@ -81,15 +90,19 @@ impl Chunk {
     fn new(shape: &KvShape) -> Self {
         Chunk {
             tokens: Vec::with_capacity(shape.chunk_size),
-            k: KvSlab::zeroed(shape.dtype, shape.elems_per_tensor()),
-            v: KvSlab::zeroed(shape.dtype, shape.elems_per_tensor()),
+            k: shape.new_slab(),
+            v: shape.new_slab(),
         }
     }
 
     fn reset(&mut self) {
         self.tokens.clear();
         // K/V rows are overwritten before use; zeroing is not required for
-        // correctness but keeps stale data out of debugging dumps.
+        // correctness but keeps stale data out of debugging dumps. Int8
+        // scales must be forgotten, though — fresh writes would otherwise
+        // quantize at the previous tenant's scale.
+        self.k.reset_scales();
+        self.v.reset_scales();
     }
 
     /// Number of tokens currently stored.
@@ -128,6 +141,20 @@ impl Chunk {
     pub fn v_head<E: KvElem>(&self, shape: &KvShape, head: usize) -> &[E] {
         let base = head * shape.chunk_size * shape.head_dim;
         &self.v.as_slice::<E>()[base..base + shape.chunk_size * shape.head_dim]
+    }
+
+    /// Dequant scale of head `head`'s K rows (1.0 for float dtypes). The
+    /// slab's scale groups are laid out one per head (see
+    /// [`KvShape::new_slab`]), so the group index *is* the head index.
+    #[inline]
+    pub fn k_head_scale(&self, _shape: &KvShape, head: usize) -> f32 {
+        self.k.group_scale(head)
+    }
+
+    /// Dequant scale of head `head`'s V rows (1.0 for float dtypes).
+    #[inline]
+    pub fn v_head_scale(&self, _shape: &KvShape, head: usize) -> f32 {
+        self.v.group_scale(head)
     }
 
     /// Append one token and its per-head K/V rows (narrowing f32 to the
@@ -396,6 +423,11 @@ mod tests {
         let s16 = s.with_dtype(KvDtype::F16);
         assert_eq!(s16.bytes_per_chunk(), 256, "f16 halves the chunk bytes");
         assert_eq!(s.with_dtype(KvDtype::Bf16).bytes_per_chunk(), 256);
+        assert_eq!(
+            s.with_dtype(KvDtype::Int8).bytes_per_chunk(),
+            128 + 16,
+            "int8: 2 tensors x 64 elems x 1B + 2 tensors x 2 heads x 4B scales"
+        );
 
         let mut pool = ChunkPool::new(s16);
         let a = pool.acquire();

@@ -33,15 +33,23 @@ pub enum KvDtype {
     F16,
     /// bfloat16 — truncated-exponent-preserving half precision.
     Bf16,
+    /// Symmetric int8 with a per-group f32 scale held by the slab (one
+    /// group per head within a chunk/page/dense buffer): `x ≈ q · scale`,
+    /// `q ∈ [-127, 127]`, `scale = group_max_abs / 127`. Quantization is
+    /// GGML-style blockwise (scale chosen at narrow time), dequantization
+    /// happens in the kernel's widening load.
+    Int8,
 }
 
 impl KvDtype {
-    /// Bytes per stored element.
+    /// Bytes per stored element (excluding per-group scale metadata; see
+    /// [`KvSlab::payload_bytes`] for the all-in accounting).
     #[inline]
     pub fn bytes(self) -> usize {
         match self {
             KvDtype::F32 => 4,
             KvDtype::F16 | KvDtype::Bf16 => 2,
+            KvDtype::Int8 => 1,
         }
     }
 
@@ -51,6 +59,7 @@ impl KvDtype {
             KvDtype::F32 => "f32",
             KvDtype::F16 => "f16",
             KvDtype::Bf16 => "bf16",
+            KvDtype::Int8 => "int8",
         }
     }
 
@@ -60,21 +69,30 @@ impl KvDtype {
             "f32" | "fp32" | "float32" => Some(KvDtype::F32),
             "f16" | "fp16" | "float16" | "half" => Some(KvDtype::F16),
             "bf16" | "bfloat16" => Some(KvDtype::Bf16),
+            "int8" | "i8" => Some(KvDtype::Int8),
             _ => None,
         }
     }
 
     /// All supported dtypes (bench sweeps, property-test grids).
-    pub const ALL: [KvDtype; 3] = [KvDtype::F32, KvDtype::F16, KvDtype::Bf16];
+    pub const ALL: [KvDtype; 4] = [KvDtype::F32, KvDtype::F16, KvDtype::Bf16, KvDtype::Int8];
 
     /// Unit roundoff of the storage format: the relative rounding error
     /// bound for values stored at this dtype (the principled half of the
     /// kernel-vs-reference error budget; see DESIGN.md).
+    ///
+    /// For int8 the bound is relative to the *scale group's* max-abs, not
+    /// the element: a fresh quantization rounds to the nearest step
+    /// (≤ half a step = `group_max / 254`), and one requant-on-grow (the
+    /// whole group re-rounded when a later write raises the scale) adds at
+    /// most another half step — so a full step, `group_max / 127`, is the
+    /// per-element bound the budget tests use.
     pub fn unit_roundoff(self) -> f32 {
         match self {
             KvDtype::F32 => f32::EPSILON / 2.0, // 2^-24
             KvDtype::F16 => 1.0 / 2048.0,       // 2^-11
             KvDtype::Bf16 => 1.0 / 256.0,       // 2^-8
+            KvDtype::Int8 => 1.0 / 127.0,       // one quantization step
         }
     }
 }
@@ -184,6 +202,15 @@ pub trait KvElem: Copy + Send + Sync + 'static {
         None
     }
 
+    /// Zero-copy i8 view when the element is the quantized container (the
+    /// kernel's int8 branch feeds this to [`crate::util::simd::widen_i8`]
+    /// together with the slab's per-group scale).
+    #[inline]
+    fn as_i8(slice: &[Self]) -> Option<&[i8]> {
+        let _ = slice;
+        None
+    }
+
     /// Widen a whole slice to f32 through the SIMD seam (exact for every
     /// dtype: f16/bf16→f32 conversion never rounds). `dst` must be the
     /// same length as `src`.
@@ -199,6 +226,26 @@ pub trait KvElem: Copy + Send + Sync + 'static {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 #[repr(transparent)]
 pub struct F16(pub u16);
+
+/// Symmetric-int8 element: the raw quantized container. The per-group
+/// scale lives on the owning [`KvSlab`], so `to_f32`/`from_f32` here are
+/// the *unscaled* integer conversions — the kernels never use them alone;
+/// the int8 load path goes through `simd::widen_i8(…, scale, …)` with the
+/// slab's group scale, and the store path through [`KvSlab::write_f32`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct I8(pub i8);
+
+/// Quantize one value at a fixed symmetric scale: `round(x / scale)`
+/// saturated to `[-127, 127]` (−128 is unused so the range is symmetric).
+/// A zero scale means the group has only ever held zeros.
+#[inline]
+pub fn quantize_i8(x: f32, scale: f32) -> i8 {
+    if scale == 0.0 {
+        return 0;
+    }
+    (x / scale).round().clamp(-127.0, 127.0) as i8
+}
 
 /// bfloat16 element (bit container + conversions).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -244,6 +291,26 @@ impl KvElem for F16 {
     }
 }
 
+impl KvElem for I8 {
+    const DTYPE: KvDtype = KvDtype::Int8;
+    #[inline]
+    fn from_f32(x: f32) -> Self {
+        // Unscaled (scale = 1): only meaningful through the slab adapters,
+        // which own the group scale. Kept total so the trait stays object-
+        // safe over every dtype.
+        I8(quantize_i8(x, 1.0))
+    }
+    #[inline]
+    fn to_f32(self) -> f32 {
+        self.0 as f32
+    }
+    #[inline]
+    fn as_i8(slice: &[Self]) -> Option<&[i8]> {
+        // Safety: I8 is repr(transparent) over i8.
+        Some(unsafe { std::slice::from_raw_parts(slice.as_ptr() as *const i8, slice.len()) })
+    }
+}
+
 impl KvElem for Bf16 {
     const DTYPE: KvDtype = KvDtype::Bf16;
     #[inline]
@@ -276,6 +343,14 @@ pub struct KvSlab {
     /// Length in elements (not bytes).
     len: usize,
     raw: Box<[u64]>,
+    /// Int8 only: elements per scale group (the chunk layouts use one
+    /// group per head, so a head's rows share one scale). Float dtypes
+    /// keep a single degenerate group.
+    group: usize,
+    /// Int8 only: per-group symmetric scales (`x ≈ q · scale`); empty for
+    /// float dtypes. A scale of 0.0 marks a group that has only ever held
+    /// zeros.
+    scales: Box<[f32]>,
 }
 
 impl std::fmt::Debug for KvSlab {
@@ -285,10 +360,51 @@ impl std::fmt::Debug for KvSlab {
 }
 
 impl KvSlab {
-    /// Zero-initialised slab of `len` elements.
+    /// Zero-initialised slab of `len` elements (one scale group for int8).
     pub fn zeroed(dtype: KvDtype, len: usize) -> Self {
+        KvSlab::zeroed_grouped(dtype, len, len.max(1))
+    }
+
+    /// Zero-initialised slab with `group` elements per int8 scale group
+    /// (`group` must divide `len`; ignored for float dtypes). The chunk,
+    /// page and dense layouts pass one head's span so quantization error
+    /// is bounded per head, not per tensor.
+    pub fn zeroed_grouped(dtype: KvDtype, len: usize, group: usize) -> Self {
         let words = (len * dtype.bytes()).div_ceil(8);
-        KvSlab { dtype, len, raw: vec![0u64; words].into_boxed_slice() }
+        let group = group.max(1);
+        let scales = if dtype == KvDtype::Int8 {
+            assert!(len % group == 0, "scale group {group} must divide slab len {len}");
+            vec![0.0f32; len / group]
+        } else {
+            Vec::new()
+        };
+        KvSlab { dtype, len, raw: vec![0u64; words].into_boxed_slice(), group, scales: scales.into() }
+    }
+
+    /// The symmetric scale of int8 group `g`; identity (1.0) for float
+    /// dtypes so kernel call sites can pass it unconditionally.
+    #[inline]
+    pub fn group_scale(&self, g: usize) -> f32 {
+        if self.dtype == KvDtype::Int8 {
+            self.scales[g]
+        } else {
+            1.0
+        }
+    }
+
+    /// Elements per int8 scale group (slab length for float dtypes).
+    #[inline]
+    pub fn group_len(&self) -> usize {
+        self.group
+    }
+
+    /// Forget all int8 scales (no-op for float dtypes). Called when a
+    /// pooled chunk is recycled: the stale scales would otherwise make
+    /// fresh writes quantize at the previous tenant's (possibly much
+    /// coarser) scale.
+    #[inline]
+    pub fn reset_scales(&mut self) {
+        self.scales.fill(0.0);
     }
 
     #[inline]
@@ -307,10 +423,11 @@ impl KvSlab {
         self.len == 0
     }
 
-    /// Bytes of element payload (what accounting reports).
+    /// Bytes of element payload plus per-group scale metadata (what
+    /// accounting reports — int8 carries 4 scale bytes per group).
     #[inline]
     pub fn payload_bytes(&self) -> usize {
-        self.len * self.dtype.bytes()
+        self.len * self.dtype.bytes() + self.scales.len() * 4
     }
 
     /// Typed element view. Panics if `E` does not match the slab's dtype —
@@ -354,6 +471,42 @@ impl KvSlab {
                     *d = Bf16::from_f32(x);
                 }
             }
+            KvDtype::Int8 => {
+                // Writes must stay inside one scale group (the cache
+                // layouts write per head, which is exactly one group).
+                let group = self.group;
+                let g = offset / group;
+                assert!(
+                    offset % group + src.len() <= group,
+                    "int8 write spans scale groups (offset {offset}, len {}, group {group})",
+                    src.len()
+                );
+                let mut max_abs = 0f32;
+                for &x in src {
+                    max_abs = max_abs.max(x.abs());
+                }
+                let needed = max_abs / 127.0;
+                let old = self.scales[g];
+                if needed > old {
+                    // Requant-on-grow: the new value needs a coarser scale,
+                    // so re-round the whole group at it (adds at most half
+                    // a step on top of each element's original half step —
+                    // the `unit_roundoff` budget covers exactly this).
+                    if old > 0.0 {
+                        let (start, end) = (g * group, (g + 1) * group);
+                        let q = self.as_mut_slice::<I8>();
+                        for e in &mut q[start..end] {
+                            *e = I8(quantize_i8(e.0 as f32 * old, needed));
+                        }
+                    }
+                    self.scales[g] = needed;
+                }
+                let scale = self.scales[g];
+                let dst = &mut self.as_mut_slice::<I8>()[offset..offset + src.len()];
+                for (d, &x) in dst.iter_mut().zip(src) {
+                    *d = I8(quantize_i8(x, scale));
+                }
+            }
         }
     }
 
@@ -374,6 +527,16 @@ impl KvSlab {
                 let src = &self.as_slice::<Bf16>()[offset..offset + dst.len()];
                 for (d, &x) in dst.iter_mut().zip(src) {
                     *d = x.to_f32();
+                }
+            }
+            KvDtype::Int8 => {
+                // Reads may span groups: dequantize elementwise at each
+                // element's own group scale (exact: i8→f32 convert is exact
+                // and the multiply rounds once, same as the kernel's
+                // widening load).
+                let src = &self.as_slice::<I8>()[offset..offset + dst.len()];
+                for (i, (d, &x)) in dst.iter_mut().zip(src).enumerate() {
+                    *d = x.0 as f32 * self.scales[(offset + i) / self.group];
                 }
             }
         }
@@ -397,6 +560,43 @@ impl KvSlab {
             KvDtype::Bf16 => {
                 let s = &src.as_slice::<Bf16>()[src_off..src_off + n];
                 self.as_mut_slice::<Bf16>()[dst_off..dst_off + n].copy_from_slice(s);
+            }
+            KvDtype::Int8 => {
+                // Walk runs that stay inside one (src group, dst group)
+                // pair. When the destination group's scale matches (or the
+                // group is still all-zero and can adopt the source scale)
+                // the quantized bytes copy over bit-exactly — this is the
+                // path chunk splits and page COW take, preserving the
+                // bit-identity guarantees. Mismatched scales fall back to
+                // dequant + write_f32 (requantize at the dst scale).
+                let mut i = 0;
+                while i < n {
+                    let so = src_off + i;
+                    let do_ = dst_off + i;
+                    let sg = so / src.group;
+                    let dg = do_ / self.group;
+                    let run_end = ((sg + 1) * src.group - so).min((dg + 1) * self.group - do_);
+                    let run = run_end.min(n - i);
+                    let s_scale = src.scales[sg];
+                    let d_scale = self.scales[dg];
+                    if d_scale == s_scale || d_scale == 0.0 {
+                        if d_scale == 0.0 && s_scale != 0.0 {
+                            // A zero-scale group holds only zeros, so
+                            // adopting the source scale re-interprets them
+                            // as exact zeros — still bit-exact.
+                            self.scales[dg] = s_scale;
+                        }
+                        let s = &src.as_slice::<I8>()[so..so + run];
+                        // Borrow note: take the typed view after the scale
+                        // update above (both need `&mut self`).
+                        self.as_mut_slice::<I8>()[do_..do_ + run].copy_from_slice(s);
+                    } else {
+                        let mut tmp = vec![0.0f32; run];
+                        src.read_f32(so, &mut tmp);
+                        self.write_f32(do_, &tmp);
+                    }
+                    i += run;
+                }
             }
         }
     }
@@ -503,7 +703,8 @@ mod tests {
         for dtype in KvDtype::ALL {
             let mut slab = KvSlab::zeroed(dtype, 11);
             assert_eq!(slab.len(), 11);
-            assert_eq!(slab.payload_bytes(), 11 * dtype.bytes());
+            let scale_bytes = if dtype == KvDtype::Int8 { 4 } else { 0 };
+            assert_eq!(slab.payload_bytes(), 11 * dtype.bytes() + scale_bytes);
             let src: Vec<f32> = (0..7).map(|i| i as f32 * 0.25 - 0.8).collect();
             slab.write_f32(3, &src);
             let mut back = vec![0.0f32; 7];
@@ -548,6 +749,73 @@ mod tests {
         }
         assert_eq!(KvDtype::parse("fp16"), Some(KvDtype::F16));
         assert_eq!(KvDtype::parse("bfloat16"), Some(KvDtype::Bf16));
-        assert_eq!(KvDtype::parse("int8"), None);
+        assert_eq!(KvDtype::parse("i8"), Some(KvDtype::Int8));
+        assert_eq!(KvDtype::parse("uint8"), None);
+    }
+
+    #[test]
+    fn int8_write_read_round_trips_within_one_step() {
+        let mut slab = KvSlab::zeroed_grouped(KvDtype::Int8, 16, 8);
+        let src: Vec<f32> = (0..8).map(|i| (i as f32 - 3.5) * 0.31).collect();
+        slab.write_f32(0, &src);
+        let mut back = vec![0.0f32; 8];
+        slab.read_f32(0, &mut back);
+        let group_max = src.iter().fold(0f32, |m, x| m.max(x.abs()));
+        // Fresh quantization: within half a step of the group scale.
+        let half_step = group_max / 254.0 + 1e-7;
+        for (a, b) in back.iter().zip(&src) {
+            assert!((a - b).abs() <= half_step, "{a} vs {b}");
+        }
+        // Second group untouched: scale stays 0 and reads give exact zeros.
+        assert_eq!(slab.group_scale(1), 0.0);
+        let mut tail = vec![1.0f32; 8];
+        slab.read_f32(8, &mut tail);
+        assert_eq!(tail, vec![0.0; 8]);
+    }
+
+    #[test]
+    fn int8_requant_on_grow_stays_within_budget() {
+        let mut slab = KvSlab::zeroed_grouped(KvDtype::Int8, 8, 8);
+        let first: Vec<f32> = vec![0.5, -0.25, 0.125, 0.75];
+        slab.write_f32(0, &first);
+        // A later, larger write forces the group scale to grow and the
+        // earlier elements to requantize.
+        let second: Vec<f32> = vec![4.0, -2.0, 1.0, -4.0];
+        slab.write_f32(4, &second);
+        let mut back = vec![0.0f32; 8];
+        slab.read_f32(0, &mut back);
+        let group_max = 4.0f32;
+        // One full step (fresh half step + requant half step) of the final
+        // group max bounds every element — the unit_roundoff contract.
+        let step = group_max * KvDtype::Int8.unit_roundoff() + 1e-7;
+        for (i, (a, b)) in back.iter().zip(first.iter().chain(&second)).enumerate() {
+            assert!((a - b).abs() <= step, "elem {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn int8_copy_adopts_scale_bit_exactly_and_requants_on_mismatch() {
+        let mut a = KvSlab::zeroed_grouped(KvDtype::Int8, 8, 8);
+        let src: Vec<f32> = (0..8).map(|i| (i as f32).sin()).collect();
+        a.write_f32(0, &src);
+
+        // Fresh destination group: adopts the source scale, bytes bit-exact.
+        let mut b = KvSlab::zeroed_grouped(KvDtype::Int8, 8, 8);
+        b.copy_range_from(&a, 0, 0, 8);
+        assert_eq!(b.group_scale(0), a.group_scale(0));
+        assert_eq!(I8::as_i8(b.as_slice::<I8>()), I8::as_i8(a.as_slice::<I8>()));
+
+        // Destination with a different established scale: requant fallback
+        // lands within one step of the source's dequantized values.
+        let mut c = KvSlab::zeroed_grouped(KvDtype::Int8, 8, 8);
+        c.write_f32(0, &[2.0; 8]);
+        c.copy_range_from(&a, 0, 0, 8);
+        let (mut from_a, mut from_c) = (vec![0.0f32; 8], vec![0.0f32; 8]);
+        a.read_f32(0, &mut from_a);
+        c.read_f32(0, &mut from_c);
+        let step = 2.0 * KvDtype::Int8.unit_roundoff() + 1e-7;
+        for (x, y) in from_a.iter().zip(&from_c) {
+            assert!((x - y).abs() <= step, "{x} vs {y}");
+        }
     }
 }

@@ -10,8 +10,8 @@ pub mod retain;
 pub mod tree;
 
 pub use chunk::{Chunk, ChunkId, ChunkPool, KvShape};
-pub use dtype::{Bf16, F16, KvDtype, KvElem, KvSlab};
+pub use dtype::{quantize_i8, Bf16, F16, I8, KvDtype, KvElem, KvSlab};
 pub use monolithic::MonolithicKvCache;
 pub use paged::{PagedKvCache, PageId};
-pub use retain::{PrefixRetainer, PIN_ID_BASE};
+pub use retain::{PrefixRetainer, TieringConfig, PIN_ID_BASE};
 pub use tree::{CtxEntry, InsertOutcome, PrefixTree, SeqId, SharingStats, TreeContext};

@@ -37,6 +37,19 @@ impl DenseSeq {
         let stride = self.capacity * shape.head_dim;
         &self.v.as_slice::<E>()[head * stride..head * stride + self.len * shape.head_dim]
     }
+
+    /// Dequant scale of head `head`'s K rows (1.0 for float dtypes; the
+    /// slabs are grouped one scale per head, so the group index is the
+    /// head index).
+    #[inline]
+    pub fn k_head_scale(&self, _shape: &KvShape, head: usize) -> f32 {
+        self.k.group_scale(head)
+    }
+
+    #[inline]
+    pub fn v_head_scale(&self, _shape: &KvShape, head: usize) -> f32 {
+        self.v.group_scale(head)
+    }
 }
 
 /// Dense per-sequence KV cache manager.
@@ -68,8 +81,10 @@ impl MonolithicKvCache {
         assert!(tokens.len() <= capacity);
         let hd = self.shape.heads * self.shape.head_dim;
         let elems = self.shape.heads * capacity * self.shape.head_dim;
-        let mut k = KvSlab::zeroed(self.shape.dtype, elems);
-        let mut v = KvSlab::zeroed(self.shape.dtype, elems);
+        // One int8 scale group per head (the per-head stride), matching the
+        // chunk layout's grouping so head slices share a dequant scale.
+        let mut k = KvSlab::zeroed_grouped(self.shape.dtype, elems, capacity * self.shape.head_dim);
+        let mut v = KvSlab::zeroed_grouped(self.shape.dtype, elems, capacity * self.shape.head_dim);
         let mut k_row = vec![0.0f32; hd];
         let mut v_row = vec![0.0f32; hd];
         for (pos, &t) in tokens.iter().enumerate() {

@@ -77,20 +77,32 @@ impl PagedKvCache {
         self.shape.heads * self.page_size * self.shape.head_dim
     }
 
-    /// Bytes of K+V per page at the cache's dtype.
+    /// Bytes of K+V per page at the cache's dtype (int8 includes the
+    /// per-head f32 scales each tensor carries).
     fn page_bytes(&self) -> usize {
-        2 * self.page_elems() * self.shape.dtype.bytes()
+        let scale_bytes =
+            if self.shape.dtype == super::KvDtype::Int8 { 2 * self.shape.heads * 4 } else { 0 };
+        2 * self.page_elems() * self.shape.dtype.bytes() + scale_bytes
     }
 
     fn alloc_page(&mut self) -> PageId {
         let id = match self.free.pop() {
-            Some(id) => id,
+            Some(id) => {
+                // Recycled page: forget the previous tenant's int8 scales so
+                // fresh writes pick their own quantization scale.
+                let p = &mut self.pages[id.0 as usize];
+                p.k.reset_scales();
+                p.v.reset_scales();
+                id
+            }
             None => {
                 let id = PageId(self.pages.len() as u32);
                 let n = self.page_elems();
+                // One int8 scale group per head (the per-head stride).
+                let group = self.page_size * self.shape.head_dim;
                 self.pages.push(Page {
-                    k: KvSlab::zeroed(self.shape.dtype, n),
-                    v: KvSlab::zeroed(self.shape.dtype, n),
+                    k: KvSlab::zeroed_grouped(self.shape.dtype, n, group),
+                    v: KvSlab::zeroed_grouped(self.shape.dtype, n, group),
                     refcount: 0,
                 });
                 id
@@ -245,6 +257,18 @@ impl PagedKvCache {
     pub fn page_v_head<E: KvElem>(&self, page: PageId, head: usize) -> &[E] {
         let stride = self.page_size * self.shape.head_dim;
         &self.pages[page.0 as usize].v.as_slice::<E>()[head * stride..(head + 1) * stride]
+    }
+
+    /// Dequant scale of one (page, head)'s K rows (1.0 for float dtypes;
+    /// pages group scales per head, so the group index is the head index).
+    #[inline]
+    pub fn page_k_head_scale(&self, page: PageId, head: usize) -> f32 {
+        self.pages[page.0 as usize].k.group_scale(head)
+    }
+
+    #[inline]
+    pub fn page_v_head_scale(&self, page: PageId, head: usize) -> f32 {
+        self.pages[page.0 as usize].v.group_scale(head)
     }
 
     pub fn num_sequences(&self) -> usize {

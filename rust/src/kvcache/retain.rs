@@ -1,31 +1,110 @@
-//! Prefix retention with LRU eviction — the multi-tenant extension the
-//! paper's §5 points at ("discover redundancy ... at runtime
-//! automatically") taken one step further: keep *hot tenants'* system
-//! prompt KV resident even when no live request references it, so the next
-//! request of that tenant skips prefill entirely; evict the least recently
-//! used retained prefix when the chunk budget is exceeded.
+//! Prefix retention with LRU eviction and tiered cold storage — the
+//! multi-tenant extension the paper's §5 points at ("discover redundancy
+//! ... at runtime automatically") taken one step further: keep *hot
+//! tenants'* system prompt KV resident even when no live request
+//! references it, so the next request of that tenant skips prefill
+//! entirely; evict the least recently used retained prefix when the chunk
+//! budget is exceeded.
 //!
 //! Implemented without modifying the tree: a retained prefix is pinned by a
 //! *pin sequence* (ids from a reserved high range) inserted over an
 //! already-cached prefix. Evicting = removing the pin sequence; the tree's
 //! normal refcounting then frees exactly the chunks nothing else uses.
+//!
+//! # Tiered retention
+//!
+//! Between "resident at full width" and "evicted" there are two cheaper
+//! tiers. A pin cold past [`TieringConfig::demote_after`] LRU ticks
+//! *demotes*: its K/V are snapshotted through the tree's f32 read path,
+//! re-narrowed to int8 (one symmetric scale per head, the same layout
+//! [`super::dtype::KvSlab`] uses), and the pin sequence is removed so the
+//! tree chunks return to the pool. Past [`TieringConfig::spill_after`]
+//! ticks the int8 copy moves to a spill file under
+//! [`TieringConfig::spill_dir`] and leaves RSS entirely. On the next
+//! prompt hit the engine calls [`PrefixRetainer::promote_for_prompt`]
+//! *before* prefix matching, which re-inserts the dequantized rows, so the
+//! kernel only ever sees hot, tree-resident chunks.
+//!
+//! Spill files are crash-safe by *recreation*, not by durability: a file
+//! is written to a temp name and renamed into place (a torn write never
+//! yields a parsable file), and a missing or corrupt file just means the
+//! promotion fails and prefill recomputes the prefix — the same outcome as
+//! an eviction.
 
 use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
 
+use super::dtype::quantize_i8;
 use super::tree::{PrefixTree, SeqId};
+use crate::util::stats::LogHistogram;
 
 /// Pin sequence ids live at the top of the id space; real request ids must
 /// stay below this.
 pub const PIN_ID_BASE: u64 = u64::MAX - (1 << 20);
 
-#[derive(Debug, Clone)]
-struct Pin {
-    seq: SeqId,
-    tokens: usize,
-    last_used: u64,
+/// Cold-prefix tiering thresholds. Ages are measured in retainer LRU
+/// clock ticks (one tick per pin/touch, i.e. per admitted request that
+/// interacts with the retainer); `0` disables that transition.
+#[derive(Debug, Clone, Default)]
+pub struct TieringConfig {
+    /// Hot → int8-in-memory after this many ticks without a hit.
+    pub demote_after: u64,
+    /// Int8-in-memory → spill file after this many ticks without a hit.
+    /// Requires `spill_dir`; ignored otherwise.
+    pub spill_after: u64,
+    /// Directory for spill files (`pin-<id>.kvq`). Created on first spill.
+    pub spill_dir: Option<PathBuf>,
 }
 
-/// LRU-retained prefixes over a [`PrefixTree`], bounded by a chunk budget.
+impl TieringConfig {
+    pub fn enabled(&self) -> bool {
+        self.demote_after > 0 || (self.spill_after > 0 && self.spill_dir.is_some())
+    }
+}
+
+/// A demoted prefix's quantized KV snapshot: `[heads, tokens, head_dim]`
+/// i8 codes with one symmetric dequant scale per head per tensor —
+/// deliberately the same grouping the int8 [`super::dtype::KvSlab`] uses,
+/// so demoting an int8 tree re-quantizes losslessly up to one rounding
+/// step and demoting a float tree costs exactly one quantization.
+#[derive(Debug, Clone)]
+struct DemotedPrefix {
+    heads: usize,
+    head_dim: usize,
+    k_q: Vec<i8>,
+    v_q: Vec<i8>,
+    k_scales: Vec<f32>,
+    v_scales: Vec<f32>,
+}
+
+impl DemotedPrefix {
+    fn bytes(&self) -> u64 {
+        (self.k_q.len() + self.v_q.len() + 4 * (self.k_scales.len() + self.v_scales.len())) as u64
+    }
+}
+
+#[derive(Debug, Clone)]
+enum TierState {
+    /// Full-width chunks resident in the tree, held by a pin sequence.
+    Hot(SeqId),
+    /// Int8 snapshot in memory; no tree chunks held.
+    Int8Mem(DemotedPrefix),
+    /// Int8 snapshot on disk; nothing resident.
+    Spilled { path: PathBuf, bytes: u64 },
+}
+
+#[derive(Debug, Clone)]
+struct Pin {
+    /// Stable id for spill-file naming (survives re-promotion).
+    id: u64,
+    tokens: usize,
+    last_used: u64,
+    state: TierState,
+}
+
+/// LRU-retained prefixes over a [`PrefixTree`], bounded by a chunk budget,
+/// with optional cold-prefix tiering (see module docs).
 pub struct PrefixRetainer {
     /// key: the pinned prefix tokens (exact match).
     pins: BTreeMap<Vec<u32>, Pin>,
@@ -45,6 +124,17 @@ pub struct PrefixRetainer {
     evicted_chunks_total: u64,
     /// Pins evicted.
     evicted_pins_total: u64,
+    /// Tiering thresholds (disabled by default).
+    tiering: TieringConfig,
+    /// Pins currently in [`TierState::Hot`] — kept as a counter so
+    /// [`Self::over_budget`] stays O(1).
+    hot_pins: usize,
+    promotions_total: u64,
+    demotions_total: u64,
+    spills_total: u64,
+    spill_load_failures_total: u64,
+    promote_s: LogHistogram,
+    demote_s: LogHistogram,
 }
 
 impl PrefixRetainer {
@@ -58,15 +148,54 @@ impl PrefixRetainer {
             eviction_tokens_total: 0,
             evicted_chunks_total: 0,
             evicted_pins_total: 0,
+            tiering: TieringConfig::default(),
+            hot_pins: 0,
+            promotions_total: 0,
+            demotions_total: 0,
+            spills_total: 0,
+            spill_load_failures_total: 0,
+            promote_s: LogHistogram::time_seconds(),
+            demote_s: LogHistogram::time_seconds(),
         }
+    }
+
+    /// Install tiering thresholds (crash recovery re-applies the same
+    /// config after a hard reset).
+    pub fn set_tiering(&mut self, cfg: TieringConfig) {
+        self.tiering = cfg;
+    }
+
+    pub fn tiering(&self) -> &TieringConfig {
+        &self.tiering
     }
 
     /// Cheap resident fast path: whether eviction work is needed at all.
     /// O(1) — a pool-counter compare — so callers can skip eviction (and
     /// any budget reservation for it) on the overwhelmingly common
-    /// under-budget step.
+    /// under-budget step. Only hot pins hold tree chunks, so only they
+    /// count.
     pub fn over_budget(&self, tree: &PrefixTree) -> bool {
-        !self.pins.is_empty() && tree.pool().in_use() > self.budget_chunks
+        self.hot_pins > 0 && tree.pool().in_use() > self.budget_chunks
+    }
+
+    /// Whether any pin is cold enough that [`Self::run_tiering`] would do
+    /// work (ignores the in-flight guard, which needs the active prompt
+    /// set). O(pins).
+    pub fn tiering_pending(&self) -> bool {
+        if !self.tiering.enabled() {
+            return false;
+        }
+        let demote_after = self.tiering.demote_after;
+        let spill_after = self.tiering.spill_after;
+        let spill_ready = spill_after > 0 && self.tiering.spill_dir.is_some();
+        self.pins.values().any(|p| {
+            let age = self.clock.saturating_sub(p.last_used);
+            match p.state {
+                TierState::Hot(_) => demote_after > 0 && age >= demote_after,
+                TierState::Int8Mem(_) => spill_ready && age >= spill_after,
+                TierState::Spilled { .. } => false,
+            }
+        })
     }
 
     /// Tokens charged for pin eviction so far (`eviction_tokens_total`).
@@ -82,6 +211,66 @@ impl PrefixRetainer {
     /// Pins evicted so far.
     pub fn evicted_pins_total(&self) -> u64 {
         self.evicted_pins_total
+    }
+
+    pub fn promotions_total(&self) -> u64 {
+        self.promotions_total
+    }
+
+    pub fn demotions_total(&self) -> u64 {
+        self.demotions_total
+    }
+
+    pub fn spills_total(&self) -> u64 {
+        self.spills_total
+    }
+
+    pub fn spill_load_failures_total(&self) -> u64 {
+        self.spill_load_failures_total
+    }
+
+    /// Promotion latency (seconds domain; includes spill-file load).
+    pub fn promote_hist(&self) -> &LogHistogram {
+        &self.promote_s
+    }
+
+    /// Demotion latency (seconds domain; includes quantize + spill write).
+    pub fn demote_hist(&self) -> &LogHistogram {
+        &self.demote_s
+    }
+
+    /// Pins per tier: `(hot, int8_mem, spilled)`.
+    pub fn tier_counts(&self) -> (usize, usize, usize) {
+        let mut int8 = 0;
+        let mut spilled = 0;
+        for p in self.pins.values() {
+            match p.state {
+                TierState::Hot(_) => {}
+                TierState::Int8Mem(_) => int8 += 1,
+                TierState::Spilled { .. } => spilled += 1,
+            }
+        }
+        (self.hot_pins, int8, spilled)
+    }
+
+    /// Bytes retained per tier, labelled for the `/metrics` gauge family.
+    /// Hot bytes are the pin-held tokens priced at the tree's storage
+    /// dtype (chunk-granularity rounding and sharing with live sequences
+    /// make the exact number a property of the tree, not the retainer).
+    pub fn tier_bytes(&self, tree: &PrefixTree) -> [(&'static str, u64); 3] {
+        let shape = tree.shape();
+        let per_tok = (2 * shape.heads * shape.head_dim * shape.dtype.bytes()) as u64;
+        let mut hot = 0u64;
+        let mut int8 = 0u64;
+        let mut spilled = 0u64;
+        for p in self.pins.values() {
+            match &p.state {
+                TierState::Hot(_) => hot += p.tokens as u64 * per_tok,
+                TierState::Int8Mem(dp) => int8 += dp.bytes(),
+                TierState::Spilled { bytes, .. } => spilled += *bytes,
+            }
+        }
+        [("hot", hot), ("int8", int8), ("spilled", spilled)]
     }
 
     /// Configured chunk budget (crash recovery rebuilds the retainer with
@@ -111,6 +300,24 @@ impl PrefixRetainer {
         }
         if let Some(pin) = self.pins.get_mut(prefix) {
             pin.last_used = self.clock;
+            // A demoted pin whose prefix the calling request just
+            // recomputed can re-hot for free: the chunks are already in
+            // the tree, so the pin sequence re-attaches without touching
+            // the quantized copy's dequant path.
+            let demoted = !matches!(pin.state, TierState::Hot(_));
+            if demoted && tree.match_prefix(prefix) >= prefix.len() {
+                let seq = SeqId(self.next_pin_id);
+                self.next_pin_id += 1;
+                tree.insert_sequence(seq, prefix, &mut |_, _, _, _| {
+                    unreachable!("pin over fully cached prefix never computes KV")
+                });
+                let old = std::mem::replace(&mut pin.state, TierState::Hot(seq));
+                if let TierState::Spilled { path, .. } = old {
+                    let _ = std::fs::remove_file(path);
+                }
+                self.hot_pins += 1;
+                self.promotions_total += 1;
+            }
             return false;
         }
         // Only pin prefixes whose KV is fully present; the pin's fill
@@ -125,8 +332,14 @@ impl PrefixRetainer {
         });
         self.pins.insert(
             prefix.to_vec(),
-            Pin { seq, tokens: prefix.len(), last_used: self.clock },
+            Pin {
+                id: seq.0,
+                tokens: prefix.len(),
+                last_used: self.clock,
+                state: TierState::Hot(seq),
+            },
         );
+        self.hot_pins += 1;
         true
     }
 
@@ -139,6 +352,168 @@ impl PrefixRetainer {
             if prompt.len() >= prefix.len() && &prompt[..prefix.len()] == prefix.as_slice() {
                 pin.last_used = clock;
             }
+        }
+    }
+
+    /// Promote the longest demoted/spilled pinned prefix of `prompt` back
+    /// into the tree, so the subsequent `match_prefix` at admission sees
+    /// it and the kernel never touches a quantized-at-rest copy. Returns
+    /// the number of tokens promoted (0 if nothing matched or the load
+    /// failed — the caller's prefill then recomputes, same as a miss).
+    ///
+    /// Must run *before* prefix matching for the prompt: promotion is an
+    /// `insert_sequence`, and insertion over an already-matched prefix is
+    /// how the dequantized rows become visible to the matcher.
+    pub fn promote_for_prompt(&mut self, tree: &mut PrefixTree, prompt: &[u32]) -> usize {
+        if self.pins.len() == self.hot_pins {
+            return 0; // everything hot — the common fast path
+        }
+        let key: Option<Vec<u32>> = self
+            .pins
+            .iter()
+            .filter(|(prefix, pin)| {
+                !matches!(pin.state, TierState::Hot(_))
+                    && prompt.len() >= prefix.len()
+                    && prompt[..prefix.len()] == prefix[..]
+            })
+            .max_by_key(|(prefix, _)| prefix.len())
+            .map(|(prefix, _)| prefix.clone());
+        let Some(key) = key else { return 0 };
+        let start = Instant::now();
+        let seq = SeqId(self.next_pin_id);
+        self.next_pin_id += 1;
+        let pin = self.pins.get_mut(&key).expect("key just observed");
+        let dp = match std::mem::replace(&mut pin.state, TierState::Hot(seq)) {
+            TierState::Hot(_) => unreachable!("filtered to non-hot above"),
+            TierState::Int8Mem(dp) => dp,
+            TierState::Spilled { path, .. } => match read_spill(&path, key.len()) {
+                Some(dp) => {
+                    let _ = std::fs::remove_file(&path);
+                    dp
+                }
+                None => {
+                    // Lost or corrupt spill file: the prefix is simply
+                    // gone; drop the pin and let prefill recompute.
+                    self.spill_load_failures_total += 1;
+                    self.pins.remove(&key);
+                    return 0;
+                }
+            },
+        };
+        let heads = dp.heads;
+        let d = dp.head_dim;
+        let n = key.len();
+        tree.insert_sequence(seq, &key, &mut |pos, _t, k_out, v_out| {
+            for h in 0..heads {
+                let ks = dp.k_scales[h];
+                let vs = dp.v_scales[h];
+                let base = (h * n + pos) * d;
+                for i in 0..d {
+                    k_out[h * d + i] = dp.k_q[base + i] as f32 * ks;
+                    v_out[h * d + i] = dp.v_q[base + i] as f32 * vs;
+                }
+            }
+        });
+        self.clock += 1;
+        let clock = self.clock;
+        let pin = self.pins.get_mut(&key).expect("still present");
+        pin.last_used = clock;
+        self.hot_pins += 1;
+        self.promotions_total += 1;
+        self.promote_s.record(start.elapsed().as_secs_f64());
+        n
+    }
+
+    /// One tiering pass: demote hot pins cold past `demote_after`, spill
+    /// int8 pins cold past `spill_after`. A pin whose prefix is a prefix
+    /// of any prompt in `active_prompts` is skipped — its chunks are (or
+    /// are about to be) referenced by a live sequence's tree context, and
+    /// demotion mid-step would force a structural epoch bump under that
+    /// sequence. Returns `(demoted, spilled)` counts.
+    pub fn run_tiering(
+        &mut self,
+        tree: &mut PrefixTree,
+        active_prompts: &[Vec<u32>],
+    ) -> (usize, usize) {
+        if !self.tiering.enabled() {
+            return (0, 0);
+        }
+        let clock = self.clock;
+        let spill_ready = self.tiering.spill_after > 0 && self.tiering.spill_dir.is_some();
+        let mut demoted = 0;
+        let mut spilled = 0;
+        let keys: Vec<Vec<u32>> = self.pins.keys().cloned().collect();
+        for key in keys {
+            if active_prompts
+                .iter()
+                .any(|p| p.len() >= key.len() && p[..key.len()] == key[..])
+            {
+                continue; // in-flight guard: never demote under a live sequence
+            }
+            let Some(pin) = self.pins.get(&key) else { continue };
+            let age = clock.saturating_sub(pin.last_used);
+            if matches!(pin.state, TierState::Hot(_))
+                && self.tiering.demote_after > 0
+                && age >= self.tiering.demote_after
+                && self.demote_to_int8(tree, &key)
+            {
+                demoted += 1;
+            }
+            let Some(pin) = self.pins.get(&key) else { continue };
+            if matches!(pin.state, TierState::Int8Mem(_))
+                && spill_ready
+                && age >= self.tiering.spill_after
+                && self.spill_to_disk(&key)
+            {
+                spilled += 1;
+            }
+        }
+        (demoted, spilled)
+    }
+
+    /// Hot → int8-in-memory: snapshot the pin's KV through the tree's f32
+    /// read path, quantize per head, and release the tree chunks.
+    fn demote_to_int8(&mut self, tree: &mut PrefixTree, key: &[u32]) -> bool {
+        let pin = self.pins.get(key).expect("caller checked");
+        let TierState::Hot(seq) = pin.state else { return false };
+        let start = Instant::now();
+        let Some((k, v, _tokens)) = tree.gather_dense(seq) else { return false };
+        let shape = tree.shape();
+        let per_head = pin.tokens * shape.head_dim;
+        let (k_q, k_scales) = quantize_head_major(&k, shape.heads, per_head);
+        let (v_q, v_scales) = quantize_head_major(&v, shape.heads, per_head);
+        tree.remove_sequence(seq);
+        let pin = self.pins.get_mut(key).expect("still present");
+        pin.state = TierState::Int8Mem(DemotedPrefix {
+            heads: shape.heads,
+            head_dim: shape.head_dim,
+            k_q,
+            v_q,
+            k_scales,
+            v_scales,
+        });
+        self.hot_pins -= 1;
+        self.demotions_total += 1;
+        self.demote_s.record(start.elapsed().as_secs_f64());
+        true
+    }
+
+    /// Int8-in-memory → spill file. On any I/O failure the in-memory copy
+    /// is kept (spilling is an optimization, never a correctness step).
+    fn spill_to_disk(&mut self, key: &[u32]) -> bool {
+        let Some(dir) = self.tiering.spill_dir.clone() else { return false };
+        let pin = self.pins.get_mut(key).expect("caller checked");
+        let TierState::Int8Mem(dp) = &pin.state else { return false };
+        let start = Instant::now();
+        let path = dir.join(format!("pin-{}.kvq", pin.id));
+        match write_spill(&dir, &path, key.len(), dp) {
+            Ok(bytes) => {
+                pin.state = TierState::Spilled { path, bytes };
+                self.spills_total += 1;
+                self.demote_s.record(start.elapsed().as_secs_f64());
+                true
+            }
+            Err(_) => false,
         }
     }
 
@@ -156,6 +531,7 @@ impl PrefixRetainer {
     /// steps instead of stalling one (`usize::MAX` = unbounded, the
     /// historical burst). Starts with the cheap [`Self::over_budget`]
     /// fast path, so an under-budget step costs one counter compare.
+    /// Demoted pins hold no tree chunks and are never budget-evicted.
     /// Returns how many pins were evicted.
     pub fn enforce_budget_amortized(&mut self, tree: &mut PrefixTree, grant_tokens: usize) -> usize {
         if !self.over_budget(tree) {
@@ -172,19 +548,23 @@ impl PrefixRetainer {
             self.eviction_tokens_total += grant_tokens as u64;
         }
         let mut evicted = 0;
-        while tree.pool().in_use() > self.budget_chunks && !self.pins.is_empty() {
-            let (lru_key, tokens) = self
+        while tree.pool().in_use() > self.budget_chunks {
+            let lru = self
                 .pins
                 .iter()
+                .filter(|(_, p)| matches!(p.state, TierState::Hot(_)))
                 .min_by_key(|(_, p)| p.last_used)
-                .map(|(k, p)| (k.clone(), p.tokens as u64))
-                .expect("non-empty");
+                .map(|(k, p)| (k.clone(), p.tokens as u64));
+            let Some((lru_key, tokens)) = lru else { break };
             if bounded && self.evict_credit < tokens {
                 break; // keep accruing credit next step
             }
             let before = tree.pool().in_use();
             let pin = self.pins.remove(&lru_key).expect("key just observed");
-            tree.remove_sequence(pin.seq);
+            if let TierState::Hot(seq) = pin.state {
+                tree.remove_sequence(seq);
+                self.hot_pins -= 1;
+            }
             if bounded {
                 self.evict_credit -= tokens;
             } else {
@@ -200,32 +580,126 @@ impl PrefixRetainer {
         evicted
     }
 
-    /// Drop every pin (shutdown / tests).
+    /// Drop every pin (shutdown / tests). Spill files are deleted.
     pub fn unpin_all(&mut self, tree: &mut PrefixTree) {
         for (_, pin) in std::mem::take(&mut self.pins) {
-            tree.remove_sequence(pin.seq);
+            match pin.state {
+                TierState::Hot(seq) => tree.remove_sequence(seq),
+                TierState::Int8Mem(_) => {}
+                TierState::Spilled { path, .. } => {
+                    let _ = std::fs::remove_file(path);
+                }
+            }
         }
+        self.hot_pins = 0;
     }
 
-    /// Total tokens currently kept alive by pins.
+    /// Total tokens currently kept alive by pins (all tiers).
     pub fn pinned_tokens(&self) -> usize {
         self.pins.values().map(|p| p.tokens).sum()
     }
 
     /// Per-pin residency for debug endpoints: `(prefix_tokens, tokens,
-    /// lru_age)` per pin, LRU-hottest first. `lru_age` counts retainer
-    /// clock ticks since the pin was last used (0 = touched most
+    /// lru_age, tier)` per pin, LRU-hottest first. `lru_age` counts
+    /// retainer clock ticks since the pin was last used (0 = touched most
     /// recently); the pin with the largest age falls first under budget
     /// pressure.
-    pub fn pin_residency(&self) -> Vec<(usize, usize, u64)> {
-        let mut rows: Vec<(usize, usize, u64)> = self
+    pub fn pin_residency(&self) -> Vec<(usize, usize, u64, &'static str)> {
+        let mut rows: Vec<(usize, usize, u64, &'static str)> = self
             .pins
             .iter()
-            .map(|(prefix, p)| (prefix.len(), p.tokens, self.clock.saturating_sub(p.last_used)))
+            .map(|(prefix, p)| {
+                let tier = match p.state {
+                    TierState::Hot(_) => "hot",
+                    TierState::Int8Mem(_) => "int8",
+                    TierState::Spilled { .. } => "spilled",
+                };
+                (prefix.len(), p.tokens, self.clock.saturating_sub(p.last_used), tier)
+            })
             .collect();
-        rows.sort_by_key(|&(_, _, age)| age);
+        rows.sort_by_key(|&(_, _, age, _)| age);
         rows
     }
+}
+
+/// Quantize a `[heads, per_head]` f32 buffer to i8 with one symmetric
+/// scale per head (`scale = max_abs / 127`, 0.0 for all-zero heads — the
+/// same convention as [`super::dtype::KvSlab`]).
+fn quantize_head_major(x: &[f32], heads: usize, per_head: usize) -> (Vec<i8>, Vec<f32>) {
+    let mut q = vec![0i8; x.len()];
+    let mut scales = vec![0.0f32; heads];
+    for h in 0..heads {
+        let sl = &x[h * per_head..(h + 1) * per_head];
+        let max = sl.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let scale = if max == 0.0 { 0.0 } else { max / 127.0 };
+        scales[h] = scale;
+        for (dst, &v) in q[h * per_head..(h + 1) * per_head].iter_mut().zip(sl) {
+            *dst = quantize_i8(v, scale);
+        }
+    }
+    (q, scales)
+}
+
+const SPILL_MAGIC: &[u8; 4] = b"KVQ1";
+
+/// Write a spill file: temp-name + rename so a torn write never yields a
+/// file that parses. Returns the file size in bytes.
+fn write_spill(
+    dir: &Path,
+    path: &Path,
+    tokens: usize,
+    dp: &DemotedPrefix,
+) -> std::io::Result<u64> {
+    std::fs::create_dir_all(dir)?;
+    let mut buf: Vec<u8> = Vec::with_capacity(dp.bytes() as usize + 16);
+    buf.extend_from_slice(SPILL_MAGIC);
+    buf.extend_from_slice(&(dp.heads as u32).to_le_bytes());
+    buf.extend_from_slice(&(dp.head_dim as u32).to_le_bytes());
+    buf.extend_from_slice(&(tokens as u32).to_le_bytes());
+    for &s in dp.k_scales.iter().chain(dp.v_scales.iter()) {
+        buf.extend_from_slice(&s.to_le_bytes());
+    }
+    buf.extend(dp.k_q.iter().map(|&b| b as u8));
+    buf.extend(dp.v_q.iter().map(|&b| b as u8));
+    let tmp = path.with_extension("kvq.tmp");
+    std::fs::write(&tmp, &buf)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(buf.len() as u64)
+}
+
+/// Read a spill file back; `None` on any shape/size mismatch or I/O error
+/// (the caller treats that as a cache miss).
+fn read_spill(path: &Path, tokens: usize) -> Option<DemotedPrefix> {
+    let buf = std::fs::read(path).ok()?;
+    if buf.len() < 16 || &buf[..4] != SPILL_MAGIC {
+        return None;
+    }
+    let heads = u32::from_le_bytes(buf[4..8].try_into().ok()?) as usize;
+    let head_dim = u32::from_le_bytes(buf[8..12].try_into().ok()?) as usize;
+    let n = u32::from_le_bytes(buf[12..16].try_into().ok()?) as usize;
+    if n != tokens {
+        return None;
+    }
+    let elems = heads * n * head_dim;
+    let scales_bytes = 2 * heads * 4;
+    if buf.len() != 16 + scales_bytes + 2 * elems {
+        return None;
+    }
+    let mut off = 16;
+    let mut read_scales = |off: &mut usize| -> Vec<f32> {
+        (0..heads)
+            .map(|_| {
+                let s = f32::from_le_bytes(buf[*off..*off + 4].try_into().unwrap());
+                *off += 4;
+                s
+            })
+            .collect()
+    };
+    let k_scales = read_scales(&mut off);
+    let v_scales = read_scales(&mut off);
+    let k_q: Vec<i8> = buf[off..off + elems].iter().map(|&b| b as i8).collect();
+    let v_q: Vec<i8> = buf[off + elems..off + 2 * elems].iter().map(|&b| b as i8).collect();
+    Some(DemotedPrefix { heads, head_dim, k_q, v_q, k_scales, v_scales })
 }
 
 #[cfg(test)]
@@ -384,6 +858,180 @@ mod tests {
         r.enforce_budget(&mut t);
         let (_, _, tokens) = t.gather_dense(SeqId(1)).unwrap();
         assert_eq!(tokens, prompt);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cold_pin_demotes_to_int8_and_promotes_on_hit() {
+        let mut t = tree();
+        let mut r = PrefixRetainer::new(1000);
+        r.set_tiering(TieringConfig { demote_after: 2, spill_after: 0, spill_dir: None });
+        let sys: Vec<u32> = (0..8).collect();
+        t.insert_sequence(SeqId(1), &sys, &mut fill);
+        r.pin(&mut t, &sys);
+        t.remove_sequence(SeqId(1));
+        assert_eq!(t.pool().in_use(), 2);
+        // Two unrelated requests age the pin past the threshold.
+        r.touch(&[999]);
+        r.touch(&[999]);
+        assert!(r.tiering_pending());
+        assert_eq!(r.run_tiering(&mut t, &[]), (1, 0));
+        assert_eq!(t.pool().in_use(), 0, "demotion releases the tree chunks");
+        assert_eq!(r.demotions_total(), 1);
+        assert_eq!(r.tier_counts(), (0, 1, 0));
+        assert!(r.tier_bytes(&t)[1].1 > 0, "int8 tier bytes are accounted");
+        assert_eq!(t.match_prefix(&sys), 0, "nothing resident until promoted");
+        // A prompt carrying the prefix promotes it back before matching.
+        let mut prompt = sys.clone();
+        prompt.push(100);
+        assert_eq!(r.promote_for_prompt(&mut t, &prompt), 8);
+        assert_eq!(r.promotions_total(), 1);
+        assert_eq!(r.tier_counts(), (1, 0, 0));
+        assert_eq!(t.match_prefix(&prompt), 8);
+        assert!(r.promote_hist().total() >= 1);
+        assert!(r.demote_hist().total() >= 1);
+        // The restored values are the originals up to one int8 step per
+        // head (scale = max_abs / 127).
+        let out = t.insert_sequence(SeqId(2), &sys, &mut |_, _, _, _| {
+            unreachable!("fully cached after promotion")
+        });
+        assert_eq!(out.matched_tokens, 8);
+        let (k, v, toks) = t.gather_dense(SeqId(2)).unwrap();
+        assert_eq!(toks, sys);
+        let step = 7.0 / 127.0; // max |k| over the prefix is 7
+        for (i, &x) in k.iter().enumerate() {
+            let want = (i / 2) as f32; // head_dim = 2, k row = token value
+            assert!((x - want).abs() <= 0.5 * step + 1e-6, "k[{i}] = {x}, want ~{want}");
+        }
+        for (i, &x) in v.iter().enumerate() {
+            let want = -((i / 2) as f32);
+            assert!((x - want).abs() <= 0.5 * step + 1e-6, "v[{i}] = {x}, want ~{want}");
+        }
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn very_cold_pin_spills_to_disk_and_promotes_back() {
+        let dir = std::env::temp_dir().join(format!("kvspill-retain-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut t = tree();
+        let mut r = PrefixRetainer::new(1000);
+        r.set_tiering(TieringConfig {
+            demote_after: 1,
+            spill_after: 2,
+            spill_dir: Some(dir.clone()),
+        });
+        let sys: Vec<u32> = (0..8).collect();
+        t.insert_sequence(SeqId(1), &sys, &mut fill);
+        r.pin(&mut t, &sys);
+        t.remove_sequence(SeqId(1));
+        r.touch(&[999]);
+        r.touch(&[999]);
+        // Age 2 clears both thresholds: one pass demotes and spills.
+        assert_eq!(r.run_tiering(&mut t, &[]), (1, 1));
+        assert_eq!(r.tier_counts(), (0, 0, 1));
+        assert_eq!(r.spills_total(), 1);
+        let files: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+        assert_eq!(files.len(), 1, "one spill file per pin");
+        assert!(r.tier_bytes(&t)[2].1 > 0, "spilled tier bytes are accounted");
+        // Promotion loads the file, restores the tree, and removes it.
+        assert_eq!(r.promote_for_prompt(&mut t, &sys), 8);
+        assert_eq!(t.match_prefix(&sys), 8);
+        assert_eq!(r.tier_counts(), (1, 0, 0));
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 0, "spill file consumed");
+        t.check_invariants().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lost_spill_file_degrades_to_a_cache_miss() {
+        let dir = std::env::temp_dir().join(format!("kvspill-lost-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut t = tree();
+        let mut r = PrefixRetainer::new(1000);
+        r.set_tiering(TieringConfig {
+            demote_after: 1,
+            spill_after: 1,
+            spill_dir: Some(dir.clone()),
+        });
+        let sys: Vec<u32> = (0..8).collect();
+        t.insert_sequence(SeqId(1), &sys, &mut fill);
+        r.pin(&mut t, &sys);
+        t.remove_sequence(SeqId(1));
+        r.touch(&[999]);
+        assert_eq!(r.run_tiering(&mut t, &[]), (1, 1));
+        // Crash-safety by recreation: losing the file loses only the
+        // cached KV, never correctness.
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(r.promote_for_prompt(&mut t, &sys), 0);
+        assert_eq!(r.spill_load_failures_total(), 1);
+        assert_eq!(r.pinned_count(), 0, "unloadable pin is dropped");
+        assert_eq!(t.match_prefix(&sys), 0, "prefill recomputes from scratch");
+    }
+
+    #[test]
+    fn demotion_skips_prefixes_of_in_flight_prompts() {
+        let mut t = tree();
+        let mut r = PrefixRetainer::new(1000);
+        r.set_tiering(TieringConfig { demote_after: 1, spill_after: 0, spill_dir: None });
+        let sys: Vec<u32> = (0..8).collect();
+        let mut prompt = sys.clone();
+        prompt.extend([55, 56]);
+        t.insert_sequence(SeqId(1), &prompt, &mut fill);
+        r.pin(&mut t, &sys);
+        r.touch(&[999]);
+        r.touch(&[999]);
+        // The pin is cold, but its prefix is under a live sequence: the
+        // guard must keep it hot so the in-flight tree context is never
+        // invalidated by a demotion.
+        assert_eq!(r.run_tiering(&mut t, &[prompt.clone()]), (0, 0));
+        assert_eq!(r.tier_counts(), (1, 0, 0));
+        // Once the sequence departs, the same pass demotes it.
+        t.remove_sequence(SeqId(1));
+        assert_eq!(r.run_tiering(&mut t, &[]), (1, 0));
+        assert_eq!(r.tier_counts(), (0, 1, 0));
+    }
+
+    #[test]
+    fn budget_eviction_ignores_demoted_pins() {
+        let mut t = tree();
+        let mut r = PrefixRetainer::new(1);
+        r.set_tiering(TieringConfig { demote_after: 1, spill_after: 0, spill_dir: None });
+        let sys: Vec<u32> = (0..8).collect();
+        t.insert_sequence(SeqId(1), &sys, &mut fill);
+        r.pin(&mut t, &sys);
+        t.remove_sequence(SeqId(1));
+        r.touch(&[999]);
+        assert_eq!(r.run_tiering(&mut t, &[]), (1, 0));
+        // A live sequence pushes the pool over budget, but no hot pin
+        // exists: the fast path must not charge grants it can never spend.
+        t.insert_sequence(SeqId(2), &(100..112).collect::<Vec<_>>(), &mut fill);
+        assert!(t.pool().in_use() > 1);
+        assert!(!r.over_budget(&t));
+        assert_eq!(r.enforce_budget_amortized(&mut t, 100), 0);
+        assert_eq!(r.eviction_tokens_total(), 0);
+        assert_eq!(r.pinned_count(), 1, "the demoted pin survives");
+    }
+
+    #[test]
+    fn repin_of_a_demoted_prefix_rehots_in_place() {
+        let mut t = tree();
+        let mut r = PrefixRetainer::new(1000);
+        r.set_tiering(TieringConfig { demote_after: 1, spill_after: 0, spill_dir: None });
+        let sys: Vec<u32> = (0..8).collect();
+        t.insert_sequence(SeqId(1), &sys, &mut fill);
+        r.pin(&mut t, &sys);
+        t.remove_sequence(SeqId(1));
+        r.touch(&[999]);
+        assert_eq!(r.run_tiering(&mut t, &[]), (1, 0));
+        // A request recomputes the prefix (promotion was skipped, e.g.
+        // tiering raced admission); pinning again re-attaches over the
+        // freshly cached chunks and drops the stale int8 copy.
+        t.insert_sequence(SeqId(2), &sys, &mut fill);
+        assert!(!r.pin(&mut t, &sys), "existing pin, not a new one");
+        assert_eq!(r.tier_counts(), (1, 0, 0));
+        t.remove_sequence(SeqId(2));
+        assert_eq!(t.match_prefix(&sys), 8, "pin holds the chunks again");
         t.check_invariants().unwrap();
     }
 }

@@ -23,10 +23,10 @@ use chunk_attention::perf_model::{AttentionImpl, HardwareModel};
 #[cfg(feature = "pjrt")]
 use chunk_attention::runtime::PjrtModel;
 use chunk_attention::server::{
-    render_comparison, render_policy_comparison, render_shard_sweep, run_bench, run_chaos_bench,
-    run_policy_comparison, run_prefill_comparison, run_shard_sweep, shard_sweep_json, BenchConfig,
-    ChaosBenchConfig, ComparisonConfig, Gateway, GatewayConfig, MixedBenchConfig,
-    PolicyComparisonConfig, ShardSweepConfig,
+    render_comparison, render_policy_comparison, render_shard_sweep, render_tiered, run_bench,
+    run_chaos_bench, run_policy_comparison, run_prefill_comparison, run_shard_sweep, run_tiered,
+    shard_sweep_json, tiered_json, BenchConfig, ChaosBenchConfig, ComparisonConfig, Gateway,
+    GatewayConfig, MixedBenchConfig, PolicyComparisonConfig, ShardSweepConfig, TieredBenchConfig,
 };
 use chunk_attention::util::cli::{Args, Cli};
 use chunk_attention::util::failpoint;
@@ -45,11 +45,12 @@ fn parse_or_exit(cli: &Cli, argv: &[String]) -> Args {
     }
 }
 
-/// Parse a `--kv-dtype` value (`f32` | `f16` | `bf16`).
+/// Parse a `--kv-dtype` value (`f32` | `f16` | `bf16` | `int8`).
 fn parse_kv_dtype(args: &Args) -> anyhow::Result<KvDtype> {
     let s = args.get("kv-dtype");
-    KvDtype::parse(s)
-        .ok_or_else(|| anyhow::anyhow!("invalid --kv-dtype {s:?}; expected f32, f16 or bf16"))
+    KvDtype::parse(s).ok_or_else(|| {
+        anyhow::anyhow!("invalid --kv-dtype {s:?}; expected f32, f16, bf16 or int8")
+    })
 }
 
 /// Parse a `--sched-policy` value (`prefix-greedy` | `drr` | `aging`).
@@ -153,7 +154,7 @@ fn serve(argv: &[String]) -> anyhow::Result<()> {
         .opt("heads-total", "16", "synthetic runner: total KV heads (n_layers * heads)")
         .opt("head-dim", "32", "synthetic runner: head dimension")
         .opt("chunk", "16", "synthetic runner: KV chunk size (tokens)")
-        .opt("kv-dtype", "f32", "KV cache storage dtype: f32|f16|bf16")
+        .opt("kv-dtype", "f32", "KV cache storage dtype: f32|f16|bf16|int8")
         .opt("prefill-chunk-tokens", "0", "chunked prefill slice size in tokens (0 = monolithic)")
         .opt(
             "step-token-budget",
@@ -274,12 +275,25 @@ fn gateway_cmd(argv: &[String]) -> anyhow::Result<()> {
     .opt("max-batch", "16", "max decode batch")
     .opt("queue-cap", "64", "admission queue capacity; submissions beyond it get 429")
     .opt("chunk", "64", "KV chunk size (tokens)")
-    .opt("kv-dtype", "f32", "KV cache storage dtype: f32|f16|bf16")
+    .opt("kv-dtype", "f32", "KV cache storage dtype: f32|f16|bf16|int8")
     .opt("heads-total", "16", "synthetic runner: total KV heads")
     .opt("head-dim", "32", "synthetic runner: head dimension")
     .opt("max-new-tokens-cap", "4096", "hard cap on a request's completion budget")
     .opt("decode-interval-us", "0", "pacing between decode steps in microseconds")
     .opt("retain-chunks", "0", "prefix retention budget in chunks (0 = off)")
+    .opt(
+        "retain-demote-after",
+        "0",
+        "demote pinned prefixes untouched for this many admissions to int8 side storage \
+         (0 = never demote; requires --retain-chunks)",
+    )
+    .opt(
+        "retain-spill-after",
+        "0",
+        "spill int8-demoted prefixes untouched this long to --kv-spill-dir \
+         (0 = keep demoted prefixes in memory)",
+    )
+    .opt("kv-spill-dir", "", "directory for spilled cold-prefix files (empty = no spilling)")
     .opt("prefill-chunk-tokens", "0", "chunked prefill slice size in tokens (0 = monolithic)")
     .opt(
         "step-token-budget",
@@ -328,6 +342,12 @@ fn gateway_cmd(argv: &[String]) -> anyhow::Result<()> {
         max_new_tokens_cap: args.get_usize("max-new-tokens-cap"),
         decode_interval: Duration::from_micros(args.get_u64("decode-interval-us")),
         retain_chunks: args.get_usize("retain-chunks"),
+        retain_demote_after: args.get_u64("retain-demote-after"),
+        retain_spill_after: args.get_u64("retain-spill-after"),
+        kv_spill_dir: {
+            let d = args.get("kv-spill-dir");
+            (!d.is_empty()).then(|| std::path::PathBuf::from(d))
+        },
         prefill_chunk_tokens: args.get_usize("prefill-chunk-tokens"),
         step_token_budget: args.get_usize("step-token-budget"),
         sched_policy: parse_sched_policy(&args)?,
@@ -392,6 +412,16 @@ fn bench_http(argv: &[String]) -> anyhow::Result<()> {
          --tenants >= max shards and --decode-interval-us ~300 for a stepper-bound sweep",
     )
     .opt("out", "BENCH_shards.json", "shard-sweep mode: JSON results path")
+    .opt("tiered-out", "BENCH_tiered.json", "tiered mode: JSON results path")
+    .opt("cold-tenants", "24", "tiered mode: cold one-shot prefixes in the tail")
+    .opt("retain-chunks", "96", "tiered mode: hot-tree retention budget in chunks (both gateways)")
+    .opt("demote-after", "6", "tiered mode: demote pins untouched for this many admissions")
+    .opt(
+        "spill-after",
+        "18",
+        "tiered mode: spill int8 pins untouched this many admissions (0 = never spill)",
+    )
+    .opt("revisits", "8", "tiered mode: cold tenants revisited to trigger promotions")
     .opt("max-batch", "16", "spawned gateway: max decode batch")
     .opt("queue-cap", "64", "spawned gateway: admission queue capacity")
     .opt("chunk", "64", "spawned gateway: KV chunk size")
@@ -432,6 +462,12 @@ fn bench_http(argv: &[String]) -> anyhow::Result<()> {
         "skewed",
         "run the skewed-tenant workload (one cold long-prompt tenant vs a hot prefix-sharing \
          storm) under prefix-greedy and aging and print per-tenant TTFT side by side",
+    )
+    .flag(
+        "tiered",
+        "run the tiered-retention workload (hot shared prefix + cold one-shot tail) against a \
+         tiered (int8 demote + spill) and an untiered gateway at the same hot-tree budget and \
+         report resident prompts plus promote/demote latencies",
     );
     let args = parse_or_exit(&cli, argv);
     // Validate the dtype up front even when benchmarking an external
@@ -443,11 +479,23 @@ fn bench_http(argv: &[String]) -> anyhow::Result<()> {
             args.get("addr").is_empty()
                 && !args.get_flag("chaos")
                 && !args.get_flag("mixed")
-                && !args.get_flag("skewed"),
+                && !args.get_flag("skewed")
+                && !args.get_flag("tiered"),
             "--shard-sweep spawns its own gateways per shard count; drop \
-             --addr/--chaos/--mixed/--skewed"
+             --addr/--chaos/--mixed/--skewed/--tiered"
         );
         return bench_http_shard_sweep(&args, kv_dtype);
+    }
+    if args.get_flag("tiered") {
+        anyhow::ensure!(
+            args.get("addr").is_empty()
+                && !args.get_flag("chaos")
+                && !args.get_flag("mixed")
+                && !args.get_flag("skewed"),
+            "--tiered spawns its own tiered and baseline gateways; drop \
+             --addr/--chaos/--mixed/--skewed"
+        );
+        return bench_http_tiered(&args, kv_dtype);
     }
     if args.get_flag("chaos") {
         anyhow::ensure!(
@@ -739,6 +787,38 @@ fn bench_http_skewed(args: &Args, kv_dtype: KvDtype) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn bench_http_tiered(args: &Args, kv_dtype: KvDtype) -> anyhow::Result<()> {
+    let cfg = TieredBenchConfig {
+        cold_tenants: args.get_usize("cold-tenants"),
+        system_tokens: args.get_usize("system-tokens"),
+        query_tokens: args.get_usize("query-tokens"),
+        max_new_tokens: args.get_usize("completion"),
+        revisits: args.get_usize("revisits"),
+        seed: args.get_u64("seed"),
+        chunk: args.get_usize("chunk"),
+        max_batch: args.get_usize("max-batch"),
+        queue_cap: args.get_usize("queue-cap"),
+        retain_chunks: args.get_usize("retain-chunks"),
+        demote_after: args.get_u64("demote-after"),
+        spill_after: args.get_u64("spill-after"),
+        spill_dir: None,
+        kv_dtype,
+        decode_interval: Duration::from_micros(args.get_u64("decode-interval-us")),
+        timeout: Duration::from_secs(120),
+    };
+    let report = run_tiered(&cfg)?;
+    println!("{}", render_tiered(&report));
+    let out = args.get("tiered-out");
+    anyhow::ensure!(!out.is_empty(), "--tiered-out must name the results file");
+    std::fs::write(out, tiered_json(&cfg, &report).pretty() + "\n")?;
+    println!("tiered results written to {out}");
+    anyhow::ensure!(
+        report.baseline.completed > 0 && report.tiered.completed > 0,
+        "a tiered leg completed no requests — is the workload misconfigured?"
+    );
+    Ok(())
+}
+
 fn simulate_cmd(argv: &[String]) -> anyhow::Result<()> {
     let cli = Cli::new("chunk-serve simulate", "virtual-time 7B-scale e2e simulation")
         .opt("system", "chunkllama", "chunkllama | vllm | tgi")
@@ -748,6 +828,11 @@ fn simulate_cmd(argv: &[String]) -> anyhow::Result<()> {
         .opt("query", "128", "per-request query tokens")
         .opt("completion", "512", "completion tokens (n_c)")
         .opt("max-batch", "32", "max decode batch")
+        .opt(
+            "kv-dtype",
+            "f16",
+            "KV storage dtype the simulator prices cache bytes at: f32|f16|bf16|int8",
+        )
         .opt(
             "sched-policy",
             "prefix-greedy",
@@ -774,6 +859,7 @@ fn simulate_cmd(argv: &[String]) -> anyhow::Result<()> {
     );
     let cfg = SimConfig {
         max_batch: args.get_usize("max-batch"),
+        kv_dtype: parse_kv_dtype(&args)?,
         policy: parse_sched_policy(&args)?,
         ..SimConfig::new(system)
     };
@@ -785,7 +871,7 @@ fn simulate_cmd(argv: &[String]) -> anyhow::Result<()> {
         r.normalized_latency_ms_per_tok, r.p99_normalized_latency
     );
     println!("decode throughput  {:.0} tok/s", r.decode_tps);
-    println!("peak KV cache      {}", fmt_bytes(r.peak_kv_bytes));
+    println!("peak KV cache      {} ({})", fmt_bytes(r.peak_kv_bytes), cfg.kv_dtype.label());
     println!("peak batch         {}", r.peak_batch);
     println!(
         "sim duration       {:.1}s (attn {:.1}s, other {:.1}s)",
@@ -801,7 +887,7 @@ fn kernel(argv: &[String]) -> anyhow::Result<()> {
         .opt("heads", "8", "attention heads")
         .opt("np", "1024", "prompt tokens")
         .opt("ns", "1024", "shared prefix tokens")
-        .opt("kv-dtype", "f32", "KV cache storage dtype: f32|f16|bf16")
+        .opt("kv-dtype", "f32", "KV cache storage dtype: f32|f16|bf16|int8")
         .opt("steps", "5", "decode steps to time");
     let args = parse_or_exit(&cli, argv);
     let imp = match args.get("impl") {

@@ -468,6 +468,345 @@ pub fn render_shard_sweep(points: &[ShardSweepPoint]) -> String {
     out
 }
 
+/// Knobs for the `--tiered` retention scenario: one hot shared prefix
+/// that stays resident plus a tail of cold one-shot prefixes, replayed
+/// against a tiered gateway (int8 demotion + spill) and an untired
+/// baseline with the *same* hot-tree chunk budget. The headline is the
+/// resident-prompt ratio at that fixed budget: cold pins the baseline
+/// must evict survive in the tiered gateway as int8 side memory or spill
+/// files, and a revisit phase promotes a few of them back to measure
+/// promote latency end to end.
+#[derive(Debug, Clone)]
+pub struct TieredBenchConfig {
+    /// Cold one-shot prefixes (each a distinct tenant, touched once
+    /// during the main phase).
+    pub cold_tenants: usize,
+    /// Tokens per pinned prefix (hot and cold alike).
+    pub system_tokens: usize,
+    /// Per-request query tokens after the prefix.
+    pub query_tokens: usize,
+    pub max_new_tokens: usize,
+    /// Cold tenants revisited after the main phase: each revisit hits a
+    /// demoted (or spilled) pin and must promote it before prefill.
+    pub revisits: usize,
+    pub seed: u64,
+    pub chunk: usize,
+    pub max_batch: usize,
+    pub queue_cap: usize,
+    /// Hot-tree retention budget in chunks — identical for both gateways,
+    /// so resident-prompt counts compare at fixed tree RSS.
+    pub retain_chunks: usize,
+    /// Tiered gateway: demote pins untouched this many admissions.
+    pub demote_after: u64,
+    /// Tiered gateway: spill int8 pins untouched this many admissions
+    /// (0 = keep demoted pins in memory).
+    pub spill_after: u64,
+    /// Spill directory; `None` auto-creates one under the OS temp dir and
+    /// removes it after the run.
+    pub spill_dir: Option<std::path::PathBuf>,
+    pub kv_dtype: KvDtype,
+    pub decode_interval: Duration,
+    pub timeout: Duration,
+}
+
+impl Default for TieredBenchConfig {
+    fn default() -> Self {
+        TieredBenchConfig {
+            cold_tenants: 24,
+            system_tokens: 512,
+            query_tokens: 16,
+            max_new_tokens: 24,
+            revisits: 8,
+            seed: 7,
+            chunk: 64,
+            max_batch: 8,
+            queue_cap: 64,
+            // 6 prefixes of 8 chunks fit hot; with demote-after 6 the
+            // tiered gateway's hot set stays under budget without ever
+            // needing eviction, while the baseline must evict to admit.
+            retain_chunks: 48,
+            demote_after: 6,
+            spill_after: 18,
+            spill_dir: None,
+            kv_dtype: KvDtype::F16,
+            decode_interval: Duration::ZERO,
+            timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// Post-run `/metrics` snapshot of one gateway in the tiered comparison.
+#[derive(Debug)]
+pub struct TierScrape {
+    pub completed: usize,
+    pub errors: usize,
+    pub wall_s: f64,
+    /// Pins per tier `(hot, int8, spilled)`.
+    pub pins: (f64, f64, f64),
+    /// Bytes per tier `(hot, int8, spilled)`.
+    pub bytes: (f64, f64, f64),
+    pub promotions: f64,
+    pub demotions: f64,
+    pub spills: f64,
+    pub spill_load_failures: f64,
+    /// `(p50, p99)` ms from the `kv_promote_seconds` histogram.
+    pub promote_ms: (f64, f64),
+    /// `(p50, p99)` ms from the `kv_demote_seconds` histogram.
+    pub demote_ms: (f64, f64),
+    pub prefix_hit_rate: f64,
+}
+
+impl TierScrape {
+    /// Prompts still resident in any tier (NaN-free: missing series
+    /// count 0).
+    pub fn resident_prompts(&self) -> f64 {
+        let z = |x: f64| if x.is_finite() { x } else { 0.0 };
+        z(self.pins.0) + z(self.pins.1) + z(self.pins.2)
+    }
+}
+
+/// Both sides of the tiered-retention comparison.
+#[derive(Debug)]
+pub struct TieredReport {
+    pub baseline: TierScrape,
+    pub tiered: TierScrape,
+}
+
+impl TieredReport {
+    /// Resident prompts under tiering over resident prompts without, at
+    /// the same hot-tree chunk budget.
+    pub fn resident_ratio(&self) -> f64 {
+        self.tiered.resident_prompts() / self.baseline.resident_prompts().max(1.0)
+    }
+}
+
+/// Issue one request and drain its stream; returns whether it completed
+/// with at least one token.
+fn tiered_issue(addr: &str, body: &Json, timeout: Duration) -> bool {
+    let Ok((mut stream, _)) =
+        client::generate_with_retry(addr, body, timeout, Duration::from_secs(2))
+    else {
+        return false;
+    };
+    if stream.status() != 200 {
+        return false;
+    }
+    let mut got = 0u64;
+    loop {
+        match stream.next_event() {
+            Ok(Some(StreamEvent::Token { .. })) => got += 1,
+            Ok(Some(StreamEvent::Done { .. })) => return got > 0,
+            _ => return false,
+        }
+    }
+}
+
+/// Replay the hot + cold-tail schedule against one freshly spawned
+/// gateway (tiered or baseline) and scrape its tier metrics.
+fn run_tiered_once(cfg: &TieredBenchConfig, tiered: bool) -> anyhow::Result<TierScrape> {
+    // Auto-provision a spill dir when the tiered leg wants one; removed
+    // after the scrape so repeated runs don't accumulate files.
+    let mut temp_spill = None;
+    let spill_dir = if tiered && cfg.spill_after > 0 {
+        Some(cfg.spill_dir.clone().unwrap_or_else(|| {
+            let d = std::env::temp_dir()
+                .join(format!("kvspill-bench-{}", std::process::id()));
+            temp_spill = Some(d.clone());
+            d
+        }))
+    } else {
+        None
+    };
+    let gw = Gateway::start_sharded(
+        |_| {
+            let runner = KernelRunner::new(16, 32, 32000);
+            Engine::with_dtype(runner, cfg.chunk, cfg.max_batch, cfg.kv_dtype)
+        },
+        GatewayConfig {
+            addr: "127.0.0.1:0".to_string(),
+            shards: 1,
+            queue_cap: cfg.queue_cap,
+            decode_interval: cfg.decode_interval,
+            retain_chunks: cfg.retain_chunks,
+            retain_demote_after: if tiered { cfg.demote_after } else { 0 },
+            retain_spill_after: if tiered { cfg.spill_after } else { 0 },
+            kv_spill_dir: spill_dir,
+            ..GatewayConfig::default()
+        },
+    )?;
+    let addr = gw.addr().to_string();
+    let tokenizer = Tokenizer::default_english();
+    let corpus =
+        Corpus::synthesize(&tokenizer, 1 + cfg.cold_tenants, cfg.system_tokens, cfg.seed);
+    // Main phase interleaves the hot tenant (0) with each cold tenant
+    // exactly once; the revisit phase re-hits the *earliest* cold tenants,
+    // which by then are demoted (and, past spill_after, on disk).
+    let mut schedule: Vec<usize> = Vec::new();
+    for c in 0..cfg.cold_tenants {
+        schedule.push(0);
+        schedule.push(1 + c);
+    }
+    for c in 0..cfg.revisits.min(cfg.cold_tenants) {
+        schedule.push(0);
+        schedule.push(1 + c);
+    }
+    let mut rng = Pcg64::new(cfg.seed, 99);
+    let (mut completed, mut errors) = (0usize, 0usize);
+    let t0 = Instant::now();
+    for &tenant in &schedule {
+        let prompt = corpus.make_request_tokens(&tokenizer, tenant, cfg.query_tokens, &mut rng);
+        let shared = corpus.tenants[tenant].system_tokens.len().min(prompt.len());
+        let mut body = Json::obj();
+        body.set("tokens", Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect()));
+        body.set("shared_tokens", shared).set("tenant", tenant).set(
+            "max_new_tokens",
+            cfg.max_new_tokens,
+        );
+        if tiered_issue(&addr, &body, cfg.timeout) {
+            completed += 1;
+        } else {
+            errors += 1;
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    // Let the idle stepper finish any pending demote/spill maintenance so
+    // the scrape sees settled tiers.
+    std::thread::sleep(Duration::from_millis(100));
+    let doc =
+        client::get(&addr, "/metrics", cfg.timeout).map(|r| r.body).unwrap_or_default();
+    let tier = |name: &str, t: &str| {
+        client::labeled_gauge_value(&doc, name, "tier", t).unwrap_or(f64::NAN)
+    };
+    let gauge = |name: &str| client::gauge_value(&doc, name).unwrap_or(f64::NAN);
+    let quantiles = |name: &str| {
+        (
+            client::histogram_quantile(&doc, name, 0.5) * 1e3,
+            client::histogram_quantile(&doc, name, 0.99) * 1e3,
+        )
+    };
+    let scrape = TierScrape {
+        completed,
+        errors,
+        wall_s,
+        pins: (
+            tier("kv_tier_pins", "hot"),
+            tier("kv_tier_pins", "int8"),
+            tier("kv_tier_pins", "spilled"),
+        ),
+        bytes: (
+            tier("kv_tier_bytes", "hot"),
+            tier("kv_tier_bytes", "int8"),
+            tier("kv_tier_bytes", "spilled"),
+        ),
+        promotions: gauge("kv_promotions_total"),
+        demotions: gauge("kv_demotions_total"),
+        spills: gauge("kv_spills_total"),
+        spill_load_failures: gauge("kv_spill_load_failures_total"),
+        promote_ms: quantiles("kv_promote_seconds"),
+        demote_ms: quantiles("kv_demote_seconds"),
+        prefix_hit_rate: gauge("prefix_hit_rate"),
+    };
+    gw.shutdown()?;
+    if let Some(d) = temp_spill {
+        let _ = std::fs::remove_dir_all(d);
+    }
+    Ok(scrape)
+}
+
+/// Run the tiered-retention comparison: same schedule and chunk budget
+/// against an untiered baseline and a tiered gateway.
+pub fn run_tiered(cfg: &TieredBenchConfig) -> anyhow::Result<TieredReport> {
+    anyhow::ensure!(cfg.cold_tenants > 0, "need at least one cold tenant");
+    anyhow::ensure!(cfg.retain_chunks > 0, "tiered bench needs a retention budget");
+    anyhow::ensure!(cfg.demote_after > 0, "tiered bench needs --demote-after > 0");
+    let baseline = run_tiered_once(cfg, false)?;
+    let tiered = run_tiered_once(cfg, true)?;
+    Ok(TieredReport { baseline, tiered })
+}
+
+/// Machine-readable tiered results (`bench-http --tiered --tiered-out
+/// BENCH_tiered.json`). Non-finite samples serialize as `null`.
+pub fn tiered_json(cfg: &TieredBenchConfig, report: &TieredReport) -> Json {
+    let num = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+    let mut config = Json::obj();
+    config
+        .set("cold_tenants", cfg.cold_tenants)
+        .set("system_tokens", cfg.system_tokens)
+        .set("query_tokens", cfg.query_tokens)
+        .set("max_new_tokens", cfg.max_new_tokens)
+        .set("revisits", cfg.revisits)
+        .set("seed", cfg.seed)
+        .set("chunk", cfg.chunk)
+        .set("max_batch", cfg.max_batch)
+        .set("retain_chunks", cfg.retain_chunks)
+        .set("demote_after", cfg.demote_after)
+        .set("spill_after", cfg.spill_after)
+        .set("kv_dtype", cfg.kv_dtype.label());
+    let side = |s: &TierScrape| {
+        let mut o = Json::obj();
+        o.set("completed", s.completed)
+            .set("errors", s.errors)
+            .set("wall_s", num(s.wall_s))
+            .set("resident_prompts", num(s.resident_prompts()))
+            .set("pins_hot", num(s.pins.0))
+            .set("pins_int8", num(s.pins.1))
+            .set("pins_spilled", num(s.pins.2))
+            .set("bytes_hot", num(s.bytes.0))
+            .set("bytes_int8", num(s.bytes.1))
+            .set("bytes_spilled", num(s.bytes.2))
+            .set("promotions", num(s.promotions))
+            .set("demotions", num(s.demotions))
+            .set("spills", num(s.spills))
+            .set("spill_load_failures", num(s.spill_load_failures))
+            .set("promote_p50_ms", num(s.promote_ms.0))
+            .set("promote_p99_ms", num(s.promote_ms.1))
+            .set("demote_p50_ms", num(s.demote_ms.0))
+            .set("demote_p99_ms", num(s.demote_ms.1))
+            .set("prefix_hit_rate", num(s.prefix_hit_rate));
+        o
+    };
+    let mut root = Json::obj();
+    root.set("bench", "tiered")
+        .set("config", config)
+        .set("baseline", side(&report.baseline))
+        .set("tiered", side(&report.tiered))
+        .set("resident_ratio", num(report.resident_ratio()));
+    root
+}
+
+/// Human-readable tiered comparison.
+pub fn render_tiered(report: &TieredReport) -> String {
+    let row = |label: &str, s: &TierScrape| {
+        format!(
+            "{label:<10}{:>10.0}{:>7.0}{:>7.0}{:>9.0}{:>12.1}{:>12.1}{:>12.2}{:>12.2}\n",
+            s.resident_prompts(),
+            s.pins.0,
+            s.pins.1,
+            s.pins.2,
+            s.promote_ms.0,
+            s.promote_ms.1,
+            s.demote_ms.0,
+            s.demote_ms.1,
+        )
+    };
+    let mut out = format!(
+        "tiered retention — hot shared prefix + cold one-shot tail at a fixed hot-tree budget\n\n\
+         {:<10}{:>10}{:>7}{:>7}{:>9}{:>12}{:>12}{:>12}{:>12}\n",
+        "gateway", "resident", "hot", "int8", "spilled", "promo p50", "promo p99", "demo p50",
+        "demo p99"
+    );
+    out.push_str(&row("baseline", &report.baseline));
+    out.push_str(&row("tiered", &report.tiered));
+    out.push_str(&format!(
+        "\nresident prompts at fixed hot-tree RSS: {:.1}x the untiered baseline \
+         ({:.0} vs {:.0}); latencies in ms from /metrics histograms\n",
+        report.resident_ratio(),
+        report.tiered.resident_prompts(),
+        report.baseline.resident_prompts(),
+    ));
+    out
+}
+
 /// Mixed head-of-line workload: long *cold* prompts (unique tokens, so no
 /// prefix reuse is possible) interleaved with short requests that share
 /// one hot prefix. Under monolithic prefill every long admission stalls

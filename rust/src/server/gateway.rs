@@ -63,6 +63,17 @@ pub struct GatewayConfig {
     pub metrics_prefix: String,
     /// Per-shard prefix-retention chunk budget; 0 disables retention.
     pub retain_chunks: usize,
+    /// Retention tiering: demote a pinned prefix to the int8-in-memory
+    /// tier after this many retainer LRU ticks without a hit; 0 disables
+    /// demotion. Requires `retain_chunks > 0`.
+    pub retain_demote_after: u64,
+    /// Retention tiering: spill an int8 pinned prefix to a file under
+    /// `kv_spill_dir` after this many ticks without a hit; 0 disables
+    /// spilling.
+    pub retain_spill_after: u64,
+    /// Spill-file directory (`--kv-spill-dir`); each shard writes under
+    /// its own subdirectory. Required for `retain_spill_after` to act.
+    pub kv_spill_dir: Option<PathBuf>,
     /// Per-connection socket read/write timeout.
     pub io_timeout: Duration,
     /// Retained per-request history window (scheduler finished entries +
@@ -115,6 +126,9 @@ impl Default for GatewayConfig {
             decode_interval: Duration::ZERO,
             metrics_prefix: "chunk_gateway".to_string(),
             retain_chunks: 0,
+            retain_demote_after: 0,
+            retain_spill_after: 0,
+            kv_spill_dir: None,
             io_timeout: Duration::from_secs(30),
             history_limit: 4096,
             prefill_chunk_tokens: 0,

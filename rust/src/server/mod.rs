@@ -32,10 +32,12 @@ pub mod router;
 pub(crate) mod shard;
 
 pub use bench::{
-    render_comparison, render_policy_comparison, render_shard_sweep, run_bench, run_chaos_bench,
-    run_mixed_bench, run_policy_comparison, run_prefill_comparison, run_shard_sweep,
-    shard_sweep_json, BenchConfig, BenchReport, ChaosBenchConfig, ChaosReport, ComparisonConfig,
-    MixedBenchConfig, MixedReport, PolicyComparisonConfig, ShardSweepConfig, ShardSweepPoint,
+    render_comparison, render_policy_comparison, render_shard_sweep, render_tiered, run_bench,
+    run_chaos_bench, run_mixed_bench, run_policy_comparison, run_prefill_comparison,
+    run_shard_sweep, run_tiered, shard_sweep_json, tiered_json, BenchConfig, BenchReport,
+    ChaosBenchConfig, ChaosReport, ComparisonConfig, MixedBenchConfig, MixedReport,
+    PolicyComparisonConfig, ShardSweepConfig, ShardSweepPoint, TierScrape, TieredBenchConfig,
+    TieredReport,
 };
 pub use client::{
     gauge_value, generate_with_request_id, generate_with_retry, histogram_quantile,

@@ -213,6 +213,15 @@ pub(crate) fn spawn_shard<R: ModelRunner + Send + 'static>(
     });
     if cfg.retain_chunks > 0 {
         engine.enable_prefix_retention(cfg.retain_chunks);
+        if cfg.retain_demote_after > 0 || cfg.retain_spill_after > 0 {
+            engine.set_retention_tiering(crate::kvcache::TieringConfig {
+                demote_after: cfg.retain_demote_after,
+                spill_after: cfg.retain_spill_after,
+                // Per-shard subdirectory: pin ids are only unique within
+                // one retainer, so shards must not share spill filenames.
+                spill_dir: cfg.kv_spill_dir.as_ref().map(|d| d.join(format!("shard-{id}"))),
+            });
+        }
     }
     // Arm failpoints from the environment (no-op when FAILPOINTS is
     // unset) so the chaos CI leg reaches gateways spawned anywhere. The
@@ -898,14 +907,22 @@ fn debug_tree_json<R: ModelRunner>(engine: &Engine<R>) -> Json {
                 .set("pinned_tokens", r.pinned_tokens())
                 .set("evicted_pins_total", r.evicted_pins_total())
                 .set("evicted_chunks_total", r.evicted_chunks_total());
+            let (hot, int8, spilled) = r.tier_counts();
+            retain
+                .set("tier_hot", hot)
+                .set("tier_int8", int8)
+                .set("tier_spilled", spilled)
+                .set("promotions_total", r.promotions_total())
+                .set("demotions_total", r.demotions_total());
             let pins: Vec<Json> = r
                 .pin_residency()
                 .into_iter()
-                .map(|(prefix_tokens, tokens, lru_age)| {
+                .map(|(prefix_tokens, tokens, lru_age, tier)| {
                     let mut p = Json::obj();
                     p.set("prefix_tokens", prefix_tokens)
                         .set("tokens", tokens)
-                        .set("lru_age", lru_age);
+                        .set("lru_age", lru_age)
+                        .set("tier", tier);
                     p
                 })
                 .collect();
@@ -1243,6 +1260,79 @@ fn render_metrics<R: ModelRunner>(
             "retained_pins",
             "prefixes currently pinned by the retainer",
             retainer.pinned_count() as f64,
+        );
+        // Tiered retention: bytes and pins per tier, promote/demote flow
+        // counters, and the promote/demote latency distributions the
+        // tiered bench scrapes for its p50/p99 headline.
+        let tier_bytes: Vec<(Vec<(&str, String)>, f64)> = retainer
+            .tier_bytes(engine.tree())
+            .iter()
+            .map(|&(tier, bytes)| (vec![("tier", tier.to_string())], bytes as f64))
+            .collect();
+        push_labeled_series(
+            &mut out,
+            prefix,
+            "kv_tier_bytes",
+            "KV bytes retained per tier (hot = tree-resident, int8 = demoted in memory, spilled = on disk)",
+            &tier_bytes,
+        );
+        let (hot, int8, spilled) = retainer.tier_counts();
+        let tier_pins: Vec<(Vec<(&str, String)>, f64)> = [
+            ("hot", hot),
+            ("int8", int8),
+            ("spilled", spilled),
+        ]
+        .iter()
+        .map(|&(tier, n)| (vec![("tier", tier.to_string())], n as f64))
+        .collect();
+        push_labeled_series(
+            &mut out,
+            prefix,
+            "kv_tier_pins",
+            "retained pins per tier",
+            &tier_pins,
+        );
+        push_gauge(
+            &mut out,
+            prefix,
+            "kv_promotions_total",
+            "demoted/spilled prefixes promoted back into the tree",
+            retainer.promotions_total() as f64,
+        );
+        push_gauge(
+            &mut out,
+            prefix,
+            "kv_demotions_total",
+            "hot pinned prefixes demoted to the int8 tier",
+            retainer.demotions_total() as f64,
+        );
+        push_gauge(
+            &mut out,
+            prefix,
+            "kv_spills_total",
+            "int8 pinned prefixes spilled to disk",
+            retainer.spills_total() as f64,
+        );
+        push_gauge(
+            &mut out,
+            prefix,
+            "kv_spill_load_failures_total",
+            "promotions that found the spill file missing or corrupt (degraded to a cache miss)",
+            retainer.spill_load_failures_total() as f64,
+        );
+        push_histogram(
+            &mut out,
+            prefix,
+            "kv_promote_seconds",
+            "latency of promoting one prefix back into the tree (includes spill-file load)",
+            retainer.promote_hist(),
+        );
+        push_histogram(
+            &mut out,
+            prefix,
+            "kv_demote_seconds",
+            "latency of demoting one prefix (quantize; includes spill-file write)",
+            retainer.demote_hist(),
         );
     }
     out

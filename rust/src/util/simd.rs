@@ -361,6 +361,12 @@ fn widen_bf16_scalar(src: &[u16], dst: &mut [f32]) {
     }
 }
 
+fn widen_i8_scalar(src: &[i8], scale: f32, dst: &mut [f32]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = s as f32 * scale;
+    }
+}
+
 fn qk_dots8_scalar(q: &[f32], d: usize, k_t: &[f32], out: &mut [f32; 8]) {
     for (r, o) in out.iter_mut().enumerate() {
         let q_r = &q[r * d..(r + 1) * d];
@@ -399,6 +405,25 @@ pub fn widen_bf16(isa: SimdIsa, src: &[u16], dst: &mut [f32]) {
         #[cfg(target_arch = "aarch64")]
         SimdIsa::Neon => unsafe { neon::widen_bf16_neon(src, dst) },
         _ => widen_bf16_scalar(src, dst),
+    }
+}
+
+/// Int8 dequant widening load: `dst[i] = (src[i] as f32) * scale`. The
+/// int→f32 convert is exact (|q| ≤ 127 ≪ 2²⁴) and the single multiply
+/// rounds identically at every vector width, so every ISA arm is
+/// bit-identical to the scalar body by construction — same exactness
+/// policy as the f16/bf16 widen arms, enforced by the exhaustive
+/// 256-pattern test below.
+pub fn widen_i8(isa: SimdIsa, src: &[i8], scale: f32, dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len());
+    match isa {
+        #[cfg(any(target_arch = "x86_64", target_arch = "x86"))]
+        SimdIsa::Avx2 => unsafe { x86::widen_i8_avx2(src, scale, dst) },
+        #[cfg(any(target_arch = "x86_64", target_arch = "x86"))]
+        SimdIsa::Avx512 => unsafe { x86::widen_i8_avx512(src, scale, dst) },
+        #[cfg(target_arch = "aarch64")]
+        SimdIsa::Neon => unsafe { neon::widen_i8_neon(src, scale, dst) },
+        _ => widen_i8_scalar(src, scale, dst),
     }
 }
 
@@ -579,6 +604,41 @@ mod x86 {
         }
         if i < n {
             widen_bf16_avx2(&src[i..], &mut dst[i..]);
+        }
+    }
+
+    /// Int8 dequant load, 8-wide: sign-extend to i32, exact convert to
+    /// f32, one multiply by the broadcast scale (no FMA anywhere).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn widen_i8_avx2(src: &[i8], scale: f32, dst: &mut [f32]) {
+        let n = src.len();
+        let sv = _mm256_set1_ps(scale);
+        let mut i = 0;
+        while i + 8 <= n {
+            let q = _mm_loadl_epi64(src.as_ptr().add(i) as *const __m128i);
+            let w = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(q));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_mul_ps(w, sv));
+            i += 8;
+        }
+        while i < n {
+            *dst.get_unchecked_mut(i) = *src.get_unchecked(i) as f32 * scale;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx512f,avx2")]
+    pub(super) unsafe fn widen_i8_avx512(src: &[i8], scale: f32, dst: &mut [f32]) {
+        let n = src.len();
+        let sv = _mm512_set1_ps(scale);
+        let mut i = 0;
+        while i + 16 <= n {
+            let q = _mm_loadu_si128(src.as_ptr().add(i) as *const __m128i);
+            let w = _mm512_cvtepi32_ps(_mm512_cvtepi8_epi32(q));
+            _mm512_storeu_ps(dst.as_mut_ptr().add(i), _mm512_mul_ps(w, sv));
+            i += 16;
+        }
+        if i < n {
+            widen_i8_avx2(&src[i..], scale, &mut dst[i..]);
         }
     }
 
@@ -815,6 +875,27 @@ mod neon {
         while i < n {
             *dst.get_unchecked_mut(i) =
                 crate::kvcache::dtype::bf16_bits_to_f32(*src.get_unchecked(i));
+            i += 1;
+        }
+    }
+
+    /// Int8 dequant load, 8-wide: widen i8→i16→i32, exact convert, one
+    /// multiply by the broadcast scale (vmulq, never vfma).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn widen_i8_neon(src: &[i8], scale: f32, dst: &mut [f32]) {
+        let n = src.len();
+        let sv = vdupq_n_f32(scale);
+        let mut i = 0;
+        while i + 8 <= n {
+            let q16 = vmovl_s8(vld1_s8(src.as_ptr().add(i)));
+            let lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(q16)));
+            let hi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(q16)));
+            vst1q_f32(dst.as_mut_ptr().add(i), vmulq_f32(lo, sv));
+            vst1q_f32(dst.as_mut_ptr().add(i + 4), vmulq_f32(hi, sv));
+            i += 8;
+        }
+        while i < n {
+            *dst.get_unchecked_mut(i) = *src.get_unchecked(i) as f32 * scale;
             i += 1;
         }
     }
@@ -1060,6 +1141,40 @@ mod tests {
                 widen_bf16_scalar(&src, &mut expect);
                 widen_bf16(isa, &src, &mut got);
                 assert_eq!(got, expect, "{} bf16 n={n}", isa.label());
+                let qsrc: Vec<i8> = (0..n).map(|i| (i as i32 * 19 - 120) as i8).collect();
+                widen_i8_scalar(&qsrc, 0.0173, &mut expect);
+                widen_i8(isa, &qsrc, 0.0173, &mut got);
+                assert_eq!(got, expect, "{} i8 n={n}", isa.label());
+            }
+        }
+    }
+
+    /// The int8 dequant widen must match the scalar body bit-for-bit on
+    /// every one of the 256 quantized values, across scales spanning the
+    /// normal range (including awkward non-power-of-two scales and a
+    /// subnormal product). Exactness argument: i8→f32 convert is exact,
+    /// the single multiply rounds once — identical at any vector width
+    /// unless an arm sneaks in FMA or a different convert.
+    #[test]
+    fn widen_i8_is_exact_for_every_value_and_scale() {
+        let src: Vec<i8> = (-128..=127).map(|v| v as i8).collect();
+        for &scale in
+            &[0.0f32, 1.0, 0.0078125, 0.017331, 3.14159, 1.0e-4, 6.1e-39, 1.0e20, 1.0 / 127.0]
+        {
+            let mut expect = vec![0.0f32; src.len()];
+            widen_i8_scalar(&src, scale, &mut expect);
+            for isa in accelerated() {
+                let mut got = vec![0.0f32; src.len()];
+                widen_i8(isa, &src, scale, &mut got);
+                for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        e.to_bits(),
+                        "{} i8 widen of {} at scale {scale}",
+                        isa.label(),
+                        src[i]
+                    );
+                }
             }
         }
     }

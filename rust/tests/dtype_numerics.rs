@@ -1,7 +1,7 @@
 //! Property tests for the dtype-abstracted KV cache: the TPP kernels over
-//! f16/bf16-stored trees versus the f64 oracle, across thread counts, with
-//! a principled error budget — plus conversion round-trip sweeps that the
-//! CI dtype matrix runs under both debug (overflow checks on the
+//! f16/bf16/int8-stored trees versus the f64 oracle, across thread counts,
+//! with a principled error budget — plus conversion round-trip sweeps that
+//! the CI dtype matrix runs under both debug (overflow checks on the
 //! bit-twiddling) and `--release`.
 //!
 //! ## Error budget
@@ -12,12 +12,15 @@
 //!    *stored* (already-quantised) rows widened to f32, so the difference
 //!    is pure f32 accumulation + the kernel's `fast_exp` (~2e-7 relative):
 //!    tolerance `2e-4 * (1 + |expect|)` independent of dtype.
-//! 2. **Half-precision tree vs f32 tree, same fill** — quantisation error.
-//!    With `|q|,|k|,|v| ≤ 1`: V rounding contributes ≤ `u`, and K rounding
-//!    perturbs each logit by ≤ `scale · u · Σ|q_j k_j| ≤ u·√d`, which moves
-//!    the softmax-weighted output by ≤ `2·u·√d · max|v|`. Budget:
-//!    `3 · (2·√d + 1) · u · (1 + |expect|)` with `u` the dtype's unit
-//!    roundoff (2⁻¹¹ for f16, 2⁻⁸ for bf16) and 3× slack for accumulation.
+//! 2. **Reduced-precision tree vs f32 tree, same fill** — quantisation
+//!    error. With `|q|,|k|,|v| ≤ 1`: V rounding contributes ≤ `u`, and K
+//!    rounding perturbs each logit by ≤ `scale · u · Σ|q_j k_j| ≤ u·√d`,
+//!    which moves the softmax-weighted output by ≤ `2·u·√d · max|v|`.
+//!    Budget: `3 · (2·√d + 1) · u · (1 + |expect|)` with `u` the dtype's
+//!    unit roundoff (2⁻¹¹ for f16, 2⁻⁸ for bf16) and 3× slack for
+//!    accumulation. The same shape covers int8 with `u = 1/127`: the
+//!    per-head symmetric scale is `max|x| / 127 ≤ 1/127`, so one stored
+//!    element is off by at most half a quantization step `scale/2 ≤ u/2`.
 
 use chunk_attention::attention::{oracle_attention, tpp_attention_2d, Queries, Tpp2dScratch};
 use chunk_attention::kvcache::{
@@ -213,6 +216,41 @@ fn half_precision_tree_tracks_f32_tree_within_unit_roundoff_budget() {
             Ok(())
         },
     );
+}
+
+/// Int8 storage vs f32 storage: the same budget shape as the half-precision
+/// test with `u = 1/127` — one quantization step of the per-head symmetric
+/// scale (module docs derive why a stored element is off by ≤ `u/2`). Byte
+/// accounting must come out to a quarter of f32 *plus* the per-head scale
+/// words each int8 chunk carries.
+#[test]
+fn int8_tree_tracks_f32_tree_within_quant_step_budget() {
+    pbt::check("int8-vs-f32-budget", 0x18A7, 24, gen_spec, |spec| {
+        let mut f32_tree = build_tree(spec, KvDtype::F32);
+        let mut int8_tree = build_tree(spec, KvDtype::Int8);
+        if int8_tree.pool().in_use() != f32_tree.pool().in_use() {
+            return Err("storage dtype changed the chunk count".into());
+        }
+        let scale_bytes = int8_tree.pool().in_use() * 2 * spec.heads * 4;
+        if (int8_tree.pool().in_use_bytes() - scale_bytes) * 4 != f32_tree.pool().in_use_bytes() {
+            return Err(format!(
+                "int8 bytes {} minus {scale_bytes} scale bytes are not a quarter of f32 bytes {}",
+                int8_tree.pool().in_use_bytes(),
+                f32_tree.pool().in_use_bytes()
+            ));
+        }
+        let (f32_out, _) = run_2d(&mut f32_tree, spec, 2);
+        let (int8_out, _) = run_2d(&mut int8_tree, spec, 2);
+        let u = KvDtype::Int8.unit_roundoff();
+        let budget = 3.0 * (2.0 * (spec.head_dim as f32).sqrt() + 1.0) * u;
+        for (i, (&got, &want)) in int8_out.iter().zip(&f32_out).enumerate() {
+            let tol = budget * (1.0 + want.abs());
+            if (got - want).abs() > tol {
+                return Err(format!("idx {i}: {got} vs f32 {want} exceeds budget {tol}"));
+            }
+        }
+        Ok(())
+    });
 }
 
 /// Decode-append keeps the dtype seam consistent: growing trees at every

@@ -42,17 +42,32 @@ fn with_watchdog<T: Send + 'static>(
     }
 }
 
+/// Storage dtype for the suite's engines: the `KV_DTYPE` env (CI runs an
+/// `int8` socket leg, also combined with `PALLAS_SIMD=scalar`) or f32.
+fn suite_kv_dtype() -> KvDtype {
+    match std::env::var("KV_DTYPE") {
+        Ok(v) => KvDtype::parse(&v).expect("KV_DTYPE must be f32, f16, bf16 or int8"),
+        Err(_) => KvDtype::F32,
+    }
+}
+
 fn engine(chunk: usize, max_batch: usize) -> Engine<SyntheticRunner> {
-    Engine::new(SyntheticRunner { heads_total: 2, head_dim: 8, vocab: 32000 }, chunk, max_batch)
+    Engine::with_dtype(
+        SyntheticRunner { heads_total: 2, head_dim: 8, vocab: 32000 },
+        chunk,
+        max_batch,
+        suite_kv_dtype(),
+    )
 }
 
 /// Base gateway config for the suite. CI runs the whole socket suite a
 /// second time with `CHUNKED_PREFILL_BUDGET` set, a third time with
-/// `SCHED_POLICY=drr`, and a fourth time with `SHARDS=2` (see
-/// .github/workflows/ci.yml), so every e2e scenario — streaming,
-/// backpressure, cancellation, shutdown, bench — also exercises the
-/// interleaved chunked-prefill path, the non-default planner policies,
-/// and the prefix-affinity router under the same watchdogs.
+/// `SCHED_POLICY=drr`, a fourth time with `SHARDS=2`, and a fifth time
+/// with `KV_DTYPE=int8` (see .github/workflows/ci.yml), so every e2e
+/// scenario — streaming, backpressure, cancellation, shutdown, bench —
+/// also exercises the interleaved chunked-prefill path, the non-default
+/// planner policies, the prefix-affinity router, and quantized KV storage
+/// under the same watchdogs.
 fn base_cfg() -> GatewayConfig {
     let mut cfg = GatewayConfig::default();
     if let Ok(v) = std::env::var("CHUNKED_PREFILL_BUDGET") {
